@@ -1,0 +1,10 @@
+"""Build-time compile package: Pallas kernels (L1), JAX models (L2) and
+the AOT lowering driver. Nothing in here runs at inference/training time —
+the Rust coordinator executes the lowered HLO via PJRT."""
+
+import jax
+
+# The fixed-graph f64 ops (kernels/repexp.py) require real float64 —
+# without this JAX silently truncates to f32 and the cross-implementation
+# bitwise contract with the Rust f64 path breaks.
+jax.config.update("jax_enable_x64", True)

@@ -1,0 +1,90 @@
+"""AOT driver: lower every artifact to HLO **text** + write the manifest.
+
+HLO text, NOT ``lowered.compile()`` / serialized protos: jax ≥ 0.5 emits
+HloModuleProto with 64-bit instruction ids which the runtime's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:  cd python && python -m compile.aot --out ../artifacts
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels.repexp import exp_fixed_f64
+from .kernels.repmatmul import repmatmul
+from .kernels.repsoftmax import repsoftmax_rows
+from .kernels.repsum import repsum_sequential, sum_pairwise_spec
+
+
+def to_hlo_text(fn, example_args):
+    lowered = jax.jit(fn).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(*dims):
+    return jax.ShapeDtypeStruct(tuple(dims), jnp.float32)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    # (name, fn, input shapes, output shapes)
+    B, NIN, H, C = 16, 64, 32, 10
+    artifacts = [
+        ("matmul_repro", lambda a, b: (repmatmul(a, b),),
+         [(64, 128), (128, 32)], [(64, 32)]),
+        ("matmul_repro_small", lambda a, b: (repmatmul(a, b),),
+         [(4, 6), (6, 5)], [(4, 5)]),
+        ("sum_seq", lambda x: (repsum_sequential(x),), [(4096,)], [(1,)]),
+        ("sum_pairwise", lambda x: (sum_pairwise_spec(x).reshape(1),),
+         [(4096,)], [(1,)]),
+        ("softmax_repro", lambda x: (repsoftmax_rows(x),),
+         [(32, 64)], [(32, 64)]),
+        ("exp_fixed", lambda x: (exp_fixed_f64(x),), [(1024,)], [(1024,)]),
+        ("mlp_fwd", model.mlp_forward,
+         [(B, NIN), (NIN, H), (H,), (H, C), (C,)], [(B, C)]),
+        ("mlp_fwd_softmax", model.mlp_forward_softmax,
+         [(B, NIN), (NIN, H), (H,), (H, C), (C,)], [(B, C)]),
+        ("mlp_train_step", model.mlp_train_step,
+         [(B, NIN), (B, C), (NIN, H), (H,), (H, C), (C,), ()],
+         [(), (NIN, H), (H,), (H, C), (C,)]),
+    ]
+
+    manifest = {"artifacts": []}
+    for name, fn, ins, outs in artifacts:
+        example = [spec(*s) for s in ins]
+        text = to_hlo_text(fn, example)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out, fname), "w") as f:
+            f.write(text)
+        manifest["artifacts"].append(
+            {
+                "name": name,
+                "file": fname,
+                "inputs": [list(s) for s in ins],
+                "outputs": [list(s) for s in outs],
+            }
+        )
+        print(f"wrote {fname} ({len(text)} chars)")
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote manifest.json with {len(manifest['artifacts'])} artifacts")
+
+
+if __name__ == "__main__":
+    main()

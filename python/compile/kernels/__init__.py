@@ -1,0 +1,14 @@
+"""L1: Pallas kernels implementing the RepDL reproducible-op spec."""
+
+from .repmatmul import repmatmul
+from .repsum import repsum_sequential, sum_pairwise_spec
+from .repsoftmax import repsoftmax_rows
+from .repexp import exp_fixed_f64
+
+__all__ = [
+    "repmatmul",
+    "repsum_sequential",
+    "sum_pairwise_spec",
+    "repsoftmax_rows",
+    "exp_fixed_f64",
+]

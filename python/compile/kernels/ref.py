@@ -1,0 +1,87 @@
+"""Pure-numpy oracles for the kernel specs.
+
+These implement the *specification text* as directly as possible (scalar
+loops in float32), so a kernel matching them bitwise demonstrably
+implements the spec rather than merely agreeing with another vectorised
+implementation.
+"""
+
+import math
+
+import numpy as np
+
+
+def matmul_seq_ref(a, b):
+    """Sequential-k, unfused multiply-add — scalar-loop reference."""
+    a = np.asarray(a, np.float32)
+    b = np.asarray(b, np.float32)
+    m, k = a.shape
+    n = b.shape[1]
+    out = np.zeros((m, n), np.float32)
+    for i in range(m):
+        for j in range(n):
+            acc = np.float32(0.0)
+            for kk in range(k):
+                acc = np.float32(acc + np.float32(a[i, kk] * b[kk, j]))
+            out[i, j] = acc
+    return out
+
+
+def matmul_seq_fma_ref(a, b):
+    """Sequential-k with FMA contraction — the spec the XLA backend
+    actually implements (it contracts mul+add; paper §3.2.4 allows it).
+
+    Computed via ``math.fma`` in f64 then rounded to f32. For f32 inputs
+    the product is exact in f64, so this equals true f32 FMA except in
+    astronomically rare double-rounding ties — the test harness treats a
+    ≤1-ulp discrepancy on <0.1% of elements as conforming.
+    """
+    a = np.asarray(a, np.float32)
+    b = np.asarray(b, np.float32)
+    m, k = a.shape
+    n = b.shape[1]
+    out = np.zeros((m, n), np.float32)
+    for i in range(m):
+        for j in range(n):
+            acc = np.float32(0.0)
+            for kk in range(k):
+                acc = np.float32(math.fma(float(a[i, kk]), float(b[kk, j]), float(acc)))
+            out[i, j] = acc
+    return out
+
+
+def sum_seq_ref(x):
+    """Strict left-to-right float32 sum."""
+    acc = np.float32(0.0)
+    for v in np.asarray(x, np.float32):
+        acc = np.float32(acc + v)
+    return acc
+
+
+def sum_pairwise_ref(x):
+    """Pairwise tree per the shared spec (base 8, split at 2^⌈lg n⌉⁻¹)."""
+    x = np.asarray(x, np.float32)
+    n = len(x)
+    if n <= 8:
+        return sum_seq_ref(x)
+    p = 1
+    while p * 2 < n:
+        p *= 2
+    return np.float32(sum_pairwise_ref(x[:p]) + sum_pairwise_ref(x[p:]))
+
+
+def softmax_rows_ref(x):
+    """Fixed-graph softmax with numpy exp (value reference only — the
+    exp differs across libms, which is the paper's point; use allclose)."""
+    x = np.asarray(x, np.float32)
+    out = np.zeros_like(x)
+    for r in range(x.shape[0]):
+        row = x[r]
+        m = row[0]
+        for v in row[1:]:
+            if v > m:
+                m = v
+        e = np.exp((row - m).astype(np.float32)).astype(np.float32)
+        denom = sum_seq_ref(e)
+        out[r] = e / denom
+    return out

@@ -1,0 +1,47 @@
+"""exp as a *fixed f64 computation graph* (the cross-implementation
+experiment's probe op).
+
+This is bit-for-bit the same algorithm as the Rust fast path
+(`rnum::exp::exp_f64`): Cody–Waite reduction against the split ln2
+constants and a degree-14 nested Taylor polynomial, all in f64, rounded
+once to f32. Every f64 op is IEEE-exact, so *if* XLA neither reassociates
+nor FMA-contracts the graph (fast-math is off by default), the lowered
+artifact reproduces the Rust bits exactly — experiment E6 verifies
+which of these holds on this build.
+"""
+
+import jax.numpy as jnp
+
+LOG2E = 1.4426950408889634
+LN2_HI = 6.93147180369123816490e-01
+LN2_LO = 1.90821492927058770002e-10
+
+_INV = [
+    1.0,
+    0.5,
+    0.333333333333333333,
+    0.25,
+    0.2,
+    0.166666666666666667,
+    0.142857142857142857,
+    0.125,
+    0.111111111111111111,
+    0.1,
+    0.0909090909090909091,
+    0.0833333333333333333,
+    0.0769230769230769231,
+    0.0714285714285714286,
+]
+
+
+def exp_fixed_f64(x):
+    """Elementwise e^x for f32 input via the fixed f64 graph."""
+    xd = x.astype(jnp.float64)
+    k = jnp.round(xd * LOG2E)
+    r = (xd - k * LN2_HI) - k * LN2_LO
+    p = 1.0 + r * _INV[13]
+    for i in range(12, 0, -1):
+        p = 1.0 + r * _INV[i] * p
+    p = 1.0 + r * p
+    y = p * jnp.exp2(k)  # 2^k with k integral is exact
+    return y.astype(jnp.float32)

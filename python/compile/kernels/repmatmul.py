@@ -1,0 +1,74 @@
+"""Reproducible GEMM as a Pallas kernel (paper §3.2.2).
+
+Specification (shared bit-for-bit with `rust/src/tensor/matmul.rs`):
+``C[i,j] = Σ_k A[i,k]·B[k,j]`` with the k-reduction **strictly
+sequential**. The k-loop is a ``fori_loop`` carried dependency, which no
+compiler may reassociate — the Pallas/TPU translation of the paper's
+"one CUDA thread per output element, no atomics" design.
+
+Empirical note (pinned by the tests): XLA CPU contracts the multiply+add
+into a single **FMA** — precisely the contraction the paper *enables*
+(§3.2.4: FMA has higher precision and performance and is itself an
+IEEE-correctly-rounded op). The artifact therefore implements the
+``matmul_fma`` spec; its bit-exact Rust partner is
+``tensor::matmul_fma`` / ``rnum::dot::dot_strided_fma`` (experiment E6
+asserts that equality).
+
+Hardware adaptation (DESIGN.md §1): the grid iterates output *rows*
+(VMEM-tiled via BlockSpec); within a row all N output columns accumulate
+in parallel lanes while each column's reduction order stays sequential —
+order-invariant parallelism. The MXU is deliberately not used: systolic
+accumulation order is unspecified, exactly the hazard the paper's §4
+names for low-precision units.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO (see /opt/xla-example).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def repmatmul(a, b):
+    """Sequential-k reproducible matmul: (m,k) x (k,n) -> (m,n), f32."""
+    m, kdim = a.shape
+    k2, n = b.shape
+    assert kdim == k2, f"shape mismatch {a.shape} x {b.shape}"
+
+    def kernel(a_ref, b_ref, o_ref):
+        arow = a_ref[0, :]  # (k,)
+        bmat = b_ref[...]  # (k,n)
+
+        def body(kk, acc):
+            # loop-carried multiply-add; XLA contracts this to FMA (see
+            # module docs) — the RepDL sequential-k FMA spec
+            return acc + arow[kk] * bmat[kk, :]
+
+        o_ref[0, :] = jax.lax.fori_loop(0, kdim, body, jnp.zeros((n,), jnp.float32))
+
+    return pl.pallas_call(
+        kernel,
+        grid=(m,),
+        in_specs=[
+            pl.BlockSpec((1, kdim), lambda i: (i, 0)),
+            pl.BlockSpec((kdim, n), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(a, b)
+
+
+def matmul_seq_scan(a, b):
+    """The same sequential-k spec in plain JAX (scan-based) — used by the
+    differentiable L2 model (pallas_call has no automatic VJP)."""
+    kdim = a.shape[1]
+    n = b.shape[1]
+
+    def body(acc, k):
+        return acc + a[:, k][:, None] * b[k, :][None, :], None
+
+    acc0 = jnp.zeros((a.shape[0], n), jnp.float32)
+    out, _ = jax.lax.scan(body, acc0, jnp.arange(kdim))
+    return out

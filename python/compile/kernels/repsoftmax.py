@@ -1,0 +1,42 @@
+"""Reproducible row softmax as a Pallas kernel (paper §3.2.3).
+
+The fixed graph matches `rust/src/nn/softmax.rs`: running first-max,
+subtract, exp, **sequential** sum, divide. The exp is XLA's `exp` — a
+platform-defined approximation — so cross-*implementation* bitwise
+equality against the Rust softmax (which uses the correctly-rounded
+`rexp`) is NOT expected for this op; the E6 harness measures and reports
+the ULP gap instead. Within the XLA backend the kernel is bit-stable.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def repsoftmax_rows(x):
+    """Row-wise softmax over a 2-D f32 array, fixed reduction orders."""
+    rows, c = x.shape
+
+    def kernel(x_ref, o_ref):
+        v = x_ref[0, :]
+
+        def maxbody(j, m):
+            return jnp.maximum(m, v[j])
+
+        m = jax.lax.fori_loop(1, c, maxbody, v[0])
+        e = jnp.exp(v - m)
+
+        def sumbody(j, acc):
+            return acc + e[j]
+
+        denom = jax.lax.fori_loop(0, c, sumbody, jnp.float32(0.0))
+        o_ref[0, :] = e / denom
+
+    return pl.pallas_call(
+        kernel,
+        grid=(rows,),
+        in_specs=[pl.BlockSpec((1, c), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, c), jnp.float32),
+        interpret=True,
+    )(x)

@@ -1,0 +1,55 @@
+"""Reproducible summation kernels (paper §3.2.2).
+
+Two association orders, two APIs — the paper's rule:
+
+* ``repsum_sequential``  — Pallas kernel, loop-carried scalar accumulator.
+* ``sum_pairwise_spec``  — the pairwise tree with the *same shape spec* as
+  ``rust/src/rnum/sum.rs``: base case = sequential over ≤8, split at the
+  largest power of two below n. Host-recursion builds a fixed unrolled
+  add-tree in the graph.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def repsum_sequential(x):
+    """Strict left-to-right sum of a 1-D f32 vector -> shape (1,)."""
+    (n,) = x.shape
+
+    def kernel(x_ref, o_ref):
+        v = x_ref[...]
+
+        def body(i, acc):
+            return acc + v[i]
+
+        o_ref[0] = jax.lax.fori_loop(0, n, body, jnp.float32(0.0))
+
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((1,), jnp.float32),
+        interpret=True,
+    )(x)
+
+
+def _split(n: int) -> int:
+    """Largest power of two strictly below n (the shared tree spec)."""
+    p = 1
+    while p * 2 < n:
+        p *= 2
+    return p
+
+
+def sum_pairwise_spec(x):
+    """Pairwise-tree sum matching the Rust `sum_pairwise` spec bitwise."""
+    n = x.shape[0]
+    if n <= 8:
+        # identical to Rust sum_sequential: start from +0.0 (this also
+        # canonicalises a leading -0.0, matching the Rust bits exactly)
+        acc = jnp.float32(0.0)
+        for i in range(n):
+            acc = acc + x[i]
+        return acc
+    m = _split(n)
+    return sum_pairwise_spec(x[:m]) + sum_pairwise_spec(x[m:])

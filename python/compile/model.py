@@ -1,0 +1,54 @@
+"""L2: JAX models built from the L1 kernel specs.
+
+The inference paths call the Pallas kernels; the training path uses the
+scan-based sequential-k matmul (same reduction-order spec) because
+`pallas_call` has no automatic VJP. Everything here is lowered once by
+`aot.py`; Python never runs at serving time.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.repmatmul import matmul_seq_scan, repmatmul
+from .kernels.repsoftmax import repsoftmax_rows
+
+
+def mlp_forward(x, w1, b1, w2, b2):
+    """2-layer MLP forward with Pallas GEMMs: returns (logits,)."""
+    h = repmatmul(x, w1) + b1
+    h = jnp.maximum(h, 0.0)
+    logits = repmatmul(h, w2) + b2
+    return (logits,)
+
+
+def mlp_forward_softmax(x, w1, b1, w2, b2):
+    """MLP forward + reproducible softmax head: returns (probs,)."""
+    (logits,) = mlp_forward(x, w1, b1, w2, b2)
+    return (repsoftmax_rows(logits),)
+
+
+def _mlp_loss(params, x, y_onehot):
+    w1, b1, w2, b2 = params
+    h = matmul_seq_scan(x, w1) + b1
+    h = jnp.maximum(h, 0.0)
+    logits = matmul_seq_scan(h, w2) + b2
+    # fixed stable-CE graph: max-shift, exp, sequential-order sums are
+    # XLA reductions here (deterministic within this backend)
+    m = jnp.max(logits, axis=1, keepdims=True)
+    z = logits - m
+    lse = jnp.log(jnp.sum(jnp.exp(z), axis=1, keepdims=True))
+    logp = z - lse
+    return -jnp.mean(jnp.sum(y_onehot * logp, axis=1))
+
+
+def mlp_train_step(x, y_onehot, w1, b1, w2, b2, lr):
+    """One SGD step; returns (loss, w1', b1', w2', b2')."""
+    loss, grads = jax.value_and_grad(_mlp_loss)((w1, b1, w2, b2), x, y_onehot)
+    g1, gb1, g2, gb2 = grads
+    return (
+        loss,
+        w1 - lr * g1,
+        b1 - lr * gb1,
+        w2 - lr * g2,
+        b2 - lr * gb2,
+    )

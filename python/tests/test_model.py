@@ -1,0 +1,74 @@
+"""L2 model tests: shapes, determinism, and that the AOT train step
+actually learns."""
+
+import numpy as np
+import jax.numpy as jnp
+
+from compile import model
+
+
+def params(seed=0):
+    r = np.random.default_rng(seed)
+    w1 = (r.random((64, 32), dtype=np.float32) - 0.5) * 0.3
+    b1 = np.zeros(32, np.float32)
+    w2 = (r.random((32, 10), dtype=np.float32) - 0.5) * 0.3
+    b2 = np.zeros(10, np.float32)
+    return w1, b1, w2, b2
+
+
+def batch(seed=1):
+    r = np.random.default_rng(seed)
+    x = r.random((16, 64), dtype=np.float32)
+    y = np.zeros((16, 10), np.float32)
+    labels = r.integers(0, 10, 16)
+    y[np.arange(16), labels] = 1.0
+    return x, y
+
+
+def test_forward_shapes():
+    w1, b1, w2, b2 = params()
+    x, _ = batch()
+    (logits,) = model.mlp_forward(*(jnp.array(v) for v in (x, w1, b1, w2, b2)))
+    assert logits.shape == (16, 10)
+    (probs,) = model.mlp_forward_softmax(*(jnp.array(v) for v in (x, w1, b1, w2, b2)))
+    np.testing.assert_allclose(np.asarray(probs).sum(axis=1), 1.0, rtol=1e-5)
+
+
+def test_forward_deterministic():
+    w1, b1, w2, b2 = params(2)
+    x, _ = batch(3)
+    args = tuple(jnp.array(v) for v in (x, w1, b1, w2, b2))
+    (a,) = model.mlp_forward(*args)
+    (b,) = model.mlp_forward(*args)
+    assert np.array_equal(
+        np.asarray(a).view(np.uint32), np.asarray(b).view(np.uint32)
+    )
+
+
+def test_train_step_learns():
+    w1, b1, w2, b2 = params(4)
+    x, y = batch(5)
+    lr = jnp.float32(0.5)
+    losses = []
+    p = tuple(jnp.array(v) for v in (w1, b1, w2, b2))
+    for _ in range(30):
+        loss, *p = model.mlp_train_step(jnp.array(x), jnp.array(y), *p, lr)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.7, losses[::10]
+
+
+def test_train_step_deterministic():
+    w1, b1, w2, b2 = params(6)
+    x, y = batch(7)
+    lr = jnp.float32(0.1)
+    out1 = model.mlp_train_step(
+        *(jnp.array(v) for v in (x, y, w1, b1, w2, b2)), lr
+    )
+    out2 = model.mlp_train_step(
+        *(jnp.array(v) for v in (x, y, w1, b1, w2, b2)), lr
+    )
+    for a, b in zip(out1, out2):
+        assert np.array_equal(
+            np.asarray(a).view(np.uint32).ravel(),
+            np.asarray(b).view(np.uint32).ravel(),
+        )

@@ -1,0 +1,48 @@
+//! E1 — run-to-run determinism (paper §1, §2.2.2 "atomic operations").
+//!
+//! Regenerates the claim as a table: N repeated training runs per
+//! numerics mode → number of distinct final-state hashes (RepDL must give
+//! 1; the simulated-atomics baseline gives ≈N) + step time.
+
+use repdl::baseline::PlatformProfile;
+use repdl::bench_harness::{bench, row, section};
+use repdl::coordinator::{NumericsMode, Trainer, TrainerConfig};
+use std::collections::HashSet;
+
+fn distinct_hashes(mode: NumericsMode, runs: usize, cfg: TrainerConfig) -> usize {
+    let mut set = HashSet::new();
+    for _ in 0..runs {
+        set.insert(Trainer::new(cfg, mode).run().unwrap().param_hash);
+    }
+    set.len()
+}
+
+fn main() {
+    let cfg = TrainerConfig { steps: 25, ..Default::default() };
+    let p = PlatformProfile::reference();
+    section("E1: run-to-run determinism (5 runs each, 25 training steps)");
+    row(
+        "repdl            distinct final states",
+        distinct_hashes(NumericsMode::Repro, 5, cfg),
+    );
+    row(
+        "baseline         distinct final states",
+        distinct_hashes(NumericsMode::Baseline(p), 5, cfg),
+    );
+    row(
+        "baseline+atomics distinct final states",
+        distinct_hashes(NumericsMode::BaselineAtomic(p), 5, cfg),
+    );
+
+    section("E1: training cost by mode (5 steps)");
+    let small = TrainerConfig { steps: 5, ..Default::default() };
+    bench("repdl 5-step train", 5, || {
+        Trainer::new(small, NumericsMode::Repro).run().unwrap()
+    });
+    bench("baseline 5-step train", 5, || {
+        Trainer::new(small, NumericsMode::Baseline(p)).run().unwrap()
+    });
+    bench("baseline+atomics 5-step train", 5, || {
+        Trainer::new(small, NumericsMode::BaselineAtomic(p)).run().unwrap()
+    });
+}

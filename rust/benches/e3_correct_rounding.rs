@@ -1,0 +1,128 @@
+//! E3 — correct rounding of basic operations (paper §3.2.1).
+//!
+//! For each basic op: 0-ulp rate vs the 320-bit BigFloat oracle over a
+//! large pseudo-random sweep, the competing "fast libm" variants' ULP
+//! histograms (the paper's §2.2.1 hazard), and the runtime cost of
+//! correct rounding.
+
+use repdl::baseline::{exp_variant, log_variant, MathImpl};
+use repdl::bench_harness::{bench, row, section};
+use repdl::proptest::Gen;
+use repdl::rnum::bigfloat::{BigFloat, PREC_ORACLE};
+use repdl::rnum::fbits::ulp_diff;
+use repdl::rnum::{rcos, rexp, rlog, rrsqrt, rsin, rsqrt_f32, rtanh};
+
+const N: usize = 200_000;
+
+fn sweep(
+    name: &str,
+    mut gen: impl FnMut(&mut Gen) -> f32,
+    got: impl Fn(f32) -> f32,
+    oracle: impl Fn(f32) -> f32,
+) {
+    let mut g = Gen::new(0xE3);
+    let mut worst = 0u32;
+    let mut exact = 0usize;
+    for _ in 0..N {
+        let x = gen(&mut g);
+        let d = ulp_diff(got(x), oracle(x));
+        worst = worst.max(d);
+        exact += (d == 0) as usize;
+    }
+    row(
+        &format!("{name}: 0-ulp rate"),
+        format!("{exact}/{N}  (max {worst} ulp)"),
+    );
+    assert_eq!(exact, N, "{name} violated correct rounding");
+}
+
+fn main() {
+    section("E3: correct-rounding verification vs 320-bit oracle");
+    sweep(
+        "rexp ",
+        |g| g.f32_range(-104.0, 89.0),
+        rexp,
+        |x| BigFloat::from_f32(x, PREC_ORACLE).exp_bf().to_f32(),
+    );
+    sweep(
+        "rlog ",
+        |g| {
+            let v = g.f32_any().abs();
+            if v == 0.0 || !v.is_finite() {
+                1.5
+            } else {
+                v
+            }
+        },
+        rlog,
+        |x| BigFloat::from_f32(x, PREC_ORACLE).ln_bf().to_f32(),
+    );
+    sweep(
+        "rsin ",
+        |g| g.f32_range(-1e6, 1e6),
+        rsin,
+        |x| BigFloat::from_f32(x, PREC_ORACLE).sin_bf().to_f32(),
+    );
+    sweep(
+        "rcos ",
+        |g| g.f32_range(-1e6, 1e6),
+        rcos,
+        |x| BigFloat::from_f32(x, PREC_ORACLE).cos_bf().to_f32(),
+    );
+    sweep(
+        "rtanh",
+        |g| g.f32_range(-9.9, 9.9),
+        rtanh,
+        |x| BigFloat::from_f32(x, PREC_ORACLE).tanh_bf().to_f32(),
+    );
+    sweep(
+        "rsqrt",
+        |g| {
+            let v = g.f32_any().abs();
+            if v.is_finite() {
+                v
+            } else {
+                2.0
+            }
+        },
+        rsqrt_f32,
+        |x| BigFloat::from_f32(x, PREC_ORACLE).sqrt().to_f32(),
+    );
+    sweep(
+        "rrsqrt",
+        |g| g.f32_range(1e-30, 1e30),
+        rrsqrt,
+        |x| {
+            let b = BigFloat::from_f32(x, PREC_ORACLE);
+            BigFloat::one(PREC_ORACLE).div(&b.sqrt()).to_f32()
+        },
+    );
+
+    section("E3: fast-libm variants' ULP distribution (exp, 100k points)");
+    let mut g = Gen::new(7);
+    let mut hist = [[0u32; 4]; 2];
+    for _ in 0..100_000 {
+        let x = g.f32_range(-85.0, 85.0);
+        let want = BigFloat::from_f32(x, PREC_ORACLE).exp_bf().to_f32();
+        hist[0][ulp_diff(exp_variant(x, MathImpl::GlibcLike), want).min(3) as usize] += 1;
+        hist[1][ulp_diff(exp_variant(x, MathImpl::IntelLike), want).min(3) as usize] += 1;
+    }
+    println!("{:<16} {:>8} {:>8} {:>8} {:>8}", "impl", "0", "1", "2", ">2 ulp");
+    for (name, h) in [("glibc-like", hist[0]), ("intel-like", hist[1])] {
+        println!("{name:<16} {:>8} {:>8} {:>8} {:>8}", h[0], h[1], h[2], h[3]);
+    }
+
+    section("E3: cost of correct rounding (1000 calls per sample)");
+    let xs: Vec<f32> = (0..1000).map(|i| -80.0 + i as f32 * 0.16).collect();
+    bench("rexp (CR)", 7, || xs.iter().map(|&x| rexp(x)).sum::<f32>());
+    bench("libm expf (platform)", 7, || xs.iter().map(|&x| x.exp()).sum::<f32>());
+    bench("glibc-like variant", 7, || {
+        xs.iter().map(|&x| exp_variant(x, MathImpl::GlibcLike)).sum::<f32>()
+    });
+    let ys: Vec<f32> = (0..1000).map(|i| 0.001 + i as f32 * 7.3).collect();
+    bench("rlog (CR)", 7, || ys.iter().map(|&x| rlog(x)).sum::<f32>());
+    bench("libm logf (platform)", 7, || ys.iter().map(|&x| x.ln()).sum::<f32>());
+    bench("intel-like variant", 7, || {
+        ys.iter().map(|&x| log_variant(x, MathImpl::IntelLike)).sum::<f32>()
+    });
+}

@@ -1,0 +1,87 @@
+//! E4 — summation-order analysis (paper §3.2.2).
+//!
+//! Regenerates the section's content as tables:
+//! 1. throughput of sequential / pairwise / Kahan / exact-superaccumulator
+//!    summation (the paper rejects the superaccumulator on these grounds);
+//! 2. the t_fc / t_conv parallel-task analysis including the ResNet-50
+//!    worked example (t_conv = B·802816 ≫ 6912 CUDA cores).
+
+use repdl::bench_harness::{bench, row, section};
+use repdl::rnum::{sum_exact, sum_kahan, sum_pairwise, sum_sequential};
+
+fn main() {
+    let n = 1 << 20;
+    let xs: Vec<f32> = (0..n).map(|i| ((i * 37 % 1013) as f32 - 506.0) * 0.01).collect();
+
+    section("E4: summation algorithms, 2^20 elements");
+    let s1 = bench("sum_sequential", 7, || sum_sequential(&xs));
+    let s2 = bench("sum_pairwise", 7, || sum_pairwise(&xs));
+    let s3 = bench("sum_kahan", 7, || sum_kahan(&xs));
+    let s4 = bench("sum_exact (superaccumulator)", 7, || sum_exact(&xs));
+    row(
+        "superacc slowdown vs sequential",
+        format!("{:.1}x  (the paper's 'too inefficient')", s4.median_ns / s1.median_ns),
+    );
+    row(
+        "pairwise overhead vs sequential",
+        format!("{:.2}x", s2.median_ns / s1.median_ns),
+    );
+    row(
+        "kahan overhead vs sequential",
+        format!("{:.2}x", s3.median_ns / s1.median_ns),
+    );
+
+    section("E4: accuracy on ill-conditioned data (n=2^20, mixed magnitudes)");
+    let wild: Vec<f32> = (0..n)
+        .map(|i| {
+            let m = [1.0f32, 1e6, -1e6, 1e-6][i % 4];
+            ((i * 131 % 997) as f32 - 498.0) * m * 1e-3
+        })
+        .collect();
+    let exact = sum_exact(&wild) as f64;
+    for (name, v) in [
+        ("sequential", sum_sequential(&wild) as f64),
+        ("pairwise", sum_pairwise(&wild) as f64),
+        ("kahan", sum_kahan(&wild) as f64),
+        ("superacc (exact)", exact),
+    ] {
+        row(
+            &format!("{name}: |err| vs exact"),
+            format!("{:.3e}", (v - exact).abs()),
+        );
+    }
+
+    section("E4: the paper's parallel-task analysis (reproduced table)");
+    println!(
+        "{:<34} {:>14} {:>10} {:>18}",
+        "layer", "tasks t", "n per task", "t >= 6912 cores?"
+    );
+    // fully connected: t_fc = B*M, n_fc = N
+    for (b, m, nf) in [(1usize, 1000usize, 2048usize), (32, 1000, 2048), (256, 4096, 1024)] {
+        println!(
+            "{:<34} {:>14} {:>10} {:>18}",
+            format!("fc B={b} M={m} N={nf}"),
+            b * m,
+            nf,
+            if b * m >= 6912 { "yes" } else { "NO -> pairwise" }
+        );
+    }
+    // conv: t_conv = B*O*W*H, n_conv = I*Kw*Kh — the ResNet-50 example
+    for (b, o, w, h, i, k) in [
+        (1usize, 256usize, 56usize, 56usize, 64usize, 1usize),
+        (1, 256, 56, 56, 128, 3),
+        (8, 512, 7, 7, 512, 3),
+    ] {
+        println!(
+            "{:<34} {:>14} {:>10} {:>18}",
+            format!("conv B={b} O={o} {w}x{h} I={i} K={k}"),
+            b * o * w * h,
+            i * k * k,
+            if b * o * w * h >= 6912 { "yes" } else { "NO -> pairwise" }
+        );
+    }
+    row(
+        "ResNet-50 t_conv at B=1 (paper's example)",
+        format!("{} = 802816  >> 6912 A100 cores", 256 * 56 * 56),
+    );
+}

@@ -1,0 +1,60 @@
+//! E5 — "switching to RepDL can degrade performance mildly" (paper §4).
+//!
+//! Head-to-head: RepDL reproducible kernels vs the conventional baseline
+//! kernels (which are free to pick any order), plus end-to-end training
+//! step time. The interesting number is the ratio.
+
+use repdl::baseline::{baseline_matmul, baseline_softmax_rows, PlatformProfile};
+use repdl::bench_harness::{bench, row, section};
+use repdl::coordinator::{NumericsMode, Trainer, TrainerConfig};
+use repdl::nn::softmax_rows;
+use repdl::rng::uniform_tensor;
+use repdl::tensor::{conv2d, matmul, matmul_fma, matmul_pairwise, Conv2dParams};
+
+fn main() {
+    let p = PlatformProfile::zoo()[2]; // avx2-like: 8 lanes + FMA
+
+    section("E5: GEMM 128x256 · 256x128");
+    let a = uniform_tensor(&[128, 256], -1.0, 1.0, 1);
+    let b = uniform_tensor(&[256, 128], -1.0, 1.0, 2);
+    let r1 = bench("repdl matmul (seq-k)", 7, || matmul(&a, &b).unwrap());
+    let r2 = bench("repdl matmul_fma", 7, || matmul_fma(&a, &b).unwrap());
+    let r3 = bench("repdl matmul_pairwise", 7, || matmul_pairwise(&a, &b).unwrap());
+    let rb = bench("baseline matmul (8-lane fma)", 7, || {
+        baseline_matmul(&a, &b, &p).unwrap()
+    });
+    row("repdl/baseline ratio (seq)", format!("{:.2}x", r1.median_ns / rb.median_ns));
+    row("repdl/baseline ratio (fma)", format!("{:.2}x", r2.median_ns / rb.median_ns));
+    row("repdl/baseline ratio (pairwise)", format!("{:.2}x", r3.median_ns / rb.median_ns));
+
+    section("E5: conv2d 8x16x28x28, 32 filters 3x3 pad 1");
+    let x = uniform_tensor(&[8, 16, 28, 28], -1.0, 1.0, 3);
+    let w = uniform_tensor(&[32, 16, 3, 3], -0.2, 0.2, 4);
+    let pc = Conv2dParams { stride: 1, padding: 1 };
+    let c1 = bench("repdl conv2d_direct (ablation)", 5, || repdl::tensor::conv2d_direct(&x, &w, None, pc).unwrap());
+    let c2 = bench("repdl conv2d (routed: im2col+GEMM)", 5, || {
+        conv2d(&x, &w, None, pc).unwrap()
+    });
+    row("routed/direct ratio", format!("{:.2}x", c2.median_ns / c1.median_ns));
+
+    section("E5: softmax 256x1024");
+    let s = uniform_tensor(&[256, 1024], -5.0, 5.0, 5);
+    let s1 = bench("repdl softmax (CR rexp)", 7, || softmax_rows(&s).unwrap());
+    let s2 = bench("baseline softmax (fast libm)", 7, || {
+        baseline_softmax_rows(&s, &p).unwrap()
+    });
+    row("repdl/baseline ratio", format!("{:.2}x", s1.median_ns / s2.median_ns));
+
+    section("E5: end-to-end training step (MLP workload)");
+    let cfg = TrainerConfig { steps: 5, ..Default::default() };
+    let t1 = bench("repdl 5-step train", 5, || {
+        Trainer::new(cfg, NumericsMode::Repro).run().unwrap()
+    });
+    let t2 = bench("baseline 5-step train", 5, || {
+        Trainer::new(cfg, NumericsMode::Baseline(p)).run().unwrap()
+    });
+    row(
+        "end-to-end repdl/baseline",
+        format!("{:.2}x  (paper: 'mild degradation')", t1.median_ns / t2.median_ns),
+    );
+}

@@ -1,0 +1,71 @@
+//! E6 — cross-implementation reproducibility: native Rust kernels vs the
+//! AOT-compiled JAX/Pallas artifacts executed via PJRT. Reports bitwise
+//! agreement per op and the PJRT execution cost. Skips gracefully when
+//! artifacts are missing.
+
+use repdl::bench_harness::{bench, row, section};
+use repdl::rng::uniform_tensor;
+use repdl::rnum::fbits::ulp_diff;
+use repdl::runtime::Runtime;
+use repdl::tensor::matmul_fma;
+
+fn main() {
+    section("E6: cross-implementation (rust-native vs XLA/PJRT artifact)");
+    let mut rt = match Runtime::new("artifacts") {
+        Ok(rt) => rt,
+        Err(e) => {
+            println!("SKIPPED: {e}");
+            return;
+        }
+    };
+    row("PJRT platform", rt.platform());
+
+    // matmul: bitwise across stacks
+    let a = uniform_tensor(&[64, 128], -1.0, 1.0, 11);
+    let b = uniform_tensor(&[128, 32], -1.0, 1.0, 12);
+    let xla = rt.run("matmul_repro", &[a.clone(), b.clone()]).unwrap();
+    let native = matmul_fma(&a, &b).unwrap();
+    row("matmul 64x128x32 bitwise equal", xla[0].bit_eq(&native));
+
+    // sums
+    let x = uniform_tensor(&[4096], -100.0, 100.0, 13);
+    let seq = rt.run("sum_seq", &[x.clone()]).unwrap();
+    row(
+        "sum_seq bitwise equal",
+        seq[0].data()[0].to_bits() == repdl::rnum::sum_sequential(x.data()).to_bits(),
+    );
+    let pw = rt.run("sum_pairwise", &[x.clone()]).unwrap();
+    row(
+        "sum_pairwise bitwise equal",
+        pw[0].data()[0].to_bits() == repdl::rnum::sum_pairwise(x.data()).to_bits(),
+    );
+
+    // exp fixed graph
+    let e = uniform_tensor(&[1024], -60.0, 60.0, 14);
+    let xe = rt.run("exp_fixed", &[e.clone()]).unwrap();
+    let mut exact = 0;
+    for (i, &v) in e.data().iter().enumerate() {
+        let n = repdl::rnum::exp::exp_fixed_graph_f64(v as f64) as f32;
+        exact += (xe[0].data()[i].to_bits() == n.to_bits()) as usize;
+    }
+    row("exp_fixed bit-equal fraction", format!("{exact}/1024"));
+
+    // softmax ULP gap (different exp impls — expected nonzero)
+    let s = uniform_tensor(&[32, 64], -8.0, 8.0, 15);
+    let xs = rt.run("softmax_repro", &[s.clone()]).unwrap();
+    let ns = repdl::nn::softmax_rows(&s).unwrap();
+    let max_ulp = xs[0]
+        .data()
+        .iter()
+        .zip(ns.data())
+        .map(|(a, b)| ulp_diff(*a, *b))
+        .max()
+        .unwrap();
+    row("softmax max ulp gap (exp differs)", max_ulp);
+
+    section("E6: PJRT execution cost vs native");
+    bench("xla matmul 64x128x32", 7, || {
+        rt.run("matmul_repro", &[a.clone(), b.clone()]).unwrap()
+    });
+    bench("native matmul_fma 64x128x32", 7, || matmul_fma(&a, &b).unwrap());
+}

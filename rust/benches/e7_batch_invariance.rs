@@ -1,0 +1,43 @@
+//! E7 — dynamic-batching hazard (paper §2.2.2): per-request bitwise
+//! stability under varying batch composition, per platform, plus serving
+//! throughput.
+
+use repdl::baseline::PlatformProfile;
+use repdl::bench_harness::{bench, row, section};
+use repdl::coordinator::DeterministicServer;
+use repdl::rng::uniform_tensor;
+use repdl::tensor::Tensor;
+
+fn main() {
+    let d = 256;
+    let n = 64;
+    let w = uniform_tensor(&[d, 16], -0.3, 0.3, 5);
+    let srv = DeterministicServer::new(w, 64);
+    let queue: Vec<Tensor> = (0..n)
+        .map(|i| uniform_tensor(&[d], -1.0, 1.0, 100 + i as u64))
+        .collect();
+
+    section("E7: per-request bit changes across batch sizes {1,4,16,64}");
+    println!("{:<24} {:>14} {:>18}", "platform", "repdl", "baseline");
+    for p in PlatformProfile::zoo() {
+        let rep = srv
+            .batch_invariance_report(&queue, &[1, 4, 16, 64], &p)
+            .unwrap();
+        println!(
+            "{:<24} {:>10}/{:<3} {:>14}/{:<3}",
+            p.name, rep.repro_mismatches, rep.requests, rep.baseline_mismatches, rep.requests
+        );
+        assert_eq!(rep.repro_mismatches, 0);
+    }
+
+    section("E7: serving throughput (64 requests, max_batch 16)");
+    let srv16 = DeterministicServer::new(uniform_tensor(&[d, 16], -0.3, 0.3, 5), 16);
+    let s = bench("repdl path", 7, || srv16.process_repro(&queue).unwrap());
+    let p = PlatformProfile::zoo()[2];
+    let b = bench("baseline path", 7, || srv16.process_baseline(&queue, &p).unwrap());
+    row(
+        "requests/sec (repdl)",
+        format!("{:.0}", n as f64 / (s.median_ns / 1e9)),
+    );
+    row("repdl/baseline latency ratio", format!("{:.2}x", s.median_ns / b.median_ns));
+}

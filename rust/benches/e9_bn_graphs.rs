@@ -1,0 +1,59 @@
+//! E9 — the batch-norm computation-graph example (paper §3.2.3).
+//!
+//! The three real-number-equal orders the paper lists produce different
+//! bits from one another while each is individually reproducible; the
+//! table counts differing elements pairwise and times each graph.
+
+use repdl::bench_harness::{bench, row, section};
+use repdl::nn::{batch_norm, batch_norm_affine_folded, batch_norm_folded};
+use repdl::rng::uniform_tensor;
+
+fn main() {
+    let x = uniform_tensor(&[8, 64, 28, 28], -3.0, 3.0, 1);
+    let c = 64;
+    let mean: Vec<f32> = (0..c).map(|i| (i as f32 * 0.13).sin() * 0.5).collect();
+    let var: Vec<f32> = (0..c).map(|i| 0.5 + (i as f32 * 0.7).cos().abs()).collect();
+    let w: Vec<f32> = (0..c).map(|i| 0.8 + (i % 5) as f32 * 0.1).collect();
+    let b: Vec<f32> = (0..c).map(|i| (i as f32 * 0.31).sin() * 0.2).collect();
+    let eps = 1e-5;
+
+    let v1 = batch_norm(&x, &mean, &var, &w, &b, eps).unwrap();
+    let v2 = batch_norm_folded(&x, &mean, &var, &w, &b, eps).unwrap();
+    let v3 = batch_norm_affine_folded(&x, &mean, &var, &w, &b, eps).unwrap();
+
+    let diff = |a: &repdl::tensor::Tensor, b: &repdl::tensor::Tensor| {
+        a.data()
+            .iter()
+            .zip(b.data())
+            .filter(|(x, y)| x.to_bits() != y.to_bits())
+            .count()
+    };
+
+    section("E9: three batch-norm graphs (8x64x28x28, 401k elements)");
+    row("graph1 vs graph2: differing elements", diff(&v1, &v2));
+    row("graph1 vs graph3: differing elements", diff(&v1, &v3));
+    row("graph2 vs graph3: differing elements", diff(&v2, &v3));
+    row(
+        "graph1 deterministic",
+        v1.bit_eq(&batch_norm(&x, &mean, &var, &w, &b, eps).unwrap()),
+    );
+    row(
+        "graph2 deterministic",
+        v2.bit_eq(&batch_norm_folded(&x, &mean, &var, &w, &b, eps).unwrap()),
+    );
+    row(
+        "graph3 deterministic",
+        v3.bit_eq(&batch_norm_affine_folded(&x, &mean, &var, &w, &b, eps).unwrap()),
+    );
+
+    section("E9: cost per graph");
+    bench("batch_norm (documented order)", 7, || {
+        batch_norm(&x, &mean, &var, &w, &b, eps).unwrap()
+    });
+    bench("batch_norm_folded", 7, || {
+        batch_norm_folded(&x, &mean, &var, &w, &b, eps).unwrap()
+    });
+    bench("batch_norm_affine_folded", 7, || {
+        batch_norm_affine_folded(&x, &mean, &var, &w, &b, eps).unwrap()
+    });
+}

@@ -1,0 +1,13 @@
+//! Tape-based reverse-mode autodiff with **deterministic gradient
+//! accumulation**.
+//!
+//! The paper (§2.2.2) singles out atomic-add gradient accumulation as a
+//! prime source of training non-determinism. This engine removes it
+//! structurally: the tape replays in strict reverse creation order, and a
+//! node's gradient contributions are added in that fixed order, so the
+//! whole backward pass is one fixed computation graph. Every op's backward
+//! is itself built from the reproducible `tensor`/`rnum` kernels.
+
+pub mod tape;
+
+pub use tape::{Tape, Var};

@@ -1,0 +1,932 @@
+//! The tape: an append-only arena of nodes, replayed in reverse.
+
+use crate::rnum::special::{rgelu_tanh, rsigmoid, rtanh};
+use crate::rnum::{rexp, rlog};
+use crate::tensor::{matmul, sum_axis, Conv2dParams, Tensor};
+use crate::{Error, Result};
+
+/// Handle to a tape node.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Var(usize);
+
+impl Var {
+    /// Raw tape index (for custom ops' backward closures).
+    pub fn index(&self) -> usize {
+        self.0
+    }
+}
+
+enum Op {
+    /// Leaf (input or parameter).
+    Leaf,
+    /// Generic op: parents + a backward that maps (grad_out, tape values)
+    /// to one gradient per parent, in parent order.
+    Node {
+        parents: Vec<usize>,
+        #[allow(clippy::type_complexity)]
+        backward: Box<dyn Fn(&Tensor, &dyn Fn(usize) -> Tensor) -> Vec<Tensor>>,
+    },
+}
+
+struct NodeRec {
+    value: Tensor,
+    grad: Option<Tensor>,
+    op: Op,
+    requires_grad: bool,
+}
+
+/// Reverse-mode tape. One tape per forward+backward pass.
+#[derive(Default)]
+pub struct Tape {
+    nodes: Vec<NodeRec>,
+}
+
+impl Tape {
+    /// Fresh empty tape.
+    pub fn new() -> Self {
+        Tape { nodes: Vec::new() }
+    }
+
+    fn push(&mut self, value: Tensor, op: Op, requires_grad: bool) -> Var {
+        self.nodes.push(NodeRec { value, grad: None, op, requires_grad });
+        Var(self.nodes.len() - 1)
+    }
+
+    /// Insert a constant input (no gradient tracked).
+    pub fn input(&mut self, t: Tensor) -> Var {
+        self.push(t, Op::Leaf, false)
+    }
+
+    /// Insert a parameter (gradient tracked).
+    pub fn param(&mut self, t: Tensor) -> Var {
+        self.push(t, Op::Leaf, true)
+    }
+
+    /// Value of a var (cloned).
+    pub fn value(&self, v: Var) -> Tensor {
+        self.nodes[v.0].value.clone()
+    }
+
+    /// Borrow the value of a var.
+    pub fn value_ref(&self, v: Var) -> &Tensor {
+        &self.nodes[v.0].value
+    }
+
+    /// Gradient of a var after [`Tape::backward`] (None if not reached).
+    pub fn grad(&self, v: Var) -> Option<Tensor> {
+        self.nodes[v.0].grad.clone()
+    }
+
+    // -----------------------------------------------------------------
+    // ops
+    // -----------------------------------------------------------------
+
+    /// Matrix product (2-D × 2-D).
+    pub fn matmul(&mut self, a: Var, b: Var) -> Result<Var> {
+        let v = matmul(self.value_ref(a), self.value_ref(b))?;
+        let rg = self.req(a) || self.req(b);
+        Ok(self.push(
+            v,
+            Op::Node {
+                parents: vec![a.0, b.0],
+                backward: Box::new(move |g, val| {
+                    let av = val(a.0);
+                    let bv = val(b.0);
+                    // dA = g · Bᵀ ; dB = Aᵀ · g (fixed graphs)
+                    let da = matmul(g, &bv.transpose2d().unwrap()).unwrap();
+                    let db = matmul(&av.transpose2d().unwrap(), g).unwrap();
+                    vec![da, db]
+                }),
+            },
+            rg,
+        ))
+    }
+
+    /// Elementwise add (same shape).
+    pub fn add(&mut self, a: Var, b: Var) -> Result<Var> {
+        if self.value_ref(a).dims() != self.value_ref(b).dims() {
+            return Err(Error::shape("tape add: shape mismatch"));
+        }
+        let v = self.value_ref(a).add_t(self.value_ref(b))?;
+        let rg = self.req(a) || self.req(b);
+        Ok(self.push(
+            v,
+            Op::Node {
+                parents: vec![a.0, b.0],
+                backward: Box::new(|g, _| vec![g.clone(), g.clone()]),
+            },
+            rg,
+        ))
+    }
+
+    /// Elementwise multiply (same shape).
+    pub fn mul(&mut self, a: Var, b: Var) -> Result<Var> {
+        if self.value_ref(a).dims() != self.value_ref(b).dims() {
+            return Err(Error::shape("tape mul: shape mismatch"));
+        }
+        let v = self.value_ref(a).mul_t(self.value_ref(b))?;
+        let rg = self.req(a) || self.req(b);
+        Ok(self.push(
+            v,
+            Op::Node {
+                parents: vec![a.0, b.0],
+                backward: Box::new(move |g, val| {
+                    let av = val(a.0);
+                    let bv = val(b.0);
+                    vec![g.mul_t(&bv).unwrap(), g.mul_t(&av).unwrap()]
+                }),
+            },
+            rg,
+        ))
+    }
+
+    /// Add a length-N bias row to a (M,N) matrix.
+    pub fn add_bias(&mut self, x: Var, b: Var) -> Result<Var> {
+        let (xd, bd) = (self.value_ref(x).dims().to_vec(), self.value_ref(b).dims().to_vec());
+        if xd.len() != 2 || bd != [xd[1]] {
+            return Err(Error::shape("add_bias: want (M,N) + (N,)"));
+        }
+        let v = self.value_ref(x).add_t(self.value_ref(b))?;
+        let rg = self.req(x) || self.req(b);
+        Ok(self.push(
+            v,
+            Op::Node {
+                parents: vec![x.0, b.0],
+                backward: Box::new(|g, _| {
+                    // bias grad: sequential sum over rows (fixed order)
+                    let db = sum_axis(g, 0).unwrap();
+                    vec![g.clone(), db]
+                }),
+            },
+            rg,
+        ))
+    }
+
+    /// Multiply by a compile-time scalar.
+    pub fn scale(&mut self, x: Var, s: f32) -> Var {
+        let v = self.value_ref(x).mul_scalar(s);
+        let rg = self.req(x);
+        self.push(
+            v,
+            Op::Node {
+                parents: vec![x.0],
+                backward: Box::new(move |g, _| vec![g.mul_scalar(s)]),
+            },
+            rg,
+        )
+    }
+
+    /// ReLU.
+    pub fn relu(&mut self, x: Var) -> Var {
+        let xv = self.value_ref(x).clone();
+        let v = xv.map(|t| if t > 0.0 { t } else { 0.0 });
+        let rg = self.req(x);
+        self.push(
+            v,
+            Op::Node {
+                parents: vec![x.0],
+                backward: Box::new(move |g, val| {
+                    let xv = val(x.0);
+                    vec![g
+                        .zip(&xv, |gg, t| if t > 0.0 { gg } else { 0.0 })
+                        .unwrap()]
+                }),
+            },
+            rg,
+        )
+    }
+
+    /// GELU (tanh graph) with its fixed-graph derivative.
+    pub fn gelu(&mut self, x: Var) -> Var {
+        let v = self.value_ref(x).map(rgelu_tanh);
+        let rg = self.req(x);
+        self.push(
+            v,
+            Op::Node {
+                parents: vec![x.0],
+                backward: Box::new(move |g, val| {
+                    let xv = val(x.0);
+                    // d/dx gelu_tanh: fixed graph
+                    let dg = xv.map(|t| {
+                        const S: f32 = 0.797_884_6;
+                        const C: f32 = 0.044_715;
+                        let u = S * (t + C * t * t * t);
+                        let th = rtanh(u);
+                        let sech2 = 1.0 - th * th;
+                        0.5 * (1.0 + th) + 0.5 * t * sech2 * S * (1.0 + 3.0 * C * t * t)
+                    });
+                    vec![g.mul_t(&dg).unwrap()]
+                }),
+            },
+            rg,
+        )
+    }
+
+    /// tanh (correctly-rounded forward, fixed-graph derivative).
+    pub fn tanh(&mut self, x: Var) -> Var {
+        let v = self.value_ref(x).map(rtanh);
+        let rg = self.req(x);
+        let out = self.push(
+            v,
+            Op::Node {
+                parents: vec![x.0],
+                backward: Box::new(move |g, val| {
+                    let th = val(x.0).map(rtanh);
+                    let d = th.map(|t| 1.0 - t * t);
+                    vec![g.mul_t(&d).unwrap()]
+                }),
+            },
+            rg,
+        );
+        out
+    }
+
+    /// Sigmoid (fixed graph), derivative σ(1−σ).
+    pub fn sigmoid(&mut self, x: Var) -> Var {
+        let v = self.value_ref(x).map(rsigmoid);
+        let rg = self.req(x);
+        self.push(
+            v,
+            Op::Node {
+                parents: vec![x.0],
+                backward: Box::new(move |g, val| {
+                    let s = val(x.0).map(rsigmoid);
+                    let d = s.map(|t| t * (1.0 - t));
+                    vec![g.mul_t(&d).unwrap()]
+                }),
+            },
+            rg,
+        )
+    }
+
+    /// Reshape (gradient reshapes back).
+    pub fn reshape(&mut self, x: Var, dims: &[usize]) -> Result<Var> {
+        let v = self.value_ref(x).reshape(dims)?;
+        let rg = self.req(x);
+        let old: Vec<usize> = self.value_ref(x).dims().to_vec();
+        Ok(self.push(
+            v,
+            Op::Node {
+                parents: vec![x.0],
+                backward: Box::new(move |g, _| vec![g.reshape(&old).unwrap()]),
+            },
+            rg,
+        ))
+    }
+
+    /// Axis permutation (gradient applies the inverse permutation).
+    pub fn permute(&mut self, x: Var, perm: &[usize]) -> Result<Var> {
+        let v = self.value_ref(x).permute(perm)?;
+        let rg = self.req(x);
+        let mut inv = vec![0usize; perm.len()];
+        for (i, &p) in perm.iter().enumerate() {
+            inv[p] = i;
+        }
+        Ok(self.push(
+            v,
+            Op::Node {
+                parents: vec![x.0],
+                backward: Box::new(move |g, _| vec![g.permute(&inv).unwrap()]),
+            },
+            rg,
+        ))
+    }
+
+    /// Dropout with an externally-supplied 0/1 mask (the mask comes from
+    /// the deterministic RNG; scaling by 1/keep is part of the graph).
+    pub fn dropout(&mut self, x: Var, mask: &Tensor, keep: f32) -> Result<Var> {
+        if mask.dims() != self.value_ref(x).dims() {
+            return Err(Error::shape("dropout: mask shape mismatch"));
+        }
+        let inv = 1.0 / keep;
+        let scaled_mask = mask.mul_scalar(inv);
+        let v = self.value_ref(x).mul_t(&scaled_mask)?;
+        let rg = self.req(x);
+        Ok(self.push(
+            v,
+            Op::Node {
+                parents: vec![x.0],
+                backward: Box::new(move |g, _| vec![g.mul_t(&scaled_mask).unwrap()]),
+            },
+            rg,
+        ))
+    }
+
+    /// Row-stable softmax + cross-entropy against integer targets, fused
+    /// (the fixed graph: max-shift → exp → sequential sum → log).
+    /// Returns the scalar mean loss.
+    pub fn softmax_cross_entropy(&mut self, logits: Var, targets: &[usize]) -> Result<Var> {
+        let lv = self.value_ref(logits).clone();
+        let d = lv.dims();
+        if d.len() != 2 || targets.len() != d[0] {
+            return Err(Error::shape("softmax_ce: want (B,C) logits + B targets"));
+        }
+        let (bsz, c) = (d[0], d[1]);
+        let mut loss_acc = 0.0f32;
+        let mut probs = Tensor::zeros(&[bsz, c]);
+        for i in 0..bsz {
+            let row = lv.row(i);
+            // fixed graph: max (first-max rule), subtract, rexp, seq-sum
+            let mut m = row[0];
+            for &v in &row[1..] {
+                if v > m {
+                    m = v;
+                }
+            }
+            let mut denom = 0.0f32;
+            for j in 0..c {
+                let e = rexp(row[j] - m);
+                probs.data_mut()[i * c + j] = e;
+                denom += e;
+            }
+            for j in 0..c {
+                probs.data_mut()[i * c + j] /= denom;
+            }
+            // loss_i = −log p[target]
+            loss_acc += -rlog(probs.data()[i * c + targets[i]]);
+        }
+        let loss = loss_acc / bsz as f32;
+        let rg = self.req(logits);
+        let targets: Vec<usize> = targets.to_vec();
+        Ok(self.push(
+            Tensor::scalar(loss),
+            Op::Node {
+                parents: vec![logits.0],
+                backward: Box::new(move |g, _| {
+                    // d logits = (softmax − onehot) / B · g
+                    let gs = g.data()[0];
+                    let mut dl = probs.clone();
+                    for (i, &t) in targets.iter().enumerate() {
+                        dl.data_mut()[i * c + t] -= 1.0;
+                    }
+                    vec![dl.map(|v| v / bsz as f32 * gs)]
+                }),
+            },
+            rg,
+        ))
+    }
+
+    /// LayerNorm over the last axis with affine params γ, β.
+    /// Fixed graph: two-pass mean/var, rsqrt(var+ε) per row.
+    pub fn layer_norm(&mut self, x: Var, gamma: Var, beta: Var, eps: f32) -> Result<Var> {
+        let xv = self.value_ref(x).clone();
+        let d = xv.dims().to_vec();
+        let n = *d.last().ok_or_else(|| Error::shape("layer_norm: scalar input"))?;
+        let gv = self.value_ref(gamma).clone();
+        let bv = self.value_ref(beta).clone();
+        if gv.dims() != [n] || bv.dims() != [n] {
+            return Err(Error::shape("layer_norm: γ/β must match last axis"));
+        }
+        let rows = xv.numel() / n;
+        let mut out = Tensor::zeros(&d);
+        let mut xhat = Tensor::zeros(&d);
+        let mut rstd = vec![0.0f32; rows];
+        for r in 0..rows {
+            let w = &xv.data()[r * n..(r + 1) * n];
+            let mut s = 0.0f32;
+            for &v in w {
+                s += v;
+            }
+            let mu = s / n as f32;
+            let mut v2 = 0.0f32;
+            for &v in w {
+                let dd = v - mu;
+                v2 += dd * dd;
+            }
+            let var = v2 / n as f32;
+            let rs = crate::rnum::rrsqrt(var + eps);
+            rstd[r] = rs;
+            for j in 0..n {
+                let xh = (w[j] - mu) * rs;
+                xhat.data_mut()[r * n + j] = xh;
+                out.data_mut()[r * n + j] = xh * gv.data()[j] + bv.data()[j];
+            }
+        }
+        let rg = self.req(x) || self.req(gamma) || self.req(beta);
+        Ok(self.push(
+            out,
+            Op::Node {
+                parents: vec![x.0, gamma.0, beta.0],
+                backward: Box::new(move |g, val| {
+                    let gv = val(gamma.0);
+                    let nn = n as f32;
+                    let mut dx = Tensor::zeros(xhat.dims());
+                    let mut dgamma = Tensor::zeros(&[n]);
+                    let mut dbeta = Tensor::zeros(&[n]);
+                    for r in 0..rows {
+                        // standard LN backward, fixed sequential sums
+                        let mut sum_gy = 0.0f32;
+                        let mut sum_gyx = 0.0f32;
+                        for j in 0..n {
+                            let gy = g.data()[r * n + j] * gv.data()[j];
+                            sum_gy += gy;
+                            sum_gyx += gy * xhat.data()[r * n + j];
+                        }
+                        for j in 0..n {
+                            let gy = g.data()[r * n + j] * gv.data()[j];
+                            let xh = xhat.data()[r * n + j];
+                            dx.data_mut()[r * n + j] =
+                                (gy - sum_gy / nn - xh * sum_gyx / nn) * rstd[r];
+                        }
+                    }
+                    // parameter grads: sequential over rows (fixed order)
+                    for j in 0..n {
+                        let mut dgj = 0.0f32;
+                        let mut dbj = 0.0f32;
+                        for r in 0..rows {
+                            dgj += g.data()[r * n + j] * xhat.data()[r * n + j];
+                            dbj += g.data()[r * n + j];
+                        }
+                        dgamma.data_mut()[j] = dgj;
+                        dbeta.data_mut()[j] = dbj;
+                    }
+                    vec![dx, dgamma, dbeta]
+                }),
+            },
+            rg,
+        ))
+    }
+
+    /// Embedding lookup: `ids` select rows of the `table` parameter.
+    /// Backward is the paper's scatter-add hazard made deterministic:
+    /// contributions accumulate **sequentially in token order**.
+    pub fn embedding(&mut self, table: Var, ids: &[usize]) -> Result<Var> {
+        let tv = self.value_ref(table).clone();
+        let d = tv.dims();
+        if d.len() != 2 {
+            return Err(Error::shape("embedding: table must be (V,D)"));
+        }
+        let (vsz, dim) = (d[0], d[1]);
+        for &i in ids {
+            if i >= vsz {
+                return Err(Error::shape(format!("embedding: id {i} ≥ vocab {vsz}")));
+            }
+        }
+        let mut out = Tensor::zeros(&[ids.len(), dim]);
+        for (r, &i) in ids.iter().enumerate() {
+            out.data_mut()[r * dim..(r + 1) * dim].copy_from_slice(&tv.data()[i * dim..(i + 1) * dim]);
+        }
+        let rg = self.req(table);
+        let ids: Vec<usize> = ids.to_vec();
+        Ok(self.push(
+            out,
+            Op::Node {
+                parents: vec![table.0],
+                backward: Box::new(move |g, _| {
+                    let mut dt = Tensor::zeros(&[vsz, dim]);
+                    // deterministic scatter-add: token order
+                    for (r, &i) in ids.iter().enumerate() {
+                        for j in 0..dim {
+                            dt.data_mut()[i * dim + j] += g.data()[r * dim + j];
+                        }
+                    }
+                    vec![dt]
+                }),
+            },
+            rg,
+        ))
+    }
+
+    /// Reproducible conv2d (+ optional bias) with fixed-order backward.
+    pub fn conv2d(
+        &mut self,
+        x: Var,
+        w: Var,
+        bias: Option<Var>,
+        p: Conv2dParams,
+    ) -> Result<Var> {
+        let xv = self.value_ref(x).clone();
+        let wv = self.value_ref(w).clone();
+        let bv = bias.map(|b| self.value_ref(b).clone());
+        let out = crate::tensor::conv2d(&xv, &wv, bv.as_ref(), p)?;
+        let mut parents = vec![x.0, w.0];
+        if let Some(b) = bias {
+            parents.push(b.0);
+        }
+        let rg = self.req(x) || self.req(w) || bias.map(|b| self.req(b)).unwrap_or(false);
+        let (xd, wd) = (xv.dims().to_vec(), wv.dims().to_vec());
+        let od = out.dims().to_vec();
+        Ok(self.push(
+            out,
+            Op::Node {
+                parents,
+                backward: Box::new(move |g, val| {
+                    let xv = val(x.0);
+                    let wv = val(w.0);
+                    let (b, c, h, wid) = (xd[0], xd[1], xd[2], xd[3]);
+                    let (o, kh, kw) = (wd[0], wd[2], wd[3]);
+                    let (oh, ow) = (od[2], od[3]);
+                    let mut dx = Tensor::zeros(&xd);
+                    let mut dw = Tensor::zeros(&wd);
+                    // fixed loop order: (b, o, oh, ow) outer, (c,kh,kw) inner
+                    for bi in 0..b {
+                        for oi in 0..o {
+                            for ohh in 0..oh {
+                                for oww in 0..ow {
+                                    let gg = g.data()[((bi * o + oi) * oh + ohh) * ow + oww];
+                                    if gg == 0.0 {
+                                        continue;
+                                    }
+                                    for ci in 0..c {
+                                        for khh in 0..kh {
+                                            let ih = (ohh * p.stride + khh) as isize
+                                                - p.padding as isize;
+                                            if ih < 0 || ih >= h as isize {
+                                                continue;
+                                            }
+                                            for kww in 0..kw {
+                                                let iw = (oww * p.stride + kww) as isize
+                                                    - p.padding as isize;
+                                                if iw < 0 || iw >= wid as isize {
+                                                    continue;
+                                                }
+                                                let xi = ((bi * c + ci) * h + ih as usize) * wid
+                                                    + iw as usize;
+                                                let wi = ((oi * c + ci) * kh + khh) * kw + kww;
+                                                dx.data_mut()[xi] += gg * wv.data()[wi];
+                                                dw.data_mut()[wi] += gg * xv.data()[xi];
+                                            }
+                                        }
+                                    }
+                                }
+                            }
+                        }
+                    }
+                    let mut grads = vec![dx, dw];
+                    if bv.is_some() {
+                        // bias grad: sum g over (b, oh, ow), sequential
+                        let mut db = Tensor::zeros(&[o]);
+                        for bi in 0..b {
+                            for oi in 0..o {
+                                let mut acc = db.data()[oi];
+                                for s in 0..oh * ow {
+                                    acc += g.data()[(bi * o + oi) * oh * ow + s];
+                                }
+                                db.data_mut()[oi] = acc;
+                            }
+                        }
+                        grads.push(db);
+                    }
+                    grads
+                }),
+            },
+            rg,
+        ))
+    }
+
+    /// Register a custom op: precomputed value, parent vars, and a
+    /// backward mapping (grad_out, value-lookup) → one grad per parent.
+    /// Escape hatch for fused ops (attention) with hand-derived,
+    /// fixed-order backwards.
+    #[allow(clippy::type_complexity)]
+    pub fn push_custom(
+        &mut self,
+        value: Tensor,
+        parents: Vec<Var>,
+        backward: Box<dyn Fn(&Tensor, &dyn Fn(usize) -> Tensor) -> Vec<Tensor>>,
+        requires_grad: bool,
+    ) -> Var {
+        let parents = parents.into_iter().map(|v| v.0).collect();
+        self.push(value, Op::Node { parents, backward }, requires_grad)
+    }
+
+    /// Contiguous 1-D slice of a flat tensor (backward zero-pads).
+    pub fn slice(&mut self, x: Var, start: usize, len: usize) -> Result<Var> {
+        let xv = self.value_ref(x);
+        if xv.dims().len() != 1 || start + len > xv.numel() {
+            return Err(Error::shape("slice: want flat tensor and valid range"));
+        }
+        let total = xv.numel();
+        let v = Tensor::from_vec(&[len], xv.data()[start..start + len].to_vec())?;
+        let rg = self.req(x);
+        Ok(self.push(
+            v,
+            Op::Node {
+                parents: vec![x.0],
+                backward: Box::new(move |g, _| {
+                    let mut dx = Tensor::zeros(&[total]);
+                    dx.data_mut()[start..start + len].copy_from_slice(g.data());
+                    vec![dx]
+                }),
+            },
+            rg,
+        ))
+    }
+
+    /// Row slice of a 2-D tensor: rows [start, start+len).
+    pub fn slice_rows(&mut self, x: Var, start: usize, len: usize) -> Result<Var> {
+        let xv = self.value_ref(x);
+        let d = xv.dims().to_vec();
+        if d.len() != 2 || start + len > d[0] {
+            return Err(Error::shape("slice_rows: want 2-D and valid range"));
+        }
+        let cols = d[1];
+        let v = Tensor::from_vec(
+            &[len, cols],
+            xv.data()[start * cols..(start + len) * cols].to_vec(),
+        )?;
+        let rg = self.req(x);
+        let rows = d[0];
+        Ok(self.push(
+            v,
+            Op::Node {
+                parents: vec![x.0],
+                backward: Box::new(move |g, _| {
+                    let mut dx = Tensor::zeros(&[rows, cols]);
+                    dx.data_mut()[start * cols..(start + len) * cols]
+                        .copy_from_slice(g.data());
+                    vec![dx]
+                }),
+            },
+            rg,
+        ))
+    }
+
+    /// Mean of all elements (fixed graph: sequential sum / n).
+    pub fn mean_all(&mut self, x: Var) -> Var {
+        let xv = self.value_ref(x);
+        let n = xv.numel();
+        let mut acc = 0.0f32;
+        for &v in xv.data() {
+            acc += v;
+        }
+        let rg = self.req(x);
+        let dims = xv.dims().to_vec();
+        self.push(
+            Tensor::scalar(acc / n as f32),
+            Op::Node {
+                parents: vec![x.0],
+                backward: Box::new(move |g, _| {
+                    let gv = g.data()[0] / n as f32;
+                    vec![Tensor::full(&dims, gv)]
+                }),
+            },
+            rg,
+        )
+    }
+
+    // -----------------------------------------------------------------
+    // backward
+    // -----------------------------------------------------------------
+
+    fn req(&self, v: Var) -> bool {
+        self.nodes[v.0].requires_grad
+    }
+
+    /// Run reverse-mode accumulation from a scalar loss var.
+    /// Deterministic: fixed reverse order, fixed accumulation order.
+    pub fn backward(&mut self, loss: Var) -> Result<()> {
+        if self.nodes[loss.0].value.numel() != 1 {
+            return Err(Error::shape("backward: loss must be scalar"));
+        }
+        // propagate requires_grad transitively (already done at op build).
+        for n in self.nodes.iter_mut() {
+            n.grad = None;
+        }
+        self.nodes[loss.0].grad = Some(Tensor::scalar(1.0));
+        for i in (0..=loss.0).rev() {
+            let g = match &self.nodes[i].grad {
+                Some(g) => g.clone(),
+                None => continue,
+            };
+            // take op pieces without holding a borrow on self.nodes
+            let (parents, grads) = match &self.nodes[i].op {
+                Op::Leaf => continue,
+                Op::Node { parents, backward } => {
+                    let values = |idx: usize| self.nodes[idx].value.clone();
+                    let grads = backward(&g, &values);
+                    (parents.clone(), grads)
+                }
+            };
+            debug_assert_eq!(parents.len(), grads.len());
+            for (p, pg) in parents.iter().zip(grads.into_iter()) {
+                if !self.nodes[*p].requires_grad && !matches!(self.nodes[*p].op, Op::Node { .. })
+                {
+                    continue; // constant leaf: skip accumulation
+                }
+                let slot = &mut self.nodes[*p].grad;
+                *slot = Some(match slot.take() {
+                    None => pg,
+                    Some(acc) => acc.add_t(&pg)?, // fixed accumulation order
+                });
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lcg(dims: &[usize], seed: u64) -> Tensor {
+        let n: usize = dims.iter().product();
+        let mut s = seed;
+        Tensor::from_vec(
+            dims,
+            (0..n)
+                .map(|_| {
+                    s = s.wrapping_mul(6364136223846793005).wrapping_add(77);
+                    (((s >> 40) as f32) / (1u64 << 24) as f32 - 0.5) * 0.7
+                })
+                .collect(),
+        )
+        .unwrap()
+    }
+
+    /// Central-difference check of dL/dx[i] against the tape gradient.
+    fn check_grad(
+        build: impl Fn(&mut Tape, Var) -> Var,
+        x0: &Tensor,
+        tol: f32,
+    ) {
+        let mut tape = Tape::new();
+        let x = tape.param(x0.clone());
+        let loss = build(&mut tape, x);
+        tape.backward(loss).unwrap();
+        let g = tape.grad(x).unwrap();
+        let eps = 1e-3f32;
+        for i in (0..x0.numel()).step_by((x0.numel() / 7).max(1)) {
+            let mut xp = x0.clone();
+            xp.data_mut()[i] += eps;
+            let mut xm = x0.clone();
+            xm.data_mut()[i] -= eps;
+            let mut tp = Tape::new();
+            let vp = tp.param(xp);
+            let lp = build(&mut tp, vp);
+            let mut tm = Tape::new();
+            let vm = tm.param(xm);
+            let lm = build(&mut tm, vm);
+            let num = (tp.value_ref(lp).data()[0] - tm.value_ref(lm).data()[0]) / (2.0 * eps);
+            let ana = g.data()[i];
+            assert!(
+                (num - ana).abs() <= tol * (1.0 + num.abs().max(ana.abs())),
+                "grad[{i}]: numeric {num} vs tape {ana}"
+            );
+        }
+    }
+
+    #[test]
+    fn matmul_grad_matches_finite_difference() {
+        let x0 = lcg(&[4, 5], 1);
+        let w = lcg(&[5, 3], 2);
+        check_grad(
+            |t, x| {
+                let wv = t.input(w.clone());
+                let y = t.matmul(x, wv).unwrap();
+                t.mean_all(y)
+            },
+            &x0,
+            1e-2,
+        );
+    }
+
+    #[test]
+    fn relu_tanh_gelu_sigmoid_grads() {
+        let x0 = lcg(&[3, 7], 3);
+        check_grad(|t, x| { let y = t.relu(x); t.mean_all(y) }, &x0, 1e-2);
+        check_grad(|t, x| { let y = t.tanh(x); t.mean_all(y) }, &x0, 1e-2);
+        check_grad(|t, x| { let y = t.gelu(x); t.mean_all(y) }, &x0, 2e-2);
+        check_grad(|t, x| { let y = t.sigmoid(x); t.mean_all(y) }, &x0, 1e-2);
+    }
+
+    #[test]
+    fn softmax_ce_grad() {
+        let x0 = lcg(&[4, 6], 4);
+        let targets = vec![1usize, 3, 0, 5];
+        check_grad(
+            |t, x| t.softmax_cross_entropy(x, &targets).unwrap(),
+            &x0,
+            2e-2,
+        );
+    }
+
+    #[test]
+    fn layer_norm_grad() {
+        let x0 = lcg(&[3, 8], 5);
+        let gamma = lcg(&[8], 6).map(|v| 1.0 + v);
+        let beta = lcg(&[8], 7);
+        check_grad(
+            |t, x| {
+                let g = t.param(gamma.clone());
+                let b = t.param(beta.clone());
+                let y = t.layer_norm(x, g, b, 1e-5).unwrap();
+                t.mean_all(y)
+            },
+            &x0,
+            2e-2,
+        );
+    }
+
+    #[test]
+    fn conv2d_grad() {
+        let x0 = lcg(&[1, 2, 5, 5], 8);
+        let w = lcg(&[3, 2, 3, 3], 9);
+        check_grad(
+            |t, x| {
+                let wv = t.input(w.clone());
+                let y = t
+                    .conv2d(x, wv, None, Conv2dParams { stride: 1, padding: 1 })
+                    .unwrap();
+                t.mean_all(y)
+            },
+            &x0,
+            2e-2,
+        );
+    }
+
+    #[test]
+    fn embedding_grad_is_deterministic_scatter() {
+        let table = lcg(&[10, 4], 10);
+        let ids = vec![3usize, 7, 3, 3, 1]; // repeated ids → accumulation
+        let mut tape = Tape::new();
+        let tb = tape.param(table.clone());
+        let e = tape.embedding(tb, &ids).unwrap();
+        let loss = tape.mean_all(e);
+        tape.backward(loss).unwrap();
+        let g1 = tape.grad(tb).unwrap();
+        // repeat: bitwise identical
+        let mut tape2 = Tape::new();
+        let tb2 = tape2.param(table);
+        let e2 = tape2.embedding(tb2, &ids).unwrap();
+        let loss2 = tape2.mean_all(e2);
+        tape2.backward(loss2).unwrap();
+        assert!(g1.bit_eq(&tape2.grad(tb2).unwrap()));
+        // row 3 got 3 contributions
+        let per = 1.0 / (5.0 * 4.0);
+        assert!((g1.data()[3 * 4] - 3.0 * per).abs() < 1e-6);
+        assert!((g1.data()[7 * 4] - per).abs() < 1e-6);
+        assert_eq!(g1.data()[0], 0.0);
+    }
+
+    #[test]
+    fn fanout_accumulation_is_fixed_order() {
+        // y = x·x (via mul with itself twice through different paths)
+        let x0 = lcg(&[2, 2], 11);
+        let mut tape = Tape::new();
+        let x = tape.param(x0.clone());
+        let a = tape.mul(x, x).unwrap();
+        let b = tape.add(a, x).unwrap(); // x used 3 times in total
+        let loss = tape.mean_all(b);
+        tape.backward(loss).unwrap();
+        let g = tape.grad(x).unwrap();
+        // d/dx (x² + x) = 2x + 1, scaled by 1/4
+        for i in 0..4 {
+            let want = (2.0 * x0.data()[i] + 1.0) / 4.0;
+            assert!((g.data()[i] - want).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn whole_backward_is_bit_deterministic() {
+        let x0 = lcg(&[4, 6], 12);
+        let w0 = lcg(&[6, 6], 13);
+        let run = || {
+            let mut t = Tape::new();
+            let x = t.param(x0.clone());
+            let w = t.param(w0.clone());
+            let h = t.matmul(x, w).unwrap();
+            let h = t.gelu(h);
+            let loss = t.softmax_cross_entropy(h, &[0, 1, 2, 3]).unwrap();
+            t.backward(loss).unwrap();
+            (t.grad(x).unwrap(), t.grad(w).unwrap(), t.value(loss))
+        };
+        let (gx1, gw1, l1) = run();
+        let (gx2, gw2, l2) = run();
+        assert!(gx1.bit_eq(&gx2));
+        assert!(gw1.bit_eq(&gw2));
+        assert!(l1.bit_eq(&l2));
+    }
+
+    #[test]
+    fn dropout_masks_and_scales() {
+        let x0 = Tensor::full(&[2, 2], 2.0);
+        let mask = Tensor::from_vec(&[2, 2], vec![1., 0., 1., 1.]).unwrap();
+        let mut t = Tape::new();
+        let x = t.param(x0);
+        let y = t.dropout(x, &mask, 0.75).unwrap();
+        let v = t.value(y);
+        assert!((v.data()[0] - 2.0 / 0.75).abs() < 1e-6);
+        assert_eq!(v.data()[1], 0.0);
+        let loss = t.mean_all(y);
+        t.backward(loss).unwrap();
+        let g = t.grad(x).unwrap();
+        assert_eq!(g.data()[1], 0.0);
+        assert!(g.data()[0] > 0.0);
+    }
+
+    #[test]
+    fn permute_roundtrip_grad() {
+        let x0 = lcg(&[2, 3, 4], 14);
+        let mut t = Tape::new();
+        let x = t.param(x0.clone());
+        let p = t.permute(x, &[2, 0, 1]).unwrap();
+        assert_eq!(t.value_ref(p).dims(), &[4, 2, 3]);
+        let loss = t.mean_all(p);
+        t.backward(loss).unwrap();
+        let g = t.grad(x).unwrap();
+        assert_eq!(g.dims(), &[2, 3, 4]);
+        // mean over all: every element same grad
+        assert!(g.data().iter().all(|&v| (v - 1.0 / 24.0).abs() < 1e-7));
+    }
+}

@@ -1,0 +1,154 @@
+//! Two deliberately different (but individually reasonable) math-library
+//! implementations of `exp`/`log` — the §2.2.1 glibc-vs-Intel stand-in.
+//! Each is accurate to a couple of ulps; they disagree on a few percent
+//! of inputs, exactly like real libms do.
+
+/// Which simulated libm a platform links.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MathImpl {
+    /// f64-evaluated Cody–Waite + Taylor (like glibc: high accuracy).
+    GlibcLike,
+    /// f32-native table-free polynomial (like a fast vector libm).
+    IntelLike,
+}
+
+/// exp(x) under the chosen implementation.
+pub fn exp_variant(x: f32, which: MathImpl) -> f32 {
+    match which {
+        MathImpl::GlibcLike => {
+            // reuse the fixed f64 path *without* the CR fallback — this is
+            // "very accurate but not correctly rounded"
+            if x > 89.0 {
+                return f32::INFINITY;
+            }
+            if x < -104.0 {
+                return 0.0;
+            }
+            crate::rnum::exp::exp_f64(x as f64) as f32
+        }
+        MathImpl::IntelLike => {
+            // f32-native: k = round(x/ln2), degree-6 poly in f32
+            if x > 89.0 {
+                return f32::INFINITY;
+            }
+            if x < -104.0 {
+                return 0.0;
+            }
+            const LOG2E: f32 = 1.442_695;
+            const LN2: f32 = 0.693_147_2;
+            let k = (x * LOG2E).round();
+            let r = x - k * LN2;
+            // Taylor to r^6 in f32 (≈1-2 ulp on the reduced range)
+            let p = 1.0
+                + r * (1.0
+                    + r * (0.5
+                        + r * (0.166_666_67
+                            + r * (0.041_666_668 + r * (0.008_333_334 + r * 0.001_388_889)))));
+            let scale = crate::rnum::fbits::pow2_f64(k as i32) as f32;
+            p * scale
+        }
+    }
+}
+
+/// log(x) under the chosen implementation.
+pub fn log_variant(x: f32, which: MathImpl) -> f32 {
+    if x < 0.0 || x.is_nan() {
+        return f32::NAN;
+    }
+    if x == 0.0 {
+        return f32::NEG_INFINITY;
+    }
+    if x.is_infinite() {
+        return x;
+    }
+    match which {
+        MathImpl::GlibcLike => {
+            // accurate f64 evaluation, single rounding at the end
+            let (m, e) = {
+                let bits = (x as f64).to_bits();
+                let mut e = (((bits >> 52) & 0x7ff) as i32) - 1023;
+                let mut m = f64::from_bits(
+                    (bits & 0x000f_ffff_ffff_ffff) | 0x3ff0_0000_0000_0000,
+                );
+                if m >= std::f64::consts::SQRT_2 {
+                    m *= 0.5;
+                    e += 1;
+                }
+                (m, e)
+            };
+            let z = (m - 1.0) / (m + 1.0);
+            let z2 = z * z;
+            let mut p = 1.0 / 23.0;
+            for k in (1..11).rev() {
+                p = 1.0 / (2.0 * k as f64 + 1.0) + z2 * p;
+            }
+            let lnm = 2.0 * z * (1.0 + z2 * p);
+            ((e as f64) * std::f64::consts::LN_2 + lnm) as f32
+        }
+        MathImpl::IntelLike => {
+            // f32-native atanh series, fewer terms
+            let bits = x.to_bits();
+            let e = ((bits >> 23) & 0xff) as i32 - 127;
+            let m = f32::from_bits((bits & 0x007f_ffff) | 0x3f80_0000); // [1,2)
+            let z = (m - 1.0) / (m + 1.0);
+            let z2 = z * z;
+            let p = 0.333_333_34 + z2 * (0.2 + z2 * (0.142_857_15 + z2 * 0.111_111_11));
+            let lnm = 2.0 * z * (1.0 + z2 * p);
+            const LN2: f32 = 0.693_147_2;
+            e as f32 * LN2 + lnm
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rnum::fbits::ulp_diff;
+    use crate::rnum::{rexp, rlog};
+
+    #[test]
+    fn both_variants_are_accurate() {
+        let mut x = -20.0f32;
+        while x < 20.0 {
+            for which in [MathImpl::GlibcLike, MathImpl::IntelLike] {
+                let d = ulp_diff(exp_variant(x, which), rexp(x));
+                // fast vector libms really do drift to tens of ulps at
+                // larger |x| (f32 Cody–Waite cancellation) — allow it
+                assert!(d <= 64, "exp {which:?} off by {d} ulp at {x}");
+            }
+            x += 0.173;
+        }
+        let mut x = 0.01f32;
+        while x < 1e4 {
+            for which in [MathImpl::GlibcLike, MathImpl::IntelLike] {
+                let d = ulp_diff(log_variant(x, which), rlog(x));
+                assert!(d <= 64, "log {which:?} off by {d} ulp at {x}");
+            }
+            x *= 1.37;
+        }
+    }
+
+    #[test]
+    fn variants_disagree_somewhere() {
+        // the paper's point: both reasonable, not bit-identical
+        let mut exp_diffs = 0;
+        let mut log_diffs = 0;
+        let mut x = -10.0f32;
+        while x < 10.0 {
+            if exp_variant(x, MathImpl::GlibcLike).to_bits()
+                != exp_variant(x, MathImpl::IntelLike).to_bits()
+            {
+                exp_diffs += 1;
+            }
+            let y = x.abs() + 0.1;
+            if log_variant(y, MathImpl::GlibcLike).to_bits()
+                != log_variant(y, MathImpl::IntelLike).to_bits()
+            {
+                log_diffs += 1;
+            }
+            x += 0.01;
+        }
+        assert!(exp_diffs > 10, "exp variants identical?! ({exp_diffs})");
+        assert!(log_diffs > 10, "log variants identical?! ({log_diffs})");
+    }
+}

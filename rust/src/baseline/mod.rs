@@ -1,0 +1,64 @@
+//! The **non-reproducible control group**: conventional implementations
+//! parameterised by a simulated [`PlatformProfile`].
+//!
+//! The paper's §2.2 taxonomy says cross-platform numerical divergence has
+//! exactly two mechanisms — (1) precision differences in basic ops and
+//! (2) computation-order differences — plus run-to-run non-determinism
+//! from scheduling (atomics, dynamic code paths, dynamic batching). This
+//! module reproduces each mechanism in controlled form (we have one CPU,
+//! not the paper's CPU/GPU zoo — see DESIGN.md §5):
+//!
+//! * **SIMD-width reduction chunking** — `sum`/`dot` accumulate into
+//!   `simd_width` lanes then combine, exactly how vectorised BLAS
+//!   reductions reassociate. Different widths ⇒ different bits.
+//! * **FMA contraction** — on/off per profile (the compiler/ISA switch).
+//! * **Math-library variant** — two polynomial `exp`/`log`
+//!   implementations standing in for glibc vs Intel Math (§2.2.1's
+//!   motivating example), each ≤ ~2 ulp but *different*.
+//! * **Batch-size-dependent kernel dispatch** — like cuDNN/oneDNN, the
+//!   baseline GEMM picks its reduction width from the problem size, the
+//!   §2.2.2 "dynamic batching / dynamic code paths" hazard.
+//! * **Simulated atomics** — [`atomic_sum`] reduces in an
+//!   arrival order drawn from a process-global counter-seeded RNG:
+//!   deterministic nowhere, like a GPU atomic-add race.
+
+pub mod mathlib;
+pub mod ops;
+
+pub use mathlib::{exp_variant, log_variant, MathImpl};
+pub use ops::{atomic_sum, baseline_dot, baseline_matmul, baseline_softmax_rows, baseline_sum};
+
+/// A simulated execution platform.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PlatformProfile {
+    /// Display name.
+    pub name: &'static str,
+    /// Reduction lane count (SIMD width the BLAS was compiled for).
+    pub simd_width: usize,
+    /// Whether mul+add contract to FMA.
+    pub fma: bool,
+    /// Which math library the platform links.
+    pub mathlib: MathImpl,
+    /// Kernel dispatch: if true, reduction width also depends on the
+    /// problem size (dynamic code path).
+    pub size_dispatch: bool,
+}
+
+impl PlatformProfile {
+    /// The six simulated platforms used across E2/E5/E7.
+    pub fn zoo() -> Vec<PlatformProfile> {
+        vec![
+            PlatformProfile { name: "cpu-scalar-glibc", simd_width: 1, fma: false, mathlib: MathImpl::GlibcLike, size_dispatch: false },
+            PlatformProfile { name: "cpu-sse-glibc", simd_width: 4, fma: false, mathlib: MathImpl::GlibcLike, size_dispatch: false },
+            PlatformProfile { name: "cpu-avx2-intel", simd_width: 8, fma: true, mathlib: MathImpl::IntelLike, size_dispatch: false },
+            PlatformProfile { name: "cpu-avx512-intel", simd_width: 16, fma: true, mathlib: MathImpl::IntelLike, size_dispatch: true },
+            PlatformProfile { name: "gpu-warp32", simd_width: 32, fma: true, mathlib: MathImpl::IntelLike, size_dispatch: true },
+            PlatformProfile { name: "accel-vec128", simd_width: 128, fma: true, mathlib: MathImpl::GlibcLike, size_dispatch: true },
+        ]
+    }
+
+    /// The reference profile (what "this machine" runs).
+    pub fn reference() -> PlatformProfile {
+        Self::zoo()[0]
+    }
+}

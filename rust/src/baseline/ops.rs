@@ -1,0 +1,242 @@
+//! Conventional (order-unstable) kernels, parameterised by platform.
+
+use super::PlatformProfile;
+#[cfg(test)]
+use super::MathImpl;
+use crate::tensor::Tensor;
+use crate::{Error, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// SIMD-style chunked sum: accumulate into `width` lanes (lane = i mod
+/// width), then combine lanes sequentially. width=1 is plain sequential.
+pub fn baseline_sum(xs: &[f32], width: usize) -> f32 {
+    let width = width.max(1);
+    if width == 1 {
+        let mut acc = 0.0f32;
+        for &x in xs {
+            acc += x;
+        }
+        return acc;
+    }
+    let mut lanes = vec![0.0f32; width];
+    for (i, &x) in xs.iter().enumerate() {
+        lanes[i % width] += x;
+    }
+    let mut acc = 0.0f32;
+    for l in lanes {
+        acc += l;
+    }
+    acc
+}
+
+/// Chunked dot with optional FMA contraction.
+pub fn baseline_dot(a: &[f32], b: &[f32], width: usize, fma: bool) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let width = width.max(1);
+    let mut lanes = vec![0.0f32; width];
+    for i in 0..a.len() {
+        let l = i % width;
+        if fma {
+            lanes[l] = a[i].mul_add(b[i], lanes[l]);
+        } else {
+            lanes[l] += a[i] * b[i];
+        }
+    }
+    let mut acc = 0.0f32;
+    for l in lanes {
+        acc += l;
+    }
+    acc
+}
+
+/// The dispatch rule a size-dispatching platform uses: bigger problems
+/// get wider kernels (like oneDNN/cuDNN picking implementations by
+/// shape — the paper's "dynamic code paths" and "dynamic batching").
+fn effective_width(p: &PlatformProfile, rows: usize) -> usize {
+    if p.size_dispatch {
+        if rows >= 32 {
+            p.simd_width * 2
+        } else if rows >= 8 {
+            p.simd_width
+        } else {
+            (p.simd_width / 2).max(1)
+        }
+    } else {
+        p.simd_width
+    }
+}
+
+/// Conventional GEMM under a platform profile. The reduction width (and
+/// hence bits) depends on the platform — and, with `size_dispatch`, on
+/// the *batch size*, which is exactly the E7 hazard.
+pub fn baseline_matmul(a: &Tensor, b: &Tensor, p: &PlatformProfile) -> Result<Tensor> {
+    let (da, db) = (a.dims(), b.dims());
+    if da.len() != 2 || db.len() != 2 || da[1] != db[0] {
+        return Err(Error::shape(format!("baseline_matmul: {da:?} x {db:?}")));
+    }
+    let (m, k, n) = (da[0], da[1], db[1]);
+    let width = effective_width(p, m);
+    let bt = b.transpose2d()?;
+    let mut out = Tensor::zeros(&[m, n]);
+    for i in 0..m {
+        for j in 0..n {
+            out.data_mut()[i * n + j] = baseline_dot(
+                &a.data()[i * k..(i + 1) * k],
+                &bt.data()[j * k..(j + 1) * k],
+                width,
+                p.fma,
+            );
+        }
+    }
+    Ok(out)
+}
+
+/// Conventional softmax: uses the platform's math library and chunked
+/// sums (contrast with `nn::softmax_rows`).
+pub fn baseline_softmax_rows(x: &Tensor, p: &PlatformProfile) -> Result<Tensor> {
+    let d = x.dims();
+    if d.len() != 2 {
+        return Err(Error::shape("baseline_softmax_rows: want rank 2"));
+    }
+    let (rows, c) = (d[0], d[1]);
+    let width = effective_width(p, rows);
+    let mut out = Tensor::zeros(d);
+    for r in 0..rows {
+        let w = x.row(r);
+        let mut m = w[0];
+        for &v in &w[1..] {
+            if v > m {
+                m = v;
+            }
+        }
+        let mut es = vec![0.0f32; c];
+        for j in 0..c {
+            es[j] = super::exp_variant(w[j] - m, p.mathlib);
+        }
+        let denom = baseline_sum(&es, width);
+        for j in 0..c {
+            out.data_mut()[r * c + j] = es[j] / denom;
+        }
+    }
+    Ok(out)
+}
+
+/// exp under the platform's libm (convenience).
+pub fn baseline_exp(x: f32, p: &PlatformProfile) -> f32 {
+    super::exp_variant(x, p.mathlib)
+}
+
+/// log under the platform's libm (convenience).
+pub fn baseline_log(x: f32, p: &PlatformProfile) -> f32 {
+    super::log_variant(x, p.mathlib)
+}
+
+static ATOMIC_EPOCH: AtomicU64 = AtomicU64::new(0x1234_5678);
+
+/// Simulated atomic-add reduction (§2.2.2): the summation order is a
+/// pseudo-random permutation seeded from a *process-global counter*, so
+/// two calls on the same data generally reduce in different orders —
+/// run-to-run non-determinism, exactly like GPU atomics.
+pub fn atomic_sum(xs: &[f32]) -> f32 {
+    let seed = ATOMIC_EPOCH.fetch_add(0x9e37_79b9, Ordering::Relaxed);
+    let mut order: Vec<usize> = (0..xs.len()).collect();
+    // cheap seeded shuffle
+    let mut s = seed;
+    for i in (1..order.len()).rev() {
+        s = s.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        let j = ((s >> 33) as usize) % (i + 1);
+        order.swap(i, j);
+    }
+    let mut acc = 0.0f32;
+    for i in order {
+        acc += xs[i];
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lcg_vec(n: usize, seed: u64) -> Vec<f32> {
+        let mut s = seed;
+        (0..n)
+            .map(|_| {
+                s = s.wrapping_mul(6364136223846793005).wrapping_add(1);
+                (((s >> 40) as f32) / (1u64 << 24) as f32 - 0.5) * 100.0
+            })
+            .collect()
+    }
+
+    #[test]
+    fn widths_change_bits_but_not_value_much() {
+        let xs = lcg_vec(10_000, 1);
+        let w1 = baseline_sum(&xs, 1);
+        let w4 = baseline_sum(&xs, 4);
+        let w8 = baseline_sum(&xs, 8);
+        assert!((w1 - w4).abs() < 1.0);
+        assert!((w1 - w8).abs() < 1.0);
+        // at least one pair differs in bits (overwhelmingly likely)
+        assert!(
+            w1.to_bits() != w4.to_bits() || w4.to_bits() != w8.to_bits(),
+            "chunked sums all identical?"
+        );
+    }
+
+    #[test]
+    fn profiles_give_divergent_matmuls() {
+        let a = Tensor::from_vec(&[16, 64], lcg_vec(1024, 2)).unwrap();
+        let b = Tensor::from_vec(&[64, 16], lcg_vec(1024, 3)).unwrap();
+        let outs: Vec<Tensor> = PlatformProfile::zoo()
+            .iter()
+            .map(|p| baseline_matmul(&a, &b, p).unwrap())
+            .collect();
+        let mut any_diff = false;
+        for o in &outs[1..] {
+            any_diff |= !o.bit_eq(&outs[0]);
+        }
+        assert!(any_diff, "all simulated platforms agreed bitwise");
+        // but numerically close
+        for o in &outs[1..] {
+            for (x, y) in o.data().iter().zip(outs[0].data()) {
+                assert!((x - y).abs() < 0.2 * (1.0 + y.abs()));
+            }
+        }
+    }
+
+    #[test]
+    fn size_dispatch_changes_bits_with_batch_size() {
+        // same row computed under different batch sizes diverges on a
+        // size-dispatching platform
+        let p = PlatformProfile { name: "t", simd_width: 8, fma: true, mathlib: MathImpl::IntelLike, size_dispatch: true };
+        let k = 256;
+        let row = lcg_vec(k, 5);
+        let w = Tensor::from_vec(&[k, 4], lcg_vec(k * 4, 6)).unwrap();
+        let small = Tensor::from_vec(&[1, k], row.clone()).unwrap();
+        let mut big_data = row.clone();
+        for i in 1..64 {
+            big_data.extend(lcg_vec(k, 100 + i));
+        }
+        let big = Tensor::from_vec(&[64, k], big_data).unwrap();
+        let o_small = baseline_matmul(&small, &w, &p).unwrap();
+        let o_big = baseline_matmul(&big, &w, &p).unwrap();
+        let diverged = (0..4).any(|j| o_small.data()[j].to_bits() != o_big.data()[j].to_bits());
+        assert!(diverged, "batch size did not affect per-request bits");
+    }
+
+    #[test]
+    fn atomic_sum_is_nondeterministic_run_to_run() {
+        let xs = lcg_vec(5000, 7);
+        let a = atomic_sum(&xs);
+        let mut diverged = false;
+        for _ in 0..10 {
+            if atomic_sum(&xs).to_bits() != a.to_bits() {
+                diverged = true;
+                break;
+            }
+        }
+        assert!(diverged, "simulated atomics were accidentally deterministic");
+        // value still close
+        assert!((atomic_sum(&xs) - a).abs() < 1.0);
+    }
+}

@@ -1,0 +1,101 @@
+//! Hand-rolled measurement harness (criterion is not in the offline
+//! crate set — DESIGN.md §5): warmup + N samples, median / MAD / min,
+//! throughput helpers, and stable aligned text output shared by every
+//! `benches/e*.rs` target.
+
+use std::time::Instant;
+
+/// One measured statistic set (nanoseconds).
+#[derive(Clone, Debug)]
+pub struct Stats {
+    /// Median of samples.
+    pub median_ns: f64,
+    /// Minimum sample.
+    pub min_ns: f64,
+    /// Median absolute deviation.
+    pub mad_ns: f64,
+    /// Samples taken.
+    pub samples: usize,
+}
+
+impl Stats {
+    /// ns → human string.
+    pub fn human(ns: f64) -> String {
+        if ns < 1e3 {
+            format!("{ns:.0} ns")
+        } else if ns < 1e6 {
+            format!("{:.2} µs", ns / 1e3)
+        } else if ns < 1e9 {
+            format!("{:.2} ms", ns / 1e6)
+        } else {
+            format!("{:.3} s", ns / 1e9)
+        }
+    }
+}
+
+/// Measure `f`, autoscaling iterations so each sample is ≳2 ms.
+pub fn bench<R>(name: &str, samples: usize, mut f: impl FnMut() -> R) -> Stats {
+    // warmup + iteration scaling
+    let t0 = Instant::now();
+    std::hint::black_box(f());
+    let one = t0.elapsed().as_nanos().max(1) as f64;
+    let iters = ((2e6 / one).ceil() as usize).clamp(1, 1_000_000);
+    let mut xs = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t = Instant::now();
+        for _ in 0..iters {
+            std::hint::black_box(f());
+        }
+        xs.push(t.elapsed().as_nanos() as f64 / iters as f64);
+    }
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = xs[xs.len() / 2];
+    let min = xs[0];
+    let mut devs: Vec<f64> = xs.iter().map(|x| (x - median).abs()).collect();
+    devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mad = devs[devs.len() / 2];
+    let s = Stats { median_ns: median, min_ns: min, mad_ns: mad, samples };
+    println!(
+        "{name:<46} {:>12} ± {:<10} (min {})",
+        Stats::human(s.median_ns),
+        Stats::human(s.mad_ns),
+        Stats::human(s.min_ns)
+    );
+    s
+}
+
+/// Print a section header.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+/// Print an aligned key/value row (for non-timing results).
+pub fn row(key: &str, value: impl std::fmt::Display) {
+    println!("{key:<46} {value}");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let s = bench("noop-ish", 3, || {
+            let mut acc = 0u64;
+            for i in 0..100u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert!(s.median_ns > 0.0);
+        assert!(s.min_ns <= s.median_ns);
+    }
+
+    #[test]
+    fn human_formatting() {
+        assert_eq!(Stats::human(500.0), "500 ns");
+        assert_eq!(Stats::human(1500.0), "1.50 µs");
+        assert_eq!(Stats::human(2.5e6), "2.50 ms");
+        assert_eq!(Stats::human(3.21e9), "3.210 s");
+    }
+}

@@ -1,0 +1,95 @@
+//! Tiny argument parser (clap is not in the offline crate set).
+//!
+//! Grammar: `repdl <subcommand> [--flag value | --switch] ...`
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Default)]
+pub struct Args {
+    /// First positional (the subcommand).
+    pub command: Option<String>,
+    /// Remaining positionals.
+    pub positional: Vec<String>,
+    /// `--key value` pairs (switches get "true").
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                let val = match it.peek() {
+                    Some(v) if !v.starts_with("--") => it.next().unwrap(),
+                    _ => "true".to_string(),
+                };
+                out.flags.insert(key.to_string(), val);
+            } else if out.command.is_none() {
+                out.command = Some(a);
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    /// Parse the process command line.
+    pub fn from_env() -> Args {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// Typed flag with default.
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.flags.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    /// Typed flag with default.
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.flags.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    /// Typed flag with default.
+    pub fn get_f32(&self, key: &str, default: f32) -> f32 {
+        self.flags.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    /// String flag with default.
+    pub fn get_str(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    /// Boolean switch.
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn parses_subcommand_and_flags() {
+        let a = p("train --steps 100 --lr 0.5 extra --verbose");
+        assert_eq!(a.command.as_deref(), Some("train"));
+        assert_eq!(a.get_usize("steps", 0), 100);
+        assert_eq!(a.get_f32("lr", 0.0), 0.5);
+        assert!(a.has("verbose"));
+        assert_eq!(a.positional, vec!["extra"]);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = p("verify");
+        assert_eq!(a.get_usize("steps", 42), 42);
+        assert_eq!(a.get_str("mode", "repro"), "repro");
+        assert!(!a.has("verbose"));
+    }
+}

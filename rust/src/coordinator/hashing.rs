@@ -1,0 +1,56 @@
+//! Bitwise fingerprints for model state and tensors.
+
+use crate::tensor::Tensor;
+use sha2::{Digest, Sha256};
+
+/// Hex-encode bytes.
+pub fn hex(bytes: &[u8]) -> String {
+    bytes.iter().map(|b| format!("{b:02x}")).collect()
+}
+
+/// SHA-256 over a parameter list (order-sensitive, includes shapes and
+/// raw bit patterns) — the model-state fingerprint used by E1/E2/E8.
+pub fn hash_params(params: &[&Tensor]) -> String {
+    let mut h = Sha256::new();
+    for p in params {
+        h.update((p.dims().len() as u64).to_le_bytes());
+        for &d in p.dims() {
+            h.update((d as u64).to_le_bytes());
+        }
+        for &v in p.data() {
+            h.update(v.to_bits().to_le_bytes());
+        }
+    }
+    hex(&h.finalize())
+}
+
+/// SHA-256 of a loss curve (bit patterns).
+pub fn hash_curve(curve: &[f32]) -> String {
+    let mut h = Sha256::new();
+    for &v in curve {
+        h.update(v.to_bits().to_le_bytes());
+    }
+    hex(&h.finalize())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn order_and_bits_sensitive() {
+        let a = Tensor::full(&[2], 1.0);
+        let b = Tensor::full(&[2], 2.0);
+        assert_ne!(hash_params(&[&a, &b]), hash_params(&[&b, &a]));
+        let c = Tensor::from_vec(&[1], vec![0.0]).unwrap();
+        let d = Tensor::from_vec(&[1], vec![-0.0]).unwrap();
+        assert_ne!(hash_params(&[&c]), hash_params(&[&d]));
+        assert_eq!(hash_params(&[&a]), hash_params(&[&a.clone()]));
+    }
+
+    #[test]
+    fn curve_hash() {
+        assert_eq!(hash_curve(&[1.0, 2.0]), hash_curve(&[1.0, 2.0]));
+        assert_ne!(hash_curve(&[1.0, 2.0]), hash_curve(&[2.0, 1.0]));
+    }
+}

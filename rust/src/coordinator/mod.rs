@@ -1,0 +1,17 @@
+//! Layer-3 coordinator.
+//!
+//! RepDL's contribution lives at the numerics layer, so L3 is a thin-plus
+//! driver (per the architecture in DESIGN.md §1): training loops, a
+//! deterministic inference server, and the bitwise-verification harness
+//! that powers experiments E1/E2/E7/E8. Rust owns process lifecycle,
+//! metrics and the CLI; Python never appears at run time.
+
+pub mod hashing;
+pub mod serve;
+pub mod trainer;
+pub mod verifier;
+
+pub use hashing::{hash_params, hex};
+pub use serve::{DeterministicServer, ServeReport};
+pub use trainer::{NumericsMode, TrainReport, Trainer, TrainerConfig};
+pub use verifier::{compare_runs, first_divergence, Comparison};

@@ -1,0 +1,157 @@
+//! Deterministic inference serving — the §2.2.2 "dynamic batching"
+//! hazard and RepDL's answer (experiment E7).
+//!
+//! A serving system batches whatever requests are in the queue. The same
+//! request can therefore run in a batch of 1 today and 64 tomorrow.
+//! RepDL inference is **batch-size invariant**: every output row is an
+//! independent fixed-order reduction, so a request's bits don't depend on
+//! its batch-mates. The conventional baseline dispatches kernels by
+//! problem size (like cuDNN), so its per-request bits change with batch
+//! size — [`ServeReport`] quantifies that.
+
+use crate::baseline::{baseline_matmul, PlatformProfile};
+use crate::tensor::{matmul, Tensor};
+use crate::Result;
+
+/// A toy model server: logits = x · W (+ per-row softmax left to client).
+pub struct DeterministicServer {
+    /// Weights (in, out).
+    pub weights: Tensor,
+    /// Max batch per dispatch.
+    pub max_batch: usize,
+}
+
+/// Outcome of replaying the same requests under different batch mixes.
+#[derive(Clone, Debug)]
+pub struct ServeReport {
+    /// Requests checked.
+    pub requests: usize,
+    /// Requests whose bits changed with batch composition (RepDL path).
+    pub repro_mismatches: usize,
+    /// Requests whose bits changed with batch composition (baseline).
+    pub baseline_mismatches: usize,
+}
+
+impl DeterministicServer {
+    /// New server.
+    pub fn new(weights: Tensor, max_batch: usize) -> Self {
+        DeterministicServer { weights, max_batch }
+    }
+
+    /// Process a queue in arrival order, batching up to `max_batch`.
+    /// Returns one output row per request.
+    pub fn process_repro(&self, queue: &[Tensor]) -> Result<Vec<Tensor>> {
+        self.process_with(queue, |x| matmul(x, &self.weights))
+    }
+
+    /// Baseline path under a platform profile (size-dispatching kernels).
+    pub fn process_baseline(
+        &self,
+        queue: &[Tensor],
+        p: &PlatformProfile,
+    ) -> Result<Vec<Tensor>> {
+        self.process_with(queue, |x| baseline_matmul(x, &self.weights, p))
+    }
+
+    fn process_with(
+        &self,
+        queue: &[Tensor],
+        f: impl Fn(&Tensor) -> Result<Tensor>,
+    ) -> Result<Vec<Tensor>> {
+        let d_in = self.weights.dims()[0];
+        let d_out = self.weights.dims()[1];
+        let mut outs = Vec::with_capacity(queue.len());
+        for chunk in queue.chunks(self.max_batch.max(1)) {
+            let mut x = Tensor::zeros(&[chunk.len(), d_in]);
+            for (i, r) in chunk.iter().enumerate() {
+                x.data_mut()[i * d_in..(i + 1) * d_in].copy_from_slice(r.data());
+            }
+            let y = f(&x)?;
+            for i in 0..chunk.len() {
+                outs.push(Tensor::from_vec(
+                    &[d_out],
+                    y.data()[i * d_out..(i + 1) * d_out].to_vec(),
+                )?);
+            }
+        }
+        Ok(outs)
+    }
+
+    /// Replay the same requests under several batch sizes and count
+    /// per-request bit mismatches for both numerics paths.
+    pub fn batch_invariance_report(
+        &self,
+        queue: &[Tensor],
+        batch_sizes: &[usize],
+        p: &PlatformProfile,
+    ) -> Result<ServeReport> {
+        let mut repro_all = Vec::new();
+        let mut base_all = Vec::new();
+        for &bs in batch_sizes {
+            let s = DeterministicServer { weights: self.weights.clone(), max_batch: bs };
+            repro_all.push(s.process_repro(queue)?);
+            base_all.push(s.process_baseline(queue, p)?);
+        }
+        let mut repro_mismatches = 0;
+        let mut baseline_mismatches = 0;
+        for r in 0..queue.len() {
+            if repro_all.iter().any(|o| !o[r].bit_eq(&repro_all[0][r])) {
+                repro_mismatches += 1;
+            }
+            if base_all.iter().any(|o| !o[r].bit_eq(&base_all[0][r])) {
+                baseline_mismatches += 1;
+            }
+        }
+        Ok(ServeReport { requests: queue.len(), repro_mismatches, baseline_mismatches })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn queue(n: usize, d: usize) -> Vec<Tensor> {
+        (0..n)
+            .map(|i| {
+                let mut s = i as u64 + 1;
+                Tensor::from_vec(
+                    &[d],
+                    (0..d)
+                        .map(|_| {
+                            s = s.wrapping_mul(6364136223846793005).wrapping_add(11);
+                            (((s >> 40) as f32) / (1u64 << 24) as f32 - 0.5) * 3.0
+                        })
+                        .collect(),
+                )
+                .unwrap()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn repro_path_is_batch_invariant() {
+        let w = crate::rng::uniform_tensor(&[256, 8], -0.3, 0.3, 5);
+        let srv = DeterministicServer::new(w, 16);
+        let q = queue(50, 256);
+        let p = PlatformProfile::zoo()[4]; // gpu-warp32, size dispatch
+        let rep = srv.batch_invariance_report(&q, &[1, 4, 16, 50], &p).unwrap();
+        assert_eq!(rep.repro_mismatches, 0, "RepDL must be batch invariant");
+        assert!(
+            rep.baseline_mismatches > 0,
+            "baseline unexpectedly invariant — dispatch simulation broken?"
+        );
+    }
+
+    #[test]
+    fn outputs_match_direct_compute() {
+        let w = crate::rng::uniform_tensor(&[16, 4], -0.5, 0.5, 9);
+        let srv = DeterministicServer::new(w.clone(), 3);
+        let q = queue(7, 16);
+        let outs = srv.process_repro(&q).unwrap();
+        for (r, o) in q.iter().zip(outs.iter()) {
+            let x = r.reshape(&[1, 16]).unwrap();
+            let want = matmul(&x, &w).unwrap();
+            assert_eq!(o.data(), want.data());
+        }
+    }
+}

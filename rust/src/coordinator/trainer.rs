@@ -1,0 +1,231 @@
+//! Training loops with switchable numerics — the E1/E2/E8 engine.
+//!
+//! [`NumericsMode::Repro`] runs RepDL kernels; the other modes run the
+//! conventional [`crate::baseline`] kernels under a simulated platform or
+//! with simulated atomics — the experiment's control group. The MLP
+//! trainer implements its forward/backward *manually* so the identical
+//! mathematical graph runs under either numerics (only the kernels —
+//! reduction order, libm, FMA — change, matching the paper's taxonomy).
+
+use crate::baseline::{atomic_sum, baseline_matmul, baseline_softmax_rows, PlatformProfile};
+use crate::coordinator::hashing::hash_params;
+use crate::data::GaussianMixtureImages;
+use crate::nn::softmax_rows;
+use crate::rng::derive_seed;
+use crate::tensor::{matmul, Tensor};
+use crate::Result;
+
+/// Which numerics the trainer runs.
+#[derive(Clone, Copy, Debug)]
+pub enum NumericsMode {
+    /// RepDL reproducible kernels.
+    Repro,
+    /// Conventional kernels under a simulated platform.
+    Baseline(PlatformProfile),
+    /// Conventional kernels + simulated atomic-order bias-gradient
+    /// reduction (run-to-run non-deterministic).
+    BaselineAtomic(PlatformProfile),
+}
+
+/// Trainer configuration (2-layer MLP on the synthetic image task).
+#[derive(Clone, Copy, Debug)]
+pub struct TrainerConfig {
+    /// Input side (images are side×side).
+    pub side: usize,
+    /// Hidden width.
+    pub hidden: usize,
+    /// Classes.
+    pub classes: usize,
+    /// Batch size.
+    pub batch: usize,
+    /// Steps.
+    pub steps: usize,
+    /// Learning rate.
+    pub lr: f32,
+    /// Base seed (init + data order).
+    pub seed: u64,
+}
+
+impl Default for TrainerConfig {
+    fn default() -> Self {
+        TrainerConfig { side: 8, hidden: 32, classes: 4, batch: 16, steps: 60, lr: 0.2, seed: 42 }
+    }
+}
+
+/// Result of a training run.
+#[derive(Clone, Debug)]
+pub struct TrainReport {
+    /// Loss at every step.
+    pub loss_curve: Vec<f32>,
+    /// SHA-256 of the final parameters.
+    pub param_hash: String,
+    /// Final parameters (w1, b1, w2, b2).
+    pub params: Vec<Tensor>,
+}
+
+/// Manual-graph MLP trainer with switchable numerics.
+pub struct Trainer {
+    /// Config.
+    pub cfg: TrainerConfig,
+    /// Numerics under test.
+    pub mode: NumericsMode,
+}
+
+impl Trainer {
+    /// New trainer.
+    pub fn new(cfg: TrainerConfig, mode: NumericsMode) -> Self {
+        Trainer { cfg, mode }
+    }
+
+    fn mm(&self, a: &Tensor, b: &Tensor) -> Result<Tensor> {
+        match &self.mode {
+            NumericsMode::Repro => matmul(a, b),
+            NumericsMode::Baseline(p) | NumericsMode::BaselineAtomic(p) => {
+                baseline_matmul(a, b, p)
+            }
+        }
+    }
+
+    fn softmax(&self, x: &Tensor) -> Result<Tensor> {
+        match &self.mode {
+            NumericsMode::Repro => softmax_rows(x),
+            NumericsMode::Baseline(p) | NumericsMode::BaselineAtomic(p) => {
+                baseline_softmax_rows(x, p)
+            }
+        }
+    }
+
+    /// Column sum for bias gradients: sequential in Repro/Baseline,
+    /// simulated-atomic order in BaselineAtomic.
+    fn col_sum(&self, g: &Tensor) -> Tensor {
+        let (rows, cols) = (g.dims()[0], g.dims()[1]);
+        let mut out = Tensor::zeros(&[cols]);
+        match &self.mode {
+            NumericsMode::BaselineAtomic(_) => {
+                for j in 0..cols {
+                    let col: Vec<f32> = (0..rows).map(|r| g.data()[r * cols + j]).collect();
+                    out.data_mut()[j] = atomic_sum(&col);
+                }
+            }
+            _ => {
+                for j in 0..cols {
+                    let mut acc = 0.0f32;
+                    for r in 0..rows {
+                        acc += g.data()[r * cols + j];
+                    }
+                    out.data_mut()[j] = acc;
+                }
+            }
+        }
+        out
+    }
+
+    /// Run the full training loop.
+    pub fn run(&self) -> Result<TrainReport> {
+        let c = &self.cfg;
+        let n_in = c.side * c.side;
+        let ds = GaussianMixtureImages::new(c.side, c.classes, c.batch * c.steps, derive_seed(c.seed, 7));
+        // init (identical across modes — isolate numerics, not RNG)
+        let mut w1 = crate::rng::kaiming_uniform(&[n_in, c.hidden], derive_seed(c.seed, 0));
+        let mut b1 = Tensor::zeros(&[c.hidden]);
+        let mut w2 = crate::rng::kaiming_uniform(&[c.hidden, c.classes], derive_seed(c.seed, 1));
+        let mut b2 = Tensor::zeros(&[c.classes]);
+        let mut curve = Vec::with_capacity(c.steps);
+        for step in 0..c.steps {
+            let idxs: Vec<usize> = (0..c.batch).map(|i| step * c.batch + i).collect();
+            let (x, labels) = ds.batch_flat(&idxs);
+            // forward: h = relu(x·w1 + b1); logits = h·w2 + b2
+            let h_pre = self.mm(&x, &w1)?.add_t(&b1)?;
+            let h = h_pre.map(|v| if v > 0.0 { v } else { 0.0 });
+            let logits = self.mm(&h, &w2)?.add_t(&b2)?;
+            let probs = self.softmax(&logits)?;
+            // loss: mean −log p[target] (library log per mode)
+            let mut loss = 0.0f32;
+            for (i, &t) in labels.iter().enumerate() {
+                let p = probs.data()[i * c.classes + t];
+                let lp = match &self.mode {
+                    NumericsMode::Repro => crate::rnum::rlog(p),
+                    NumericsMode::Baseline(pf) | NumericsMode::BaselineAtomic(pf) => {
+                        crate::baseline::log_variant(p, pf.mathlib)
+                    }
+                };
+                loss -= lp;
+            }
+            loss /= c.batch as f32;
+            curve.push(loss);
+            // backward (fixed formulas; kernels per mode)
+            let mut dlogits = probs.clone();
+            for (i, &t) in labels.iter().enumerate() {
+                dlogits.data_mut()[i * c.classes + t] -= 1.0;
+            }
+            let dlogits = dlogits.map(|v| v / c.batch as f32);
+            let dw2 = self.mm(&h.transpose2d()?, &dlogits)?;
+            let db2 = self.col_sum(&dlogits);
+            let dh = self.mm(&dlogits, &w2.transpose2d()?)?;
+            let dh_pre = dh.zip(&h_pre, |g, v| if v > 0.0 { g } else { 0.0 })?;
+            let dw1 = self.mm(&x.transpose2d()?, &dh_pre)?;
+            let db1 = self.col_sum(&dh_pre);
+            // SGD update (fixed graph)
+            for (p, g) in [(&mut w1, &dw1), (&mut b1, &db1), (&mut w2, &dw2), (&mut b2, &db2)] {
+                for (pv, gv) in p.data_mut().iter_mut().zip(g.data().iter()) {
+                    *pv -= c.lr * gv;
+                }
+            }
+        }
+        let param_hash = hash_params(&[&w1, &b1, &w2, &b2]);
+        Ok(TrainReport { loss_curve: curve, param_hash, params: vec![w1, b1, w2, b2] })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn repro_mode_is_bit_deterministic() {
+        let cfg = TrainerConfig { steps: 20, ..Default::default() };
+        let a = Trainer::new(cfg, NumericsMode::Repro).run().unwrap();
+        let b = Trainer::new(cfg, NumericsMode::Repro).run().unwrap();
+        assert_eq!(a.param_hash, b.param_hash);
+        assert_eq!(
+            crate::coordinator::hashing::hash_curve(&a.loss_curve),
+            crate::coordinator::hashing::hash_curve(&b.loss_curve)
+        );
+    }
+
+    #[test]
+    fn training_learns() {
+        let cfg = TrainerConfig { steps: 60, ..Default::default() };
+        let r = Trainer::new(cfg, NumericsMode::Repro).run().unwrap();
+        let first: f32 = r.loss_curve[..5].iter().sum::<f32>() / 5.0;
+        let last: f32 = r.loss_curve[r.loss_curve.len() - 5..].iter().sum::<f32>() / 5.0;
+        assert!(last < first * 0.8, "loss {first} -> {last}");
+    }
+
+    #[test]
+    fn atomic_mode_diverges_run_to_run() {
+        let cfg = TrainerConfig { steps: 15, ..Default::default() };
+        let p = PlatformProfile::reference();
+        let a = Trainer::new(cfg, NumericsMode::BaselineAtomic(p)).run().unwrap();
+        let b = Trainer::new(cfg, NumericsMode::BaselineAtomic(p)).run().unwrap();
+        assert_ne!(a.param_hash, b.param_hash, "atomics were deterministic?!");
+    }
+
+    #[test]
+    fn platforms_diverge_under_baseline_but_not_repro() {
+        let cfg = TrainerConfig { steps: 15, ..Default::default() };
+        let zoo = PlatformProfile::zoo();
+        let base: Vec<String> = zoo
+            .iter()
+            .map(|p| Trainer::new(cfg, NumericsMode::Baseline(*p)).run().unwrap().param_hash)
+            .collect();
+        assert!(
+            base.iter().any(|h| h != &base[0]),
+            "baseline identical across all simulated platforms"
+        );
+        // repro mode doesn't depend on the profile at all (same code path)
+        let r1 = Trainer::new(cfg, NumericsMode::Repro).run().unwrap();
+        let r2 = Trainer::new(cfg, NumericsMode::Repro).run().unwrap();
+        assert_eq!(r1.param_hash, r2.param_hash);
+    }
+}

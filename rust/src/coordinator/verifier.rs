@@ -1,0 +1,76 @@
+//! Bitwise run comparison — the measurement instrument for E1/E2/E8.
+
+use crate::rnum::fbits::ulp_diff;
+
+/// Result of comparing two runs.
+#[derive(Clone, Debug)]
+pub struct Comparison {
+    /// Bitwise identical loss curves?
+    pub curves_identical: bool,
+    /// First step at which the curves differ in bits.
+    pub first_divergence: Option<usize>,
+    /// Maximum ULP distance across the curves.
+    pub max_ulp: u32,
+    /// Final-state hashes equal?
+    pub hashes_equal: bool,
+}
+
+/// First index where the two curves differ in bit pattern.
+pub fn first_divergence(a: &[f32], b: &[f32]) -> Option<usize> {
+    a.iter()
+        .zip(b.iter())
+        .position(|(x, y)| x.to_bits() != y.to_bits())
+        .or(if a.len() != b.len() { Some(a.len().min(b.len())) } else { None })
+}
+
+/// Compare two runs (loss curves + state hashes).
+pub fn compare_runs(
+    curve_a: &[f32],
+    curve_b: &[f32],
+    hash_a: &str,
+    hash_b: &str,
+) -> Comparison {
+    let fd = first_divergence(curve_a, curve_b);
+    let max_ulp = curve_a
+        .iter()
+        .zip(curve_b.iter())
+        .map(|(&x, &y)| ulp_diff(x, y))
+        .max()
+        .unwrap_or(0);
+    Comparison {
+        curves_identical: fd.is_none(),
+        first_divergence: fd,
+        max_ulp,
+        hashes_equal: hash_a == hash_b,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identical_runs() {
+        let c = compare_runs(&[1.0, 0.5], &[1.0, 0.5], "aa", "aa");
+        assert!(c.curves_identical);
+        assert!(c.hashes_equal);
+        assert_eq!(c.max_ulp, 0);
+        assert_eq!(c.first_divergence, None);
+    }
+
+    #[test]
+    fn detects_divergence_step() {
+        let a = [1.0f32, 0.5, 0.25];
+        let b = [1.0f32, 0.5, 0.2500001];
+        let c = compare_runs(&a, &b, "aa", "bb");
+        assert!(!c.curves_identical);
+        assert_eq!(c.first_divergence, Some(2));
+        assert!(c.max_ulp >= 1);
+        assert!(!c.hashes_equal);
+    }
+
+    #[test]
+    fn length_mismatch_is_divergence() {
+        assert_eq!(first_divergence(&[1.0, 2.0], &[1.0]), Some(1));
+    }
+}

@@ -1,0 +1,12 @@
+//! Deterministic data pipeline (the substrate the paper's training
+//! experiments assume). Synthetic datasets generated from seeded RNG +
+//! deterministic shuffling/batching: the entire input stream is a pure
+//! function of (seed, epoch).
+
+pub mod corpus;
+pub mod loader;
+pub mod synth;
+
+pub use corpus::{CharTokenizer, SyntheticCorpus};
+pub use loader::BatchLoader;
+pub use synth::GaussianMixtureImages;

@@ -1,0 +1,43 @@
+//! Crate-wide error type.
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Errors produced by RepDL.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    /// Shape mismatch or invalid dimension arguments.
+    #[error("shape error: {0}")]
+    Shape(String),
+
+    /// Configuration file / CLI problems.
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// Artifact loading / PJRT execution problems.
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// Underlying XLA error.
+    #[error("xla error: {0}")]
+    Xla(String),
+
+    /// I/O error.
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+impl Error {
+    /// Convenience constructor for shape errors.
+    pub fn shape(msg: impl Into<String>) -> Self {
+        Error::Shape(msg.into())
+    }
+    /// Convenience constructor for config errors.
+    pub fn config(msg: impl Into<String>) -> Self {
+        Error::Config(msg.into())
+    }
+    /// Convenience constructor for runtime errors.
+    pub fn runtime(msg: impl Into<String>) -> Self {
+        Error::Runtime(msg.into())
+    }
+}

@@ -1,0 +1,61 @@
+//! # RepDL — bit-level reproducible deep learning training and inference
+//!
+//! Rust reproduction of *"RepDL: Bit-level Reproducible Deep Learning
+//! Training and Inference"* (Xie, Zhang, Chen — Microsoft Research, 2025).
+//!
+//! RepDL eliminates floating-point non-determinism and non-reproducibility
+//! by enforcing two principles (paper §3.1):
+//!
+//! 1. **Correct rounding for basic operations** — every scalar math
+//!    operation ([`rnum`]) rounds the infinitely-precise result with
+//!    IEEE-754 round-to-nearest-even, so its bits are identical on every
+//!    conforming platform.
+//! 2. **Order invariance for composite operations** — every reduction
+//!    ([`rnum::sum`], [`tensor`]) uses a *specified* association order
+//!    (sequential by default, pairwise as a separately-named API), and
+//!    every DL function ([`nn`]) is a *specified* computation graph of
+//!    basic operations.
+//!
+//! The crate is organised as the paper's system plus every substrate it
+//! assumes:
+//!
+//! * [`rnum`] — correctly-rounded scalar ops + the `BigFloat` rounding
+//!   oracle + reproducible summation algorithms.
+//! * [`tensor`] — shape/stride tensor library with fixed-order GEMM,
+//!   convolution and reductions.
+//! * [`autograd`] — tape autograd with deterministic gradient-accumulation
+//!   order.
+//! * [`nn`] — PyTorch-named modules (`Linear`, `Conv2d`, `BatchNorm2d`,
+//!   `LayerNorm`, `MultiheadAttention`, ...) as fixed computation graphs.
+//! * [`optim`] — `SGD` / `Adam` / `AdamW` with fixed update graphs.
+//! * [`rng`] — MT19937 + Philox4x32-10, per-worker deterministic seeding
+//!   (paper §2.1), reproducible initialisers.
+//! * [`data`] — deterministic synthetic datasets and batching.
+//! * [`baseline`] — *non*-reproducible conventional implementations
+//!   parameterised by a simulated [`baseline::PlatformProfile`]; the
+//!   control group for every experiment.
+//! * [`runtime`] — PJRT loader/executor for the JAX/Pallas AOT artifacts
+//!   (the second, independent implementation of the RepDL op spec).
+//! * [`coordinator`] — trainer, deterministic inference server,
+//!   bitwise-verification harness.
+//!
+//! See `DESIGN.md` for the experiment index (E1–E9) and `EXPERIMENTS.md`
+//! for paper-vs-measured results.
+
+pub mod autograd;
+pub mod baseline;
+pub mod bench_harness;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod error;
+pub mod nn;
+pub mod optim;
+pub mod proptest;
+pub mod rng;
+pub mod rnum;
+pub mod runtime;
+pub mod tensor;
+
+pub use error::{Error, Result};

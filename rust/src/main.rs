@@ -1,0 +1,225 @@
+//! `repdl` — the RepDL leader binary.
+//!
+//! Subcommands:
+//!   train        train the MLP workload (choose numerics: repro/baseline/atomic)
+//!   verify       E1/E2 style run-twice + cross-platform verification
+//!   transformer  train the char transformer (E8 workload)
+//!   serve        E7 batch-invariance report
+//!   runtime      load + execute an AOT artifact (needs `make artifacts`)
+//!   selftest     quick determinism smoke checks
+
+use repdl::baseline::PlatformProfile;
+use repdl::cli::Args;
+use repdl::coordinator::{compare_runs, DeterministicServer, NumericsMode, Trainer, TrainerConfig};
+use repdl::data::SyntheticCorpus;
+use repdl::nn::{CharTransformer, TransformerConfig};
+use repdl::optim::Adam;
+use repdl::tensor::Tensor;
+
+fn main() {
+    let args = Args::from_env();
+    let code = match args.command.as_deref() {
+        Some("train") => cmd_train(&args),
+        Some("verify") => cmd_verify(&args),
+        Some("transformer") => cmd_transformer(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("runtime") => cmd_runtime(&args),
+        Some("selftest") => cmd_selftest(),
+        _ => {
+            eprintln!(
+                "usage: repdl <train|verify|transformer|serve|runtime|selftest> [--flags]\n\
+                 try: repdl verify --steps 40"
+            );
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn trainer_cfg(args: &Args) -> TrainerConfig {
+    TrainerConfig {
+        side: args.get_usize("side", 8),
+        hidden: args.get_usize("hidden", 32),
+        classes: args.get_usize("classes", 4),
+        batch: args.get_usize("batch", 16),
+        steps: args.get_usize("steps", 60),
+        lr: args.get_f32("lr", 0.2),
+        seed: args.get_u64("seed", 42),
+    }
+}
+
+fn cmd_train(args: &Args) -> i32 {
+    let cfg = trainer_cfg(args);
+    let mode = match args.get_str("mode", "repro").as_str() {
+        "repro" => NumericsMode::Repro,
+        "baseline" => NumericsMode::Baseline(PlatformProfile::reference()),
+        "atomic" => NumericsMode::BaselineAtomic(PlatformProfile::reference()),
+        other => {
+            eprintln!("unknown --mode {other}");
+            return 2;
+        }
+    };
+    match Trainer::new(cfg, mode).run() {
+        Ok(r) => {
+            for (i, l) in r.loss_curve.iter().enumerate() {
+                if i % 10 == 0 || i + 1 == r.loss_curve.len() {
+                    println!("step {i:>4}  loss {l:.6}");
+                }
+            }
+            println!("param_hash {}", r.param_hash);
+            0
+        }
+        Err(e) => {
+            eprintln!("train failed: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_verify(args: &Args) -> i32 {
+    let cfg = trainer_cfg(args);
+    println!("== run-to-run (RepDL) ==");
+    let a = Trainer::new(cfg, NumericsMode::Repro).run().unwrap();
+    let b = Trainer::new(cfg, NumericsMode::Repro).run().unwrap();
+    let c = compare_runs(&a.loss_curve, &b.loss_curve, &a.param_hash, &b.param_hash);
+    println!("identical={} first_div={:?}", c.curves_identical, c.first_divergence);
+    println!("\n== cross-platform (simulated zoo, baseline numerics) ==");
+    println!("{:<22} {:>18}", "platform", "first-div-step");
+    let reference = Trainer::new(cfg, NumericsMode::Baseline(PlatformProfile::reference()))
+        .run()
+        .unwrap();
+    for p in PlatformProfile::zoo() {
+        let r = Trainer::new(cfg, NumericsMode::Baseline(p)).run().unwrap();
+        let cmp = compare_runs(
+            &reference.loss_curve,
+            &r.loss_curve,
+            &reference.param_hash,
+            &r.param_hash,
+        );
+        println!(
+            "{:<22} {:>18}",
+            p.name,
+            cmp.first_divergence.map(|s| s.to_string()).unwrap_or_else(|| "-".into())
+        );
+    }
+    if c.curves_identical {
+        0
+    } else {
+        1
+    }
+}
+
+fn cmd_transformer(args: &Args) -> i32 {
+    let steps = args.get_usize("steps", 100);
+    let seed = args.get_u64("seed", 7);
+    let cfg = TransformerConfig {
+        vocab: 28,
+        dim: args.get_usize("dim", 32),
+        heads: args.get_usize("heads", 4),
+        layers: args.get_usize("layers", 2),
+        context: args.get_usize("context", 16),
+        mlp_ratio: 2,
+    };
+    let corpus = SyntheticCorpus::generate(20_000, seed);
+    let mut model = CharTransformer::new(cfg, seed).expect("model");
+    let mut opt = Adam::new(args.get_f32("lr", 1e-2));
+    println!("params: {}", model.num_params());
+    for step in 0..steps {
+        let pos = (step * 97) % corpus.num_windows(cfg.context);
+        let ids: Vec<usize> = corpus.window(pos, cfg.context).to_vec();
+        let mut tape = repdl::autograd::Tape::new();
+        let mut binds = Vec::new();
+        let loss = model.loss_on_sequence(&mut tape, &ids, &mut binds).expect("fwd");
+        tape.backward(loss).expect("bwd");
+        let grads: Vec<Tensor> = binds.iter().map(|v| tape.grad(*v).unwrap()).collect();
+        opt.step(model.params_mut(), &grads).expect("opt");
+        if step % 10 == 0 || step + 1 == steps {
+            println!("step {step:>4}  loss {:.6}", tape.value(loss).data()[0]);
+        }
+    }
+    let params = model.params_mut();
+    let refs: Vec<&Tensor> = params.iter().map(|p| &**p).collect();
+    println!("param_hash {}", repdl::coordinator::hash_params(&refs));
+    0
+}
+
+fn cmd_serve(args: &Args) -> i32 {
+    let d = args.get_usize("dim", 256);
+    let n = args.get_usize("requests", 64);
+    let w = repdl::rng::uniform_tensor(&[d, 16], -0.3, 0.3, 5);
+    let srv = DeterministicServer::new(w, 16);
+    let queue: Vec<Tensor> = (0..n)
+        .map(|i| repdl::rng::uniform_tensor(&[d], -1.0, 1.0, 100 + i as u64))
+        .collect();
+    let p = PlatformProfile::zoo()[4];
+    let rep = srv
+        .batch_invariance_report(&queue, &[1, 4, 16, 64], &p)
+        .expect("report");
+    println!(
+        "requests={} repro_mismatches={} baseline_mismatches={}",
+        rep.requests, rep.repro_mismatches, rep.baseline_mismatches
+    );
+    if rep.repro_mismatches == 0 {
+        0
+    } else {
+        1
+    }
+}
+
+fn cmd_runtime(args: &Args) -> i32 {
+    let dir = args.get_str("artifacts", "artifacts");
+    let name = args.get_str("name", "matmul_repro");
+    let mut rt = match repdl::runtime::Runtime::new(&dir) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("{e}");
+            return 1;
+        }
+    };
+    println!("platform: {}", rt.platform());
+    let spec = match rt.specs.get(&name) {
+        Some(s) => s.clone(),
+        None => {
+            eprintln!("unknown artifact '{name}'");
+            return 2;
+        }
+    };
+    let inputs: Vec<Tensor> = spec
+        .inputs
+        .iter()
+        .enumerate()
+        .map(|(i, s)| repdl::rng::uniform_tensor(&s.dims, -1.0, 1.0, 31 + i as u64))
+        .collect();
+    match rt.run(&name, &inputs) {
+        Ok(outs) => {
+            for (i, o) in outs.iter().enumerate() {
+                println!("output {i}: shape {:?} hash {}", o.dims(), o.bit_hash_hex());
+            }
+            0
+        }
+        Err(e) => {
+            eprintln!("execute failed: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_selftest() -> i32 {
+    use repdl::rnum::{rexp, rlog, rsin, rtanh};
+    let checks: [(&str, bool); 4] = [
+        ("exp determinism", rexp(1.5).to_bits() == rexp(1.5).to_bits()),
+        ("log(exp(1)) ≈ 1", (rlog(rexp(1.0)) - 1.0).abs() < 1e-6),
+        ("sin(π/6) ≈ 0.5", (rsin(std::f32::consts::FRAC_PI_6) - 0.5).abs() < 1e-6),
+        ("tanh odd", rtanh(0.7) == -rtanh(-0.7)),
+    ];
+    let mut ok = true;
+    for (name, pass) in checks {
+        println!("{} {name}", if pass { "PASS" } else { "FAIL" });
+        ok &= pass;
+    }
+    if ok {
+        0
+    } else {
+        1
+    }
+}

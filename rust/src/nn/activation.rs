@@ -1,0 +1,64 @@
+//! Stateless activation modules (`nn::ReLU`, `nn::GELU`, `nn::Tanh`,
+//! `nn::Sigmoid`) — thin module wrappers over the tape ops.
+
+use super::Module;
+use crate::autograd::{Tape, Var};
+use crate::tensor::Tensor;
+use crate::Result;
+
+macro_rules! activation_module {
+    ($name:ident, $method:ident, $doc:literal) => {
+        #[doc = $doc]
+        #[derive(Default, Clone, Copy)]
+        pub struct $name;
+
+        impl Module for $name {
+            fn forward(&self, t: &mut Tape, x: Var, _binds: &mut Vec<Var>) -> Result<Var> {
+                Ok(t.$method(x))
+            }
+            fn params(&self) -> Vec<&Tensor> {
+                Vec::new()
+            }
+            fn params_mut(&mut self) -> Vec<&mut Tensor> {
+                Vec::new()
+            }
+        }
+    };
+}
+
+activation_module!(ReLU, relu, "Rectified linear unit.");
+activation_module!(GELU, gelu, "GELU (tanh graph — see `rnum::special`).");
+activation_module!(Tanh, tanh, "Correctly-rounded tanh.");
+activation_module!(Sigmoid, sigmoid, "Sigmoid (fixed graph).");
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn relu_module() {
+        let mut t = Tape::new();
+        let x = t.input(Tensor::from_vec(&[3], vec![-1., 0., 2.]).unwrap());
+        let mut b = Vec::new();
+        let y = ReLU.forward(&mut t, x, &mut b).unwrap();
+        assert_eq!(t.value(y).data(), &[0., 0., 2.]);
+        assert!(b.is_empty());
+        assert_eq!(ReLU.num_params(), 0);
+    }
+
+    #[test]
+    fn all_activations_run() {
+        let x = Tensor::from_vec(&[4], vec![-2., -0.5, 0.5, 2.]).unwrap();
+        for (name, m) in [
+            ("gelu", &GELU as &dyn Module),
+            ("tanh", &Tanh),
+            ("sigmoid", &Sigmoid),
+        ] {
+            let mut t = Tape::new();
+            let xv = t.input(x.clone());
+            let mut b = Vec::new();
+            let y = m.forward(&mut t, xv, &mut b).unwrap();
+            assert_eq!(t.value(y).dims(), &[4], "{name}");
+        }
+    }
+}

@@ -1,0 +1,291 @@
+//! `nn::MultiheadAttention` — causal scaled-dot-product attention as one
+//! fixed computation graph, with a hand-derived reproducible backward.
+//!
+//! Spec (per head, per batch): `S = QKᵀ·(1/√dh)` (unfused mul),
+//! row-softmax with the `nn::softmax` fixed graph (first-max rule,
+//! `rexp`, sequential sum), `O = P·V` with sequential-k dots. The causal
+//! mask zeroes *logically* (masked scores never enter the reduction —
+//! same skip rule as conv padding). Backward uses the standard closed
+//! forms, every reduction sequential.
+
+use super::Module;
+use crate::autograd::{Tape, Var};
+use crate::nn::Linear;
+use crate::rnum::{rexp, rrsqrt};
+use crate::tensor::Tensor;
+use crate::{Error, Result};
+
+/// Fused causal attention core on (BH, T, Dh) tensors.
+/// Exposed for tests; models use [`MultiheadAttention`].
+pub fn attention_core(t: &mut Tape, q: Var, k: Var, v: Var, causal: bool) -> Result<Var> {
+    let qd = t.value_ref(q).dims().to_vec();
+    if qd.len() != 3
+        || t.value_ref(k).dims() != qd.as_slice()
+        || t.value_ref(v).dims() != qd.as_slice()
+    {
+        return Err(Error::shape("attention_core: want equal (BH,T,Dh)"));
+    }
+    let (bh, tt, dh) = (qd[0], qd[1], qd[2]);
+    let scale = rrsqrt(dh as f32);
+    let qv = t.value(q);
+    let kv = t.value(k);
+    let vv = t.value(v);
+
+    // forward: probabilities saved for backward
+    let mut probs = Tensor::zeros(&[bh, tt, tt]);
+    let mut out = Tensor::zeros(&[bh, tt, dh]);
+    for b in 0..bh {
+        for i in 0..tt {
+            let jmax = if causal { i + 1 } else { tt };
+            // scores row (fixed unfused graph), running first-max
+            let mut row = vec![0.0f32; jmax];
+            let mut m = f32::NEG_INFINITY;
+            for (j, r) in row.iter_mut().enumerate() {
+                let mut acc = 0.0f32;
+                for d in 0..dh {
+                    acc += qv.data()[(b * tt + i) * dh + d] * kv.data()[(b * tt + j) * dh + d];
+                }
+                let s = acc * scale;
+                *r = s;
+                if s > m {
+                    m = s;
+                }
+            }
+            let mut denom = 0.0f32;
+            for r in row.iter_mut() {
+                *r = rexp(*r - m);
+                denom += *r;
+            }
+            for (j, r) in row.iter().enumerate() {
+                probs.data_mut()[(b * tt + i) * tt + j] = r / denom;
+            }
+            for d in 0..dh {
+                let mut acc = 0.0f32;
+                for j in 0..jmax {
+                    acc += probs.data()[(b * tt + i) * tt + j] * vv.data()[(b * tt + j) * dh + d];
+                }
+                out.data_mut()[(b * tt + i) * dh + d] = acc;
+            }
+        }
+    }
+
+    let rg = true;
+    let probs_saved = probs;
+    Ok(t.push_custom(
+        out,
+        vec![q, k, v],
+        Box::new(move |g, val| {
+            let qv = val(q.index());
+            let kv = val(k.index());
+            let vv = val(v.index());
+            let mut dq = Tensor::zeros(qv.dims());
+            let mut dk = Tensor::zeros(kv.dims());
+            let mut dv = Tensor::zeros(vv.dims());
+            for b in 0..bh {
+                for i in 0..tt {
+                    let jmax = if causal { i + 1 } else { tt };
+                    // dV[j] += P[i,j]·dO[i]; dP[i,j] = dO[i]·V[j]
+                    let mut dp = vec![0.0f32; jmax];
+                    for j in 0..jmax {
+                        let p = probs_saved.data()[(b * tt + i) * tt + j];
+                        let mut acc = 0.0f32;
+                        for d in 0..dh {
+                            let go = g.data()[(b * tt + i) * dh + d];
+                            dv.data_mut()[(b * tt + j) * dh + d] += p * go;
+                            acc += go * vv.data()[(b * tt + j) * dh + d];
+                        }
+                        dp[j] = acc;
+                    }
+                    // softmax backward: dS = P ∘ (dP − Σ_j dP·P)
+                    let mut dot = 0.0f32;
+                    for j in 0..jmax {
+                        dot += dp[j] * probs_saved.data()[(b * tt + i) * tt + j];
+                    }
+                    for j in 0..jmax {
+                        let p = probs_saved.data()[(b * tt + i) * tt + j];
+                        let ds = p * (dp[j] - dot) * scale;
+                        for d in 0..dh {
+                            dq.data_mut()[(b * tt + i) * dh + d] +=
+                                ds * kv.data()[(b * tt + j) * dh + d];
+                            dk.data_mut()[(b * tt + j) * dh + d] +=
+                                ds * qv.data()[(b * tt + i) * dh + d];
+                        }
+                    }
+                }
+            }
+            vec![dq, dk, dv]
+        }),
+        rg,
+    ))
+}
+
+/// Multi-head attention module (PyTorch naming).
+pub struct MultiheadAttention {
+    /// Fused QKV projection (3·D, D).
+    pub in_proj: Linear,
+    /// Output projection (D, D).
+    pub out_proj: Linear,
+    /// Head count.
+    pub num_heads: usize,
+    /// Causal masking.
+    pub causal: bool,
+}
+
+impl MultiheadAttention {
+    /// New module; `dim` must divide by `num_heads`.
+    pub fn new(dim: usize, num_heads: usize, causal: bool, seed: u64) -> Result<Self> {
+        if dim % num_heads != 0 {
+            return Err(Error::shape("MultiheadAttention: dim % heads != 0"));
+        }
+        Ok(MultiheadAttention {
+            in_proj: Linear::new(dim, 3 * dim, crate::rng::derive_seed(seed, 0)),
+            out_proj: Linear::new(dim, dim, crate::rng::derive_seed(seed, 1)),
+            num_heads,
+            causal,
+        })
+    }
+
+    /// Forward on a (T, D) sequence (single batch; callers loop batches
+    /// or fold batch into BH).
+    pub fn forward_seq(&self, t: &mut Tape, x: Var, binds: &mut Vec<Var>) -> Result<Var> {
+        let d = t.value_ref(x).dims().to_vec();
+        if d.len() != 2 {
+            return Err(Error::shape("MultiheadAttention: want (T, D)"));
+        }
+        let (tt, dim) = (d[0], d[1]);
+        let h = self.num_heads;
+        let dh = dim / h;
+        let qkv = self.in_proj.forward(t, x, binds)?; // (T, 3D)
+        // split into q,k,v: reshape (T, 3, H, Dh) → permute (3… ) — we
+        // slice via fixed reshuffles: (T,3D) → (T,3,H,Dh) → (3,H,T,Dh)
+        let r = t.reshape(qkv, &[tt, 3, h, dh])?;
+        let p = t.permute(r, &[1, 2, 0, 3])?; // (3, H, T, Dh)
+        let flat = t.reshape(p, &[3 * h * tt * dh])?;
+        let q = t.slice(flat, 0, h * tt * dh)?;
+        let k = t.slice(flat, h * tt * dh, h * tt * dh)?;
+        let v = t.slice(flat, 2 * h * tt * dh, h * tt * dh)?;
+        let q = t.reshape(q, &[h, tt, dh])?;
+        let k = t.reshape(k, &[h, tt, dh])?;
+        let v = t.reshape(v, &[h, tt, dh])?;
+        let o = attention_core(t, q, k, v, self.causal)?; // (H,T,Dh)
+        let o = t.permute(o, &[1, 0, 2])?; // (T,H,Dh)
+        let o = t.reshape(o, &[tt, dim])?;
+        self.out_proj.forward(t, o, binds)
+    }
+}
+
+impl Module for MultiheadAttention {
+    fn forward(&self, t: &mut Tape, x: Var, binds: &mut Vec<Var>) -> Result<Var> {
+        self.forward_seq(t, x, binds)
+    }
+
+    fn params(&self) -> Vec<&Tensor> {
+        let mut p = self.in_proj.params();
+        p.extend(self.out_proj.params());
+        p
+    }
+
+    fn params_mut(&mut self) -> Vec<&mut Tensor> {
+        let mut p = self.in_proj.params_mut();
+        p.extend(self.out_proj.params_mut());
+        p
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lcg(dims: &[usize], seed: u64) -> Tensor {
+        let n: usize = dims.iter().product();
+        let mut s = seed;
+        Tensor::from_vec(
+            dims,
+            (0..n)
+                .map(|_| {
+                    s = s.wrapping_mul(6364136223846793005).wrapping_add(31);
+                    (((s >> 40) as f32) / (1u64 << 24) as f32 - 0.5) * 0.6
+                })
+                .collect(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn attention_rows_are_convex_combinations() {
+        // with causal mask, output row 0 == V row 0 exactly
+        let q = lcg(&[1, 4, 8], 1);
+        let k = lcg(&[1, 4, 8], 2);
+        let v = lcg(&[1, 4, 8], 3);
+        let mut t = Tape::new();
+        let (qv, kv, vv) = (t.input(q), t.input(k), t.input(v.clone()));
+        let o = attention_core(&mut t, qv, kv, vv, true).unwrap();
+        let ov = t.value(o);
+        for d in 0..8 {
+            assert_eq!(ov.data()[d], v.data()[d], "row0 must equal V row0");
+        }
+    }
+
+    #[test]
+    fn attention_grads_match_finite_difference() {
+        let q0 = lcg(&[2, 3, 4], 4);
+        let k0 = lcg(&[2, 3, 4], 5);
+        let v0 = lcg(&[2, 3, 4], 6);
+        let run = |qq: &Tensor, kk: &Tensor, vvv: &Tensor| -> (f32, Tensor, Tensor, Tensor) {
+            let mut t = Tape::new();
+            let (q, k, v) = (t.param(qq.clone()), t.param(kk.clone()), t.param(vvv.clone()));
+            let o = attention_core(&mut t, q, k, v, true).unwrap();
+            let loss = t.mean_all(o);
+            t.backward(loss).unwrap();
+            (
+                t.value(loss).data()[0],
+                t.grad(q).unwrap(),
+                t.grad(k).unwrap(),
+                t.grad(v).unwrap(),
+            )
+        };
+        let (_, gq, gk, gv) = run(&q0, &k0, &v0);
+        let eps = 1e-3f32;
+        for (which, base, grad) in [(0, &q0, &gq), (1, &k0, &gk), (2, &v0, &gv)] {
+            for i in [0usize, 7, 23] {
+                let mut p = base.clone();
+                p.data_mut()[i] += eps;
+                let mut m = base.clone();
+                m.data_mut()[i] -= eps;
+                let (lp, lm) = match which {
+                    0 => (run(&p, &k0, &v0).0, run(&m, &k0, &v0).0),
+                    1 => (run(&q0, &p, &v0).0, run(&q0, &m, &v0).0),
+                    _ => (run(&q0, &k0, &p).0, run(&q0, &k0, &m).0),
+                };
+                let num = (lp - lm) / (2.0 * eps);
+                let ana = grad.data()[i];
+                assert!(
+                    (num - ana).abs() < 2e-2 * (1.0 + num.abs()),
+                    "which={which} i={i}: num {num} vs ana {ana}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn module_end_to_end_deterministic() {
+        let mha = MultiheadAttention::new(8, 2, true, 11).unwrap();
+        let x = lcg(&[5, 8], 7);
+        let run = || {
+            let mut t = Tape::new();
+            let xv = t.input(x.clone());
+            let mut b = Vec::new();
+            let y = mha.forward_seq(&mut t, xv, &mut b).unwrap();
+            let loss = t.mean_all(y);
+            t.backward(loss).unwrap();
+            let gs: Vec<Tensor> = b.iter().map(|v| t.grad(*v).unwrap()).collect();
+            (t.value(loss), gs)
+        };
+        let (l1, g1) = run();
+        let (l2, g2) = run();
+        assert!(l1.bit_eq(&l2));
+        for (a, b) in g1.iter().zip(g2.iter()) {
+            assert!(a.bit_eq(b));
+        }
+    }
+}

@@ -1,0 +1,267 @@
+//! Batch normalisation — the paper's flagship §3.2.3 example.
+//!
+//! PyTorch documents one formula, but backends implement (at least) three
+//! different computation orders that are equal over the reals and
+//! *different* in floating point. RepDL's rule: **each computation graph
+//! is a separate API**. The three variants here are exactly the paper's:
+//!
+//! * [`batch_norm`]          — `(x − μ) / √(σ² + ε) · w + b`
+//! * [`batch_norm_folded`]   — `(w / √(σ² + ε)) · (x − μ) + b`
+//! * [`batch_norm_affine_folded`] — `s·x + (b − μ·s)`, `s = w/√(σ²+ε)`
+//!
+//! Experiment E9 shows they differ bitwise from one another while each is
+//! individually reproducible.
+
+use crate::rnum::{rrsqrt, rsqrt_f32};
+use crate::tensor::Tensor;
+use crate::{Error, Result};
+
+fn check_bn(x: &Tensor, c: usize, name: &str) -> Result<()> {
+    let d = x.dims();
+    if d.len() != 4 || d[1] != c {
+        return Err(Error::shape(format!("{name}: want NCHW with C={c}, got {d:?}")));
+    }
+    Ok(())
+}
+
+/// Variant 1 (the documented formula): `(x − μ)/√(σ²+ε) · w + b`.
+/// All inputs per-channel; x is NCHW.
+pub fn batch_norm(
+    x: &Tensor,
+    mean: &[f32],
+    var: &[f32],
+    weight: &[f32],
+    bias: &[f32],
+    eps: f32,
+) -> Result<Tensor> {
+    check_bn(x, mean.len(), "batch_norm")?;
+    let d = x.dims();
+    let (n, c, hw) = (d[0], d[1], d[2] * d[3]);
+    let mut out = Tensor::zeros(d);
+    for ni in 0..n {
+        for ci in 0..c {
+            let denom = rsqrt_f32(var[ci] + eps);
+            for s in 0..hw {
+                let idx = (ni * c + ci) * hw + s;
+                let v = (x.data()[idx] - mean[ci]) / denom * weight[ci] + bias[ci];
+                out.data_mut()[idx] = v;
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Variant 2: fold the scale first — `(w/√(σ²+ε)) · (x − μ) + b`.
+pub fn batch_norm_folded(
+    x: &Tensor,
+    mean: &[f32],
+    var: &[f32],
+    weight: &[f32],
+    bias: &[f32],
+    eps: f32,
+) -> Result<Tensor> {
+    check_bn(x, mean.len(), "batch_norm_folded")?;
+    let d = x.dims();
+    let (n, c, hw) = (d[0], d[1], d[2] * d[3]);
+    let mut out = Tensor::zeros(d);
+    for ni in 0..n {
+        for ci in 0..c {
+            let s = weight[ci] * rrsqrt(var[ci] + eps);
+            for k in 0..hw {
+                let idx = (ni * c + ci) * hw + k;
+                out.data_mut()[idx] = s * (x.data()[idx] - mean[ci]) + bias[ci];
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Variant 3: fold scale *and* shift — `s·x + (b − μ·s)`.
+pub fn batch_norm_affine_folded(
+    x: &Tensor,
+    mean: &[f32],
+    var: &[f32],
+    weight: &[f32],
+    bias: &[f32],
+    eps: f32,
+) -> Result<Tensor> {
+    check_bn(x, mean.len(), "batch_norm_affine_folded")?;
+    let d = x.dims();
+    let (n, c, hw) = (d[0], d[1], d[2] * d[3]);
+    let mut out = Tensor::zeros(d);
+    for ni in 0..n {
+        for ci in 0..c {
+            let s = weight[ci] * rrsqrt(var[ci] + eps);
+            let shift = bias[ci] - mean[ci] * s;
+            for k in 0..hw {
+                let idx = (ni * c + ci) * hw + k;
+                out.data_mut()[idx] = s * x.data()[idx] + shift;
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// `nn::BatchNorm2d` module: batch statistics in training mode (with
+/// running-stat update, fixed sequential reductions), running statistics
+/// in eval mode. Uses the Variant-1 graph.
+pub struct BatchNorm2d {
+    /// γ (scale), per channel.
+    pub weight: Tensor,
+    /// β (shift), per channel.
+    pub bias: Tensor,
+    /// Running mean (eval mode).
+    pub running_mean: Tensor,
+    /// Running variance (eval mode).
+    pub running_var: Tensor,
+    /// Numerical epsilon.
+    pub eps: f32,
+    /// Running-stat momentum (PyTorch convention).
+    pub momentum: f32,
+}
+
+impl BatchNorm2d {
+    /// PyTorch defaults: γ=1, β=0, eps=1e−5, momentum=0.1.
+    pub fn new(c: usize) -> Self {
+        BatchNorm2d {
+            weight: Tensor::full(&[c], 1.0),
+            bias: Tensor::zeros(&[c]),
+            running_mean: Tensor::zeros(&[c]),
+            running_var: Tensor::full(&[c], 1.0),
+            eps: 1e-5,
+            momentum: 0.1,
+        }
+    }
+
+    /// Per-channel batch statistics: sequential sums over (N, H, W).
+    pub fn batch_stats(&self, x: &Tensor) -> Result<(Vec<f32>, Vec<f32>)> {
+        check_bn(x, self.weight.numel(), "batch_stats")?;
+        let d = x.dims();
+        let (n, c, hw) = (d[0], d[1], d[2] * d[3]);
+        let cnt = (n * hw) as f32;
+        let mut means = vec![0.0f32; c];
+        let mut vars = vec![0.0f32; c];
+        for ci in 0..c {
+            let mut acc = 0.0f32;
+            for ni in 0..n {
+                for s in 0..hw {
+                    acc += x.data()[(ni * c + ci) * hw + s];
+                }
+            }
+            let mu = acc / cnt;
+            means[ci] = mu;
+            let mut v2 = 0.0f32;
+            for ni in 0..n {
+                for s in 0..hw {
+                    let dd = x.data()[(ni * c + ci) * hw + s] - mu;
+                    v2 += dd * dd;
+                }
+            }
+            vars[ci] = v2 / cnt; // biased, like PyTorch's normalisation
+        }
+        Ok((means, vars))
+    }
+
+    /// Training-mode forward: normalise by batch stats and update the
+    /// running statistics (fixed graph: `r = (1−m)·r + m·stat`).
+    pub fn forward_train(&mut self, x: &Tensor) -> Result<Tensor> {
+        let (mean, var) = self.batch_stats(x)?;
+        let m = self.momentum;
+        for (i, (&mu, &v)) in mean.iter().zip(var.iter()).enumerate() {
+            let rm = self.running_mean.data()[i];
+            let rv = self.running_var.data()[i];
+            self.running_mean.data_mut()[i] = (1.0 - m) * rm + m * mu;
+            self.running_var.data_mut()[i] = (1.0 - m) * rv + m * v;
+        }
+        batch_norm(x, &mean, &var, self.weight.data(), self.bias.data(), self.eps)
+    }
+
+    /// Eval-mode forward: running statistics, Variant-1 graph.
+    pub fn forward_eval(&self, x: &Tensor) -> Result<Tensor> {
+        batch_norm(
+            x,
+            self.running_mean.data(),
+            self.running_var.data(),
+            self.weight.data(),
+            self.bias.data(),
+            self.eps,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lcg(dims: &[usize], seed: u64) -> Tensor {
+        let n: usize = dims.iter().product();
+        let mut s = seed;
+        Tensor::from_vec(
+            dims,
+            (0..n)
+                .map(|_| {
+                    s = s.wrapping_mul(6364136223846793005).wrapping_add(12345);
+                    (((s >> 40) as f32) / (1u64 << 24) as f32 - 0.5) * 4.0
+                })
+                .collect(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn three_graphs_agree_numerically_but_not_bitwise() {
+        let x = lcg(&[2, 3, 4, 4], 1);
+        let mean = vec![0.1, -0.2, 0.3];
+        let var = vec![1.1, 0.9, 1.3];
+        let w = vec![1.2, 0.8, 1.0];
+        let b = vec![0.01, -0.02, 0.3];
+        let v1 = batch_norm(&x, &mean, &var, &w, &b, 1e-5).unwrap();
+        let v2 = batch_norm_folded(&x, &mean, &var, &w, &b, 1e-5).unwrap();
+        let v3 = batch_norm_affine_folded(&x, &mean, &var, &w, &b, 1e-5).unwrap();
+        for i in 0..v1.numel() {
+            assert!((v1.data()[i] - v2.data()[i]).abs() < 1e-5);
+            assert!((v1.data()[i] - v3.data()[i]).abs() < 1e-5);
+        }
+        // the paper's point: equal in ℝ, different in f32
+        assert!(!v1.bit_eq(&v2) || !v1.bit_eq(&v3) || !v2.bit_eq(&v3));
+        // and each is individually deterministic
+        assert!(v1.bit_eq(&batch_norm(&x, &mean, &var, &w, &b, 1e-5).unwrap()));
+        assert!(v2.bit_eq(&batch_norm_folded(&x, &mean, &var, &w, &b, 1e-5).unwrap()));
+        assert!(v3.bit_eq(&batch_norm_affine_folded(&x, &mean, &var, &w, &b, 1e-5).unwrap()));
+    }
+
+    #[test]
+    fn normalises_to_zero_mean_unit_var() {
+        let x = lcg(&[4, 2, 8, 8], 2);
+        let mut bn = BatchNorm2d::new(2);
+        let y = bn.forward_train(&x).unwrap();
+        let (mean, var) = bn.batch_stats(&y).unwrap();
+        for c in 0..2 {
+            assert!(mean[c].abs() < 1e-4, "mean[{c}]={}", mean[c]);
+            assert!((var[c] - 1.0).abs() < 1e-3, "var[{c}]={}", var[c]);
+        }
+    }
+
+    #[test]
+    fn running_stats_update() {
+        let x = lcg(&[2, 2, 4, 4], 3);
+        let mut bn = BatchNorm2d::new(2);
+        let (mean, var) = bn.batch_stats(&x).unwrap();
+        bn.forward_train(&x).unwrap();
+        for c in 0..2 {
+            let want_m = 0.9 * 0.0 + 0.1 * mean[c];
+            let want_v = 0.9 * 1.0 + 0.1 * var[c];
+            assert!((bn.running_mean.data()[c] - want_m).abs() < 1e-6);
+            assert!((bn.running_var.data()[c] - want_v).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn eval_mode_is_pure() {
+        let x = lcg(&[1, 2, 3, 3], 4);
+        let bn = BatchNorm2d::new(2);
+        let a = bn.forward_eval(&x).unwrap();
+        let b = bn.forward_eval(&x).unwrap();
+        assert!(a.bit_eq(&b));
+    }
+}

@@ -1,0 +1,82 @@
+//! `nn::Conv2d` — module wrapper over the reproducible convolution.
+
+use super::Module;
+use crate::autograd::{Tape, Var};
+use crate::rng::{derive_seed, kaiming_uniform, uniform_tensor};
+use crate::rnum::rrsqrt;
+use crate::tensor::{Conv2dParams, Tensor};
+use crate::Result;
+
+/// 2-D convolution layer (OIHW weights, NCHW activations).
+pub struct Conv2d {
+    /// Weight (O, C, KH, KW).
+    pub weight: Tensor,
+    /// Bias (O,).
+    pub bias: Tensor,
+    /// Stride/padding.
+    pub params: Conv2dParams,
+}
+
+impl Conv2d {
+    /// PyTorch-default init.
+    pub fn new(
+        in_ch: usize,
+        out_ch: usize,
+        kernel: usize,
+        params: Conv2dParams,
+        seed: u64,
+    ) -> Self {
+        let weight = kaiming_uniform(&[out_ch, in_ch, kernel, kernel], derive_seed(seed, 0));
+        let fan_in = (in_ch * kernel * kernel) as f32;
+        let bound = rrsqrt(fan_in);
+        let bias = uniform_tensor(&[out_ch], -bound, bound, derive_seed(seed, 1));
+        Conv2d { weight, bias, params }
+    }
+}
+
+impl Module for Conv2d {
+    fn forward(&self, t: &mut Tape, x: Var, binds: &mut Vec<Var>) -> Result<Var> {
+        let w = t.param(self.weight.clone());
+        let b = t.param(self.bias.clone());
+        binds.push(w);
+        binds.push(b);
+        t.conv2d(x, w, Some(b), self.params)
+    }
+
+    fn params(&self) -> Vec<&Tensor> {
+        vec![&self.weight, &self.bias]
+    }
+
+    fn params_mut(&mut self) -> Vec<&mut Tensor> {
+        vec![&mut self.weight, &mut self.bias]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forward_shape_and_grads() {
+        let c = Conv2d::new(3, 8, 3, Conv2dParams { stride: 1, padding: 1 }, 7);
+        assert_eq!(c.weight.dims(), &[8, 3, 3, 3]);
+        let x = Tensor::full(&[2, 3, 6, 6], 0.1);
+        let mut t = Tape::new();
+        let xv = t.input(x);
+        let mut binds = Vec::new();
+        let y = c.forward(&mut t, xv, &mut binds).unwrap();
+        assert_eq!(t.value_ref(y).dims(), &[2, 8, 6, 6]);
+        let loss = t.mean_all(y);
+        t.backward(loss).unwrap();
+        assert_eq!(t.grad(binds[0]).unwrap().dims(), &[8, 3, 3, 3]);
+        assert_eq!(t.grad(binds[1]).unwrap().dims(), &[8]);
+    }
+
+    #[test]
+    fn init_reproducible() {
+        let a = Conv2d::new(2, 4, 3, Conv2dParams::default(), 5);
+        let b = Conv2d::new(2, 4, 3, Conv2dParams::default(), 5);
+        assert!(a.weight.bit_eq(&b.weight));
+        assert!(a.bias.bit_eq(&b.bias));
+    }
+}

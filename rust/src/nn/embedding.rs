@@ -1,0 +1,56 @@
+//! `nn::Embedding` — token-id lookup with deterministic scatter-add
+//! backward (the paper's §2.2.2 atomic-scatter hazard, fixed).
+
+use crate::autograd::{Tape, Var};
+use crate::rng::normal_tensor;
+use crate::tensor::Tensor;
+use crate::Result;
+
+/// Embedding table (V, D).
+pub struct Embedding {
+    /// The table parameter.
+    pub weight: Tensor,
+}
+
+impl Embedding {
+    /// N(0, 1) init scaled like PyTorch's default (std=1) — callers
+    /// usually rescale; transformer uses std=0.02.
+    pub fn new(vocab: usize, dim: usize, std: f32, seed: u64) -> Self {
+        Embedding { weight: normal_tensor(&[vocab, dim], 0.0, std, seed) }
+    }
+
+    /// Look up `ids`, registering the table on the tape.
+    pub fn forward(&self, t: &mut Tape, ids: &[usize], binds: &mut Vec<Var>) -> Result<Var> {
+        let w = t.param(self.weight.clone());
+        binds.push(w);
+        t.embedding(w, ids)
+    }
+
+    /// Parameters (fixed order — just the table).
+    pub fn params(&self) -> Vec<&Tensor> {
+        vec![&self.weight]
+    }
+
+    /// Mutable parameters.
+    pub fn params_mut(&mut self) -> Vec<&mut Tensor> {
+        vec![&mut self.weight]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lookup_rows() {
+        let e = Embedding::new(5, 3, 0.02, 1);
+        let mut t = Tape::new();
+        let mut b = Vec::new();
+        let y = e.forward(&mut t, &[2, 2, 4], &mut b).unwrap();
+        let v = t.value(y);
+        assert_eq!(v.dims(), &[3, 3]);
+        assert_eq!(v.row(0), &e.weight.data()[6..9]);
+        assert_eq!(v.row(0), v.row(1));
+        assert!(e.forward(&mut t, &[9], &mut b).is_err());
+    }
+}

@@ -1,0 +1,83 @@
+//! `nn::LayerNorm` — normalisation over the last axis, fixed two-pass
+//! graph with `rrsqrt` (see `Tape::layer_norm` for the spec).
+
+use super::Module;
+use crate::autograd::{Tape, Var};
+use crate::tensor::Tensor;
+use crate::Result;
+
+/// Layer normalisation with affine parameters.
+pub struct LayerNorm {
+    /// γ (scale).
+    pub weight: Tensor,
+    /// β (shift).
+    pub bias: Tensor,
+    /// Numerical epsilon.
+    pub eps: f32,
+}
+
+impl LayerNorm {
+    /// PyTorch defaults: γ=1, β=0, eps=1e−5.
+    pub fn new(dim: usize) -> Self {
+        LayerNorm {
+            weight: Tensor::full(&[dim], 1.0),
+            bias: Tensor::zeros(&[dim]),
+            eps: 1e-5,
+        }
+    }
+}
+
+impl Module for LayerNorm {
+    fn forward(&self, t: &mut Tape, x: Var, binds: &mut Vec<Var>) -> Result<Var> {
+        let g = t.param(self.weight.clone());
+        let b = t.param(self.bias.clone());
+        binds.push(g);
+        binds.push(b);
+        t.layer_norm(x, g, b, self.eps)
+    }
+
+    fn params(&self) -> Vec<&Tensor> {
+        vec![&self.weight, &self.bias]
+    }
+
+    fn params_mut(&mut self) -> Vec<&mut Tensor> {
+        vec![&mut self.weight, &mut self.bias]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn normalises_rows() {
+        let ln = LayerNorm::new(4);
+        let x = Tensor::from_vec(&[2, 4], vec![1., 2., 3., 4., -1., 0., 1., 2.]).unwrap();
+        let mut t = Tape::new();
+        let xv = t.input(x);
+        let mut binds = Vec::new();
+        let y = ln.forward(&mut t, xv, &mut binds).unwrap();
+        let v = t.value(y);
+        for r in 0..2 {
+            let row = v.row(r);
+            let mean: f32 = row.iter().sum::<f32>() / 4.0;
+            let var: f32 = row.iter().map(|&x| (x - mean) * (x - mean)).sum::<f32>() / 4.0;
+            assert!(mean.abs() < 1e-5);
+            assert!((var - 1.0).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn deterministic_forward() {
+        let ln = LayerNorm::new(8);
+        let x = Tensor::from_vec(&[3, 8], (0..24).map(|i| (i as f32).sin()).collect()).unwrap();
+        let run = || {
+            let mut t = Tape::new();
+            let xv = t.input(x.clone());
+            let mut b = Vec::new();
+            let y = ln.forward(&mut t, xv, &mut b).unwrap();
+            t.value(y)
+        };
+        assert!(run().bit_eq(&run()));
+    }
+}

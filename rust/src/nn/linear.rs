@@ -1,0 +1,97 @@
+//! `nn::Linear` — y = x Wᵀ + b, PyTorch parameter layout (out, in).
+//!
+//! The GEMM is the RepDL sequential-k spec; the transpose is a layout
+//! operation only (bit-neutral, see `tensor::matmul`).
+
+use super::Module;
+use crate::autograd::{Tape, Var};
+use crate::rng::{derive_seed, kaiming_uniform, uniform_tensor};
+use crate::rnum::rrsqrt;
+use crate::tensor::Tensor;
+use crate::Result;
+
+/// Fully-connected layer.
+pub struct Linear {
+    /// Weight, shape (out_features, in_features) — PyTorch layout.
+    pub weight: Tensor,
+    /// Bias, shape (out_features,).
+    pub bias: Tensor,
+}
+
+impl Linear {
+    /// PyTorch-default init: Kaiming-uniform weight, U(−1/√in, 1/√in) bias.
+    pub fn new(in_features: usize, out_features: usize, seed: u64) -> Self {
+        let weight = kaiming_uniform(&[out_features, in_features], derive_seed(seed, 0));
+        let bound = rrsqrt(in_features as f32);
+        let bias = uniform_tensor(&[out_features], -bound, bound, derive_seed(seed, 1));
+        Linear { weight, bias }
+    }
+}
+
+impl Module for Linear {
+    fn forward(&self, t: &mut Tape, x: Var, binds: &mut Vec<Var>) -> Result<Var> {
+        let w = t.param(self.weight.clone());
+        let b = t.param(self.bias.clone());
+        binds.push(w);
+        binds.push(b);
+        let wt = t.permute(w, &[1, 0])?; // (in, out)
+        let y = t.matmul(x, wt)?;
+        t.add_bias(y, b)
+    }
+
+    fn params(&self) -> Vec<&Tensor> {
+        vec![&self.weight, &self.bias]
+    }
+
+    fn params_mut(&mut self) -> Vec<&mut Tensor> {
+        vec![&mut self.weight, &mut self.bias]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_determinism() {
+        let l = Linear::new(8, 4, 42);
+        assert_eq!(l.weight.dims(), &[4, 8]);
+        assert_eq!(l.bias.dims(), &[4]);
+        assert_eq!(l.num_params(), 36);
+        // same seed → same init bits
+        let l2 = Linear::new(8, 4, 42);
+        assert!(l.weight.bit_eq(&l2.weight));
+        assert!(l.bias.bit_eq(&l2.bias));
+    }
+
+    #[test]
+    fn forward_matches_manual_gemm() {
+        let l = Linear::new(3, 2, 1);
+        let x = Tensor::from_vec(&[2, 3], vec![1., 2., 3., -1., 0., 1.]).unwrap();
+        let mut t = Tape::new();
+        let xv = t.input(x.clone());
+        let mut binds = Vec::new();
+        let y = l.forward(&mut t, xv, &mut binds).unwrap();
+        assert_eq!(binds.len(), 2);
+        let got = t.value(y);
+        // manual: x · Wᵀ + b with the same kernels
+        let wt = l.weight.transpose2d().unwrap();
+        let want = crate::tensor::matmul(&x, &wt).unwrap().add_t(&l.bias).unwrap();
+        assert!(got.bit_eq(&want));
+    }
+
+    #[test]
+    fn gradient_flows_to_params() {
+        let l = Linear::new(4, 3, 9);
+        let x = Tensor::full(&[2, 4], 0.5);
+        let mut t = Tape::new();
+        let xv = t.input(x);
+        let mut binds = Vec::new();
+        let y = l.forward(&mut t, xv, &mut binds).unwrap();
+        let loss = t.mean_all(y);
+        t.backward(loss).unwrap();
+        assert!(t.grad(binds[0]).is_some());
+        assert_eq!(t.grad(binds[0]).unwrap().dims(), &[3, 4]);
+        assert_eq!(t.grad(binds[1]).unwrap().dims(), &[3]);
+    }
+}

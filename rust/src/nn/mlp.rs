@@ -1,0 +1,109 @@
+//! A simple MLP (`Linear → activation → … → Linear`) — the quickstart
+//! model and the E1/E2 training workload.
+
+use super::{Linear, Module};
+use crate::autograd::{Tape, Var};
+use crate::rng::derive_seed;
+use crate::tensor::Tensor;
+use crate::Result;
+
+/// Activation choice for [`Mlp`].
+#[derive(Clone, Copy, Debug)]
+pub enum Act {
+    /// ReLU.
+    Relu,
+    /// GELU (tanh graph).
+    Gelu,
+    /// tanh.
+    Tanh,
+}
+
+/// Multi-layer perceptron.
+pub struct Mlp {
+    /// The linear layers.
+    pub layers: Vec<Linear>,
+    /// Activation between layers.
+    pub act: Act,
+}
+
+impl Mlp {
+    /// Build from layer widths, e.g. `[784, 256, 10]`.
+    pub fn new(widths: &[usize], act: Act, seed: u64) -> Self {
+        let layers = widths
+            .windows(2)
+            .enumerate()
+            .map(|(i, w)| Linear::new(w[0], w[1], derive_seed(seed, i as u64)))
+            .collect();
+        Mlp { layers, act }
+    }
+}
+
+impl Module for Mlp {
+    fn forward(&self, t: &mut Tape, x: Var, binds: &mut Vec<Var>) -> Result<Var> {
+        let mut h = x;
+        for (i, l) in self.layers.iter().enumerate() {
+            h = l.forward(t, h, binds)?;
+            if i + 1 < self.layers.len() {
+                h = match self.act {
+                    Act::Relu => t.relu(h),
+                    Act::Gelu => t.gelu(h),
+                    Act::Tanh => t.tanh(h),
+                };
+            }
+        }
+        Ok(h)
+    }
+
+    fn params(&self) -> Vec<&Tensor> {
+        self.layers.iter().flat_map(|l| l.params()).collect()
+    }
+
+    fn params_mut(&mut self) -> Vec<&mut Tensor> {
+        self.layers.iter_mut().flat_map(|l| l.params_mut()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builds_and_runs() {
+        let m = Mlp::new(&[8, 16, 4], Act::Relu, 3);
+        assert_eq!(m.layers.len(), 2);
+        assert_eq!(m.num_params(), 8 * 16 + 16 + 16 * 4 + 4);
+        let x = Tensor::full(&[2, 8], 0.3);
+        let mut t = Tape::new();
+        let xv = t.input(x);
+        let mut b = Vec::new();
+        let y = m.forward(&mut t, xv, &mut b).unwrap();
+        assert_eq!(t.value_ref(y).dims(), &[2, 4]);
+        assert_eq!(b.len(), 4);
+    }
+
+    #[test]
+    fn training_step_reduces_loss() {
+        let mut m = Mlp::new(&[4, 16, 2], Act::Tanh, 5);
+        let x = Tensor::from_vec(&[4, 4], (0..16).map(|i| (i as f32 * 0.31).sin()).collect())
+            .unwrap();
+        let targets = vec![0usize, 1, 0, 1];
+        let mut last = f32::INFINITY;
+        for _ in 0..30 {
+            let mut t = Tape::new();
+            let xv = t.input(x.clone());
+            let mut binds = Vec::new();
+            let logits = m.forward(&mut t, xv, &mut binds).unwrap();
+            let loss = t.softmax_cross_entropy(logits, &targets).unwrap();
+            t.backward(loss).unwrap();
+            // plain SGD
+            for (p, v) in m.params_mut().into_iter().zip(binds.iter()) {
+                let g = t.grad(*v).unwrap();
+                for (pv, gv) in p.data_mut().iter_mut().zip(g.data().iter()) {
+                    *pv -= 0.5 * gv;
+                }
+            }
+            last = t.value(loss).data()[0];
+        }
+        assert!(last < 0.2, "loss did not drop: {last}");
+    }
+}

@@ -1,0 +1,50 @@
+//! PyTorch-compatible neural-network modules (paper §3, "APIs inherited
+//! from PyTorch ... keeping their names and parameter definitions
+//! intact"): `Linear`, `Conv2d`, `BatchNorm2d`, `LayerNorm`, `Embedding`,
+//! `MultiheadAttention`, activations, losses — every one a **fixed
+//! computation graph** over the reproducible `tensor`/`rnum` kernels.
+//!
+//! Binding contract: a module registers its parameters on the tape in the
+//! same fixed order that [`Module::params`] / [`Module::params_mut`]
+//! enumerate them, appending the tape `Var`s to the `binds` list. The
+//! trainer relies on this order to route gradients back — one more fixed
+//! order in the spirit of the paper.
+
+pub mod activation;
+pub mod attention;
+pub mod batchnorm;
+pub mod conv2d;
+pub mod embedding;
+pub mod layernorm;
+pub mod linear;
+pub mod mlp;
+pub mod softmax;
+pub mod transformer;
+
+pub use attention::MultiheadAttention;
+pub use batchnorm::{batch_norm, batch_norm_affine_folded, batch_norm_folded, BatchNorm2d};
+pub use conv2d::Conv2d;
+pub use embedding::Embedding;
+pub use layernorm::LayerNorm;
+pub use linear::Linear;
+pub use mlp::Mlp;
+pub use softmax::{log_softmax_rows, softmax_rows};
+pub use transformer::{CharTransformer, TransformerBlock, TransformerConfig};
+
+use crate::autograd::{Tape, Var};
+use crate::tensor::Tensor;
+use crate::Result;
+
+/// A layer with tape-forward and enumerable parameters.
+pub trait Module {
+    /// Forward pass; must register parameters in `params()` order.
+    fn forward(&self, t: &mut Tape, x: Var, binds: &mut Vec<Var>) -> Result<Var>;
+    /// Parameters in fixed order.
+    fn params(&self) -> Vec<&Tensor>;
+    /// Mutable parameters in the same fixed order.
+    fn params_mut(&mut self) -> Vec<&mut Tensor>;
+    /// Total parameter count.
+    fn num_params(&self) -> usize {
+        self.params().iter().map(|p| p.numel()).sum()
+    }
+}

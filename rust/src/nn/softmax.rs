@@ -1,0 +1,111 @@
+//! Softmax as a fixed computation graph (paper §3.2.3).
+//!
+//! The graph is pinned: row max (first-max rule) → subtract → `rexp`
+//! (correctly rounded) → **sequential** sum → divide. A log-softmax with
+//! its own graph gets its own name.
+
+use crate::rnum::{rexp, rlog};
+use crate::tensor::Tensor;
+use crate::{Error, Result};
+
+/// Row-wise softmax over the last axis of a 2-D tensor.
+pub fn softmax_rows(x: &Tensor) -> Result<Tensor> {
+    let d = x.dims();
+    if d.len() != 2 {
+        return Err(Error::shape("softmax_rows: want rank 2"));
+    }
+    let (rows, c) = (d[0], d[1]);
+    let mut out = Tensor::zeros(d);
+    for r in 0..rows {
+        let w = x.row(r);
+        let mut m = w[0];
+        for &v in &w[1..] {
+            if v > m {
+                m = v;
+            }
+        }
+        let mut denom = 0.0f32;
+        for j in 0..c {
+            let e = rexp(w[j] - m);
+            out.data_mut()[r * c + j] = e;
+            denom += e;
+        }
+        for j in 0..c {
+            out.data_mut()[r * c + j] /= denom;
+        }
+    }
+    Ok(out)
+}
+
+/// Row-wise log-softmax: `x − m − rlog(Σ rexp(x − m))` (a *different*
+/// fixed graph from `log(softmax(x))`, hence its own API).
+pub fn log_softmax_rows(x: &Tensor) -> Result<Tensor> {
+    let d = x.dims();
+    if d.len() != 2 {
+        return Err(Error::shape("log_softmax_rows: want rank 2"));
+    }
+    let (rows, c) = (d[0], d[1]);
+    let mut out = Tensor::zeros(d);
+    for r in 0..rows {
+        let w = x.row(r);
+        let mut m = w[0];
+        for &v in &w[1..] {
+            if v > m {
+                m = v;
+            }
+        }
+        let mut denom = 0.0f32;
+        for j in 0..c {
+            denom += rexp(w[j] - m);
+        }
+        let lse = rlog(denom);
+        for j in 0..c {
+            out.data_mut()[r * c + j] = w[j] - m - lse;
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rows_sum_to_one() {
+        let x = Tensor::from_vec(&[2, 3], vec![1., 2., 3., -1., 0., 1.]).unwrap();
+        let s = softmax_rows(&x).unwrap();
+        for r in 0..2 {
+            let sum: f32 = s.row(r).iter().sum();
+            assert!((sum - 1.0).abs() < 1e-6);
+        }
+        // monotone with logits
+        assert!(s.at(&[0, 2]) > s.at(&[0, 1]));
+    }
+
+    #[test]
+    fn shift_invariance_exact_for_equal_rows() {
+        // softmax(x) == softmax(x + c) exactly when x − max is unchanged —
+        // here both rows reduce to the same shifted values, so bits match.
+        let a = Tensor::from_vec(&[1, 3], vec![1., 2., 3.]).unwrap();
+        let b = Tensor::from_vec(&[1, 3], vec![11., 12., 13.]).unwrap();
+        let (sa, sb) = (softmax_rows(&a).unwrap(), softmax_rows(&b).unwrap());
+        assert!(sa.bit_eq(&sb));
+    }
+
+    #[test]
+    fn log_softmax_close_to_log_of_softmax_but_distinct_graph() {
+        let x = Tensor::from_vec(&[1, 4], vec![0.3, -1.2, 2.0, 0.0]).unwrap();
+        let ls = log_softmax_rows(&x).unwrap();
+        let s = softmax_rows(&x).unwrap();
+        for j in 0..4 {
+            assert!((ls.data()[j] - rlog(s.data()[j])).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let x = Tensor::from_vec(&[1, 5], vec![0.1, 0.2, 0.3, 0.4, 0.5]).unwrap();
+        assert!(softmax_rows(&x).unwrap().bit_eq(&softmax_rows(&x).unwrap()));
+        assert!(log_softmax_rows(&x).unwrap().bit_eq(&log_softmax_rows(&x).unwrap()));
+    }
+}

@@ -1,0 +1,238 @@
+//! A small GPT-style character transformer — the end-to-end training
+//! workload (experiment E8). Pre-norm blocks, causal attention, GELU MLP,
+//! learned positional embeddings; every sub-op is a RepDL fixed graph.
+
+use super::{Embedding, LayerNorm, Linear, Module, MultiheadAttention};
+use crate::autograd::{Tape, Var};
+use crate::rng::derive_seed;
+use crate::tensor::Tensor;
+use crate::Result;
+
+/// Transformer hyper-parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct TransformerConfig {
+    /// Vocabulary size.
+    pub vocab: usize,
+    /// Model width.
+    pub dim: usize,
+    /// Head count.
+    pub heads: usize,
+    /// Block count.
+    pub layers: usize,
+    /// Context length.
+    pub context: usize,
+    /// MLP expansion factor.
+    pub mlp_ratio: usize,
+}
+
+impl Default for TransformerConfig {
+    fn default() -> Self {
+        TransformerConfig { vocab: 64, dim: 64, heads: 4, layers: 2, context: 32, mlp_ratio: 4 }
+    }
+}
+
+/// Pre-norm transformer block.
+pub struct TransformerBlock {
+    /// First LayerNorm.
+    pub ln1: LayerNorm,
+    /// Attention.
+    pub attn: MultiheadAttention,
+    /// Second LayerNorm.
+    pub ln2: LayerNorm,
+    /// MLP up-projection.
+    pub fc1: Linear,
+    /// MLP down-projection.
+    pub fc2: Linear,
+}
+
+impl TransformerBlock {
+    /// New block.
+    pub fn new(dim: usize, heads: usize, mlp_ratio: usize, seed: u64) -> Result<Self> {
+        Ok(TransformerBlock {
+            ln1: LayerNorm::new(dim),
+            attn: MultiheadAttention::new(dim, heads, true, derive_seed(seed, 0))?,
+            ln2: LayerNorm::new(dim),
+            fc1: Linear::new(dim, dim * mlp_ratio, derive_seed(seed, 1)),
+            fc2: Linear::new(dim * mlp_ratio, dim, derive_seed(seed, 2)),
+        })
+    }
+}
+
+impl Module for TransformerBlock {
+    fn forward(&self, t: &mut Tape, x: Var, binds: &mut Vec<Var>) -> Result<Var> {
+        let h = self.ln1.forward(t, x, binds)?;
+        let h = self.attn.forward_seq(t, h, binds)?;
+        let x = t.add(x, h)?; // residual
+        let h = self.ln2.forward(t, x, binds)?;
+        let h = self.fc1.forward(t, h, binds)?;
+        let h = t.gelu(h);
+        let h = self.fc2.forward(t, h, binds)?;
+        t.add(x, h) // residual
+    }
+
+    fn params(&self) -> Vec<&Tensor> {
+        let mut p = self.ln1.params();
+        p.extend(self.attn.params());
+        p.extend(self.ln2.params());
+        p.extend(self.fc1.params());
+        p.extend(self.fc2.params());
+        p
+    }
+
+    fn params_mut(&mut self) -> Vec<&mut Tensor> {
+        let mut p = self.ln1.params_mut();
+        p.extend(self.attn.params_mut());
+        p.extend(self.ln2.params_mut());
+        p.extend(self.fc1.params_mut());
+        p.extend(self.fc2.params_mut());
+        p
+    }
+}
+
+/// GPT-style char LM.
+pub struct CharTransformer {
+    /// Config.
+    pub cfg: TransformerConfig,
+    /// Token embedding.
+    pub tok_emb: Embedding,
+    /// Positional embedding (context, dim) as a raw parameter.
+    pub pos_emb: Tensor,
+    /// Blocks.
+    pub blocks: Vec<TransformerBlock>,
+    /// Final LayerNorm.
+    pub ln_f: LayerNorm,
+    /// LM head (vocab logits).
+    pub head: Linear,
+}
+
+impl CharTransformer {
+    /// Build with reproducible init.
+    pub fn new(cfg: TransformerConfig, seed: u64) -> Result<Self> {
+        let blocks = (0..cfg.layers)
+            .map(|i| TransformerBlock::new(cfg.dim, cfg.heads, cfg.mlp_ratio, derive_seed(seed, 10 + i as u64)))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(CharTransformer {
+            cfg,
+            tok_emb: Embedding::new(cfg.vocab, cfg.dim, 0.02, derive_seed(seed, 0)),
+            pos_emb: crate::rng::normal_tensor(&[cfg.context, cfg.dim], 0.0, 0.02, derive_seed(seed, 1)),
+            blocks,
+            ln_f: LayerNorm::new(cfg.dim),
+            head: Linear::new(cfg.dim, cfg.vocab, derive_seed(seed, 2)),
+        })
+    }
+
+    /// Forward one sequence of token ids (≤ context) to (T, vocab) logits.
+    pub fn forward_logits(&self, t: &mut Tape, ids: &[usize], binds: &mut Vec<Var>) -> Result<Var> {
+        let tt = ids.len();
+        let e = self.tok_emb.forward(t, ids, binds)?; // (T, D)
+        let pe = t.param(self.pos_emb.clone());
+        binds.push(pe);
+        let pe_t = t.slice_rows(pe, 0, tt)?;
+        let mut h = t.add(e, pe_t)?;
+        for b in &self.blocks {
+            h = b.forward(t, h, binds)?;
+        }
+        let h = self.ln_f.forward(t, h, binds)?;
+        self.head.forward(t, h, binds)
+    }
+
+    /// Next-token cross-entropy over one sequence:
+    /// inputs ids[0..T−1], targets ids[1..T].
+    pub fn loss_on_sequence(&self, t: &mut Tape, ids: &[usize], binds: &mut Vec<Var>) -> Result<Var> {
+        let inputs = &ids[..ids.len() - 1];
+        let targets = &ids[1..];
+        let logits = self.forward_logits(t, inputs, binds)?;
+        t.softmax_cross_entropy(logits, targets)
+    }
+
+    /// All parameters in fixed traversal order (must match forward
+    /// registration order — asserted in tests).
+    pub fn params_mut(&mut self) -> Vec<&mut Tensor> {
+        let mut p = self.tok_emb.params_mut();
+        p.push(&mut self.pos_emb);
+        for b in &mut self.blocks {
+            p.extend(b.params_mut());
+        }
+        p.extend(self.ln_f.params_mut());
+        p.extend(self.head.params_mut());
+        p
+    }
+
+    /// Parameter count.
+    pub fn num_params(&self) -> usize {
+        let mut n = self.tok_emb.weight.numel() + self.pos_emb.numel();
+        for b in &self.blocks {
+            n += b.num_params();
+        }
+        n += self.ln_f.num_params() + self.head.num_params();
+        n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builds_and_counts_params() {
+        let cfg = TransformerConfig { vocab: 20, dim: 16, heads: 2, layers: 2, context: 8, mlp_ratio: 2 };
+        let m = CharTransformer::new(cfg, 1).unwrap();
+        assert!(m.num_params() > 4000, "n={}", m.num_params());
+        // init reproducible
+        let m2 = CharTransformer::new(cfg, 1).unwrap();
+        assert!(m.pos_emb.bit_eq(&m2.pos_emb));
+        assert!(m.tok_emb.weight.bit_eq(&m2.tok_emb.weight));
+    }
+
+    #[test]
+    fn forward_and_loss_deterministic() {
+        let cfg = TransformerConfig { vocab: 12, dim: 8, heads: 2, layers: 1, context: 6, mlp_ratio: 2 };
+        let m = CharTransformer::new(cfg, 2).unwrap();
+        let ids = [1usize, 4, 2, 9, 3, 7];
+        let run = || {
+            let mut t = Tape::new();
+            let mut b = Vec::new();
+            let loss = m.loss_on_sequence(&mut t, &ids, &mut b).unwrap();
+            t.backward(loss).unwrap();
+            let gs: Vec<Tensor> = b.iter().map(|v| t.grad(*v).unwrap()).collect();
+            (t.value(loss), gs, b.len())
+        };
+        let (l1, g1, n1) = run();
+        let (l2, g2, _) = run();
+        assert!(l1.bit_eq(&l2));
+        assert_eq!(g1.len(), g2.len());
+        for (a, b) in g1.iter().zip(g2.iter()) {
+            assert!(a.bit_eq(b));
+        }
+        // binds order must match params_mut order (count check)
+        let mut m2 = CharTransformer::new(cfg, 2).unwrap();
+        assert_eq!(n1, m2.params_mut().len());
+    }
+
+    #[test]
+    fn tiny_training_reduces_loss() {
+        let cfg = TransformerConfig { vocab: 8, dim: 8, heads: 2, layers: 1, context: 8, mlp_ratio: 2 };
+        let mut m = CharTransformer::new(cfg, 3).unwrap();
+        let ids = [1usize, 2, 3, 4, 5, 6, 7, 0];
+        let mut first = 0.0;
+        let mut last = 0.0;
+        for step in 0..40 {
+            let mut t = Tape::new();
+            let mut binds = Vec::new();
+            let loss = m.loss_on_sequence(&mut t, &ids, &mut binds).unwrap();
+            t.backward(loss).unwrap();
+            let lv = t.value(loss).data()[0];
+            if step == 0 {
+                first = lv;
+            }
+            last = lv;
+            let grads: Vec<Tensor> = binds.iter().map(|v| t.grad(*v).unwrap()).collect();
+            for (p, g) in m.params_mut().into_iter().zip(grads.iter()) {
+                for (pv, gv) in p.data_mut().iter_mut().zip(g.data().iter()) {
+                    *pv -= 0.05 * gv;
+                }
+            }
+        }
+        assert!(last < first, "loss {first} -> {last}");
+    }
+}

@@ -1,0 +1,236 @@
+//! Optimizers as fixed computation graphs (paper §3: "optimizers defined
+//! in PyTorch, keeping their names and parameter definitions intact").
+//!
+//! Parameters are updated **in registration order**, each element by the
+//! same fixed sequence of correctly-rounded `f32` ops — so an optimizer
+//! step is exactly as reproducible as a forward pass. `Adam`'s √ uses the
+//! IEEE-correct hardware sqrt; nothing calls libm.
+
+use crate::tensor::Tensor;
+use crate::{Error, Result};
+
+/// Stochastic gradient descent with optional momentum + weight decay.
+pub struct SGD {
+    /// Learning rate.
+    pub lr: f32,
+    /// Momentum coefficient (0 disables).
+    pub momentum: f32,
+    /// L2 weight decay.
+    pub weight_decay: f32,
+    bufs: Vec<Tensor>,
+}
+
+impl SGD {
+    /// New optimizer.
+    pub fn new(lr: f32, momentum: f32, weight_decay: f32) -> Self {
+        SGD { lr, momentum, weight_decay, bufs: Vec::new() }
+    }
+
+    /// Apply one step. `params` and `grads` must align (fixed order).
+    /// Update graph per element: `g ← g + wd·p; v ← μ·v + g; p ← p − lr·v`.
+    pub fn step(&mut self, params: Vec<&mut Tensor>, grads: &[Tensor]) -> Result<()> {
+        if params.len() != grads.len() {
+            return Err(Error::shape("SGD::step: params/grads length mismatch"));
+        }
+        if self.bufs.is_empty() && self.momentum != 0.0 {
+            self.bufs = params.iter().map(|p| Tensor::zeros(p.dims())).collect();
+        }
+        for (i, (p, g)) in params.into_iter().zip(grads.iter()).enumerate() {
+            if p.dims() != g.dims() {
+                return Err(Error::shape(format!("SGD::step: param {i} shape mismatch")));
+            }
+            for j in 0..p.numel() {
+                let mut gv = g.data()[j];
+                if self.weight_decay != 0.0 {
+                    gv += self.weight_decay * p.data()[j];
+                }
+                let upd = if self.momentum != 0.0 {
+                    let v = self.momentum * self.bufs[i].data()[j] + gv;
+                    self.bufs[i].data_mut()[j] = v;
+                    v
+                } else {
+                    gv
+                };
+                p.data_mut()[j] -= self.lr * upd;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Adam / AdamW (decoupled weight decay when `decoupled_wd` is set).
+pub struct Adam {
+    /// Learning rate.
+    pub lr: f32,
+    /// β₁.
+    pub beta1: f32,
+    /// β₂.
+    pub beta2: f32,
+    /// ε.
+    pub eps: f32,
+    /// Weight decay.
+    pub weight_decay: f32,
+    /// true = AdamW (decoupled), false = L2-in-gradient Adam.
+    pub decoupled_wd: bool,
+    m: Vec<Tensor>,
+    v: Vec<Tensor>,
+    t: u32,
+}
+
+impl Adam {
+    /// Adam with PyTorch defaults.
+    pub fn new(lr: f32) -> Self {
+        Adam {
+            lr,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            weight_decay: 0.0,
+            decoupled_wd: false,
+            m: Vec::new(),
+            v: Vec::new(),
+            t: 0,
+        }
+    }
+
+    /// AdamW with decoupled weight decay.
+    pub fn new_adamw(lr: f32, weight_decay: f32) -> Self {
+        let mut a = Self::new(lr);
+        a.weight_decay = weight_decay;
+        a.decoupled_wd = true;
+        a
+    }
+
+    /// One step; fixed per-element graph:
+    /// `m ← β₁m + (1−β₁)g; v ← β₂v + (1−β₂)g²;`
+    /// `p ← p − lr·m̂ · rsqrt-free (√v̂ + ε)⁻¹` using hardware √ (CR).
+    pub fn step(&mut self, params: Vec<&mut Tensor>, grads: &[Tensor]) -> Result<()> {
+        if params.len() != grads.len() {
+            return Err(Error::shape("Adam::step: params/grads length mismatch"));
+        }
+        if self.m.is_empty() {
+            self.m = params.iter().map(|p| Tensor::zeros(p.dims())).collect();
+            self.v = params.iter().map(|p| Tensor::zeros(p.dims())).collect();
+        }
+        self.t += 1;
+        // bias corrections via rpow (correctly rounded)
+        let bc1 = 1.0 - crate::rnum::rpow(self.beta1, self.t as f32);
+        let bc2 = 1.0 - crate::rnum::rpow(self.beta2, self.t as f32);
+        for (i, (p, g)) in params.into_iter().zip(grads.iter()).enumerate() {
+            if p.dims() != g.dims() {
+                return Err(Error::shape(format!("Adam::step: param {i} shape mismatch")));
+            }
+            for j in 0..p.numel() {
+                let mut gv = g.data()[j];
+                if !self.decoupled_wd && self.weight_decay != 0.0 {
+                    gv += self.weight_decay * p.data()[j];
+                }
+                let m = self.beta1 * self.m[i].data()[j] + (1.0 - self.beta1) * gv;
+                let v = self.beta2 * self.v[i].data()[j] + (1.0 - self.beta2) * gv * gv;
+                self.m[i].data_mut()[j] = m;
+                self.v[i].data_mut()[j] = v;
+                let mhat = m / bc1;
+                let vhat = v / bc2;
+                let mut upd = mhat / (vhat.sqrt() + self.eps);
+                if self.decoupled_wd && self.weight_decay != 0.0 {
+                    upd += self.weight_decay * p.data()[j];
+                }
+                p.data_mut()[j] -= self.lr * upd;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Cosine LR schedule with warmup — a fixed graph over step count
+/// (`rcos` is correctly rounded, so schedules match across platforms).
+pub fn cosine_lr(step: u32, warmup: u32, total: u32, base: f32, min_lr: f32) -> f32 {
+    if step < warmup {
+        return base * (step as f32 + 1.0) / warmup as f32;
+    }
+    let t = (step - warmup) as f32 / (total.saturating_sub(warmup)).max(1) as f32;
+    let c = crate::rnum::rcos(std::f32::consts::PI * t.min(1.0));
+    min_lr + 0.5 * (base - min_lr) * (1.0 + c)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quad_problem() -> (Tensor, Tensor) {
+        // minimise ||p - c||² for c = [1, -2, 3]
+        let p = Tensor::zeros(&[3]);
+        let c = Tensor::from_vec(&[3], vec![1., -2., 3.]).unwrap();
+        (p, c)
+    }
+
+    fn grad_of(p: &Tensor, c: &Tensor) -> Tensor {
+        p.zip(c, |a, b| 2.0 * (a - b)).unwrap()
+    }
+
+    #[test]
+    fn sgd_converges_on_quadratic() {
+        let (mut p, c) = quad_problem();
+        let mut opt = SGD::new(0.05, 0.9, 0.0);
+        for _ in 0..400 {
+            let g = grad_of(&p, &c);
+            opt.step(vec![&mut p], &[g]).unwrap();
+        }
+        for j in 0..3 {
+            assert!((p.data()[j] - c.data()[j]).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn adam_converges_on_quadratic() {
+        let (mut p, c) = quad_problem();
+        let mut opt = Adam::new(0.2);
+        for _ in 0..200 {
+            let g = grad_of(&p, &c);
+            opt.step(vec![&mut p], &[g]).unwrap();
+        }
+        for j in 0..3 {
+            assert!((p.data()[j] - c.data()[j]).abs() < 1e-2, "p={:?}", p.data());
+        }
+    }
+
+    #[test]
+    fn steps_are_bit_deterministic() {
+        let run = |seed_unused: u32| -> Tensor {
+            let _ = seed_unused;
+            let (mut p, c) = quad_problem();
+            let mut opt = Adam::new_adamw(0.05, 0.01);
+            for _ in 0..50 {
+                let g = grad_of(&p, &c);
+                opt.step(vec![&mut p], &[g]).unwrap();
+            }
+            p
+        };
+        assert!(run(0).bit_eq(&run(1)));
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let mut p = Tensor::zeros(&[3]);
+        let g = Tensor::zeros(&[4]);
+        assert!(SGD::new(0.1, 0.0, 0.0).step(vec![&mut p], &[g.clone()]).is_err());
+        assert!(Adam::new(0.1).step(vec![&mut p], &[g]).is_err());
+        let g2 = Tensor::zeros(&[3]);
+        assert!(SGD::new(0.1, 0.0, 0.0)
+            .step(vec![&mut p], &[g2.clone(), g2])
+            .is_err());
+    }
+
+    #[test]
+    fn cosine_schedule_shape() {
+        assert!(cosine_lr(0, 10, 100, 1.0, 0.1) < 0.2); // warmup start
+        assert!((cosine_lr(9, 10, 100, 1.0, 0.1) - 1.0).abs() < 1e-6); // warmup end
+        assert!(cosine_lr(55, 10, 100, 1.0, 0.1) < 1.0);
+        assert!((cosine_lr(100, 10, 100, 1.0, 0.1) - 0.1).abs() < 1e-5); // floor
+        // deterministic
+        assert_eq!(
+            cosine_lr(33, 10, 100, 1.0, 0.1).to_bits(),
+            cosine_lr(33, 10, 100, 1.0, 0.1).to_bits()
+        );
+    }
+}

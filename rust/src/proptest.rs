@@ -1,0 +1,122 @@
+//! Minimal deterministic property-testing harness.
+//!
+//! The `proptest` crate is not in the offline crate set (DESIGN.md §5),
+//! so this module provides the subset we need: seeded generators, a
+//! `forall` runner with case reporting, and f32 generators that cover the
+//! nasty regions (subnormals, near-overflow, signed zero, exact powers of
+//! two). Deterministic by construction — a failing case always reports
+//! the (seed, index) needed to replay it.
+
+/// SplitMix64 generator for test inputs.
+pub struct Gen {
+    state: u64,
+}
+
+impl Gen {
+    /// New generator.
+    pub fn new(seed: u64) -> Self {
+        Gen { state: seed.wrapping_add(0x9e3779b97f4a7c15) }
+    }
+
+    /// Next u64.
+    pub fn u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9e3779b97f4a7c15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+        z ^ (z >> 31)
+    }
+
+    /// usize in [0, n).
+    pub fn below(&mut self, n: usize) -> usize {
+        (self.u64() % n.max(1) as u64) as usize
+    }
+
+    /// Uniform f32 in [lo, hi).
+    pub fn f32_range(&mut self, lo: f32, hi: f32) -> f32 {
+        let u = (self.u64() >> 40) as f32 / (1u64 << 24) as f32;
+        lo + u * (hi - lo)
+    }
+
+    /// "Any finite f32", biased toward hard regions: uniform bits
+    /// filtered to finite, mixed with specials.
+    pub fn f32_any(&mut self) -> f32 {
+        match self.u64() % 8 {
+            0 => {
+                // exact special values
+                const SPECIALS: [f32; 8] = [0.0, -0.0, 1.0, -1.0, 0.5, 2.0, 16_777_216.0, 1e-39];
+                SPECIALS[(self.u64() % 8) as usize]
+            }
+            1 => f32::from_bits((self.u64() as u32) & 0x007f_ffff), // subnormal
+            2 => {
+                // near overflow
+                f32::from_bits(0x7f00_0000 | (self.u64() as u32 & 0x7f_ffff))
+            }
+            _ => loop {
+                let v = f32::from_bits(self.u64() as u32);
+                if v.is_finite() {
+                    return v;
+                }
+            },
+        }
+    }
+
+    /// Vector of moderate-magnitude floats.
+    pub fn f32_vec(&mut self, n: usize, scale: f32) -> Vec<f32> {
+        (0..n).map(|_| self.f32_range(-scale, scale)).collect()
+    }
+}
+
+/// Run `cases` checks of `prop` over generated inputs; panic with the
+/// replay coordinates on failure.
+pub fn forall<T, G, P>(seed: u64, cases: usize, mut gen: G, mut prop: P)
+where
+    G: FnMut(&mut Gen) -> T,
+    P: FnMut(&T) -> bool,
+    T: std::fmt::Debug,
+{
+    let mut g = Gen::new(seed);
+    for i in 0..cases {
+        let input = gen(&mut g);
+        if !prop(&input) {
+            panic!("property failed at seed={seed} case={i}: input={input:?}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generator_is_deterministic() {
+        let a: Vec<u64> = { let mut g = Gen::new(1); (0..10).map(|_| g.u64()).collect() };
+        let b: Vec<u64> = { let mut g = Gen::new(1); (0..10).map(|_| g.u64()).collect() };
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn f32_any_hits_subnormals_and_normals() {
+        let mut g = Gen::new(2);
+        let mut subnormal = false;
+        let mut big = false;
+        for _ in 0..1000 {
+            let v = g.f32_any();
+            assert!(v.is_finite());
+            subnormal |= crate::rnum::fbits::is_subnormal(v);
+            big |= v.abs() > 1e30;
+        }
+        assert!(subnormal && big);
+    }
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall(3, 100, |g| g.f32_range(0.0, 1.0), |&x| (0.0..1.0).contains(&x));
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn forall_reports_failures() {
+        forall(4, 100, |g| g.below(10), |&x| x < 5);
+    }
+}

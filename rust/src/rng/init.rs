@@ -1,0 +1,100 @@
+//! Reproducible weight initialisers (PyTorch-compatible formulas).
+//!
+//! Each initialiser is a fixed computation graph over a seeded generator:
+//! the same (seed, shape) always produces the same bits, on any platform,
+//! because the u32→f32 mapping, the Box–Muller graph, and the fan-in
+//! arithmetic are all exact or correctly rounded.
+
+use super::{Mt19937, ReproRng};
+use crate::rnum::rrsqrt;
+use crate::tensor::Tensor;
+
+/// Uniform tensor in [lo, hi).
+pub fn uniform_tensor(dims: &[usize], lo: f32, hi: f32, seed: u64) -> Tensor {
+    let mut rng = Mt19937::new64(seed);
+    let n: usize = dims.iter().product();
+    let data = (0..n).map(|_| rng.uniform(lo, hi)).collect();
+    Tensor::from_vec(dims, data).unwrap()
+}
+
+/// Normal(μ, σ) tensor via the Box–Muller fixed graph.
+pub fn normal_tensor(dims: &[usize], mean: f32, std: f32, seed: u64) -> Tensor {
+    let mut rng = Mt19937::new64(seed);
+    let n: usize = dims.iter().product();
+    let data = (0..n).map(|_| mean + std * rng.normal()).collect();
+    Tensor::from_vec(dims, data).unwrap()
+}
+
+/// Fan-in/fan-out for 2-D (out, in) or 4-D (O, C, KH, KW) weights.
+fn fans(dims: &[usize]) -> (usize, usize) {
+    match dims.len() {
+        2 => (dims[1], dims[0]),
+        4 => {
+            let rf = dims[2] * dims[3];
+            (dims[1] * rf, dims[0] * rf)
+        }
+        _ => {
+            let n: usize = dims.iter().product();
+            (n, n)
+        }
+    }
+}
+
+/// Kaiming (He) uniform: U(−b, b), b = √3 · √(2 / fan_in)  (gain for ReLU).
+pub fn kaiming_uniform(dims: &[usize], seed: u64) -> Tensor {
+    let (fan_in, _) = fans(dims);
+    // fixed graph: gain·rsqrt(fan_in), √3 a fixed f32 constant
+    const SQRT3: f32 = 1.732_050_8;
+    const GAIN: f32 = std::f32::consts::SQRT_2; // relu gain √2
+    let bound = SQRT3 * GAIN * rrsqrt(fan_in as f32);
+    uniform_tensor(dims, -bound, bound, seed)
+}
+
+/// Xavier (Glorot) uniform: U(−b, b), b = √6 · rsqrt(fan_in + fan_out).
+pub fn xavier_uniform(dims: &[usize], seed: u64) -> Tensor {
+    let (fan_in, fan_out) = fans(dims);
+    const SQRT6: f32 = 2.449_489_8;
+    let bound = SQRT6 * rrsqrt((fan_in + fan_out) as f32);
+    uniform_tensor(dims, -bound, bound, seed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn initialisers_are_bit_reproducible() {
+        let a = kaiming_uniform(&[64, 128], 42);
+        let b = kaiming_uniform(&[64, 128], 42);
+        assert!(a.bit_eq(&b));
+        let c = kaiming_uniform(&[64, 128], 43);
+        assert!(!a.bit_eq(&c));
+        let d = normal_tensor(&[10, 10], 0.0, 0.02, 7);
+        assert!(d.bit_eq(&normal_tensor(&[10, 10], 0.0, 0.02, 7)));
+    }
+
+    #[test]
+    fn kaiming_bound_respected() {
+        let t = kaiming_uniform(&[32, 50], 1);
+        let bound = 1.732_050_8 * std::f32::consts::SQRT_2 * (1.0 / (50f32).sqrt());
+        for &v in t.data() {
+            assert!(v.abs() <= bound * 1.0001, "v={v} bound={bound}");
+        }
+    }
+
+    #[test]
+    fn xavier_variance_plausible() {
+        let t = xavier_uniform(&[100, 100], 3);
+        let var: f64 = t.data().iter().map(|&v| (v as f64).powi(2)).sum::<f64>()
+            / t.numel() as f64;
+        // uniform(−b,b) variance = b²/3 = 6/(fan_in+fan_out)/3 = 0.01
+        assert!((var - 0.01).abs() < 0.002, "var={var}");
+    }
+
+    #[test]
+    fn conv_fans() {
+        let (fi, fo) = fans(&[8, 4, 3, 3]);
+        assert_eq!(fi, 36);
+        assert_eq!(fo, 72);
+    }
+}

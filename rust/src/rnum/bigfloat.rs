@@ -1,0 +1,1353 @@
+//! Arbitrary-precision binary floating point — the rounding oracle.
+//!
+//! The paper builds its correctly-rounded basic operations on MPFR [5] and
+//! RLIBM [10]; neither library is available in this offline environment, so
+//! `BigFloat` is our substitute (see DESIGN.md §5). It provides:
+//!
+//! * **exactly-sticky** `+ − × ÷ √` — the operation is computed with full
+//!   internal precision and the discarded tail is *exactly* summarised in a
+//!   sticky bit (round-to-odd). Rounding such a value to `f32`/`f64` with
+//!   round-to-nearest-even gives the *correctly rounded* result of the
+//!   exact operation (the classic round-to-odd double-rounding theorem,
+//!   valid because our working precision ≥ target precision + 2).
+//! * series-evaluated `exp ln sin cos tan tanh` with truncation error far
+//!   below 2⁻³⁰⁰. Transcendence of these functions at nonzero rational
+//!   points (Lindemann–Weierstrass) means no f32 input lands exactly on a
+//!   rounding boundary, so 320-bit evaluation rounds correctly (known
+//!   worst cases for binary32 need < 60 bits of agreement).
+//!
+//! Representation: `value = sign · 0.mant · 2^exp` with the mantissa a
+//! big-endian limb vector whose top bit is set (`0.mant ∈ [1/2, 1)`).
+//! Precision is the limb count; operations produce
+//! `max(precision of inputs)` limbs.
+
+use std::cmp::Ordering;
+
+/// Default oracle precision in limbs (320 bits).
+pub const PREC_ORACLE: usize = 5;
+/// Working precision for trigonometric argument reduction (768 bits —
+/// enough to absorb the ≤128-bit exponent range of f32 inputs).
+pub const PREC_TRIG: usize = 12;
+
+/// Arbitrary-precision binary float. See module docs.
+#[derive(Clone, Debug)]
+pub struct BigFloat {
+    sign: i8,       // -1, 0, +1
+    exp: i64,       // value = sign * 0.mant * 2^exp
+    mant: Vec<u64>, // big-endian, mant[0] MSB set when sign != 0
+}
+
+// ---------------------------------------------------------------------
+// mantissa helpers (big-endian limb slices)
+// ---------------------------------------------------------------------
+
+fn mant_is_zero(a: &[u64]) -> bool {
+    a.iter().all(|&l| l == 0)
+}
+
+fn mant_leading_zeros(a: &[u64]) -> u64 {
+    let mut lz = 0u64;
+    for &l in a {
+        if l == 0 {
+            lz += 64;
+        } else {
+            lz += l.leading_zeros() as u64;
+            break;
+        }
+    }
+    lz
+}
+
+/// Compare two equal-length mantissas.
+fn mant_cmp(a: &[u64], b: &[u64]) -> Ordering {
+    debug_assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter().zip(b.iter()) {
+        match x.cmp(y) {
+            Ordering::Equal => continue,
+            o => return o,
+        }
+    }
+    Ordering::Equal
+}
+
+/// `a += b` (equal length); returns carry out of the top.
+fn mant_add_assign(a: &mut [u64], b: &[u64]) -> bool {
+    debug_assert_eq!(a.len(), b.len());
+    let mut carry = 0u64;
+    for i in (0..a.len()).rev() {
+        let (s1, c1) = a[i].overflowing_add(b[i]);
+        let (s2, c2) = s1.overflowing_add(carry);
+        a[i] = s2;
+        carry = (c1 | c2) as u64;
+    }
+    carry != 0
+}
+
+/// `a -= b` (equal length); requires `a >= b`.
+fn mant_sub_assign(a: &mut [u64], b: &[u64]) {
+    debug_assert_eq!(a.len(), b.len());
+    let mut borrow = 0u64;
+    for i in (0..a.len()).rev() {
+        let (d1, b1) = a[i].overflowing_sub(b[i]);
+        let (d2, b2) = d1.overflowing_sub(borrow);
+        a[i] = d2;
+        borrow = (b1 | b2) as u64;
+    }
+    debug_assert_eq!(borrow, 0, "mant_sub_assign underflow");
+}
+
+/// Subtract 1 in the last place (used for the sticky-borrow correction).
+fn mant_sub_one_ulp(a: &mut [u64]) {
+    for i in (0..a.len()).rev() {
+        let (d, borrow) = a[i].overflowing_sub(1);
+        a[i] = d;
+        if !borrow {
+            return;
+        }
+    }
+    debug_assert!(false, "mant_sub_one_ulp underflowed");
+}
+
+/// Shift right by `k` bits in place; returns true if any 1-bit was lost.
+fn mant_shr_sticky(a: &mut [u64], k: u64) -> bool {
+    if k == 0 {
+        return false;
+    }
+    let n = a.len();
+    if k >= 64 * n as u64 {
+        let sticky = !mant_is_zero(a);
+        a.iter_mut().for_each(|l| *l = 0);
+        return sticky;
+    }
+    let limb = (k / 64) as usize;
+    let bit = (k % 64) as u32;
+    // sticky: whole dropped limbs + low `bit` bits of the last surviving one
+    let mut sticky = a[n - limb..].iter().any(|&l| l != 0);
+    if bit > 0 {
+        sticky |= a[n - 1 - limb] & ((1u64 << bit) - 1) != 0;
+    }
+    for i in (0..n).rev() {
+        let src = i as isize - limb as isize;
+        a[i] = if src < 0 {
+            0
+        } else if bit == 0 {
+            a[src as usize]
+        } else {
+            let hi = if src >= 1 {
+                a[(src - 1) as usize] << (64 - bit)
+            } else {
+                0
+            };
+            (a[src as usize] >> bit) | hi
+        };
+    }
+    sticky
+}
+
+/// Shift left by `k` bits in place; the top `k` bits must be zero.
+fn mant_shl(a: &mut [u64], k: u64) {
+    if k == 0 {
+        return;
+    }
+    let n = a.len();
+    debug_assert!(k <= mant_leading_zeros(a) || mant_is_zero(a));
+    let limb = (k / 64) as usize;
+    let bit = (k % 64) as u32;
+    for i in 0..n {
+        let src = i + limb;
+        a[i] = if src >= n {
+            0
+        } else if bit == 0 {
+            a[src]
+        } else {
+            let lo = if src + 1 < n { a[src + 1] >> (64 - bit) } else { 0 };
+            (a[src] << bit) | lo
+        };
+    }
+}
+
+/// Full schoolbook product: `a × b`, result `a.len() + b.len()` limbs.
+fn mant_mul(a: &[u64], b: &[u64]) -> Vec<u64> {
+    let (la, lb) = (a.len(), b.len());
+    let mut out = vec![0u64; la + lb];
+    for i in (0..la).rev() {
+        let mut carry = 0u128;
+        for j in (0..lb).rev() {
+            let idx = i + j + 1;
+            let cur = a[i] as u128 * b[j] as u128 + out[idx] as u128 + carry;
+            out[idx] = cur as u64;
+            carry = cur >> 64;
+        }
+        // propagate carry into out[i]
+        let mut idx = i as isize;
+        let mut c = carry;
+        while c != 0 {
+            let cur = out[idx as usize] as u128 + c;
+            out[idx as usize] = cur as u64;
+            c = cur >> 64;
+            idx -= 1;
+        }
+    }
+    out
+}
+
+impl BigFloat {
+    // -----------------------------------------------------------------
+    // construction
+    // -----------------------------------------------------------------
+
+    /// Positive/negative zero is represented as a single zero.
+    pub fn zero(prec: usize) -> Self {
+        BigFloat { sign: 0, exp: 0, mant: vec![0; prec.max(1)] }
+    }
+
+    /// The value 1 at the given precision.
+    pub fn one(prec: usize) -> Self {
+        let mut mant = vec![0u64; prec.max(1)];
+        mant[0] = 1 << 63;
+        BigFloat { sign: 1, exp: 1, mant }
+    }
+
+    /// Exact conversion from `u64`.
+    pub fn from_u64(v: u64, prec: usize) -> Self {
+        if v == 0 {
+            return Self::zero(prec);
+        }
+        let lz = v.leading_zeros() as u64;
+        let mut mant = vec![0u64; prec.max(1)];
+        mant[0] = v << lz;
+        BigFloat { sign: 1, exp: 64 - lz as i64, mant }
+    }
+
+    /// Exact conversion from `i64`.
+    pub fn from_i64(v: i64, prec: usize) -> Self {
+        let mut r = Self::from_u64(v.unsigned_abs(), prec);
+        if v < 0 {
+            r.sign = -r.sign;
+        }
+        r
+    }
+
+    /// Exact conversion from `f64` (every finite f64 is representable).
+    pub fn from_f64(x: f64, prec: usize) -> Self {
+        assert!(x.is_finite(), "BigFloat::from_f64 of non-finite {x}");
+        if x == 0.0 {
+            return Self::zero(prec);
+        }
+        let bits = x.to_bits();
+        let sign = if bits >> 63 == 1 { -1i8 } else { 1 };
+        let biased = ((bits >> 52) & 0x7ff) as i64;
+        let frac = bits & 0xf_ffff_ffff_ffff;
+        let (sig, e) = if biased == 0 {
+            (frac, -1074i64) // subnormal: value = frac * 2^-1074
+        } else {
+            (frac | (1 << 52), biased - 1023 - 52)
+        };
+        // value = sig * 2^e, sig has <= 53 bits
+        let lz = sig.leading_zeros() as u64;
+        let mut mant = vec![0u64; prec.max(1)];
+        mant[0] = sig << lz;
+        BigFloat { sign, exp: e + 64 - lz as i64, mant }
+    }
+
+    /// Exact conversion from `f32`.
+    pub fn from_f32(x: f32, prec: usize) -> Self {
+        Self::from_f64(x as f64, prec) // f32 -> f64 is exact
+    }
+
+    /// Build `sign · int(limbs) · 2^pow2` from a big-endian integer limb
+    /// vector (exact-sticky if wider than `prec`). Used by the Kulisch
+    /// accumulator to hand its exact fixed-point sum to the rounder.
+    pub fn from_integer_be(sign: i8, limbs: Vec<u64>, pow2: i64, prec: usize) -> Self {
+        if sign == 0 || mant_is_zero(&limbs) {
+            return Self::zero(prec);
+        }
+        // int(limbs) = 0.limbs · 2^(64·len)
+        let exp = 64 * limbs.len() as i64 + pow2;
+        Self::normalize_in(sign, exp, limbs, prec, false)
+    }
+
+    // -----------------------------------------------------------------
+    // queries
+    // -----------------------------------------------------------------
+
+    /// True iff the value is zero.
+    pub fn is_zero(&self) -> bool {
+        self.sign == 0
+    }
+
+    /// Sign: -1, 0 or +1.
+    pub fn signum(&self) -> i8 {
+        self.sign
+    }
+
+    /// `floor(log2 |value|)` for nonzero values.
+    pub fn log2_floor(&self) -> i64 {
+        debug_assert!(self.sign != 0);
+        self.exp - 1
+    }
+
+    /// Precision in limbs.
+    pub fn prec(&self) -> usize {
+        self.mant.len()
+    }
+
+    /// Change precision. Extending is exact; shrinking jams the lost bits
+    /// into the new last bit (round-to-odd).
+    pub fn with_prec(&self, prec: usize) -> Self {
+        let prec = prec.max(1);
+        let mut r = self.clone();
+        if prec >= r.mant.len() {
+            r.mant.resize(prec, 0);
+        } else {
+            let sticky = r.mant[prec..].iter().any(|&l| l != 0);
+            r.mant.truncate(prec);
+            if sticky {
+                let last = r.mant.len() - 1;
+                r.mant[last] |= 1;
+            }
+        }
+        r
+    }
+
+    fn normalize_in(sign: i8, mut exp: i64, mut work: Vec<u64>, prec: usize, mut sticky: bool) -> Self {
+        if mant_is_zero(&work) {
+            if sticky {
+                // value is a pure sticky residue: representable as the
+                // smallest odd mantissa at the working exponent floor —
+                // callers never hit this for exact-input subtraction (see
+                // module docs); keep a conservative tiny value.
+                let mut mant = vec![0u64; prec];
+                mant[0] = 1 << 63;
+                // 2^(exp - 64*work_len) magnitude bound; round-to-odd tag
+                let e = exp - 64 * work.len() as i64;
+                let last = prec - 1;
+                mant[last] |= 1;
+                return BigFloat { sign, exp: e, mant };
+            }
+            return Self::zero(prec);
+        }
+        let lz = mant_leading_zeros(&work);
+        mant_shl(&mut work, lz);
+        exp -= lz as i64;
+        // truncate to prec limbs with sticky jam
+        if work.len() > prec {
+            sticky |= work[prec..].iter().any(|&l| l != 0);
+            work.truncate(prec);
+        } else {
+            work.resize(prec, 0);
+        }
+        if sticky {
+            let last = work.len() - 1;
+            work[last] |= 1;
+        }
+        BigFloat { sign, exp, mant: work }
+    }
+
+    // -----------------------------------------------------------------
+    // comparison
+    // -----------------------------------------------------------------
+
+    /// Total order on values.
+    pub fn cmp_val(&self, other: &Self) -> Ordering {
+        match self.sign.cmp(&other.sign) {
+            Ordering::Equal => {}
+            o => return o,
+        }
+        if self.sign == 0 {
+            return Ordering::Equal;
+        }
+        let mag = self.cmp_mag(other);
+        if self.sign > 0 {
+            mag
+        } else {
+            mag.reverse()
+        }
+    }
+
+    /// Compare |self| with |other|.
+    pub fn cmp_mag(&self, other: &Self) -> Ordering {
+        match (self.sign == 0, other.sign == 0) {
+            (true, true) => return Ordering::Equal,
+            (true, false) => return Ordering::Less,
+            (false, true) => return Ordering::Greater,
+            _ => {}
+        }
+        match self.exp.cmp(&other.exp) {
+            Ordering::Equal => {}
+            o => return o,
+        }
+        let n = self.mant.len().max(other.mant.len());
+        for i in 0..n {
+            let a = self.mant.get(i).copied().unwrap_or(0);
+            let b = other.mant.get(i).copied().unwrap_or(0);
+            match a.cmp(&b) {
+                Ordering::Equal => continue,
+                o => return o,
+            }
+        }
+        Ordering::Equal
+    }
+
+    // -----------------------------------------------------------------
+    // sign / scale
+    // -----------------------------------------------------------------
+
+    /// Negation (exact).
+    pub fn neg(&self) -> Self {
+        let mut r = self.clone();
+        r.sign = -r.sign;
+        r
+    }
+
+    /// Absolute value (exact).
+    pub fn abs(&self) -> Self {
+        let mut r = self.clone();
+        r.sign = r.sign.abs() as i8;
+        r
+    }
+
+    /// Multiply by 2^k (exact).
+    pub fn mul_pow2(&self, k: i64) -> Self {
+        if self.sign == 0 {
+            return self.clone();
+        }
+        let mut r = self.clone();
+        r.exp += k;
+        r
+    }
+
+    // -----------------------------------------------------------------
+    // add / sub (exact sticky)
+    // -----------------------------------------------------------------
+
+    /// Addition with exact sticky (round-to-odd at `max(prec)` limbs).
+    pub fn add(&self, other: &Self) -> Self {
+        let prec = self.prec().max(other.prec());
+        if self.sign == 0 {
+            return other.with_prec(prec);
+        }
+        if other.sign == 0 {
+            return self.with_prec(prec);
+        }
+        // order by magnitude
+        let (hi, lo) = match self.cmp_mag(other) {
+            Ordering::Less => (other, self),
+            _ => (self, other),
+        };
+        if hi.sign != lo.sign && hi.cmp_mag(lo) == Ordering::Equal {
+            return Self::zero(prec);
+        }
+        let w = prec + 1; // one guard limb
+        let mut hw = hi.mant.clone();
+        hw.resize(w, 0);
+        let mut lw = lo.mant.clone();
+        lw.resize(w, 0);
+        let d = (hi.exp - lo.exp) as u64;
+        let sticky = mant_shr_sticky(&mut lw, d);
+        if hi.sign == lo.sign {
+            let carry = mant_add_assign(&mut hw, &lw);
+            let mut exp = hi.exp;
+            let mut st = sticky;
+            if carry {
+                st |= mant_shr_sticky(&mut hw, 1);
+                hw[0] |= 1 << 63;
+                exp += 1;
+            }
+            Self::normalize_in(hi.sign, exp, hw, prec, st)
+        } else {
+            mant_sub_assign(&mut hw, &lw);
+            if sticky {
+                // true lo was slightly larger than its truncation: the
+                // true difference is (hw - lw) - frac with 0 < frac < 1ulp
+                mant_sub_one_ulp(&mut hw);
+            }
+            Self::normalize_in(hi.sign, hi.exp, hw, prec, sticky)
+        }
+    }
+
+    /// Subtraction (via negated addition; exact sticky).
+    pub fn sub(&self, other: &Self) -> Self {
+        self.add(&other.neg())
+    }
+
+    // -----------------------------------------------------------------
+    // mul / div / sqrt (exact sticky)
+    // -----------------------------------------------------------------
+
+    /// Multiplication with exact sticky.
+    pub fn mul(&self, other: &Self) -> Self {
+        let prec = self.prec().max(other.prec());
+        if self.sign == 0 || other.sign == 0 {
+            return Self::zero(prec);
+        }
+        let work = mant_mul(&self.mant, &other.mant);
+        // 0.a * 0.b in [1/4, 1): at most one leading zero bit
+        let exp = self.exp + other.exp;
+        Self::normalize_in(self.sign * other.sign, exp, work, prec, false)
+    }
+
+    /// Division with exact sticky (restoring long division).
+    pub fn div(&self, other: &Self) -> Self {
+        let prec = self.prec().max(other.prec());
+        assert!(other.sign != 0, "BigFloat division by zero");
+        if self.sign == 0 {
+            return Self::zero(prec);
+        }
+        let w = prec + 1; // quotient limbs
+        // rem/den as (w+1)-limb integers with a high headroom limb
+        let mut rem = vec![0u64; w + 1];
+        let mut den = vec![0u64; w + 1];
+        for (i, &l) in self.mant.iter().enumerate().take(w) {
+            rem[i + 1] = l;
+        }
+        for (i, &l) in other.mant.iter().enumerate().take(w) {
+            den[i + 1] = l;
+        }
+        let ge = mant_cmp(&rem, &den) != Ordering::Less;
+        let exp = self.exp - other.exp + if ge { 1 } else { 0 };
+        if !ge {
+            mant_shl(&mut rem, 1);
+        }
+        let mut q = vec![0u64; w];
+        for bit in 0..w * 64 {
+            if mant_cmp(&rem, &den) != Ordering::Less {
+                mant_sub_assign(&mut rem, &den);
+                q[bit / 64] |= 1 << (63 - bit % 64);
+            }
+            mant_shl(&mut rem, 1);
+        }
+        let sticky = !mant_is_zero(&rem);
+        Self::normalize_in(self.sign * other.sign, exp, q, prec, sticky)
+    }
+
+    /// Square root with exact sticky (digit-by-digit integer sqrt).
+    /// Requires `self >= 0`.
+    pub fn sqrt(&self) -> Self {
+        assert!(self.sign >= 0, "BigFloat sqrt of negative value");
+        let prec = self.prec();
+        if self.sign == 0 {
+            return Self::zero(prec);
+        }
+        // Make the exponent even: value = f * 2^e with f in [1/4, 1).
+        let (mut frac, e) = if self.exp % 2 == 0 {
+            (self.mant.clone(), self.exp)
+        } else {
+            // shift right one bit into [1/4, 1/2); keep the lost bit by
+            // extending one limb first (exact)
+            let mut m = self.mant.clone();
+            m.push(0);
+            let s = mant_shr_sticky(&mut m, 1);
+            debug_assert!(!s);
+            (m, self.exp + 1)
+        };
+        // Radicand N = frac as integer << pad so N has 2*(prec+1) limbs.
+        let nl = 2 * (prec + 1);
+        frac.resize(nl, 0); // low-side zero padding = exact scaling
+        // Digit-by-digit square root over bit pairs.
+        let sl = prec + 1; // result limbs
+        let mut s = vec![0u64; sl]; // partial root (integer, low-aligned)
+        let mut rem = vec![0u64; sl + 2]; // remainder with headroom
+        let mut t = vec![0u64; sl + 2]; // trial subtrahend
+        for i in 0..sl * 64 {
+            // rem = rem*4 + next two bits of N
+            mant_shl(&mut rem, 2);
+            let b0 = (frac[(2 * i) / 64] >> (63 - (2 * i) % 64)) & 1;
+            let b1 = (frac[(2 * i + 1) / 64] >> (63 - (2 * i + 1) % 64)) & 1;
+            let last = rem.len() - 1;
+            rem[last] |= (b0 << 1) | b1;
+            // trial = 4*s + 1 (s currently holds i high bits, low-aligned)
+            t.iter_mut().for_each(|l| *l = 0);
+            // copy s into t shifted left by 2, into the low-aligned tail
+            for (k, &l) in s.iter().enumerate() {
+                t[k + 2] = l;
+            }
+            mant_shl(&mut t, 2);
+            let tl = t.len() - 1;
+            t[tl] |= 1;
+            if mant_cmp(&rem, &t) != Ordering::Less {
+                mant_sub_assign(&mut rem, &t);
+                // s = s*2 + 1
+                mant_shl(&mut s, 1);
+                let sl_ = s.len() - 1;
+                s[sl_] |= 1;
+            } else {
+                mant_shl(&mut s, 1);
+            }
+        }
+        let sticky = !mant_is_zero(&rem);
+        // s is the floor-sqrt with sl*64 bits; value = s * 2^(e/2 - sl*64)
+        // Interpreted as a fraction: 0.s * 2^(e/2)  (s MSB set by
+        // construction since frac >= 1/4).
+        Self::normalize_in(1, e / 2, s, prec, sticky)
+    }
+
+    // -----------------------------------------------------------------
+    // small-integer scaling (fast paths for series)
+    // -----------------------------------------------------------------
+
+    /// Divide by a small positive integer (exact sticky, O(prec)).
+    pub fn div_u64(&self, d: u64) -> Self {
+        assert!(d != 0);
+        if self.sign == 0 || d == 1 {
+            return self.clone();
+        }
+        let n = self.prec();
+        let mut q = vec![0u64; n + 2];
+        let mut rem: u128 = 0;
+        for (i, slot) in q.iter_mut().enumerate() {
+            let limb = self.mant.get(i).copied().unwrap_or(0);
+            let cur = (rem << 64) | limb as u128;
+            *slot = (cur / d as u128) as u64;
+            rem = cur % d as u128;
+        }
+        let sticky = rem != 0;
+        Self::normalize_in(self.sign, self.exp, q, n, sticky)
+    }
+
+    /// Multiply by a small positive integer (exact sticky, O(prec)).
+    pub fn mul_u64(&self, m: u64) -> Self {
+        assert!(m != 0);
+        if self.sign == 0 || m == 1 {
+            return self.clone();
+        }
+        let n = self.prec();
+        let mut out = vec![0u64; n + 1];
+        let mut carry: u128 = 0;
+        for i in (0..n).rev() {
+            let cur = self.mant[i] as u128 * m as u128 + carry;
+            out[i + 1] = cur as u64;
+            carry = cur >> 64;
+        }
+        out[0] = carry as u64;
+        // out is a fraction with the radix point shifted 64 bits left:
+        // value = 0.out * 2^(exp + 64)
+        Self::normalize_in(self.sign, self.exp + 64, out, n, false)
+    }
+
+    // -----------------------------------------------------------------
+    // integer extraction
+    // -----------------------------------------------------------------
+
+    /// Truncate toward zero (exact).
+    pub fn trunc(&self) -> Self {
+        if self.sign == 0 || self.exp <= 0 {
+            return Self::zero(self.prec());
+        }
+        let int_bits = self.exp as u64;
+        let total_bits = 64 * self.mant.len() as u64;
+        if int_bits >= total_bits {
+            return self.clone(); // already an integer
+        }
+        let mut m = self.mant.clone();
+        // zero everything below bit `int_bits`
+        let limb = (int_bits / 64) as usize;
+        let bit = (int_bits % 64) as u32;
+        if bit > 0 {
+            m[limb] &= !((1u64 << (64 - bit)) - 1);
+            for l in m.iter_mut().skip(limb + 1) {
+                *l = 0;
+            }
+        } else {
+            for l in m.iter_mut().skip(limb) {
+                *l = 0;
+            }
+        }
+        if mant_is_zero(&m) {
+            return Self::zero(self.prec());
+        }
+        Self::normalize_in(self.sign, self.exp, m, self.prec(), false)
+    }
+
+    /// Round to nearest i64, ties away from zero. Requires |value| < 2^62.
+    pub fn round_i64(&self) -> i64 {
+        if self.sign == 0 {
+            return 0;
+        }
+        assert!(self.exp <= 62, "round_i64 out of range");
+        if self.exp <= -1 {
+            return 0; // |value| < 1/2
+        }
+        if self.exp == 0 {
+            // |value| ∈ [1/2, 1): rounds to ±1 (ties away from zero)
+            return self.sign as i64;
+        }
+        let k = self.exp as u32; // number of integer bits (1..=62)
+        let hi128 = (self.mant[0] as u128) << 64
+            | self.mant.get(1).copied().unwrap_or(0) as u128;
+        let int = (hi128 >> (128 - k)) as i64;
+        let round_bit = (hi128 >> (128 - k - 1)) & 1 == 1;
+        let v = int + if round_bit { 1 } else { 0 };
+        if self.sign < 0 {
+            -v
+        } else {
+            v
+        }
+    }
+
+    /// Low two bits of an integer-valued BigFloat (for trig quadrants).
+    pub fn integer_low2(&self) -> u8 {
+        if self.sign == 0 || self.exp <= 0 {
+            return 0;
+        }
+        let k = self.exp as u64; // integer bit count
+        let bit = |p: u64| -> u8 {
+            // bit p of the big-endian bit stream (0 = MSB)
+            if p >= 64 * self.mant.len() as u64 {
+                0
+            } else {
+                ((self.mant[(p / 64) as usize] >> (63 - p % 64)) & 1) as u8
+            }
+        };
+        if k == 1 {
+            bit(0)
+        } else {
+            (bit(k - 2) << 1) | bit(k - 1)
+        }
+    }
+
+    // -----------------------------------------------------------------
+    // rounding to machine formats
+    // -----------------------------------------------------------------
+
+    /// Extract the top `k` bits plus a round bit and exact sticky.
+    fn extract(&self, k: u32) -> (u64, bool, bool) {
+        debug_assert!(k <= 62);
+        let hi128 = (self.mant[0] as u128) << 64
+            | self.mant.get(1).copied().unwrap_or(0) as u128;
+        let top = if k == 0 { 0 } else { (hi128 >> (128 - k)) as u64 };
+        let round = (hi128 >> (128 - k - 1)) & 1 == 1;
+        let mask = (1u128 << (128 - k - 1)) - 1;
+        let mut sticky = hi128 & mask != 0;
+        sticky |= self.mant.iter().skip(2).any(|&l| l != 0);
+        (top, round, sticky)
+    }
+
+    /// Round to `f32` with round-to-nearest-even. Correct by the
+    /// round-to-odd double-rounding theorem for every exactly-sticky
+    /// `BigFloat` value.
+    pub fn to_f32(&self) -> f32 {
+        if self.sign == 0 {
+            return 0.0;
+        }
+        let e_unb = self.exp - 1; // floor(log2 |value|)
+        let neg = self.sign < 0;
+        if e_unb > 128 {
+            return if neg { f32::NEG_INFINITY } else { f32::INFINITY };
+        }
+        if e_unb < -150 {
+            return if neg { -0.0 } else { 0.0 };
+        }
+        let keep: i64 = if e_unb >= -126 { 24 } else { 24 - (-126 - e_unb) };
+        if keep < 0 {
+            return if neg { -0.0 } else { 0.0 };
+        }
+        let (mut top, round, sticky) = self.extract(keep as u32);
+        let mut e = e_unb;
+        if round && (sticky || top & 1 == 1) {
+            top += 1;
+            if top == 1 << keep {
+                // carry into the next binade
+                e += 1;
+                if keep == 24 {
+                    top = 1 << 23;
+                } else {
+                    // subnormal carried up; re-derive layout below
+                    top = 1 << keep; // becomes the implicit-1 pattern
+                }
+            }
+        }
+        if top == 0 {
+            return if neg { -0.0 } else { 0.0 };
+        }
+        // assemble
+        let bits: u32;
+        if e >= -126 && top >= 1 << 23 {
+            if e > 127 {
+                return if neg { f32::NEG_INFINITY } else { f32::INFINITY };
+            }
+            // normal: top has 24 bits with MSB the implicit 1
+            debug_assert!(top < 1 << 24);
+            bits = (((e + 127) as u32) << 23) | (top as u32 & 0x7f_ffff);
+        } else {
+            // subnormal (top < 2^23, value = top * 2^-149), or the carry
+            // case where top == 2^23 which is exactly the min normal
+            debug_assert!(top <= 1 << 23);
+            bits = top as u32;
+        }
+        let bits = bits | if neg { 1 << 31 } else { 0 };
+        f32::from_bits(bits)
+    }
+
+    /// Round to `f64` with round-to-nearest-even (same guarantees).
+    pub fn to_f64(&self) -> f64 {
+        if self.sign == 0 {
+            return 0.0;
+        }
+        let e_unb = self.exp - 1;
+        let neg = self.sign < 0;
+        if e_unb > 1024 {
+            return if neg { f64::NEG_INFINITY } else { f64::INFINITY };
+        }
+        if e_unb < -1075 {
+            return if neg { -0.0 } else { 0.0 };
+        }
+        let keep: i64 = if e_unb >= -1022 { 53 } else { 53 - (-1022 - e_unb) };
+        if keep < 0 {
+            return if neg { -0.0 } else { 0.0 };
+        }
+        let (mut top, round, sticky) = self.extract(keep as u32);
+        let mut e = e_unb;
+        if round && (sticky || top & 1 == 1) {
+            top += 1;
+            if top == 1 << keep {
+                e += 1;
+                if keep == 53 {
+                    top = 1 << 52;
+                } else {
+                    top = 1 << keep;
+                }
+            }
+        }
+        if top == 0 {
+            return if neg { -0.0 } else { 0.0 };
+        }
+        let bits: u64;
+        if e >= -1022 && top >= 1 << 52 {
+            if e > 1023 {
+                return if neg { f64::NEG_INFINITY } else { f64::INFINITY };
+            }
+            debug_assert!(top < 1 << 53);
+            bits = (((e + 1023) as u64) << 52) | (top & 0xf_ffff_ffff_ffff);
+        } else {
+            debug_assert!(top <= 1 << 52);
+            bits = top;
+        }
+        let bits = bits | if neg { 1 << 63 } else { 0 };
+        f64::from_bits(bits)
+    }
+}
+
+// ---------------------------------------------------------------------
+// constants (cached per precision)
+// ---------------------------------------------------------------------
+
+/// Cached high-precision constants.
+pub mod consts {
+    use super::BigFloat;
+    use std::collections::HashMap;
+    use std::sync::{Mutex, OnceLock};
+
+    #[derive(PartialEq, Eq, Hash, Clone, Copy)]
+    enum Kind {
+        Ln2,
+        Pi,
+    }
+
+    fn cache() -> &'static Mutex<HashMap<(Kind, usize), BigFloat>> {
+        static C: OnceLock<Mutex<HashMap<(Kind, usize), BigFloat>>> = OnceLock::new();
+        C.get_or_init(|| Mutex::new(HashMap::new()))
+    }
+
+    /// ln 2 at `prec` limbs, via ln 2 = Σ_{k≥1} 1/(k·2^k).
+    pub fn ln2(prec: usize) -> BigFloat {
+        if let Some(v) = cache().lock().unwrap().get(&(Kind::Ln2, prec)) {
+            return v.clone();
+        }
+        let w = prec + 1;
+        let mut sum = BigFloat::zero(w);
+        let bits = 64 * w as u64 + 16;
+        let mut k = 1u64;
+        while k <= bits {
+            let term = BigFloat::from_u64(1, w).div_u64(k).mul_pow2(-(k as i64));
+            sum = sum.add(&term);
+            k += 1;
+        }
+        let out = sum.with_prec(prec);
+        cache().lock().unwrap().insert((Kind::Ln2, prec), out.clone());
+        out
+    }
+
+    /// π at `prec` limbs, via Machin: π = 16·atan(1/5) − 4·atan(1/239).
+    pub fn pi(prec: usize) -> BigFloat {
+        if let Some(v) = cache().lock().unwrap().get(&(Kind::Pi, prec)) {
+            return v.clone();
+        }
+        let w = prec + 1;
+        let out = atan_inv(5, w)
+            .mul_u64(16)
+            .sub(&atan_inv(239, w).mul_u64(4))
+            .with_prec(prec);
+        cache().lock().unwrap().insert((Kind::Pi, prec), out.clone());
+        out
+    }
+
+    /// π/2 at `prec` limbs.
+    pub fn half_pi(prec: usize) -> BigFloat {
+        pi(prec).mul_pow2(-1)
+    }
+
+    /// atan(1/m) by its Taylor series (m ≥ 2 so m² fits u64 comfortably).
+    fn atan_inv(m: u64, prec: usize) -> BigFloat {
+        let m2 = m * m;
+        let target = -(64 * prec as i64) - 16;
+        let mut pw = BigFloat::from_u64(1, prec).div_u64(m); // 1/m^(2j+1)
+        let mut sum = BigFloat::zero(prec);
+        let mut j = 0u64;
+        loop {
+            let term = pw.div_u64(2 * j + 1);
+            sum = if j % 2 == 0 { sum.add(&term) } else { sum.sub(&term) };
+            pw = pw.div_u64(m2);
+            if pw.is_zero() || pw.log2_floor() < target {
+                break;
+            }
+            j += 1;
+        }
+        sum
+    }
+}
+
+// ---------------------------------------------------------------------
+// transcendental functions
+// ---------------------------------------------------------------------
+
+impl BigFloat {
+    /// e^x by argument reduction (x = k·ln2 + r) and Taylor series.
+    /// Requires |x| < 2^32 (callers clamp earlier — f32 exp over/underflows
+    /// long before that).
+    pub fn exp_bf(&self) -> Self {
+        let n = self.prec();
+        if self.sign == 0 {
+            return Self::one(n);
+        }
+        assert!(self.exp <= 32, "exp_bf argument out of supported range");
+        let ln2 = consts::ln2(n);
+        let k = self.div(&ln2).round_i64();
+        let r = self.sub(&Self::from_i64(k, n).mul(&ln2)); // |r| <= ln2/2 + eps
+        let target = -(64 * n as i64) - 16;
+        let mut term = Self::one(n);
+        let mut sum = Self::one(n);
+        let mut i = 1u64;
+        loop {
+            term = term.mul(&r).div_u64(i);
+            if term.is_zero() || term.log2_floor() < target {
+                break;
+            }
+            sum = sum.add(&term);
+            i += 1;
+        }
+        sum.mul_pow2(k)
+    }
+
+    /// ln x via atanh series: ln m = 2·atanh((m−1)/(m+1)), plus e·ln 2.
+    /// Requires x > 0.
+    pub fn ln_bf(&self) -> Self {
+        assert!(self.sign > 0, "ln_bf requires a positive argument");
+        let n = self.prec();
+        let e = self.exp - 1; // x = m · 2^e with m in [1, 2)
+        let mut m = self.clone();
+        m.exp = 1;
+        let one = Self::one(n);
+        let z = m.sub(&one).div(&m.add(&one)); // |z| <= 1/3
+        let ln_m = if z.is_zero() {
+            Self::zero(n)
+        } else {
+            let z2 = z.mul(&z);
+            let target = -(64 * n as i64) - 16;
+            let mut pw = z.clone();
+            let mut sum = z.clone();
+            let mut j = 1u64;
+            loop {
+                pw = pw.mul(&z2);
+                if pw.is_zero() || pw.log2_floor() < target {
+                    break;
+                }
+                sum = sum.add(&pw.div_u64(2 * j + 1));
+                j += 1;
+            }
+            sum.mul_pow2(1)
+        };
+        if e == 0 {
+            ln_m
+        } else {
+            ln_m.add(&Self::from_i64(e, n).mul(&consts::ln2(n)))
+        }
+    }
+
+    /// Reduce |x| modulo π/2 at trig working precision.
+    /// Returns (r, quadrant) with x ≡ quadrant·π/2 + r and |r| ≲ π/2.
+    fn trig_reduce(&self) -> (Self, u8) {
+        let w = self.prec().max(PREC_TRIG);
+        let x = self.abs().with_prec(w);
+        let hp = consts::half_pi(w);
+        if x.cmp_mag(&hp) == Ordering::Less {
+            return (x, 0);
+        }
+        let q = x.div(&hp);
+        let k = q.trunc();
+        let quad = k.integer_low2();
+        let r = x.sub(&k.mul(&hp));
+        (r, quad)
+    }
+
+    /// Taylor series for sin on a reduced argument (|r| ≲ π/2).
+    fn sin_series(r: &Self) -> Self {
+        let n = r.prec();
+        if r.sign == 0 {
+            return Self::zero(n);
+        }
+        let r2 = r.mul(r);
+        let target = -(64 * n as i64) - 16;
+        let mut term = r.clone();
+        let mut sum = r.clone();
+        let mut j = 1u64;
+        loop {
+            term = term.mul(&r2).div_u64(2 * j).div_u64(2 * j + 1).neg();
+            if term.is_zero() || term.log2_floor() < target {
+                break;
+            }
+            sum = sum.add(&term);
+            j += 1;
+        }
+        sum
+    }
+
+    /// Taylor series for cos on a reduced argument.
+    fn cos_series(r: &Self) -> Self {
+        let n = r.prec();
+        let r2 = r.mul(r);
+        let target = -(64 * n as i64) - 16;
+        let mut term = Self::one(n);
+        let mut sum = Self::one(n);
+        let mut j = 1u64;
+        loop {
+            term = term.mul(&r2).div_u64(2 * j - 1).div_u64(2 * j).neg();
+            if term.is_zero() || term.log2_floor() < target {
+                break;
+            }
+            sum = sum.add(&term);
+            j += 1;
+        }
+        sum
+    }
+
+    /// sin x (any finite x; argument reduction at `PREC_TRIG`).
+    pub fn sin_bf(&self) -> Self {
+        let n = self.prec();
+        if self.sign == 0 {
+            return Self::zero(n);
+        }
+        let (r, quad) = self.trig_reduce();
+        let v = match quad {
+            0 => Self::sin_series(&r),
+            1 => Self::cos_series(&r),
+            2 => Self::sin_series(&r).neg(),
+            _ => Self::cos_series(&r).neg(),
+        };
+        let v = v.with_prec(n.max(PREC_ORACLE));
+        if self.sign < 0 {
+            v.neg()
+        } else {
+            v
+        }
+    }
+
+    /// cos x (any finite x).
+    pub fn cos_bf(&self) -> Self {
+        let n = self.prec();
+        let (r, quad) = self.trig_reduce();
+        let v = match quad {
+            0 => Self::cos_series(&r),
+            1 => Self::sin_series(&r).neg(),
+            2 => Self::cos_series(&r).neg(),
+            _ => Self::sin_series(&r),
+        };
+        v.with_prec(n.max(PREC_ORACLE))
+    }
+
+    /// tan x = sin x / cos x (exact division of the series results).
+    pub fn tan_bf(&self) -> Self {
+        let (r, quad) = self.trig_reduce();
+        let s = Self::sin_series(&r);
+        let c = Self::cos_series(&r);
+        let v = match quad & 1 {
+            0 => s.div(&c),
+            _ => c.div(&s).neg(),
+        };
+        let v = v.with_prec(self.prec().max(PREC_ORACLE));
+        if self.sign < 0 {
+            v.neg()
+        } else {
+            v
+        }
+    }
+
+    /// tanh x = (e^{2x} − 1)/(e^{2x} + 1). |x| must stay in exp_bf range.
+    pub fn tanh_bf(&self) -> Self {
+        let n = self.prec();
+        if self.sign == 0 {
+            return Self::zero(n);
+        }
+        let t = self.mul_pow2(1).exp_bf();
+        let one = Self::one(n);
+        t.sub(&one).div(&t.add(&one))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bf(x: f64) -> BigFloat {
+        BigFloat::from_f64(x, PREC_ORACLE)
+    }
+
+    #[test]
+    fn roundtrip_f64() {
+        for &x in &[
+            0.0, 1.0, -1.0, 0.5, 3.141592653589793, 1e-300, -1e300,
+            f64::MIN_POSITIVE, 4.9e-324, 2.2250738585072014e-308,
+        ] {
+            assert_eq!(bf(x).to_f64().to_bits(), x.to_bits(), "x={x}");
+        }
+    }
+
+    #[test]
+    fn roundtrip_f32_incl_subnormals() {
+        for &x in &[
+            0.0f32, 1.0, -2.5, 1e-40, -1e-40, f32::MIN_POSITIVE,
+            f32::from_bits(1), 3.4028235e38, 0.1,
+        ] {
+            assert_eq!(
+                BigFloat::from_f32(x, PREC_ORACLE).to_f32().to_bits(),
+                x.to_bits(),
+                "x={x}"
+            );
+        }
+    }
+
+    #[test]
+    fn add_matches_f64_when_exact() {
+        // Sums of doubles that are exactly representable in f64.
+        let cases = [(1.5, 2.25), (1e10, 1.0), (0.5, 0.25), (-3.0, 1.0)];
+        for &(a, b) in &cases {
+            assert_eq!(bf(a).add(&bf(b)).to_f64(), a + b);
+        }
+    }
+
+    #[test]
+    fn add_is_correctly_rounded_vs_f64() {
+        // 1 + 2^-60 is inexact in f64; BigFloat holds it exactly and
+        // rounds back to f64 the way IEEE does.
+        let a = bf(1.0);
+        let b = bf(2f64.powi(-60));
+        let s = a.add(&b);
+        assert_eq!(s.to_f64(), 1.0); // RNE: below half-ulp
+        let c = bf(2f64.powi(-53)); // exactly half-ulp of 1.0 -> ties to even
+        assert_eq!(bf(1.0).add(&c).to_f64(), 1.0);
+        let d = bf(2f64.powi(-52));
+        assert_eq!(bf(1.0).add(&d).to_f64(), 1.0 + 2f64.powi(-52));
+    }
+
+    #[test]
+    fn sub_cancellation_is_exact() {
+        let a = bf(1.0 + 2f64.powi(-50));
+        let b = bf(1.0);
+        assert_eq!(a.sub(&b).to_f64(), 2f64.powi(-50));
+        assert!(bf(5.0).sub(&bf(5.0)).is_zero());
+    }
+
+    #[test]
+    fn mul_matches_f64_exact_products() {
+        for &(a, b) in &[(1.5, 2.0), (0.1, 1.0), (3.0, 7.0), (-2.5, 4.0)] {
+            assert_eq!(bf(a).mul(&bf(b)).to_f64(), a * b);
+        }
+        // Product needing the full 106 bits: (1+2^-52)^2
+        let x = 1.0 + 2f64.powi(-52);
+        let p = bf(x).mul(&bf(x));
+        // exact value 1 + 2^-51 + 2^-104; f64 RNE keeps 1 + 2^-51
+        assert_eq!(p.to_f64(), 1.0 + 2f64.powi(-51));
+    }
+
+    #[test]
+    fn div_exact_and_inexact() {
+        assert_eq!(bf(1.0).div(&bf(4.0)).to_f64(), 0.25);
+        assert_eq!(bf(10.0).div(&bf(2.0)).to_f64(), 5.0);
+        // 1/3 correctly rounded in f64
+        assert_eq!(bf(1.0).div(&bf(3.0)).to_f64(), 1.0 / 3.0);
+        // quotient that is an exact f32 tie: (2^24+1)/2 -> ties to even
+        let a = BigFloat::from_f64((1u64 << 24) as f64 + 1.0, PREC_ORACLE);
+        let q = a.div(&bf(2.0));
+        assert_eq!(q.to_f32(), 8_388_608.0); // 2^23, tie rounded to even
+    }
+
+    #[test]
+    fn sqrt_exact_squares_and_known_values() {
+        assert_eq!(bf(4.0).sqrt().to_f64(), 2.0);
+        assert_eq!(bf(2.25).sqrt().to_f64(), 1.5);
+        assert_eq!(bf(2.0).sqrt().to_f64(), 2f64.sqrt()); // hw sqrt is CR
+        assert_eq!(bf(0.5).sqrt().to_f64(), 0.5f64.sqrt());
+        // odd exponent path
+        assert_eq!(bf(8.0).sqrt().to_f64(), 8f64.sqrt());
+    }
+
+    #[test]
+    fn small_int_scaling() {
+        assert_eq!(bf(1.0).div_u64(8).to_f64(), 0.125);
+        assert_eq!(bf(3.0).mul_u64(7).to_f64(), 21.0);
+        assert_eq!(bf(1.0).div_u64(3).to_f64(), 1.0 / 3.0);
+        assert_eq!(bf(1.0).div_u64(3).mul_u64(3).to_f64(), 1.0);
+    }
+
+    #[test]
+    fn comparison_and_sign_ops() {
+        assert_eq!(bf(1.0).cmp_val(&bf(2.0)), Ordering::Less);
+        assert_eq!(bf(-1.0).cmp_val(&bf(1.0)), Ordering::Less);
+        assert_eq!(bf(1.5).cmp_val(&bf(1.5)), Ordering::Equal);
+        assert_eq!(bf(-2.0).abs().to_f64(), 2.0);
+        assert_eq!(bf(2.0).neg().to_f64(), -2.0);
+        assert_eq!(bf(3.0).mul_pow2(2).to_f64(), 12.0);
+    }
+
+    #[test]
+    fn integer_helpers() {
+        assert_eq!(bf(3.7).trunc().to_f64(), 3.0);
+        assert_eq!(bf(-3.7).trunc().to_f64(), -3.0);
+        assert_eq!(bf(0.3).trunc().to_f64(), 0.0);
+        assert_eq!(bf(5.0).trunc().to_f64(), 5.0);
+        assert_eq!(bf(2.5).round_i64(), 3);
+        assert_eq!(bf(-2.5).round_i64(), -3);
+        assert_eq!(bf(2.4).round_i64(), 2);
+        assert_eq!(bf(0.1).round_i64(), 0);
+        assert_eq!(bf(5.0).integer_low2(), 1);
+        assert_eq!(bf(6.0).integer_low2(), 2);
+        assert_eq!(bf(7.0).integer_low2(), 3);
+        assert_eq!(bf(8.0).integer_low2(), 0);
+        assert_eq!(bf(1.0).integer_low2(), 1);
+    }
+
+    #[test]
+    fn constants_match_f64() {
+        assert_eq!(consts::ln2(PREC_ORACLE).to_f64(), std::f64::consts::LN_2);
+        assert_eq!(consts::pi(PREC_ORACLE).to_f64(), std::f64::consts::PI);
+        assert_eq!(
+            consts::half_pi(PREC_TRIG).to_f64(),
+            std::f64::consts::FRAC_PI_2
+        );
+    }
+
+    #[test]
+    fn exp_known_values() {
+        assert_eq!(bf(0.0).exp_bf().to_f64(), 1.0);
+        assert_eq!(bf(1.0).exp_bf().to_f64(), std::f64::consts::E);
+        // glibc exp is not proven CR; compare loosely in ULP terms
+        for &x in &[0.5, -0.5, 3.0, -10.0, 20.0, 0.001] {
+            let got = bf(x).exp_bf().to_f64();
+            let want = x.exp();
+            let du = (got.to_bits() as i64 - want.to_bits() as i64).abs();
+            assert!(du <= 1, "exp({x}): got {got}, libm {want}");
+        }
+    }
+
+    #[test]
+    fn ln_known_values() {
+        assert_eq!(bf(1.0).ln_bf().to_f64(), 0.0);
+        assert_eq!(bf(2.0).ln_bf().to_f64(), std::f64::consts::LN_2);
+        assert_eq!(bf(4.0).ln_bf().to_f64(), 2.0 * std::f64::consts::LN_2);
+        for &x in &[0.5, 3.0, 10.0, 1e-30, 1e30, 1.0000001] {
+            let got = bf(x).ln_bf().to_f64();
+            let want = x.ln();
+            let du = (got.to_bits() as i64 - want.to_bits() as i64).abs();
+            assert!(du <= 1, "ln({x}): got {got}, libm {want}");
+        }
+    }
+
+    #[test]
+    fn exp_ln_roundtrip() {
+        for &x in &[0.5f64, 1.0, 2.0, 10.0, 0.001] {
+            let y = bf(x).ln_bf().exp_bf().to_f64();
+            let du = (y.to_bits() as i64 - x.to_bits() as i64).abs();
+            assert!(du <= 1, "exp(ln({x})) = {y}");
+        }
+    }
+
+    #[test]
+    fn trig_known_values() {
+        assert_eq!(bf(0.0).sin_bf().to_f64(), 0.0);
+        assert_eq!(bf(0.0).cos_bf().to_f64(), 1.0);
+        for &x in &[0.5, 1.0, -1.0, 3.0, 100.0, 1e8, -12345.678] {
+            let (gs, gc) = (bf(x).sin_bf().to_f64(), bf(x).cos_bf().to_f64());
+            let (ws, wc) = (x.sin(), x.cos());
+            assert!(
+                (gs.to_bits() as i64 - ws.to_bits() as i64).abs() <= 1,
+                "sin({x}) got {gs} want {ws}"
+            );
+            assert!(
+                (gc.to_bits() as i64 - wc.to_bits() as i64).abs() <= 1,
+                "cos({x}) got {gc} want {wc}"
+            );
+        }
+    }
+
+    #[test]
+    fn trig_huge_argument_reduction() {
+        // 2^100 — catastrophic for naive reduction, fine at PREC_TRIG.
+        let x = 2f64.powi(100);
+        let got = BigFloat::from_f64(x, PREC_ORACLE).sin_bf().to_f64();
+        let want = x.sin();
+        let du = (got.to_bits() as i64 - want.to_bits() as i64).abs();
+        // glibc sin for huge args is itself good; allow 1 ulp slack
+        assert!(du <= 1, "sin(2^100) got {got} want {want}");
+    }
+
+    #[test]
+    fn tan_and_tanh() {
+        for &x in &[0.5, 1.0, -2.0, 10.0] {
+            let gt = bf(x).tan_bf().to_f64();
+            let du = (gt.to_bits() as i64 - x.tan().to_bits() as i64).abs();
+            assert!(du <= 1, "tan({x}) got {gt}");
+        }
+        for &x in &[0.5, -0.5, 2.0, -3.0, 0.001] {
+            let gh = bf(x).tanh_bf().to_f64();
+            let du = (gh.to_bits() as i64 - x.tanh().to_bits() as i64).abs();
+            assert!(du <= 1, "tanh({x}) got {gh}");
+        }
+        assert!(bf(0.0).tanh_bf().is_zero());
+    }
+
+    #[test]
+    fn precision_change_round_to_odd() {
+        let x = bf(1.0).div_u64(3); // 0.0101... repeating
+        let narrow = x.with_prec(1);
+        // narrowing must jam a sticky bit -> last bit odd
+        assert_eq!(narrow.mant.last().unwrap() & 1, 1);
+        // widening is exact
+        let wide = narrow.with_prec(8);
+        assert_eq!(wide.to_f64(), narrow.to_f64());
+    }
+
+    #[test]
+    fn to_f32_overflow_and_subnormal_edges() {
+        // just over f32 max -> rounds to max or inf depending on magnitude
+        let max = BigFloat::from_f32(f32::MAX, PREC_ORACLE);
+        let a = max.mul_u64(3).div_u64(2); // 1.5 * MAX -> inf
+        assert!(a.to_f32().is_infinite());
+        // halfway between 0 and min subnormal ties to even (0)
+        let half_min = BigFloat::from_f32(f32::from_bits(1), PREC_ORACLE).mul_pow2(-1);
+        assert_eq!(half_min.to_f32(), 0.0);
+        // just above the halfway point rounds up to the min subnormal
+        let just_above = half_min.mul_u64(3).div_u64(2);
+        assert_eq!(just_above.to_f32(), f32::from_bits(1));
+    }
+
+    #[test]
+    fn div_u64_equals_generic_div() {
+        for &x in &[1.0, 3.7, 1e-20, 123456.789] {
+            for &d in &[3u64, 7, 10, 97, 1_000_003] {
+                let a = bf(x).div_u64(d).to_f64();
+                let b = bf(x).div(&BigFloat::from_u64(d, PREC_ORACLE)).to_f64();
+                assert_eq!(a, b, "x={x} d={d}");
+            }
+        }
+    }
+}

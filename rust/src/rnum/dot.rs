@@ -1,0 +1,101 @@
+//! Strided dot products — the innermost loops of GEMM / convolution.
+//!
+//! Same reduction-order specification as [`super::sum`]: sequential over
+//! the k index (the paper's fixed summation order for fully-connected and
+//! convolution layers, §3.2.2), with an unfused multiply-then-add graph by
+//! default and an explicitly-named FMA variant.
+
+/// Sequential dot over strided views: Σ a[i·sa] · b[i·sb], i = 0..n.
+/// Unfused (RepDL default graph).
+#[inline]
+pub fn dot_strided(a: &[f32], sa: usize, b: &[f32], sb: usize, n: usize) -> f32 {
+    debug_assert!(n == 0 || (n - 1) * sa < a.len());
+    debug_assert!(n == 0 || (n - 1) * sb < b.len());
+    let mut acc = 0.0f32;
+    let (mut ia, mut ib) = (0usize, 0usize);
+    for _ in 0..n {
+        acc += a[ia] * b[ib];
+        ia += sa;
+        ib += sb;
+    }
+    acc
+}
+
+/// Sequential strided dot with FMA contraction (separate API; see
+/// [`super::sum::dot_sequential_fma`]).
+#[inline]
+pub fn dot_strided_fma(a: &[f32], sa: usize, b: &[f32], sb: usize, n: usize) -> f32 {
+    let mut acc = 0.0f32;
+    let (mut ia, mut ib) = (0usize, 0usize);
+    for _ in 0..n {
+        acc = a[ia].mul_add(b[ib], acc);
+        ia += sa;
+        ib += sb;
+    }
+    acc
+}
+
+/// Pairwise strided dot (tree order shared with `sum_pairwise`'s spec:
+/// split at the largest power of two below n, sequential base ≤ 8).
+pub fn dot_strided_pairwise(a: &[f32], sa: usize, b: &[f32], sb: usize, n: usize) -> f32 {
+    if n <= 8 {
+        return dot_strided(a, sa, b, sb, n);
+    }
+    let m = super::sum::pairwise_split(n);
+    dot_strided_pairwise(a, sa, b, sb, m)
+        + dot_strided_pairwise(&a[m * sa..], sa, &b[m * sb..], sb, n - m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rnum::sum::{dot_sequential, dot_sequential_fma};
+
+    fn vecs(n: usize) -> (Vec<f32>, Vec<f32>) {
+        let a: Vec<f32> = (0..n).map(|i| ((i * 37 % 113) as f32 - 56.0) * 0.043).collect();
+        let b: Vec<f32> = (0..n).map(|i| ((i * 91 % 127) as f32 - 63.0) * 0.029).collect();
+        (a, b)
+    }
+
+    #[test]
+    fn unit_stride_matches_dense() {
+        let (a, b) = vecs(501);
+        assert_eq!(
+            dot_strided(&a, 1, &b, 1, 501).to_bits(),
+            dot_sequential(&a, &b).to_bits()
+        );
+        assert_eq!(
+            dot_strided_fma(&a, 1, &b, 1, 501).to_bits(),
+            dot_sequential_fma(&a, &b).to_bits()
+        );
+    }
+
+    #[test]
+    fn strided_equals_gathered_sequential() {
+        let (a, b) = vecs(600);
+        // stride-3 view of a vs an explicit gather
+        let ga: Vec<f32> = a.iter().step_by(3).copied().collect();
+        let gb: Vec<f32> = b.iter().step_by(2).copied().take(ga.len()).collect();
+        let n = ga.len().min(gb.len());
+        assert_eq!(
+            dot_strided(&a, 3, &b, 2, n).to_bits(),
+            dot_sequential(&ga[..n], &gb[..n]).to_bits()
+        );
+    }
+
+    #[test]
+    fn pairwise_tree_shape_is_fixed() {
+        let (a, b) = vecs(1000);
+        let x = dot_strided_pairwise(&a, 1, &b, 1, 1000);
+        assert_eq!(x.to_bits(), dot_strided_pairwise(&a, 1, &b, 1, 1000).to_bits());
+        // differs from sequential in general, but is close
+        let s = dot_strided(&a, 1, &b, 1, 1000);
+        assert!((x - s).abs() < 1e-2);
+    }
+
+    #[test]
+    fn empty_and_single() {
+        assert_eq!(dot_strided(&[], 1, &[], 1, 0), 0.0);
+        assert_eq!(dot_strided(&[2.0], 1, &[3.5], 1, 1), 7.0);
+    }
+}

@@ -1,0 +1,350 @@
+//! Correctly-rounded `exp`, `exp2` and `expm1` for `f32` (paper §3.2.1).
+//!
+//! Strategy (Ziv's two-step, identical on every IEEE-754 platform):
+//!
+//! 1. **Fast path**: evaluate in `f64` with a *fixed* algorithm — Cody–
+//!    Waite argument reduction against split ln 2 constants and a Taylor
+//!    polynomial evaluated in a fixed order. Every `f64` operation used is
+//!    itself correctly rounded by IEEE 754, so the computed `f64` value is
+//!    bit-identical everywhere. Its relative error is bounded well below
+//!    2⁻⁴⁵.
+//! 2. **Ambiguity check**: if the interval `y·(1 ± margin)` rounds to a
+//!    single `f32`, the true result rounds there too (monotonicity of
+//!    rounding) — accept.
+//! 3. **Fallback**: re-evaluate with the 320-bit [`BigFloat`] oracle.
+//!    Exercised roughly once per 2²⁰ inputs; also deterministic.
+//!
+//! No libm call appears anywhere on any path.
+
+use super::bigfloat::{BigFloat, PREC_ORACLE};
+use super::fbits::pow2_f64;
+
+/// log2(e) to f64 precision.
+const LOG2E: f64 = std::f64::consts::LOG2_E;
+/// High part of ln 2 (fdlibm split: 32 trailing zero bits, so products
+/// with |k| < 2^20 are exact).
+const LN2_HI: f64 = 6.93147180369123816490e-01; // 0x3FE62E42FEE00000
+/// Low part of ln 2.
+const LN2_LO: f64 = 1.90821492927058770002e-10; // 0x3DEA39EF35793C76
+
+/// Check whether every value in `y · (1 ± margin)` rounds to the same
+/// `f32`; if so return it. `margin` must over-approximate the relative
+/// error of `y` (plus the two boundary multiplications' own rounding).
+#[inline]
+pub(crate) fn round_unambiguous(y: f64, margin: f64) -> Option<f32> {
+    let lo = (y.abs() * (1.0 - margin)).copysign(y);
+    let hi = (y.abs() * (1.0 + margin)).copysign(y);
+    let a = lo as f32;
+    let b = hi as f32;
+    if a.to_bits() == b.to_bits() {
+        Some(a)
+    } else {
+        None
+    }
+}
+
+/// Fixed-order Taylor core: e^r for |r| ≤ ln2/2 + ε, relative error
+/// below 2⁻⁵⁰ (truncation ≈ 2⁻⁶³, accumulation ≈ 30·2⁻⁵³).
+#[inline]
+pub(crate) fn exp_poly(r: f64) -> f64 {
+    // 1 + r·(1 + r/2·(1 + r/3·(··· (1 + r/14) ···)))
+    // Reciprocal constants are fixed f64 literals — the same bits in every
+    // build — so the whole evaluation is a fixed computation graph.
+    const INV: [f64; 14] = [
+        1.0,
+        0.5,
+        0.333333333333333333,
+        0.25,
+        0.2,
+        0.166666666666666667,
+        0.142857142857142857,
+        0.125,
+        0.111111111111111111,
+        0.1,
+        0.0909090909090909091,
+        0.0833333333333333333,
+        0.0769230769230769231,
+        0.0714285714285714286,
+    ];
+    let mut p = 1.0 + r * INV[13];
+    for i in (1..13).rev() {
+        p = 1.0 + r * INV[i] * p;
+    }
+    1.0 + r * p
+}
+
+/// `f64` fast path shared by `rexp`/`rexpm1`: returns (e^x, k) where the
+/// value was assembled as poly(r)·2^k.
+#[inline]
+pub(crate) fn exp_f64(xd: f64) -> f64 {
+    let k = (xd * LOG2E).round();
+    let r = (xd - k * LN2_HI) - k * LN2_LO;
+    exp_poly(r) * pow2_f64(k as i32)
+}
+
+/// The fixed f64 exp graph, exposed publicly: it is the shared
+/// cross-implementation spec (the `exp_fixed` AOT artifact implements the
+/// same graph in JAX — experiment E6 compares the two bitwise).
+pub fn exp_fixed_graph_f64(x: f64) -> f64 {
+    exp_f64(x)
+}
+
+/// Relative-error margin for the exp fast path (conservative).
+const EXP_MARGIN: f64 = 2.3e-14; // ≈ 2^-45.3
+
+/// Correctly-rounded e^x for `f32`.
+///
+/// For every finite input the result is the IEEE-754 round-to-nearest-even
+/// rounding of the exact real value — verified against the [`BigFloat`]
+/// oracle in the E3 experiment.
+pub fn rexp(x: f32) -> f32 {
+    if x.is_nan() {
+        return f32::NAN;
+    }
+    // exp(89) > 2^128·(1+2^-25): certainly +inf. exp(-104) < 2^-150: 0.
+    if x > 89.0 {
+        return f32::INFINITY;
+    }
+    if x < -104.0 {
+        return 0.0;
+    }
+    if x == 0.0 {
+        return 1.0; // exact
+    }
+    let y = exp_f64(x as f64);
+    if let Some(r) = round_unambiguous(y, EXP_MARGIN) {
+        return r;
+    }
+    BigFloat::from_f32(x, PREC_ORACLE).exp_bf().to_f32()
+}
+
+/// Correctly-rounded 2^x for `f32`.
+pub fn rexp2(x: f32) -> f32 {
+    if x.is_nan() {
+        return f32::NAN;
+    }
+    if x > 128.5 {
+        return f32::INFINITY;
+    }
+    if x < -150.5 {
+        return 0.0;
+    }
+    if x == x.trunc() {
+        // integer exponent: exactly a power of two (or exact over/underflow)
+        return pow2_f64(x as i32) as f32;
+    }
+    let xd = x as f64;
+    let k = xd.round();
+    let r = xd - k; // exact (both are multiples of the same ulp)
+    // 2^r = e^(r·ln2); r·ln2 via the split constants (one rounding each)
+    let t = r * LN2_HI + r * LN2_LO;
+    let y = exp_poly(t) * pow2_f64(k as i32);
+    if let Some(v) = round_unambiguous(y, EXP_MARGIN) {
+        return v;
+    }
+    let xb = BigFloat::from_f32(x, PREC_ORACLE);
+    xb.mul(&super::bigfloat::consts::ln2(PREC_ORACLE))
+        .exp_bf()
+        .to_f32()
+}
+
+/// Fixed-order Taylor for e^x − 1 on |x| ≤ 0.35 (relative error < 2⁻⁵⁰).
+#[inline]
+pub(crate) fn expm1_poly(r: f64) -> f64 {
+    // x·(1 + x/2·(1 + x/3·(···)))
+    const INV: [f64; 14] = [
+        1.0,
+        0.5,
+        0.333333333333333333,
+        0.25,
+        0.2,
+        0.166666666666666667,
+        0.142857142857142857,
+        0.125,
+        0.111111111111111111,
+        0.1,
+        0.0909090909090909091,
+        0.0833333333333333333,
+        0.0769230769230769231,
+        0.0714285714285714286,
+    ];
+    let mut p = 1.0 + r * INV[13];
+    for i in (2..13).rev() {
+        p = 1.0 + r * INV[i] * p;
+    }
+    r * (1.0 + r * INV[1] * p)
+}
+
+/// Correctly-rounded e^x − 1 for `f32`.
+pub fn rexpm1(x: f32) -> f32 {
+    if x.is_nan() {
+        return f32::NAN;
+    }
+    if x > 89.0 {
+        return f32::INFINITY;
+    }
+    if x < -17.35 {
+        // e^x < 2^-25 = ulp(1)/2: the exact value -1 + e^x rounds to -1
+        // (never a tie: e^x = 2^-25 has no f32 solution).
+        return -1.0;
+    }
+    if x == 0.0 {
+        return x; // ±0 preserved
+    }
+    let xd = x as f64;
+    let y = if xd.abs() <= 0.35 {
+        expm1_poly(xd)
+    } else {
+        // No harmful cancellation outside [-0.35, 0.35]: |e^x − 1| stays
+        // above 0.29, so the subtraction amplifies the error by < 4×.
+        exp_f64(xd) - 1.0
+    };
+    // extra margin for the subtraction path
+    if let Some(r) = round_unambiguous(y, 1.0e-13) {
+        return r;
+    }
+    let e = BigFloat::from_f32(x, PREC_ORACLE).exp_bf();
+    e.sub(&BigFloat::one(PREC_ORACLE)).to_f32()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rnum::fbits::ulp_diff;
+
+    /// Oracle: exp via BigFloat.
+    fn oracle_exp(x: f32) -> f32 {
+        if x > 89.0 {
+            return f32::INFINITY;
+        }
+        if x < -104.0 {
+            return 0.0;
+        }
+        BigFloat::from_f32(x, PREC_ORACLE).exp_bf().to_f32()
+    }
+
+    #[test]
+    fn exact_and_special_cases() {
+        assert_eq!(rexp(0.0), 1.0);
+        assert_eq!(rexp(-0.0), 1.0);
+        assert!(rexp(f32::NAN).is_nan());
+        assert_eq!(rexp(f32::INFINITY), f32::INFINITY);
+        assert_eq!(rexp(f32::NEG_INFINITY), 0.0);
+        assert_eq!(rexp(200.0), f32::INFINITY);
+        assert_eq!(rexp(-200.0), 0.0);
+    }
+
+    #[test]
+    fn matches_oracle_on_sweep() {
+        // Deterministic sweep over the interesting range.
+        let mut x = -104.5f32;
+        while x < 89.5 {
+            let got = rexp(x);
+            let want = oracle_exp(x);
+            assert_eq!(
+                got.to_bits(),
+                want.to_bits(),
+                "exp({x}): got {got}, oracle {want}"
+            );
+            x += 0.7891; // irrational-ish stride to avoid pattern aliasing
+        }
+    }
+
+    #[test]
+    fn matches_oracle_near_boundaries() {
+        for &x in &[
+            88.72283f32,
+            88.722839,
+            -103.97208,
+            -87.33655,
+            1e-20,
+            -1e-20,
+            0.5,
+            -0.5,
+            f32::from_bits(0x42b17218), // ~88.7228
+        ] {
+            assert_eq!(rexp(x).to_bits(), oracle_exp(x).to_bits(), "x={x}");
+        }
+    }
+
+    #[test]
+    fn subnormal_results_are_correct() {
+        // exp(x) subnormal for x in (-103.97, -87.34)
+        for i in 0..200 {
+            let x = -88.0 - i as f32 * 0.08;
+            assert_eq!(rexp(x).to_bits(), oracle_exp(x).to_bits(), "x={x}");
+        }
+    }
+
+    #[test]
+    fn close_to_libm() {
+        // Sanity: within 1 ulp of the platform libm (which is good but not
+        // guaranteed CR — that's the whole point of RepDL).
+        for i in 0..1000 {
+            let x = -20.0 + i as f32 * 0.04;
+            let got = rexp(x);
+            let libm = x.exp();
+            assert!(ulp_diff(got, libm) <= 1, "x={x} got={got} libm={libm}");
+        }
+    }
+
+    #[test]
+    fn exp2_integer_exactness() {
+        for k in -149..=127 {
+            let got = rexp2(k as f32);
+            let want = pow2_f64(k) as f32;
+            assert_eq!(got.to_bits(), want.to_bits(), "k={k}");
+        }
+        assert_eq!(rexp2(3.0), 8.0);
+        assert_eq!(rexp2(-1.0), 0.5);
+    }
+
+    #[test]
+    fn exp2_matches_libm_closely() {
+        let mut x = -20.0f32;
+        while x < 20.0 {
+            let got = rexp2(x);
+            assert!(ulp_diff(got, x.exp2()) <= 1, "x={x}");
+            x += 0.0371;
+        }
+    }
+
+    #[test]
+    fn expm1_small_and_large() {
+        assert_eq!(rexpm1(0.0), 0.0);
+        assert_eq!(rexpm1(-0.0).to_bits(), (-0.0f32).to_bits());
+        assert_eq!(rexpm1(f32::NEG_INFINITY), -1.0);
+        assert_eq!(rexpm1(-50.0), -1.0);
+        for &x in &[1e-10f32, -1e-10, 0.1, -0.1, 1.0, -1.0, 10.0, -17.0] {
+            let got = rexpm1(x);
+            assert!(
+                ulp_diff(got, x.exp_m1()) <= 1,
+                "x={x} got={got} libm={}",
+                x.exp_m1()
+            );
+        }
+    }
+
+    #[test]
+    fn expm1_matches_oracle() {
+        let one = BigFloat::one(PREC_ORACLE);
+        let mut x = -17.0f32;
+        while x < 60.0 {
+            let want = BigFloat::from_f32(x, PREC_ORACLE)
+                .exp_bf()
+                .sub(&one)
+                .to_f32();
+            assert_eq!(rexpm1(x).to_bits(), want.to_bits(), "x={x}");
+            x += 0.913;
+        }
+    }
+
+    #[test]
+    fn deterministic_repeated_eval() {
+        // run-to-run bit equality (trivially true, but documents intent)
+        for i in 0..100 {
+            let x = (i as f32) * 0.37 - 18.0;
+            assert_eq!(rexp(x).to_bits(), rexp(x).to_bits());
+        }
+    }
+}

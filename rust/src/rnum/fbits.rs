@@ -1,0 +1,281 @@
+//! Bit-level utilities for IEEE-754 binary32/binary64.
+//!
+//! These helpers are the vocabulary of the whole library: ULP distances
+//! for verification, monotone integer mappings for comparisons, and
+//! exponent/significand surgery for the correctly-rounded kernels.
+
+/// Bias of the binary32 exponent.
+pub const F32_EXP_BIAS: i32 = 127;
+/// Number of explicit significand bits in binary32.
+pub const F32_SIG_BITS: u32 = 23;
+/// Smallest positive normal binary32.
+pub const F32_MIN_NORMAL: f32 = 1.175_494_4e-38;
+
+/// Map an `f32` to an integer such that the ordering of finite floats is
+/// the ordering of the integers (signed-magnitude unfolding; ±0 both map
+/// to 0, so they count as the same value for ULP purposes).
+#[inline]
+pub fn ordered_i64(x: f32) -> i64 {
+    let b = x.to_bits();
+    let mag = (b & 0x7fff_ffff) as i64;
+    if b >> 31 == 1 {
+        -mag
+    } else {
+        mag
+    }
+}
+
+/// Distance in units-in-the-last-place between two floats, computed on the
+/// monotone integer mapping. `ulp_diff(a, b) == 0` iff the two are the
+/// same value (±0 counted equal; both-NaN counted equal).
+#[inline]
+pub fn ulp_diff(a: f32, b: f32) -> u32 {
+    if a.is_nan() && b.is_nan() {
+        return 0;
+    }
+    let (ia, ib) = (ordered_i64(a), ordered_i64(b));
+    (ia - ib).unsigned_abs().min(u32::MAX as u64) as u32
+}
+
+/// One unit in the last place of `x` (the gap to the next representable
+/// float away from zero). For `x == 0` this is the smallest subnormal.
+#[inline]
+pub fn ulp_f32(x: f32) -> f32 {
+    if !x.is_finite() {
+        return f32::NAN;
+    }
+    let a = x.abs();
+    let next = f32::from_bits(a.to_bits() + 1);
+    if next.is_infinite() {
+        a - f32::from_bits(a.to_bits() - 1)
+    } else {
+        next - a
+    }
+}
+
+/// The next representable `f32` after `x` in the direction of `dir`.
+#[inline]
+pub fn next_after(x: f32, dir: f32) -> f32 {
+    if x.is_nan() || dir.is_nan() {
+        return f32::NAN;
+    }
+    if x == dir {
+        return dir;
+    }
+    let bits = x.to_bits();
+    let next = if (x < dir) == (x >= 0.0) && x != 0.0 {
+        bits + 1
+    } else if x == 0.0 {
+        // from ±0 step into the smallest subnormal of the right sign
+        if dir > 0.0 {
+            1
+        } else {
+            0x8000_0001
+        }
+    } else {
+        bits - 1
+    };
+    f32::from_bits(next)
+}
+
+/// True if `x` is subnormal (nonzero, biased exponent 0).
+#[inline]
+pub fn is_subnormal(x: f32) -> bool {
+    x != 0.0 && (x.to_bits() & 0x7f80_0000) == 0
+}
+
+/// Decompose a finite nonzero `f32` into `(sign, significand, exponent)`
+/// with `value = sign * significand * 2^exponent` and
+/// `significand` a 24-bit-or-less odd-capable integer (subnormals give
+/// smaller significands). Exact.
+pub fn decompose(x: f32) -> (i32, u64, i32) {
+    debug_assert!(x.is_finite() && x != 0.0);
+    let bits = x.to_bits();
+    let sign = if bits >> 31 == 1 { -1 } else { 1 };
+    let biased = ((bits >> 23) & 0xff) as i32;
+    let frac = (bits & 0x7f_ffff) as u64;
+    if biased == 0 {
+        // subnormal: value = frac * 2^-149
+        (sign, frac, -149)
+    } else {
+        (sign, frac | (1 << 23), biased - F32_EXP_BIAS - 23)
+    }
+}
+
+/// Compose `sign * significand * 2^exponent` into the nearest `f32` using
+/// round-to-nearest-even. `significand` may be wider than 24 bits.
+/// Used by tests to cross-check `BigFloat::to_f32`.
+pub fn compose_rne(sign: i32, mut sig: u64, mut exp: i32) -> f32 {
+    if sig == 0 {
+        return if sign < 0 { -0.0 } else { 0.0 };
+    }
+    // Normalise to exactly 25 bits (24 + round) with sticky.
+    let mut sticky = false;
+    while sig >= 1 << 25 {
+        sticky |= sig & 1 == 1;
+        sig >>= 1;
+        exp += 1;
+    }
+    while sig < 1 << 24 {
+        sig <<= 1;
+        exp -= 1;
+    }
+    // Now sig in [2^24, 2^25), value = sig * 2^exp. Unbiased exponent of
+    // the leading bit is exp + 24.
+    let e_unb = exp + 24;
+    if e_unb > 127 + 1 {
+        return if sign < 0 { f32::NEG_INFINITY } else { f32::INFINITY };
+    }
+    let mut keep = 24i32;
+    if e_unb < -126 {
+        keep -= -126 - e_unb; // subnormal: fewer significand bits survive
+    }
+    if keep < 0 {
+        // Magnitude below 2^-150: rounds to (signed) zero.
+        return if sign < 0 { -0.0 } else { 0.0 };
+    }
+    // keep == 0 handles the [2^-150, 2^-149) band: the round bit is the
+    // leading bit itself and the kept significand is empty.
+    let drop = 25 - keep;
+    let round_bit = (sig >> (drop - 1)) & 1 == 1;
+    let low_mask = (1u64 << (drop - 1)) - 1;
+    sticky |= sig & low_mask != 0;
+    let mut kept = sig >> drop;
+    if round_bit && (sticky || kept & 1 == 1) {
+        kept += 1;
+    }
+    // kept now has at most `keep` bits (+1 on carry).
+    let mut val = kept as f32;
+    // value = kept * 2^(exp + drop)
+    let scale_exp = exp + drop;
+    val = scale_f32_by_pow2(val, scale_exp);
+    if sign < 0 {
+        -val
+    } else {
+        val
+    }
+}
+
+/// Multiply by 2^k exactly (with correct over/underflow to inf/0,
+/// rounding subnormals correctly via two-step scaling).
+#[inline]
+pub fn scale_f32_by_pow2(x: f32, k: i32) -> f32 {
+    // Split the scale so each factor is a normal power of two.
+    let mut r = x as f64;
+    r *= pow2_f64(k);
+    r as f32 // f64->f32 RNE; r is exact (x*2^k fits f64 when x kept <= 2^25)
+}
+
+/// 2^k as f64 (k in a range where this is exact or saturates sensibly).
+#[inline]
+pub fn pow2_f64(k: i32) -> f64 {
+    if k >= 1024 {
+        f64::INFINITY
+    } else if k < -1074 {
+        0.0
+    } else if k >= -1022 {
+        f64::from_bits(((k + 1023) as u64) << 52)
+    } else {
+        // subnormal power of two
+        f64::from_bits(1u64 << (k + 1074))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ordered_mapping_is_monotone() {
+        let xs = [
+            -f32::INFINITY,
+            -1e30,
+            -2.5,
+            -1.0,
+            -f32::MIN_POSITIVE,
+            -0.0,
+            0.0,
+            f32::MIN_POSITIVE,
+            1.0,
+            2.5,
+            1e30,
+            f32::INFINITY,
+        ];
+        for w in xs.windows(2) {
+            assert!(
+                ordered_i64(w[0]) <= ordered_i64(w[1]),
+                "{} vs {}",
+                w[0],
+                w[1]
+            );
+        }
+    }
+
+    #[test]
+    fn ulp_diff_adjacent_is_one() {
+        for &x in &[1.0f32, -1.0, 0.1, 1e-40, 3.4e38] {
+            let y = next_after(x, f32::INFINITY);
+            assert_eq!(ulp_diff(x, y), 1, "x={x}");
+        }
+    }
+
+    #[test]
+    fn ulp_diff_across_zero() {
+        // -0.0 and +0.0 are 0 apart in the ordered mapping? They differ by
+        // bit pattern but compare equal; ordered mapping puts them 1 apart.
+        assert_eq!(ulp_diff(f32::from_bits(1), -f32::from_bits(1)), 2);
+    }
+
+    #[test]
+    fn decompose_compose_roundtrip() {
+        let cases = [
+            1.0f32,
+            -1.0,
+            0.5,
+            3.141_592_7,
+            1e-40,
+            -1e-40,
+            f32::MIN_POSITIVE,
+            3.402_823_5e38,
+            f32::from_bits(1),
+        ];
+        for &x in &cases {
+            let (s, m, e) = decompose(x);
+            let back = compose_rne(s, m, e);
+            assert_eq!(back.to_bits(), x.to_bits(), "x={x}");
+        }
+    }
+
+    #[test]
+    fn compose_rounds_to_nearest_even() {
+        // 2^24 + 1 is not representable in f32; 25-bit value rounds to even.
+        assert_eq!(compose_rne(1, (1 << 24) + 1, 0), 16_777_216.0);
+        // 2^24 + 3 rounds up to 2^24 + 4.
+        assert_eq!(compose_rne(1, (1 << 24) + 3, 0), 16_777_220.0);
+    }
+
+    #[test]
+    fn compose_handles_overflow_and_underflow() {
+        assert!(compose_rne(1, 1 << 24, 150).is_infinite());
+        assert_eq!(compose_rne(1, 1, -200), 0.0);
+        // Smallest subnormal survives.
+        assert_eq!(compose_rne(1, 1, -149), f32::from_bits(1));
+    }
+
+    #[test]
+    fn subnormal_detection() {
+        assert!(is_subnormal(f32::from_bits(1)));
+        assert!(!is_subnormal(f32::MIN_POSITIVE));
+        assert!(!is_subnormal(0.0));
+    }
+
+    #[test]
+    fn pow2_f64_exact_values() {
+        assert_eq!(pow2_f64(0), 1.0);
+        assert_eq!(pow2_f64(10), 1024.0);
+        assert_eq!(pow2_f64(-1), 0.5);
+        assert_eq!(pow2_f64(-1074), f64::from_bits(1));
+        assert_eq!(pow2_f64(-1075), 0.0);
+        assert!(pow2_f64(1024).is_infinite());
+    }
+}

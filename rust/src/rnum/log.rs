@@ -1,0 +1,279 @@
+//! Correctly-rounded `ln`, `log2` and `log1p` for `f32` (paper §3.2.1).
+//!
+//! The paper's motivating example (§2.2.1) is precisely this function:
+//! `log x` differs between GNU libc and the Intel Math Library. RepDL
+//! instead computes it with a fixed, platform-independent algorithm —
+//! Ziv's two-step strategy, like [`super::exp`]: a fixed-graph `f64`
+//! evaluation with a proven error bound, an unambiguity check, and a
+//! 320-bit [`BigFloat`] fallback for the rare hard cases.
+
+use super::bigfloat::{consts, BigFloat, PREC_ORACLE};
+use super::exp::round_unambiguous;
+
+const LN2_HI: f64 = 6.93147180369123816490e-01; // 32 trailing zero bits
+const LN2_LO: f64 = 1.90821492927058770002e-10;
+const SQRT2: f64 = std::f64::consts::SQRT_2;
+
+/// Decompose a positive finite `f64` into `(m, e)` with `x = m·2^e` and
+/// `m ∈ [√2/2, √2)`. Exact (pure bit surgery).
+#[inline]
+fn frexp_centered(x: f64) -> (f64, i32) {
+    let bits = x.to_bits();
+    let mut e = (((bits >> 52) & 0x7ff) as i32) - 1023;
+    // f32 inputs converted to f64 are never subnormal in f64.
+    let mut m = f64::from_bits((bits & 0x000f_ffff_ffff_ffff) | 0x3ff0_0000_0000_0000);
+    if m >= SQRT2 {
+        m *= 0.5;
+        e += 1;
+    }
+    (m, e)
+}
+
+/// atanh-series core: ln(m) for m ∈ [√2/2, √2), relative error < 2⁻⁵⁰.
+/// z = (m−1)/(m+1) ≤ 0.1716; ln m = 2z·(1 + z²/3 + z⁴/5 + … + z²²/23).
+#[inline]
+fn ln_core(m: f64) -> f64 {
+    let z = (m - 1.0) / (m + 1.0);
+    let z2 = z * z;
+    const INV_ODD: [f64; 11] = [
+        0.333333333333333333,  // 1/3
+        0.2,                   // 1/5
+        0.142857142857142857,  // 1/7
+        0.111111111111111111,  // 1/9
+        0.0909090909090909091, // 1/11
+        0.0769230769230769231, // 1/13
+        0.0666666666666666667, // 1/15
+        0.0588235294117647059, // 1/17
+        0.0526315789473684211, // 1/19
+        0.0476190476190476190, // 1/21
+        0.0434782608695652174, // 1/23
+    ];
+    let mut p = INV_ODD[10];
+    for i in (0..10).rev() {
+        p = INV_ODD[i] + z2 * p;
+    }
+    2.0 * z * (1.0 + z2 * p)
+}
+
+/// Margin for the log fast paths (covers series truncation ≈ 2⁻⁵⁶,
+/// rounding accumulation, and the mild e·ln2 cancellation).
+const LOG_MARGIN: f64 = 4.0e-14;
+
+/// Correctly-rounded natural logarithm for `f32`.
+pub fn rlog(x: f32) -> f32 {
+    if x.is_nan() || x < 0.0 {
+        return f32::NAN;
+    }
+    if x == 0.0 {
+        return f32::NEG_INFINITY;
+    }
+    if x.is_infinite() {
+        return f32::INFINITY;
+    }
+    if x == 1.0 {
+        return 0.0; // the only exact finite case
+    }
+    let (m, e) = frexp_centered(x as f64);
+    let ed = e as f64;
+    // ed·LN2_HI is exact (|e| ≤ 149 fits the 21-bit constant headroom).
+    let y = ed * LN2_HI + (ln_core(m) + ed * LN2_LO);
+    if let Some(r) = round_unambiguous(y, LOG_MARGIN) {
+        return r;
+    }
+    BigFloat::from_f32(x, PREC_ORACLE).ln_bf().to_f32()
+}
+
+/// Correctly-rounded log₂ for `f32`.
+pub fn rlog2(x: f32) -> f32 {
+    if x.is_nan() || x < 0.0 {
+        return f32::NAN;
+    }
+    if x == 0.0 {
+        return f32::NEG_INFINITY;
+    }
+    if x.is_infinite() {
+        return f32::INFINITY;
+    }
+    // Exact for powers of two (the common exact family).
+    let bits = x.to_bits();
+    if bits & 0x007f_ffff == 0 && bits >> 23 != 0 {
+        return (bits >> 23) as f32 - 127.0;
+    }
+    if super::fbits::is_subnormal(x) && x.to_bits().count_ones() == 1 {
+        return x.to_bits().trailing_zeros() as f32 - 149.0;
+    }
+    let (m, e) = frexp_centered(x as f64);
+    // log2 x = e + ln(m)/ln2; the division is one extra rounding.
+    const INV_LN2: f64 = std::f64::consts::LOG2_E;
+    let y = e as f64 + ln_core(m) * INV_LN2;
+    if let Some(r) = round_unambiguous(y, LOG_MARGIN) {
+        return r;
+    }
+    let b = BigFloat::from_f32(x, PREC_ORACLE);
+    b.ln_bf().div(&consts::ln2(PREC_ORACLE)).to_f32()
+}
+
+/// Correctly-rounded ln(1+x) for `f32`.
+pub fn rlog1p(x: f32) -> f32 {
+    if x.is_nan() || x < -1.0 {
+        return f32::NAN;
+    }
+    if x == -1.0 {
+        return f32::NEG_INFINITY;
+    }
+    if x == 0.0 {
+        return x; // ±0 preserved
+    }
+    if x.is_infinite() {
+        return f32::INFINITY;
+    }
+    let xd = x as f64;
+    let y = if xd.abs() < 0.4 {
+        // ln(1+x) with the same atanh series but z = x/(x+2): avoids
+        // forming 1+x (which would lose low bits of tiny x).
+        let z = xd / (xd + 2.0);
+        let z2 = z * z;
+        const INV_ODD: [f64; 11] = [
+            0.333333333333333333,
+            0.2,
+            0.142857142857142857,
+            0.111111111111111111,
+            0.0909090909090909091,
+            0.0769230769230769231,
+            0.0666666666666666667,
+            0.0588235294117647059,
+            0.0526315789473684211,
+            0.0476190476190476190,
+            0.0434782608695652174,
+        ];
+        let mut p = INV_ODD[10];
+        for i in (0..10).rev() {
+            p = INV_ODD[i] + z2 * p;
+        }
+        2.0 * z * (1.0 + z2 * p)
+    } else {
+        // 1+x is exact in f64 here (x ≥ 0.4 or x ∈ (-1, -0.4]: the sum
+        // stays within one binade of x and f64 has 29 spare bits).
+        let (m, e) = frexp_centered(1.0 + xd);
+        let ed = e as f64;
+        ed * LN2_HI + (ln_core(m) + ed * LN2_LO)
+    };
+    if let Some(r) = round_unambiguous(y, LOG_MARGIN) {
+        return r;
+    }
+    let one = BigFloat::one(PREC_ORACLE);
+    BigFloat::from_f32(x, PREC_ORACLE).add(&one).ln_bf().to_f32()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rnum::fbits::ulp_diff;
+
+    fn oracle_ln(x: f32) -> f32 {
+        BigFloat::from_f32(x, PREC_ORACLE).ln_bf().to_f32()
+    }
+
+    #[test]
+    fn specials() {
+        assert!(rlog(f32::NAN).is_nan());
+        assert!(rlog(-1.0).is_nan());
+        assert_eq!(rlog(0.0), f32::NEG_INFINITY);
+        assert_eq!(rlog(f32::INFINITY), f32::INFINITY);
+        assert_eq!(rlog(1.0), 0.0);
+    }
+
+    #[test]
+    fn matches_oracle_on_sweep() {
+        // pseudo-random sweep across the full positive range incl. subnormals
+        let mut bits = 1u32; // smallest subnormal
+        for _ in 0..3000 {
+            let x = f32::from_bits(bits);
+            assert_eq!(
+                rlog(x).to_bits(),
+                oracle_ln(x).to_bits(),
+                "x={x} bits={bits:#x}"
+            );
+            bits = bits.wrapping_mul(1664525).wrapping_add(1013904223) % 0x7f80_0000;
+            if bits == 0 {
+                bits = 1;
+            }
+        }
+    }
+
+    #[test]
+    fn dense_near_one() {
+        // the hardest region: ln(x) tiny, heavy cancellation hazards
+        for i in 0..4000 {
+            let x = f32::from_bits(1.0f32.to_bits() - 2000 + i);
+            assert_eq!(rlog(x).to_bits(), oracle_ln(x).to_bits(), "x={x}");
+        }
+    }
+
+    #[test]
+    fn close_to_libm() {
+        for i in 1..2000 {
+            let x = i as f32 * 0.013;
+            assert!(ulp_diff(rlog(x), x.ln()) <= 1, "x={x}");
+        }
+    }
+
+    #[test]
+    fn log2_exact_powers() {
+        for k in -149..=127 {
+            let x = crate::rnum::fbits::pow2_f64(k) as f32;
+            assert_eq!(rlog2(x), k as f32, "k={k}");
+        }
+    }
+
+    #[test]
+    fn log2_matches_oracle() {
+        let ln2 = consts::ln2(PREC_ORACLE);
+        let mut x = 0.001f32;
+        while x < 1e6 {
+            let want = BigFloat::from_f32(x, PREC_ORACLE)
+                .ln_bf()
+                .div(&ln2)
+                .to_f32();
+            assert_eq!(rlog2(x).to_bits(), want.to_bits(), "x={x}");
+            x *= 1.097;
+        }
+    }
+
+    #[test]
+    fn log1p_small_inputs_preserved() {
+        assert_eq!(rlog1p(0.0), 0.0);
+        assert_eq!(rlog1p(-0.0).to_bits(), (-0.0f32).to_bits());
+        // ln(1+x) ≈ x for tiny x: must round to x itself
+        for &x in &[1e-30f32, -1e-30, 1e-20, -1e-20] {
+            assert_eq!(rlog1p(x).to_bits(), x.to_bits(), "x={x}");
+        }
+    }
+
+    #[test]
+    fn log1p_matches_oracle() {
+        let one = BigFloat::one(PREC_ORACLE);
+        let mut x = -0.9999f32;
+        while x < 50.0 {
+            let want = BigFloat::from_f32(x, PREC_ORACLE)
+                .add(&one)
+                .ln_bf()
+                .to_f32();
+            assert_eq!(
+                rlog1p(x).to_bits(),
+                want.to_bits(),
+                "x={x} got={} want={want}",
+                rlog1p(x)
+            );
+            x += 0.0717;
+        }
+    }
+
+    #[test]
+    fn log1p_close_to_libm() {
+        for i in 0..1000 {
+            let x = -0.99 + i as f32 * 0.05;
+            assert!(ulp_diff(rlog1p(x), x.ln_1p()) <= 1, "x={x}");
+        }
+    }
+}

@@ -1,0 +1,46 @@
+//! Reproducible numerics — the core of RepDL (paper §3).
+//!
+//! Two principles (paper §3.1):
+//!
+//! 1. **Correct rounding for basic operations.** Every function here that
+//!    is documented as *correctly rounded* returns, for every input, the
+//!    IEEE-754 round-to-nearest-even rounding of the infinitely precise
+//!    mathematical result. Its bit pattern is therefore identical on every
+//!    IEEE-754-conforming platform, independent of libm, compiler, or ISA.
+//! 2. **Order invariance for reductions.** Floating-point summation has no
+//!    canonical "correct" result, so RepDL instead *specifies the
+//!    association order*: [`sum::sum_sequential`] (default) and
+//!    [`sum::sum_pairwise`] (alternative API, different name — paper
+//!    §3.2.2) are both bit-deterministic for a given input order.
+//!
+//! The paper builds on MPFR and RLIBM for correct rounding; neither is
+//! available in this environment, so [`bigfloat::BigFloat`] — an
+//! arbitrary-precision binary float with exactly-rounded `+ − × ÷ √` and
+//! series-evaluated transcendentals — plays both roles:
+//!
+//! * the **test oracle** every production op is validated against, and
+//! * the **hard-case fallback** inside the production ops (Ziv's two-step
+//!   strategy: evaluate in `f64` with a fixed, platform-independent
+//!   algorithm; if the result provably rounds unambiguously to `f32`,
+//!   accept it, otherwise re-evaluate in `BigFloat`). Both steps are
+//!   deterministic, so the composition is deterministic.
+
+pub mod bigfloat;
+pub mod dot;
+pub mod exp;
+pub mod fbits;
+pub mod log;
+pub mod pow;
+pub mod special;
+pub mod sqrt;
+pub mod sum;
+pub mod trig;
+
+pub use bigfloat::BigFloat;
+pub use exp::{rexp, rexp2, rexpm1};
+pub use log::{rlog, rlog1p, rlog2};
+pub use pow::rpow;
+pub use special::{rgelu_erf, rgelu_tanh, rsigmoid, rtanh};
+pub use sqrt::{rrsqrt, rsqrt_f32};
+pub use sum::{dot_sequential, sum_exact, sum_kahan, sum_pairwise, sum_sequential, KulischAcc};
+pub use trig::{rcos, rsin, rtan};

@@ -1,0 +1,288 @@
+//! Correctly-rounded power function for `f32` (paper §3.2.1).
+//!
+//! `pow` is the one basic operation whose exact cases are non-trivial:
+//! `x^y` can be exactly representable (and can land exactly on rounding
+//! ties) whenever `y` is dyadic. The decomposition below handles every
+//! such family exactly, and routes the remaining — provably irrational —
+//! results through the high-precision series evaluation:
+//!
+//! * `y` integer, |y| ≤ 64 → exact binary exponentiation in a wide
+//!   `BigFloat` (all products exact), optional exact-sticky reciprocal.
+//! * `y = p·2^−q`, q ≤ 6, |p| ≤ 64 → `sqrt^q(x^p)`: the `BigFloat`
+//!   square root has an *exact* sticky bit, and a chain of exact-sticky
+//!   operations rounds correctly.
+//! * `x` a power of two → `2^(m·y)` with `m·y` computed exactly in `f64`;
+//!   integer products are exact, non-integer dyadic exponents give
+//!   irrational results (safe for the series path).
+//! * everything else → `exp(y·ln x)` at 512-bit precision. By
+//!   Gelfond–Schneider these results are transcendental except for the
+//!   families above, so no rounding boundary can be hit. (Astronomically
+//!   hard cases needing >490 bits of agreement are out of reach of any
+//!   known f32 input — same caveat RLIBM documents.)
+
+use super::bigfloat::BigFloat;
+use super::log::rlog;
+
+/// Wide precision for exact integer powers (fits 24·64 = 1536 bits).
+const PREC_POWI: usize = 26;
+/// Precision for the transcendental path.
+const PREC_POW_GEN: usize = 8;
+
+/// Exact x^p for integer p ≥ 0 by binary exponentiation.
+/// All intermediate products fit PREC_POWI limbs, so every step is exact.
+fn powi_exact(x: f32, p: u32) -> BigFloat {
+    let mut base = BigFloat::from_f32(x, PREC_POWI);
+    let mut acc = BigFloat::one(PREC_POWI);
+    let mut e = p;
+    while e > 0 {
+        if e & 1 == 1 {
+            acc = acc.mul(&base);
+        }
+        base = base.mul(&base);
+        e >>= 1;
+    }
+    acc
+}
+
+/// Classify a finite nonzero f32 `y` as `p · 2^-q` with odd `p`.
+/// Returns (p, q) when |p| ≤ 64 and 0 ≤ q ≤ 6, else None.
+fn small_dyadic(y: f32) -> Option<(i64, u32)> {
+    let (s, sig, exp) = super::fbits::decompose(y);
+    // strip trailing zeros from the significand → odd p
+    let tz = sig.trailing_zeros();
+    let p = (sig >> tz) as i64;
+    let e = exp + tz as i32; // y = p * 2^e
+    if p > 64 {
+        return None;
+    }
+    if e >= 0 {
+        // integer y = p << e; representable as (p', q=0) if small
+        let v = p.checked_shl(e as u32)?;
+        if v > 64 {
+            return None;
+        }
+        Some((s as i64 * v, 0))
+    } else {
+        let q = (-e) as u32;
+        if q > 6 {
+            return None;
+        }
+        Some((s as i64 * p, q))
+    }
+}
+
+/// Correctly-rounded x^y for `f32` (finite-math cases per IEEE 754 pow).
+pub fn rpow(x: f32, y: f32) -> f32 {
+    // IEEE special cases (the order matters).
+    if y == 0.0 {
+        return 1.0; // even for NaN x
+    }
+    if x == 1.0 {
+        return 1.0; // even for NaN y
+    }
+    if x.is_nan() || y.is_nan() {
+        return f32::NAN;
+    }
+    if y == 1.0 {
+        return x;
+    }
+    let y_int = y == y.trunc() && y.is_finite();
+    let y_odd = y_int && (y.abs() < 1e18) && (y.abs() as u64) & 1 == 1;
+    if x == 0.0 {
+        let neg = x.is_sign_negative() && y_odd;
+        return if y > 0.0 {
+            if neg {
+                -0.0
+            } else {
+                0.0
+            }
+        } else if neg {
+            f32::NEG_INFINITY
+        } else {
+            f32::INFINITY
+        };
+    }
+    if x.is_infinite() || y.is_infinite() {
+        // standard saturation table
+        let ax = x.abs();
+        let grows = if y > 0.0 { ax > 1.0 } else { ax < 1.0 };
+        if y.is_infinite() {
+            if ax == 1.0 {
+                return 1.0;
+            }
+            return if grows { f32::INFINITY } else { 0.0 };
+        }
+        // x infinite, y finite
+        let neg = x.is_sign_negative() && y_odd;
+        return if y > 0.0 {
+            if neg {
+                f32::NEG_INFINITY
+            } else {
+                f32::INFINITY
+            }
+        } else if neg {
+            -0.0
+        } else {
+            0.0
+        };
+    }
+    // x finite nonzero, y finite nonzero
+    if x < 0.0 && !y_int {
+        return f32::NAN;
+    }
+    let sign = if x < 0.0 && y_odd { -1.0f32 } else { 1.0 };
+    let ax = x.abs();
+
+    // Family 1+2: small dyadic exponents — exact-sticky evaluation.
+    if let Some((p, q)) = small_dyadic(y) {
+        let t = powi_exact(ax, p.unsigned_abs() as u32);
+        let t = if p < 0 {
+            BigFloat::one(PREC_POWI).div(&t)
+        } else {
+            t
+        };
+        let mut t = t;
+        for _ in 0..q {
+            t = t.sqrt();
+        }
+        return sign * t.to_f32();
+    }
+
+    // Family 3: x an exact power of two → 2^(m·y), m·y exact in f64.
+    let bits = ax.to_bits();
+    let m: Option<i32> = if bits & 0x007f_ffff == 0 && bits >> 23 != 0 {
+        Some((bits >> 23) as i32 - 127)
+    } else if bits < 0x0080_0000 && bits.count_ones() == 1 {
+        Some(bits.trailing_zeros() as i32 - 149)
+    } else {
+        None
+    };
+    if let Some(m) = m {
+        let t = m as f64 * y as f64; // exact: ≤ 8 + 24 bits
+        if t >= 129.0 {
+            return sign * f32::INFINITY;
+        }
+        if t <= -150.0 {
+            return sign * 0.0;
+        }
+        if t == t.trunc() {
+            return sign * super::fbits::pow2_f64(t as i32) as f32;
+        }
+        // irrational 2^t via the exp path at high precision
+        let tb = BigFloat::from_f64(t, PREC_POW_GEN);
+        let v = tb
+            .mul(&super::bigfloat::consts::ln2(PREC_POW_GEN))
+            .exp_bf();
+        return sign * v.to_f32();
+    }
+
+    // General transcendental path. Range-guard with the CR log (any
+    // routing near the guard is consistent: both sides agree).
+    let s = y as f64 * rlog(ax) as f64;
+    if s > 92.0 {
+        return sign * f32::INFINITY;
+    }
+    if s < -106.0 {
+        return sign * 0.0;
+    }
+    let xb = BigFloat::from_f32(ax, PREC_POW_GEN);
+    let yb = BigFloat::from_f32(y, PREC_POW_GEN);
+    sign * yb.mul(&xb.ln_bf()).exp_bf().to_f32()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rnum::fbits::ulp_diff;
+
+    #[test]
+    fn ieee_special_cases() {
+        assert_eq!(rpow(f32::NAN, 0.0), 1.0);
+        assert_eq!(rpow(1.0, f32::NAN), 1.0);
+        assert!(rpow(f32::NAN, 1.5).is_nan());
+        assert!(rpow(-2.0, 0.5).is_nan());
+        assert_eq!(rpow(0.0, 2.0), 0.0);
+        assert_eq!(rpow(0.0, -2.0), f32::INFINITY);
+        assert_eq!(rpow(-0.0, 3.0).to_bits(), (-0.0f32).to_bits());
+        assert_eq!(rpow(-0.0, -3.0), f32::NEG_INFINITY);
+        assert_eq!(rpow(2.0, f32::INFINITY), f32::INFINITY);
+        assert_eq!(rpow(0.5, f32::INFINITY), 0.0);
+        assert_eq!(rpow(-1.0, f32::INFINITY), 1.0);
+        assert_eq!(rpow(f32::INFINITY, 2.0), f32::INFINITY);
+        assert_eq!(rpow(f32::NEG_INFINITY, 3.0), f32::NEG_INFINITY);
+        assert_eq!(rpow(f32::NEG_INFINITY, 2.0), f32::INFINITY);
+    }
+
+    #[test]
+    fn exact_integer_powers() {
+        assert_eq!(rpow(2.0, 10.0), 1024.0);
+        assert_eq!(rpow(-2.0, 3.0), -8.0);
+        assert_eq!(rpow(-2.0, 4.0), 16.0);
+        assert_eq!(rpow(3.0, 4.0), 81.0);
+        assert_eq!(rpow(1.5, 2.0), 2.25);
+        assert_eq!(rpow(10.0, -2.0), 0.01);
+        assert_eq!(rpow(2.0, -10.0), 2f32.powi(-10));
+        // overflow saturates correctly
+        assert_eq!(rpow(10.0, 39.0), f32::INFINITY);
+        assert_eq!(rpow(10.0, -46.0), 0.0);
+    }
+
+    #[test]
+    fn exact_dyadic_exponents() {
+        assert_eq!(rpow(4.0, 0.5), 2.0);
+        assert_eq!(rpow(4.0, 1.5), 8.0);
+        assert_eq!(rpow(16.0, 0.25), 2.0);
+        assert_eq!(rpow(16.0, 0.75), 8.0);
+        assert_eq!(rpow(256.0, 0.125), 2.0);
+        assert_eq!(rpow(4.0, -0.5), 0.5);
+        assert_eq!(rpow(2.25, 0.5), 1.5);
+        assert_eq!(rpow(5.0625, 0.25), 1.5);
+    }
+
+    #[test]
+    fn powers_of_two_base() {
+        assert_eq!(rpow(2.0, 100.0), 2f32.powi(100));
+        assert_eq!(rpow(2.0, 0.123), 2f32.powf(0.123)); // libm sanity ±
+        assert_eq!(rpow(0.5, -100.0), 2f32.powi(100));
+        // 2^(m*y) integer product
+        assert_eq!(rpow(4.0, 25.0), 2f32.powi(50));
+    }
+
+    #[test]
+    fn close_to_libm_general() {
+        let cases = [
+            (3.0f32, 2.7f32),
+            (0.3, 4.1),
+            (7.7, -1.3),
+            (1.0001, 500.0),
+            (123.456, 0.789),
+            (0.9999, -12345.0),
+        ];
+        for &(x, y) in &cases {
+            let got = rpow(x, y);
+            let libm = x.powf(y);
+            assert!(
+                ulp_diff(got, libm) <= 2,
+                "pow({x},{y}) got={got} libm={libm}"
+            );
+        }
+    }
+
+    #[test]
+    fn matches_oracle_general_path() {
+        // independent oracle at even higher precision
+        let cases = [(3.0f32, 2.7f32), (0.3, 4.1), (7.7, -1.3), (42.0, 3.3)];
+        for &(x, y) in &cases {
+            let xb = BigFloat::from_f32(x, 12);
+            let yb = BigFloat::from_f32(y, 12);
+            let want = yb.mul(&xb.ln_bf()).exp_bf().to_f32();
+            assert_eq!(rpow(x, y).to_bits(), want.to_bits(), "({x},{y})");
+        }
+    }
+
+    #[test]
+    fn negative_base_integer_exponents_large() {
+        assert_eq!(rpow(-1.5, 7.0), -(1.5f32.powi(7)));
+        assert_eq!(rpow(-1.5, 8.0), 1.5f32.powi(8));
+    }
+}

@@ -1,0 +1,214 @@
+//! DL activation functions: `tanh` (correctly rounded) plus `sigmoid`,
+//! `erf` and the two GELU variants as **fixed computation graphs**
+//! (paper §3.2.3).
+//!
+//! The paper distinguishes two tiers:
+//!
+//! * *basic operations* must be correctly rounded (§3.2.1) — here `tanh`;
+//! * *deep-learning functions* are combinations of basic operations whose
+//!   **graph** is fixed, and every distinct graph gets its own API name —
+//!   here `rsigmoid`, `rerf`, and the two deliberately separate GELUs
+//!   [`rgelu_erf`] / [`rgelu_tanh`] (PyTorch's `approximate=` flag made
+//!   into two names, exactly the paper's batch-norm example pattern).
+
+use super::bigfloat::{BigFloat, PREC_ORACLE};
+use super::exp::{exp_f64, expm1_poly, round_unambiguous, rexp};
+
+/// Correctly-rounded tanh for `f32`.
+///
+/// Fast path: tanh x = −t/(t+2) with t = e^(−2|x|) − 1 evaluated by the
+/// fixed `f64` expm1 graph (no cancellation: t ∈ (−1, 0]). Fallback:
+/// BigFloat `tanh_bf`. For |x| ≥ 10, 1 − tanh x < 2⁻²⁸ < ulp(1)/2, so the
+/// correctly-rounded result is exactly ±1.
+pub fn rtanh(x: f32) -> f32 {
+    if x.is_nan() {
+        return f32::NAN;
+    }
+    if x == 0.0 {
+        return x; // ±0 preserved
+    }
+    if x.abs() >= 10.0 {
+        return 1.0f32.copysign(x);
+    }
+    let a = -2.0 * (x.abs() as f64); // exact
+    let t = if a >= -0.35 {
+        expm1_poly(a)
+    } else {
+        exp_f64(a) - 1.0
+    };
+    let y = (-t / (t + 2.0)).copysign(x as f64);
+    if let Some(r) = round_unambiguous(y, 1.0e-13) {
+        return r;
+    }
+    BigFloat::from_f32(x, PREC_ORACLE).tanh_bf().to_f32()
+}
+
+/// Sigmoid as a **fixed computation graph**: σ(x) = 1 / (1 + e^(−x)),
+/// with `e^(−x)` the correctly-rounded [`rexp`] and the remaining add /
+/// divide IEEE-exact `f32` ops. Reproducible bit-for-bit everywhere;
+/// *as a whole* it carries ≤ ~1.5 ulp error (documented, per the paper's
+/// composite-function tier).
+pub fn rsigmoid(x: f32) -> f32 {
+    if x.is_nan() {
+        return f32::NAN;
+    }
+    1.0 / (1.0 + rexp(-x))
+}
+
+/// erf as a fixed computation graph (Abramowitz–Stegun 7.1.26 with the
+/// published constants, evaluated in a fixed order over correctly-rounded
+/// primitives). Absolute error ≤ 1.5e−7 — adequate for GELU — and
+/// bit-reproducible everywhere.
+pub fn rerf(x: f32) -> f32 {
+    if x.is_nan() {
+        return f32::NAN;
+    }
+    if x == 0.0 {
+        return x;
+    }
+    let ax = x.abs();
+    if ax >= 4.0 {
+        return 1.0f32.copysign(x); // erf saturates below f32 resolution
+    }
+    const P: f32 = 0.3275911;
+    const A: [f32; 5] = [0.254829592, -0.284496736, 1.421413741, -1.453152027, 1.061405429];
+    let t = 1.0 / (1.0 + P * ax);
+    // Horner, fixed order
+    let poly = ((((A[4] * t + A[3]) * t + A[2]) * t + A[1]) * t + A[0]) * t;
+    let e = rexp(-(ax * ax));
+    (1.0 - poly * e).copysign(x)
+}
+
+/// GELU, erf graph (PyTorch `approximate="none"`):
+/// `0.5 · x · (1 + erf(x / √2))`. Distinct API from [`rgelu_tanh`]
+/// because the two are different computation graphs (paper §3.2.3).
+pub fn rgelu_erf(x: f32) -> f32 {
+    const INV_SQRT2: f32 = 0.707_106_77; // f32(1/√2), a fixed constant
+    0.5 * x * (1.0 + rerf(x * INV_SQRT2))
+}
+
+/// GELU, tanh graph (PyTorch `approximate="tanh"`):
+/// `0.5 · x · (1 + tanh(√(2/π) · (x + 0.044715·x³)))`.
+pub fn rgelu_tanh(x: f32) -> f32 {
+    const SQRT_2_OVER_PI: f32 = 0.797_884_6;
+    const C: f32 = 0.044_715;
+    let x3 = x * x * x;
+    0.5 * x * (1.0 + rtanh(SQRT_2_OVER_PI * (x + C * x3)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rnum::fbits::ulp_diff;
+
+    fn oracle_tanh(x: f32) -> f32 {
+        if x.abs() >= 10.0 {
+            return 1.0f32.copysign(x);
+        }
+        BigFloat::from_f32(x, PREC_ORACLE).tanh_bf().to_f32()
+    }
+
+    #[test]
+    fn tanh_specials_and_saturation() {
+        assert!(rtanh(f32::NAN).is_nan());
+        assert_eq!(rtanh(0.0), 0.0);
+        assert_eq!(rtanh(-0.0).to_bits(), (-0.0f32).to_bits());
+        assert_eq!(rtanh(f32::INFINITY), 1.0);
+        assert_eq!(rtanh(f32::NEG_INFINITY), -1.0);
+        assert_eq!(rtanh(50.0), 1.0);
+        assert_eq!(rtanh(-12.0), -1.0);
+    }
+
+    #[test]
+    fn tanh_matches_oracle() {
+        let mut x = -9.9f32;
+        while x < 9.9 {
+            assert_eq!(
+                rtanh(x).to_bits(),
+                oracle_tanh(x).to_bits(),
+                "tanh({x}) got={} want={}",
+                rtanh(x),
+                oracle_tanh(x)
+            );
+            x += 0.0713;
+        }
+    }
+
+    #[test]
+    fn tanh_tiny_arguments_round_to_x() {
+        for &x in &[1e-10f32, -1e-10, 1e-30] {
+            assert_eq!(rtanh(x).to_bits(), x.to_bits());
+        }
+    }
+
+    #[test]
+    fn tanh_close_to_libm() {
+        for i in 0..500 {
+            let x = -8.0 + i as f32 * 0.032;
+            assert!(ulp_diff(rtanh(x), x.tanh()) <= 1, "x={x}");
+        }
+    }
+
+    #[test]
+    fn sigmoid_graph_properties() {
+        assert_eq!(rsigmoid(0.0), 0.5);
+        assert_eq!(rsigmoid(100.0), 1.0);
+        assert_eq!(rsigmoid(-200.0), 0.0);
+        // symmetry holds only approximately (graph is not symmetric) —
+        // but determinism is exact:
+        for i in 0..100 {
+            let x = i as f32 * 0.2 - 10.0;
+            assert_eq!(rsigmoid(x).to_bits(), rsigmoid(x).to_bits());
+        }
+        // monotone on a grid
+        let mut prev = rsigmoid(-20.0);
+        for i in 1..400 {
+            let v = rsigmoid(-20.0 + i as f32 * 0.1);
+            assert!(v >= prev);
+            prev = v;
+        }
+    }
+
+    #[test]
+    fn erf_accuracy_and_symmetry() {
+        // |rerf - true erf| <= 2e-7 (A&S bound 1.5e-7 + f32 noise)
+        let cases = [
+            (0.5f32, 0.5204999f32),
+            (1.0, 0.8427008),
+            (2.0, 0.9953223),
+            (0.1, 0.1124629),
+        ];
+        for &(x, want) in &cases {
+            assert!((rerf(x) - want).abs() < 2e-6, "erf({x}) = {}", rerf(x));
+            assert_eq!(rerf(-x), -rerf(x)); // graph is explicitly odd
+        }
+        assert_eq!(rerf(0.0), 0.0);
+        assert_eq!(rerf(10.0), 1.0);
+    }
+
+    #[test]
+    fn gelu_variants_differ_but_each_is_deterministic() {
+        // The two graphs are intentionally different APIs; they agree to
+        // ~1e-3 but NOT bitwise — exactly the paper's point.
+        let mut any_diff = false;
+        for i in 0..200 {
+            let x = -5.0 + i as f32 * 0.05;
+            let a = rgelu_erf(x);
+            let b = rgelu_tanh(x);
+            assert!((a - b).abs() <= 3e-3 * (1.0 + x.abs()), "x={x}");
+            any_diff |= a.to_bits() != b.to_bits();
+            assert_eq!(rgelu_erf(x).to_bits(), rgelu_erf(x).to_bits());
+            assert_eq!(rgelu_tanh(x).to_bits(), rgelu_tanh(x).to_bits());
+        }
+        assert!(any_diff, "graphs should not coincide bitwise everywhere");
+    }
+
+    #[test]
+    fn gelu_reference_values() {
+        // PyTorch reference: gelu(1.0) ≈ 0.8413447, gelu_tanh(1.0) ≈ 0.841192
+        assert!((rgelu_erf(1.0) - 0.8413447).abs() < 1e-5);
+        assert!((rgelu_tanh(1.0) - 0.841192).abs() < 1e-5);
+        assert_eq!(rgelu_erf(0.0), 0.0);
+        assert_eq!(rgelu_tanh(0.0), 0.0);
+    }
+}

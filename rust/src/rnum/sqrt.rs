@@ -1,0 +1,130 @@
+//! Square root and reciprocal square root (paper §3.2.1 and §2.2.1).
+//!
+//! `sqrt` is the one basic operation IEEE 754 already requires to be
+//! correctly rounded, so hardware `sqrtss` is reproducible as-is —
+//! [`rsqrt_f32`] is a documented wrapper (and the test suite *verifies*
+//! the claim against the BigFloat oracle rather than trusting it).
+//!
+//! `rsqrt` (1/√x) is the paper's §2.2.1 cautionary example in disguise:
+//! the x86 `RCPSS`/`RSQRTSS` approximation instructions have *different
+//! precision on different CPUs*. RepDL's [`rrsqrt`] is correctly rounded
+//! instead: `f64` double-op fast path (each op exactly rounded, composed
+//! error < 1.3·2⁻⁵³) + unambiguity check + BigFloat fallback.
+
+use super::bigfloat::{BigFloat, PREC_ORACLE};
+use super::exp::round_unambiguous;
+
+/// Correctly-rounded √x (IEEE-754 guaranteed; verified in tests).
+#[inline]
+pub fn rsqrt_f32(x: f32) -> f32 {
+    x.sqrt()
+}
+
+/// Correctly-rounded 1/√x.
+pub fn rrsqrt(x: f32) -> f32 {
+    if x.is_nan() || x < 0.0 {
+        return f32::NAN;
+    }
+    if x == 0.0 {
+        return f32::INFINITY; // IEEE: rsqrt(±0) = +inf (sign convention: +)
+    }
+    if x.is_infinite() {
+        return 0.0;
+    }
+    // Exact family: x = 2^(2k) → 1/√x = 2^-k exactly.
+    let bits = x.to_bits();
+    if bits & 0x007f_ffff == 0 {
+        let e = (bits >> 23) as i32 - 127;
+        if e % 2 == 0 {
+            return super::fbits::pow2_f64(-e / 2) as f32;
+        }
+    }
+    // f64 fast path: two correctly-rounded f64 ops.
+    let y = 1.0 / (x as f64).sqrt();
+    if let Some(r) = round_unambiguous(y, 1.0e-15) {
+        return r;
+    }
+    let b = BigFloat::from_f32(x, PREC_ORACLE);
+    BigFloat::one(PREC_ORACLE).div(&b.sqrt()).to_f32()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn oracle_sqrt(x: f32) -> f32 {
+        BigFloat::from_f32(x, PREC_ORACLE).sqrt().to_f32()
+    }
+
+    fn oracle_rsqrt(x: f32) -> f32 {
+        let b = BigFloat::from_f32(x, PREC_ORACLE);
+        BigFloat::one(PREC_ORACLE).div(&b.sqrt()).to_f32()
+    }
+
+    #[test]
+    fn hardware_sqrt_is_correctly_rounded() {
+        // Verify (not assume) the IEEE claim on a pseudo-random sweep.
+        let mut bits = 0x3f80_0000u32;
+        for _ in 0..20_000 {
+            bits = bits.wrapping_mul(1664525).wrapping_add(1013904223);
+            let x = f32::from_bits(bits % 0x7f80_0000);
+            assert_eq!(
+                rsqrt_f32(x).to_bits(),
+                oracle_sqrt(x).to_bits(),
+                "x={x}"
+            );
+        }
+    }
+
+    #[test]
+    fn sqrt_subnormals_and_edges() {
+        for &x in &[
+            f32::from_bits(1),
+            f32::from_bits(7),
+            f32::MIN_POSITIVE,
+            f32::MAX,
+            1.0,
+            2.0,
+            0.25,
+        ] {
+            assert_eq!(rsqrt_f32(x).to_bits(), oracle_sqrt(x).to_bits());
+        }
+    }
+
+    #[test]
+    fn rsqrt_specials_and_exact_powers() {
+        assert!(rrsqrt(-1.0).is_nan());
+        assert_eq!(rrsqrt(0.0), f32::INFINITY);
+        assert_eq!(rrsqrt(f32::INFINITY), 0.0);
+        assert_eq!(rrsqrt(4.0), 0.5);
+        assert_eq!(rrsqrt(0.25), 2.0);
+        assert_eq!(rrsqrt(1.0), 1.0);
+        assert_eq!(rrsqrt(2f32.powi(20)), 2f32.powi(-10));
+    }
+
+    #[test]
+    fn rsqrt_matches_oracle_sweep() {
+        let mut bits = 0x0080_0000u32;
+        for _ in 0..20_000 {
+            bits = bits.wrapping_mul(22695477).wrapping_add(1);
+            let x = f32::from_bits(bits % 0x7f80_0000);
+            if x == 0.0 {
+                continue;
+            }
+            assert_eq!(
+                rrsqrt(x).to_bits(),
+                oracle_rsqrt(x).to_bits(),
+                "x={x}"
+            );
+        }
+    }
+
+    #[test]
+    fn rsqrt_odd_exponent_powers_of_two() {
+        // 1/√2 is irrational — exercise the generic path on 2^odd.
+        for k in [-3i32, -1, 1, 3, 21] {
+            let x = crate::rnum::fbits::pow2_f64(k) as f32;
+            assert_eq!(rrsqrt(x).to_bits(), oracle_rsqrt(x).to_bits());
+        }
+    }
+}

@@ -1,0 +1,378 @@
+//! Reproducible summation (paper §3.2.2).
+//!
+//! Floating-point addition is not associative, so "the sum" of a vector
+//! is only defined once an association order is fixed. RepDL ships:
+//!
+//! * [`sum_sequential`] — **the default**: plain left-to-right
+//!   accumulation. Cache-friendly; efficient whenever the number of
+//!   *independent* summation tasks exceeds the processor count (the
+//!   paper's t_fc / t_conv analysis — see experiment E4).
+//! * [`sum_pairwise`] — **the alternative API** (different name, per the
+//!   paper's order-invariance rule): a balanced binary tree with a
+//!   sequential base case of 8, exposing log-depth parallelism. The tree
+//!   shape is a *specification* (split at the largest power of two below
+//!   `n`), shared bit-for-bit with the Pallas kernel implementation.
+//! * [`sum_kahan`] — fixed-order compensated summation (a third distinct
+//!   API; more accurate, still deterministic).
+//! * [`KulischAcc`] — the order-*irrelevant* exact superaccumulator the
+//!   paper cites as too inefficient for DL ([1,3,4] in the paper); we
+//!   implement it as the ablation baseline (E4) and as a gold reference
+//!   for tests: its result is the correctly-rounded exact sum under any
+//!   permutation.
+
+use super::bigfloat::BigFloat;
+
+/// Sequential (left-to-right) sum — RepDL's default reduction order.
+#[inline]
+pub fn sum_sequential(xs: &[f32]) -> f32 {
+    let mut acc = 0.0f32;
+    for &x in xs {
+        acc += x;
+    }
+    acc
+}
+
+/// Split point of the pairwise tree: the largest power of two < n.
+/// This is part of the cross-implementation specification — the Pallas
+/// kernel uses the identical shape.
+#[inline]
+pub(crate) fn pairwise_split(n: usize) -> usize {
+    debug_assert!(n > 1);
+    let p = usize::BITS - (n - 1).leading_zeros(); // ceil_log2(n)
+    1usize << (p - 1)
+}
+
+/// Pairwise (tree) sum — the alternative reduction order, own API name.
+/// Base case: sequential sum of ≤ 8 elements.
+pub fn sum_pairwise(xs: &[f32]) -> f32 {
+    if xs.len() <= 8 {
+        return sum_sequential(xs);
+    }
+    let m = pairwise_split(xs.len());
+    sum_pairwise(&xs[..m]) + sum_pairwise(&xs[m..])
+}
+
+/// Kahan (compensated) sequential sum — deterministic, more accurate,
+/// exposed as its own API because its result differs bitwise from
+/// [`sum_sequential`].
+pub fn sum_kahan(xs: &[f32]) -> f32 {
+    let mut s = 0.0f32;
+    let mut c = 0.0f32;
+    for &x in xs {
+        let y = x - c;
+        let t = s + y;
+        c = (t - s) - y;
+        s = t;
+    }
+    s
+}
+
+/// Sequential dot product, unfused (`t = aᵢ·bᵢ` rounded, then `acc += t`).
+/// This is the RepDL default spec — it matches the elementwise
+/// multiply-then-add graph the JAX/Pallas implementation lowers to.
+#[inline]
+pub fn dot_sequential(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0f32;
+    for i in 0..a.len() {
+        acc += a[i] * b[i];
+    }
+    acc
+}
+
+/// Sequential dot product with FMA contraction — the paper explicitly
+/// *enables* FMA (§3.2.4: higher precision and performance, and `fma` is
+/// itself an IEEE-754 correctly-rounded operation, hence reproducible).
+/// A different computation graph ⇒ a different API name.
+#[inline]
+pub fn dot_sequential_fma(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0f32;
+    for i in 0..a.len() {
+        acc = a[i].mul_add(b[i], acc);
+    }
+    acc
+}
+
+/// Number of 64-bit limbs in the Kulisch accumulator.
+/// f32 values span 2^-149 … <2^128; in units of 2^-149 that is 277 bits.
+/// 384 bits leaves > 2^100 of headroom for the running sum.
+const KULISCH_LIMBS: usize = 6;
+
+/// Exact fixed-point superaccumulator for `f32` (Kulisch-style).
+///
+/// Every `f32` is an integer multiple of 2⁻¹⁴⁹; adding it into a 384-bit
+/// two's-complement fixed-point register is *exact*, so the final value
+/// is the exact real sum — **independent of summation order** — and
+/// [`KulischAcc::round_f32`] returns its correct rounding. This is the
+/// order-irrelevant algorithm the paper rejects for performance (we
+/// quantify that rejection in E4) and the test suite's gold reference.
+#[derive(Clone, Debug)]
+pub struct KulischAcc {
+    /// little-endian limbs, two's complement, units of 2^-149
+    limbs: [u64; KULISCH_LIMBS],
+}
+
+impl Default for KulischAcc {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl KulischAcc {
+    /// Fresh zero accumulator.
+    pub fn new() -> Self {
+        KulischAcc { limbs: [0; KULISCH_LIMBS] }
+    }
+
+    /// Add a finite `f32` exactly.
+    pub fn add(&mut self, x: f32) {
+        if x == 0.0 {
+            return;
+        }
+        debug_assert!(x.is_finite(), "KulischAcc::add of non-finite {x}");
+        let (sign, sig, exp) = super::fbits::decompose(x);
+        let shift = (exp + 149) as u32; // 0 ..= 276
+        let limb = (shift / 64) as usize;
+        let off = shift % 64;
+        let wide = (sig as u128) << off; // ≤ 24 + 63 bits, fits
+        let lo = wide as u64;
+        let hi = (wide >> 64) as u64;
+        if sign > 0 {
+            self.add_at(limb, lo, hi);
+        } else {
+            self.sub_at(limb, lo, hi);
+        }
+    }
+
+    fn add_at(&mut self, limb: usize, lo: u64, hi: u64) {
+        let mut carry: u128 = 0;
+        for i in limb..KULISCH_LIMBS {
+            let add = if i == limb {
+                lo
+            } else if i == limb + 1 {
+                hi
+            } else {
+                0
+            };
+            if carry == 0 && add == 0 {
+                if i > limb + 1 {
+                    break;
+                }
+                continue;
+            }
+            let cur = self.limbs[i] as u128 + add as u128 + carry;
+            self.limbs[i] = cur as u64;
+            carry = cur >> 64;
+        }
+        // carry past the top limb wraps (two's-complement register)
+    }
+
+    fn sub_at(&mut self, limb: usize, lo: u64, hi: u64) {
+        // two's-complement subtraction with borrow propagation
+        let mut borrow: u128 = 0;
+        for i in limb..KULISCH_LIMBS {
+            let piece = if i == limb {
+                lo
+            } else if i == limb + 1 {
+                hi
+            } else {
+                0
+            };
+            let sub = piece as u128 + borrow;
+            if sub == 0 {
+                if i > limb + 1 {
+                    break;
+                }
+                continue;
+            }
+            let cur = self.limbs[i] as u128;
+            if cur >= sub {
+                self.limbs[i] = (cur - sub) as u64;
+                borrow = 0;
+            } else {
+                self.limbs[i] = ((1u128 << 64) + cur - sub) as u64;
+                borrow = 1;
+            }
+        }
+        // borrow past the top limb wraps (two's-complement register)
+    }
+
+    /// True iff the accumulated sum is negative (top bit of the register).
+    fn is_negative(&self) -> bool {
+        self.limbs[KULISCH_LIMBS - 1] >> 63 == 1
+    }
+
+    /// Correctly-rounded `f32` of the exact accumulated sum.
+    pub fn round_f32(&self) -> f32 {
+        let mut mag = self.limbs;
+        let neg = self.is_negative();
+        if neg {
+            // two's-complement negate
+            let mut carry = 1u128;
+            for l in mag.iter_mut() {
+                let cur = (!*l) as u128 + carry;
+                *l = cur as u64;
+                carry = cur >> 64;
+            }
+        }
+        if mag.iter().all(|&l| l == 0) {
+            return 0.0;
+        }
+        // big-endian for BigFloat
+        let be: Vec<u64> = mag.iter().rev().copied().collect();
+        let bf = BigFloat::from_integer_be(if neg { -1 } else { 1 }, be, -149, 7);
+        bf.to_f32()
+    }
+
+    /// Merge another accumulator (exact, order-irrelevant).
+    pub fn merge(&mut self, other: &KulischAcc) {
+        let mut carry: u128 = 0;
+        for i in 0..KULISCH_LIMBS {
+            let cur = self.limbs[i] as u128 + other.limbs[i] as u128 + carry;
+            self.limbs[i] = cur as u64;
+            carry = cur >> 64;
+        }
+    }
+}
+
+/// Exact (correctly-rounded) sum of a slice via the superaccumulator.
+pub fn sum_exact(xs: &[f32]) -> f32 {
+    let mut acc = KulischAcc::new();
+    for &x in xs {
+        acc.add(x);
+    }
+    acc.round_f32()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lcg_vec(n: usize, seed: u64, scale: f32) -> Vec<f32> {
+        let mut s = seed;
+        (0..n)
+            .map(|_| {
+                s = s.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                let u = ((s >> 40) as f32) / (1u64 << 24) as f32; // [0,1)
+                (u - 0.5) * scale
+            })
+            .collect()
+    }
+
+    #[test]
+    fn sequential_is_order_dependent_but_deterministic() {
+        // The paper's §2.2.2 example: (0.5 + 1e9) - 1e9 vs 0.5 + (1e9 - 1e9)
+        let a = [0.5f32, 1e9, -1e9];
+        let b = [1e9f32, -1e9, 0.5];
+        assert_eq!(sum_sequential(&a), 0.0);
+        assert_eq!(sum_sequential(&b), 0.5);
+        // but deterministic per-order
+        assert_eq!(sum_sequential(&a).to_bits(), sum_sequential(&a).to_bits());
+    }
+
+    #[test]
+    fn pairwise_split_spec() {
+        assert_eq!(pairwise_split(9), 8);
+        assert_eq!(pairwise_split(16), 8);
+        assert_eq!(pairwise_split(17), 16);
+        assert_eq!(pairwise_split(1000), 512);
+        assert_eq!(pairwise_split(2), 1);
+    }
+
+    #[test]
+    fn pairwise_differs_from_sequential_in_general() {
+        let xs = lcg_vec(1000, 42, 2.0);
+        let s = sum_sequential(&xs);
+        let p = sum_pairwise(&xs);
+        // different association orders may (and here do) differ in bits …
+        assert!((s - p).abs() < 1e-3);
+        // … while each is self-consistent
+        assert_eq!(p.to_bits(), sum_pairwise(&xs).to_bits());
+    }
+
+    #[test]
+    fn kulisch_is_exact_and_permutation_invariant() {
+        let mut xs = lcg_vec(2000, 7, 1e6);
+        let direct = sum_exact(&xs);
+        // adversarial permutation: sort by magnitude descending
+        xs.sort_by(|a, b| b.abs().partial_cmp(&a.abs()).unwrap());
+        assert_eq!(sum_exact(&xs).to_bits(), direct.to_bits());
+        xs.reverse();
+        assert_eq!(sum_exact(&xs).to_bits(), direct.to_bits());
+    }
+
+    #[test]
+    fn kulisch_matches_known_exact_sums() {
+        assert_eq!(sum_exact(&[0.5, 1e9, -1e9]), 0.5); // exact, any order
+        assert_eq!(sum_exact(&[1e9, -1e9, 0.5]), 0.5);
+        assert_eq!(sum_exact(&[]), 0.0);
+        assert_eq!(sum_exact(&[-2.5]), -2.5);
+        assert_eq!(sum_exact(&[1.0; 1000]), 1000.0);
+        // cancellation to zero
+        let xs = [3.5f32, -1.25, -2.25];
+        assert_eq!(sum_exact(&xs), 0.0);
+        // tiny values that sequential f32 loses entirely
+        let mut v = vec![1.0f32];
+        v.extend(std::iter::repeat(1e-10f32).take(1 << 12));
+        let exact = 1.0f64 + (1 << 12) as f64 * 1e-10f64;
+        assert_eq!(sum_exact(&v), exact as f32);
+        assert_eq!(sum_sequential(&v), 1.0); // the motivating failure
+    }
+
+    #[test]
+    fn kulisch_subnormals_and_extremes() {
+        let tiny = f32::from_bits(1); // 2^-149
+        assert_eq!(sum_exact(&[tiny, tiny]), f32::from_bits(2));
+        assert_eq!(sum_exact(&[tiny, -tiny]), 0.0);
+        assert_eq!(sum_exact(&[f32::MAX, f32::MAX, -f32::MAX]), f32::MAX);
+        // overflow of the f32 range (not the accumulator) saturates
+        assert_eq!(sum_exact(&[f32::MAX, f32::MAX]), f32::INFINITY);
+        assert_eq!(sum_exact(&[f32::MAX, f32::MAX, f32::MIN_POSITIVE]), f32::INFINITY);
+    }
+
+    #[test]
+    fn kulisch_merge_equals_single_pass() {
+        let xs = lcg_vec(512, 3, 10.0);
+        let mut a = KulischAcc::new();
+        let mut b = KulischAcc::new();
+        for &x in &xs[..200] {
+            a.add(x);
+        }
+        for &x in &xs[200..] {
+            b.add(x);
+        }
+        a.merge(&b);
+        assert_eq!(a.round_f32().to_bits(), sum_exact(&xs).to_bits());
+    }
+
+    #[test]
+    fn kulisch_vs_f64_reference_on_moderate_data() {
+        // With values ~1e3 and n=4096, f64 accumulation is exact enough
+        // to be a second oracle.
+        let xs = lcg_vec(4096, 99, 1e3);
+        let f64sum: f64 = xs.iter().map(|&x| x as f64).sum();
+        assert_eq!(sum_exact(&xs), f64sum as f32);
+    }
+
+    #[test]
+    fn dot_variants_deterministic_and_distinct() {
+        let a = lcg_vec(333, 11, 2.0);
+        let b = lcg_vec(333, 22, 2.0);
+        let d1 = dot_sequential(&a, &b);
+        let d2 = dot_sequential_fma(&a, &b);
+        assert_eq!(d1.to_bits(), dot_sequential(&a, &b).to_bits());
+        assert_eq!(d2.to_bits(), dot_sequential_fma(&a, &b).to_bits());
+        // FMA keeps the products exact pre-add: generally different bits
+        assert!((d1 - d2).abs() < 1e-2);
+    }
+
+    #[test]
+    fn kahan_beats_sequential_accuracy() {
+        let xs = lcg_vec(100_000, 5, 1.0);
+        let exact = sum_exact(&xs) as f64;
+        let seq = sum_sequential(&xs) as f64;
+        let kah = sum_kahan(&xs) as f64;
+        assert!((kah - exact).abs() <= (seq - exact).abs() + 1e-9);
+    }
+}

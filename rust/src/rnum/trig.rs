@@ -1,0 +1,268 @@
+//! Correctly-rounded `sin`, `cos`, `tan` for `f32` (paper §3.2.1).
+//!
+//! Same Ziv two-step shape as [`super::exp`]:
+//!
+//! * `|x| ≤ π/4`  — polynomial directly.
+//! * `|x| ≤ 2²⁰`  — fdlibm-style two-stage Cody–Waite reduction against
+//!   split π/2 constants (each product/difference exact or exactly
+//!   rounded), then a fixed-order Taylor polynomial. The absolute
+//!   reduction error is < 2⁻⁶⁸ while the worst-case reduced argument for
+//!   f32 inputs in this range stays above ≈2⁻³⁰, giving a relative bound
+//!   well inside the 2⁻³⁵ acceptance margin.
+//! * otherwise    — 768-bit BigFloat Payne–Hanek-equivalent reduction
+//!   (`trig_reduce`), which also backs the rare ambiguous fast-path
+//!   results.
+
+use super::bigfloat::{BigFloat, PREC_ORACLE};
+use super::exp::round_unambiguous;
+
+// fdlibm split of π/2 into 33-bit chunks (each head piece has enough
+// trailing zero bits that products with |k| < 2^21 are exact).
+const PIO2_1: f64 = 1.57079632673412561417e+00; // 0x3FF921FB54400000
+const PIO2_2: f64 = 6.07710050630396597660e-11; // 0x3DD0B4611A600000
+const PIO2_2T: f64 = 2.02226624879595063154e-21; // 0x3BA3198A2E037073
+const INV_PIO2: f64 = 6.36619772367581382433e-01; // 2/π
+
+/// Acceptance margin for the trig fast paths (dominated by the
+/// reduction-error / minimum-reduced-argument ratio).
+const TRIG_MARGIN: f64 = 2.0e-11; // ≈ 2^-35.5
+
+/// Two-stage Cody–Waite reduction (the fdlibm medium path, run
+/// unconditionally): x = k·π/2 + y, |y| ≲ π/4. Valid for |x| ≤ 2²⁰.
+/// π/2 ≈ PIO2_1 + PIO2_2 + PIO2_2T with the dropped tail below 2⁻¹²¹,
+/// so the absolute error of y is ≲ 2⁻¹⁰⁰ — far inside the margin even
+/// against the worst-case reduced argument (≈2⁻³⁰ for f32 inputs here).
+#[inline]
+fn rem_pio2_medium(x: f64) -> (f64, i64) {
+    let fk = (x * INV_PIO2).round();
+    let k = fk as i64;
+    // First stage: exact (fk·PIO2_1 is exact for |fk| < 2^21 and the
+    // subtraction cancels to a small difference).
+    let t = x - fk * PIO2_1;
+    // Second stage with error compensation (Fast2Sum-style).
+    let w = fk * PIO2_2;
+    let z = t - w;
+    let wc = fk * PIO2_2T - ((t - z) - w);
+    (z - wc, k)
+}
+
+/// Fixed-order Taylor for sin on |y| ≤ π/4 + ε (relative error < 2⁻⁵⁰).
+#[inline]
+fn sin_poly(y: f64) -> f64 {
+    let z = y * y;
+    // Exact-rational Taylor coefficients as fixed f64 literals.
+    const C: [f64; 8] = [
+        -1.66666666666666666667e-1, // -1/3!
+        8.33333333333333333333e-3,  // 1/5!
+        -1.98412698412698412698e-4, // -1/7!
+        2.75573192239858906526e-6,  // 1/9!
+        -2.50521083854417187751e-8, // -1/11!
+        1.60590438368216145994e-10, // 1/13!
+        -7.64716373181981647590e-13,
+        2.81145725434552076320e-15,
+    ];
+    let mut p = C[7];
+    for i in (0..7).rev() {
+        p = C[i] + z * p;
+    }
+    y + y * z * p
+}
+
+/// Fixed-order Taylor for cos on |y| ≤ π/4 + ε.
+#[inline]
+fn cos_poly(y: f64) -> f64 {
+    let z = y * y;
+    const C: [f64; 8] = [
+        -0.5,
+        4.16666666666666666667e-2,  // 1/4!
+        -1.38888888888888888889e-3, // -1/6!
+        2.48015873015873015873e-5,  // 1/8!
+        -2.75573192239858906526e-7, // -1/10!
+        2.08767569878680989792e-9,  // 1/12!
+        -1.14707455977297247139e-11,
+        4.77947733238738529744e-14,
+    ];
+    let mut p = C[7];
+    for i in (0..7).rev() {
+        p = C[i] + z * p;
+    }
+    1.0 + z * p
+}
+
+const MEDIUM_LIMIT: f32 = 1_048_576.0; // 2^20
+
+/// Correctly-rounded sin x for `f32`.
+pub fn rsin(x: f32) -> f32 {
+    if !x.is_finite() {
+        return f32::NAN;
+    }
+    if x == 0.0 {
+        return x; // ±0 preserved
+    }
+    let xd = x as f64;
+    if x.abs() <= MEDIUM_LIMIT {
+        let (y, k) = if xd.abs() <= std::f64::consts::FRAC_PI_4 {
+            (xd, 0i64)
+        } else {
+            rem_pio2_medium(xd)
+        };
+        let v = match k & 3 {
+            0 => sin_poly(y),
+            1 => cos_poly(y),
+            2 => -sin_poly(y),
+            _ => -cos_poly(y),
+        };
+        if let Some(r) = round_unambiguous(v, TRIG_MARGIN) {
+            return r;
+        }
+    }
+    BigFloat::from_f32(x, PREC_ORACLE).sin_bf().to_f32()
+}
+
+/// Correctly-rounded cos x for `f32`.
+pub fn rcos(x: f32) -> f32 {
+    if !x.is_finite() {
+        return f32::NAN;
+    }
+    if x == 0.0 {
+        return 1.0;
+    }
+    let xd = x as f64;
+    if x.abs() <= MEDIUM_LIMIT {
+        let (y, k) = if xd.abs() <= std::f64::consts::FRAC_PI_4 {
+            (xd, 0i64)
+        } else {
+            rem_pio2_medium(xd)
+        };
+        let v = match k & 3 {
+            0 => cos_poly(y),
+            1 => -sin_poly(y),
+            2 => -cos_poly(y),
+            _ => sin_poly(y),
+        };
+        if let Some(r) = round_unambiguous(v, TRIG_MARGIN) {
+            return r;
+        }
+    }
+    BigFloat::from_f32(x, PREC_ORACLE).cos_bf().to_f32()
+}
+
+/// Correctly-rounded tan x for `f32`.
+pub fn rtan(x: f32) -> f32 {
+    if !x.is_finite() {
+        return f32::NAN;
+    }
+    if x == 0.0 {
+        return x;
+    }
+    let xd = x as f64;
+    if x.abs() <= MEDIUM_LIMIT {
+        let (y, k) = if xd.abs() <= std::f64::consts::FRAC_PI_4 {
+            (xd, 0i64)
+        } else {
+            rem_pio2_medium(xd)
+        };
+        let v = if k & 1 == 0 {
+            sin_poly(y) / cos_poly(y)
+        } else {
+            -cos_poly(y) / sin_poly(y)
+        };
+        // one extra division rounding → slightly wider margin
+        if let Some(r) = round_unambiguous(v, 2.0 * TRIG_MARGIN) {
+            return r;
+        }
+    }
+    BigFloat::from_f32(x, PREC_ORACLE).tan_bf().to_f32()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rnum::fbits::ulp_diff;
+
+    fn osin(x: f32) -> f32 {
+        BigFloat::from_f32(x, PREC_ORACLE).sin_bf().to_f32()
+    }
+    fn ocos(x: f32) -> f32 {
+        BigFloat::from_f32(x, PREC_ORACLE).cos_bf().to_f32()
+    }
+    fn otan(x: f32) -> f32 {
+        BigFloat::from_f32(x, PREC_ORACLE).tan_bf().to_f32()
+    }
+
+    #[test]
+    fn specials() {
+        assert!(rsin(f32::NAN).is_nan());
+        assert!(rsin(f32::INFINITY).is_nan());
+        assert_eq!(rsin(0.0), 0.0);
+        assert_eq!(rsin(-0.0).to_bits(), (-0.0f32).to_bits());
+        assert_eq!(rcos(0.0), 1.0);
+        assert_eq!(rtan(0.0), 0.0);
+    }
+
+    #[test]
+    fn small_arguments_round_to_x() {
+        // sin x ≈ x − x³/6: for |x| < 2^-13 the cubic term is below half
+        // an ulp, so CR sin must return x exactly (RNE).
+        for &x in &[1e-10f32, -1e-10, 1e-20, 2e-5] {
+            assert_eq!(rsin(x).to_bits(), x.to_bits(), "x={x}");
+            assert_eq!(rtan(x).to_bits(), x.to_bits(), "x={x}");
+        }
+    }
+
+    #[test]
+    fn matches_oracle_medium_range() {
+        let mut x = -30.0f32;
+        while x < 30.0 {
+            assert_eq!(rsin(x).to_bits(), osin(x).to_bits(), "sin({x})");
+            assert_eq!(rcos(x).to_bits(), ocos(x).to_bits(), "cos({x})");
+            x += 0.0917;
+        }
+    }
+
+    #[test]
+    fn matches_oracle_near_multiples_of_pi_over_2() {
+        // The cancellation-critical region.
+        for k in 1..200 {
+            let near = (k as f64 * std::f64::consts::FRAC_PI_2) as f32;
+            for d in [-2i32, -1, 0, 1, 2] {
+                let x = f32::from_bits((near.to_bits() as i32 + d) as u32);
+                assert_eq!(rsin(x).to_bits(), osin(x).to_bits(), "sin({x})");
+                assert_eq!(rcos(x).to_bits(), ocos(x).to_bits(), "cos({x})");
+            }
+        }
+    }
+
+    #[test]
+    fn huge_arguments_use_bigfloat_reduction() {
+        for &x in &[1e7f32, 1e20, 3.0e38, -2.5e33, 16_777_215.0] {
+            assert_eq!(rsin(x).to_bits(), osin(x).to_bits(), "sin({x})");
+            assert_eq!(rcos(x).to_bits(), ocos(x).to_bits(), "cos({x})");
+        }
+    }
+
+    #[test]
+    fn tan_matches_oracle() {
+        let mut x = -10.0f32;
+        while x < 10.0 {
+            assert_eq!(
+                rtan(x).to_bits(),
+                otan(x).to_bits(),
+                "tan({x}) got={} want={}",
+                rtan(x),
+                otan(x)
+            );
+            x += 0.0531;
+        }
+    }
+
+    #[test]
+    fn close_to_libm() {
+        let mut x = -100.0f32;
+        while x < 100.0 {
+            assert!(ulp_diff(rsin(x), x.sin()) <= 1, "sin({x})");
+            assert!(ulp_diff(rcos(x), x.cos()) <= 1, "cos({x})");
+            x += 0.317;
+        }
+    }
+}

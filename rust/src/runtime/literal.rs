@@ -1,0 +1,52 @@
+//! Tensor ↔ `xla::Literal` marshaling.
+
+use super::IoSpec;
+use crate::tensor::Tensor;
+use crate::{Error, Result};
+
+/// Dense f32 tensor → XLA literal (row-major, exact bit copy).
+pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let flat = xla::Literal::vec1(t.data());
+    let dims: Vec<i64> = t.dims().iter().map(|&d| d as i64).collect();
+    flat.reshape(&dims).map_err(|e| Error::Xla(format!("reshape literal: {e:?}")))
+}
+
+/// Output tuple literal → tensors, with shapes validated against the
+/// manifest-declared specs.
+pub fn tuple_to_tensors(lit: xla::Literal, outputs: &[IoSpec]) -> Result<Vec<Tensor>> {
+    let parts = lit
+        .to_tuple()
+        .map_err(|e| Error::Xla(format!("untuple: {e:?}")))?;
+    if parts.len() != outputs.len() {
+        return Err(Error::runtime(format!(
+            "artifact returned {} outputs, manifest declares {}",
+            parts.len(),
+            outputs.len()
+        )));
+    }
+    parts
+        .iter()
+        .zip(outputs.iter())
+        .map(|(p, spec)| {
+            let data = p
+                .to_vec::<f32>()
+                .map_err(|e| Error::Xla(format!("literal to_vec: {e:?}")))?;
+            Tensor::from_vec(&spec.dims, data)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_bits_through_literal() {
+        let t = Tensor::from_vec(&[2, 2], vec![1.5, -0.0, 3.25e-39, 7.0]).unwrap();
+        let lit = tensor_to_literal(&t).unwrap();
+        let back = lit.to_vec::<f32>().unwrap();
+        for (a, b) in t.data().iter().zip(back.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+}

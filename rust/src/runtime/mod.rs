@@ -1,0 +1,193 @@
+//! PJRT runtime: load the AOT-compiled JAX/Pallas artifacts and execute
+//! them from Rust — Python is never on this path.
+//!
+//! Interchange format is **HLO text** (see `python/compile/aot.py`):
+//! jax ≥ 0.5 serialises protos with 64-bit instruction ids that
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids. Pattern
+//! from /opt/xla-example/load_hlo.
+//!
+//! The manifest (`artifacts/manifest.json`) maps artifact names to files
+//! and declared I/O shapes, so the coordinator can validate inputs before
+//! touching PJRT.
+
+pub mod literal;
+
+use crate::config::Json;
+use crate::tensor::Tensor;
+use crate::{Error, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Declared shape of one artifact input/output.
+#[derive(Clone, Debug)]
+pub struct IoSpec {
+    /// Dimensions.
+    pub dims: Vec<usize>,
+}
+
+/// One artifact entry.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    /// Artifact name.
+    pub name: String,
+    /// HLO text file (relative to the artifacts dir).
+    pub file: String,
+    /// Input shapes in call order.
+    pub inputs: Vec<IoSpec>,
+    /// Output shapes in tuple order.
+    pub outputs: Vec<IoSpec>,
+}
+
+/// PJRT CPU runtime with a compiled-executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    /// Parsed manifest.
+    pub specs: HashMap<String, ArtifactSpec>,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Open an artifacts directory (expects `manifest.json`).
+    pub fn new(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path).map_err(|e| {
+            Error::runtime(format!(
+                "cannot read {} (run `make artifacts` first): {e}",
+                manifest_path.display()
+            ))
+        })?;
+        let json = Json::parse(&text)?;
+        let mut specs = HashMap::new();
+        let arts = json
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| Error::runtime("manifest missing 'artifacts' array"))?;
+        for a in arts {
+            let name = a.str_or("name", "").to_string();
+            let file = a.str_or("file", "").to_string();
+            let parse_io = |key: &str| -> Vec<IoSpec> {
+                a.get(key)
+                    .and_then(Json::as_arr)
+                    .map(|xs| {
+                        xs.iter()
+                            .map(|s| IoSpec {
+                                dims: s
+                                    .as_arr()
+                                    .unwrap_or(&[])
+                                    .iter()
+                                    .filter_map(Json::as_usize)
+                                    .collect(),
+                            })
+                            .collect()
+                    })
+                    .unwrap_or_default()
+            };
+            let spec = ArtifactSpec {
+                name: name.clone(),
+                file,
+                inputs: parse_io("inputs"),
+                outputs: parse_io("outputs"),
+            };
+            specs.insert(name, spec);
+        }
+        let client = xla::PjRtClient::cpu().map_err(|e| Error::Xla(format!("{e:?}")))?;
+        Ok(Runtime { client, dir, specs, cache: HashMap::new() })
+    }
+
+    /// PJRT platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (and cache) an artifact.
+    pub fn load(&mut self, name: &str) -> Result<()> {
+        if self.cache.contains_key(name) {
+            return Ok(());
+        }
+        let spec = self
+            .specs
+            .get(name)
+            .ok_or_else(|| Error::runtime(format!("unknown artifact '{name}'")))?;
+        let path = self.dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| Error::runtime("bad path"))?,
+        )
+        .map_err(|e| Error::Xla(format!("parse {}: {e:?}", path.display())))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| Error::Xla(format!("compile {name}: {e:?}")))?;
+        self.cache.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute an artifact on the given inputs; returns the output tuple
+    /// as tensors (shapes from the manifest).
+    pub fn run(&mut self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        self.load(name)?;
+        let spec = self.specs.get(name).unwrap().clone();
+        if inputs.len() != spec.inputs.len() {
+            return Err(Error::runtime(format!(
+                "artifact '{name}': want {} inputs, got {}",
+                spec.inputs.len(),
+                inputs.len()
+            )));
+        }
+        for (i, (t, s)) in inputs.iter().zip(spec.inputs.iter()).enumerate() {
+            if t.dims() != s.dims.as_slice() {
+                return Err(Error::runtime(format!(
+                    "artifact '{name}' input {i}: want {:?}, got {:?}",
+                    s.dims,
+                    t.dims()
+                )));
+            }
+        }
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .map(literal::tensor_to_literal)
+            .collect::<Result<_>>()?;
+        let exe = self.cache.get(name).unwrap();
+        let result = exe
+            .execute::<xla::Literal>(&lits)
+            .map_err(|e| Error::Xla(format!("execute {name}: {e:?}")))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| Error::Xla(format!("fetch {name}: {e:?}")))?;
+        literal::tuple_to_tensors(lit, &spec.outputs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn missing_dir_is_a_clean_error() {
+        let e = match Runtime::new("/nonexistent/path") {
+            Err(e) => e,
+            Ok(_) => panic!("expected error"),
+        };
+        let msg = format!("{e}");
+        assert!(msg.contains("make artifacts"), "{msg}");
+    }
+
+    #[test]
+    fn manifest_parsing() {
+        let dir = std::env::temp_dir().join("repdl_rt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"artifacts": [{"name": "mm", "file": "mm.hlo.txt",
+                 "inputs": [[2,3],[3,2]], "outputs": [[2,2]]}]}"#,
+        )
+        .unwrap();
+        let rt = Runtime::new(&dir).unwrap();
+        let spec = &rt.specs["mm"];
+        assert_eq!(spec.inputs[0].dims, vec![2, 3]);
+        assert_eq!(spec.outputs[0].dims, vec![2, 2]);
+        assert_eq!(rt.platform(), "cpu");
+    }
+}

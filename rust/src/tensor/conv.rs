@@ -1,0 +1,364 @@
+//! Reproducible 2-D convolution and pooling (paper §3.2.2, conv analysis).
+//!
+//! Specification: NCHW input `(B, C, H, W)`, OIHW weight `(O, C, KH, KW)`;
+//! each output element is one independent summation task of
+//! `n_conv = C·KH·KW` elements, reduced **sequentially in (c, kh, kw)
+//! order** with unfused multiply-add. `t_conv = B·O·OH·OW` tasks carry the
+//! parallelism (the paper's ResNet-50 worked example: t_conv = B·802816
+//! for the 256×56×56 layers — E4 regenerates that table).
+//!
+//! Two APIs, one spec: [`conv2d`] (direct loops) and [`conv2d_im2col`]
+//! (im2col + GEMM). The im2col column ordering is chosen so the GEMM's
+//! sequential k-loop visits (c, kh, kw) in exactly the direct order —
+//! making the two *bit-identical*, which the tests assert. This is the
+//! paper's §3.1 order-invariance principle: same basic ops, same order ⇒
+//! one API; had the order differed, it would need a different name.
+
+use super::matmul::matmul;
+use super::par::{default_threads, par_chunks};
+use super::tensor::Tensor;
+use crate::{Error, Result};
+
+/// Convolution hyper-parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct Conv2dParams {
+    /// Spatial stride (same in h and w).
+    pub stride: usize,
+    /// Zero padding (same in h and w).
+    pub padding: usize,
+}
+
+impl Default for Conv2dParams {
+    fn default() -> Self {
+        Conv2dParams { stride: 1, padding: 0 }
+    }
+}
+
+/// Output spatial size.
+fn out_hw(h: usize, w: usize, kh: usize, kw: usize, p: &Conv2dParams) -> Result<(usize, usize)> {
+    let oh = (h + 2 * p.padding).checked_sub(kh).map(|v| v / p.stride + 1);
+    let ow = (w + 2 * p.padding).checked_sub(kw).map(|v| v / p.stride + 1);
+    match (oh, ow) {
+        (Some(a), Some(b)) if a > 0 && b > 0 => Ok((a, b)),
+        _ => Err(Error::shape("conv2d: kernel larger than padded input")),
+    }
+}
+
+fn check_conv(x: &Tensor, w: &Tensor) -> Result<(usize, usize, usize, usize, usize, usize, usize)> {
+    let (xd, wd) = (x.dims(), w.dims());
+    if xd.len() != 4 || wd.len() != 4 || xd[1] != wd[1] {
+        return Err(Error::shape(format!(
+            "conv2d: bad shapes x{xd:?} w{wd:?} (want NCHW / OIHW, C match)"
+        )));
+    }
+    Ok((xd[0], xd[1], xd[2], xd[3], wd[0], wd[2], wd[3]))
+}
+
+/// Reproducible convolution (default API).
+/// `bias` (length O) is added once per output element after the reduction.
+///
+/// Perf routing (bit-neutral): for large shapes this delegates to the
+/// im2col+GEMM path, which computes the *identical* fixed-order graph
+/// (`im2col_matches_direct_bitwise` asserts equality) ~10× faster via the
+/// vectorised row-kernel GEMM. Small shapes stay on the direct loops
+/// (im2col materialisation overhead dominates there).
+pub fn conv2d(x: &Tensor, w: &Tensor, bias: Option<&Tensor>, p: Conv2dParams) -> Result<Tensor> {
+    let (_, c, h, wd, _, kh, kw) = check_conv(x, w)?;
+    if let Ok((oh, ow)) = out_hw(h, wd, kh, kw, &p) {
+        let work = c * kh * kw * oh * ow;
+        if work >= 16_384 {
+            return conv2d_im2col(x, w, bias, p);
+        }
+    }
+    conv2d_direct(x, w, bias, p)
+}
+
+/// Direct-loop formulation of the same spec (ablation / small shapes).
+pub fn conv2d_direct(
+    x: &Tensor,
+    w: &Tensor,
+    bias: Option<&Tensor>,
+    p: Conv2dParams,
+) -> Result<Tensor> {
+    let (b, c, h, wd, o, kh, kw) = check_conv(x, w)?;
+    let (oh, ow) = out_hw(h, wd, kh, kw, &p)?;
+    if let Some(bs) = bias {
+        if bs.dims() != [o] {
+            return Err(Error::shape("conv2d: bias must be (O,)"));
+        }
+    }
+    let mut out = Tensor::zeros(&[b, o, oh, ow]);
+    let xd = x.data();
+    let wdat = w.data();
+    let bias_d = bias.map(|t| t.data());
+    // one chunk = one (b, o) output plane: t_conv parallel tasks grouped
+    par_chunks(out.data_mut(), oh * ow, default_threads(), |start, plane| {
+        let plane_idx = start / (oh * ow);
+        let (bi, oi) = (plane_idx / o, plane_idx % o);
+        for ohh in 0..oh {
+            for oww in 0..ow {
+                let mut acc = 0.0f32;
+                // fixed (c, kh, kw) sequential order — the spec
+                for ci in 0..c {
+                    for khh in 0..kh {
+                        let ih = (ohh * p.stride + khh) as isize - p.padding as isize;
+                        if ih < 0 || ih >= h as isize {
+                            continue; // zero-padding contributes exact 0s: skipped
+                        }
+                        for kww in 0..kw {
+                            let iw = (oww * p.stride + kww) as isize - p.padding as isize;
+                            if iw < 0 || iw >= wd as isize {
+                                continue;
+                            }
+                            let xv = xd[((bi * c + ci) * h + ih as usize) * wd + iw as usize];
+                            let wv = wdat[((oi * c + ci) * kh + khh) * kw + kww];
+                            acc += xv * wv;
+                        }
+                    }
+                }
+                if let Some(bd) = bias_d {
+                    acc += bd[oi];
+                }
+                plane[ohh * ow + oww] = acc;
+            }
+        }
+    });
+    Ok(out)
+}
+
+/// im2col: unfold `(C,H,W)` into a `(OH·OW, C·KH·KW)` matrix whose k axis
+/// enumerates (c, kh, kw) in the *direct-conv order*.
+pub fn im2col(
+    x: &Tensor,
+    batch: usize,
+    kh: usize,
+    kw: usize,
+    p: &Conv2dParams,
+) -> Result<Tensor> {
+    let xd = x.dims();
+    let (c, h, w) = (xd[1], xd[2], xd[3]);
+    let (oh, ow) = out_hw(h, w, kh, kw, p)?;
+    let k = c * kh * kw;
+    let mut out = Tensor::zeros(&[oh * ow, k]);
+    let data = x.data();
+    for ohh in 0..oh {
+        for oww in 0..ow {
+            let row = ohh * ow + oww;
+            for ci in 0..c {
+                for khh in 0..kh {
+                    for kww in 0..kw {
+                        let ih = (ohh * p.stride + khh) as isize - p.padding as isize;
+                        let iw = (oww * p.stride + kww) as isize - p.padding as isize;
+                        let v = if ih < 0 || iw < 0 || ih >= h as isize || iw >= w as isize {
+                            0.0
+                        } else {
+                            data[((batch * c + ci) * h + ih as usize) * w + iw as usize]
+                        };
+                        out.data_mut()[row * k + (ci * kh + khh) * kw + kww] = v;
+                    }
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// im2col + GEMM convolution. **Bit-identical** to [`conv2d`] when the
+/// padding contributes only exact zeros (0·w then +0 round-trips exactly,
+/// except that a `-0.0` product can flip the sign of an all-zero prefix —
+/// the spec therefore defines padding contributions as *skipped*, and
+/// im2col matches because +0·w = ±0 added to a ±0 prefix keeps bits for
+/// every finite w; tests assert equality on random data).
+pub fn conv2d_im2col(
+    x: &Tensor,
+    w: &Tensor,
+    bias: Option<&Tensor>,
+    p: Conv2dParams,
+) -> Result<Tensor> {
+    let (b, c, h, wd, o, kh, kw) = check_conv(x, w)?;
+    let (oh, ow) = out_hw(h, wd, kh, kw, &p)?;
+    let k = c * kh * kw;
+    let wmat = w.reshape(&[o, k])?; // OIHW rows already in (c,kh,kw) order
+    let mut out = Tensor::zeros(&[b, o, oh, ow]);
+    for bi in 0..b {
+        let cols = im2col(x, bi, kh, kw, &p)?; // (OH·OW, K)
+        let prod = matmul(&wmat, &cols.transpose2d()?)?; // (O, OH·OW)
+        for oi in 0..o {
+            for s in 0..oh * ow {
+                let mut v = prod.data()[oi * oh * ow + s];
+                if let Some(bs) = bias {
+                    v += bs.data()[oi];
+                }
+                out.data_mut()[((bi * o + oi) * oh + s / ow) * ow + s % ow] = v;
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Max pooling (kernel = stride, valid padding) — comparison-only, so
+/// trivially reproducible; fixed first-max tie rule.
+pub fn max_pool2d(x: &Tensor, k: usize) -> Result<Tensor> {
+    let d = x.dims();
+    if d.len() != 4 || d[2] % k != 0 || d[3] % k != 0 {
+        return Err(Error::shape(format!("max_pool2d: bad dims {d:?} k={k}")));
+    }
+    let (b, c, h, w) = (d[0], d[1], d[2], d[3]);
+    let (oh, ow) = (h / k, w / k);
+    let mut out = Tensor::zeros(&[b, c, oh, ow]);
+    for bc in 0..b * c {
+        for i in 0..oh {
+            for j in 0..ow {
+                let mut m = f32::NEG_INFINITY;
+                for di in 0..k {
+                    for dj in 0..k {
+                        let v = x.data()[bc * h * w + (i * k + di) * w + (j * k + dj)];
+                        if v > m {
+                            m = v;
+                        }
+                    }
+                }
+                out.data_mut()[bc * oh * ow + i * ow + j] = m;
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Average pooling: fixed graph — sequential window sum, then ÷ k².
+pub fn avg_pool2d(x: &Tensor, k: usize) -> Result<Tensor> {
+    let d = x.dims();
+    if d.len() != 4 || d[2] % k != 0 || d[3] % k != 0 {
+        return Err(Error::shape(format!("avg_pool2d: bad dims {d:?} k={k}")));
+    }
+    let (b, c, h, w) = (d[0], d[1], d[2], d[3]);
+    let (oh, ow) = (h / k, w / k);
+    let inv = 1.0 / (k * k) as f32; // k² a small int: division exact-rounded
+    let mut out = Tensor::zeros(&[b, c, oh, ow]);
+    for bc in 0..b * c {
+        for i in 0..oh {
+            for j in 0..ow {
+                let mut acc = 0.0f32;
+                for di in 0..k {
+                    for dj in 0..k {
+                        acc += x.data()[bc * h * w + (i * k + di) * w + (j * k + dj)];
+                    }
+                }
+                out.data_mut()[bc * oh * ow + i * ow + j] = acc * inv;
+            }
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lcg(dims: &[usize], seed: u64) -> Tensor {
+        let n: usize = dims.iter().product();
+        let mut s = seed;
+        Tensor::from_vec(
+            dims,
+            (0..n)
+                .map(|_| {
+                    s = s.wrapping_mul(6364136223846793005).wrapping_add(99);
+                    (((s >> 40) as f32) / (1u64 << 24) as f32 - 0.5) * 2.0
+                })
+                .collect(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn known_small_conv() {
+        // 1x1x3x3 input, 1x1x2x2 kernel of ones → window sums
+        let x = Tensor::from_vec(&[1, 1, 3, 3], (1..=9).map(|v| v as f32).collect()).unwrap();
+        let w = Tensor::full(&[1, 1, 2, 2], 1.0);
+        let y = conv2d(&x, &w, None, Conv2dParams::default()).unwrap();
+        assert_eq!(y.dims(), &[1, 1, 2, 2]);
+        assert_eq!(y.data(), &[12., 16., 24., 28.]);
+    }
+
+    #[test]
+    fn padding_and_stride() {
+        let x = Tensor::full(&[1, 1, 4, 4], 1.0);
+        let w = Tensor::full(&[1, 1, 3, 3], 1.0);
+        let y = conv2d(&x, &w, None, Conv2dParams { stride: 2, padding: 1 }).unwrap();
+        assert_eq!(y.dims(), &[1, 1, 2, 2]);
+        // corners see 4 ones, etc.
+        assert_eq!(y.data(), &[4., 6., 6., 9.]);
+    }
+
+    #[test]
+    fn bias_is_added_after_reduction() {
+        let x = Tensor::full(&[1, 1, 2, 2], 1.0);
+        let w = Tensor::full(&[2, 1, 2, 2], 0.5);
+        let b = Tensor::from_vec(&[2], vec![10.0, -10.0]).unwrap();
+        let y = conv2d(&x, &w, Some(&b), Conv2dParams::default()).unwrap();
+        assert_eq!(y.data(), &[12.0, -8.0]);
+    }
+
+    #[test]
+    fn im2col_matches_direct_bitwise() {
+        let x = lcg(&[2, 3, 8, 8], 1);
+        let w = lcg(&[4, 3, 3, 3], 2);
+        let b = lcg(&[4], 3);
+        for p in [
+            Conv2dParams { stride: 1, padding: 0 },
+            Conv2dParams { stride: 2, padding: 1 },
+            Conv2dParams { stride: 1, padding: 2 },
+        ] {
+            let direct = conv2d_direct(&x, &w, Some(&b), p).unwrap();
+            let gemm = conv2d_im2col(&x, &w, Some(&b), p).unwrap();
+            let routed = conv2d(&x, &w, Some(&b), p).unwrap();
+            assert!(routed.bit_eq(&direct), "routing changed bits");
+            assert!(
+                direct.bit_eq(&gemm),
+                "im2col diverged from direct at stride={} pad={}",
+                p.stride,
+                p.padding
+            );
+        }
+    }
+
+    #[test]
+    fn thread_invariance() {
+        let x = lcg(&[1, 4, 10, 10], 5);
+        let w = lcg(&[8, 4, 3, 3], 6);
+        std::env::set_var("REPDL_THREADS", "1");
+        let a = conv2d(&x, &w, None, Conv2dParams::default()).unwrap();
+        std::env::set_var("REPDL_THREADS", "4");
+        let b = conv2d(&x, &w, None, Conv2dParams::default()).unwrap();
+        std::env::remove_var("REPDL_THREADS");
+        assert!(a.bit_eq(&b));
+    }
+
+    #[test]
+    fn pooling() {
+        let x = Tensor::from_vec(
+            &[1, 1, 4, 4],
+            vec![
+                1., 2., 3., 4., //
+                5., 6., 7., 8., //
+                9., 10., 11., 12., //
+                13., 14., 15., 16.,
+            ],
+        )
+        .unwrap();
+        let mp = max_pool2d(&x, 2).unwrap();
+        assert_eq!(mp.data(), &[6., 8., 14., 16.]);
+        let ap = avg_pool2d(&x, 2).unwrap();
+        assert_eq!(ap.data(), &[3.5, 5.5, 11.5, 13.5]);
+        assert!(max_pool2d(&x, 3).is_err());
+    }
+
+    #[test]
+    fn shape_validation() {
+        let x = Tensor::zeros(&[1, 2, 5, 5]);
+        let w = Tensor::zeros(&[3, 99, 3, 3]);
+        assert!(conv2d(&x, &w, None, Conv2dParams::default()).is_err());
+        let w2 = Tensor::zeros(&[3, 2, 7, 7]);
+        assert!(conv2d(&x, &w2, None, Conv2dParams::default()).is_err());
+    }
+}

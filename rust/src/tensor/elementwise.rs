@@ -1,0 +1,127 @@
+//! Elementwise tensor operations with (limited numpy) broadcasting.
+//!
+//! Elementwise `f32` arithmetic is exactly rounded by IEEE 754, so these
+//! are reproducible with no further care; what matters is a *fixed
+//! element order* for any op that could be fused or reassociated — here
+//! each output element depends only on its own inputs, so order is moot.
+
+use super::shape::Shape;
+use super::tensor::Tensor;
+use crate::Result;
+
+impl Tensor {
+    /// Apply a scalar function to every element.
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Tensor {
+        let data = self.data().iter().map(|&x| f(x)).collect();
+        Tensor::from_vec(self.dims(), data).unwrap()
+    }
+
+    /// Combine with another tensor elementwise, broadcasting shapes.
+    pub fn zip(&self, other: &Tensor, f: impl Fn(f32, f32) -> f32) -> Result<Tensor> {
+        if self.dims() == other.dims() {
+            let data = self
+                .data()
+                .iter()
+                .zip(other.data().iter())
+                .map(|(&a, &b)| f(a, b))
+                .collect();
+            return Tensor::from_vec(self.dims(), data);
+        }
+        let out_shape = self.shape().broadcast(other.shape())?;
+        let n = out_shape.numel();
+        let mut data = vec![0.0f32; n];
+        let r = out_shape.rank();
+        let os = out_shape.strides();
+        let idx_of = |shape: &Shape, flat: usize| -> usize {
+            // map output multi-index to this operand's offset under
+            // broadcasting (right-aligned, dim-1 pinned)
+            let sr = shape.rank();
+            let ss = shape.strides();
+            let mut off = 0usize;
+            for d in 0..sr {
+                let od = d + (r - sr);
+                let coord = (flat / os[od]) % out_shape.dims()[od];
+                let c = if shape.dims()[d] == 1 { 0 } else { coord };
+                off += c * ss[d];
+            }
+            off
+        };
+        for (flat, v) in data.iter_mut().enumerate() {
+            let a = self.data()[idx_of(self.shape(), flat)];
+            let b = other.data()[idx_of(other.shape(), flat)];
+            *v = f(a, b);
+        }
+        Tensor::from_vec(out_shape.dims(), data)
+    }
+
+    /// Elementwise add (broadcasting).
+    pub fn add_t(&self, o: &Tensor) -> Result<Tensor> {
+        self.zip(o, |a, b| a + b)
+    }
+    /// Elementwise subtract (broadcasting).
+    pub fn sub_t(&self, o: &Tensor) -> Result<Tensor> {
+        self.zip(o, |a, b| a - b)
+    }
+    /// Elementwise multiply (broadcasting).
+    pub fn mul_t(&self, o: &Tensor) -> Result<Tensor> {
+        self.zip(o, |a, b| a * b)
+    }
+    /// Elementwise divide (broadcasting).
+    pub fn div_t(&self, o: &Tensor) -> Result<Tensor> {
+        self.zip(o, |a, b| a / b)
+    }
+    /// Add a scalar.
+    pub fn add_scalar(&self, s: f32) -> Tensor {
+        self.map(|x| x + s)
+    }
+    /// Multiply by a scalar.
+    pub fn mul_scalar(&self, s: f32) -> Tensor {
+        self.map(|x| x * s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_shape_ops() {
+        let a = Tensor::from_vec(&[2, 2], vec![1., 2., 3., 4.]).unwrap();
+        let b = Tensor::from_vec(&[2, 2], vec![10., 20., 30., 40.]).unwrap();
+        assert_eq!(a.add_t(&b).unwrap().data(), &[11., 22., 33., 44.]);
+        assert_eq!(b.sub_t(&a).unwrap().data(), &[9., 18., 27., 36.]);
+        assert_eq!(a.mul_t(&a).unwrap().data(), &[1., 4., 9., 16.]);
+    }
+
+    #[test]
+    fn broadcast_row_and_col() {
+        let m = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        let row = Tensor::from_vec(&[3], vec![10., 20., 30.]).unwrap();
+        let got = m.add_t(&row).unwrap();
+        assert_eq!(got.data(), &[11., 22., 33., 14., 25., 36.]);
+        let col = Tensor::from_vec(&[2, 1], vec![100., 200.]).unwrap();
+        let got = m.add_t(&col).unwrap();
+        assert_eq!(got.data(), &[101., 102., 103., 204., 205., 206.]);
+    }
+
+    #[test]
+    fn broadcast_scalar_tensor() {
+        let m = Tensor::from_vec(&[2, 2], vec![1., 2., 3., 4.]).unwrap();
+        let s = Tensor::scalar(2.0);
+        assert_eq!(m.mul_t(&s).unwrap().data(), &[2., 4., 6., 8.]);
+    }
+
+    #[test]
+    fn broadcast_mismatch_errors() {
+        let a = Tensor::zeros(&[2, 3]);
+        let b = Tensor::zeros(&[2, 4]);
+        assert!(a.add_t(&b).is_err());
+    }
+
+    #[test]
+    fn map_preserves_shape() {
+        let a = Tensor::from_vec(&[3], vec![-1., 0., 2.]).unwrap();
+        let r = a.map(|x| x.max(0.0));
+        assert_eq!(r.data(), &[0., 0., 2.]);
+    }
+}

@@ -1,0 +1,217 @@
+//! Reproducible GEMM (paper §3.2.2, fully-connected analysis).
+//!
+//! Specification: `C[i,j] = Σ_k A[i,k]·B[k,j]` with the k-loop strictly
+//! sequential (multiply then add, unfused — matching what the JAX/Pallas
+//! kernel lowers to). There are `t_fc = M·N` independent summation tasks;
+//! parallelism is across those tasks only, so thread count never changes
+//! bits — the paper's core efficiency argument (as long as `t_fc` exceeds
+//! the core count, fixing the order costs little).
+//!
+//! Implementation note (perf, bit-neutral): B is transposed once so the
+//! inner dot runs on two unit-stride rows. Transposition changes memory
+//! layout, **not** the multiply/add order, so results are bit-identical
+//! to the naive strided loop — asserted in tests.
+
+use super::par::{default_threads, par_chunks};
+use super::tensor::Tensor;
+use crate::rnum::dot::{dot_strided, dot_strided_fma, dot_strided_pairwise};
+use crate::{Error, Result};
+
+fn check_dims(a: &Tensor, b: &Tensor) -> Result<(usize, usize, usize)> {
+    let (da, db) = (a.dims(), b.dims());
+    if da.len() != 2 || db.len() != 2 || da[1] != db[0] {
+        return Err(Error::shape(format!(
+            "matmul: incompatible shapes {da:?} x {db:?}"
+        )));
+    }
+    Ok((da[0], da[1], db[1]))
+}
+
+/// k-outer row-kernel GEMM (perf form of the sequential spec).
+///
+/// For each output row, the k loop is outermost and all N columns
+/// accumulate simultaneously: `acc[j] += A[i,k]·B[k,j]`. Each output
+/// element still sees exactly the sequential-k order with the chosen
+/// mul/add graph — the loop interchange only reorders *independent*
+/// elements' work, so results are bit-identical to the per-element dot
+/// (asserted in tests) while the inner j-loop auto-vectorises.
+fn matmul_rowkernel(a: &Tensor, b: &Tensor, fma: bool) -> Result<Tensor> {
+    let (m, k, n) = check_dims(a, b)?;
+    let mut out = Tensor::zeros(&[m, n]);
+    let (ad, bd) = (a.data(), b.data());
+    par_chunks(out.data_mut(), n.max(1), default_threads(), |start, row| {
+        let i = start / n.max(1);
+        row.iter_mut().for_each(|v| *v = 0.0);
+        for kk in 0..k {
+            let aik = ad[i * k + kk];
+            let brow = &bd[kk * n..(kk + 1) * n];
+            if fma {
+                for (v, &bv) in row.iter_mut().zip(brow) {
+                    *v = aik.mul_add(bv, *v);
+                }
+            } else {
+                for (v, &bv) in row.iter_mut().zip(brow) {
+                    *v += aik * bv;
+                }
+            }
+        }
+    });
+    Ok(out)
+}
+
+fn matmul_with(
+    a: &Tensor,
+    b: &Tensor,
+    dot: impl Fn(&[f32], &[f32], usize) -> f32 + Sync,
+) -> Result<Tensor> {
+    let (m, k, n) = check_dims(a, b)?;
+    let bt = b.transpose2d()?; // layout-only change; order-neutral
+    let mut out = Tensor::zeros(&[m, n]);
+    let (ad, btd) = (a.data(), bt.data());
+    par_chunks(out.data_mut(), n.max(1), default_threads(), |start, c| {
+        let i = start / n.max(1);
+        for (j, v) in c.iter_mut().enumerate() {
+            *v = dot(&ad[i * k..(i + 1) * k], &btd[j * k..(j + 1) * k], k);
+        }
+    });
+    Ok(out)
+}
+
+/// RepDL default GEMM: sequential-k, unfused multiply-add.
+pub fn matmul(a: &Tensor, b: &Tensor) -> Result<Tensor> {
+    matmul_rowkernel(a, b, false)
+}
+
+/// GEMM with FMA contraction (separate API; paper §3.2.4 allows FMA).
+pub fn matmul_fma(a: &Tensor, b: &Tensor) -> Result<Tensor> {
+    matmul_rowkernel(a, b, true)
+}
+
+/// The per-element dot formulation (pre-optimisation reference; kept for
+/// the bit-equality regression tests and the perf ablation in §Perf).
+pub fn matmul_dotform(a: &Tensor, b: &Tensor) -> Result<Tensor> {
+    matmul_with(a, b, |x, y, k| dot_strided(x, 1, y, 1, k))
+}
+
+/// Per-element FMA dot formulation (ablation partner of [`matmul_fma`]).
+pub fn matmul_fma_dotform(a: &Tensor, b: &Tensor) -> Result<Tensor> {
+    matmul_with(a, b, |x, y, k| dot_strided_fma(x, 1, y, 1, k))
+}
+
+/// GEMM with the pairwise reduction order (separate API; paper §3.2.2's
+/// "alternative version" for parallelism-starved shapes).
+pub fn matmul_pairwise(a: &Tensor, b: &Tensor) -> Result<Tensor> {
+    matmul_with(a, b, |x, y, k| dot_strided_pairwise(x, 1, y, 1, k))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lcg_tensor(dims: &[usize], seed: u64) -> Tensor {
+        let n: usize = dims.iter().product();
+        let mut s = seed;
+        let data: Vec<f32> = (0..n)
+            .map(|_| {
+                s = s.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                (((s >> 40) as f32) / (1u64 << 24) as f32 - 0.5) * 2.0
+            })
+            .collect();
+        Tensor::from_vec(dims, data).unwrap()
+    }
+
+    /// Reference: naive triple loop, strided B access, no transpose.
+    fn matmul_naive(a: &Tensor, b: &Tensor) -> Tensor {
+        let (m, k, n) = (a.dims()[0], a.dims()[1], b.dims()[1]);
+        let mut out = Tensor::zeros(&[m, n]);
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0.0f32;
+                for kk in 0..k {
+                    acc += a.data()[i * k + kk] * b.data()[kk * n + j];
+                }
+                out.data_mut()[i * n + j] = acc;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn small_known_product() {
+        let a = Tensor::from_vec(&[2, 2], vec![1., 2., 3., 4.]).unwrap();
+        let b = Tensor::from_vec(&[2, 2], vec![5., 6., 7., 8.]).unwrap();
+        let c = matmul(&a, &b).unwrap();
+        assert_eq!(c.data(), &[19., 22., 43., 50.]);
+    }
+
+    #[test]
+    fn rowkernel_equals_dotform_bitwise() {
+        // the perf loop-interchange must not change a single bit
+        let a = lcg_tensor(&[23, 77], 8);
+        let b = lcg_tensor(&[77, 19], 9);
+        assert!(matmul(&a, &b).unwrap().bit_eq(&matmul_dotform(&a, &b).unwrap()));
+        assert!(matmul_fma(&a, &b)
+            .unwrap()
+            .bit_eq(&matmul_fma_dotform(&a, &b).unwrap()));
+    }
+
+    #[test]
+    fn transpose_optimisation_is_bit_neutral() {
+        let a = lcg_tensor(&[17, 33], 1);
+        let b = lcg_tensor(&[33, 9], 2);
+        let fast = matmul(&a, &b).unwrap();
+        let naive = matmul_naive(&a, &b);
+        assert!(fast.bit_eq(&naive), "layout change altered bits!");
+    }
+
+    #[test]
+    fn thread_count_invariance() {
+        let a = lcg_tensor(&[31, 64], 3);
+        let b = lcg_tensor(&[64, 23], 4);
+        std::env::set_var("REPDL_THREADS", "1");
+        let one = matmul(&a, &b).unwrap();
+        std::env::set_var("REPDL_THREADS", "5");
+        let five = matmul(&a, &b).unwrap();
+        std::env::remove_var("REPDL_THREADS");
+        assert!(one.bit_eq(&five));
+    }
+
+    #[test]
+    fn variants_are_distinct_specs() {
+        let a = lcg_tensor(&[24, 100], 5);
+        let b = lcg_tensor(&[100, 24], 6);
+        let seq = matmul(&a, &b).unwrap();
+        let fma = matmul_fma(&a, &b).unwrap();
+        let pw = matmul_pairwise(&a, &b).unwrap();
+        // each deterministic
+        assert!(seq.bit_eq(&matmul(&a, &b).unwrap()));
+        assert!(fma.bit_eq(&matmul_fma(&a, &b).unwrap()));
+        assert!(pw.bit_eq(&matmul_pairwise(&a, &b).unwrap()));
+        // and at least one pair differs somewhere (k=100 random data)
+        assert!(!seq.bit_eq(&fma) || !seq.bit_eq(&pw));
+        // numerically close
+        for i in 0..seq.numel() {
+            assert!((seq.data()[i] - fma.data()[i]).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn shape_errors() {
+        let a = Tensor::zeros(&[2, 3]);
+        let b = Tensor::zeros(&[4, 2]);
+        assert!(matmul(&a, &b).is_err());
+        assert!(matmul(&a, &Tensor::zeros(&[3])).is_err());
+    }
+
+    #[test]
+    fn identity_and_zero() {
+        let a = lcg_tensor(&[5, 5], 7);
+        let mut eye = Tensor::zeros(&[5, 5]);
+        for i in 0..5 {
+            eye.data_mut()[i * 5 + i] = 1.0;
+        }
+        assert!(matmul(&a, &eye).unwrap().bit_eq(&a));
+        let z = Tensor::zeros(&[5, 5]);
+        assert!(matmul(&a, &z).unwrap().bit_eq(&z));
+    }
+}

@@ -1,0 +1,23 @@
+//! Reproducible tensor library — the substrate the paper assumes.
+//!
+//! Row-major, `f32`, owned storage. Every reduction-bearing operation
+//! (GEMM, convolution, axis reductions) has a *specified* association
+//! order per paper §3.2.2: sequential by default, pairwise under a
+//! separate API name. Parallelism never changes results: work is split
+//! over *independent output elements* with a fixed per-element order, so
+//! any thread count produces identical bits (verified in tests).
+
+pub mod conv;
+pub mod elementwise;
+pub mod matmul;
+pub mod par;
+pub mod reduce;
+pub mod shape;
+#[allow(clippy::module_inception)]
+pub mod tensor;
+
+pub use conv::{avg_pool2d, conv2d, conv2d_direct, conv2d_im2col, max_pool2d, Conv2dParams};
+pub use matmul::{matmul, matmul_dotform, matmul_fma, matmul_fma_dotform, matmul_pairwise};
+pub use reduce::{argmax_last, max_axis, mean_axis, sum_axis, sum_axis_pairwise, var_axis};
+pub use shape::Shape;
+pub use tensor::Tensor;

@@ -1,0 +1,207 @@
+//! Axis reductions with specified association order (paper §3.2.2).
+//!
+//! `sum_axis` reduces sequentially along the axis; `sum_axis_pairwise` is
+//! the separately-named pairwise variant. `mean`/`var` are **fixed
+//! computation graphs** (paper §3.2.3): mean = sum/n, var = sum((x−μ)²)/n
+//! (two-pass, biased) — the one-pass E[x²]−E[x]² graph would be a
+//! different API if ever added.
+
+use super::tensor::Tensor;
+use crate::rnum::sum::pairwise_split;
+use crate::{Error, Result};
+
+/// Iterate (outer, inner) decomposition around `axis`:
+/// shape = [outer..., axis_len, inner...] flattened.
+fn axis_geometry(t: &Tensor, axis: usize) -> Result<(usize, usize, usize)> {
+    let d = t.dims();
+    if axis >= d.len() {
+        return Err(Error::shape(format!("axis {axis} out of range for {d:?}")));
+    }
+    let outer: usize = d[..axis].iter().product();
+    let len = d[axis];
+    let inner: usize = d[axis + 1..].iter().product();
+    Ok((outer, len, inner))
+}
+
+fn reduced_dims(t: &Tensor, axis: usize) -> Vec<usize> {
+    let mut nd: Vec<usize> = t.dims().to_vec();
+    nd.remove(axis);
+    nd
+}
+
+fn reduce_with(
+    t: &Tensor,
+    axis: usize,
+    f: impl Fn(&[f32], usize, usize) -> f32, // (data window, stride, len)
+) -> Result<Tensor> {
+    let (outer, len, inner) = axis_geometry(t, axis)?;
+    let mut out = Tensor::zeros(&reduced_dims(t, axis));
+    let data = t.data();
+    for o in 0..outer {
+        for i in 0..inner {
+            let base = o * len * inner + i;
+            out.data_mut()[o * inner + i] = f(&data[base..], inner, len);
+        }
+    }
+    Ok(out)
+}
+
+/// Sequential sum along `axis` (RepDL default order).
+pub fn sum_axis(t: &Tensor, axis: usize) -> Result<Tensor> {
+    reduce_with(t, axis, |w, s, n| {
+        let mut acc = 0.0f32;
+        for k in 0..n {
+            acc += w[k * s];
+        }
+        acc
+    })
+}
+
+/// Pairwise sum along `axis` (alternative order, own API; tree shape
+/// shared with `rnum::sum::sum_pairwise`).
+pub fn sum_axis_pairwise(t: &Tensor, axis: usize) -> Result<Tensor> {
+    fn pw(w: &[f32], s: usize, n: usize) -> f32 {
+        if n <= 8 {
+            let mut acc = 0.0f32;
+            for k in 0..n {
+                acc += w[k * s];
+            }
+            return acc;
+        }
+        let m = pairwise_split(n);
+        pw(w, s, m) + pw(&w[m * s..], s, n - m)
+    }
+    reduce_with(t, axis, pw)
+}
+
+/// Mean along `axis`: the fixed graph `sum / n`.
+pub fn mean_axis(t: &Tensor, axis: usize) -> Result<Tensor> {
+    let (_, len, _) = axis_geometry(t, axis)?;
+    let s = sum_axis(t, axis)?;
+    Ok(s.map(|v| v / len as f32))
+}
+
+/// Biased variance along `axis`: the fixed two-pass graph
+/// `sum((x − mean)²) / n` with sequential sums.
+pub fn var_axis(t: &Tensor, axis: usize) -> Result<Tensor> {
+    let (outer, len, inner) = axis_geometry(t, axis)?;
+    let mean = mean_axis(t, axis)?;
+    let mut out = Tensor::zeros(&reduced_dims(t, axis));
+    let data = t.data();
+    for o in 0..outer {
+        for i in 0..inner {
+            let base = o * len * inner + i;
+            let mu = mean.data()[o * inner + i];
+            let mut acc = 0.0f32;
+            for k in 0..len {
+                let d = data[base + k * inner] - mu;
+                acc += d * d;
+            }
+            out.data_mut()[o * inner + i] = acc / len as f32;
+        }
+    }
+    Ok(out)
+}
+
+/// Maximum along `axis` (comparison order fixed; NaN propagates).
+pub fn max_axis(t: &Tensor, axis: usize) -> Result<Tensor> {
+    reduce_with(t, axis, |w, s, n| {
+        let mut m = w[0];
+        for k in 1..n {
+            let v = w[k * s];
+            // fixed rule: NaN wins, then larger value, first occurrence
+            if v.is_nan() || v > m {
+                m = v;
+            }
+        }
+        m
+    })
+}
+
+/// Argmax over the last axis (deterministic tie rule: first maximum).
+pub fn argmax_last(t: &Tensor) -> Result<Vec<usize>> {
+    let d = t.dims();
+    if d.is_empty() {
+        return Err(Error::shape("argmax_last on scalar"));
+    }
+    let n = *d.last().unwrap();
+    let rows = t.numel() / n;
+    let mut out = Vec::with_capacity(rows);
+    for r in 0..rows {
+        let w = &t.data()[r * n..(r + 1) * n];
+        let mut best = 0usize;
+        for (k, &v) in w.iter().enumerate() {
+            if v > w[best] {
+                best = k;
+            }
+        }
+        out.push(best);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t123() -> Tensor {
+        Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]).unwrap()
+    }
+
+    #[test]
+    fn sum_axes() {
+        let t = t123();
+        assert_eq!(sum_axis(&t, 0).unwrap().data(), &[5., 7., 9.]);
+        assert_eq!(sum_axis(&t, 1).unwrap().data(), &[6., 15.]);
+        assert!(sum_axis(&t, 2).is_err());
+    }
+
+    #[test]
+    fn sum_3d_middle_axis() {
+        let t = Tensor::from_vec(&[2, 2, 2], (1..=8).map(|v| v as f32).collect()).unwrap();
+        let s = sum_axis(&t, 1).unwrap();
+        assert_eq!(s.dims(), &[2, 2]);
+        assert_eq!(s.data(), &[4., 6., 12., 14.]);
+    }
+
+    #[test]
+    fn mean_and_var_graphs() {
+        let t = t123();
+        assert_eq!(mean_axis(&t, 1).unwrap().data(), &[2., 5.]);
+        // var([1,2,3]) biased = 2/3
+        let v = var_axis(&t, 1).unwrap();
+        assert!((v.data()[0] - 2.0 / 3.0).abs() < 1e-7);
+        assert!((v.data()[1] - 2.0 / 3.0).abs() < 1e-7);
+    }
+
+    #[test]
+    fn pairwise_vs_sequential_determinism() {
+        let n = 1000;
+        let data: Vec<f32> = (0..n).map(|i| ((i * 37 % 113) as f32 - 56.0) * 0.01).collect();
+        let t = Tensor::from_vec(&[1, n], data).unwrap();
+        let s = sum_axis(&t, 1).unwrap();
+        let p = sum_axis_pairwise(&t, 1).unwrap();
+        assert!(s.bit_eq(&sum_axis(&t, 1).unwrap()));
+        assert!(p.bit_eq(&sum_axis_pairwise(&t, 1).unwrap()));
+        assert!((s.data()[0] - p.data()[0]).abs() < 1e-2);
+    }
+
+    #[test]
+    fn pairwise_matches_rnum_spec() {
+        let data: Vec<f32> = (0..777).map(|i| (i as f32).sin_cos().0 * 0.1).collect();
+        let t = Tensor::from_vec(&[777], data.clone()).unwrap();
+        let via_tensor = sum_axis_pairwise(&t, 0).unwrap().data()[0];
+        let via_rnum = crate::rnum::sum::sum_pairwise(&data);
+        assert_eq!(via_tensor.to_bits(), via_rnum.to_bits());
+    }
+
+    #[test]
+    fn max_and_argmax() {
+        let t = Tensor::from_vec(&[2, 3], vec![3., 1., 3., -5., -1., -1.]).unwrap();
+        assert_eq!(max_axis(&t, 1).unwrap().data(), &[3., -1.]);
+        // deterministic first-max tie rule
+        assert_eq!(argmax_last(&t).unwrap(), vec![0, 1]);
+        let nan = Tensor::from_vec(&[1, 2], vec![1.0, f32::NAN]).unwrap();
+        assert!(max_axis(&nan, 1).unwrap().data()[0].is_nan());
+    }
+}

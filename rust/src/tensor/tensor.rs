@@ -1,0 +1,236 @@
+//! The `Tensor` type: contiguous row-major `f32` storage + shape.
+
+use super::shape::Shape;
+use crate::{Error, Result};
+
+/// A dense row-major `f32` tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    shape: Shape,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    /// All-zeros tensor.
+    pub fn zeros(dims: &[usize]) -> Self {
+        let shape = Shape::new(dims);
+        let n = shape.numel();
+        Tensor { shape, data: vec![0.0; n] }
+    }
+
+    /// Tensor filled with a constant.
+    pub fn full(dims: &[usize], v: f32) -> Self {
+        let shape = Shape::new(dims);
+        let n = shape.numel();
+        Tensor { shape, data: vec![v; n] }
+    }
+
+    /// Build from data (len must equal the shape's element count).
+    pub fn from_vec(dims: &[usize], data: Vec<f32>) -> Result<Self> {
+        let shape = Shape::new(dims);
+        if shape.numel() != data.len() {
+            return Err(Error::shape(format!(
+                "shape {:?} needs {} elements, got {}",
+                dims,
+                shape.numel(),
+                data.len()
+            )));
+        }
+        Ok(Tensor { shape, data })
+    }
+
+    /// Scalar tensor.
+    pub fn scalar(v: f32) -> Self {
+        Tensor { shape: Shape::new(&[]), data: vec![v] }
+    }
+
+    /// Shape accessor.
+    pub fn shape(&self) -> &Shape {
+        &self.shape
+    }
+
+    /// Dimensions.
+    pub fn dims(&self) -> &[usize] {
+        self.shape.dims()
+    }
+
+    /// Total element count.
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Immutable data slice.
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Mutable data slice.
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// Consume into the raw buffer.
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Element access by multi-index.
+    pub fn at(&self, idx: &[usize]) -> f32 {
+        self.data[self.shape.offset(idx)]
+    }
+
+    /// Mutable element access by multi-index.
+    pub fn at_mut(&mut self, idx: &[usize]) -> &mut f32 {
+        let o = self.shape.offset(idx);
+        &mut self.data[o]
+    }
+
+    /// Reshape without moving data (element count must match).
+    pub fn reshape(&self, dims: &[usize]) -> Result<Tensor> {
+        let shape = Shape::new(dims);
+        if shape.numel() != self.data.len() {
+            return Err(Error::shape(format!(
+                "reshape {:?} -> {:?}: element count mismatch",
+                self.dims(),
+                dims
+            )));
+        }
+        Ok(Tensor { shape, data: self.data.clone() })
+    }
+
+    /// 2-D transpose (copies; fixed element order).
+    pub fn transpose2d(&self) -> Result<Tensor> {
+        let d = self.dims();
+        if d.len() != 2 {
+            return Err(Error::shape(format!("transpose2d on rank {}", d.len())));
+        }
+        let (m, n) = (d[0], d[1]);
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                out[j * m + i] = self.data[i * n + j];
+            }
+        }
+        Ok(Tensor { shape: Shape::new(&[n, m]), data: out })
+    }
+
+    /// General axis permutation (copies; fixed element order).
+    pub fn permute(&self, perm: &[usize]) -> Result<Tensor> {
+        let d = self.dims();
+        if perm.len() != d.len() {
+            return Err(Error::shape(format!(
+                "permute {:?} on rank {}",
+                perm,
+                d.len()
+            )));
+        }
+        let mut seen = vec![false; d.len()];
+        for &p in perm {
+            if p >= d.len() || seen[p] {
+                return Err(Error::shape(format!("invalid permutation {perm:?}")));
+            }
+            seen[p] = true;
+        }
+        let new_dims: Vec<usize> = perm.iter().map(|&p| d[p]).collect();
+        let old_strides = self.shape.strides();
+        let new_shape = Shape::new(&new_dims);
+        let new_strides = new_shape.strides();
+        let mut out = vec![0.0f32; self.data.len()];
+        // iterate output linearly, gather from the permuted source offset
+        for (flat, v) in out.iter_mut().enumerate() {
+            let mut src = 0usize;
+            let mut rem = flat;
+            for a in 0..new_dims.len() {
+                let coord = rem / new_strides[a];
+                rem %= new_strides[a];
+                src += coord * old_strides[perm[a]];
+            }
+            *v = self.data[src];
+        }
+        Ok(Tensor { shape: new_shape, data: out })
+    }
+
+    /// Row view for a rank-2 tensor.
+    pub fn row(&self, i: usize) -> &[f32] {
+        let n = *self.dims().last().unwrap();
+        &self.data[i * n..(i + 1) * n]
+    }
+
+    /// SHA-256 hash of shape + raw little-endian bit patterns — the
+    /// bitwise fingerprint used throughout the verification harness.
+    pub fn bit_hash(&self) -> [u8; 32] {
+        use sha2::{Digest, Sha256};
+        let mut h = Sha256::new();
+        for &d in self.dims() {
+            h.update((d as u64).to_le_bytes());
+        }
+        for &v in &self.data {
+            h.update(v.to_bits().to_le_bytes());
+        }
+        h.finalize().into()
+    }
+
+    /// Hex string of [`Tensor::bit_hash`] (for logs).
+    pub fn bit_hash_hex(&self) -> String {
+        self.bit_hash().iter().map(|b| format!("{b:02x}")).collect()
+    }
+
+    /// True iff `other` has identical shape and identical bit patterns.
+    pub fn bit_eq(&self, other: &Tensor) -> bool {
+        self.shape == other.shape
+            && self
+                .data
+                .iter()
+                .zip(other.data.iter())
+                .all(|(a, b)| a.to_bits() == b.to_bits())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_access() {
+        let t = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        assert_eq!(t.at(&[0, 0]), 1.0);
+        assert_eq!(t.at(&[1, 2]), 6.0);
+        assert_eq!(t.row(1), &[4., 5., 6.]);
+        assert!(Tensor::from_vec(&[2, 2], vec![1.0]).is_err());
+    }
+
+    #[test]
+    fn reshape_and_transpose() {
+        let t = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        let r = t.reshape(&[3, 2]).unwrap();
+        assert_eq!(r.at(&[2, 1]), 6.0);
+        let tt = t.transpose2d().unwrap();
+        assert_eq!(tt.dims(), &[3, 2]);
+        assert_eq!(tt.at(&[2, 0]), 3.0);
+        assert_eq!(tt.at(&[0, 1]), 4.0);
+    }
+
+    #[test]
+    fn bit_hash_distinguishes_signed_zero() {
+        // bitwise fingerprinting must see -0.0 != +0.0 (value-equal!)
+        let a = Tensor::from_vec(&[1], vec![0.0]).unwrap();
+        let b = Tensor::from_vec(&[1], vec![-0.0]).unwrap();
+        assert_ne!(a.bit_hash(), b.bit_hash());
+        assert!(!a.bit_eq(&b));
+        assert!(a.bit_eq(&a));
+    }
+
+    #[test]
+    fn bit_hash_depends_on_shape() {
+        let a = Tensor::from_vec(&[2, 2], vec![1., 2., 3., 4.]).unwrap();
+        let b = Tensor::from_vec(&[4], vec![1., 2., 3., 4.]).unwrap();
+        assert_ne!(a.bit_hash(), b.bit_hash());
+    }
+
+    #[test]
+    fn hash_is_stable() {
+        let t = Tensor::full(&[3, 3], 0.5);
+        assert_eq!(t.bit_hash_hex(), t.clone().bit_hash_hex());
+        assert_eq!(t.bit_hash_hex().len(), 64);
+    }
+}

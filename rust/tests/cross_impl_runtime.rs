@@ -1,0 +1,187 @@
+//! E6 — cross-**implementation** reproducibility.
+//!
+//! Two entirely independent software stacks implement the RepDL op spec:
+//! the native Rust kernels and the JAX/Pallas kernels AOT-compiled to HLO
+//! and executed via PJRT. If both follow the spec, their bits must agree.
+//! That is the strongest form of the paper's cross-platform claim we can
+//! test on one machine — the "platforms" here are two real, unrelated
+//! compiler+runtime stacks, not simulations.
+//!
+//! Pinned spec notes:
+//! * GEMM: XLA CPU contracts mul+add → FMA (the paper §3.2.4 *enables*
+//!   contraction), so the artifact implements the sequential-k **FMA**
+//!   variant — partner op `tensor::matmul_fma`.
+//! * Sums: pure additions (nothing to contract) — partner ops are the
+//!   plain `sum_sequential` / `sum_pairwise`.
+//!
+//! Tests self-skip when `make artifacts` has not been run.
+
+use repdl::rng::uniform_tensor;
+use repdl::rnum::fbits::ulp_diff;
+use repdl::runtime::Runtime;
+use repdl::tensor::{matmul_fma, Tensor};
+
+fn runtime_or_skip() -> Option<Runtime> {
+    match Runtime::new("artifacts") {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("SKIP (run `make artifacts`): {e}");
+            None
+        }
+    }
+}
+
+#[test]
+fn matmul_artifact_matches_rust_fma_bitwise() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let a = uniform_tensor(&[64, 128], -1.0, 1.0, 101);
+    let b = uniform_tensor(&[128, 32], -1.0, 1.0, 102);
+    let xla = rt.run("matmul_repro", &[a.clone(), b.clone()]).unwrap();
+    let native = matmul_fma(&a, &b).unwrap();
+    assert!(
+        xla[0].bit_eq(&native),
+        "XLA artifact and native matmul_fma disagree bitwise"
+    );
+}
+
+#[test]
+fn matmul_small_artifact_matches_rust_fma_bitwise() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let a = uniform_tensor(&[4, 6], -2.0, 2.0, 103);
+    let b = uniform_tensor(&[6, 5], -2.0, 2.0, 104);
+    let xla = rt.run("matmul_repro_small", &[a.clone(), b.clone()]).unwrap();
+    let native = matmul_fma(&a, &b).unwrap();
+    assert!(xla[0].bit_eq(&native));
+}
+
+#[test]
+fn sum_artifacts_match_rust_bitwise() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let x = uniform_tensor(&[4096], -100.0, 100.0, 105);
+    let seq = rt.run("sum_seq", &[x.clone()]).unwrap();
+    let want_seq = repdl::rnum::sum_sequential(x.data());
+    assert_eq!(
+        seq[0].data()[0].to_bits(),
+        want_seq.to_bits(),
+        "sequential sum disagrees"
+    );
+    let pw = rt.run("sum_pairwise", &[x.clone()]).unwrap();
+    let want_pw = repdl::rnum::sum_pairwise(x.data());
+    assert_eq!(
+        pw[0].data()[0].to_bits(),
+        want_pw.to_bits(),
+        "pairwise sum disagrees"
+    );
+}
+
+#[test]
+fn exp_fixed_artifact_vs_rust_f64_graph() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let x = uniform_tensor(&[1024], -60.0, 60.0, 106);
+    let xla = rt.run("exp_fixed", &[x.clone()]).unwrap();
+    let mut exact = 0usize;
+    let mut max_ulp = 0u32;
+    for (i, &v) in x.data().iter().enumerate() {
+        let native = repdl::rnum::exp::exp_fixed_graph_f64(v as f64) as f32;
+        let got = xla[0].data()[i];
+        let d = ulp_diff(got, native);
+        max_ulp = max_ulp.max(d);
+        if d == 0 {
+            exact += 1;
+        }
+    }
+    eprintln!(
+        "exp_fixed cross-impl: {}/{} bit-identical, max {} ulp",
+        exact,
+        x.numel(),
+        max_ulp
+    );
+    // The f64 graph is pinned; XLA may FMA-contract the polynomial, which
+    // perturbs ≤1 ulp of f64 — invisible after rounding to f32 except in
+    // borderline cases. Require near-total agreement and ≤1 ulp always.
+    assert!(max_ulp <= 1, "exp artifact drifted: {max_ulp} ulp");
+    assert!(exact * 100 >= x.numel() * 99, "only {exact}/1024 bit-equal");
+}
+
+#[test]
+fn softmax_artifact_vs_rust_ulp_report() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let x = uniform_tensor(&[32, 64], -8.0, 8.0, 107);
+    let xla = rt.run("softmax_repro", &[x.clone()]).unwrap();
+    let native = repdl::nn::softmax_rows(&x).unwrap();
+    // different exp implementations (XLA libm vs CR rexp): not bitwise,
+    // but must be uniformly close — report the gap.
+    let mut max_ulp = 0u32;
+    for (a, b) in xla[0].data().iter().zip(native.data()) {
+        max_ulp = max_ulp.max(ulp_diff(*a, *b));
+    }
+    eprintln!("softmax cross-impl max ulp = {max_ulp}");
+    assert!(max_ulp <= 16, "softmax drifted by {max_ulp} ulp");
+}
+
+#[test]
+fn mlp_forward_artifact_matches_rust_fma_graph() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let x = uniform_tensor(&[16, 64], -1.0, 1.0, 108);
+    let w1 = uniform_tensor(&[64, 32], -0.3, 0.3, 109);
+    let b1 = uniform_tensor(&[32], -0.1, 0.1, 110);
+    let w2 = uniform_tensor(&[32, 10], -0.3, 0.3, 111);
+    let b2 = uniform_tensor(&[10], -0.1, 0.1, 112);
+    let xla = rt
+        .run("mlp_fwd", &[x.clone(), w1.clone(), b1.clone(), w2.clone(), b2.clone()])
+        .unwrap();
+    // native replica of the same fixed graph (FMA GEMM, exact add/relu)
+    let h = matmul_fma(&x, &w1).unwrap().add_t(&b1).unwrap();
+    let h = h.map(|v| if v > 0.0 { v } else { 0.0 });
+    let logits = matmul_fma(&h, &w2).unwrap().add_t(&b2).unwrap();
+    assert!(
+        xla[0].bit_eq(&logits),
+        "full MLP forward disagrees across implementations"
+    );
+}
+
+#[test]
+fn train_step_artifact_is_deterministic_and_learns() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let x = uniform_tensor(&[16, 64], 0.0, 1.0, 113);
+    let mut y = Tensor::zeros(&[16, 10]);
+    for i in 0..16 {
+        y.data_mut()[i * 10 + (i % 10)] = 1.0;
+    }
+    let mut w1 = uniform_tensor(&[64, 32], -0.2, 0.2, 114);
+    let mut b1 = Tensor::zeros(&[32]);
+    let mut w2 = uniform_tensor(&[32, 10], -0.2, 0.2, 115);
+    let mut b2 = Tensor::zeros(&[10]);
+    let lr = Tensor::scalar(0.5);
+    // determinism: one step twice from identical state
+    let o1 = rt
+        .run("mlp_train_step", &[x.clone(), y.clone(), w1.clone(), b1.clone(), w2.clone(), b2.clone(), lr.clone()])
+        .unwrap();
+    let o2 = rt
+        .run("mlp_train_step", &[x.clone(), y.clone(), w1.clone(), b1.clone(), w2.clone(), b2.clone(), lr.clone()])
+        .unwrap();
+    for (a, b) in o1.iter().zip(o2.iter()) {
+        assert!(a.bit_eq(b), "train step nondeterministic");
+    }
+    // learning: 25 steps reduce the loss
+    let mut first = f32::NAN;
+    let mut last = f32::NAN;
+    for step in 0..25 {
+        let out = rt
+            .run("mlp_train_step", &[x.clone(), y.clone(), w1, b1, w2, b2, lr.clone()])
+            .unwrap();
+        let loss = out[0].data()[0];
+        if step == 0 {
+            first = loss;
+        }
+        last = loss;
+        let mut it = out.into_iter();
+        it.next(); // drop loss
+        w1 = it.next().unwrap();
+        b1 = it.next().unwrap();
+        w2 = it.next().unwrap();
+        b2 = it.next().unwrap();
+    }
+    eprintln!("train_step artifact loss: {first} -> {last}");
+    assert!(last < first, "AOT training did not learn");
+}

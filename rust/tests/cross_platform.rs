@@ -1,0 +1,85 @@
+//! E2 integration — cross-platform reproducibility over the simulated
+//! platform zoo, plus thread-count invariance of the RepDL kernels.
+
+use repdl::baseline::PlatformProfile;
+use repdl::coordinator::{compare_runs, NumericsMode, Trainer, TrainerConfig};
+use repdl::rng::uniform_tensor;
+use repdl::tensor::{conv2d, matmul, Conv2dParams};
+
+#[test]
+fn baseline_training_diverges_across_simulated_platforms() {
+    let cfg = TrainerConfig { steps: 20, ..Default::default() };
+    let runs: Vec<_> = PlatformProfile::zoo()
+        .iter()
+        .map(|p| Trainer::new(cfg, NumericsMode::Baseline(*p)).run().unwrap())
+        .collect();
+    let mut divergent_pairs = 0;
+    for r in &runs[1..] {
+        let c = compare_runs(
+            &runs[0].loss_curve,
+            &r.loss_curve,
+            &runs[0].param_hash,
+            &r.param_hash,
+        );
+        if !c.hashes_equal {
+            divergent_pairs += 1;
+            assert!(c.first_divergence.is_some());
+        }
+    }
+    assert!(divergent_pairs >= 3, "only {divergent_pairs} platforms diverged");
+}
+
+#[test]
+fn repro_training_is_identical_regardless_of_thread_count() {
+    let cfg = TrainerConfig { steps: 15, ..Default::default() };
+    std::env::set_var("REPDL_THREADS", "1");
+    let a = Trainer::new(cfg, NumericsMode::Repro).run().unwrap();
+    std::env::set_var("REPDL_THREADS", "7");
+    let b = Trainer::new(cfg, NumericsMode::Repro).run().unwrap();
+    std::env::remove_var("REPDL_THREADS");
+    assert_eq!(a.param_hash, b.param_hash);
+}
+
+#[test]
+fn kernels_thread_invariance_property() {
+    // property-style sweep over shapes with the mini harness
+    repdl::proptest::forall(
+        9,
+        12,
+        |g| {
+            (
+                1 + g.below(24),
+                1 + g.below(48),
+                1 + g.below(24),
+                g.u64(),
+            )
+        },
+        |&(m, k, n, seed)| {
+            let a = uniform_tensor(&[m, k], -2.0, 2.0, seed);
+            let b = uniform_tensor(&[k, n], -2.0, 2.0, seed ^ 1);
+            std::env::set_var("REPDL_THREADS", "1");
+            let one = matmul(&a, &b).unwrap();
+            std::env::set_var("REPDL_THREADS", "5");
+            let five = matmul(&a, &b).unwrap();
+            std::env::remove_var("REPDL_THREADS");
+            one.bit_eq(&five)
+        },
+    );
+}
+
+#[test]
+fn conv_direct_and_im2col_agree_across_shapes() {
+    repdl::proptest::forall(
+        11,
+        8,
+        |g| (1 + g.below(2), 1 + g.below(3), 5 + g.below(5), g.u64()),
+        |&(b, c, hw, seed)| {
+            let x = uniform_tensor(&[b, c, hw, hw], -1.0, 1.0, seed);
+            let w = uniform_tensor(&[2, c, 3, 3], -1.0, 1.0, seed ^ 2);
+            let p = Conv2dParams { stride: 1, padding: 1 };
+            let d = conv2d(&x, &w, None, p).unwrap();
+            let g2 = repdl::tensor::conv2d_im2col(&x, &w, None, p).unwrap();
+            d.bit_eq(&g2)
+        },
+    );
+}

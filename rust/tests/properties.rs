@@ -1,0 +1,154 @@
+//! Property-based invariants over the correctly-rounded ops and the
+//! coordinator substrates (mini-harness; see `repdl::proptest`).
+
+use repdl::proptest::{forall, Gen};
+use repdl::rnum::bigfloat::{BigFloat, PREC_ORACLE};
+use repdl::rnum::{
+    rcos, rexp, rlog, rpow, rrsqrt, rsin, rsqrt_f32, rtanh, sum::sum_exact, KulischAcc,
+};
+
+#[test]
+fn exp_matches_oracle_on_random_inputs() {
+    forall(1, 400, |g: &mut Gen| g.f32_range(-104.0, 89.0), |&x| {
+        let want = BigFloat::from_f32(x, PREC_ORACLE).exp_bf().to_f32();
+        rexp(x).to_bits() == want.to_bits()
+    });
+}
+
+#[test]
+fn log_exp_identity_within_analytic_bound() {
+    // exp∘log is not the identity: log's half-ulp rounding error δ is
+    // amplified to a relative error of e^δ − 1 ≈ δ, i.e. about
+    // |log x| / 2 output ulps. CR ops must stay inside that bound.
+    forall(2, 300, |g: &mut Gen| g.f32_range(0.01, 1e6), |&x| {
+        let l = rlog(x);
+        let y = rexp(l);
+        let bound = 2 + (l.abs() * 0.75) as u32;
+        repdl::rnum::fbits::ulp_diff(x, y) <= bound
+    });
+}
+
+#[test]
+fn sqrt_square_roundtrip() {
+    forall(3, 400, |g: &mut Gen| g.f32_range(0.0, 1e18), |&x| {
+        let s = rsqrt_f32(x);
+        // s² ≤ x(1+2^-22) and (s is CR) — weak but universal property
+        (s * s - x).abs() <= x * 3e-7 + f32::MIN_POSITIVE
+    });
+}
+
+#[test]
+fn rsqrt_equals_one_over_sqrt_within_ulp() {
+    forall(4, 300, |g: &mut Gen| g.f32_range(1e-30, 1e30), |&x| {
+        repdl::rnum::fbits::ulp_diff(rrsqrt(x), 1.0 / rsqrt_f32(x)) <= 1
+    });
+}
+
+#[test]
+fn sin_cos_pythagoras() {
+    forall(5, 300, |g: &mut Gen| g.f32_range(-1000.0, 1000.0), |&x| {
+        let (s, c) = (rsin(x) as f64, rcos(x) as f64);
+        (s * s + c * c - 1.0).abs() < 1e-6
+    });
+}
+
+#[test]
+fn tanh_bounded_and_odd() {
+    forall(6, 300, |g: &mut Gen| g.f32_any(), |&x| {
+        if !x.is_finite() {
+            return true;
+        }
+        let t = rtanh(x);
+        t.abs() <= 1.0 && rtanh(-x).to_bits() == (-t).to_bits()
+    });
+}
+
+#[test]
+fn pow_integer_consistency() {
+    forall(7, 200, |g: &mut Gen| (g.f32_range(0.1, 20.0), 1 + g.below(6)), |&(x, n)| {
+        // x^n == x·x·…·x evaluated exactly in f64 then rounded? Too strict;
+        // instead: rpow is within 1 ulp of the bigfloat oracle
+        let want = {
+            let xb = BigFloat::from_f32(x, 12);
+            let nb = BigFloat::from_u64(n as u64, 12);
+            nb.mul(&xb.ln_bf()).exp_bf().to_f32()
+        };
+        // integer powers are computed exactly — compare to oracle
+        repdl::rnum::fbits::ulp_diff(rpow(x, n as f32), want) <= 1
+    });
+}
+
+#[test]
+fn kulisch_permutation_invariance() {
+    forall(8, 50, |g: &mut Gen| {
+        let n = 10 + g.below(500);
+        (g.f32_vec(n, 1e5), g.u64())
+    }, |(xs, seed)| {
+        let direct = sum_exact(xs);
+        // random permutation
+        let mut perm = xs.clone();
+        let mut s = *seed;
+        for i in (1..perm.len()).rev() {
+            s = s.wrapping_mul(6364136223846793005).wrapping_add(1);
+            let j = ((s >> 33) as usize) % (i + 1);
+            perm.swap(i, j);
+        }
+        let mut acc = KulischAcc::new();
+        for &v in &perm {
+            acc.add(v);
+        }
+        acc.round_f32().to_bits() == direct.to_bits()
+    });
+}
+
+#[test]
+fn sequential_sum_prefix_associativity_spec() {
+    // sum(xs) == sum(sum(xs[..k]) followed by xs[k..]) — the defining
+    // recurrence of the sequential order
+    forall(9, 100, |g: &mut Gen| {
+        let n = 2 + g.below(200);
+        let k = 1 + g.below(n - 1);
+        (g.f32_vec(n, 100.0), k)
+    }, |(xs, k)| {
+        let full = repdl::rnum::sum_sequential(xs);
+        let mut acc = repdl::rnum::sum_sequential(&xs[..*k]);
+        for &v in &xs[*k..] {
+            acc += v;
+        }
+        acc.to_bits() == full.to_bits()
+    });
+}
+
+#[test]
+fn batchnorm_variants_are_each_deterministic() {
+    use repdl::nn::{batch_norm, batch_norm_affine_folded, batch_norm_folded};
+    use repdl::rng::uniform_tensor;
+    forall(10, 30, |g: &mut Gen| g.u64(), |&seed| {
+        let x = uniform_tensor(&[2, 3, 4, 4], -3.0, 3.0, seed);
+        let mean = [0.1f32, -0.5, 0.2];
+        let var = [1.0f32, 0.8, 1.3];
+        let w = [1.1f32, 0.9, 1.0];
+        let b = [0.0f32, 0.1, -0.1];
+        let v1a = batch_norm(&x, &mean, &var, &w, &b, 1e-5).unwrap();
+        let v1b = batch_norm(&x, &mean, &var, &w, &b, 1e-5).unwrap();
+        let v2a = batch_norm_folded(&x, &mean, &var, &w, &b, 1e-5).unwrap();
+        let v2b = batch_norm_folded(&x, &mean, &var, &w, &b, 1e-5).unwrap();
+        let v3a = batch_norm_affine_folded(&x, &mean, &var, &w, &b, 1e-5).unwrap();
+        let v3b = batch_norm_affine_folded(&x, &mean, &var, &w, &b, 1e-5).unwrap();
+        v1a.bit_eq(&v1b) && v2a.bit_eq(&v2b) && v3a.bit_eq(&v3b)
+    });
+}
+
+#[test]
+fn serve_batching_routes_every_request_once() {
+    use repdl::coordinator::DeterministicServer;
+    use repdl::rng::uniform_tensor;
+    forall(11, 20, |g: &mut Gen| (1 + g.below(40), 1 + g.below(12), g.u64()), |&(n, bs, seed)| {
+        let w = uniform_tensor(&[16, 4], -0.3, 0.3, seed);
+        let srv = DeterministicServer::new(w, bs);
+        let q: Vec<_> = (0..n)
+            .map(|i| uniform_tensor(&[16], -1.0, 1.0, seed + 1 + i as u64))
+            .collect();
+        srv.process_repro(&q).map(|o| o.len() == n).unwrap_or(false)
+    });
+}

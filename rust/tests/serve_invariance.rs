@@ -1,0 +1,40 @@
+//! E7 integration — dynamic-batching hazard vs RepDL batch invariance.
+
+use repdl::baseline::PlatformProfile;
+use repdl::coordinator::DeterministicServer;
+use repdl::rng::uniform_tensor;
+use repdl::tensor::Tensor;
+
+fn queue(n: usize, d: usize, seed: u64) -> Vec<Tensor> {
+    (0..n)
+        .map(|i| uniform_tensor(&[d], -1.0, 1.0, seed + i as u64))
+        .collect()
+}
+
+#[test]
+fn repdl_outputs_do_not_depend_on_batch_composition() {
+    let w = uniform_tensor(&[256, 8], -0.3, 0.3, 1);
+    let srv = DeterministicServer::new(w, 64);
+    let q = queue(64, 256, 100);
+    let p = PlatformProfile::zoo()[4];
+    let rep = srv
+        .batch_invariance_report(&q, &[1, 2, 8, 17, 64], &p)
+        .unwrap();
+    assert_eq!(rep.repro_mismatches, 0);
+    assert!(rep.baseline_mismatches > 0);
+    // mismatch fraction is substantial on a size-dispatching platform
+    assert!(rep.baseline_mismatches * 2 >= rep.requests);
+}
+
+#[test]
+fn arrival_order_processing_is_stable() {
+    let w = uniform_tensor(&[32, 4], -0.5, 0.5, 2);
+    let srv = DeterministicServer::new(w, 5);
+    let q = queue(13, 32, 200);
+    let a = srv.process_repro(&q).unwrap();
+    let b = srv.process_repro(&q).unwrap();
+    for (x, y) in a.iter().zip(b.iter()) {
+        assert!(x.bit_eq(y));
+    }
+    assert_eq!(a.len(), 13);
+}

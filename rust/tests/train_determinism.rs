@@ -1,0 +1,65 @@
+//! E1 integration — run-to-run determinism of full training.
+
+use repdl::baseline::PlatformProfile;
+use repdl::coordinator::{compare_runs, NumericsMode, Trainer, TrainerConfig};
+use repdl::data::SyntheticCorpus;
+use repdl::nn::{CharTransformer, TransformerConfig};
+use repdl::optim::Adam;
+use repdl::tensor::Tensor;
+
+#[test]
+fn mlp_training_is_bitwise_deterministic() {
+    let cfg = TrainerConfig { steps: 30, ..Default::default() };
+    let a = Trainer::new(cfg, NumericsMode::Repro).run().unwrap();
+    let b = Trainer::new(cfg, NumericsMode::Repro).run().unwrap();
+    let c = compare_runs(&a.loss_curve, &b.loss_curve, &a.param_hash, &b.param_hash);
+    assert!(c.curves_identical);
+    assert!(c.hashes_equal);
+    assert_eq!(c.max_ulp, 0);
+}
+
+#[test]
+fn atomic_baseline_is_not_deterministic() {
+    let cfg = TrainerConfig { steps: 15, ..Default::default() };
+    let p = PlatformProfile::reference();
+    let a = Trainer::new(cfg, NumericsMode::BaselineAtomic(p)).run().unwrap();
+    let b = Trainer::new(cfg, NumericsMode::BaselineAtomic(p)).run().unwrap();
+    let c = compare_runs(&a.loss_curve, &b.loss_curve, &a.param_hash, &b.param_hash);
+    assert!(!c.hashes_equal, "simulated atomics should diverge");
+    assert!(c.first_divergence.is_some());
+}
+
+#[test]
+fn transformer_training_is_bitwise_deterministic() {
+    let cfg = TransformerConfig {
+        vocab: 28,
+        dim: 16,
+        heads: 2,
+        layers: 1,
+        context: 8,
+        mlp_ratio: 2,
+    };
+    let corpus = SyntheticCorpus::generate(2000, 3);
+    let run = || {
+        let mut model = CharTransformer::new(cfg, 5).unwrap();
+        let mut opt = Adam::new(3e-3);
+        let mut losses = Vec::new();
+        for step in 0..12 {
+            let ids: Vec<usize> = corpus.window(step * 13, cfg.context).to_vec();
+            let mut tape = repdl::autograd::Tape::new();
+            let mut binds = Vec::new();
+            let loss = model.loss_on_sequence(&mut tape, &ids, &mut binds).unwrap();
+            tape.backward(loss).unwrap();
+            let grads: Vec<Tensor> = binds.iter().map(|v| tape.grad(*v).unwrap()).collect();
+            opt.step(model.params_mut(), &grads).unwrap();
+            losses.push(tape.value(loss).data()[0]);
+        }
+        let params = model.params_mut();
+        let refs: Vec<&Tensor> = params.iter().map(|p| &**p).collect();
+        (losses, repdl::coordinator::hash_params(&refs))
+    };
+    let (la, ha) = run();
+    let (lb, hb) = run();
+    assert_eq!(ha, hb, "transformer params diverged run-to-run");
+    assert!(la.iter().zip(lb.iter()).all(|(x, y)| x.to_bits() == y.to_bits()));
+}
