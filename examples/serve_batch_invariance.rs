@@ -12,7 +12,7 @@
 use repdl::baseline::PlatformProfile;
 use repdl::coordinator::DeterministicServer;
 use repdl::rng::uniform_tensor;
-use repdl::tensor::Tensor;
+use repdl::tensor::{Tensor, WorkerPool};
 
 fn main() {
     let d = 256;
@@ -36,4 +36,19 @@ fn main() {
         assert_eq!(rep.repro_mismatches, 0);
     }
     println!("\nE7: PASS — RepDL inference is batch-size invariant on every profile");
+
+    // Pooled throughput: the same queue dispatched through persistent
+    // worker pools of increasing size. Outputs are bit-identical for
+    // every pool size (asserted) — only req/s changes.
+    println!("\npooled serving throughput (bit-identical across pool sizes):");
+    let reference = srv.process_repro(&queue).unwrap();
+    for lanes in [1usize, 2, 4, 8] {
+        let pool = WorkerPool::new(lanes);
+        let outs = srv.process_repro_in(&pool, &queue).unwrap();
+        for (a, b) in reference.iter().zip(outs.iter()) {
+            assert!(a.bit_eq(b), "pool size changed serving bits!");
+        }
+        let t = srv.throughput_report(&pool, &queue, 5).unwrap();
+        println!("  pool={lanes:<2} {:>12.0} req/s", t.req_per_s);
+    }
 }

@@ -1,0 +1,53 @@
+"""The committed golden fixture must stay reproducible from the
+specification emulator — this is the Python side of the bit-exactness
+conformance suite (the Rust side is rust/tests/golden_vectors.rs)."""
+
+import importlib.util
+import os
+import sys
+
+import pytest
+
+_TOOLS = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "tools"
+)
+
+
+def _load_generator():
+    spec = importlib.util.spec_from_file_location(
+        "gen_golden_vectors", os.path.join(_TOOLS, "gen_golden_vectors.py")
+    )
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+@pytest.fixture(scope="module")
+def gen():
+    return _load_generator()
+
+
+def test_rounding_helpers_selftest(gen):
+    gen.selftest()
+
+
+def test_committed_fixture_matches_recomputation(gen):
+    if not gen.FIXTURE.exists():
+        pytest.skip("fixture not generated yet")
+    entries = gen.compute_entries()
+    on_disk = {}
+    for line in gen.FIXTURE.read_text().splitlines():
+        if line.startswith("#") or not line.strip():
+            continue
+        k, v = line.split()
+        on_disk[k] = v
+    assert on_disk == entries
+
+
+def test_fixture_inputs_entry_guards_lockstep(gen):
+    # the "inputs" entry must hash the LCG streams themselves, so a
+    # generator/Rust drift is distinguishable from a kernel regression
+    entries = gen.compute_entries()
+    assert "inputs" in entries
+    assert len(entries["inputs"]) == 64
+    assert all(len(v) == 64 for v in entries.values())

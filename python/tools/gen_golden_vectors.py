@@ -1,0 +1,304 @@
+#!/usr/bin/env python3
+"""Generate the committed golden bit-exactness fixtures for the Rust
+conformance suite (``rust/tests/golden_vectors.rs``).
+
+Every RepDL op is a *specification*: sequential-k unfused GEMM, f32 FMA
+GEMM, the pairwise summation tree, and the fixed softmax graph with
+correctly-rounded ``rexp``. This script evaluates those specifications
+independently of the Rust implementation:
+
+* plain f32 ops        -> numpy float32 scalar arithmetic (IEEE-754 RNE),
+* f32 FMA              -> libm ``fmaf`` via ctypes (correctly rounded),
+* correctly-rounded exp -> 300-bit mpmath, rounded to f32 by exact
+  integer round-to-nearest-even (ties cannot occur: exp of a nonzero
+  dyadic rational is transcendental).
+
+It then fingerprints the results with the same SHA-256 framing as
+``rust/src/coordinator/hashing.rs`` (``hash_params`` /``hash_curve``)
+and writes ``rust/tests/fixtures/golden_vectors.txt``. A cross-platform
+CI run can therefore diff exact bits against a committed reference that
+was *not* produced by the code under test.
+
+Usage:
+    python3 python/tools/gen_golden_vectors.py           # (re)write fixture
+    python3 python/tools/gen_golden_vectors.py --check   # verify fixture
+"""
+
+from __future__ import annotations
+
+import ctypes
+import ctypes.util
+import hashlib
+import struct
+import sys
+from fractions import Fraction
+from math import ldexp
+from pathlib import Path
+
+import numpy as np
+
+REPO = Path(__file__).resolve().parents[2]
+FIXTURE = REPO / "rust" / "tests" / "fixtures" / "golden_vectors.txt"
+
+F32 = np.float32
+_U64 = (1 << 64) - 1
+
+# ---------------------------------------------------------------------------
+# deterministic input generation — mirrors the LCG used by the Rust tests
+# ---------------------------------------------------------------------------
+
+
+def lcg_tensor(dims, seed, scale=1.0):
+    """Bit-exact replica of the Rust test generator:
+    s = s*6364136223846793005 + 1442695040888963407 (wrapping u64);
+    value = (((s >> 40) as f32) / 2^24 - 0.5) * 2.0, then * scale.
+    `scale` must be a power of two so the extra multiply is exact."""
+    n = int(np.prod(dims)) if dims else 1
+    s = seed
+    out = np.empty(n, dtype=F32)
+    half = F32(0.5)
+    two = F32(2.0)
+    inv = F32(1.0 / (1 << 24))  # exact: power of two
+    sc = F32(scale)
+    for i in range(n):
+        s = (s * 6364136223846793005 + 1442695040888963407) & _U64
+        v = F32(F32(s >> 40) * inv)  # division by 2^24 == exact multiply
+        out[i] = F32(F32(F32(v - half) * two) * sc)
+    return out.reshape(dims)
+
+
+# ---------------------------------------------------------------------------
+# f32 building blocks
+# ---------------------------------------------------------------------------
+
+_libm = ctypes.CDLL(ctypes.util.find_library("m") or "libm.so.6")
+_libm.fmaf.restype = ctypes.c_float
+_libm.fmaf.argtypes = [ctypes.c_float] * 3
+
+
+def fmaf(a, b, c):
+    """Correctly-rounded f32 fused multiply-add (libm)."""
+    return F32(_libm.fmaf(float(a), float(b), float(c)))
+
+
+def frac_to_f32(fr: Fraction) -> np.float32:
+    """Round an exact rational to f32 with round-to-nearest-even."""
+    if fr == 0:
+        return F32(0.0)
+    sign = F32(-1.0) if fr < 0 else F32(1.0)
+    fr = abs(fr)
+    num, den = fr.numerator, fr.denominator
+
+    def scaled(e):  # fr * 2^-e, exact
+        return Fraction(num, den << e) if e >= 0 else Fraction(num << -e, den)
+
+    e = num.bit_length() - den.bit_length() - 24
+    while scaled(e) >= (1 << 24):
+        e += 1
+    while scaled(e) < (1 << 23):
+        e -= 1
+    if e < -149:  # subnormal range
+        e = -149
+    s = scaled(e)
+    q, rem = divmod(s.numerator, s.denominator)
+    frac2 = Fraction(rem * 2, s.denominator)  # 2*remainder/den vs 1
+    if frac2 > 1 or (frac2 == 1 and (q & 1)):
+        q += 1
+    if q == 1 << 24:
+        q, e = 1 << 23, e + 1
+    if e > 104:  # overflow to inf (not reachable for these fixtures)
+        return F32(np.inf) * sign
+    return F32(ldexp(q, e)) * sign
+
+
+def rexp_f32(x: np.float32):
+    """Correctly-rounded e^x for f32 — the `rnum::rexp` contract,
+    evaluated via 300-bit mpmath + exact RNE rounding."""
+    import mpmath
+
+    x = F32(x)
+    if np.isnan(x):
+        return F32(np.nan)
+    if x > F32(89.0):
+        return F32(np.inf)
+    if x < F32(-104.0):
+        return F32(0.0)
+    if x == 0:
+        return F32(1.0)
+    with mpmath.workprec(300):
+        e = mpmath.exp(mpmath.mpf(float(x)))
+        sign, man, exp, _ = e._mpf_
+        fr = Fraction(man, 1) * Fraction(2) ** exp
+        if sign:
+            fr = -fr
+    return frac_to_f32(fr)
+
+
+# ---------------------------------------------------------------------------
+# op specifications (scalar loops, fixed order — the paper's graphs)
+# ---------------------------------------------------------------------------
+
+
+def matmul_seq(a, b):
+    """Sequential-k, unfused multiply-then-add."""
+    m, k = a.shape
+    n = b.shape[1]
+    out = np.zeros((m, n), dtype=F32)
+    for i in range(m):
+        for j in range(n):
+            acc = F32(0.0)
+            for kk in range(k):
+                acc = F32(acc + F32(a[i, kk] * b[kk, j]))
+            out[i, j] = acc
+    return out
+
+
+def matmul_fma(a, b):
+    """Sequential-k with true f32 FMA contraction."""
+    m, k = a.shape
+    n = b.shape[1]
+    out = np.zeros((m, n), dtype=F32)
+    for i in range(m):
+        for j in range(n):
+            acc = F32(0.0)
+            for kk in range(k):
+                acc = fmaf(a[i, kk], b[kk, j], acc)
+            out[i, j] = acc
+    return out
+
+
+def sum_sequential(xs):
+    acc = F32(0.0)
+    for x in xs:
+        acc = F32(acc + x)
+    return acc
+
+
+def _pairwise_split(n):
+    """Largest power of two < n (shared tree spec: rust/src/rnum/sum.rs)."""
+    return 1 << ((n - 1).bit_length() - 1)
+
+
+def sum_pairwise(xs):
+    if len(xs) <= 8:
+        return sum_sequential(xs)
+    m = _pairwise_split(len(xs))
+    return F32(sum_pairwise(xs[:m]) + sum_pairwise(xs[m:]))
+
+
+def softmax_rows(x):
+    """Fixed graph: first-max -> subtract -> rexp -> sequential sum ->
+    divide (rust/src/nn/softmax.rs)."""
+    rows, c = x.shape
+    out = np.zeros((rows, c), dtype=F32)
+    for r in range(rows):
+        m = x[r, 0]
+        for v in x[r, 1:]:
+            if v > m:
+                m = v
+        denom = F32(0.0)
+        for j in range(c):
+            e = rexp_f32(F32(x[r, j] - m))
+            out[r, j] = e
+            denom = F32(denom + e)
+        for j in range(c):
+            out[r, j] = F32(out[r, j] / denom)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# fingerprint framing — mirrors rust/src/coordinator/hashing.rs
+# ---------------------------------------------------------------------------
+
+
+def hash_params(tensors):
+    """SHA-256 over (ndims u64-le, dims u64-le…, f32 bits le…) per tensor."""
+    h = hashlib.sha256()
+    for t in tensors:
+        h.update(struct.pack("<Q", t.ndim))
+        for d in t.shape:
+            h.update(struct.pack("<Q", d))
+        for v in t.reshape(-1):
+            h.update(struct.pack("<I", np.frombuffer(F32(v).tobytes(), np.uint32)[0]))
+    return h.hexdigest()
+
+
+def hash_curve(values):
+    """SHA-256 over f32 bit patterns (le)."""
+    h = hashlib.sha256()
+    for v in values:
+        h.update(struct.pack("<I", np.frombuffer(F32(v).tobytes(), np.uint32)[0]))
+    return h.hexdigest()
+
+
+# ---------------------------------------------------------------------------
+# fixture definition — keep in lockstep with rust/tests/golden_vectors.rs
+# ---------------------------------------------------------------------------
+
+
+def compute_entries():
+    a = lcg_tensor((16, 32), 1001)
+    b = lcg_tensor((32, 8), 1002)
+    xs = lcg_tensor((1000,), 1003)
+    sx = lcg_tensor((8, 32), 1004, scale=4.0)
+
+    entries = {}
+    entries["inputs"] = hash_params([a, b, xs, sx])
+    entries["matmul_seq_16x32x8"] = hash_params([matmul_seq(a, b)])
+    entries["matmul_fma_16x32x8"] = hash_params([matmul_fma(a, b)])
+    entries["sum_sequential_1000"] = hash_curve([sum_sequential(xs)])
+    entries["sum_pairwise_1000"] = hash_curve([sum_pairwise(xs)])
+    entries["softmax_rows_8x32"] = hash_params([softmax_rows(sx)])
+    return entries
+
+
+def selftest():
+    """Sanity-check the rounding helpers before trusting the fixture."""
+    # frac_to_f32 must invert exact f32 values…
+    rng = np.random.default_rng(7)
+    for v in rng.standard_normal(2000).astype(F32):
+        assert frac_to_f32(Fraction(float(v))) == v, v
+    # …agree with float64->float32 RNE casts…
+    for v in rng.standard_normal(2000) * 1e3:
+        assert frac_to_f32(Fraction(float(v))) == F32(v), v
+    # …handle subnormals and halfway ties (2^-25 between 0 and 2^-24*…)
+    assert frac_to_f32(Fraction(1, 1 << 149)) == np.ldexp(F32(1.0), -149)
+    assert frac_to_f32(Fraction(1, 1 << 150)) == F32(0.0)  # tie -> even (0)
+    # fmaf really fuses: 1 + 2^-24 - 1 style cancellation
+    x = F32(1.0) + F32(2.0) ** F32(-12)
+    fused = fmaf(x, x, F32(-1.0))
+    unfused = F32(F32(x * x) - F32(1.0))
+    assert fused != unfused, "libm fmaf did not fuse"
+    # rexp at 0 / extremes
+    assert rexp_f32(F32(0.0)) == F32(1.0)
+    assert rexp_f32(F32(-200.0)) == F32(0.0)
+    assert np.isinf(rexp_f32(F32(100.0)))
+
+
+def main():
+    selftest()
+    entries = compute_entries()
+    lines = ["# golden bit-exactness fixtures — generated by python/tools/gen_golden_vectors.py"]
+    lines += [f"{k} {v}" for k, v in entries.items()]
+    text = "\n".join(lines) + "\n"
+    if "--check" in sys.argv:
+        if not FIXTURE.exists():
+            print(f"fixture missing: {FIXTURE} (run without --check to generate)")
+            sys.exit(1)
+        on_disk = FIXTURE.read_text()
+        if on_disk != text:
+            print("MISMATCH between recomputed golden vectors and", FIXTURE)
+            for line in text.splitlines():
+                print("  want:", line)
+            sys.exit(1)
+        print("golden vectors verified:", len(entries), "entries")
+    else:
+        FIXTURE.parent.mkdir(parents=True, exist_ok=True)
+        FIXTURE.write_text(text)
+        print("wrote", FIXTURE)
+        for k, v in entries.items():
+            print(f"  {k} {v}")
+
+
+if __name__ == "__main__":
+    main()

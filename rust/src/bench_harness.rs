@@ -19,6 +19,12 @@ pub struct Stats {
 }
 
 impl Stats {
+    /// Throughput implied by the median sample: `items` processed per
+    /// median period, in items/second.
+    pub fn per_sec(&self, items: usize) -> f64 {
+        items as f64 * 1e9 / self.median_ns
+    }
+
     /// ns → human string.
     pub fn human(ns: f64) -> String {
         if ns < 1e3 {
@@ -74,6 +80,12 @@ pub fn row(key: &str, value: impl std::fmt::Display) {
     println!("{key:<46} {value}");
 }
 
+/// Print a throughput row: `items` per median period as items/second
+/// (used by the serve benchmarks to report req/s).
+pub fn row_rate(key: &str, stats: &Stats, items: usize, unit: &str) {
+    println!("{key:<46} {:>12.0} {unit}/s", stats.per_sec(items));
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -89,6 +101,13 @@ mod tests {
         });
         assert!(s.median_ns > 0.0);
         assert!(s.min_ns <= s.median_ns);
+    }
+
+    #[test]
+    fn per_sec_inverts_median() {
+        let s = Stats { median_ns: 2e9, min_ns: 1e9, mad_ns: 0.0, samples: 1 };
+        // 100 items every 2 seconds = 50 items/s
+        assert!((s.per_sec(100) - 50.0).abs() < 1e-9);
     }
 
     #[test]

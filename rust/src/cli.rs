@@ -65,6 +65,17 @@ impl Args {
     pub fn has(&self, key: &str) -> bool {
         self.flags.contains_key(key)
     }
+
+    /// The shared `--threads` flag: explicit worker-pool lanes, or None
+    /// to use the global pool (`REPDL_THREADS` / machine parallelism).
+    /// `0` means sequential (1 lane), matching `REPDL_THREADS=0`;
+    /// unparsable values are rejected as None.
+    pub fn threads(&self) -> Option<usize> {
+        self.flags
+            .get("threads")
+            .and_then(|v| v.parse::<usize>().ok())
+            .map(|n| n.max(1))
+    }
 }
 
 #[cfg(test)]
@@ -91,5 +102,14 @@ mod tests {
         assert_eq!(a.get_usize("steps", 42), 42);
         assert_eq!(a.get_str("mode", "repro"), "repro");
         assert!(!a.has("verbose"));
+    }
+
+    #[test]
+    fn threads_flag() {
+        assert_eq!(p("serve --threads 4").threads(), Some(4));
+        assert_eq!(p("serve").threads(), None);
+        // 0 = sequential, same semantics as REPDL_THREADS=0
+        assert_eq!(p("serve --threads 0").threads(), Some(1));
+        assert_eq!(p("serve --threads lots").threads(), None);
     }
 }

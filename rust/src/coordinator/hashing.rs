@@ -1,7 +1,7 @@
 //! Bitwise fingerprints for model state and tensors.
 
+use crate::sha256::Sha256;
 use crate::tensor::Tensor;
-use sha2::{Digest, Sha256};
 
 /// Hex-encode bytes.
 pub fn hex(bytes: &[u8]) -> String {

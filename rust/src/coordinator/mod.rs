@@ -11,7 +11,7 @@ pub mod serve;
 pub mod trainer;
 pub mod verifier;
 
-pub use hashing::{hash_params, hex};
-pub use serve::{DeterministicServer, ServeReport};
+pub use hashing::{hash_curve, hash_params, hex};
+pub use serve::{DeterministicServer, ServeReport, ServeThroughput};
 pub use trainer::{NumericsMode, TrainReport, Trainer, TrainerConfig};
 pub use verifier::{compare_runs, first_divergence, Comparison};

@@ -10,7 +10,8 @@
 //! size — [`ServeReport`] quantifies that.
 
 use crate::baseline::{baseline_matmul, PlatformProfile};
-use crate::tensor::{matmul, Tensor};
+use crate::bench_harness::bench;
+use crate::tensor::{matmul, matmul_in, Tensor, WorkerPool};
 use crate::Result;
 
 /// A toy model server: logits = x · W (+ per-row softmax left to client).
@@ -32,6 +33,18 @@ pub struct ServeReport {
     pub baseline_mismatches: usize,
 }
 
+/// Serving throughput measurement (see
+/// [`DeterministicServer::throughput_report`]).
+#[derive(Clone, Debug)]
+pub struct ServeThroughput {
+    /// Requests per replay.
+    pub requests: usize,
+    /// Median requests/second over the measured replays.
+    pub req_per_s: f64,
+    /// Median time for one full-queue replay, nanoseconds.
+    pub median_ns: f64,
+}
+
 impl DeterministicServer {
     /// New server.
     pub fn new(weights: Tensor, max_batch: usize) -> Self {
@@ -42,6 +55,15 @@ impl DeterministicServer {
     /// Returns one output row per request.
     pub fn process_repro(&self, queue: &[Tensor]) -> Result<Vec<Tensor>> {
         self.process_with(queue, |x| matmul(x, &self.weights))
+    }
+
+    /// [`Self::process_repro`] with every batch GEMM dispatched on an
+    /// explicit [`WorkerPool`] — the serving hot path shares one
+    /// persistent pool across all requests instead of spawning threads
+    /// per batch. Bit-identical to `process_repro` for any pool size
+    /// (asserted in tests and the `pool_invariance` suite).
+    pub fn process_repro_in(&self, pool: &WorkerPool, queue: &[Tensor]) -> Result<Vec<Tensor>> {
+        self.process_with(queue, |x| matmul_in(pool, x, &self.weights))
     }
 
     /// Baseline path under a platform profile (size-dispatching kernels).
@@ -75,6 +97,30 @@ impl DeterministicServer {
             }
         }
         Ok(outs)
+    }
+
+    /// Measure serving throughput (requests/second) through an explicit
+    /// pool: the whole queue is replayed `samples` times via
+    /// [`Self::process_repro_in`] and the median per-replay time is
+    /// converted to req/s. Prints one `bench_harness` row.
+    pub fn throughput_report(
+        &self,
+        pool: &WorkerPool,
+        queue: &[Tensor],
+        samples: usize,
+    ) -> Result<ServeThroughput> {
+        // Validate shapes once up front so the measured closure cannot
+        // fail (bench requires infallible work).
+        self.process_repro_in(pool, queue)?;
+        let label = format!("serve {} reqs, pool={} lanes", queue.len(), pool.lanes());
+        let stats = bench(&label, samples.max(1), || {
+            self.process_repro_in(pool, queue).unwrap()
+        });
+        Ok(ServeThroughput {
+            requests: queue.len(),
+            req_per_s: stats.per_sec(queue.len()),
+            median_ns: stats.median_ns,
+        })
     }
 
     /// Replay the same requests under several batch sizes and count
@@ -140,6 +186,33 @@ mod tests {
             rep.baseline_mismatches > 0,
             "baseline unexpectedly invariant — dispatch simulation broken?"
         );
+    }
+
+    #[test]
+    fn pooled_path_is_bit_identical_and_pool_size_invariant() {
+        let w = crate::rng::uniform_tensor(&[64, 8], -0.3, 0.3, 6);
+        let srv = DeterministicServer::new(w, 8);
+        let q = queue(21, 64);
+        let global = srv.process_repro(&q).unwrap();
+        for lanes in [1usize, 2, 5, 8] {
+            let pool = WorkerPool::new(lanes);
+            let got = srv.process_repro_in(&pool, &q).unwrap();
+            for (a, b) in global.iter().zip(got.iter()) {
+                assert!(a.bit_eq(b), "lanes={lanes}");
+            }
+        }
+    }
+
+    #[test]
+    fn throughput_report_counts_requests() {
+        let w = crate::rng::uniform_tensor(&[32, 4], -0.3, 0.3, 8);
+        let srv = DeterministicServer::new(w, 16);
+        let q = queue(12, 32);
+        let pool = WorkerPool::new(2);
+        let t = srv.throughput_report(&pool, &q, 3).unwrap();
+        assert_eq!(t.requests, 12);
+        assert!(t.req_per_s > 0.0);
+        assert!(t.median_ns > 0.0);
     }
 
     #[test]

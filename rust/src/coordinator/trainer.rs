@@ -12,8 +12,9 @@ use crate::coordinator::hashing::hash_params;
 use crate::data::GaussianMixtureImages;
 use crate::nn::softmax_rows;
 use crate::rng::derive_seed;
-use crate::tensor::{matmul, Tensor};
+use crate::tensor::{global_pool, matmul_in, Tensor, WorkerPool};
 use crate::Result;
+use std::sync::Arc;
 
 /// Which numerics the trainer runs.
 #[derive(Clone, Copy, Debug)]
@@ -69,17 +70,30 @@ pub struct Trainer {
     pub cfg: TrainerConfig,
     /// Numerics under test.
     pub mode: NumericsMode,
+    /// Worker pool for the Repro GEMMs (None = process-global pool).
+    /// Pool size never changes bits — only wall-clock.
+    pool: Option<Arc<WorkerPool>>,
 }
 
 impl Trainer {
-    /// New trainer.
+    /// New trainer on the global pool.
     pub fn new(cfg: TrainerConfig, mode: NumericsMode) -> Self {
-        Trainer { cfg, mode }
+        Trainer { cfg, mode, pool: None }
+    }
+
+    /// New trainer dispatching its reproducible kernels on an explicit
+    /// pool (tests / benchmarks / `--threads`).
+    pub fn with_pool(cfg: TrainerConfig, mode: NumericsMode, pool: Arc<WorkerPool>) -> Self {
+        Trainer { cfg, mode, pool: Some(pool) }
+    }
+
+    fn pool(&self) -> &WorkerPool {
+        self.pool.as_deref().unwrap_or_else(|| global_pool())
     }
 
     fn mm(&self, a: &Tensor, b: &Tensor) -> Result<Tensor> {
         match &self.mode {
-            NumericsMode::Repro => matmul(a, b),
+            NumericsMode::Repro => matmul_in(self.pool(), a, b),
             NumericsMode::Baseline(p) | NumericsMode::BaselineAtomic(p) => {
                 baseline_matmul(a, b, p)
             }
@@ -191,6 +205,21 @@ mod tests {
             crate::coordinator::hashing::hash_curve(&a.loss_curve),
             crate::coordinator::hashing::hash_curve(&b.loss_curve)
         );
+    }
+
+    #[test]
+    fn pool_size_does_not_change_training_bits() {
+        // the paper's claim end-to-end: pool size is a pure perf knob
+        let cfg = TrainerConfig { steps: 10, ..Default::default() };
+        let one = Trainer::with_pool(cfg, NumericsMode::Repro, Arc::new(WorkerPool::new(1)))
+            .run()
+            .unwrap();
+        for lanes in [2usize, 5] {
+            let r = Trainer::with_pool(cfg, NumericsMode::Repro, Arc::new(WorkerPool::new(lanes)))
+                .run()
+                .unwrap();
+            assert_eq!(one.param_hash, r.param_hash, "lanes={lanes}");
+        }
     }
 
     #[test]

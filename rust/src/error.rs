@@ -1,30 +1,55 @@
-//! Crate-wide error type.
+//! Crate-wide error type (hand-rolled — `thiserror` is not in the
+//! offline crate set, DESIGN.md §5).
+
+use std::fmt;
 
 /// Crate-wide result alias.
 pub type Result<T> = std::result::Result<T, Error>;
 
 /// Errors produced by RepDL.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum Error {
     /// Shape mismatch or invalid dimension arguments.
-    #[error("shape error: {0}")]
     Shape(String),
 
     /// Configuration file / CLI problems.
-    #[error("config error: {0}")]
     Config(String),
 
     /// Artifact loading / PJRT execution problems.
-    #[error("runtime error: {0}")]
     Runtime(String),
 
     /// Underlying XLA error.
-    #[error("xla error: {0}")]
     Xla(String),
 
     /// I/O error.
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Shape(m) => write!(f, "shape error: {m}"),
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Xla(m) => write!(f, "xla error: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 impl Error {
@@ -39,5 +64,27 @@ impl Error {
     /// Convenience constructor for runtime errors.
     pub fn runtime(msg: impl Into<String>) -> Self {
         Error::Runtime(msg.into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_formats() {
+        assert_eq!(format!("{}", Error::shape("bad dims")), "shape error: bad dims");
+        assert_eq!(format!("{}", Error::config("oops")), "config error: oops");
+        assert_eq!(
+            format!("{}", Error::runtime("no manifest")),
+            "runtime error: no manifest"
+        );
+    }
+
+    #[test]
+    fn io_conversion_preserves_source() {
+        let e: Error = std::io::Error::new(std::io::ErrorKind::NotFound, "gone").into();
+        assert!(format!("{e}").contains("gone"));
+        assert!(std::error::Error::source(&e).is_some());
     }
 }

@@ -21,8 +21,14 @@
 //!
 //! * [`rnum`] — correctly-rounded scalar ops + the `BigFloat` rounding
 //!   oracle + reproducible summation algorithms.
-//! * [`tensor`] — shape/stride tensor library with fixed-order GEMM,
-//!   convolution and reductions.
+//! * [`tensor`] — shape/stride tensor library with fixed-order GEMM
+//!   (cache-blocked, bit-identical to the per-element dot form),
+//!   convolution and reductions, all dispatched on the persistent
+//!   [`tensor::pool::WorkerPool`]: a lazily-initialised worker pool with
+//!   static chunk→lane assignment, so pool size is a pure performance
+//!   knob that never changes a single bit (see `DESIGN.md` §3 and the
+//!   `pool_invariance` / `golden_vectors` conformance suites under
+//!   `rust/tests/`).
 //! * [`autograd`] — tape autograd with deterministic gradient-accumulation
 //!   order.
 //! * [`nn`] — PyTorch-named modules (`Linear`, `Conv2d`, `BatchNorm2d`,
@@ -35,9 +41,13 @@
 //!   parameterised by a simulated [`baseline::PlatformProfile`]; the
 //!   control group for every experiment.
 //! * [`runtime`] — PJRT loader/executor for the JAX/Pallas AOT artifacts
-//!   (the second, independent implementation of the RepDL op spec).
-//! * [`coordinator`] — trainer, deterministic inference server,
+//!   (the second, independent implementation of the RepDL op spec);
+//!   gated behind the `pjrt` feature, stubbed otherwise.
+//! * [`coordinator`] — trainer, deterministic inference server (pooled
+//!   batch dispatch + req/s throughput reporting),
 //!   bitwise-verification harness.
+//! * [`sha256`] — in-crate FIPS 180-4 digest backing all bitwise
+//!   fingerprints (zero external dependencies — DESIGN.md §5).
 //!
 //! See `DESIGN.md` for the experiment index (E1–E9) and `EXPERIMENTS.md`
 //! for paper-vs-measured results.
@@ -56,6 +66,7 @@ pub mod proptest;
 pub mod rng;
 pub mod rnum;
 pub mod runtime;
+pub mod sha256;
 pub mod tensor;
 
 pub use error::{Error, Result};

@@ -4,7 +4,7 @@
 //!   train        train the MLP workload (choose numerics: repro/baseline/atomic)
 //!   verify       E1/E2 style run-twice + cross-platform verification
 //!   transformer  train the char transformer (E8 workload)
-//!   serve        E7 batch-invariance report
+//!   serve        E7 batch-invariance report + pooled throughput (--threads N)
 //!   runtime      load + execute an AOT artifact (needs `make artifacts`)
 //!   selftest     quick determinism smoke checks
 
@@ -144,8 +144,14 @@ fn cmd_transformer(args: &Args) -> i32 {
 }
 
 fn cmd_serve(args: &Args) -> i32 {
+    use repdl::tensor::{default_threads, global_pool, WorkerPool};
     let d = args.get_usize("dim", 256);
     let n = args.get_usize("requests", 64);
+    // only build a private pool for an explicit --threads; otherwise
+    // share the global pool the kernels already use
+    let private: Option<WorkerPool> = args.threads().map(WorkerPool::new);
+    let pool: &WorkerPool = private.as_ref().unwrap_or_else(|| global_pool());
+    let lanes = args.threads().unwrap_or_else(default_threads);
     let w = repdl::rng::uniform_tensor(&[d, 16], -0.3, 0.3, 5);
     let srv = DeterministicServer::new(w, 16);
     let queue: Vec<Tensor> = (0..n)
@@ -159,6 +165,9 @@ fn cmd_serve(args: &Args) -> i32 {
         "requests={} repro_mismatches={} baseline_mismatches={}",
         rep.requests, rep.repro_mismatches, rep.baseline_mismatches
     );
+    // throughput through the persistent pool (req/s)
+    let t = srv.throughput_report(pool, &queue, 5).expect("throughput");
+    println!("pool_lanes={lanes} throughput={:.0} req/s", t.req_per_s);
     if rep.repro_mismatches == 0 {
         0
     } else {

@@ -119,4 +119,112 @@ mod tests {
     fn forall_reports_failures() {
         forall(4, 100, |g| g.below(10), |&x| x < 5);
     }
+
+    // ---- kernel conformance properties (pool + blocked GEMM) ----
+
+    use crate::rnum::sum::{sum_pairwise, sum_sequential};
+    use crate::tensor::{
+        matmul_dotform_in, matmul_fma_in, matmul_in, sum_axis_in, sum_axis_pairwise_in, Tensor,
+        WorkerPool,
+    };
+
+    #[test]
+    fn prop_blocked_gemm_equals_dotform_bitwise() {
+        // randomized shapes straddle the blocked kernel's tile
+        // boundaries; loop interchange/blocking must never move a bit
+        let pool = WorkerPool::new(3);
+        forall(
+            11,
+            40,
+            |g| {
+                let m = 1 + g.below(12);
+                let k = 1 + g.below(48);
+                let n = 1 + g.below(300);
+                let a = g.f32_vec(m * k, 2.0);
+                let b = g.f32_vec(k * n, 2.0);
+                (m, k, n, a, b)
+            },
+            |(m, k, n, a, b)| {
+                let at = Tensor::from_vec(&[*m, *k], a.clone()).unwrap();
+                let bt = Tensor::from_vec(&[*k, *n], b.clone()).unwrap();
+                let blocked = matmul_in(&pool, &at, &bt).unwrap();
+                let dotform = matmul_dotform_in(&pool, &at, &bt).unwrap();
+                blocked.bit_eq(&dotform)
+            },
+        );
+    }
+
+    #[test]
+    fn prop_gemm_pool_size_invariant() {
+        let one = WorkerPool::new(1);
+        let seven = WorkerPool::new(7);
+        forall(
+            13,
+            30,
+            |g| {
+                let m = 1 + g.below(20);
+                let k = 1 + g.below(30);
+                let n = 1 + g.below(40);
+                let a = g.f32_vec(m * k, 3.0);
+                let b = g.f32_vec(k * n, 3.0);
+                (m, k, n, a, b)
+            },
+            |(m, k, n, a, b)| {
+                let at = Tensor::from_vec(&[*m, *k], a.clone()).unwrap();
+                let bt = Tensor::from_vec(&[*k, *n], b.clone()).unwrap();
+                matmul_in(&one, &at, &bt)
+                    .unwrap()
+                    .bit_eq(&matmul_in(&seven, &at, &bt).unwrap())
+                    && matmul_fma_in(&one, &at, &bt)
+                        .unwrap()
+                        .bit_eq(&matmul_fma_in(&seven, &at, &bt).unwrap())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_pooled_reduce_equals_rnum_sums_bitwise() {
+        // the tensor-level pooled reduction must reproduce the scalar
+        // rnum specifications exactly, element for element
+        let pool = WorkerPool::new(4);
+        forall(
+            17,
+            60,
+            |g| {
+                let n = 1 + g.below(2000);
+                g.f32_vec(n, 100.0)
+            },
+            |xs| {
+                let t = Tensor::from_vec(&[xs.len()], xs.clone()).unwrap();
+                let seq = sum_axis_in(&pool, &t, 0).unwrap().data()[0];
+                let pw = sum_axis_pairwise_in(&pool, &t, 0).unwrap().data()[0];
+                seq.to_bits() == sum_sequential(xs).to_bits()
+                    && pw.to_bits() == sum_pairwise(xs).to_bits()
+            },
+        );
+    }
+
+    #[test]
+    fn prop_pooled_rowwise_reduce_matches_scalar_spec() {
+        // 2-D last-axis reduction: every output row equals the rnum
+        // scalar sum of that row, for a pool larger than the row count
+        let pool = WorkerPool::new(8);
+        forall(
+            19,
+            40,
+            |g| {
+                let rows = 1 + g.below(6);
+                let cols = 1 + g.below(200);
+                (rows, cols, g.f32_vec(rows * cols, 10.0))
+            },
+            |(rows, cols, xs)| {
+                let t = Tensor::from_vec(&[*rows, *cols], xs.clone()).unwrap();
+                let s = sum_axis_in(&pool, &t, 1).unwrap();
+                (0..*rows).all(|r| {
+                    s.data()[r].to_bits()
+                        == sum_sequential(&xs[r * cols..(r + 1) * cols]).to_bits()
+                })
+            },
+        );
+    }
 }

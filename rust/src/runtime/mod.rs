@@ -9,7 +9,15 @@
 //! The manifest (`artifacts/manifest.json`) maps artifact names to files
 //! and declared I/O shapes, so the coordinator can validate inputs before
 //! touching PJRT.
+//!
+//! The PJRT backend needs the `xla` crate, which is not in the offline
+//! crate set (DESIGN.md §5). It is therefore gated behind the `pjrt`
+//! cargo feature (add the `xla` dependency to `Cargo.toml` when enabling
+//! it). Without the feature this module still parses manifests
+//! ([`load_manifest`]) but [`Runtime::new`] returns a clean error, and
+//! the E6 cross-implementation tests self-skip.
 
+#[cfg(feature = "pjrt")]
 pub mod literal;
 
 use crate::config::Json;
@@ -38,7 +46,55 @@ pub struct ArtifactSpec {
     pub outputs: Vec<IoSpec>,
 }
 
+/// Parse `manifest.json` in `dir` into artifact specs (backend-agnostic;
+/// used by both the PJRT runtime and the stub).
+pub fn load_manifest(dir: &Path) -> Result<HashMap<String, ArtifactSpec>> {
+    let manifest_path = dir.join("manifest.json");
+    let text = std::fs::read_to_string(&manifest_path).map_err(|e| {
+        Error::runtime(format!(
+            "cannot read {} (run `make artifacts` first): {e}",
+            manifest_path.display()
+        ))
+    })?;
+    let json = Json::parse(&text)?;
+    let mut specs = HashMap::new();
+    let arts = json
+        .get("artifacts")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| Error::runtime("manifest missing 'artifacts' array"))?;
+    for a in arts {
+        let name = a.str_or("name", "").to_string();
+        let file = a.str_or("file", "").to_string();
+        let parse_io = |key: &str| -> Vec<IoSpec> {
+            a.get(key)
+                .and_then(Json::as_arr)
+                .map(|xs| {
+                    xs.iter()
+                        .map(|s| IoSpec {
+                            dims: s
+                                .as_arr()
+                                .unwrap_or(&[])
+                                .iter()
+                                .filter_map(Json::as_usize)
+                                .collect(),
+                        })
+                        .collect()
+                })
+                .unwrap_or_default()
+        };
+        let spec = ArtifactSpec {
+            name: name.clone(),
+            file,
+            inputs: parse_io("inputs"),
+            outputs: parse_io("outputs"),
+        };
+        specs.insert(name, spec);
+    }
+    Ok(specs)
+}
+
 /// PJRT CPU runtime with a compiled-executable cache.
+#[cfg(feature = "pjrt")]
 pub struct Runtime {
     client: xla::PjRtClient,
     dir: PathBuf,
@@ -47,51 +103,12 @@ pub struct Runtime {
     cache: HashMap<String, xla::PjRtLoadedExecutable>,
 }
 
+#[cfg(feature = "pjrt")]
 impl Runtime {
     /// Open an artifacts directory (expects `manifest.json`).
     pub fn new(dir: impl AsRef<Path>) -> Result<Runtime> {
         let dir = dir.as_ref().to_path_buf();
-        let manifest_path = dir.join("manifest.json");
-        let text = std::fs::read_to_string(&manifest_path).map_err(|e| {
-            Error::runtime(format!(
-                "cannot read {} (run `make artifacts` first): {e}",
-                manifest_path.display()
-            ))
-        })?;
-        let json = Json::parse(&text)?;
-        let mut specs = HashMap::new();
-        let arts = json
-            .get("artifacts")
-            .and_then(Json::as_arr)
-            .ok_or_else(|| Error::runtime("manifest missing 'artifacts' array"))?;
-        for a in arts {
-            let name = a.str_or("name", "").to_string();
-            let file = a.str_or("file", "").to_string();
-            let parse_io = |key: &str| -> Vec<IoSpec> {
-                a.get(key)
-                    .and_then(Json::as_arr)
-                    .map(|xs| {
-                        xs.iter()
-                            .map(|s| IoSpec {
-                                dims: s
-                                    .as_arr()
-                                    .unwrap_or(&[])
-                                    .iter()
-                                    .filter_map(Json::as_usize)
-                                    .collect(),
-                            })
-                            .collect()
-                    })
-                    .unwrap_or_default()
-            };
-            let spec = ArtifactSpec {
-                name: name.clone(),
-                file,
-                inputs: parse_io("inputs"),
-                outputs: parse_io("outputs"),
-            };
-            specs.insert(name, spec);
-        }
+        let specs = load_manifest(&dir)?;
         let client = xla::PjRtClient::cpu().map_err(|e| Error::Xla(format!("{e:?}")))?;
         Ok(Runtime { client, dir, specs, cache: HashMap::new() })
     }
@@ -160,6 +177,48 @@ impl Runtime {
     }
 }
 
+/// Stub runtime used when the crate is built without the `pjrt` feature:
+/// construction fails with an actionable message, so every caller that
+/// already handles "no artifacts" (the E6 tests, `repdl runtime`)
+/// degrades to a clean skip.
+#[cfg(not(feature = "pjrt"))]
+pub struct Runtime {
+    /// Parsed manifest (kept for API parity; never populated because
+    /// `new` always errors).
+    pub specs: HashMap<String, ArtifactSpec>,
+    _dir: PathBuf,
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl Runtime {
+    /// Always fails: the PJRT backend is compiled out.
+    pub fn new(dir: impl AsRef<Path>) -> Result<Runtime> {
+        // Validate the manifest anyway so configuration errors surface
+        // even in stub builds, then report the missing backend.
+        let dir = dir.as_ref().to_path_buf();
+        load_manifest(&dir)?;
+        Err(Error::runtime(
+            "PJRT backend not compiled in (build with `--features pjrt` and add the \
+             `xla` dependency); run `make artifacts` first for the AOT files",
+        ))
+    }
+
+    /// Stub platform name.
+    pub fn platform(&self) -> String {
+        "stub (no pjrt feature)".to_string()
+    }
+
+    /// Always fails in stub builds.
+    pub fn load(&mut self, _name: &str) -> Result<()> {
+        Err(Error::runtime("PJRT backend not compiled in"))
+    }
+
+    /// Always fails in stub builds.
+    pub fn run(&mut self, _name: &str, _inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        Err(Error::runtime("PJRT backend not compiled in"))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -184,10 +243,20 @@ mod tests {
                  "inputs": [[2,3],[3,2]], "outputs": [[2,2]]}]}"#,
         )
         .unwrap();
-        let rt = Runtime::new(&dir).unwrap();
-        let spec = &rt.specs["mm"];
+        let specs = load_manifest(&dir).unwrap();
+        let spec = &specs["mm"];
         assert_eq!(spec.inputs[0].dims, vec![2, 3]);
         assert_eq!(spec.outputs[0].dims, vec![2, 2]);
-        assert_eq!(rt.platform(), "cpu");
+        #[cfg(feature = "pjrt")]
+        {
+            let rt = Runtime::new(&dir).unwrap();
+            assert_eq!(rt.platform(), "cpu");
+        }
+        #[cfg(not(feature = "pjrt"))]
+        {
+            // stub builds refuse with an actionable message
+            let msg = format!("{}", Runtime::new(&dir).unwrap_err());
+            assert!(msg.contains("pjrt"), "{msg}");
+        }
     }
 }

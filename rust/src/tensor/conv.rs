@@ -14,8 +14,9 @@
 //! paper's §3.1 order-invariance principle: same basic ops, same order ⇒
 //! one API; had the order differed, it would need a different name.
 
-use super::matmul::matmul;
-use super::par::{default_threads, par_chunks};
+use super::matmul::matmul_in;
+use super::par::par_chunks_in;
+use super::pool::{global_pool, WorkerPool};
 use super::tensor::Tensor;
 use crate::{Error, Result};
 
@@ -63,18 +64,40 @@ fn check_conv(x: &Tensor, w: &Tensor) -> Result<(usize, usize, usize, usize, usi
 /// vectorised row-kernel GEMM. Small shapes stay on the direct loops
 /// (im2col materialisation overhead dominates there).
 pub fn conv2d(x: &Tensor, w: &Tensor, bias: Option<&Tensor>, p: Conv2dParams) -> Result<Tensor> {
+    conv2d_in(global_pool(), x, w, bias, p)
+}
+
+/// [`conv2d`] on an explicit pool (size routing included).
+pub fn conv2d_in(
+    pool: &WorkerPool,
+    x: &Tensor,
+    w: &Tensor,
+    bias: Option<&Tensor>,
+    p: Conv2dParams,
+) -> Result<Tensor> {
     let (_, c, h, wd, _, kh, kw) = check_conv(x, w)?;
     if let Ok((oh, ow)) = out_hw(h, wd, kh, kw, &p) {
         let work = c * kh * kw * oh * ow;
         if work >= 16_384 {
-            return conv2d_im2col(x, w, bias, p);
+            return conv2d_im2col_in(pool, x, w, bias, p);
         }
     }
-    conv2d_direct(x, w, bias, p)
+    conv2d_direct_in(pool, x, w, bias, p)
 }
 
 /// Direct-loop formulation of the same spec (ablation / small shapes).
 pub fn conv2d_direct(
+    x: &Tensor,
+    w: &Tensor,
+    bias: Option<&Tensor>,
+    p: Conv2dParams,
+) -> Result<Tensor> {
+    conv2d_direct_in(global_pool(), x, w, bias, p)
+}
+
+/// [`conv2d_direct`] on an explicit pool.
+pub fn conv2d_direct_in(
+    pool: &WorkerPool,
     x: &Tensor,
     w: &Tensor,
     bias: Option<&Tensor>,
@@ -92,7 +115,7 @@ pub fn conv2d_direct(
     let wdat = w.data();
     let bias_d = bias.map(|t| t.data());
     // one chunk = one (b, o) output plane: t_conv parallel tasks grouped
-    par_chunks(out.data_mut(), oh * ow, default_threads(), |start, plane| {
+    par_chunks_in(pool, out.data_mut(), oh * ow, |start, plane| {
         let plane_idx = start / (oh * ow);
         let (bi, oi) = (plane_idx / o, plane_idx % o);
         for ohh in 0..oh {
@@ -175,6 +198,18 @@ pub fn conv2d_im2col(
     bias: Option<&Tensor>,
     p: Conv2dParams,
 ) -> Result<Tensor> {
+    conv2d_im2col_in(global_pool(), x, w, bias, p)
+}
+
+/// [`conv2d_im2col`] on an explicit pool (the inner GEMM dispatches
+/// there; im2col materialisation stays on the caller thread).
+pub fn conv2d_im2col_in(
+    pool: &WorkerPool,
+    x: &Tensor,
+    w: &Tensor,
+    bias: Option<&Tensor>,
+    p: Conv2dParams,
+) -> Result<Tensor> {
     let (b, c, h, wd, o, kh, kw) = check_conv(x, w)?;
     let (oh, ow) = out_hw(h, wd, kh, kw, &p)?;
     let k = c * kh * kw;
@@ -182,7 +217,7 @@ pub fn conv2d_im2col(
     let mut out = Tensor::zeros(&[b, o, oh, ow]);
     for bi in 0..b {
         let cols = im2col(x, bi, kh, kw, &p)?; // (OH·OW, K)
-        let prod = matmul(&wmat, &cols.transpose2d()?)?; // (O, OH·OW)
+        let prod = matmul_in(pool, &wmat, &cols.transpose2d()?)?; // (O, OH·OW)
         for oi in 0..o {
             for s in 0..oh * ow {
                 let mut v = prod.data()[oi * oh * ow + s];
@@ -323,15 +358,17 @@ mod tests {
     }
 
     #[test]
-    fn thread_invariance() {
+    fn pool_size_invariance() {
+        // explicit pools — no env-var mutation (the seed's set_var here
+        // raced with other tests under the parallel harness)
         let x = lcg(&[1, 4, 10, 10], 5);
         let w = lcg(&[8, 4, 3, 3], 6);
-        std::env::set_var("REPDL_THREADS", "1");
-        let a = conv2d(&x, &w, None, Conv2dParams::default()).unwrap();
-        std::env::set_var("REPDL_THREADS", "4");
-        let b = conv2d(&x, &w, None, Conv2dParams::default()).unwrap();
-        std::env::remove_var("REPDL_THREADS");
-        assert!(a.bit_eq(&b));
+        let one = conv2d_in(&WorkerPool::new(1), &x, &w, None, Conv2dParams::default()).unwrap();
+        for lanes in [2, 4, 16] {
+            let pool = WorkerPool::new(lanes);
+            let got = conv2d_in(&pool, &x, &w, None, Conv2dParams::default()).unwrap();
+            assert!(one.bit_eq(&got), "lanes={lanes}");
+        }
     }
 
     #[test]

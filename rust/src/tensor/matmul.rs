@@ -3,19 +3,38 @@
 //! Specification: `C[i,j] = Σ_k A[i,k]·B[k,j]` with the k-loop strictly
 //! sequential (multiply then add, unfused — matching what the JAX/Pallas
 //! kernel lowers to). There are `t_fc = M·N` independent summation tasks;
-//! parallelism is across those tasks only, so thread count never changes
+//! parallelism is across those tasks only, so lane count never changes
 //! bits — the paper's core efficiency argument (as long as `t_fc` exceeds
 //! the core count, fixing the order costs little).
 //!
-//! Implementation note (perf, bit-neutral): B is transposed once so the
-//! inner dot runs on two unit-stride rows. Transposition changes memory
-//! layout, **not** the multiply/add order, so results are bit-identical
-//! to the naive strided loop — asserted in tests.
+//! Implementation note (perf, bit-neutral): the default kernel is
+//! **cache-blocked**: output rows are processed in blocks of
+//! [`ROW_BLOCK`], columns in blocks of [`COL_BLOCK`] (sized so one
+//! accumulator panel plus one B row-segment stay L1-resident), with the
+//! k-loop outermost inside each block so every B row-segment is reused
+//! across all rows of the block. Blocking reorders work only across
+//! *independent* output elements — each element still sees exactly the
+//! sequential-k order with the chosen mul/add graph — so results are
+//! bit-identical to the per-element dot form ([`matmul_dotform`]),
+//! asserted in tests and in the property suite (`src/proptest.rs`).
+//!
+//! Every kernel has an `*_in` variant taking an explicit
+//! [`WorkerPool`]; the plain names dispatch on the global pool. The
+//! `pool_invariance` integration suite checks bit-equality across pool
+//! sizes for all of them.
 
-use super::par::{default_threads, par_chunks};
+use super::par::par_chunks_in;
+use super::pool::{global_pool, WorkerPool};
 use super::tensor::Tensor;
 use crate::rnum::dot::{dot_strided, dot_strided_fma, dot_strided_pairwise};
 use crate::{Error, Result};
+
+/// Output rows per parallel task (one i-block).
+const ROW_BLOCK: usize = 8;
+/// Columns per j-block: 256 f32 = 1 KiB per accumulator row; an 8-row
+/// accumulator panel is 8 KiB — comfortably L1 — and each B row-segment
+/// (1 KiB) is reused across all 8 rows before eviction.
+const COL_BLOCK: usize = 256;
 
 fn check_dims(a: &Tensor, b: &Tensor) -> Result<(usize, usize, usize)> {
     let (da, db) = (a.dims(), b.dims());
@@ -27,31 +46,42 @@ fn check_dims(a: &Tensor, b: &Tensor) -> Result<(usize, usize, usize)> {
     Ok((da[0], da[1], db[1]))
 }
 
-/// k-outer row-kernel GEMM (perf form of the sequential spec).
+/// Cache-blocked k-outer row kernel (perf form of the sequential spec).
 ///
-/// For each output row, the k loop is outermost and all N columns
-/// accumulate simultaneously: `acc[j] += A[i,k]·B[k,j]`. Each output
-/// element still sees exactly the sequential-k order with the chosen
-/// mul/add graph — the loop interchange only reorders *independent*
-/// elements' work, so results are bit-identical to the per-element dot
-/// (asserted in tests) while the inner j-loop auto-vectorises.
-fn matmul_rowkernel(a: &Tensor, b: &Tensor, fma: bool) -> Result<Tensor> {
+/// Within one (i-block, j-block) tile the k loop is outermost and all
+/// block elements accumulate simultaneously: `acc[r][j] += A[i0+r,k]·B[k,j]`.
+/// Each output element still sees exactly the sequential-k order with the
+/// chosen mul/add graph — blocking and loop interchange only reorder
+/// *independent* elements' work, so results are bit-identical to the
+/// per-element dot (asserted in tests) while the inner j-loop
+/// auto-vectorises and B stays cache-resident.
+fn matmul_rowkernel_in(pool: &WorkerPool, a: &Tensor, b: &Tensor, fma: bool) -> Result<Tensor> {
     let (m, k, n) = check_dims(a, b)?;
     let mut out = Tensor::zeros(&[m, n]);
+    if m == 0 || n == 0 {
+        return Ok(out);
+    }
     let (ad, bd) = (a.data(), b.data());
-    par_chunks(out.data_mut(), n.max(1), default_threads(), |start, row| {
-        let i = start / n.max(1);
-        row.iter_mut().for_each(|v| *v = 0.0);
-        for kk in 0..k {
-            let aik = ad[i * k + kk];
-            let brow = &bd[kk * n..(kk + 1) * n];
-            if fma {
-                for (v, &bv) in row.iter_mut().zip(brow) {
-                    *v = aik.mul_add(bv, *v);
-                }
-            } else {
-                for (v, &bv) in row.iter_mut().zip(brow) {
-                    *v += aik * bv;
+    par_chunks_in(pool, out.data_mut(), ROW_BLOCK * n, |start, rows| {
+        let i0 = start / n;
+        let nrows = rows.len() / n;
+        rows.fill(0.0);
+        for jb in (0..n).step_by(COL_BLOCK) {
+            let jn = COL_BLOCK.min(n - jb);
+            for kk in 0..k {
+                let brow = &bd[kk * n + jb..kk * n + jb + jn];
+                for r in 0..nrows {
+                    let aik = ad[(i0 + r) * k + kk];
+                    let acc = &mut rows[r * n + jb..r * n + jb + jn];
+                    if fma {
+                        for (v, &bv) in acc.iter_mut().zip(brow) {
+                            *v = aik.mul_add(bv, *v);
+                        }
+                    } else {
+                        for (v, &bv) in acc.iter_mut().zip(brow) {
+                            *v += aik * bv;
+                        }
+                    }
                 }
             }
         }
@@ -59,7 +89,8 @@ fn matmul_rowkernel(a: &Tensor, b: &Tensor, fma: bool) -> Result<Tensor> {
     Ok(out)
 }
 
-fn matmul_with(
+fn matmul_with_in(
+    pool: &WorkerPool,
     a: &Tensor,
     b: &Tensor,
     dot: impl Fn(&[f32], &[f32], usize) -> f32 + Sync,
@@ -67,9 +98,12 @@ fn matmul_with(
     let (m, k, n) = check_dims(a, b)?;
     let bt = b.transpose2d()?; // layout-only change; order-neutral
     let mut out = Tensor::zeros(&[m, n]);
+    if m == 0 || n == 0 {
+        return Ok(out);
+    }
     let (ad, btd) = (a.data(), bt.data());
-    par_chunks(out.data_mut(), n.max(1), default_threads(), |start, c| {
-        let i = start / n.max(1);
+    par_chunks_in(pool, out.data_mut(), n, |start, c| {
+        let i = start / n;
         for (j, v) in c.iter_mut().enumerate() {
             *v = dot(&ad[i * k..(i + 1) * k], &btd[j * k..(j + 1) * k], k);
         }
@@ -77,31 +111,57 @@ fn matmul_with(
     Ok(out)
 }
 
-/// RepDL default GEMM: sequential-k, unfused multiply-add.
+/// RepDL default GEMM: sequential-k, unfused multiply-add (blocked
+/// kernel, global pool).
 pub fn matmul(a: &Tensor, b: &Tensor) -> Result<Tensor> {
-    matmul_rowkernel(a, b, false)
+    matmul_in(global_pool(), a, b)
+}
+
+/// [`matmul`] on an explicit pool.
+pub fn matmul_in(pool: &WorkerPool, a: &Tensor, b: &Tensor) -> Result<Tensor> {
+    matmul_rowkernel_in(pool, a, b, false)
 }
 
 /// GEMM with FMA contraction (separate API; paper §3.2.4 allows FMA).
 pub fn matmul_fma(a: &Tensor, b: &Tensor) -> Result<Tensor> {
-    matmul_rowkernel(a, b, true)
+    matmul_fma_in(global_pool(), a, b)
+}
+
+/// [`matmul_fma`] on an explicit pool.
+pub fn matmul_fma_in(pool: &WorkerPool, a: &Tensor, b: &Tensor) -> Result<Tensor> {
+    matmul_rowkernel_in(pool, a, b, true)
 }
 
 /// The per-element dot formulation (pre-optimisation reference; kept for
 /// the bit-equality regression tests and the perf ablation in §Perf).
 pub fn matmul_dotform(a: &Tensor, b: &Tensor) -> Result<Tensor> {
-    matmul_with(a, b, |x, y, k| dot_strided(x, 1, y, 1, k))
+    matmul_dotform_in(global_pool(), a, b)
+}
+
+/// [`matmul_dotform`] on an explicit pool.
+pub fn matmul_dotform_in(pool: &WorkerPool, a: &Tensor, b: &Tensor) -> Result<Tensor> {
+    matmul_with_in(pool, a, b, |x, y, k| dot_strided(x, 1, y, 1, k))
 }
 
 /// Per-element FMA dot formulation (ablation partner of [`matmul_fma`]).
 pub fn matmul_fma_dotform(a: &Tensor, b: &Tensor) -> Result<Tensor> {
-    matmul_with(a, b, |x, y, k| dot_strided_fma(x, 1, y, 1, k))
+    matmul_fma_dotform_in(global_pool(), a, b)
+}
+
+/// [`matmul_fma_dotform`] on an explicit pool.
+pub fn matmul_fma_dotform_in(pool: &WorkerPool, a: &Tensor, b: &Tensor) -> Result<Tensor> {
+    matmul_with_in(pool, a, b, |x, y, k| dot_strided_fma(x, 1, y, 1, k))
 }
 
 /// GEMM with the pairwise reduction order (separate API; paper §3.2.2's
 /// "alternative version" for parallelism-starved shapes).
 pub fn matmul_pairwise(a: &Tensor, b: &Tensor) -> Result<Tensor> {
-    matmul_with(a, b, |x, y, k| dot_strided_pairwise(x, 1, y, 1, k))
+    matmul_pairwise_in(global_pool(), a, b)
+}
+
+/// [`matmul_pairwise`] on an explicit pool.
+pub fn matmul_pairwise_in(pool: &WorkerPool, a: &Tensor, b: &Tensor) -> Result<Tensor> {
+    matmul_with_in(pool, a, b, |x, y, k| dot_strided_pairwise(x, 1, y, 1, k))
 }
 
 #[cfg(test)]
@@ -156,6 +216,25 @@ mod tests {
     }
 
     #[test]
+    fn blocking_is_bit_neutral_across_tile_boundaries() {
+        // shapes straddling ROW_BLOCK and COL_BLOCK boundaries: the
+        // blocked kernel must agree with the unblocked dot form exactly
+        for (m, k, n) in [
+            (1usize, 5usize, 1usize),
+            (7, 13, 255),
+            (8, 31, 256),
+            (9, 31, 257),
+            (17, 64, 300),
+        ] {
+            let a = lcg_tensor(&[m, k], (m * 1000 + n) as u64);
+            let b = lcg_tensor(&[k, n], (n * 1000 + k) as u64);
+            let blocked = matmul(&a, &b).unwrap();
+            let dotform = matmul_dotform(&a, &b).unwrap();
+            assert!(blocked.bit_eq(&dotform), "m={m} k={k} n={n}");
+        }
+    }
+
+    #[test]
     fn transpose_optimisation_is_bit_neutral() {
         let a = lcg_tensor(&[17, 33], 1);
         let b = lcg_tensor(&[33, 9], 2);
@@ -165,15 +244,19 @@ mod tests {
     }
 
     #[test]
-    fn thread_count_invariance() {
+    fn pool_size_invariance() {
+        // explicit pools — no env-var mutation (the seed's set_var here
+        // raced with other tests under the parallel harness)
         let a = lcg_tensor(&[31, 64], 3);
         let b = lcg_tensor(&[64, 23], 4);
-        std::env::set_var("REPDL_THREADS", "1");
-        let one = matmul(&a, &b).unwrap();
-        std::env::set_var("REPDL_THREADS", "5");
-        let five = matmul(&a, &b).unwrap();
-        std::env::remove_var("REPDL_THREADS");
-        assert!(one.bit_eq(&five));
+        let one = matmul_in(&WorkerPool::new(1), &a, &b).unwrap();
+        for lanes in [2, 5, 16] {
+            let pool = WorkerPool::new(lanes);
+            assert!(one.bit_eq(&matmul_in(&pool, &a, &b).unwrap()), "lanes={lanes}");
+            assert!(matmul_fma_in(&WorkerPool::new(1), &a, &b)
+                .unwrap()
+                .bit_eq(&matmul_fma_in(&pool, &a, &b).unwrap()));
+        }
     }
 
     #[test]

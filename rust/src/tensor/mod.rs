@@ -5,19 +5,36 @@
 //! order per paper §3.2.2: sequential by default, pairwise under a
 //! separate API name. Parallelism never changes results: work is split
 //! over *independent output elements* with a fixed per-element order, so
-//! any thread count produces identical bits (verified in tests).
+//! any lane count produces identical bits (verified in tests and the
+//! `pool_invariance` integration suite).
+//!
+//! Execution runs on the persistent [`pool::WorkerPool`] (lazily
+//! created, sized once from `REPDL_THREADS`); every kernel also has an
+//! `*_in` variant taking an explicit pool for tests, benchmarks and the
+//! `--threads` CLI flag.
 
 pub mod conv;
 pub mod elementwise;
 pub mod matmul;
 pub mod par;
+pub mod pool;
 pub mod reduce;
 pub mod shape;
 #[allow(clippy::module_inception)]
 pub mod tensor;
 
-pub use conv::{avg_pool2d, conv2d, conv2d_direct, conv2d_im2col, max_pool2d, Conv2dParams};
-pub use matmul::{matmul, matmul_dotform, matmul_fma, matmul_fma_dotform, matmul_pairwise};
-pub use reduce::{argmax_last, max_axis, mean_axis, sum_axis, sum_axis_pairwise, var_axis};
+pub use conv::{
+    avg_pool2d, conv2d, conv2d_direct, conv2d_direct_in, conv2d_im2col, conv2d_im2col_in,
+    conv2d_in, max_pool2d, Conv2dParams,
+};
+pub use matmul::{
+    matmul, matmul_dotform, matmul_dotform_in, matmul_fma, matmul_fma_dotform,
+    matmul_fma_dotform_in, matmul_fma_in, matmul_in, matmul_pairwise, matmul_pairwise_in,
+};
+pub use pool::{default_threads, global_pool, WorkerPool};
+pub use reduce::{
+    argmax_last, max_axis, max_axis_in, mean_axis, mean_axis_in, sum_axis, sum_axis_in,
+    sum_axis_pairwise, sum_axis_pairwise_in, var_axis, var_axis_in,
+};
 pub use shape::Shape;
 pub use tensor::Tensor;

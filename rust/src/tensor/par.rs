@@ -2,20 +2,71 @@
 //!
 //! RepDL retains parallelism while fixing reduction order by parallelising
 //! only across *independent* output elements: each output element is
-//! produced by exactly one worker with a fixed inner order, so the result
-//! is identical for every thread count (the E2/E4 experiments verify this
+//! produced by exactly one lane with a fixed inner order, so the result
+//! is identical for every lane count (the E2/E4 experiments verify this
 //! bit-for-bit). This is the CPU translation of the paper's "one CUDA
 //! thread per summation task, no atomics" design.
+//!
+//! Execution goes through the persistent [`WorkerPool`] (see
+//! [`super::pool`]) instead of spawning scoped threads per call — the
+//! hot path no longer pays thread-creation cost per GEMM. The legacy
+//! spawn-per-call implementation survives as [`par_chunks_spawn`]: it is
+//! the before/after baseline in `benches/e5_overhead.rs` and a second,
+//! independently-scheduled implementation for the invariance tests.
 
-use crossbeam_utils::thread;
+pub use super::pool::{default_threads, global_pool, WorkerPool};
 
-/// Process `out` in contiguous chunks of `chunk` elements, `nthreads`
-/// workers. `f(start_index, chunk_slice)` must fill the chunk from
-/// read-only context. Bitwise result is independent of `nthreads`.
-pub fn par_chunks<F>(out: &mut [f32], chunk: usize, nthreads: usize, f: F)
+/// Process `out` in contiguous chunks of `chunk` elements on an explicit
+/// pool. `f(start_index, chunk_slice)` must fill the chunk from
+/// read-only context. Bitwise result is independent of the pool size:
+/// every chunk is computed by exactly one lane with the order `f` fixes.
+pub fn par_chunks_in<F>(pool: &WorkerPool, out: &mut [f32], chunk: usize, f: F)
 where
     F: Fn(usize, &mut [f32]) + Sync,
 {
+    let chunk = chunk.max(1);
+    let len = out.len();
+    if len == 0 {
+        return;
+    }
+    let nchunks = len.div_ceil(chunk);
+    if pool.lanes() == 1 || nchunks == 1 {
+        for (ci, c) in out.chunks_mut(chunk).enumerate() {
+            f(ci * chunk, c);
+        }
+        return;
+    }
+    let base = out.as_mut_ptr() as usize;
+    pool.run(nchunks, &|ci| {
+        let start = ci * chunk;
+        let n = chunk.min(len - start);
+        // SAFETY: chunk index `ci` is executed exactly once, chunks
+        // [start, start+n) are pairwise disjoint, and `out` outlives
+        // `run` (which blocks until every task has finished).
+        let slice =
+            unsafe { std::slice::from_raw_parts_mut((base as *mut f32).add(start), n) };
+        f(start, slice);
+    });
+}
+
+/// [`par_chunks_in`] on the process-wide pool (sized once from
+/// `REPDL_THREADS` — see [`default_threads`]).
+pub fn par_chunks<F>(out: &mut [f32], chunk: usize, f: F)
+where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    par_chunks_in(global_pool(), out, chunk, f);
+}
+
+/// Legacy spawn-per-call implementation (scoped threads created on every
+/// invocation). Same chunk semantics and the same static chunk→worker
+/// split as the pool, so its bits are identical — kept as the E5
+/// benchmark baseline and as an independent cross-check in tests.
+pub fn par_chunks_spawn<F>(out: &mut [f32], chunk: usize, nthreads: usize, f: F)
+where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    let chunk = chunk.max(1);
     let nthreads = nthreads.max(1);
     if nthreads == 1 || out.len() <= chunk {
         for (ci, c) in out.chunks_mut(chunk).enumerate() {
@@ -26,71 +77,107 @@ where
     let nchunks = out.len().div_ceil(chunk);
     let per_worker = nchunks.div_ceil(nthreads);
     let span = per_worker * chunk; // elements per worker
-    thread::scope(|s| {
+    std::thread::scope(|s| {
         for (w, piece) in out.chunks_mut(span).enumerate() {
             let f = &f;
-            s.spawn(move |_| {
+            s.spawn(move || {
                 for (ci, c) in piece.chunks_mut(chunk).enumerate() {
                     f(w * span + ci * chunk, c);
                 }
             });
         }
-    })
-    .expect("worker panicked");
-}
-
-/// Number of worker threads to use (overridable via REPDL_THREADS).
-pub fn default_threads() -> usize {
-    std::env::var("REPDL_THREADS")
-        .ok()
-        .and_then(|v| v.parse().ok())
-        .unwrap_or_else(|| {
-            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
-        })
+    });
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
-    fn run(nthreads: usize) -> Vec<f32> {
-        let mut out = vec![0.0f32; 1003];
-        par_chunks(&mut out, 17, nthreads, |start, c| {
-            for (i, v) in c.iter_mut().enumerate() {
-                let idx = start + i;
-                // order-sensitive accumulation inside one element
-                let mut acc = 0.0f32;
-                for k in 0..64 {
-                    acc += ((idx * 31 + k * 7) % 101) as f32 * 1e-3;
-                }
-                *v = acc;
+    fn fill(start: usize, c: &mut [f32]) {
+        for (i, v) in c.iter_mut().enumerate() {
+            let idx = start + i;
+            // order-sensitive accumulation inside one element
+            let mut acc = 0.0f32;
+            for k in 0..64 {
+                acc += ((idx * 31 + k * 7) % 101) as f32 * 1e-3;
             }
-        });
+            *v = acc;
+        }
+    }
+
+    fn run_pooled(lanes: usize) -> Vec<f32> {
+        let pool = WorkerPool::new(lanes);
+        let mut out = vec![0.0f32; 1003];
+        par_chunks_in(&pool, &mut out, 17, fill);
         out
     }
 
     #[test]
-    fn thread_count_does_not_change_bits() {
-        let base = run(1);
+    fn pool_size_does_not_change_bits() {
+        let base = run_pooled(1);
         for n in [2, 3, 4, 7, 16] {
-            let got = run(n);
+            let got = run_pooled(n);
             assert!(
                 base.iter().zip(got.iter()).all(|(a, b)| a.to_bits() == b.to_bits()),
-                "nthreads={n} diverged"
+                "lanes={n} diverged"
+            );
+        }
+    }
+
+    #[test]
+    fn spawn_impl_matches_pool_impl_bitwise() {
+        let base = run_pooled(1);
+        for n in [1, 2, 5, 8] {
+            let mut out = vec![0.0f32; 1003];
+            par_chunks_spawn(&mut out, 17, n, fill);
+            assert!(
+                base.iter().zip(out.iter()).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "spawn nthreads={n} diverged from pool"
             );
         }
     }
 
     #[test]
     fn covers_every_element() {
+        let pool = WorkerPool::new(3);
         let mut out = vec![0.0f32; 100];
-        par_chunks(&mut out, 7, 3, |start, c| {
+        par_chunks_in(&pool, &mut out, 7, |start, c| {
             for (i, v) in c.iter_mut().enumerate() {
                 *v = (start + i) as f32;
             }
         });
         for (i, v) in out.iter().enumerate() {
             assert_eq!(*v, i as f32);
+        }
+    }
+
+    #[test]
+    fn adversarial_chunk_sizes() {
+        // chunk > len, chunk == len, chunk == 0 (clamped to 1)
+        for (len, chunk) in [(5usize, 100usize), (8, 8), (9, 0), (1, 1), (0, 4)] {
+            let pool = WorkerPool::new(4);
+            let mut out = vec![0.0f32; len];
+            par_chunks_in(&pool, &mut out, chunk, |start, c| {
+                for (i, v) in c.iter_mut().enumerate() {
+                    *v = (start + i) as f32 + 1.0;
+                }
+            });
+            for (i, v) in out.iter().enumerate() {
+                assert_eq!(*v, i as f32 + 1.0, "len={len} chunk={chunk}");
+            }
+        }
+    }
+
+    #[test]
+    fn global_pool_path_works() {
+        let mut out = vec![0.0f32; 257];
+        par_chunks(&mut out, 13, |start, c| {
+            for (i, v) in c.iter_mut().enumerate() {
+                *v = ((start + i) * 2) as f32;
+            }
+        });
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, (i * 2) as f32);
         }
     }
 }

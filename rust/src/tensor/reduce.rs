@@ -5,7 +5,14 @@
 //! computation graphs** (paper §3.2.3): mean = sum/n, var = sum((x−μ)²)/n
 //! (two-pass, biased) — the one-pass E[x²]−E[x]² graph would be a
 //! different API if ever added.
+//!
+//! All reductions dispatch over *independent output elements* on the
+//! persistent [`WorkerPool`] (each element's reduction order stays
+//! fixed, so pool size never changes bits); the `*_in` variants take an
+//! explicit pool.
 
+use super::par::par_chunks_in;
+use super::pool::{global_pool, WorkerPool};
 use super::tensor::Tensor;
 use crate::rnum::sum::pairwise_split;
 use crate::{Error, Result};
@@ -29,26 +36,45 @@ fn reduced_dims(t: &Tensor, axis: usize) -> Vec<usize> {
     nd
 }
 
-fn reduce_with(
+/// Chunk size for parallel reductions: batch tiny per-element
+/// reductions so one task is ≳1k scalar ops (any chunking is
+/// bit-neutral — elements are independent).
+fn reduce_chunk(len: usize) -> usize {
+    (1024 / len.max(1)).max(1)
+}
+
+fn reduce_with_in(
+    pool: &WorkerPool,
     t: &Tensor,
     axis: usize,
-    f: impl Fn(&[f32], usize, usize) -> f32, // (data window, stride, len)
+    f: impl Fn(&[f32], usize, usize) -> f32 + Sync, // (data window, stride, len)
 ) -> Result<Tensor> {
-    let (outer, len, inner) = axis_geometry(t, axis)?;
+    let (_outer, len, inner) = axis_geometry(t, axis)?;
     let mut out = Tensor::zeros(&reduced_dims(t, axis));
-    let data = t.data();
-    for o in 0..outer {
-        for i in 0..inner {
-            let base = o * len * inner + i;
-            out.data_mut()[o * inner + i] = f(&data[base..], inner, len);
-        }
+    if out.numel() == 0 {
+        return Ok(out);
     }
+    let data = t.data();
+    let inner1 = inner.max(1);
+    par_chunks_in(pool, out.data_mut(), reduce_chunk(len), |start, c| {
+        for (off, v) in c.iter_mut().enumerate() {
+            let e = start + off; // flat output index = o * inner + i
+            let (o, i) = (e / inner1, e % inner1);
+            let base = o * len * inner + i;
+            *v = f(&data[base..], inner, len);
+        }
+    });
     Ok(out)
 }
 
 /// Sequential sum along `axis` (RepDL default order).
 pub fn sum_axis(t: &Tensor, axis: usize) -> Result<Tensor> {
-    reduce_with(t, axis, |w, s, n| {
+    sum_axis_in(global_pool(), t, axis)
+}
+
+/// [`sum_axis`] on an explicit pool.
+pub fn sum_axis_in(pool: &WorkerPool, t: &Tensor, axis: usize) -> Result<Tensor> {
+    reduce_with_in(pool, t, axis, |w, s, n| {
         let mut acc = 0.0f32;
         for k in 0..n {
             acc += w[k * s];
@@ -60,6 +86,11 @@ pub fn sum_axis(t: &Tensor, axis: usize) -> Result<Tensor> {
 /// Pairwise sum along `axis` (alternative order, own API; tree shape
 /// shared with `rnum::sum::sum_pairwise`).
 pub fn sum_axis_pairwise(t: &Tensor, axis: usize) -> Result<Tensor> {
+    sum_axis_pairwise_in(global_pool(), t, axis)
+}
+
+/// [`sum_axis_pairwise`] on an explicit pool.
+pub fn sum_axis_pairwise_in(pool: &WorkerPool, t: &Tensor, axis: usize) -> Result<Tensor> {
     fn pw(w: &[f32], s: usize, n: usize) -> f32 {
         if n <= 8 {
             let mut acc = 0.0f32;
@@ -71,41 +102,63 @@ pub fn sum_axis_pairwise(t: &Tensor, axis: usize) -> Result<Tensor> {
         let m = pairwise_split(n);
         pw(w, s, m) + pw(&w[m * s..], s, n - m)
     }
-    reduce_with(t, axis, pw)
+    reduce_with_in(pool, t, axis, pw)
 }
 
 /// Mean along `axis`: the fixed graph `sum / n`.
 pub fn mean_axis(t: &Tensor, axis: usize) -> Result<Tensor> {
+    mean_axis_in(global_pool(), t, axis)
+}
+
+/// [`mean_axis`] on an explicit pool.
+pub fn mean_axis_in(pool: &WorkerPool, t: &Tensor, axis: usize) -> Result<Tensor> {
     let (_, len, _) = axis_geometry(t, axis)?;
-    let s = sum_axis(t, axis)?;
+    let s = sum_axis_in(pool, t, axis)?;
     Ok(s.map(|v| v / len as f32))
 }
 
 /// Biased variance along `axis`: the fixed two-pass graph
 /// `sum((x − mean)²) / n` with sequential sums.
 pub fn var_axis(t: &Tensor, axis: usize) -> Result<Tensor> {
-    let (outer, len, inner) = axis_geometry(t, axis)?;
-    let mean = mean_axis(t, axis)?;
+    var_axis_in(global_pool(), t, axis)
+}
+
+/// [`var_axis`] on an explicit pool.
+pub fn var_axis_in(pool: &WorkerPool, t: &Tensor, axis: usize) -> Result<Tensor> {
+    let (_outer, len, inner) = axis_geometry(t, axis)?;
+    let mean = mean_axis_in(pool, t, axis)?;
     let mut out = Tensor::zeros(&reduced_dims(t, axis));
+    if out.numel() == 0 {
+        return Ok(out);
+    }
     let data = t.data();
-    for o in 0..outer {
-        for i in 0..inner {
+    let mean_d = mean.data();
+    let inner1 = inner.max(1);
+    par_chunks_in(pool, out.data_mut(), reduce_chunk(len), |start, c| {
+        for (off, v) in c.iter_mut().enumerate() {
+            let e = start + off;
+            let (o, i) = (e / inner1, e % inner1);
             let base = o * len * inner + i;
-            let mu = mean.data()[o * inner + i];
+            let mu = mean_d[e];
             let mut acc = 0.0f32;
             for k in 0..len {
                 let d = data[base + k * inner] - mu;
                 acc += d * d;
             }
-            out.data_mut()[o * inner + i] = acc / len as f32;
+            *v = acc / len as f32;
         }
-    }
+    });
     Ok(out)
 }
 
 /// Maximum along `axis` (comparison order fixed; NaN propagates).
 pub fn max_axis(t: &Tensor, axis: usize) -> Result<Tensor> {
-    reduce_with(t, axis, |w, s, n| {
+    max_axis_in(global_pool(), t, axis)
+}
+
+/// [`max_axis`] on an explicit pool.
+pub fn max_axis_in(pool: &WorkerPool, t: &Tensor, axis: usize) -> Result<Tensor> {
+    reduce_with_in(pool, t, axis, |w, s, n| {
         let mut m = w[0];
         for k in 1..n {
             let v = w[k * s];
@@ -193,6 +246,21 @@ mod tests {
         let via_tensor = sum_axis_pairwise(&t, 0).unwrap().data()[0];
         let via_rnum = crate::rnum::sum::sum_pairwise(&data);
         assert_eq!(via_tensor.to_bits(), via_rnum.to_bits());
+    }
+
+    #[test]
+    fn pool_size_invariance() {
+        let data: Vec<f32> = (0..6 * 35).map(|i| ((i * 53 % 97) as f32 - 48.0) * 0.013).collect();
+        let t = Tensor::from_vec(&[6, 35], data).unwrap();
+        for axis in [0usize, 1] {
+            let one_seq = sum_axis_in(&WorkerPool::new(1), &t, axis).unwrap();
+            let one_pw = sum_axis_pairwise_in(&WorkerPool::new(1), &t, axis).unwrap();
+            for lanes in [2, 3, 8] {
+                let pool = WorkerPool::new(lanes);
+                assert!(one_seq.bit_eq(&sum_axis_in(&pool, &t, axis).unwrap()));
+                assert!(one_pw.bit_eq(&sum_axis_pairwise_in(&pool, &t, axis).unwrap()));
+            }
+        }
     }
 
     #[test]

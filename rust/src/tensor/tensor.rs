@@ -159,7 +159,7 @@ impl Tensor {
     /// SHA-256 hash of shape + raw little-endian bit patterns — the
     /// bitwise fingerprint used throughout the verification harness.
     pub fn bit_hash(&self) -> [u8; 32] {
-        use sha2::{Digest, Sha256};
+        use crate::sha256::Sha256;
         let mut h = Sha256::new();
         for &d in self.dims() {
             h.update((d as u64).to_le_bytes());
@@ -167,7 +167,7 @@ impl Tensor {
         for &v in &self.data {
             h.update(v.to_bits().to_le_bytes());
         }
-        h.finalize().into()
+        h.finalize()
     }
 
     /// Hex string of [`Tensor::bit_hash`] (for logs).

@@ -1,0 +1,199 @@
+//! Pool-size invariance conformance suite.
+//!
+//! The worker pool (tensor/pool.rs) claims that pool size is a pure
+//! performance knob: every fast path must be bit-identical to the
+//! single-lane (sequential) run for *every* pool size, including
+//! adversarial shapes where chunks outnumber lanes, lanes outnumber
+//! chunks, or a single chunk covers the whole output. This suite pins
+//! that claim for GEMM (all variants), conv2d (direct, im2col, routed),
+//! axis reductions and the serving path.
+
+use repdl::coordinator::DeterministicServer;
+use repdl::tensor::par::par_chunks_in;
+use repdl::tensor::{
+    conv2d_direct_in, conv2d_im2col_in, conv2d_in, matmul_dotform_in, matmul_fma_dotform_in,
+    matmul_fma_in, matmul_in, matmul_pairwise_in, max_axis_in, sum_axis_in, sum_axis_pairwise_in,
+    var_axis_in, Conv2dParams, Tensor, WorkerPool,
+};
+
+const POOL_SIZES: [usize; 6] = [1, 2, 3, 5, 8, 16];
+
+fn lcg(dims: &[usize], seed: u64) -> Tensor {
+    let n: usize = dims.iter().product();
+    let mut s = seed;
+    Tensor::from_vec(
+        dims,
+        (0..n)
+            .map(|_| {
+                s = s.wrapping_mul(6364136223846793005).wrapping_add(12345);
+                (((s >> 40) as f32) / (1u64 << 24) as f32 - 0.5) * 2.0
+            })
+            .collect(),
+    )
+    .unwrap()
+}
+
+#[test]
+fn gemm_bit_identical_for_every_pool_size() {
+    // tall/skinny, k=1, n=1, single-element, and tiles straddling the
+    // blocked kernel's ROW_BLOCK/COL_BLOCK boundaries
+    let shapes: [(usize, usize, usize); 6] =
+        [(1, 1, 1), (257, 3, 2), (5, 1, 7), (64, 32, 1), (3, 77, 300), (9, 64, 257)];
+    for (m, k, n) in shapes {
+        let a = lcg(&[m, k], (m * 31 + k) as u64);
+        let b = lcg(&[k, n], (n * 17 + k) as u64);
+        let base = WorkerPool::new(1);
+        let r_seq = matmul_in(&base, &a, &b).unwrap();
+        let r_fma = matmul_fma_in(&base, &a, &b).unwrap();
+        let r_pw = matmul_pairwise_in(&base, &a, &b).unwrap();
+        let r_dot = matmul_dotform_in(&base, &a, &b).unwrap();
+        let r_fma_dot = matmul_fma_dotform_in(&base, &a, &b).unwrap();
+        // blocked kernels == dot forms even sequentially
+        assert!(r_seq.bit_eq(&r_dot), "blocked != dotform at ({m},{k},{n})");
+        assert!(r_fma.bit_eq(&r_fma_dot), "blocked fma != fma dotform at ({m},{k},{n})");
+        for lanes in POOL_SIZES {
+            let pool = WorkerPool::new(lanes);
+            assert!(
+                r_seq.bit_eq(&matmul_in(&pool, &a, &b).unwrap()),
+                "matmul ({m},{k},{n}) lanes={lanes}"
+            );
+            assert!(
+                r_fma.bit_eq(&matmul_fma_in(&pool, &a, &b).unwrap()),
+                "matmul_fma ({m},{k},{n}) lanes={lanes}"
+            );
+            assert!(
+                r_fma_dot.bit_eq(&matmul_fma_dotform_in(&pool, &a, &b).unwrap()),
+                "matmul_fma_dotform ({m},{k},{n}) lanes={lanes}"
+            );
+            assert!(
+                r_pw.bit_eq(&matmul_pairwise_in(&pool, &a, &b).unwrap()),
+                "matmul_pairwise ({m},{k},{n}) lanes={lanes}"
+            );
+            assert!(
+                r_dot.bit_eq(&matmul_dotform_in(&pool, &a, &b).unwrap()),
+                "matmul_dotform ({m},{k},{n}) lanes={lanes}"
+            );
+        }
+    }
+}
+
+#[test]
+fn conv2d_bit_identical_for_every_pool_size() {
+    let x = lcg(&[2, 3, 9, 9], 51);
+    let w = lcg(&[4, 3, 3, 3], 52);
+    let bias = lcg(&[4], 53);
+    for p in [
+        Conv2dParams { stride: 1, padding: 0 },
+        Conv2dParams { stride: 2, padding: 1 },
+    ] {
+        let base = WorkerPool::new(1);
+        let r_direct = conv2d_direct_in(&base, &x, &w, Some(&bias), p).unwrap();
+        let r_im2col = conv2d_im2col_in(&base, &x, &w, Some(&bias), p).unwrap();
+        assert!(r_direct.bit_eq(&r_im2col), "direct != im2col sequentially");
+        for lanes in POOL_SIZES {
+            let pool = WorkerPool::new(lanes);
+            assert!(
+                r_direct.bit_eq(&conv2d_direct_in(&pool, &x, &w, Some(&bias), p).unwrap()),
+                "conv2d_direct stride={} pad={} lanes={lanes}",
+                p.stride,
+                p.padding
+            );
+            assert!(
+                r_im2col.bit_eq(&conv2d_im2col_in(&pool, &x, &w, Some(&bias), p).unwrap()),
+                "conv2d_im2col stride={} pad={} lanes={lanes}",
+                p.stride,
+                p.padding
+            );
+            assert!(
+                r_direct.bit_eq(&conv2d_in(&pool, &x, &w, Some(&bias), p).unwrap()),
+                "conv2d routed stride={} pad={} lanes={lanes}",
+                p.stride,
+                p.padding
+            );
+        }
+    }
+}
+
+#[test]
+fn reductions_bit_identical_for_every_pool_size() {
+    // 2-D both axes, 1-D (single output element), and a wide row where
+    // the pool batches many tiny reductions per chunk
+    let t2 = lcg(&[7, 129], 61);
+    let t1 = lcg(&[1000], 62);
+    let wide = lcg(&[513, 2], 63);
+    let base = WorkerPool::new(1);
+    for (t, axes) in [(&t2, vec![0usize, 1]), (&t1, vec![0]), (&wide, vec![0, 1])] {
+        for &axis in &axes {
+            let r_seq = sum_axis_in(&base, t, axis).unwrap();
+            let r_pw = sum_axis_pairwise_in(&base, t, axis).unwrap();
+            let r_var = var_axis_in(&base, t, axis).unwrap();
+            let r_max = max_axis_in(&base, t, axis).unwrap();
+            for lanes in POOL_SIZES {
+                let pool = WorkerPool::new(lanes);
+                assert!(
+                    r_seq.bit_eq(&sum_axis_in(&pool, t, axis).unwrap()),
+                    "sum_axis dims={:?} axis={axis} lanes={lanes}",
+                    t.dims()
+                );
+                assert!(
+                    r_pw.bit_eq(&sum_axis_pairwise_in(&pool, t, axis).unwrap()),
+                    "sum_axis_pairwise dims={:?} axis={axis} lanes={lanes}",
+                    t.dims()
+                );
+                assert!(
+                    r_var.bit_eq(&var_axis_in(&pool, t, axis).unwrap()),
+                    "var_axis dims={:?} axis={axis} lanes={lanes}",
+                    t.dims()
+                );
+                assert!(
+                    r_max.bit_eq(&max_axis_in(&pool, t, axis).unwrap()),
+                    "max_axis dims={:?} axis={axis} lanes={lanes}",
+                    t.dims()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn par_chunks_adversarial_geometry() {
+    // chunk > len, chunk == len, len == 1: every pool size must produce
+    // the full, identical output
+    for (len, chunk) in [(5usize, 64usize), (64, 64), (1, 3), (97, 13)] {
+        let mut base = vec![0.0f32; len];
+        par_chunks_in(&WorkerPool::new(1), &mut base, chunk, fill);
+        for lanes in POOL_SIZES {
+            let mut out = vec![0.0f32; len];
+            par_chunks_in(&WorkerPool::new(lanes), &mut out, chunk, fill);
+            assert!(
+                base.iter().zip(out.iter()).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "len={len} chunk={chunk} lanes={lanes}"
+            );
+        }
+    }
+
+    fn fill(start: usize, c: &mut [f32]) {
+        for (i, v) in c.iter_mut().enumerate() {
+            let idx = start + i;
+            let mut acc = 0.0f32;
+            for k in 0..32 {
+                acc += ((idx * 13 + k * 3) % 71) as f32 * 1e-2;
+            }
+            *v = acc;
+        }
+    }
+}
+
+#[test]
+fn serving_bit_identical_for_every_pool_size() {
+    let w = lcg(&[96, 8], 71);
+    let srv = DeterministicServer::new(w, 16);
+    let queue: Vec<Tensor> = (0..33).map(|i| lcg(&[96], 100 + i as u64)).collect();
+    let base: Vec<Tensor> = srv.process_repro_in(&WorkerPool::new(1), &queue).unwrap();
+    for lanes in POOL_SIZES {
+        let got = srv.process_repro_in(&WorkerPool::new(lanes), &queue).unwrap();
+        for (r, (a, b)) in base.iter().zip(got.iter()).enumerate() {
+            assert!(a.bit_eq(b), "request {r} lanes={lanes}");
+        }
+    }
+}
