@@ -4,21 +4,38 @@
 //! kernels (which are free to pick any order), plus end-to-end training
 //! step time. The interesting number is the ratio.
 //!
-//! Also measures the *engine* change of this repo: persistent worker
-//! pool vs the seed's spawn-scoped-threads-per-call dispatch (same
-//! bits — asserted below — different wall-clock), and serving
-//! throughput in req/s through the pooled batch path.
+//! Also measures this repo's engine work as reproducible ablations:
+//!
+//! * **GEMM three-way**: per-element dot form (seed) → cache-blocked
+//!   (PR 1) → packed register-tiled microkernel (PR 2), same bits
+//!   asserted before every timing.
+//! * **Conv three-way**: direct loops → unfused im2col+GEMM round trip
+//!   (PR 1's pipeline, reconstructed here as the baseline) → fused
+//!   packed-im2col pipeline.
+//! * **Serving throughput** in req/s through the prepacked batch path,
+//!   with allocations per call (scratch-arena effect).
+//!
+//! Every ablation is emitted to machine-readable `BENCH_gemm.json` /
+//! `BENCH_conv.json` / `BENCH_serve.json` at the repository root — the
+//! perf trajectory consumed by CI. Pass `--smoke` for the quick CI
+//! variant (smaller shapes, fewer samples, same schema).
 
 use repdl::baseline::{baseline_matmul, baseline_softmax_rows, PlatformProfile};
-use repdl::bench_harness::{bench, row, row_rate, section};
+use repdl::bench_harness::{
+    allocs_during, bench, bench_json_path, row, row_rate, section, write_bench_json,
+    CountingAllocator, JsonObj,
+};
 use repdl::coordinator::{DeterministicServer, NumericsMode, Trainer, TrainerConfig};
 use repdl::nn::softmax_rows;
 use repdl::rng::uniform_tensor;
 use repdl::tensor::par::par_chunks_spawn;
 use repdl::tensor::{
-    conv2d, default_threads, matmul, matmul_fma, matmul_in, matmul_pairwise, Conv2dParams,
-    Tensor, WorkerPool,
+    conv2d_direct, conv2d_im2col, default_threads, im2col, matmul_blocked, matmul_dotform,
+    matmul_fma, matmul_in, matmul_packed, matmul_pairwise, Conv2dParams, Tensor, WorkerPool,
 };
+
+#[global_allocator]
+static ALLOC: CountingAllocator = CountingAllocator;
 
 /// The seed's engine: per-element dot GEMM with fresh scoped threads
 /// spawned on every call (kept verbatim as the before/after baseline).
@@ -36,42 +53,98 @@ fn matmul_spawn_percall(a: &Tensor, b: &Tensor, nthreads: usize) -> Tensor {
     out
 }
 
+/// PR 1's conv pipeline, reconstructed as an ablation baseline:
+/// per-image im2col materialisation, explicit transpose, blocked GEMM,
+/// then a per-element scatter into the NCHW planes. Bit-identical to
+/// the fused path (asserted) — only the wall-clock differs.
+fn conv2d_im2col_unfused(x: &Tensor, w: &Tensor, p: Conv2dParams) -> Tensor {
+    let (b, h, wd) = (x.dims()[0], x.dims()[2], x.dims()[3]);
+    let (o, kh, kw) = (w.dims()[0], w.dims()[2], w.dims()[3]);
+    let k = w.dims()[1] * kh * kw;
+    let oh = (h + 2 * p.padding - kh) / p.stride + 1;
+    let ow = (wd + 2 * p.padding - kw) / p.stride + 1;
+    let wmat = w.reshape(&[o, k]).unwrap();
+    let mut out = Tensor::zeros(&[b, o, oh, ow]);
+    for bi in 0..b {
+        let cols = im2col(x, bi, kh, kw, &p).unwrap();
+        let prod = matmul_blocked(&wmat, &cols.transpose2d().unwrap()).unwrap();
+        for oi in 0..o {
+            for s in 0..oh * ow {
+                out.data_mut()[((bi * o + oi) * oh + s / ow) * ow + s % ow] =
+                    prod.data()[oi * oh * ow + s];
+            }
+        }
+    }
+    out
+}
+
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
     let p = PlatformProfile::zoo()[2]; // avx2-like: 8 lanes + FMA
     let lanes = default_threads();
+    let samples = if smoke { 3 } else { 5 };
 
-    section("E5: GEMM 128x256 · 256x128");
+    // ---------------- GEMM three-way ablation ----------------
+    section("E5: GEMM ablation — dotform (seed) vs blocked (PR 1) vs packed (PR 2)");
+    let gemm_shapes: &[(usize, usize, usize)] = if smoke {
+        &[(128, 128, 128), (256, 256, 256)]
+    } else {
+        &[(128, 256, 128), (256, 256, 256), (512, 512, 512)]
+    };
+    let mut gemm_entries = Vec::new();
+    for &(m, k, n) in gemm_shapes {
+        let a = uniform_tensor(&[m, k], -1.0, 1.0, 1);
+        let b = uniform_tensor(&[k, n], -1.0, 1.0, 2);
+        // bit-equality gate before any timing: the perf forms must agree
+        let dref = matmul_dotform(&a, &b).unwrap();
+        assert!(matmul_blocked(&a, &b).unwrap().bit_eq(&dref), "blocked diverged");
+        assert!(matmul_packed(&a, &b).unwrap().bit_eq(&dref), "packed diverged");
+        let flops = 2.0 * (m as f64) * (k as f64) * (n as f64);
+        let kernels: [(&str, Box<dyn Fn() -> Tensor + '_>); 3] = [
+            ("dotform", Box::new(|| matmul_dotform(&a, &b).unwrap())),
+            ("blocked", Box::new(|| matmul_blocked(&a, &b).unwrap())),
+            ("packed", Box::new(|| matmul_packed(&a, &b).unwrap())),
+        ];
+        let mut medians = Vec::new();
+        for (kname, f) in &kernels {
+            let st = bench(&format!("gemm {m}x{k}x{n} {kname}"), samples, || f());
+            let (allocs, _) = allocs_during(|| f());
+            gemm_entries.push(
+                JsonObj::new()
+                    .s("kernel", *kname)
+                    .int("m", m as u64)
+                    .int("k", k as u64)
+                    .int("n", n as u64)
+                    .int("pool_lanes", lanes as u64)
+                    .num("median_ns", st.median_ns)
+                    .num("gflops", flops / st.median_ns)
+                    .int("allocs_per_call", allocs),
+            );
+            medians.push(st.median_ns);
+        }
+        row(
+            &format!("  {m}x{k}x{n} speedups: packed/blocked, packed/dotform"),
+            format!("{:.2}x, {:.2}x", medians[1] / medians[2], medians[0] / medians[2]),
+        );
+    }
+    write_bench_json(&bench_json_path("gemm"), "gemm", &gemm_entries)
+        .expect("write BENCH_gemm.json");
+
+    // ---------------- engine dispatch ablation (PR 1) ----------------
+    section("E5: engine — spawn-per-call vs persistent pool (same bits)");
     let a = uniform_tensor(&[128, 256], -1.0, 1.0, 1);
     let b = uniform_tensor(&[256, 128], -1.0, 1.0, 2);
-    let r1 = bench("repdl matmul (blocked, pooled)", 7, || matmul(&a, &b).unwrap());
-    let r2 = bench("repdl matmul_fma", 7, || matmul_fma(&a, &b).unwrap());
-    let r3 = bench("repdl matmul_pairwise", 7, || matmul_pairwise(&a, &b).unwrap());
-    let rb = bench("baseline matmul (8-lane fma)", 7, || {
-        baseline_matmul(&a, &b, &p).unwrap()
-    });
-    row("repdl/baseline ratio (seq)", format!("{:.2}x", r1.median_ns / rb.median_ns));
-    row("repdl/baseline ratio (fma)", format!("{:.2}x", r2.median_ns / rb.median_ns));
-    row("repdl/baseline ratio (pairwise)", format!("{:.2}x", r3.median_ns / rb.median_ns));
-
-    section("E5: engine — spawn-per-call vs persistent pool (same bits)");
-    // bit-equality gate: the engine change must be invisible in the output
     let pool = WorkerPool::new(lanes);
     assert!(
-        matmul_spawn_percall(&a, &b, lanes).bit_eq(&repdl::tensor::matmul_dotform(&a, &b).unwrap()),
+        matmul_spawn_percall(&a, &b, lanes).bit_eq(&matmul_dotform(&a, &b).unwrap()),
         "spawn baseline diverged from dotform"
     );
-    assert!(
-        matmul(&a, &b).unwrap().bit_eq(&repdl::tensor::matmul_dotform(&a, &b).unwrap()),
-        "blocked pooled GEMM diverged from dotform"
-    );
-    // isolate the two changes: same dotform kernel on both engines
-    // measures dispatch only; the blocked row adds the kernel change
     let s_spawn =
-        bench("GEMM dotform, spawn-per-call (seed)", 7, || matmul_spawn_percall(&a, &b, lanes));
-    let s_dot = bench("GEMM dotform, persistent pool", 7, || {
+        bench("GEMM dotform, spawn-per-call (seed)", samples, || matmul_spawn_percall(&a, &b, lanes));
+    let s_dot = bench("GEMM dotform, persistent pool", samples, || {
         repdl::tensor::matmul_dotform_in(&pool, &a, &b).unwrap()
     });
-    let s_pool = bench("GEMM blocked, persistent pool", 7, || {
+    let s_pool = bench("GEMM routed, persistent pool", samples, || {
         matmul_in(&pool, &a, &b).unwrap()
     });
     row(
@@ -79,62 +152,110 @@ fn main() {
         format!("{:.2}x", s_spawn.median_ns / s_dot.median_ns),
     );
     row(
-        "pool + blocked-kernel speedup (combined)",
+        "pool + kernel speedup (combined)",
         format!("{:.2}x", s_spawn.median_ns / s_pool.median_ns),
     );
-    // small GEMM: thread-creation overhead dominates the seed engine
-    let sa = uniform_tensor(&[16, 64], -1.0, 1.0, 21);
-    let sb = uniform_tensor(&[64, 16], -1.0, 1.0, 22);
-    let t_spawn =
-        bench("small GEMM 16x64x16 spawn-per-call", 7, || matmul_spawn_percall(&sa, &sb, lanes));
-    let t_dot = bench("small GEMM 16x64x16 pooled dotform", 7, || {
-        repdl::tensor::matmul_dotform_in(&pool, &sa, &sb).unwrap()
+    let rb = bench("baseline matmul (8-lane fma)", samples, || {
+        baseline_matmul(&a, &b, &p).unwrap()
     });
-    row(
-        "small-GEMM pool-dispatch speedup",
-        format!("{:.2}x", t_spawn.median_ns / t_dot.median_ns),
-    );
+    row("repdl/baseline ratio (seq)", format!("{:.2}x", s_pool.median_ns / rb.median_ns));
+    let r2 = bench("repdl matmul_fma", samples, || matmul_fma(&a, &b).unwrap());
+    let r3 = bench("repdl matmul_pairwise", samples, || matmul_pairwise(&a, &b).unwrap());
+    row("repdl/baseline ratio (fma)", format!("{:.2}x", r2.median_ns / rb.median_ns));
+    row("repdl/baseline ratio (pairwise)", format!("{:.2}x", r3.median_ns / rb.median_ns));
 
-    section("E5: serving throughput (pooled whole-batch dispatch)");
+    // ---------------- conv three-way ablation ----------------
+    section("E5: conv ablation — direct vs unfused im2col (PR 1) vs fused (PR 2)");
+    // (B, C, H=W, O): ResNet-style 3x3/pad-1 body shapes
+    let conv_shapes: &[(usize, usize, usize, usize)] = if smoke {
+        &[(2, 16, 28, 32)]
+    } else {
+        &[(8, 16, 28, 32), (4, 64, 56, 64)]
+    };
+    let mut conv_entries = Vec::new();
+    for &(bn, c, hw, o) in conv_shapes {
+        let x = uniform_tensor(&[bn, c, hw, hw], -1.0, 1.0, 3);
+        let wc = uniform_tensor(&[o, c, 3, 3], -0.2, 0.2, 4);
+        let pc = Conv2dParams { stride: 1, padding: 1 };
+        let dref = conv2d_direct(&x, &wc, None, pc).unwrap();
+        assert!(conv2d_im2col(&x, &wc, None, pc).unwrap().bit_eq(&dref), "fused diverged");
+        assert!(conv2d_im2col_unfused(&x, &wc, pc).bit_eq(&dref), "unfused ablation diverged");
+        let flops = 2.0 * (bn * o * hw * hw * c * 9) as f64;
+        let kernels: [(&str, Box<dyn Fn() -> Tensor + '_>); 3] = [
+            ("direct", Box::new(|| conv2d_direct(&x, &wc, None, pc).unwrap())),
+            ("im2col_unfused", Box::new(|| conv2d_im2col_unfused(&x, &wc, pc))),
+            ("im2col_fused", Box::new(|| conv2d_im2col(&x, &wc, None, pc).unwrap())),
+        ];
+        let mut medians = Vec::new();
+        for (kname, f) in &kernels {
+            let st = bench(&format!("conv {bn}x{c}x{hw}² o={o} {kname}"), samples, || f());
+            let (allocs, _) = allocs_during(|| f());
+            conv_entries.push(
+                JsonObj::new()
+                    .s("kernel", *kname)
+                    .int("batch", bn as u64)
+                    .int("cin", c as u64)
+                    .int("hw", hw as u64)
+                    .int("cout", o as u64)
+                    .int("pool_lanes", lanes as u64)
+                    .num("median_ns", st.median_ns)
+                    .num("gflops", flops / st.median_ns)
+                    .int("allocs_per_call", allocs),
+            );
+            medians.push(st.median_ns);
+        }
+        row(
+            "  conv speedups: fused/unfused, fused/direct",
+            format!("{:.2}x, {:.2}x", medians[1] / medians[2], medians[0] / medians[2]),
+        );
+    }
+    write_bench_json(&bench_json_path("conv"), "conv", &conv_entries)
+        .expect("write BENCH_conv.json");
+
+    // ---------------- serving throughput ----------------
+    section("E5: serving throughput (prepacked pooled batch dispatch)");
     let w = uniform_tensor(&[256, 16], -0.3, 0.3, 5);
     let srv = DeterministicServer::new(w, 64);
     let queue: Vec<Tensor> = (0..64)
         .map(|i| uniform_tensor(&[256], -1.0, 1.0, 300 + i as u64))
         .collect();
+    let mut serve_entries = Vec::new();
     for l in [1usize, lanes.max(2)] {
         let pl = WorkerPool::new(l);
-        let t = srv.throughput_report(&pl, &queue, 5).unwrap();
+        let t = srv.throughput_report(&pl, &queue, samples).unwrap();
+        let (allocs, _) = allocs_during(|| srv.process_repro_in(&pl, &queue).unwrap());
         row(format!("serve req/s, pool={l}").as_str(), format!("{:.0} req/s", t.req_per_s));
+        serve_entries.push(
+            JsonObj::new()
+                .int("requests", t.requests as u64)
+                .int("pool_lanes", l as u64)
+                .int("d_in", 256)
+                .int("d_out", 16)
+                .num("median_ns", t.median_ns)
+                .num("req_per_s", t.req_per_s)
+                .int("allocs_per_call", allocs),
+        );
     }
-    let stats = bench("serve 64 reqs (global pool)", 7, || srv.process_repro(&queue).unwrap());
+    let stats = bench("serve 64 reqs (global pool)", samples, || srv.process_repro(&queue).unwrap());
     row_rate("serve throughput (global pool)", &stats, queue.len(), "req");
+    write_bench_json(&bench_json_path("serve"), "serve", &serve_entries)
+        .expect("write BENCH_serve.json");
 
-    section("E5: conv2d 8x16x28x28, 32 filters 3x3 pad 1");
-    let x = uniform_tensor(&[8, 16, 28, 28], -1.0, 1.0, 3);
-    let wc = uniform_tensor(&[32, 16, 3, 3], -0.2, 0.2, 4);
-    let pc = Conv2dParams { stride: 1, padding: 1 };
-    let c1 = bench("repdl conv2d_direct (ablation)", 5, || {
-        repdl::tensor::conv2d_direct(&x, &wc, None, pc).unwrap()
-    });
-    let c2 = bench("repdl conv2d (routed: im2col+GEMM)", 5, || {
-        conv2d(&x, &wc, None, pc).unwrap()
-    });
-    row("routed/direct ratio", format!("{:.2}x", c2.median_ns / c1.median_ns));
-
+    // ---------------- softmax + end-to-end ----------------
     section("E5: softmax 256x1024");
     let s = uniform_tensor(&[256, 1024], -5.0, 5.0, 5);
-    let s1 = bench("repdl softmax (CR rexp)", 7, || softmax_rows(&s).unwrap());
-    let s2 = bench("baseline softmax (fast libm)", 7, || {
+    let s1 = bench("repdl softmax (CR rexp)", samples, || softmax_rows(&s).unwrap());
+    let s2 = bench("baseline softmax (fast libm)", samples, || {
         baseline_softmax_rows(&s, &p).unwrap()
     });
     row("repdl/baseline ratio", format!("{:.2}x", s1.median_ns / s2.median_ns));
 
     section("E5: end-to-end training step (MLP workload)");
     let cfg = TrainerConfig { steps: 5, ..Default::default() };
-    let t1 = bench("repdl 5-step train", 5, || {
+    let t1 = bench("repdl 5-step train", samples, || {
         Trainer::new(cfg, NumericsMode::Repro).run().unwrap()
     });
-    let t2 = bench("baseline 5-step train", 5, || {
+    let t2 = bench("baseline 5-step train", samples, || {
         Trainer::new(cfg, NumericsMode::Baseline(p)).run().unwrap()
     });
     row(

@@ -1,8 +1,12 @@
 //! Hand-rolled measurement harness (criterion is not in the offline
 //! crate set — DESIGN.md §5): warmup + N samples, median / MAD / min,
-//! throughput helpers, and stable aligned text output shared by every
-//! `benches/e*.rs` target.
+//! throughput helpers, stable aligned text output shared by every
+//! `benches/e*.rs` target, a machine-readable `BENCH_*.json` emitter
+//! (the repo's perf trajectory) and an allocation-counting global
+//! allocator shim for allocations-per-call metrics.
 
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
 
 /// One measured statistic set (nanoseconds).
@@ -86,6 +90,128 @@ pub fn row_rate(key: &str, stats: &Stats, items: usize, unit: &str) {
     println!("{key:<46} {:>12.0} {unit}/s", stats.per_sec(items));
 }
 
+// ---------------------------------------------------------------------
+// Allocation counting
+// ---------------------------------------------------------------------
+
+static ALLOC_COUNT: AtomicU64 = AtomicU64::new(0);
+
+/// Global-allocator shim that counts heap acquisitions (alloc +
+/// grow-reallocs) process-wide. Install it in a bench binary with
+/// `#[global_allocator] static A: CountingAllocator = CountingAllocator;`
+/// and read deltas via [`allocs_during`]. Without installation the
+/// counter simply stays at zero.
+pub struct CountingAllocator;
+
+// SAFETY: pure pass-through to `System` plus a relaxed counter bump —
+// no additional aliasing or layout assumptions.
+unsafe impl GlobalAlloc for CountingAllocator {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_COUNT.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        // delegate so `vec![0.0; n]` keeps the calloc zero-page path
+        ALLOC_COUNT.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_COUNT.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+/// Heap allocations performed process-wide (all threads, including pool
+/// workers) during `f`. Zero when [`CountingAllocator`] is not the
+/// installed global allocator.
+pub fn allocs_during<R>(f: impl FnOnce() -> R) -> (u64, R) {
+    let before = ALLOC_COUNT.load(Ordering::Relaxed);
+    let r = f();
+    (ALLOC_COUNT.load(Ordering::Relaxed) - before, r)
+}
+
+// ---------------------------------------------------------------------
+// Machine-readable perf trajectory (BENCH_*.json)
+// ---------------------------------------------------------------------
+
+/// One flat JSON object, hand-rolled (no serde in the offline crate
+/// set). Field order is insertion order; values are JSON-escaped /
+/// finite-checked.
+#[derive(Clone, Debug, Default)]
+pub struct JsonObj {
+    parts: Vec<String>,
+}
+
+impl JsonObj {
+    /// Empty object.
+    pub fn new() -> Self {
+        JsonObj { parts: Vec::new() }
+    }
+
+    /// Add a string field.
+    pub fn s(mut self, key: &str, v: &str) -> Self {
+        let escaped: String = v
+            .chars()
+            .flat_map(|c| match c {
+                '"' => vec!['\\', '"'],
+                '\\' => vec!['\\', '\\'],
+                c if (c as u32) < 0x20 => format!("\\u{:04x}", c as u32).chars().collect(),
+                c => vec![c],
+            })
+            .collect();
+        self.parts.push(format!("\"{key}\":\"{escaped}\""));
+        self
+    }
+
+    /// Add a float field (non-finite values serialise as `null`).
+    pub fn num(mut self, key: &str, v: f64) -> Self {
+        let rendered = if v.is_finite() { format!("{v:.6}") } else { "null".to_string() };
+        self.parts.push(format!("\"{key}\":{rendered}"));
+        self
+    }
+
+    /// Add an integer field.
+    pub fn int(mut self, key: &str, v: u64) -> Self {
+        self.parts.push(format!("\"{key}\":{v}"));
+        self
+    }
+
+    /// Render as a JSON object.
+    pub fn build(&self) -> String {
+        format!("{{{}}}", self.parts.join(","))
+    }
+}
+
+/// Write one perf-trajectory file:
+/// `{"bench": <name>, "entries": [<entry objects>]}` — consumed by CI
+/// (uploaded as an artifact) and by trend tooling; committed snapshots
+/// live at the repository root as `BENCH_<name>.json`.
+pub fn write_bench_json(path: &str, name: &str, entries: &[JsonObj]) -> std::io::Result<()> {
+    let body: Vec<String> = entries.iter().map(|e| format!("    {}", e.build())).collect();
+    let doc = format!(
+        "{{\n  \"bench\": \"{name}\",\n  \"entries\": [\n{}\n  ]\n}}\n",
+        body.join(",\n")
+    );
+    std::fs::write(path, doc)
+}
+
+/// Resolve where a `BENCH_<name>.json` should land: the repository root
+/// when the bench runs from `rust/` (the normal cargo working dir),
+/// else the current directory.
+pub fn bench_json_path(name: &str) -> String {
+    if std::path::Path::new("../ROADMAP.md").exists() {
+        format!("../BENCH_{name}.json")
+    } else {
+        format!("BENCH_{name}.json")
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -116,5 +242,41 @@ mod tests {
         assert_eq!(Stats::human(1500.0), "1.50 µs");
         assert_eq!(Stats::human(2.5e6), "2.50 ms");
         assert_eq!(Stats::human(3.21e9), "3.210 s");
+    }
+
+    #[test]
+    fn json_obj_renders_flat_objects() {
+        let o = JsonObj::new()
+            .s("kernel", "packed")
+            .int("m", 512)
+            .num("gflops", 12.5)
+            .num("bad", f64::NAN);
+        assert_eq!(
+            o.build(),
+            "{\"kernel\":\"packed\",\"m\":512,\"gflops\":12.500000,\"bad\":null}"
+        );
+        let esc = JsonObj::new().s("k", "a\"b\\c\n");
+        assert_eq!(esc.build(), "{\"k\":\"a\\\"b\\\\c\\u000a\"}");
+    }
+
+    #[test]
+    fn bench_json_document_shape() {
+        let entries = [JsonObj::new().s("kernel", "a").int("n", 1)];
+        let tmp = std::env::temp_dir().join("repdl_bench_json_test.json");
+        let path = tmp.to_str().unwrap();
+        write_bench_json(path, "gemm", &entries).unwrap();
+        let doc = std::fs::read_to_string(path).unwrap();
+        std::fs::remove_file(path).ok();
+        assert!(doc.contains("\"bench\": \"gemm\""));
+        assert!(doc.contains("{\"kernel\":\"a\",\"n\":1}"));
+    }
+
+    #[test]
+    fn allocs_during_returns_result_and_count() {
+        // the test harness does not install CountingAllocator, so the
+        // count is 0 here — the API must still pass the value through
+        let (n, v) = allocs_during(|| vec![1u8; 32].len());
+        assert_eq!(v, 32);
+        let _ = n; // counter only advances under #[global_allocator]
     }
 }

@@ -11,15 +11,35 @@
 
 use crate::baseline::{baseline_matmul, PlatformProfile};
 use crate::bench_harness::bench;
-use crate::tensor::{matmul, matmul_in, Tensor, WorkerPool};
-use crate::Result;
+use crate::tensor::microkernel::{gemm_packed_into, pack_b_panels, packed_b_len};
+use crate::tensor::pool::global_pool;
+use crate::tensor::{scratch_f32, Tensor, WorkerPool};
+use crate::{Error, Result};
+
+/// Reject a request whose row length cannot feed the weight matrix —
+/// shared by the repro and baseline batching loops so malformed input
+/// yields the same error on both paths (never a panic).
+fn check_request(r: &Tensor, d_in: usize) -> Result<()> {
+    if r.numel() != d_in {
+        return Err(Error::shape(format!(
+            "serve: request has {} elements, weights want {d_in}",
+            r.numel()
+        )));
+    }
+    Ok(())
+}
 
 /// A toy model server: logits = x · W (+ per-row softmax left to client).
 pub struct DeterministicServer {
-    /// Weights (in, out).
+    /// Weights (in, out). Read-only after construction — the packed
+    /// panel copy below is derived from it exactly once.
     pub weights: Tensor,
     /// Max batch per dispatch.
     pub max_batch: usize,
+    /// `weights` pre-packed into microkernel B panels (layout-only,
+    /// built once in [`Self::new`]), so the serve hot path never
+    /// re-packs the immutable weight matrix per call.
+    packed_w: Vec<f32>,
 }
 
 /// Outcome of replaying the same requests under different batch mixes.
@@ -46,24 +66,56 @@ pub struct ServeThroughput {
 }
 
 impl DeterministicServer {
-    /// New server.
+    /// New server. Packs the weight matrix into microkernel B panels
+    /// once, up front (layout-only — cannot change any output bit).
     pub fn new(weights: Tensor, max_batch: usize) -> Self {
-        DeterministicServer { weights, max_batch }
+        let d_in = weights.dims()[0];
+        let d_out = weights.dims()[1];
+        let mut packed_w = vec![0.0f32; packed_b_len(d_in, d_out)];
+        pack_b_panels(global_pool(), weights.data(), d_in, d_out, &mut packed_w);
+        DeterministicServer { weights, max_batch, packed_w }
     }
 
     /// Process a queue in arrival order, batching up to `max_batch`.
     /// Returns one output row per request.
     pub fn process_repro(&self, queue: &[Tensor]) -> Result<Vec<Tensor>> {
-        self.process_with(queue, |x| matmul(x, &self.weights))
+        self.process_repro_in(global_pool(), queue)
     }
 
     /// [`Self::process_repro`] with every batch GEMM dispatched on an
     /// explicit [`WorkerPool`] — the serving hot path shares one
     /// persistent pool across all requests instead of spawning threads
-    /// per batch. Bit-identical to `process_repro` for any pool size
-    /// (asserted in tests and the `pool_invariance` suite).
+    /// per batch, and runs the packed register-tiled microkernel
+    /// against the weight panels **packed once at construction**, with
+    /// scratch-arena staging/output buffers (reused across calls), so a
+    /// steady-state serve loop allocates only the per-request output
+    /// rows it must return. Bit-identical to `matmul(x, W)` row for row
+    /// and for any pool size (asserted in tests and the
+    /// `pool_invariance` suite).
     pub fn process_repro_in(&self, pool: &WorkerPool, queue: &[Tensor]) -> Result<Vec<Tensor>> {
-        self.process_with(queue, |x| matmul_in(pool, x, &self.weights))
+        let d_in = self.weights.dims()[0];
+        let d_out = self.weights.dims()[1];
+        let mb = self.max_batch.max(1);
+        let packed = &self.packed_w; // packed once at construction
+        let mut stage = scratch_f32(mb * d_in);
+        let mut ybuf = scratch_f32(mb * d_out);
+        let mut outs = Vec::with_capacity(queue.len());
+        for chunk in queue.chunks(mb) {
+            let x = &mut stage[..chunk.len() * d_in];
+            for (i, r) in chunk.iter().enumerate() {
+                check_request(r, d_in)?;
+                x[i * d_in..(i + 1) * d_in].copy_from_slice(r.data());
+            }
+            let y = &mut ybuf[..chunk.len() * d_out];
+            gemm_packed_into(pool, x, chunk.len(), d_in, packed, d_out, None, false, y);
+            for i in 0..chunk.len() {
+                outs.push(Tensor::from_vec(
+                    &[d_out],
+                    y[i * d_out..(i + 1) * d_out].to_vec(),
+                )?);
+            }
+        }
+        Ok(outs)
     }
 
     /// Baseline path under a platform profile (size-dispatching kernels).
@@ -86,6 +138,7 @@ impl DeterministicServer {
         for chunk in queue.chunks(self.max_batch.max(1)) {
             let mut x = Tensor::zeros(&[chunk.len(), d_in]);
             for (i, r) in chunk.iter().enumerate() {
+                check_request(r, d_in)?; // same error as the repro path
                 x.data_mut()[i * d_in..(i + 1) * d_in].copy_from_slice(r.data());
             }
             let y = f(&x)?;
@@ -134,7 +187,12 @@ impl DeterministicServer {
         let mut repro_all = Vec::new();
         let mut base_all = Vec::new();
         for &bs in batch_sizes {
-            let s = DeterministicServer { weights: self.weights.clone(), max_batch: bs };
+            // same weights → same panels; clone them instead of repacking
+            let s = DeterministicServer {
+                weights: self.weights.clone(),
+                max_batch: bs,
+                packed_w: self.packed_w.clone(),
+            };
             repro_all.push(s.process_repro(queue)?);
             base_all.push(s.process_baseline(queue, p)?);
         }
@@ -155,6 +213,7 @@ impl DeterministicServer {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::tensor::matmul;
 
     fn queue(n: usize, d: usize) -> Vec<Tensor> {
         (0..n)

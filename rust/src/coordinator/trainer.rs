@@ -12,7 +12,7 @@ use crate::coordinator::hashing::hash_params;
 use crate::data::GaussianMixtureImages;
 use crate::nn::softmax_rows;
 use crate::rng::derive_seed;
-use crate::tensor::{global_pool, matmul_in, Tensor, WorkerPool};
+use crate::tensor::{global_pool, matmul_in, sum_axis_in, Tensor, WorkerPool};
 use crate::Result;
 use std::sync::Arc;
 
@@ -65,6 +65,11 @@ pub struct TrainReport {
 }
 
 /// Manual-graph MLP trainer with switchable numerics.
+///
+/// The Repro GEMMs route through the size-routed `matmul_in` (packed
+/// register-tiled kernel for large products), whose pack buffers come
+/// from the thread-local scratch arena — so a multi-step training loop
+/// pays the pack/scratch allocations once, not per step.
 pub struct Trainer {
     /// Config.
     pub cfg: TrainerConfig,
@@ -109,29 +114,22 @@ impl Trainer {
         }
     }
 
-    /// Column sum for bias gradients: sequential in Repro/Baseline,
-    /// simulated-atomic order in BaselineAtomic.
-    fn col_sum(&self, g: &Tensor) -> Tensor {
-        let (rows, cols) = (g.dims()[0], g.dims()[1]);
-        let mut out = Tensor::zeros(&[cols]);
+    /// Column sum for bias gradients: sequential (pooled `sum_axis`,
+    /// same row order as the serial loop — bit-identical) in
+    /// Repro/Baseline, simulated-atomic order in BaselineAtomic.
+    fn col_sum(&self, g: &Tensor) -> Result<Tensor> {
         match &self.mode {
             NumericsMode::BaselineAtomic(_) => {
+                let (rows, cols) = (g.dims()[0], g.dims()[1]);
+                let mut out = Tensor::zeros(&[cols]);
                 for j in 0..cols {
                     let col: Vec<f32> = (0..rows).map(|r| g.data()[r * cols + j]).collect();
                     out.data_mut()[j] = atomic_sum(&col);
                 }
+                Ok(out)
             }
-            _ => {
-                for j in 0..cols {
-                    let mut acc = 0.0f32;
-                    for r in 0..rows {
-                        acc += g.data()[r * cols + j];
-                    }
-                    out.data_mut()[j] = acc;
-                }
-            }
+            _ => sum_axis_in(self.pool(), g, 0),
         }
-        out
     }
 
     /// Run the full training loop.
@@ -174,11 +172,11 @@ impl Trainer {
             }
             let dlogits = dlogits.map(|v| v / c.batch as f32);
             let dw2 = self.mm(&h.transpose2d()?, &dlogits)?;
-            let db2 = self.col_sum(&dlogits);
+            let db2 = self.col_sum(&dlogits)?;
             let dh = self.mm(&dlogits, &w2.transpose2d()?)?;
             let dh_pre = dh.zip(&h_pre, |g, v| if v > 0.0 { g } else { 0.0 })?;
             let dw1 = self.mm(&x.transpose2d()?, &dh_pre)?;
-            let db1 = self.col_sum(&dh_pre);
+            let db1 = self.col_sum(&dh_pre)?;
             // SGD update (fixed graph)
             for (p, g) in [(&mut w1, &dw1), (&mut b1, &db1), (&mut w2, &dw2), (&mut b2, &db2)] {
                 for (pv, gv) in p.data_mut().iter_mut().zip(g.data().iter()) {

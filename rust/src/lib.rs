@@ -22,13 +22,16 @@
 //! * [`rnum`] — correctly-rounded scalar ops + the `BigFloat` rounding
 //!   oracle + reproducible summation algorithms.
 //! * [`tensor`] — shape/stride tensor library with fixed-order GEMM
-//!   (cache-blocked, bit-identical to the per-element dot form),
-//!   convolution and reductions, all dispatched on the persistent
-//!   [`tensor::pool::WorkerPool`]: a lazily-initialised worker pool with
-//!   static chunk→lane assignment, so pool size is a pure performance
-//!   knob that never changes a single bit (see `DESIGN.md` §3 and the
-//!   `pool_invariance` / `golden_vectors` conformance suites under
-//!   `rust/tests/`).
+//!   (packed register-tiled microkernel routed with a cache-blocked
+//!   small-shape kernel, both bit-identical to the per-element dot
+//!   form), fused im2col convolution and reductions, all dispatched on
+//!   the persistent [`tensor::pool::WorkerPool`]: a lazily-initialised
+//!   worker pool with static chunk→lane assignment, so pool size is a
+//!   pure performance knob that never changes a single bit (see
+//!   `DESIGN.md` §3/§6 and the `pool_invariance` / `golden_vectors` /
+//!   `packed_fast_paths` conformance suites under `rust/tests/`).
+//!   Transient pack/im2col buffers come from the thread-local
+//!   [`tensor::scratch`] arena (allocation-free steady state).
 //! * [`autograd`] — tape autograd with deterministic gradient-accumulation
 //!   order.
 //! * [`nn`] — PyTorch-named modules (`Linear`, `Conv2d`, `BatchNorm2d`,

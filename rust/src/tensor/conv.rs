@@ -13,12 +13,28 @@
 //! making the two *bit-identical*, which the tests assert. This is the
 //! paper's §3.1 order-invariance principle: same basic ops, same order ⇒
 //! one API; had the order differed, it would need a different name.
+//!
+//! Perf (bit-neutral, DESIGN.md §6): the im2col path is **fused** — the
+//! column matrix is emitted directly in the microkernel's packed panel
+//! layout (skipping the seed's materialise-then-transpose round trip),
+//! its construction is parallelised on the worker pool together with the
+//! batch dimension, and the GEMM writes straight into the NCHW output
+//! plane (no per-element scatter). The weight matrix needs no relayout
+//! at all: OIHW rows are already in (c, kh, kw) order. Scratch comes
+//! from the thread-local arena, so serve/train loops stop paying a fresh
+//! im2col allocation per call.
 
-use super::matmul::matmul_in;
+use super::microkernel::{gemm_block, MR, NR};
 use super::par::par_chunks_in;
 use super::pool::{global_pool, WorkerPool};
+use super::scratch::scratch_f32;
 use super::tensor::Tensor;
 use crate::{Error, Result};
+
+/// Cap on the fused path's packed-im2col scratch (f32 slots ≈ 16 MiB);
+/// batches are processed in groups sized to stay under it. Grouping
+/// changes only which tasks run concurrently — never any bits.
+const CONV_SCRATCH_F32: usize = 1 << 22;
 
 /// Convolution hyper-parameters.
 #[derive(Clone, Copy, Debug)]
@@ -186,6 +202,54 @@ pub fn im2col(
     Ok(out)
 }
 
+/// Emit one NR-wide panel of the packed im2col matrix for one image:
+/// `dst[ck·NR + j] = x[img, c, ih, iw]` for output position
+/// `s = pidx·NR + j`, with k rows enumerating (c, kh, kw) in the
+/// direct-conv order and zero-fill for padding taps and the ragged
+/// spatial tail (tail columns feed microkernel lanes that are never
+/// written back). Layout-only: no arithmetic, so no rounding.
+#[allow(clippy::too_many_arguments)]
+fn fill_im2col_panel(
+    xd: &[f32],
+    img: usize,
+    c: usize,
+    h: usize,
+    w: usize,
+    kh: usize,
+    kw: usize,
+    p: &Conv2dParams,
+    oh: usize,
+    ow: usize,
+    pidx: usize,
+    dst: &mut [f32],
+) {
+    let ohw = oh * ow;
+    let s0 = pidx * NR;
+    let wlen = NR.min(ohw - s0);
+    for ci in 0..c {
+        for khh in 0..kh {
+            for kww in 0..kw {
+                let ck = (ci * kh + khh) * kw + kww;
+                let row = &mut dst[ck * NR..ck * NR + NR];
+                for (j, v) in row[..wlen].iter_mut().enumerate() {
+                    let s = s0 + j;
+                    let (ohh, oww) = (s / ow, s % ow);
+                    let ih = (ohh * p.stride + khh) as isize - p.padding as isize;
+                    let iw = (oww * p.stride + kww) as isize - p.padding as isize;
+                    *v = if ih < 0 || iw < 0 || ih >= h as isize || iw >= w as isize {
+                        0.0
+                    } else {
+                        xd[((img * c + ci) * h + ih as usize) * w + iw as usize]
+                    };
+                }
+                for v in &mut row[wlen..] {
+                    *v = 0.0;
+                }
+            }
+        }
+    }
+}
+
 /// im2col + GEMM convolution. **Bit-identical** to [`conv2d`] when the
 /// padding contributes only exact zeros (0·w then +0 round-trips exactly,
 /// except that a `-0.0` product can flip the sign of an all-zero prefix —
@@ -201,8 +265,10 @@ pub fn conv2d_im2col(
     conv2d_im2col_in(global_pool(), x, w, bias, p)
 }
 
-/// [`conv2d_im2col`] on an explicit pool (the inner GEMM dispatches
-/// there; im2col materialisation stays on the caller thread).
+/// [`conv2d_im2col`] on an explicit pool — the fused pipeline: packed
+/// im2col emission (parallel over image × panel), then one microkernel
+/// GEMM row-block per (image, O-block) task writing directly into the
+/// NCHW output plane with the bias folded into the write-back.
 pub fn conv2d_im2col_in(
     pool: &WorkerPool,
     x: &Tensor,
@@ -212,77 +278,141 @@ pub fn conv2d_im2col_in(
 ) -> Result<Tensor> {
     let (b, c, h, wd, o, kh, kw) = check_conv(x, w)?;
     let (oh, ow) = out_hw(h, wd, kh, kw, &p)?;
-    let k = c * kh * kw;
-    let wmat = w.reshape(&[o, k])?; // OIHW rows already in (c,kh,kw) order
-    let mut out = Tensor::zeros(&[b, o, oh, ow]);
-    for bi in 0..b {
-        let cols = im2col(x, bi, kh, kw, &p)?; // (OH·OW, K)
-        let prod = matmul_in(pool, &wmat, &cols.transpose2d()?)?; // (O, OH·OW)
-        for oi in 0..o {
-            for s in 0..oh * ow {
-                let mut v = prod.data()[oi * oh * ow + s];
-                if let Some(bs) = bias {
-                    v += bs.data()[oi];
-                }
-                out.data_mut()[((bi * o + oi) * oh + s / ow) * ow + s % ow] = v;
-            }
+    if let Some(bs) = bias {
+        if bs.dims() != [o] {
+            return Err(Error::shape("conv2d: bias must be (O,)"));
         }
     }
+    if b == 0 || o == 0 {
+        return Ok(Tensor::zeros(&[b, o, oh, ow]));
+    }
+    let k = c * kh * kw;
+    let ohw = oh * ow;
+    let npanels = ohw.div_ceil(NR);
+    let per_image = npanels * k * NR; // packed im2col slots per image
+    let group = (CONV_SCRATCH_F32 / per_image.max(1)).clamp(1, b);
+    let rb = o.div_ceil(MR);
+    let xd = x.data();
+    let wmat = w.data(); // OIHW rows are already the (O, K) GEMM operand
+    let bias_d = bias.map(|t| t.data());
+    let out = Tensor::filled_by(&[b, o, oh, ow], |outbuf| {
+        let mut cols = scratch_f32(group * per_image);
+        for g0 in (0..b).step_by(group) {
+            let gn = group.min(b - g0);
+            // stage 1: packed im2col, one task per (image, panel)
+            par_chunks_in(pool, &mut cols[..gn * per_image], k * NR, |start, panel| {
+                let t = start / (k * NR);
+                let (gi, pi) = (t / npanels, t % npanels);
+                fill_im2col_panel(xd, g0 + gi, c, h, wd, kh, kw, &p, oh, ow, pi, panel);
+            });
+            // stage 2: one GEMM row-block per (image, O-block) task —
+            // the batch dimension parallelises here, and each block
+            // lands directly in its NCHW plane (no scatter loop)
+            let base = outbuf.as_mut_ptr() as usize;
+            let gcols = &cols[..gn * per_image];
+            pool.run(gn * rb, &|t| {
+                let (gi, blk) = (t / rb, t % rb);
+                let i0 = blk * MR;
+                let nrows = MR.min(o - i0);
+                let packed = &gcols[gi * per_image..(gi + 1) * per_image];
+                // SAFETY: tasks cover pairwise-disjoint
+                // (image, row-block) regions of `outbuf`, each task runs
+                // exactly once, and `outbuf` outlives `run` (which
+                // blocks until every task finishes).
+                let dst = unsafe {
+                    std::slice::from_raw_parts_mut(
+                        (base as *mut f32).add(((g0 + gi) * o + i0) * ohw),
+                        nrows * ohw,
+                    )
+                };
+                gemm_block(
+                    &wmat[i0 * k..(i0 + nrows) * k],
+                    k,
+                    nrows,
+                    packed,
+                    ohw,
+                    bias_d.map(|bd| &bd[i0..i0 + nrows]),
+                    false,
+                    dst,
+                );
+            });
+        }
+    });
     Ok(out)
 }
 
-/// Max pooling (kernel = stride, valid padding) — comparison-only, so
-/// trivially reproducible; fixed first-max tie rule.
-pub fn max_pool2d(x: &Tensor, k: usize) -> Result<Tensor> {
+fn check_pool(x: &Tensor, k: usize, name: &str) -> Result<(usize, usize, usize, usize)> {
     let d = x.dims();
-    if d.len() != 4 || d[2] % k != 0 || d[3] % k != 0 {
-        return Err(Error::shape(format!("max_pool2d: bad dims {d:?} k={k}")));
+    if d.len() != 4 || k == 0 || d[2] % k != 0 || d[3] % k != 0 {
+        return Err(Error::shape(format!("{name}: bad dims {d:?} k={k}")));
     }
-    let (b, c, h, w) = (d[0], d[1], d[2], d[3]);
+    Ok((d[0], d[1], d[2], d[3]))
+}
+
+/// Max pooling (kernel = stride, valid padding) — comparison-only, so
+/// trivially reproducible; fixed first-max tie rule. Dispatches one
+/// output plane per worker-pool task (planes are independent; the
+/// in-window comparison order stays fixed, so pool size never changes
+/// bits — covered by the `pool_invariance` suite).
+pub fn max_pool2d(x: &Tensor, k: usize) -> Result<Tensor> {
+    max_pool2d_in(global_pool(), x, k)
+}
+
+/// [`max_pool2d`] on an explicit pool.
+pub fn max_pool2d_in(pool: &WorkerPool, x: &Tensor, k: usize) -> Result<Tensor> {
+    let (b, c, h, w) = check_pool(x, k, "max_pool2d")?;
     let (oh, ow) = (h / k, w / k);
-    let mut out = Tensor::zeros(&[b, c, oh, ow]);
-    for bc in 0..b * c {
-        for i in 0..oh {
-            for j in 0..ow {
-                let mut m = f32::NEG_INFINITY;
-                for di in 0..k {
-                    for dj in 0..k {
-                        let v = x.data()[bc * h * w + (i * k + di) * w + (j * k + dj)];
-                        if v > m {
-                            m = v;
+    let xd = x.data();
+    let out = Tensor::filled_by(&[b, c, oh, ow], |buf| {
+        par_chunks_in(pool, buf, oh * ow, |start, plane| {
+            let bc = start / (oh * ow);
+            for i in 0..oh {
+                for j in 0..ow {
+                    let mut m = f32::NEG_INFINITY;
+                    for di in 0..k {
+                        for dj in 0..k {
+                            let v = xd[bc * h * w + (i * k + di) * w + (j * k + dj)];
+                            if v > m {
+                                m = v;
+                            }
                         }
                     }
+                    plane[i * ow + j] = m;
                 }
-                out.data_mut()[bc * oh * ow + i * ow + j] = m;
             }
-        }
-    }
+        });
+    });
     Ok(out)
 }
 
 /// Average pooling: fixed graph — sequential window sum, then ÷ k².
+/// Same plane-per-task dispatch as [`max_pool2d`].
 pub fn avg_pool2d(x: &Tensor, k: usize) -> Result<Tensor> {
-    let d = x.dims();
-    if d.len() != 4 || d[2] % k != 0 || d[3] % k != 0 {
-        return Err(Error::shape(format!("avg_pool2d: bad dims {d:?} k={k}")));
-    }
-    let (b, c, h, w) = (d[0], d[1], d[2], d[3]);
+    avg_pool2d_in(global_pool(), x, k)
+}
+
+/// [`avg_pool2d`] on an explicit pool.
+pub fn avg_pool2d_in(pool: &WorkerPool, x: &Tensor, k: usize) -> Result<Tensor> {
+    let (b, c, h, w) = check_pool(x, k, "avg_pool2d")?;
     let (oh, ow) = (h / k, w / k);
     let inv = 1.0 / (k * k) as f32; // k² a small int: division exact-rounded
-    let mut out = Tensor::zeros(&[b, c, oh, ow]);
-    for bc in 0..b * c {
-        for i in 0..oh {
-            for j in 0..ow {
-                let mut acc = 0.0f32;
-                for di in 0..k {
-                    for dj in 0..k {
-                        acc += x.data()[bc * h * w + (i * k + di) * w + (j * k + dj)];
+    let xd = x.data();
+    let out = Tensor::filled_by(&[b, c, oh, ow], |buf| {
+        par_chunks_in(pool, buf, oh * ow, |start, plane| {
+            let bc = start / (oh * ow);
+            for i in 0..oh {
+                for j in 0..ow {
+                    let mut acc = 0.0f32;
+                    for di in 0..k {
+                        for dj in 0..k {
+                            acc += xd[bc * h * w + (i * k + di) * w + (j * k + dj)];
+                        }
                     }
+                    plane[i * ow + j] = acc * inv;
                 }
-                out.data_mut()[bc * oh * ow + i * ow + j] = acc * inv;
             }
-        }
-    }
+        });
+    });
     Ok(out)
 }
 
@@ -369,6 +499,53 @@ mod tests {
             let got = conv2d_in(&pool, &x, &w, None, Conv2dParams::default()).unwrap();
             assert!(one.bit_eq(&got), "lanes={lanes}");
         }
+    }
+
+    #[test]
+    fn fused_pipeline_matches_direct_across_panel_boundaries() {
+        // spatial sizes straddling the NR panel width (15/16/17 output
+        // columns) and O straddling MR; batch > group-of-1 exercises the
+        // batch-parallel stage
+        for (b, c, hw, o, kk) in [
+            (1usize, 2usize, 5usize, 3usize, 2usize), // ohw = 16 exactly
+            (2, 2, 6, 8, 2),                          // ohw = 25, o == MR
+            (3, 1, 6, 9, 3),                          // o straddles MR
+            (2, 3, 4, 1, 1),                          // single filter
+        ] {
+            let x = lcg(&[b, c, hw, hw], (b * 100 + hw) as u64);
+            let w = lcg(&[o, c, kk, kk], (o * 100 + kk) as u64);
+            let bias = lcg(&[o], 77);
+            let p = Conv2dParams { stride: 1, padding: 0 };
+            let direct = conv2d_direct(&x, &w, Some(&bias), p).unwrap();
+            let fused = conv2d_im2col(&x, &w, Some(&bias), p).unwrap();
+            assert!(
+                direct.bit_eq(&fused),
+                "fused diverged at b={b} c={c} hw={hw} o={o} k={kk}"
+            );
+        }
+    }
+
+    #[test]
+    fn fused_pipeline_validates_bias_shape() {
+        let x = lcg(&[1, 2, 6, 6], 1);
+        let w = lcg(&[4, 2, 3, 3], 2);
+        let bad = lcg(&[3], 3);
+        assert!(conv2d_im2col(&x, &w, Some(&bad), Conv2dParams::default()).is_err());
+    }
+
+    #[test]
+    fn pooling_ops_are_pool_size_invariant() {
+        let x = lcg(&[2, 3, 8, 8], 9);
+        let base_max = max_pool2d_in(&WorkerPool::new(1), &x, 2).unwrap();
+        let base_avg = avg_pool2d_in(&WorkerPool::new(1), &x, 2).unwrap();
+        for lanes in [2, 3, 5, 8, 16] {
+            let pool = WorkerPool::new(lanes);
+            assert!(base_max.bit_eq(&max_pool2d_in(&pool, &x, 2).unwrap()), "max lanes={lanes}");
+            assert!(base_avg.bit_eq(&avg_pool2d_in(&pool, &x, 2).unwrap()), "avg lanes={lanes}");
+        }
+        // the global-pool names route through the same kernels
+        assert!(base_max.bit_eq(&max_pool2d(&x, 2).unwrap()));
+        assert!(base_avg.bit_eq(&avg_pool2d(&x, 2).unwrap()));
     }
 
     #[test]

@@ -7,24 +7,36 @@
 //! bits — the paper's core efficiency argument (as long as `t_fc` exceeds
 //! the core count, fixing the order costs little).
 //!
-//! Implementation note (perf, bit-neutral): the default kernel is
-//! **cache-blocked**: output rows are processed in blocks of
-//! [`ROW_BLOCK`], columns in blocks of [`COL_BLOCK`] (sized so one
-//! accumulator panel plus one B row-segment stay L1-resident), with the
-//! k-loop outermost inside each block so every B row-segment is reused
-//! across all rows of the block. Blocking reorders work only across
-//! *independent* output elements — each element still sees exactly the
-//! sequential-k order with the chosen mul/add graph — so results are
-//! bit-identical to the per-element dot form ([`matmul_dotform`]),
-//! asserted in tests and in the property suite (`src/proptest.rs`).
+//! Implementation note (perf, bit-neutral): three interchangeable
+//! kernels compute the same graph, fastest first.
+//!
+//! * **Packed** ([`matmul_packed`], default for large shapes): B is
+//!   packed once into NR-wide column panels in scratch-arena storage and
+//!   an MR×NR register-tiled microkernel runs over it
+//!   (`tensor/microkernel.rs`). Packing is layout-only; tiling reorders
+//!   only independent elements.
+//! * **Blocked** ([`matmul_blocked`], default for small shapes where
+//!   packing doesn't amortise): output rows in blocks of [`ROW_BLOCK`],
+//!   columns in blocks of [`COL_BLOCK`], k-loop outermost inside each
+//!   block so every B row-segment is reused across the block's rows.
+//! * **Dot form** ([`matmul_dotform`]): the pre-optimisation per-element
+//!   reference, kept for the bit-equality regression tests and the E5
+//!   perf ablation.
+//!
+//! All three give each output element exactly the sequential-k unfused
+//! mul/add graph, so they are bit-identical — asserted in unit tests,
+//! the property suites (`src/proptest.rs`, `tests/packed_fast_paths.rs`)
+//! and the `pool_invariance` conformance suite.
 //!
 //! Every kernel has an `*_in` variant taking an explicit
 //! [`WorkerPool`]; the plain names dispatch on the global pool. The
 //! `pool_invariance` integration suite checks bit-equality across pool
 //! sizes for all of them.
 
+use super::microkernel::{gemm_packed_into, pack_b_panels, packed_b_len, MR};
 use super::par::par_chunks_in;
 use super::pool::{global_pool, WorkerPool};
+use super::scratch::scratch_f32;
 use super::tensor::Tensor;
 use crate::rnum::dot::{dot_strided, dot_strided_fma, dot_strided_pairwise};
 use crate::{Error, Result};
@@ -35,6 +47,11 @@ const ROW_BLOCK: usize = 8;
 /// accumulator panel is 8 KiB — comfortably L1 — and each B row-segment
 /// (1 KiB) is reused across all 8 rows before eviction.
 const COL_BLOCK: usize = 256;
+/// Routing threshold: packed pays one extra pass over B (the pack), so
+/// it wins once the `2·m·n·k` flops dominate the `k·n` pack traffic —
+/// i.e. for all but small/skinny products. Routing never changes bits
+/// (both kernels compute the identical graph), only wall-clock.
+const PACKED_MIN_WORK: usize = 64 * 1024;
 
 fn check_dims(a: &Tensor, b: &Tensor) -> Result<(usize, usize, usize)> {
     let (da, db) = (a.dims(), b.dims());
@@ -57,36 +74,59 @@ fn check_dims(a: &Tensor, b: &Tensor) -> Result<(usize, usize, usize)> {
 /// auto-vectorises and B stays cache-resident.
 fn matmul_rowkernel_in(pool: &WorkerPool, a: &Tensor, b: &Tensor, fma: bool) -> Result<Tensor> {
     let (m, k, n) = check_dims(a, b)?;
-    let mut out = Tensor::zeros(&[m, n]);
-    if m == 0 || n == 0 {
-        return Ok(out);
-    }
     let (ad, bd) = (a.data(), b.data());
-    par_chunks_in(pool, out.data_mut(), ROW_BLOCK * n, |start, rows| {
-        let i0 = start / n;
-        let nrows = rows.len() / n;
-        rows.fill(0.0);
-        for jb in (0..n).step_by(COL_BLOCK) {
-            let jn = COL_BLOCK.min(n - jb);
-            for kk in 0..k {
-                let brow = &bd[kk * n + jb..kk * n + jb + jn];
-                for r in 0..nrows {
-                    let aik = ad[(i0 + r) * k + kk];
-                    let acc = &mut rows[r * n + jb..r * n + jb + jn];
-                    if fma {
-                        for (v, &bv) in acc.iter_mut().zip(brow) {
-                            *v = aik.mul_add(bv, *v);
-                        }
-                    } else {
-                        for (v, &bv) in acc.iter_mut().zip(brow) {
-                            *v += aik * bv;
+    // single zeroing: `filled_by` hands each task calloc-zeroed rows to
+    // accumulate onto directly (the old code zeroed a second time here)
+    let out = Tensor::filled_by(&[m, n], |buf| {
+        par_chunks_in(pool, buf, ROW_BLOCK * n.max(1), |start, rows| {
+            let i0 = start / n;
+            let nrows = rows.len() / n;
+            for jb in (0..n).step_by(COL_BLOCK) {
+                let jn = COL_BLOCK.min(n - jb);
+                for kk in 0..k {
+                    let brow = &bd[kk * n + jb..kk * n + jb + jn];
+                    for r in 0..nrows {
+                        let aik = ad[(i0 + r) * k + kk];
+                        let acc = &mut rows[r * n + jb..r * n + jb + jn];
+                        if fma {
+                            for (v, &bv) in acc.iter_mut().zip(brow) {
+                                *v = aik.mul_add(bv, *v);
+                            }
+                        } else {
+                            for (v, &bv) in acc.iter_mut().zip(brow) {
+                                *v += aik * bv;
+                            }
                         }
                     }
                 }
             }
-        }
+        });
     });
     Ok(out)
+}
+
+/// Packed register-tiled kernel: pack B into panels (scratch-arena
+/// storage, reused across calls), then run the MR×NR microkernel.
+fn matmul_packkernel_in(pool: &WorkerPool, a: &Tensor, b: &Tensor, fma: bool) -> Result<Tensor> {
+    let (m, k, n) = check_dims(a, b)?;
+    if m == 0 || n == 0 {
+        return Ok(Tensor::zeros(&[m, n]));
+    }
+    let (ad, bd) = (a.data(), b.data());
+    let mut packed = scratch_f32(packed_b_len(k, n));
+    pack_b_panels(pool, bd, k, n, &mut packed);
+    Ok(Tensor::filled_by(&[m, n], |buf| {
+        gemm_packed_into(pool, ad, m, k, &packed, n, None, fma, buf);
+    }))
+}
+
+fn matmul_routed_in(pool: &WorkerPool, a: &Tensor, b: &Tensor, fma: bool) -> Result<Tensor> {
+    let (m, k, n) = check_dims(a, b)?;
+    if m >= MR && m * k * n >= PACKED_MIN_WORK {
+        matmul_packkernel_in(pool, a, b, fma)
+    } else {
+        matmul_rowkernel_in(pool, a, b, fma)
+    }
 }
 
 fn matmul_with_in(
@@ -97,28 +137,50 @@ fn matmul_with_in(
 ) -> Result<Tensor> {
     let (m, k, n) = check_dims(a, b)?;
     let bt = b.transpose2d()?; // layout-only change; order-neutral
-    let mut out = Tensor::zeros(&[m, n]);
-    if m == 0 || n == 0 {
-        return Ok(out);
-    }
     let (ad, btd) = (a.data(), bt.data());
-    par_chunks_in(pool, out.data_mut(), n, |start, c| {
-        let i = start / n;
-        for (j, v) in c.iter_mut().enumerate() {
-            *v = dot(&ad[i * k..(i + 1) * k], &btd[j * k..(j + 1) * k], k);
-        }
+    let out = Tensor::filled_by(&[m, n], |buf| {
+        par_chunks_in(pool, buf, n.max(1), |start, c| {
+            let i = start / n;
+            for (j, v) in c.iter_mut().enumerate() {
+                *v = dot(&ad[i * k..(i + 1) * k], &btd[j * k..(j + 1) * k], k);
+            }
+        });
     });
     Ok(out)
 }
 
-/// RepDL default GEMM: sequential-k, unfused multiply-add (blocked
-/// kernel, global pool).
+/// RepDL default GEMM: sequential-k, unfused multiply-add. Routes
+/// between the packed and blocked kernels by size (bit-identical
+/// either way; global pool).
 pub fn matmul(a: &Tensor, b: &Tensor) -> Result<Tensor> {
     matmul_in(global_pool(), a, b)
 }
 
 /// [`matmul`] on an explicit pool.
 pub fn matmul_in(pool: &WorkerPool, a: &Tensor, b: &Tensor) -> Result<Tensor> {
+    matmul_routed_in(pool, a, b, false)
+}
+
+/// Packed register-tiled GEMM (perf form; bit-identical to [`matmul`]
+/// and [`matmul_dotform`] — the E5 ablation measures the three side by
+/// side).
+pub fn matmul_packed(a: &Tensor, b: &Tensor) -> Result<Tensor> {
+    matmul_packed_in(global_pool(), a, b)
+}
+
+/// [`matmul_packed`] on an explicit pool.
+pub fn matmul_packed_in(pool: &WorkerPool, a: &Tensor, b: &Tensor) -> Result<Tensor> {
+    matmul_packkernel_in(pool, a, b, false)
+}
+
+/// Cache-blocked k-outer GEMM (the PR-1 kernel, kept as an explicitly
+/// addressable ablation stage and as the small-shape route).
+pub fn matmul_blocked(a: &Tensor, b: &Tensor) -> Result<Tensor> {
+    matmul_blocked_in(global_pool(), a, b)
+}
+
+/// [`matmul_blocked`] on an explicit pool.
+pub fn matmul_blocked_in(pool: &WorkerPool, a: &Tensor, b: &Tensor) -> Result<Tensor> {
     matmul_rowkernel_in(pool, a, b, false)
 }
 
@@ -129,7 +191,7 @@ pub fn matmul_fma(a: &Tensor, b: &Tensor) -> Result<Tensor> {
 
 /// [`matmul_fma`] on an explicit pool.
 pub fn matmul_fma_in(pool: &WorkerPool, a: &Tensor, b: &Tensor) -> Result<Tensor> {
-    matmul_rowkernel_in(pool, a, b, true)
+    matmul_routed_in(pool, a, b, true)
 }
 
 /// The per-element dot formulation (pre-optimisation reference; kept for
@@ -232,6 +294,43 @@ mod tests {
             let dotform = matmul_dotform(&a, &b).unwrap();
             assert!(blocked.bit_eq(&dotform), "m={m} k={k} n={n}");
         }
+    }
+
+    #[test]
+    fn packed_equals_dotform_across_tile_boundaries() {
+        // shapes straddling the microkernel's MR/NR boundaries: packing
+        // + register tiling must not move a single bit
+        for (m, k, n) in [
+            (1usize, 3usize, 1usize),
+            (7, 9, 15),
+            (8, 9, 16),
+            (9, 9, 17),
+            (16, 33, 31),
+            (17, 33, 48),
+            (24, 64, 100),
+        ] {
+            let a = lcg_tensor(&[m, k], (m * 131 + n) as u64);
+            let b = lcg_tensor(&[k, n], (n * 131 + k) as u64);
+            let packed = matmul_packed(&a, &b).unwrap();
+            let dotform = matmul_dotform(&a, &b).unwrap();
+            let blocked = matmul_blocked(&a, &b).unwrap();
+            assert!(packed.bit_eq(&dotform), "packed m={m} k={k} n={n}");
+            assert!(blocked.bit_eq(&dotform), "blocked m={m} k={k} n={n}");
+        }
+    }
+
+    #[test]
+    fn size_routing_is_bit_neutral() {
+        // large enough that the default route takes the packed kernel
+        let a = lcg_tensor(&[40, 80], 31);
+        let b = lcg_tensor(&[80, 50], 32);
+        assert!(40 * 80 * 50 >= PACKED_MIN_WORK);
+        let routed = matmul(&a, &b).unwrap();
+        assert!(routed.bit_eq(&matmul_packed(&a, &b).unwrap()));
+        assert!(routed.bit_eq(&matmul_blocked(&a, &b).unwrap()));
+        assert!(routed.bit_eq(&matmul_dotform(&a, &b).unwrap()));
+        let fma = matmul_fma(&a, &b).unwrap();
+        assert!(fma.bit_eq(&matmul_fma_dotform(&a, &b).unwrap()));
     }
 
     #[test]

@@ -1,0 +1,293 @@
+//! Packed register-tiled GEMM microkernel (perf core, bit-neutral).
+//!
+//! Where real BLAS speed comes from, translated under RepDL's ordering
+//! constraint: **pack** B into contiguous cache-aligned column panels
+//! once, then run a fixed-size **register tile** whose inner loops have
+//! no bounds checks and fully vectorise. Both transformations are
+//! invisible at the bit level *by construction*:
+//!
+//! * **Packing is layout-only.** [`pack_b_panels`] copies B's values
+//!   into [`NR`]-wide panels; no arithmetic happens, so no rounding can
+//!   change. Panel tails are zero-filled — those lanes compute columns
+//!   that are never written back (columns are independent summation
+//!   tasks; discarding a padded one cannot affect a real one).
+//! * **Tiling reorders only independent elements.** Inside a tile the
+//!   k-loop is outermost and all [`MR`]`×`[`NR`] accumulators advance
+//!   together, but each accumulator `(r, j)` still receives exactly the
+//!   sequence `acc += a[r,k]·b[k,j]` for `k = 0, 1, …` — the identical
+//!   unfused sequential-k graph of [`crate::rnum::dot::dot_strided`].
+//!   Interleaving work *between* output elements is unobservable because
+//!   IEEE-754 ops are deterministic functions of their operands and no
+//!   element reads another's accumulator.
+//!
+//! Hence `packed GEMM == blocked GEMM == per-element dot form`, bit for
+//! bit — asserted by unit tests here, the conformance suites under
+//! `rust/tests/`, and the randomized properties in
+//! `tests/packed_fast_paths.rs`. The same microkernel backs the fused
+//! im2col convolution (`tensor/conv.rs`) and the serving fast path
+//! (`coordinator/serve.rs`), which emit or pre-pack their B operands
+//! directly in panel form.
+
+use super::par::par_chunks_in;
+use super::pool::WorkerPool;
+
+/// Register-tile rows (output rows accumulated together per block).
+pub const MR: usize = 8;
+/// Register-tile columns = panel width. An MR×NR f32 accumulator tile is
+/// 8×16×4 B = 512 B — it fits the 16 × 256-bit vector register file of
+/// an AVX2-class core exactly, so the inner loops keep every accumulator
+/// in registers.
+pub const NR: usize = 16;
+
+/// f32 slots needed to pack a `k × n` B matrix into NR-wide panels.
+pub fn packed_b_len(k: usize, n: usize) -> usize {
+    n.div_ceil(NR) * k * NR
+}
+
+/// Pack row-major B (`k × n`) into column panels: panel `p` holds
+/// columns `[p·NR, p·NR + NR)` as `packed[(p·k + kk)·NR + j] = B[kk,
+/// p·NR + j]`, so the microkernel streams one contiguous NR-row per k
+/// step. Columns past `n` are zero-filled (their results are discarded
+/// — see module docs). Parallel over panels on `pool`; `packed` must be
+/// exactly [`packed_b_len`]`(k, n)` long and is fully overwritten.
+pub fn pack_b_panels(pool: &WorkerPool, bd: &[f32], k: usize, n: usize, packed: &mut [f32]) {
+    debug_assert_eq!(bd.len(), k * n);
+    debug_assert_eq!(packed.len(), packed_b_len(k, n));
+    par_chunks_in(pool, packed, k * NR, |start, panel| {
+        let j0 = (start / (k * NR).max(1)) * NR;
+        let w = NR.min(n - j0);
+        for kk in 0..k {
+            let dst = &mut panel[kk * NR..kk * NR + NR];
+            dst[..w].copy_from_slice(&bd[kk * n + j0..kk * n + j0 + w]);
+            for v in &mut dst[w..] {
+                *v = 0.0;
+            }
+        }
+    });
+}
+
+/// Compute one block of `nrows ≤ MR` output rows against every panel of
+/// a packed B: `out[r, j] = Σ_k a[r·k + kk]·B[kk, j]` (+ `bias[r]` once,
+/// after the reduction), written for all `j in 0..n`.
+///
+/// The k-loop is outermost inside the tile and the accumulators live in
+/// a fixed-size local array, so each output element sees exactly the
+/// sequential-k unfused (or FMA, per `fma`) order — bit-identical to
+/// the dot forms in `tensor/matmul.rs`. Every element of `out` is
+/// overwritten, so callers never need to pre-clear it.
+pub fn gemm_block(
+    a_block: &[f32],
+    k: usize,
+    nrows: usize,
+    packed: &[f32],
+    n: usize,
+    bias: Option<&[f32]>,
+    fma: bool,
+    out: &mut [f32],
+) {
+    debug_assert!(nrows >= 1 && nrows <= MR);
+    debug_assert!(a_block.len() >= nrows * k);
+    debug_assert_eq!(out.len(), nrows * n);
+    debug_assert_eq!(packed.len(), packed_b_len(k, n));
+    let npanels = n.div_ceil(NR);
+    for p in 0..npanels {
+        let panel = &packed[p * k * NR..(p + 1) * k * NR];
+        let j0 = p * NR;
+        let w = NR.min(n - j0);
+        let mut acc = [[0.0f32; NR]; MR];
+        for kk in 0..k {
+            let bv: &[f32; NR] = panel[kk * NR..kk * NR + NR].try_into().unwrap();
+            for r in 0..nrows {
+                let av = a_block[r * k + kk];
+                let arow = &mut acc[r];
+                if fma {
+                    for j in 0..NR {
+                        arow[j] = av.mul_add(bv[j], arow[j]);
+                    }
+                } else {
+                    for j in 0..NR {
+                        arow[j] += av * bv[j];
+                    }
+                }
+            }
+        }
+        for r in 0..nrows {
+            let dst = &mut out[r * n + j0..r * n + j0 + w];
+            match bias {
+                Some(bs) => {
+                    for (j, d) in dst.iter_mut().enumerate() {
+                        *d = acc[r][j] + bs[r];
+                    }
+                }
+                None => dst.copy_from_slice(&acc[r][..w]),
+            }
+        }
+    }
+}
+
+/// Full packed GEMM into a caller-provided output region:
+/// `out (m × n) = A (m × k) · B` with B already in panel form,
+/// parallelised over MR-row blocks on `pool`. `bias`, when given, is a
+/// per-output-row addend of length `m` (the conv bias). Every element of
+/// `out` is written exactly once; no pre-clearing needed.
+pub fn gemm_packed_into(
+    pool: &WorkerPool,
+    a: &[f32],
+    m: usize,
+    k: usize,
+    packed: &[f32],
+    n: usize,
+    bias: Option<&[f32]>,
+    fma: bool,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(out.len(), m * n);
+    if m == 0 || n == 0 {
+        return;
+    }
+    par_chunks_in(pool, out, MR * n, |start, rows| {
+        let i0 = start / n;
+        let nrows = rows.len() / n;
+        gemm_block(
+            &a[i0 * k..(i0 + nrows) * k],
+            k,
+            nrows,
+            packed,
+            n,
+            bias.map(|b| &b[i0..i0 + nrows]),
+            fma,
+            rows,
+        );
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rnum::dot::{dot_strided, dot_strided_fma};
+
+    fn lcg(n: usize, seed: u64) -> Vec<f32> {
+        let mut s = seed;
+        (0..n)
+            .map(|_| {
+                s = s.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                (((s >> 40) as f32) / (1u64 << 24) as f32 - 0.5) * 2.0
+            })
+            .collect()
+    }
+
+    fn dotform(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, fma: bool) -> Vec<f32> {
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                out[i * n + j] = if fma {
+                    dot_strided_fma(&a[i * k..], 1, &b[j..], n, k)
+                } else {
+                    dot_strided(&a[i * k..], 1, &b[j..], n, k)
+                };
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn packing_is_a_pure_relayout() {
+        let pool = WorkerPool::new(3);
+        let (k, n) = (5, 37); // n straddles two panels + a ragged tail
+        let b = lcg(k * n, 7);
+        let mut packed = vec![f32::NAN; packed_b_len(k, n)];
+        pack_b_panels(&pool, &b, k, n, &mut packed);
+        for p in 0..n.div_ceil(NR) {
+            for kk in 0..k {
+                for j in 0..NR {
+                    let got = packed[(p * k + kk) * NR + j];
+                    let want = if p * NR + j < n { b[kk * n + p * NR + j] } else { 0.0 };
+                    assert_eq!(got.to_bits(), want.to_bits(), "p={p} kk={kk} j={j}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn microkernel_matches_dot_strided_bitwise() {
+        let pool = WorkerPool::new(4);
+        // shapes straddling every MR/NR boundary, plus degenerate k
+        for (m, k, n) in [
+            (1usize, 1usize, 1usize),
+            (7, 13, 15),
+            (8, 13, 16),
+            (9, 13, 17),
+            (16, 40, 31),
+            (17, 40, 33),
+            (3, 1, 100),
+            (MR, 64, NR * 3),
+        ] {
+            let a = lcg(m * k, (m * 7 + n) as u64);
+            let b = lcg(k * n, (n * 13 + k) as u64);
+            let mut packed = vec![0.0f32; packed_b_len(k, n)];
+            pack_b_panels(&pool, &b, k, n, &mut packed);
+            for fma in [false, true] {
+                let mut out = vec![f32::NAN; m * n];
+                gemm_packed_into(&pool, &a, m, k, &packed, n, None, fma, &mut out);
+                let want = dotform(&a, &b, m, k, n, fma);
+                assert!(
+                    out.iter().zip(want.iter()).all(|(x, y)| x.to_bits() == y.to_bits()),
+                    "m={m} k={k} n={n} fma={fma}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn bias_is_added_once_after_the_reduction() {
+        let pool = WorkerPool::new(2);
+        let (m, k, n) = (10, 6, 20);
+        let a = lcg(m * k, 1);
+        let b = lcg(k * n, 2);
+        let bias = lcg(m, 3);
+        let mut packed = vec![0.0f32; packed_b_len(k, n)];
+        pack_b_panels(&pool, &b, k, n, &mut packed);
+        let mut out = vec![0.0f32; m * n];
+        gemm_packed_into(&pool, &a, m, k, &packed, n, Some(&bias), false, &mut out);
+        let plain = dotform(&a, &b, m, k, n, false);
+        for i in 0..m {
+            for j in 0..n {
+                let want = plain[i * n + j] + bias[i];
+                assert_eq!(out[i * n + j].to_bits(), want.to_bits(), "i={i} j={j}");
+            }
+        }
+    }
+
+    #[test]
+    fn pool_size_never_changes_bits() {
+        let (m, k, n) = (23, 31, 45);
+        let a = lcg(m * k, 11);
+        let b = lcg(k * n, 12);
+        let run = |lanes: usize| {
+            let pool = WorkerPool::new(lanes);
+            let mut packed = vec![0.0f32; packed_b_len(k, n)];
+            pack_b_panels(&pool, &b, k, n, &mut packed);
+            let mut out = vec![0.0f32; m * n];
+            gemm_packed_into(&pool, &a, m, k, &packed, n, None, false, &mut out);
+            out
+        };
+        let base = run(1);
+        for lanes in [2, 3, 5, 8, 16] {
+            let got = run(lanes);
+            assert!(
+                base.iter().zip(got.iter()).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "lanes={lanes}"
+            );
+        }
+    }
+
+    #[test]
+    fn zero_k_yields_the_empty_sum() {
+        let pool = WorkerPool::new(2);
+        let (m, k, n) = (4, 0, 9);
+        let packed = vec![0.0f32; packed_b_len(k, n)];
+        let mut out = vec![f32::NAN; m * n];
+        gemm_packed_into(&pool, &[], m, k, &packed, n, None, false, &mut out);
+        assert!(out.iter().all(|v| v.to_bits() == 0.0f32.to_bits()));
+    }
+}

@@ -12,25 +12,36 @@
 //! created, sized once from `REPDL_THREADS`); every kernel also has an
 //! `*_in` variant taking an explicit pool for tests, benchmarks and the
 //! `--threads` CLI flag.
+//!
+//! The perf layer (DESIGN.md §6) — the packed register-tiled GEMM
+//! [`microkernel`], the fused im2col convolution pipeline and the
+//! thread-local [`scratch`] arena — is bit-neutral by construction:
+//! packing/im2col are layout-only, tiling reorders only independent
+//! output elements, and scratch contents are always fully overwritten
+//! before use.
 
 pub mod conv;
 pub mod elementwise;
 pub mod matmul;
+pub mod microkernel;
 pub mod par;
 pub mod pool;
 pub mod reduce;
+pub mod scratch;
 pub mod shape;
 #[allow(clippy::module_inception)]
 pub mod tensor;
 
 pub use conv::{
-    avg_pool2d, conv2d, conv2d_direct, conv2d_direct_in, conv2d_im2col, conv2d_im2col_in,
-    conv2d_in, max_pool2d, Conv2dParams,
+    avg_pool2d, avg_pool2d_in, conv2d, conv2d_direct, conv2d_direct_in, conv2d_im2col,
+    conv2d_im2col_in, conv2d_in, im2col, max_pool2d, max_pool2d_in, Conv2dParams,
 };
 pub use matmul::{
-    matmul, matmul_dotform, matmul_dotform_in, matmul_fma, matmul_fma_dotform,
-    matmul_fma_dotform_in, matmul_fma_in, matmul_in, matmul_pairwise, matmul_pairwise_in,
+    matmul, matmul_blocked, matmul_blocked_in, matmul_dotform, matmul_dotform_in, matmul_fma,
+    matmul_fma_dotform, matmul_fma_dotform_in, matmul_fma_in, matmul_in, matmul_packed,
+    matmul_packed_in, matmul_pairwise, matmul_pairwise_in,
 };
+pub use scratch::{scratch_f32, ScratchGuard};
 pub use pool::{default_threads, global_pool, WorkerPool};
 pub use reduce::{
     argmax_last, max_axis, max_axis_in, mean_axis, mean_axis_in, sum_axis, sum_axis_in,

@@ -50,19 +50,18 @@ fn reduce_with_in(
     f: impl Fn(&[f32], usize, usize) -> f32 + Sync, // (data window, stride, len)
 ) -> Result<Tensor> {
     let (_outer, len, inner) = axis_geometry(t, axis)?;
-    let mut out = Tensor::zeros(&reduced_dims(t, axis));
-    if out.numel() == 0 {
-        return Ok(out);
-    }
     let data = t.data();
     let inner1 = inner.max(1);
-    par_chunks_in(pool, out.data_mut(), reduce_chunk(len), |start, c| {
-        for (off, v) in c.iter_mut().enumerate() {
-            let e = start + off; // flat output index = o * inner + i
-            let (o, i) = (e / inner1, e % inner1);
-            let base = o * len * inner + i;
-            *v = f(&data[base..], inner, len);
-        }
+    // every element written exactly once; filled_by adds no extra sweep
+    let out = Tensor::filled_by(&reduced_dims(t, axis), |buf| {
+        par_chunks_in(pool, buf, reduce_chunk(len), |start, c| {
+            for (off, v) in c.iter_mut().enumerate() {
+                let e = start + off; // flat output index = o * inner + i
+                let (o, i) = (e / inner1, e % inner1);
+                let base = o * len * inner + i;
+                *v = f(&data[base..], inner, len);
+            }
+        });
     });
     Ok(out)
 }
@@ -127,26 +126,24 @@ pub fn var_axis(t: &Tensor, axis: usize) -> Result<Tensor> {
 pub fn var_axis_in(pool: &WorkerPool, t: &Tensor, axis: usize) -> Result<Tensor> {
     let (_outer, len, inner) = axis_geometry(t, axis)?;
     let mean = mean_axis_in(pool, t, axis)?;
-    let mut out = Tensor::zeros(&reduced_dims(t, axis));
-    if out.numel() == 0 {
-        return Ok(out);
-    }
     let data = t.data();
     let mean_d = mean.data();
     let inner1 = inner.max(1);
-    par_chunks_in(pool, out.data_mut(), reduce_chunk(len), |start, c| {
-        for (off, v) in c.iter_mut().enumerate() {
-            let e = start + off;
-            let (o, i) = (e / inner1, e % inner1);
-            let base = o * len * inner + i;
-            let mu = mean_d[e];
-            let mut acc = 0.0f32;
-            for k in 0..len {
-                let d = data[base + k * inner] - mu;
-                acc += d * d;
+    let out = Tensor::filled_by(&reduced_dims(t, axis), |buf| {
+        par_chunks_in(pool, buf, reduce_chunk(len), |start, c| {
+            for (off, v) in c.iter_mut().enumerate() {
+                let e = start + off;
+                let (o, i) = (e / inner1, e % inner1);
+                let base = o * len * inner + i;
+                let mu = mean_d[e];
+                let mut acc = 0.0f32;
+                for k in 0..len {
+                    let d = data[base + k * inner] - mu;
+                    acc += d * d;
+                }
+                *v = acc / len as f32;
             }
-            *v = acc / len as f32;
-        }
+        });
     });
     Ok(out)
 }

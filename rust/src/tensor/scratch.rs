@@ -1,0 +1,176 @@
+//! Reusable scratch-buffer arena (allocation elimination, bit-neutral).
+//!
+//! The packed GEMM and the fused im2col convolution need transient
+//! buffers (B panels, im2col columns, batch staging) whose size repeats
+//! from call to call — a serve loop or a training loop would otherwise
+//! pay a fresh heap allocation and a page-fault sweep per step. This
+//! module parks those buffers in a **thread-local** free list: the first
+//! call allocates, every later call of similar size reuses.
+//!
+//! Thread-locality keeps the arena lock-free and compatible with the
+//! worker pool: scratch is always taken and returned on the *caller*
+//! thread (kernels dispatch pool tasks that only borrow slices of it),
+//! so pool workers never touch the arena and concurrent dispatchers
+//! (e.g. several servers sharing one pool) each get their own list.
+//!
+//! **Reproducibility contract.** A scratch buffer's contents are
+//! *unspecified* — typically stale bytes from an earlier call of a
+//! possibly different shape. Every kernel using scratch must write each
+//! element it later reads (the pack routines overwrite their whole
+//! region, including tile padding), so stale state can never reach an
+//! output bit. The `scratch_arena_reuse` tests cross-call this with
+//! shape-alternating kernels and assert bit-equality against fresh
+//! references.
+
+use std::cell::RefCell;
+use std::ops::{Deref, DerefMut};
+
+/// Buffers parked per thread (excess ones are simply freed on drop).
+const MAX_PARKED: usize = 8;
+
+thread_local! {
+    static ARENA: RefCell<Vec<Vec<f32>>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Exclusive lease on a scratch buffer of exactly the requested length.
+/// Dereferences to `[f32]`; returns the buffer to the thread's arena on
+/// drop. Contents on acquisition are unspecified (see module docs).
+pub struct ScratchGuard {
+    buf: Vec<f32>,
+    len: usize,
+}
+
+impl Deref for ScratchGuard {
+    type Target = [f32];
+    fn deref(&self) -> &[f32] {
+        &self.buf[..self.len]
+    }
+}
+
+impl DerefMut for ScratchGuard {
+    fn deref_mut(&mut self) -> &mut [f32] {
+        &mut self.buf[..self.len]
+    }
+}
+
+impl Drop for ScratchGuard {
+    fn drop(&mut self) {
+        let buf = std::mem::take(&mut self.buf);
+        ARENA.with(|a| {
+            let mut a = a.borrow_mut();
+            if a.len() < MAX_PARKED {
+                a.push(buf);
+            } else if let Some(i) = (0..a.len()).min_by_key(|&i| a[i].capacity()) {
+                // full arena: keep the larger buffer, so a burst of tiny
+                // leases can never permanently evict the big pack/im2col
+                // buffers the hot loops rely on
+                if a[i].capacity() < buf.capacity() {
+                    a[i] = buf;
+                }
+            }
+        });
+    }
+}
+
+/// Lease `len` f32s of scratch from the calling thread's arena,
+/// allocating only if no parked buffer is large enough. The returned
+/// slice's contents are unspecified; the caller must write every element
+/// before reading it.
+pub fn scratch_f32(len: usize) -> ScratchGuard {
+    let mut buf = ARENA.with(|a| {
+        let mut a = a.borrow_mut();
+        // Prefer the largest parked buffer: it is the most likely to fit
+        // without regrowing, and keeps the arena converging on the
+        // workload's peak sizes.
+        match (0..a.len()).max_by_key(|&i| a[i].capacity()) {
+            Some(i) => a.swap_remove(i),
+            None => Vec::new(),
+        }
+    });
+    if buf.len() < len {
+        // resize zero-fills only the grown region; reused prefixes keep
+        // stale contents, which the contract makes unobservable
+        buf.resize(len, 0.0);
+    }
+    ScratchGuard { buf, len }
+}
+
+/// Number of buffers currently parked on this thread (observability for
+/// tests and the allocation-count benchmarks).
+pub fn parked_buffers() -> usize {
+    ARENA.with(|a| a.borrow().len())
+}
+
+/// Largest capacity currently parked on this thread (observability for
+/// the eviction policy: big pack/im2col buffers must survive bursts of
+/// small leases).
+pub fn parked_capacity_max() -> usize {
+    ARENA.with(|a| a.borrow().iter().map(|b| b.capacity()).max().unwrap_or(0))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn guard_exposes_exactly_the_requested_len() {
+        let g = scratch_f32(37);
+        assert_eq!(g.len(), 37);
+        let g2 = scratch_f32(0);
+        assert_eq!(g2.len(), 0);
+    }
+
+    #[test]
+    fn buffers_are_reused_across_takes() {
+        // drain whatever earlier tests parked, then check round-trips
+        let drained: Vec<ScratchGuard> =
+            (0..MAX_PARKED + 1).map(|_| scratch_f32(1)).collect();
+        drop(drained);
+        let before = parked_buffers();
+        {
+            let mut g = scratch_f32(1024);
+            g[0] = 1.0;
+            g[1023] = 2.0;
+        } // returned to arena here
+        assert!(parked_buffers() >= before.min(MAX_PARKED - 1));
+        let g = scratch_f32(512); // must fit in the parked 1024 buffer
+        assert_eq!(g.len(), 512);
+    }
+
+    #[test]
+    fn growth_is_handled() {
+        {
+            let _small = scratch_f32(8);
+        }
+        let big = scratch_f32(100_000);
+        assert_eq!(big.len(), 100_000);
+    }
+
+    #[test]
+    fn interleaved_leases_are_distinct_buffers() {
+        let mut a = scratch_f32(64);
+        let mut b = scratch_f32(64);
+        a.fill(1.0);
+        b.fill(2.0);
+        assert!(a.iter().all(|&v| v == 1.0));
+        assert!(b.iter().all(|&v| v == 2.0));
+    }
+
+    #[test]
+    fn arena_is_bounded() {
+        let guards: Vec<ScratchGuard> = (0..MAX_PARKED * 2).map(|_| scratch_f32(16)).collect();
+        drop(guards);
+        assert!(parked_buffers() <= MAX_PARKED);
+    }
+
+    #[test]
+    fn large_buffers_survive_a_full_arena() {
+        // each #[test] runs on its own thread, so the arena starts empty
+        let smalls: Vec<ScratchGuard> = (0..MAX_PARKED).map(|_| scratch_f32(4)).collect();
+        let big = scratch_f32(100_000);
+        drop(smalls); // arena now holds MAX_PARKED small buffers
+        drop(big); // full arena: must displace a small one, not be dropped
+        assert!(parked_capacity_max() >= 100_000);
+        assert!(parked_buffers() <= MAX_PARKED);
+    }
+}

@@ -25,6 +25,28 @@ impl Tensor {
         Tensor { shape, data: vec![v; n] }
     }
 
+    /// Tensor whose contents are produced by `fill`, which receives the
+    /// freshly allocated (zeroed) buffer. This replaces the kernels'
+    /// old `Tensor::zeros` + `buf.fill(0.0)` double-zeroing pattern:
+    /// the allocation is calloc-backed (`vec![0.0; n]` lowers to
+    /// `alloc_zeroed`, i.e. OS zero pages for large buffers — no
+    /// explicit memset pass), and kernels either accumulate straight
+    /// onto the zeros or overwrite every element, so no second zeroing
+    /// sweep ever runs.
+    ///
+    /// Deliberately *not* genuinely uninitialised storage: handing out
+    /// `&mut [f32]` over uninit memory is undefined behaviour
+    /// (`Vec::set_len` over uninit elements), and in a bit-exactness
+    /// crate a fill that missed an element must read back a
+    /// deterministic 0.0, never nondeterministic garbage.
+    pub fn filled_by(dims: &[usize], fill: impl FnOnce(&mut [f32])) -> Self {
+        let shape = Shape::new(dims);
+        let n = shape.numel();
+        let mut data = vec![0.0f32; n];
+        fill(&mut data);
+        Tensor { shape, data }
+    }
+
     /// Build from data (len must equal the shape's element count).
     pub fn from_vec(dims: &[usize], data: Vec<f32>) -> Result<Self> {
         let shape = Shape::new(dims);
@@ -208,6 +230,23 @@ mod tests {
         assert_eq!(tt.dims(), &[3, 2]);
         assert_eq!(tt.at(&[2, 0]), 3.0);
         assert_eq!(tt.at(&[0, 1]), 4.0);
+    }
+
+    #[test]
+    fn filled_by_matches_zeros_plus_fill() {
+        let a = Tensor::filled_by(&[3, 4], |buf| {
+            for (i, v) in buf.iter_mut().enumerate() {
+                *v = i as f32 * 0.5;
+            }
+        });
+        let mut b = Tensor::zeros(&[3, 4]);
+        for (i, v) in b.data_mut().iter_mut().enumerate() {
+            *v = i as f32 * 0.5;
+        }
+        assert!(a.bit_eq(&b));
+        // zero-sized shapes are fine and never invoke writes
+        let e = Tensor::filled_by(&[0, 5], |buf| assert!(buf.is_empty()));
+        assert_eq!(e.numel(), 0);
     }
 
     #[test]

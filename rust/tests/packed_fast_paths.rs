@@ -1,0 +1,179 @@
+//! Conformance suite for the PR-2 perf layer: packed register-tiled
+//! GEMM, the fused im2col convolution pipeline, pooled pooling ops and
+//! the thread-local scratch arena.
+//!
+//! Everything here pins one claim: the fast paths are **bit-identical
+//! by construction** to the reference forms (`matmul_dotform`,
+//! `conv2d_direct`) — packing/im2col emission are layout-only, register
+//! tiling reorders only independent output elements, and scratch reuse
+//! can never leak stale state into an output bit because every consumed
+//! slot is overwritten first.
+
+use repdl::proptest::{forall, Gen};
+use repdl::tensor::{
+    avg_pool2d_in, conv2d_direct_in, conv2d_im2col_in, matmul_dotform_in, matmul_packed_in,
+    max_pool2d_in, Conv2dParams, Tensor, WorkerPool,
+};
+
+const POOL_SIZES: [usize; 6] = [1, 2, 3, 5, 8, 16];
+
+fn lcg(dims: &[usize], seed: u64) -> Tensor {
+    let n: usize = dims.iter().product();
+    let mut s = seed;
+    Tensor::from_vec(
+        dims,
+        (0..n)
+            .map(|_| {
+                s = s.wrapping_mul(6364136223846793005).wrapping_add(777);
+                (((s >> 40) as f32) / (1u64 << 24) as f32 - 0.5) * 2.0
+            })
+            .collect(),
+    )
+    .unwrap()
+}
+
+#[test]
+fn prop_packed_gemm_equals_dotform_bitwise() {
+    // randomized shapes biased to straddle the MR=8 / NR=16 tile
+    // boundaries (the ±1 neighbourhoods of multiples)
+    let pool = WorkerPool::new(5);
+    forall(
+        23,
+        40,
+        |g: &mut Gen| {
+            let near = |g: &mut Gen, step: usize| {
+                let base = (1 + g.below(4)) * step; // a multiple of the tile step
+                (base + g.below(3)).saturating_sub(1).max(1) // ±1 around it
+            };
+            let m = near(g, 8);
+            let n = near(g, 16);
+            let k = 1 + g.below(60);
+            let a = g.f32_vec(m * k, 2.0);
+            let b = g.f32_vec(k * n, 2.0);
+            (m, k, n, a, b)
+        },
+        |(m, k, n, a, b)| {
+            let at = Tensor::from_vec(&[*m, *k], a.clone()).unwrap();
+            let bt = Tensor::from_vec(&[*k, *n], b.clone()).unwrap();
+            let packed = matmul_packed_in(&pool, &at, &bt).unwrap();
+            let dotform = matmul_dotform_in(&pool, &at, &bt).unwrap();
+            packed.bit_eq(&dotform)
+        },
+    );
+}
+
+#[test]
+fn prop_fused_conv_equals_direct_bitwise() {
+    // random conv geometries (stride/padding included) — output spatial
+    // sizes land on both sides of the NR panel width, O straddles MR
+    let pool = WorkerPool::new(4);
+    forall(
+        29,
+        25,
+        |g: &mut Gen| {
+            let b = 1 + g.below(3);
+            let c = 1 + g.below(4);
+            let hw = 3 + g.below(8);
+            let o = 1 + g.below(12);
+            let kk = 1 + g.below(3); // hw ≥ 3, so the kernel always fits
+            let stride = 1 + g.below(2);
+            let padding = g.below(2);
+            let x = g.f32_vec(b * c * hw * hw, 2.0);
+            let w = g.f32_vec(o * c * kk * kk, 1.0);
+            let bias = g.f32_vec(o, 1.0);
+            (b, c, hw, o, kk, stride, padding, x, w, bias)
+        },
+        |(b, c, hw, o, kk, stride, padding, x, w, bias)| {
+            let xt = Tensor::from_vec(&[*b, *c, *hw, *hw], x.clone()).unwrap();
+            let wt = Tensor::from_vec(&[*o, *c, *kk, *kk], w.clone()).unwrap();
+            let bt = Tensor::from_vec(&[*o], bias.clone()).unwrap();
+            let p = Conv2dParams { stride: *stride, padding: *padding };
+            let direct = conv2d_direct_in(&pool, &xt, &wt, Some(&bt), p);
+            let fused = conv2d_im2col_in(&pool, &xt, &wt, Some(&bt), p);
+            match (direct, fused) {
+                (Ok(d), Ok(f)) => d.bit_eq(&f),
+                // kernel larger than padded input: both must refuse
+                (Err(_), Err(_)) => true,
+                _ => false,
+            }
+        },
+    );
+}
+
+#[test]
+fn packed_gemm_pool_size_invariance() {
+    let a = lcg(&[33, 48], 1);
+    let b = lcg(&[48, 49], 2);
+    let base = matmul_packed_in(&WorkerPool::new(1), &a, &b).unwrap();
+    for lanes in POOL_SIZES {
+        let pool = WorkerPool::new(lanes);
+        assert!(
+            base.bit_eq(&matmul_packed_in(&pool, &a, &b).unwrap()),
+            "packed GEMM lanes={lanes}"
+        );
+    }
+}
+
+#[test]
+fn pooling_ops_pool_size_invariance() {
+    let x = lcg(&[3, 4, 12, 12], 3);
+    for k in [1usize, 2, 3, 4, 6] {
+        let base_max = max_pool2d_in(&WorkerPool::new(1), &x, k).unwrap();
+        let base_avg = avg_pool2d_in(&WorkerPool::new(1), &x, k).unwrap();
+        for lanes in POOL_SIZES {
+            let pool = WorkerPool::new(lanes);
+            assert!(
+                base_max.bit_eq(&max_pool2d_in(&pool, &x, k).unwrap()),
+                "max_pool2d k={k} lanes={lanes}"
+            );
+            assert!(
+                base_avg.bit_eq(&avg_pool2d_in(&pool, &x, k).unwrap()),
+                "avg_pool2d k={k} lanes={lanes}"
+            );
+        }
+    }
+}
+
+#[test]
+fn scratch_arena_reuse_is_bit_clean_across_shapes() {
+    // Alternate kernels and shapes on one thread so every call reuses
+    // the arena buffers the previous (different-shape) call dirtied;
+    // each result must still equal a reference computed by the
+    // scratch-free dot form. A single stale slot reaching the output
+    // would break bit-equality.
+    let pool = WorkerPool::new(3);
+    let shapes = [(9usize, 40usize, 33usize), (17, 7, 65), (3, 90, 5), (24, 24, 24)];
+    for round in 0..3u64 {
+        for (i, &(m, k, n)) in shapes.iter().enumerate() {
+            let a = lcg(&[m, k], round * 100 + i as u64);
+            let b = lcg(&[k, n], round * 100 + 50 + i as u64);
+            let fast = matmul_packed_in(&pool, &a, &b).unwrap();
+            let want = matmul_dotform_in(&pool, &a, &b).unwrap();
+            assert!(fast.bit_eq(&want), "round={round} shape=({m},{k},{n})");
+        }
+        // interleave a conv so GEMM pack buffers and im2col buffers
+        // trade places in the arena
+        let x = lcg(&[2, 3, 9, 9], round + 900);
+        let w = lcg(&[5, 3, 3, 3], round + 950);
+        let p = Conv2dParams { stride: 1, padding: 1 };
+        let fused = conv2d_im2col_in(&pool, &x, &w, None, p).unwrap();
+        let direct = conv2d_direct_in(&pool, &x, &w, None, p).unwrap();
+        assert!(fused.bit_eq(&direct), "conv round={round}");
+    }
+}
+
+#[test]
+fn scratch_guard_len_and_reuse_semantics() {
+    use repdl::tensor::scratch_f32;
+    {
+        let mut g = scratch_f32(257);
+        assert_eq!(g.len(), 257);
+        g.fill(42.0);
+    }
+    // a later, smaller lease may see stale contents — the contract is
+    // only that the *length* is exact and the buffer is exclusively ours
+    let g2 = scratch_f32(100);
+    assert_eq!(g2.len(), 100);
+    let g3 = scratch_f32(1000);
+    assert_eq!(g3.len(), 1000);
+}

@@ -11,9 +11,9 @@
 use repdl::coordinator::DeterministicServer;
 use repdl::tensor::par::par_chunks_in;
 use repdl::tensor::{
-    conv2d_direct_in, conv2d_im2col_in, conv2d_in, matmul_dotform_in, matmul_fma_dotform_in,
-    matmul_fma_in, matmul_in, matmul_pairwise_in, max_axis_in, sum_axis_in, sum_axis_pairwise_in,
-    var_axis_in, Conv2dParams, Tensor, WorkerPool,
+    conv2d_direct_in, conv2d_im2col_in, conv2d_in, matmul_blocked_in, matmul_dotform_in,
+    matmul_fma_dotform_in, matmul_fma_in, matmul_in, matmul_packed_in, matmul_pairwise_in,
+    max_axis_in, sum_axis_in, sum_axis_pairwise_in, var_axis_in, Conv2dParams, Tensor, WorkerPool,
 };
 
 const POOL_SIZES: [usize; 6] = [1, 2, 3, 5, 8, 16];
@@ -48,14 +48,30 @@ fn gemm_bit_identical_for_every_pool_size() {
         let r_pw = matmul_pairwise_in(&base, &a, &b).unwrap();
         let r_dot = matmul_dotform_in(&base, &a, &b).unwrap();
         let r_fma_dot = matmul_fma_dotform_in(&base, &a, &b).unwrap();
-        // blocked kernels == dot forms even sequentially
-        assert!(r_seq.bit_eq(&r_dot), "blocked != dotform at ({m},{k},{n})");
-        assert!(r_fma.bit_eq(&r_fma_dot), "blocked fma != fma dotform at ({m},{k},{n})");
+        // routed, blocked and packed kernels == dot form even sequentially
+        assert!(r_seq.bit_eq(&r_dot), "routed != dotform at ({m},{k},{n})");
+        assert!(
+            matmul_blocked_in(&base, &a, &b).unwrap().bit_eq(&r_dot),
+            "blocked != dotform at ({m},{k},{n})"
+        );
+        assert!(
+            matmul_packed_in(&base, &a, &b).unwrap().bit_eq(&r_dot),
+            "packed != dotform at ({m},{k},{n})"
+        );
+        assert!(r_fma.bit_eq(&r_fma_dot), "routed fma != fma dotform at ({m},{k},{n})");
         for lanes in POOL_SIZES {
             let pool = WorkerPool::new(lanes);
             assert!(
                 r_seq.bit_eq(&matmul_in(&pool, &a, &b).unwrap()),
                 "matmul ({m},{k},{n}) lanes={lanes}"
+            );
+            assert!(
+                r_seq.bit_eq(&matmul_packed_in(&pool, &a, &b).unwrap()),
+                "matmul_packed ({m},{k},{n}) lanes={lanes}"
+            );
+            assert!(
+                r_seq.bit_eq(&matmul_blocked_in(&pool, &a, &b).unwrap()),
+                "matmul_blocked ({m},{k},{n}) lanes={lanes}"
             );
             assert!(
                 r_fma.bit_eq(&matmul_fma_in(&pool, &a, &b).unwrap()),
