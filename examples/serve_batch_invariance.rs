@@ -18,7 +18,7 @@ fn main() {
     let d = 256;
     let n = 64;
     let w = uniform_tensor(&[d, 16], -0.3, 0.3, 5);
-    let srv = DeterministicServer::new(w, 64);
+    let srv = DeterministicServer::new(w, 64).expect("rank-2 weights");
     let queue: Vec<Tensor> = (0..n)
         .map(|i| uniform_tensor(&[d], -1.0, 1.0, 100 + i as u64))
         .collect();

@@ -22,10 +22,13 @@
 
 use repdl::baseline::{baseline_matmul, baseline_softmax_rows, PlatformProfile};
 use repdl::bench_harness::{
-    allocs_during, bench, bench_json_path, row, row_rate, section, write_bench_json,
-    CountingAllocator, JsonObj,
+    allocs_during, bench, bench_json_path, bench_threads, row, row_rate, section,
+    write_bench_json, CountingAllocator, JsonObj,
 };
-use repdl::coordinator::{DeterministicServer, NumericsMode, Trainer, TrainerConfig};
+use repdl::coordinator::{
+    DeterministicServer, NumericsMode, ServeScheduler, Trainer, TrainerConfig,
+};
+use std::sync::Arc;
 use repdl::nn::softmax_rows;
 use repdl::rng::uniform_tensor;
 use repdl::tensor::par::par_chunks_spawn;
@@ -215,18 +218,19 @@ fn main() {
     // ---------------- serving throughput ----------------
     section("E5: serving throughput (prepacked pooled batch dispatch)");
     let w = uniform_tensor(&[256, 16], -0.3, 0.3, 5);
-    let srv = DeterministicServer::new(w, 64);
+    let server = Arc::new(DeterministicServer::new(w, 64).unwrap());
     let queue: Vec<Tensor> = (0..64)
         .map(|i| uniform_tensor(&[256], -1.0, 1.0, 300 + i as u64))
         .collect();
     let mut serve_entries = Vec::new();
     for l in [1usize, lanes.max(2)] {
         let pl = WorkerPool::new(l);
-        let t = srv.throughput_report(&pl, &queue, samples).unwrap();
-        let (allocs, _) = allocs_during(|| srv.process_repro_in(&pl, &queue).unwrap());
+        let t = server.throughput_report(&pl, &queue, samples).unwrap();
+        let (allocs, _) = allocs_during(|| server.process_repro_in(&pl, &queue).unwrap());
         row(format!("serve req/s, pool={l}").as_str(), format!("{:.0} req/s", t.req_per_s));
         serve_entries.push(
             JsonObj::new()
+                .s("kernel", "batch_loop")
                 .int("requests", t.requests as u64)
                 .int("pool_lanes", l as u64)
                 .int("d_in", 256)
@@ -236,8 +240,54 @@ fn main() {
                 .int("allocs_per_call", allocs),
         );
     }
-    let stats = bench("serve 64 reqs (global pool)", samples, || srv.process_repro(&queue).unwrap());
+    let stats = bench("serve 64 reqs (global pool)", samples, || {
+        server.process_repro(&queue).unwrap()
+    });
     row_rate("serve throughput (global pool)", &stats, queue.len(), "req");
+
+    // scheduler grid: multi-client dynamic batching over sharded
+    // replicas (one shared server + one shared pool handle). Each sample
+    // is one full replay: every client submits its ticket-interleaved
+    // slice and waits for all of its responses.
+    section("E5: serve scheduler — shards × concurrent clients");
+    let sched_grid: &[(usize, usize)] =
+        if smoke { &[(1, 2), (2, 4)] } else { &[(1, 1), (1, 4), (2, 4), (4, 8)] };
+    let batch_window = 16usize;
+    for &(shards, clients) in sched_grid {
+        let sched = ServeScheduler::sharded(
+            Arc::clone(&server),
+            shards,
+            batch_window,
+            WorkerPool::shared(lanes),
+        )
+        .unwrap();
+        let replay = |c: usize| {
+            sched.replay_slice(&queue, c, clients).unwrap();
+        };
+        let st = bench_threads(
+            &format!("serve sched shards={shards} clients={clients}"),
+            samples,
+            clients,
+            replay,
+        );
+        // allocation count for one full single-caller replay (the
+        // multi-threaded grid timing above measures wall-clock only)
+        let (allocs, _) = allocs_during(|| sched.process_all(&queue).unwrap());
+        serve_entries.push(
+            JsonObj::new()
+                .s("kernel", "scheduler")
+                .int("requests", queue.len() as u64)
+                .int("shards", shards as u64)
+                .int("clients", clients as u64)
+                .int("batch_window", batch_window as u64)
+                .int("pool_lanes", lanes as u64)
+                .int("d_in", 256)
+                .int("d_out", 16)
+                .num("median_ns", st.median_ns)
+                .num("req_per_s", st.per_sec(queue.len()))
+                .int("allocs_per_call", allocs),
+        );
+    }
     write_bench_json(&bench_json_path("serve"), "serve", &serve_entries)
         .expect("write BENCH_serve.json");
 

@@ -12,7 +12,7 @@ fn main() {
     let d = 256;
     let n = 64;
     let w = uniform_tensor(&[d, 16], -0.3, 0.3, 5);
-    let srv = DeterministicServer::new(w, 64);
+    let srv = DeterministicServer::new(w, 64).unwrap();
     let queue: Vec<Tensor> = (0..n)
         .map(|i| uniform_tensor(&[d], -1.0, 1.0, 100 + i as u64))
         .collect();
@@ -31,7 +31,7 @@ fn main() {
     }
 
     section("E7: serving throughput (64 requests, max_batch 16)");
-    let srv16 = DeterministicServer::new(uniform_tensor(&[d, 16], -0.3, 0.3, 5), 16);
+    let srv16 = DeterministicServer::new(uniform_tensor(&[d, 16], -0.3, 0.3, 5), 16).unwrap();
     let s = bench("repdl path", 7, || srv16.process_repro(&queue).unwrap());
     let p = PlatformProfile::zoo()[2];
     let b = bench("baseline path", 7, || srv16.process_baseline(&queue, &p).unwrap());

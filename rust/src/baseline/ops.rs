@@ -98,6 +98,13 @@ pub fn baseline_softmax_rows(x: &Tensor, p: &PlatformProfile) -> Result<Tensor> 
     if d.len() != 2 {
         return Err(Error::shape("baseline_softmax_rows: want rank 2"));
     }
+    if d[1] == 0 {
+        // same degenerate-shape policy as nn::softmax_rows: a row of no
+        // logits is a shape error, not a w[0] panic
+        return Err(Error::shape(format!(
+            "baseline_softmax_rows: zero-length rows in {d:?}"
+        )));
+    }
     let (rows, c) = (d[0], d[1]);
     let width = effective_width(p, rows);
     let mut out = Tensor::zeros(d);

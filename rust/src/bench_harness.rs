@@ -43,6 +43,25 @@ impl Stats {
     }
 }
 
+/// Shared stats tail: sort the samples, derive median/min/MAD, print
+/// the aligned result row (one format for every measurement helper).
+fn summarize(name: &str, mut xs: Vec<f64>, samples: usize) -> Stats {
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = xs[xs.len() / 2];
+    let min = xs[0];
+    let mut devs: Vec<f64> = xs.iter().map(|x| (x - median).abs()).collect();
+    devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mad = devs[devs.len() / 2];
+    let s = Stats { median_ns: median, min_ns: min, mad_ns: mad, samples };
+    println!(
+        "{name:<46} {:>12} ± {:<10} (min {})",
+        Stats::human(s.median_ns),
+        Stats::human(s.mad_ns),
+        Stats::human(s.min_ns)
+    );
+    s
+}
+
 /// Measure `f`, autoscaling iterations so each sample is ≳2 ms.
 pub fn bench<R>(name: &str, samples: usize, mut f: impl FnMut() -> R) -> Stats {
     // warmup + iteration scaling
@@ -58,20 +77,32 @@ pub fn bench<R>(name: &str, samples: usize, mut f: impl FnMut() -> R) -> Stats {
         }
         xs.push(t.elapsed().as_nanos() as f64 / iters as f64);
     }
-    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let median = xs[xs.len() / 2];
-    let min = xs[0];
-    let mut devs: Vec<f64> = xs.iter().map(|x| (x - median).abs()).collect();
-    devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let mad = devs[devs.len() / 2];
-    let s = Stats { median_ns: median, min_ns: min, mad_ns: mad, samples };
-    println!(
-        "{name:<46} {:>12} ± {:<10} (min {})",
-        Stats::human(s.median_ns),
-        Stats::human(s.mad_ns),
-        Stats::human(s.min_ns)
-    );
-    s
+    summarize(name, xs, samples)
+}
+
+/// Measure a concurrent workload: each sample wall-clocks `threads`
+/// scoped client threads all running `f(thread_index)` to completion
+/// (no iteration autoscaling — one sample is one full multi-client
+/// replay, the unit the serve-scheduler benchmarks care about).
+pub fn bench_threads(
+    name: &str,
+    samples: usize,
+    threads: usize,
+    f: impl Fn(usize) + Sync,
+) -> Stats {
+    let threads = threads.max(1);
+    let mut xs = Vec::with_capacity(samples.max(1));
+    for _ in 0..samples.max(1) {
+        let t = Instant::now();
+        std::thread::scope(|s| {
+            for tid in 0..threads {
+                let f = &f;
+                s.spawn(move || f(tid));
+            }
+        });
+        xs.push(t.elapsed().as_nanos().max(1) as f64);
+    }
+    summarize(name, xs, samples.max(1))
 }
 
 /// Print a section header.
@@ -269,6 +300,19 @@ mod tests {
         std::fs::remove_file(path).ok();
         assert!(doc.contains("\"bench\": \"gemm\""));
         assert!(doc.contains("{\"kernel\":\"a\",\"n\":1}"));
+    }
+
+    #[test]
+    fn bench_threads_runs_every_client() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let hits: Vec<AtomicUsize> = (0..4).map(|_| AtomicUsize::new(0)).collect();
+        let st = bench_threads("bench_threads smoke", 2, 4, |tid| {
+            hits[tid].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(st.median_ns > 0.0);
+        for h in &hits {
+            assert_eq!(h.load(Ordering::Relaxed), 2); // once per sample
+        }
     }
 
     #[test]

@@ -46,6 +46,13 @@ impl Args {
         self.flags.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
 
+    /// Typed flag with default, clamped to at least `min` — for count
+    /// flags where 0 is meaningless (`--shards`, `--batch-window`): the
+    /// serve scheduler needs ≥ 1 replica and a ≥ 1 request window.
+    pub fn get_usize_at_least(&self, key: &str, default: usize, min: usize) -> usize {
+        self.get_usize(key, default).max(min)
+    }
+
     /// Typed flag with default.
     pub fn get_u64(&self, key: &str, default: u64) -> u64 {
         self.flags.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
@@ -102,6 +109,14 @@ mod tests {
         assert_eq!(a.get_usize("steps", 42), 42);
         assert_eq!(a.get_str("mode", "repro"), "repro");
         assert!(!a.has("verbose"));
+    }
+
+    #[test]
+    fn at_least_clamp() {
+        let a = p("serve --shards 0 --batch-window 7");
+        assert_eq!(a.get_usize_at_least("shards", 1, 1), 1);
+        assert_eq!(a.get_usize_at_least("batch-window", 16, 1), 7);
+        assert_eq!(p("serve").get_usize_at_least("shards", 2, 1), 2);
     }
 
     #[test]

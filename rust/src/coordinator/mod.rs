@@ -12,6 +12,9 @@ pub mod trainer;
 pub mod verifier;
 
 pub use hashing::{hash_curve, hash_params, hex};
-pub use serve::{DeterministicServer, ServeReport, ServeThroughput};
+pub use serve::{
+    BatchTrace, DeterministicServer, Pending, ServeReplica, ServeReport, ServeScheduler,
+    ServeThroughput,
+};
 pub use trainer::{NumericsMode, TrainReport, Trainer, TrainerConfig};
 pub use verifier::{compare_runs, first_divergence, Comparison};

@@ -1,0 +1,30 @@
+//! Deterministic inference serving subsystem — the §2.2.2 "dynamic
+//! batching" hazard and RepDL's answer (experiment E7), grown to a
+//! concurrent, sharded serving stack.
+//!
+//! A serving system batches whatever requests are in the queue. The same
+//! request can therefore run in a batch of 1 today and 64 tomorrow.
+//! RepDL inference is **batch-size invariant**: every output row is an
+//! independent fixed-order reduction, so a request's bits don't depend on
+//! its batch-mates. The conventional baseline dispatches kernels by
+//! problem size (like cuDNN), so its per-request bits change with batch
+//! size — [`ServeReport`] quantifies that.
+//!
+//! The subsystem has two layers (DESIGN.md §7):
+//!
+//! * [`replica`] — the model replica: [`DeterministicServer`] (weights
+//!   pre-packed once into microkernel panels, scratch-staged pooled
+//!   batch GEMM) and [`ServeReplica`], a replica bound to a shareable
+//!   [`crate::tensor::PoolHandle`].
+//! * [`scheduler`] — [`ServeScheduler`], the deterministic
+//!   dynamic-batching front end: concurrent clients submit requests,
+//!   each is stamped with a monotone **ticket**, batch composition and
+//!   shard choice (`ticket % shards`) are pure functions of ticket
+//!   numbers — never of thread timing — and responses come back in
+//!   ticket order.
+
+pub mod replica;
+pub mod scheduler;
+
+pub use replica::{DeterministicServer, ServeReplica, ServeReport, ServeThroughput};
+pub use scheduler::{BatchTrace, Pending, ServeScheduler};

@@ -1,25 +1,23 @@
-//! Deterministic inference serving — the §2.2.2 "dynamic batching"
-//! hazard and RepDL's answer (experiment E7).
+//! Model replica: the deterministic server core and its pool binding.
 //!
-//! A serving system batches whatever requests are in the queue. The same
-//! request can therefore run in a batch of 1 today and 64 tomorrow.
-//! RepDL inference is **batch-size invariant**: every output row is an
-//! independent fixed-order reduction, so a request's bits don't depend on
-//! its batch-mates. The conventional baseline dispatches kernels by
-//! problem size (like cuDNN), so its per-request bits change with batch
-//! size — [`ServeReport`] quantifies that.
+//! A replica is one copy of the model able to execute batches. All
+//! numerics live here; the scheduler (sibling module) only decides
+//! *which* requests form a batch and *which* replica runs it — both pure
+//! functions of ticket numbers, so the split cannot affect bits.
 
 use crate::baseline::{baseline_matmul, PlatformProfile};
 use crate::bench_harness::bench;
 use crate::tensor::microkernel::{gemm_packed_into, pack_b_panels, packed_b_len};
 use crate::tensor::pool::global_pool;
-use crate::tensor::{scratch_f32, Tensor, WorkerPool};
+use crate::tensor::{scratch_f32, PoolHandle, Tensor, WorkerPool};
 use crate::{Error, Result};
+use std::sync::Arc;
 
 /// Reject a request whose row length cannot feed the weight matrix —
-/// shared by the repro and baseline batching loops so malformed input
-/// yields the same error on both paths (never a panic).
-fn check_request(r: &Tensor, d_in: usize) -> Result<()> {
+/// shared by the repro and baseline batching loops *and* the scheduler's
+/// submit gate, so malformed input yields the same error on every path
+/// (never a panic).
+pub(super) fn check_request(r: &Tensor, d_in: usize) -> Result<()> {
     if r.numel() != d_in {
         return Err(Error::shape(format!(
             "serve: request has {} elements, weights want {d_in}",
@@ -66,14 +64,32 @@ pub struct ServeThroughput {
 }
 
 impl DeterministicServer {
-    /// New server. Packs the weight matrix into microkernel B panels
-    /// once, up front (layout-only — cannot change any output bit).
-    pub fn new(weights: Tensor, max_batch: usize) -> Self {
-        let d_in = weights.dims()[0];
-        let d_out = weights.dims()[1];
+    /// New server. Fallible: non-rank-2 weights are a shape *error* (the
+    /// old constructor indexed `dims()[0]`/`[1]` unchecked and panicked
+    /// — same error-not-panic policy as [`check_request`]). Packs the
+    /// weight matrix into microkernel B panels once, up front
+    /// (layout-only — cannot change any output bit).
+    pub fn new(weights: Tensor, max_batch: usize) -> Result<Self> {
+        let d = weights.dims();
+        if d.len() != 2 {
+            return Err(Error::shape(format!(
+                "serve: weights must be rank 2 (in, out), got {d:?}"
+            )));
+        }
+        let (d_in, d_out) = (d[0], d[1]);
         let mut packed_w = vec![0.0f32; packed_b_len(d_in, d_out)];
         pack_b_panels(global_pool(), weights.data(), d_in, d_out, &mut packed_w);
-        DeterministicServer { weights, max_batch, packed_w }
+        Ok(DeterministicServer { weights, max_batch, packed_w })
+    }
+
+    /// Input feature count (weight rows).
+    pub fn d_in(&self) -> usize {
+        self.weights.dims()[0]
+    }
+
+    /// Output feature count (weight columns).
+    pub fn d_out(&self) -> usize {
+        self.weights.dims()[1]
     }
 
     /// Process a queue in arrival order, batching up to `max_batch`.
@@ -93,8 +109,8 @@ impl DeterministicServer {
     /// and for any pool size (asserted in tests and the
     /// `pool_invariance` suite).
     pub fn process_repro_in(&self, pool: &WorkerPool, queue: &[Tensor]) -> Result<Vec<Tensor>> {
-        let d_in = self.weights.dims()[0];
-        let d_out = self.weights.dims()[1];
+        let d_in = self.d_in();
+        let d_out = self.d_out();
         let mb = self.max_batch.max(1);
         let packed = &self.packed_w; // packed once at construction
         let mut stage = scratch_f32(mb * d_in);
@@ -132,8 +148,8 @@ impl DeterministicServer {
         queue: &[Tensor],
         f: impl Fn(&Tensor) -> Result<Tensor>,
     ) -> Result<Vec<Tensor>> {
-        let d_in = self.weights.dims()[0];
-        let d_out = self.weights.dims()[1];
+        let d_in = self.d_in();
+        let d_out = self.d_out();
         let mut outs = Vec::with_capacity(queue.len());
         for chunk in queue.chunks(self.max_batch.max(1)) {
             let mut x = Tensor::zeros(&[chunk.len(), d_in]);
@@ -210,6 +226,41 @@ impl DeterministicServer {
     }
 }
 
+/// One scheduler shard: a [`DeterministicServer`] bound to the
+/// [`WorkerPool`] its batches dispatch on. Both sides are shareable
+/// handles — several replicas can serve the same `Arc`'d server (one
+/// packed weight copy, zero per-replica packing) and can share one pool
+/// (concurrent dispatchers are supported by [`WorkerPool`]) or own
+/// private pools; either choice is bit-neutral because pool size never
+/// changes kernel bits.
+pub struct ServeReplica {
+    server: Arc<DeterministicServer>,
+    pool: PoolHandle,
+}
+
+impl ServeReplica {
+    /// Bind a shared server to a (shareable) pool handle.
+    pub fn new(server: Arc<DeterministicServer>, pool: PoolHandle) -> ServeReplica {
+        ServeReplica { server, pool }
+    }
+
+    /// The model this replica serves.
+    pub fn server(&self) -> &DeterministicServer {
+        &self.server
+    }
+
+    /// The pool this replica's batches dispatch on.
+    pub fn pool(&self) -> &WorkerPool {
+        &self.pool
+    }
+
+    /// Execute one batch on this replica's pool (one output row per
+    /// request, bit-identical to `matmul(x, W)` for any pool size).
+    pub fn process(&self, batch: &[Tensor]) -> Result<Vec<Tensor>> {
+        self.server.process_repro_in(&self.pool, batch)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -236,7 +287,7 @@ mod tests {
     #[test]
     fn repro_path_is_batch_invariant() {
         let w = crate::rng::uniform_tensor(&[256, 8], -0.3, 0.3, 5);
-        let srv = DeterministicServer::new(w, 16);
+        let srv = DeterministicServer::new(w, 16).unwrap();
         let q = queue(50, 256);
         let p = PlatformProfile::zoo()[4]; // gpu-warp32, size dispatch
         let rep = srv.batch_invariance_report(&q, &[1, 4, 16, 50], &p).unwrap();
@@ -250,7 +301,7 @@ mod tests {
     #[test]
     fn pooled_path_is_bit_identical_and_pool_size_invariant() {
         let w = crate::rng::uniform_tensor(&[64, 8], -0.3, 0.3, 6);
-        let srv = DeterministicServer::new(w, 8);
+        let srv = DeterministicServer::new(w, 8).unwrap();
         let q = queue(21, 64);
         let global = srv.process_repro(&q).unwrap();
         for lanes in [1usize, 2, 5, 8] {
@@ -265,7 +316,7 @@ mod tests {
     #[test]
     fn throughput_report_counts_requests() {
         let w = crate::rng::uniform_tensor(&[32, 4], -0.3, 0.3, 8);
-        let srv = DeterministicServer::new(w, 16);
+        let srv = DeterministicServer::new(w, 16).unwrap();
         let q = queue(12, 32);
         let pool = WorkerPool::new(2);
         let t = srv.throughput_report(&pool, &q, 3).unwrap();
@@ -277,13 +328,42 @@ mod tests {
     #[test]
     fn outputs_match_direct_compute() {
         let w = crate::rng::uniform_tensor(&[16, 4], -0.5, 0.5, 9);
-        let srv = DeterministicServer::new(w.clone(), 3);
+        let srv = DeterministicServer::new(w.clone(), 3).unwrap();
         let q = queue(7, 16);
         let outs = srv.process_repro(&q).unwrap();
         for (r, o) in q.iter().zip(outs.iter()) {
             let x = r.reshape(&[1, 16]).unwrap();
             let want = matmul(&x, &w).unwrap();
             assert_eq!(o.data(), want.data());
+        }
+    }
+
+    #[test]
+    fn non_rank2_weights_error_instead_of_panicking() {
+        for dims in [&[16][..], &[2, 3, 4][..], &[][..]] {
+            let w = Tensor::zeros(dims);
+            assert!(
+                DeterministicServer::new(w, 8).is_err(),
+                "rank-{} weights must be a shape error",
+                dims.len()
+            );
+        }
+    }
+
+    #[test]
+    fn replicas_share_one_server_and_one_pool() {
+        let w = crate::rng::uniform_tensor(&[32, 4], -0.5, 0.5, 10);
+        let server = Arc::new(DeterministicServer::new(w, 8).unwrap());
+        let pool = WorkerPool::shared(3);
+        let q = queue(9, 32);
+        let want = server.process_repro(&q).unwrap();
+        let r1 = ServeReplica::new(Arc::clone(&server), Arc::clone(&pool));
+        let r2 = ServeReplica::new(Arc::clone(&server), pool);
+        for rep in [&r1, &r2] {
+            let got = rep.process(&q).unwrap();
+            for (a, b) in want.iter().zip(got.iter()) {
+                assert!(a.bit_eq(b));
+            }
         }
     }
 }

@@ -1,0 +1,531 @@
+//! Deterministic dynamic-batching scheduler.
+//!
+//! The hazard (paper §2.2.2, and the serving-time analysis of
+//! arXiv 2511.17826): batch composition in a production server depends
+//! on *when* requests arrive relative to each other and to the
+//! dispatcher — inherently racy state that conventional stacks let leak
+//! into numerics via size-dispatched kernels. RepDL's kernels are batch
+//! invariant, so any composition yields the same per-request bits; this
+//! scheduler closes the remaining gap by making the composition itself
+//! **trace-reproducible**:
+//!
+//! * **Tickets, not timestamps.** Every accepted request is stamped with
+//!   a monotone ticket under one gate lock, and is enqueued to its shard
+//!   *under that same lock*, so each shard's queue is always in ticket
+//!   order. Arrival order is thereby *defined* as ticket order — the one
+//!   racy event (who wins the gate) is captured in the ticket and never
+//!   consulted again.
+//! * **Pure batch composition.** Shard choice is `ticket % shards`;
+//!   within a shard, every flush point is a *cut* segmenting the ticket
+//!   sequence, and each segment is dispatched in consecutive
+//!   `batch_window`-sized chunks (the segment tail, and the close tail,
+//!   are the only partial batches). Composition is a pure function of
+//!   (ticket sequence, shards, batch_window, flush points) — never of
+//!   dispatcher wake-ups or thread timing: cuts are queued rather than
+//!   coalesced and are honoured *before* the full-window rule, so a
+//!   dispatcher that sleeps through a flush-then-more-submissions
+//!   interleaving still emits exactly the segmented batches.
+//! * **Bit-neutral sharding.** Which replica executes a batch cannot
+//!   change output bits (pool-size and batch invariance, asserted by
+//!   `tests/serve_scheduler.rs` across shard counts {1, 2, 4}), so
+//!   `ticket % shards` is chosen for trace reproducibility, not
+//!   numerics.
+//! * **Responses in ticket order.** Each request carries its own
+//!   response channel; [`ServeScheduler::process_all`] returns outputs
+//!   indexed by ticket.
+//!
+//! Requests are validated at submit time (before a ticket is consumed),
+//! so a malformed request errors out on its own — it can never poison a
+//! batch or shift another request's ticket.
+
+use std::collections::VecDeque;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use super::replica::{check_request, DeterministicServer, ServeReplica};
+use crate::tensor::{PoolHandle, Tensor};
+use crate::{Error, Result};
+
+/// One executed batch, for trace-reproducibility checks: which shard ran
+/// which tickets together.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BatchTrace {
+    /// Replica index that executed the batch.
+    pub shard: usize,
+    /// Tickets batched together, in ticket order.
+    pub tickets: Vec<u64>,
+}
+
+/// A submitted request's handle: resolves to the output row (or the
+/// batch's error) when its batch has executed.
+pub struct Pending {
+    ticket: u64,
+    rx: Receiver<Result<Tensor>>,
+}
+
+impl Pending {
+    /// The monotone arrival ticket this request was stamped with.
+    pub fn ticket(&self) -> u64 {
+        self.ticket
+    }
+
+    /// Block until the batch containing this request has executed.
+    pub fn wait(self) -> Result<Tensor> {
+        self.rx.recv().unwrap_or_else(|_| {
+            Err(Error::runtime("serve scheduler shut down before responding"))
+        })
+    }
+}
+
+struct ShardQueue {
+    /// Ticket-ordered (enqueue happens under the ticket gate).
+    pending: VecDeque<(u64, Tensor, Sender<Result<Tensor>>)>,
+    /// Flush boundaries (strictly increasing ticket counts), kept as a
+    /// queue — NOT coalesced into one max — so every flush point
+    /// remains a batch cut even if the dispatcher sleeps through
+    /// several flushes. Tickets below a boundary never share a batch
+    /// with tickets at or above it.
+    cuts: VecDeque<u64>,
+    closed: bool,
+}
+
+/// Executed batches kept per shard for [`ServeScheduler::trace`]: a
+/// bounded ring, so a long-lived server's dispatch hot path cannot grow
+/// memory without bound (old entries fall off; conformance tests run
+/// far below the cap and always see the complete trace).
+const TRACE_CAP: usize = 4096;
+
+struct Shard {
+    replica: ServeReplica,
+    q: Mutex<ShardQueue>,
+    cv: Condvar,
+    /// Last [`TRACE_CAP`] executed batch compositions, in execution
+    /// order (per shard, execution order == ticket order by
+    /// construction).
+    trace: Mutex<VecDeque<Vec<u64>>>,
+}
+
+struct Gate {
+    next_ticket: u64,
+    closed: bool,
+}
+
+/// Deterministic dynamic-batching front end over N sharded
+/// [`ServeReplica`]s (one dispatcher thread per shard). See module docs
+/// for the determinism argument.
+pub struct ServeScheduler {
+    shards: Arc<Vec<Shard>>,
+    gate: Mutex<Gate>,
+    d_in: usize,
+    batch_window: usize,
+    dispatchers: Vec<JoinHandle<()>>,
+}
+
+impl ServeScheduler {
+    /// Build a scheduler over explicit replicas. All replicas must serve
+    /// the same weight shape (they may — and usually should — share one
+    /// `Arc`'d [`DeterministicServer`]); `batch_window` is the maximum
+    /// requests per dispatched batch.
+    pub fn new(replicas: Vec<ServeReplica>, batch_window: usize) -> Result<ServeScheduler> {
+        if replicas.is_empty() {
+            return Err(Error::config("serve scheduler: need at least one replica"));
+        }
+        if batch_window == 0 {
+            return Err(Error::config("serve scheduler: batch window must be >= 1"));
+        }
+        let d_in = replicas[0].server().d_in();
+        let d_out = replicas[0].server().d_out();
+        for (i, r) in replicas.iter().enumerate() {
+            if r.server().d_in() != d_in || r.server().d_out() != d_out {
+                return Err(Error::config(format!(
+                    "serve scheduler: replica {i} weights are {}x{}, replica 0 has {d_in}x{d_out}",
+                    r.server().d_in(),
+                    r.server().d_out()
+                )));
+            }
+        }
+        let shards: Arc<Vec<Shard>> = Arc::new(
+            replicas
+                .into_iter()
+                .map(|replica| Shard {
+                    replica,
+                    q: Mutex::new(ShardQueue {
+                        pending: VecDeque::new(),
+                        cuts: VecDeque::new(),
+                        closed: false,
+                    }),
+                    cv: Condvar::new(),
+                    trace: Mutex::new(VecDeque::new()),
+                })
+                .collect(),
+        );
+        let mut dispatchers = Vec::with_capacity(shards.len());
+        for i in 0..shards.len() {
+            let sh = Arc::clone(&shards);
+            dispatchers.push(
+                std::thread::Builder::new()
+                    .name(format!("repdl-serve-{i}"))
+                    .spawn(move || dispatcher_loop(&sh[i], batch_window))
+                    .expect("failed to spawn serve dispatcher"),
+            );
+        }
+        Ok(ServeScheduler {
+            shards,
+            gate: Mutex::new(Gate { next_ticket: 0, closed: false }),
+            d_in,
+            batch_window,
+            dispatchers,
+        })
+    }
+
+    /// Convenience: `shards` replicas of one shared server, all
+    /// dispatching on one shared pool handle (the common deployment —
+    /// one packed weight copy, one worker pool, N batching lanes).
+    pub fn sharded(
+        server: Arc<DeterministicServer>,
+        shards: usize,
+        batch_window: usize,
+        pool: PoolHandle,
+    ) -> Result<ServeScheduler> {
+        let replicas = (0..shards.max(1))
+            .map(|_| ServeReplica::new(Arc::clone(&server), Arc::clone(&pool)))
+            .collect();
+        ServeScheduler::new(replicas, batch_window)
+    }
+
+    /// Number of replica shards.
+    pub fn shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Maximum requests per dispatched batch.
+    pub fn batch_window(&self) -> usize {
+        self.batch_window
+    }
+
+    /// Submit one request from any thread. Validates the shape *before*
+    /// consuming a ticket (a malformed request can never shift another
+    /// request's ticket or poison a batch), stamps the monotone ticket,
+    /// and enqueues to shard `ticket % shards` under the same gate lock
+    /// — so every shard queue stays ticket-ordered by construction.
+    pub fn submit(&self, request: Tensor) -> Result<Pending> {
+        check_request(&request, self.d_in)?;
+        let (tx, rx) = channel();
+        let mut gate = self.gate.lock().unwrap();
+        if gate.closed {
+            return Err(Error::runtime("serve scheduler is closed"));
+        }
+        let ticket = gate.next_ticket;
+        gate.next_ticket += 1;
+        let shard = &self.shards[(ticket % self.shards.len() as u64) as usize];
+        {
+            let mut q = shard.q.lock().unwrap();
+            q.pending.push_back((ticket, request, tx));
+            if q.pending.len() >= self.batch_window {
+                shard.cv.notify_one();
+            }
+        }
+        drop(gate);
+        Ok(Pending { ticket, rx })
+    }
+
+    /// Force every ticket assigned so far out, in (possibly partial)
+    /// batches. The flush point is a ticket count recorded as a batch
+    /// *cut*: tickets below it never share a batch with tickets at or
+    /// above it, so the resulting composition stays a pure function of
+    /// the (submit, flush) event sequence — not of when dispatchers
+    /// observe the barrier (cuts queue up rather than coalescing, so a
+    /// sleeping dispatcher sees every boundary).
+    pub fn flush(&self) {
+        // hold the gate across cut publication (same gate → shard lock
+        // order as submit): concurrent flushers serialise, so every
+        // shard sees the same cut sequence — without this, two racing
+        // flushes could publish their cuts in opposite orders on
+        // different shards and the smaller cut would survive on some
+        // shards but be suppressed on others
+        let gate = self.gate.lock().unwrap();
+        let upto = gate.next_ticket;
+        for shard in self.shards.iter() {
+            let mut q = shard.q.lock().unwrap();
+            if upto > 0 && q.cuts.back().map_or(true, |&b| upto > b) {
+                q.cuts.push_back(upto);
+            }
+            shard.cv.notify_one();
+        }
+        drop(gate);
+    }
+
+    /// Stop accepting new requests; already-submitted requests are
+    /// drained (in windows, then one trailing partial batch per shard)
+    /// and answered before the dispatchers exit.
+    pub fn close(&self) {
+        self.gate.lock().unwrap().closed = true;
+        for shard in self.shards.iter() {
+            shard.q.lock().unwrap().closed = true;
+            shard.cv.notify_all();
+        }
+    }
+
+    /// Submit a whole queue from the calling thread (ticket i == queue
+    /// index i), flush, and return the outputs **in ticket order**.
+    pub fn process_all(&self, queue: &[Tensor]) -> Result<Vec<Tensor>> {
+        let pending = queue
+            .iter()
+            .map(|r| self.submit(r.clone()))
+            .collect::<Result<Vec<Pending>>>()?;
+        self.flush();
+        pending.into_iter().map(|p| p.wait()).collect()
+    }
+
+    /// One concurrent client's share of a multi-client replay: caller
+    /// `client` of `clients` submits the interleaved queue slice
+    /// `{client, client + clients, …}`, flushes, and waits for its own
+    /// responses. Returns `(queue index, output)` pairs in submission
+    /// order. The CLI, the e5 scheduler bench and the conformance tests
+    /// all drive concurrent clients through this one helper so the
+    /// submit/flush/wait protocol lives in a single place.
+    pub fn replay_slice(
+        &self,
+        queue: &[Tensor],
+        client: usize,
+        clients: usize,
+    ) -> Result<Vec<(usize, Tensor)>> {
+        let idx: Vec<usize> = (client..queue.len()).step_by(clients.max(1)).collect();
+        let pending = idx
+            .iter()
+            .map(|&i| self.submit(queue[i].clone()))
+            .collect::<Result<Vec<Pending>>>()?;
+        self.flush();
+        idx.into_iter()
+            .zip(pending)
+            .map(|(i, p)| p.wait().map(|o| (i, o)))
+            .collect()
+    }
+
+    /// Executed batch compositions, sorted by first ticket (a canonical
+    /// cross-shard order). Complete once every submitted request has
+    /// been answered (trace entries are recorded before responses are
+    /// sent) — e.g. after [`Self::process_all`] returns or after
+    /// [`Self::close`] + drop. Bounded: only the most recent
+    /// [`TRACE_CAP`] batches per shard are retained.
+    pub fn trace(&self) -> Vec<BatchTrace> {
+        let mut out = Vec::new();
+        for (i, shard) in self.shards.iter().enumerate() {
+            for tickets in shard.trace.lock().unwrap().iter() {
+                out.push(BatchTrace { shard: i, tickets: tickets.clone() });
+            }
+        }
+        out.sort_by_key(|b| b.tickets.first().copied().unwrap_or(u64::MAX));
+        out
+    }
+}
+
+impl Drop for ServeScheduler {
+    fn drop(&mut self) {
+        self.close();
+        for h in self.dispatchers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Per-shard dispatcher: waits until the batching rule fires, takes
+/// exactly the ticket-ordered prefix the rule names — the current flush
+/// segment's next chunk, else a full window — executes it on the
+/// shard's replica, and answers each request on its own channel. Taking
+/// "exactly the rule's prefix" (never "whatever is there") is what
+/// keeps batch composition independent of when this thread wakes.
+fn dispatcher_loop(shard: &Shard, window: usize) {
+    loop {
+        let batch = {
+            let mut q = shard.q.lock().unwrap();
+            let take = loop {
+                // drop flush boundaries that are already satisfied
+                // (no pending ticket below them)
+                while let Some(&b) = q.cuts.front() {
+                    if q.pending.front().map_or(false, |(t, _, _)| *t < b) {
+                        break;
+                    }
+                    q.cuts.pop_front();
+                }
+                if let Some(&b) = q.cuts.front() {
+                    // flush segment first — BEFORE the full-window rule —
+                    // so tickets submitted after the flush can never merge
+                    // into a pre-flush batch no matter how late we wake
+                    let n_before =
+                        q.pending.iter().take_while(|(t, _, _)| *t < b).count();
+                    break n_before.min(window); // ≥ 1: front is below b
+                }
+                if q.pending.len() >= window {
+                    break window; // full window: take exactly `window`
+                }
+                if q.closed {
+                    if q.pending.is_empty() {
+                        return;
+                    }
+                    break q.pending.len(); // trailing partial batch (close)
+                }
+                q = shard.cv.wait(q).unwrap();
+            };
+            q.pending.drain(..take).collect::<Vec<_>>()
+        };
+        let mut tickets = Vec::with_capacity(batch.len());
+        let mut inputs = Vec::with_capacity(batch.len());
+        let mut senders = Vec::with_capacity(batch.len());
+        for (t, x, tx) in batch {
+            tickets.push(t);
+            inputs.push(x);
+            senders.push(tx);
+        }
+        {
+            let mut trace = shard.trace.lock().unwrap();
+            if trace.len() == TRACE_CAP {
+                trace.pop_front();
+            }
+            trace.push_back(tickets);
+        }
+        match shard.replica.process(&inputs) {
+            Ok(outs) => {
+                for (tx, o) in senders.iter().zip(outs) {
+                    let _ = tx.send(Ok(o)); // receiver may have given up
+                }
+            }
+            Err(e) => {
+                // shapes are validated at submit, so this is exceptional;
+                // every request in the batch learns the same cause
+                let msg = format!("serve batch failed: {e}");
+                for tx in &senders {
+                    let _ = tx.send(Err(Error::runtime(msg.clone())));
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{matmul, WorkerPool};
+
+    fn queue(n: usize, d: usize, seed: u64) -> Vec<Tensor> {
+        (0..n)
+            .map(|i| crate::rng::uniform_tensor(&[d], -1.0, 1.0, seed + i as u64))
+            .collect()
+    }
+
+    fn server(d_in: usize, d_out: usize, mb: usize) -> Arc<DeterministicServer> {
+        let w = crate::rng::uniform_tensor(&[d_in, d_out], -0.3, 0.3, 7);
+        Arc::new(DeterministicServer::new(w, mb).unwrap())
+    }
+
+    #[test]
+    fn process_all_returns_ticket_ordered_exact_bits() {
+        let srv = server(48, 6, 8);
+        let q = queue(19, 48, 100);
+        let sched =
+            ServeScheduler::sharded(Arc::clone(&srv), 3, 4, WorkerPool::shared(2)).unwrap();
+        let outs = sched.process_all(&q).unwrap();
+        assert_eq!(outs.len(), q.len());
+        for (r, o) in q.iter().zip(outs.iter()) {
+            let want = matmul(&r.reshape(&[1, 48]).unwrap(), &srv.weights).unwrap();
+            assert_eq!(o.data(), want.data(), "scheduler changed bits");
+        }
+    }
+
+    #[test]
+    fn shard_choice_is_ticket_mod_shards_and_batches_are_window_chunks() {
+        let srv = server(16, 4, 8);
+        let q = queue(11, 16, 50);
+        let sched =
+            ServeScheduler::sharded(Arc::clone(&srv), 2, 3, WorkerPool::shared(1)).unwrap();
+        sched.process_all(&q).unwrap();
+        let trace = sched.trace();
+        // pure function: shard s gets tickets ≡ s (mod 2) chunked by 3
+        let want = [
+            (0usize, vec![0u64, 2, 4]),
+            (1, vec![1, 3, 5]),
+            (0, vec![6, 8, 10]),
+            (1, vec![7, 9]), // trailing partial batch from the flush
+        ];
+        assert_eq!(trace.len(), want.len(), "trace: {trace:?}");
+        for (got, (shard, tickets)) in trace.iter().zip(want.iter()) {
+            assert_eq!(got.shard, *shard, "trace: {trace:?}");
+            assert_eq!(&got.tickets, tickets, "trace: {trace:?}");
+        }
+    }
+
+    #[test]
+    fn flush_boundaries_segment_batches_independently_of_timing() {
+        // the racy interleaving: flush, then MORE submissions that could
+        // top the pending queue up to a full window before the
+        // dispatcher wakes. The cut must still split the batch — run
+        // repeatedly so dispatcher timing varies both ways.
+        for round in 0..10u64 {
+            let srv = server(16, 4, 8);
+            let sched =
+                ServeScheduler::sharded(Arc::clone(&srv), 1, 4, WorkerPool::shared(1))
+                    .unwrap();
+            let q = queue(7, 16, 300 + round);
+            let mut pending = Vec::new();
+            for r in &q[..3] {
+                pending.push(sched.submit(r.clone()).unwrap());
+            }
+            sched.flush(); // cut at 3
+            for r in &q[3..5] {
+                pending.push(sched.submit(r.clone()).unwrap());
+            }
+            sched.flush(); // cut at 5
+            for r in &q[5..7] {
+                pending.push(sched.submit(r.clone()).unwrap());
+            }
+            sched.close(); // drains the tail
+            for p in pending {
+                p.wait().unwrap();
+            }
+            let got: Vec<Vec<u64>> =
+                sched.trace().into_iter().map(|b| b.tickets).collect();
+            assert_eq!(
+                got,
+                vec![vec![0, 1, 2], vec![3, 4], vec![5, 6]],
+                "round {round}: flush cuts must segment batches"
+            );
+        }
+    }
+
+    #[test]
+    fn submit_rejects_malformed_without_consuming_a_ticket() {
+        let srv = server(16, 4, 8);
+        let sched =
+            ServeScheduler::sharded(Arc::clone(&srv), 2, 4, WorkerPool::shared(1)).unwrap();
+        assert!(sched.submit(Tensor::zeros(&[15])).is_err());
+        let good = queue(3, 16, 9);
+        let outs = sched.process_all(&good).unwrap();
+        assert_eq!(outs.len(), 3);
+        // the malformed request consumed no ticket: tickets start at 0
+        assert_eq!(sched.trace()[0].tickets[0], 0);
+    }
+
+    #[test]
+    fn close_drains_then_rejects() {
+        let srv = server(16, 4, 8);
+        let sched =
+            ServeScheduler::sharded(Arc::clone(&srv), 1, 4, WorkerPool::shared(1)).unwrap();
+        let p = sched.submit(queue(1, 16, 1).pop().unwrap()).unwrap();
+        sched.close();
+        assert!(p.wait().is_ok(), "in-flight request must be answered");
+        assert!(sched.submit(queue(1, 16, 2).pop().unwrap()).is_err());
+    }
+
+    #[test]
+    fn mismatched_replicas_are_a_config_error() {
+        let a = server(16, 4, 8);
+        let b = server(8, 4, 8);
+        let pool = WorkerPool::shared(1);
+        let replicas = vec![
+            ServeReplica::new(a, Arc::clone(&pool)),
+            ServeReplica::new(b, pool),
+        ];
+        assert!(ServeScheduler::new(replicas, 4).is_err());
+    }
+}

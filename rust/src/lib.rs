@@ -46,9 +46,10 @@
 //! * [`runtime`] — PJRT loader/executor for the JAX/Pallas AOT artifacts
 //!   (the second, independent implementation of the RepDL op spec);
 //!   gated behind the `pjrt` feature, stubbed otherwise.
-//! * [`coordinator`] — trainer, deterministic inference server (pooled
-//!   batch dispatch + req/s throughput reporting),
-//!   bitwise-verification harness.
+//! * [`coordinator`] — trainer, the deterministic serving subsystem
+//!   (pooled batch dispatch, sharded replicas, and the ticket-ordered
+//!   dynamic-batching scheduler — DESIGN.md §7), bitwise-verification
+//!   harness.
 //! * [`sha256`] — in-crate FIPS 180-4 digest backing all bitwise
 //!   fingerprints (zero external dependencies — DESIGN.md §5).
 //!

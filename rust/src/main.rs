@@ -4,7 +4,9 @@
 //!   train        train the MLP workload (choose numerics: repro/baseline/atomic)
 //!   verify       E1/E2 style run-twice + cross-platform verification
 //!   transformer  train the char transformer (E8 workload)
-//!   serve        E7 batch-invariance report + pooled throughput (--threads N)
+//!   serve        E7 batch-invariance report + pooled throughput + the
+//!                deterministic dynamic-batching scheduler
+//!                (--threads N --shards S --batch-window K --clients C)
 //!   runtime      load + execute an AOT artifact (needs `make artifacts`)
 //!   selftest     quick determinism smoke checks
 
@@ -144,16 +146,30 @@ fn cmd_transformer(args: &Args) -> i32 {
 }
 
 fn cmd_serve(args: &Args) -> i32 {
-    use repdl::tensor::{default_threads, global_pool, WorkerPool};
+    use repdl::coordinator::ServeScheduler;
+    use repdl::tensor::{global_pool_handle, WorkerPool};
+    use std::sync::Arc;
     let d = args.get_usize("dim", 256);
     let n = args.get_usize("requests", 64);
-    // only build a private pool for an explicit --threads; otherwise
-    // share the global pool the kernels already use
-    let private: Option<WorkerPool> = args.threads().map(WorkerPool::new);
-    let pool: &WorkerPool = private.as_ref().unwrap_or_else(|| global_pool());
-    let lanes = args.threads().unwrap_or_else(default_threads);
+    let shards = args.get_usize_at_least("shards", 1, 1);
+    let window = args.get_usize_at_least("batch-window", 16, 1);
+    let clients = args.get_usize_at_least("clients", 2, 1);
+    // only spawn a private pool for an explicit --threads; otherwise
+    // take a handle to the global pool the kernels already use (never
+    // a duplicate pool of background threads)
+    let pool = args
+        .threads()
+        .map(WorkerPool::shared)
+        .unwrap_or_else(global_pool_handle);
+    let lanes = pool.lanes();
     let w = repdl::rng::uniform_tensor(&[d, 16], -0.3, 0.3, 5);
-    let srv = DeterministicServer::new(w, 16);
+    let srv = match DeterministicServer::new(w, 16) {
+        Ok(s) => Arc::new(s),
+        Err(e) => {
+            eprintln!("serve: {e}");
+            return 1;
+        }
+    };
     let queue: Vec<Tensor> = (0..n)
         .map(|i| repdl::rng::uniform_tensor(&[d], -1.0, 1.0, 100 + i as u64))
         .collect();
@@ -165,10 +181,39 @@ fn cmd_serve(args: &Args) -> i32 {
         "requests={} repro_mismatches={} baseline_mismatches={}",
         rep.requests, rep.repro_mismatches, rep.baseline_mismatches
     );
-    // throughput through the persistent pool (req/s)
-    let t = srv.throughput_report(pool, &queue, 5).expect("throughput");
+    // single-caller throughput through the persistent pool (req/s)
+    let t = srv.throughput_report(&pool, &queue, 5).expect("throughput");
     println!("pool_lanes={lanes} throughput={:.0} req/s", t.req_per_s);
-    if rep.repro_mismatches == 0 {
+    // deterministic dynamic-batching scheduler: `clients` concurrent
+    // submitters over `shards` replicas sharing one pool — per-request
+    // bits must equal the single-caller reference exactly
+    let reference = srv.process_repro(&queue).expect("reference");
+    let sched = ServeScheduler::sharded(Arc::clone(&srv), shards, window, pool)
+        .expect("scheduler");
+    let t0 = std::time::Instant::now();
+    let mismatch = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..clients)
+            .map(|c| {
+                let (sched, queue, reference) = (&sched, &queue, &reference);
+                s.spawn(move || {
+                    sched
+                        .replay_slice(queue, c, clients)
+                        .expect("replay")
+                        .into_iter()
+                        .filter(|(i, out)| !out.bit_eq(&reference[*i]))
+                        .count()
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).sum::<usize>()
+    });
+    let elapsed = t0.elapsed().as_secs_f64();
+    println!(
+        "scheduler shards={shards} batch_window={window} clients={clients} \
+         mismatches={mismatch} throughput={:.0} req/s",
+        n as f64 / elapsed.max(1e-9)
+    );
+    if rep.repro_mismatches == 0 && mismatch == 0 {
         0
     } else {
         1

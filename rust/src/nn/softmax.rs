@@ -8,14 +8,25 @@ use crate::rnum::{rexp, rlog};
 use crate::tensor::Tensor;
 use crate::{Error, Result};
 
-/// Row-wise softmax over the last axis of a 2-D tensor.
-pub fn softmax_rows(x: &Tensor) -> Result<Tensor> {
+/// Reject rank ≠ 2 and zero-length rows: a row of no logits has no
+/// maximum and an all-zero denominator, so `(R, 0)` is a shape error
+/// (the seed read `w[0]` and panicked) — same error-not-panic policy as
+/// the degenerate reductions in `tensor/reduce.rs`.
+fn check_rows(x: &Tensor, name: &str) -> Result<(usize, usize)> {
     let d = x.dims();
     if d.len() != 2 {
-        return Err(Error::shape("softmax_rows: want rank 2"));
+        return Err(Error::shape(format!("{name}: want rank 2")));
     }
-    let (rows, c) = (d[0], d[1]);
-    let mut out = Tensor::zeros(d);
+    if d[1] == 0 {
+        return Err(Error::shape(format!("{name}: zero-length rows in {d:?}")));
+    }
+    Ok((d[0], d[1]))
+}
+
+/// Row-wise softmax over the last axis of a 2-D tensor.
+pub fn softmax_rows(x: &Tensor) -> Result<Tensor> {
+    let (rows, c) = check_rows(x, "softmax_rows")?;
+    let mut out = Tensor::zeros(x.dims());
     for r in 0..rows {
         let w = x.row(r);
         let mut m = w[0];
@@ -40,12 +51,8 @@ pub fn softmax_rows(x: &Tensor) -> Result<Tensor> {
 /// Row-wise log-softmax: `x − m − rlog(Σ rexp(x − m))` (a *different*
 /// fixed graph from `log(softmax(x))`, hence its own API).
 pub fn log_softmax_rows(x: &Tensor) -> Result<Tensor> {
-    let d = x.dims();
-    if d.len() != 2 {
-        return Err(Error::shape("log_softmax_rows: want rank 2"));
-    }
-    let (rows, c) = (d[0], d[1]);
-    let mut out = Tensor::zeros(d);
+    let (rows, c) = check_rows(x, "log_softmax_rows")?;
+    let mut out = Tensor::zeros(x.dims());
     for r in 0..rows {
         let w = x.row(r);
         let mut m = w[0];
@@ -100,6 +107,17 @@ mod tests {
         for j in 0..4 {
             assert!((ls.data()[j] - rlog(s.data()[j])).abs() < 1e-5);
         }
+    }
+
+    #[test]
+    fn zero_length_rows_error_instead_of_panicking() {
+        let degenerate = Tensor::zeros(&[3, 0]);
+        assert!(softmax_rows(&degenerate).is_err());
+        assert!(log_softmax_rows(&degenerate).is_err());
+        // zero *rows* with non-empty columns stay fine: nothing is read
+        let empty = Tensor::zeros(&[0, 4]);
+        assert_eq!(softmax_rows(&empty).unwrap().numel(), 0);
+        assert_eq!(log_softmax_rows(&empty).unwrap().numel(), 0);
     }
 
     #[test]

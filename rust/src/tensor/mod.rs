@@ -42,7 +42,7 @@ pub use matmul::{
     matmul_packed_in, matmul_pairwise, matmul_pairwise_in,
 };
 pub use scratch::{scratch_f32, ScratchGuard};
-pub use pool::{default_threads, global_pool, WorkerPool};
+pub use pool::{default_threads, global_pool, global_pool_handle, PoolHandle, WorkerPool};
 pub use reduce::{
     argmax_last, max_axis, max_axis_in, mean_axis, mean_axis_in, sum_axis, sum_axis_in,
     sum_axis_pairwise, sum_axis_pairwise_in, var_axis, var_axis_in,

@@ -82,6 +82,13 @@ impl Latch {
     }
 }
 
+/// Shareable, clonable handle to a [`WorkerPool`]. Concurrent
+/// dispatchers are supported (dispatch is serialised per lane sender),
+/// so several owners — e.g. the serve scheduler's replicas — can drive
+/// one pool at once; pool size never changes kernel bits, so sharing
+/// vs. private pools is a pure capacity decision.
+pub type PoolHandle = std::sync::Arc<WorkerPool>;
+
 /// Persistent worker pool with `lanes` parallel execution lanes
 /// (`lanes − 1` background threads plus the calling thread).
 pub struct WorkerPool {
@@ -110,6 +117,12 @@ impl WorkerPool {
             handles.push(handle);
         }
         WorkerPool { lanes, txs, handles }
+    }
+
+    /// Build a pool wrapped in a shareable [`PoolHandle`] (the form the
+    /// serve scheduler's replicas take, so one pool can back N shards).
+    pub fn shared(lanes: usize) -> PoolHandle {
+        std::sync::Arc::new(WorkerPool::new(lanes))
     }
 
     /// Number of parallel lanes (1 = sequential).
@@ -231,11 +244,22 @@ pub fn default_threads() -> usize {
     })
 }
 
+fn global_cell() -> &'static PoolHandle {
+    static GLOBAL: OnceLock<PoolHandle> = OnceLock::new();
+    GLOBAL.get_or_init(|| WorkerPool::shared(default_threads()))
+}
+
 /// The process-wide pool, lazily created at first use with
 /// [`default_threads`] lanes.
 pub fn global_pool() -> &'static WorkerPool {
-    static GLOBAL: OnceLock<WorkerPool> = OnceLock::new();
-    GLOBAL.get_or_init(|| WorkerPool::new(default_threads()))
+    global_cell()
+}
+
+/// A shareable handle to the *same* process-wide pool (for consumers
+/// that need an owned [`PoolHandle`], e.g. serve-scheduler replicas —
+/// this never spawns a second pool alongside [`global_pool`]).
+pub fn global_pool_handle() -> PoolHandle {
+    Arc::clone(global_cell())
 }
 
 #[cfg(test)]
@@ -345,6 +369,13 @@ mod tests {
         for j in joins {
             assert!(j.join().unwrap());
         }
+    }
+
+    #[test]
+    fn global_pool_handle_is_the_global_pool() {
+        // same instance, not a second pool (no duplicate worker threads)
+        assert!(std::ptr::eq(global_pool(), &*global_pool_handle()));
+        assert_eq!(global_pool_handle().lanes(), global_pool().lanes());
     }
 
     #[test]

@@ -10,6 +10,32 @@
 //! persistent [`WorkerPool`] (each element's reduction order stays
 //! fixed, so pool size never changes bits); the `*_in` variants take an
 //! explicit pool.
+//!
+//! ## Degenerate axes (error, not panic / not NaN)
+//!
+//! A zero-length reduced axis has a well-defined *sum* (the empty sum,
+//! exactly `0.0` — [`sum_axis`] keeps that), but no maximum and no mean:
+//! [`max_axis`], [`argmax_last`], [`mean_axis`] and [`var_axis`] return
+//! [`Error::shape`] instead of reading out of bounds (`w[0]`, the seed's
+//! panic) or silently emitting NaN from `0/0`.
+//!
+//! ## The deterministic tie/NaN rule (single source of truth)
+//!
+//! Comparison reductions ([`max_axis`], [`argmax_last`]) share one fixed
+//! rule, implemented once in [`max_wins`]: **NaN beats every number, and
+//! the first occurrence wins** — among equal maxima and among NaNs alike
+//! (so `max_axis` keeps the first NaN's payload bits and `argmax_last`
+//! reports the first NaN's index). This makes the two APIs agree: the
+//! index `argmax_last` picks always holds the value `max_axis` returns.
+//!
+//! Both seed implementations contradicted the rule the seed itself
+//! documented ("NaN wins, …, first occurrence"): `argmax_last` used
+//! plain `v > best`, under which NaN *never* won, and `max_axis` let
+//! every later NaN overwrite the accumulator, keeping the *last* NaN's
+//! payload/sign bits. Aligning both to the documented rule is a
+//! bit-visible in-place fix only for rows holding ≥ 2 NaNs with
+//! differing payloads (spec-conformance bugfix, not a new reduction
+//! graph — so no new API name per DESIGN.md §2).
 
 use super::par::par_chunks_in;
 use super::pool::{global_pool, WorkerPool};
@@ -104,27 +130,42 @@ pub fn sum_axis_pairwise_in(pool: &WorkerPool, t: &Tensor, axis: usize) -> Resul
     reduce_with_in(pool, t, axis, pw)
 }
 
-/// Mean along `axis`: the fixed graph `sum / n`.
+/// Reject a zero-length reduced axis for reductions that have no
+/// identity (max) or divide by the length (mean, var) — see module docs.
+fn check_nonempty_axis(t: &Tensor, axis: usize, op: &str) -> Result<(usize, usize, usize)> {
+    let geo = axis_geometry(t, axis)?;
+    if geo.1 == 0 {
+        return Err(Error::shape(format!(
+            "{op}: axis {axis} of {:?} has length 0 — undefined for this reduction",
+            t.dims()
+        )));
+    }
+    Ok(geo)
+}
+
+/// Mean along `axis`: the fixed graph `sum / n`. Errors on a zero-length
+/// axis (`0/0` would silently be NaN).
 pub fn mean_axis(t: &Tensor, axis: usize) -> Result<Tensor> {
     mean_axis_in(global_pool(), t, axis)
 }
 
 /// [`mean_axis`] on an explicit pool.
 pub fn mean_axis_in(pool: &WorkerPool, t: &Tensor, axis: usize) -> Result<Tensor> {
-    let (_, len, _) = axis_geometry(t, axis)?;
+    let (_, len, _) = check_nonempty_axis(t, axis, "mean_axis")?;
     let s = sum_axis_in(pool, t, axis)?;
     Ok(s.map(|v| v / len as f32))
 }
 
 /// Biased variance along `axis`: the fixed two-pass graph
-/// `sum((x − mean)²) / n` with sequential sums.
+/// `sum((x − mean)²) / n` with sequential sums. Errors on a zero-length
+/// axis (`0/0` would silently be NaN).
 pub fn var_axis(t: &Tensor, axis: usize) -> Result<Tensor> {
     var_axis_in(global_pool(), t, axis)
 }
 
 /// [`var_axis`] on an explicit pool.
 pub fn var_axis_in(pool: &WorkerPool, t: &Tensor, axis: usize) -> Result<Tensor> {
-    let (_outer, len, inner) = axis_geometry(t, axis)?;
+    let (_outer, len, inner) = check_nonempty_axis(t, axis, "var_axis")?;
     let mean = mean_axis_in(pool, t, axis)?;
     let data = t.data();
     let mean_d = mean.data();
@@ -148,19 +189,29 @@ pub fn var_axis_in(pool: &WorkerPool, t: &Tensor, axis: usize) -> Result<Tensor>
     Ok(out)
 }
 
-/// Maximum along `axis` (comparison order fixed; NaN propagates).
+/// The shared comparison-reduction update rule (see module docs): does
+/// candidate `v` displace the current winner `cur`? NaN beats every
+/// number; otherwise only strictly-greater wins, so the *first* of equal
+/// maxima — and the first NaN — is kept.
+fn max_wins(v: f32, cur: f32) -> bool {
+    (v.is_nan() && !cur.is_nan()) || v > cur
+}
+
+/// Maximum along `axis` (fixed comparison order; tie/NaN rule in the
+/// module docs — NaN wins, first occurrence kept). Errors on a
+/// zero-length axis, which has no maximum.
 pub fn max_axis(t: &Tensor, axis: usize) -> Result<Tensor> {
     max_axis_in(global_pool(), t, axis)
 }
 
 /// [`max_axis`] on an explicit pool.
 pub fn max_axis_in(pool: &WorkerPool, t: &Tensor, axis: usize) -> Result<Tensor> {
+    check_nonempty_axis(t, axis, "max_axis")?;
     reduce_with_in(pool, t, axis, |w, s, n| {
         let mut m = w[0];
         for k in 1..n {
             let v = w[k * s];
-            // fixed rule: NaN wins, then larger value, first occurrence
-            if v.is_nan() || v > m {
+            if max_wins(v, m) {
                 m = v;
             }
         }
@@ -168,20 +219,27 @@ pub fn max_axis_in(pool: &WorkerPool, t: &Tensor, axis: usize) -> Result<Tensor>
     })
 }
 
-/// Argmax over the last axis (deterministic tie rule: first maximum).
+/// Argmax over the last axis — same tie/NaN rule as [`max_axis`] (module
+/// docs): the returned index always holds the value `max_axis` would
+/// return for that row. Errors on a zero-length last axis.
 pub fn argmax_last(t: &Tensor) -> Result<Vec<usize>> {
     let d = t.dims();
     if d.is_empty() {
         return Err(Error::shape("argmax_last on scalar"));
     }
     let n = *d.last().unwrap();
+    if n == 0 {
+        return Err(Error::shape(format!(
+            "argmax_last: zero-length last axis of {d:?} has no argmax"
+        )));
+    }
     let rows = t.numel() / n;
     let mut out = Vec::with_capacity(rows);
     for r in 0..rows {
         let w = &t.data()[r * n..(r + 1) * n];
         let mut best = 0usize;
-        for (k, &v) in w.iter().enumerate() {
-            if v > w[best] {
+        for (k, &v) in w.iter().enumerate().skip(1) {
+            if max_wins(v, w[best]) {
                 best = k;
             }
         }
@@ -268,5 +326,47 @@ mod tests {
         assert_eq!(argmax_last(&t).unwrap(), vec![0, 1]);
         let nan = Tensor::from_vec(&[1, 2], vec![1.0, f32::NAN]).unwrap();
         assert!(max_axis(&nan, 1).unwrap().data()[0].is_nan());
+    }
+
+    #[test]
+    fn max_and_argmax_agree_on_nans() {
+        // one shared rule: NaN wins, first occurrence kept — the index
+        // argmax picks must hold the value max_axis returns
+        let rows = [
+            vec![1.0f32, f32::NAN, 2.0, f32::NAN], // NaN mid-row
+            vec![f32::NAN, 5.0, 7.0, 1.0],         // NaN first
+            vec![2.0, 7.0, 7.0, 7.0],              // plain tie
+        ];
+        let want_idx = [1usize, 0, 1];
+        for (row, &wi) in rows.iter().zip(want_idx.iter()) {
+            let t = Tensor::from_vec(&[1, 4], row.clone()).unwrap();
+            let idx = argmax_last(&t).unwrap()[0];
+            assert_eq!(idx, wi, "row {row:?}");
+            let m = max_axis(&t, 1).unwrap().data()[0];
+            assert_eq!(
+                m.to_bits(),
+                row[idx].to_bits(),
+                "argmax index must hold the max_axis value for {row:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn zero_length_axes_error_instead_of_panicking_or_nan() {
+        let empty = Tensor::zeros(&[2, 0]);
+        // no identity / division by zero: shape errors, not panics/NaN
+        assert!(max_axis(&empty, 1).is_err());
+        assert!(mean_axis(&empty, 1).is_err());
+        assert!(var_axis(&empty, 1).is_err());
+        assert!(argmax_last(&empty).is_err());
+        // the empty *sum* is well-defined: exactly 0.0 per output element
+        let s = sum_axis(&empty, 1).unwrap();
+        assert_eq!(s.dims(), &[2]);
+        assert!(s.data().iter().all(|v| v.to_bits() == 0.0f32.to_bits()));
+        assert!(sum_axis_pairwise(&empty, 1).unwrap().bit_eq(&s));
+        // reducing an axis of a fully-empty tensor stays fine when the
+        // *output* is empty (nothing is read)
+        assert_eq!(sum_axis(&Tensor::zeros(&[0, 3]), 0).unwrap().dims(), &[3]);
+        assert!(max_axis(&Tensor::zeros(&[0, 3]), 1).unwrap().numel() == 0);
     }
 }

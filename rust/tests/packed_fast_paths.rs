@@ -11,8 +11,8 @@
 
 use repdl::proptest::{forall, Gen};
 use repdl::tensor::{
-    avg_pool2d_in, conv2d_direct_in, conv2d_im2col_in, matmul_dotform_in, matmul_packed_in,
-    max_pool2d_in, Conv2dParams, Tensor, WorkerPool,
+    avg_pool2d_in, conv2d_direct_in, conv2d_im2col_in, matmul_blocked_in, matmul_dotform_in,
+    matmul_in, matmul_packed_in, max_pool2d_in, Conv2dParams, Tensor, WorkerPool,
 };
 
 const POOL_SIZES: [usize; 6] = [1, 2, 3, 5, 8, 16];
@@ -130,6 +130,76 @@ fn pooling_ops_pool_size_invariance() {
                 base_avg.bit_eq(&avg_pool2d_in(&pool, &x, k).unwrap()),
                 "avg_pool2d k={k} lanes={lanes}"
             );
+        }
+    }
+}
+
+#[test]
+fn degenerate_gemm_shapes_are_empty_or_zero_through_every_kernel() {
+    // m=0 / n=0 → empty outputs of the right shape; k=0 → the empty sum
+    // (exactly +0.0 everywhere). All three routed kernels and the router
+    // itself must agree bit for bit and must not panic.
+    let pool = WorkerPool::new(3);
+    for (m, k, n) in [
+        (0usize, 5usize, 7usize),
+        (4, 5, 0),
+        (4, 0, 7),
+        (0, 0, 7),
+        (0, 3, 0),
+        (0, 0, 0),
+        (64, 0, 64), // big enough that routing would pick packed
+    ] {
+        let a = lcg(&[m, k], (m * 10 + k) as u64 + 1);
+        let b = lcg(&[k, n], (k * 10 + n) as u64 + 2);
+        let dot = matmul_dotform_in(&pool, &a, &b).unwrap();
+        let blocked = matmul_blocked_in(&pool, &a, &b).unwrap();
+        let packed = matmul_packed_in(&pool, &a, &b).unwrap();
+        let routed = matmul_in(&pool, &a, &b).unwrap();
+        assert_eq!(dot.dims(), &[m, n], "m={m} k={k} n={n}");
+        for (name, got) in [("blocked", &blocked), ("packed", &packed), ("routed", &routed)] {
+            assert!(got.bit_eq(&dot), "{name} diverged at m={m} k={k} n={n}");
+        }
+        // k=0 with a non-empty output is the empty sum: exact +0.0 bits
+        assert!(
+            dot.data().iter().all(|v| v.to_bits() == 0.0f32.to_bits()),
+            "m={m} k={k} n={n}: degenerate GEMM must be exact +0.0"
+        );
+    }
+}
+
+#[test]
+fn degenerate_conv_shapes_are_empty_or_bias_through_fused_path() {
+    let pool = WorkerPool::new(3);
+    let p = Conv2dParams { stride: 1, padding: 0 };
+    // b=0 (no images) and o=0 (no filters): empty outputs, right shape
+    for (b, c, o) in [(0usize, 2usize, 3usize), (2, 2, 0), (0, 2, 0)] {
+        let x = lcg(&[b, c, 5, 5], 11);
+        let w = lcg(&[o, c, 2, 2], 12);
+        let direct = conv2d_direct_in(&pool, &x, &w, None, p).unwrap();
+        let fused = conv2d_im2col_in(&pool, &x, &w, None, p).unwrap();
+        assert_eq!(direct.dims(), &[b, o, 4, 4], "b={b} o={o}");
+        assert!(direct.bit_eq(&fused), "b={b} o={o}");
+        assert_eq!(direct.numel(), 0);
+    }
+    // c=0 (zero-channel input): every output element is the empty sum
+    // (+0.0), or exactly the bias once one is given
+    let x = lcg(&[2, 0, 5, 5], 13);
+    let w = lcg(&[3, 0, 2, 2], 14);
+    let direct = conv2d_direct_in(&pool, &x, &w, None, p).unwrap();
+    let fused = conv2d_im2col_in(&pool, &x, &w, None, p).unwrap();
+    assert_eq!(direct.dims(), &[2, 3, 4, 4]);
+    assert!(direct.bit_eq(&fused), "c=0 fused diverged");
+    assert!(direct.data().iter().all(|v| v.to_bits() == 0.0f32.to_bits()));
+    let bias = Tensor::from_vec(&[3], vec![1.5, -2.25, 0.125]).unwrap();
+    let db = conv2d_direct_in(&pool, &x, &w, Some(&bias), p).unwrap();
+    let fb = conv2d_im2col_in(&pool, &x, &w, Some(&bias), p).unwrap();
+    assert!(db.bit_eq(&fb), "c=0 with bias: fused diverged");
+    for oi in 0..3 {
+        for s in 0..16 {
+            for bi in 0..2 {
+                let got = db.data()[(bi * 3 + oi) * 16 + s];
+                assert_eq!(got.to_bits(), bias.data()[oi].to_bits());
+            }
         }
     }
 }

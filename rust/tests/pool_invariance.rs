@@ -203,7 +203,7 @@ fn par_chunks_adversarial_geometry() {
 #[test]
 fn serving_bit_identical_for_every_pool_size() {
     let w = lcg(&[96, 8], 71);
-    let srv = DeterministicServer::new(w, 16);
+    let srv = DeterministicServer::new(w, 16).unwrap();
     let queue: Vec<Tensor> = (0..33).map(|i| lcg(&[96], 100 + i as u64)).collect();
     let base: Vec<Tensor> = srv.process_repro_in(&WorkerPool::new(1), &queue).unwrap();
     for lanes in POOL_SIZES {

@@ -145,7 +145,9 @@ fn serve_batching_routes_every_request_once() {
     use repdl::rng::uniform_tensor;
     forall(11, 20, |g: &mut Gen| (1 + g.below(40), 1 + g.below(12), g.u64()), |&(n, bs, seed)| {
         let w = uniform_tensor(&[16, 4], -0.3, 0.3, seed);
-        let srv = DeterministicServer::new(w, bs);
+        let Ok(srv) = DeterministicServer::new(w, bs) else {
+            return false;
+        };
         let q: Vec<_> = (0..n)
             .map(|i| uniform_tensor(&[16], -1.0, 1.0, seed + 1 + i as u64))
             .collect();

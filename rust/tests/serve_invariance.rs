@@ -14,7 +14,7 @@ fn queue(n: usize, d: usize, seed: u64) -> Vec<Tensor> {
 #[test]
 fn repdl_outputs_do_not_depend_on_batch_composition() {
     let w = uniform_tensor(&[256, 8], -0.3, 0.3, 1);
-    let srv = DeterministicServer::new(w, 64);
+    let srv = DeterministicServer::new(w, 64).unwrap();
     let q = queue(64, 256, 100);
     let p = PlatformProfile::zoo()[4];
     let rep = srv
@@ -29,7 +29,7 @@ fn repdl_outputs_do_not_depend_on_batch_composition() {
 #[test]
 fn arrival_order_processing_is_stable() {
     let w = uniform_tensor(&[32, 4], -0.5, 0.5, 2);
-    let srv = DeterministicServer::new(w, 5);
+    let srv = DeterministicServer::new(w, 5).unwrap();
     let q = queue(13, 32, 200);
     let a = srv.process_repro(&q).unwrap();
     let b = srv.process_repro(&q).unwrap();

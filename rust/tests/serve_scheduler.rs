@@ -1,0 +1,195 @@
+//! Conformance suite for the deterministic dynamic-batching scheduler
+//! (coordinator/serve/scheduler.rs).
+//!
+//! The claim under test is the serving-stack extension of RepDL §2.2.2:
+//! because every kernel is batch-size invariant and pool-size invariant,
+//! a request's output bits depend on nothing but (request, weights) — so
+//! they must be *identical* across shard counts, batch windows, worker
+//! pool sizes, concurrent client counts, and arrival interleavings. On
+//! top of that, the scheduler's own bookkeeping (tickets → shards →
+//! batches) must be a pure function of arrival order, proven via the
+//! executed-batch trace.
+
+use repdl::coordinator::{DeterministicServer, ServeReplica, ServeScheduler};
+use repdl::rng::uniform_tensor;
+use repdl::tensor::{matmul, Tensor, WorkerPool};
+use std::sync::Arc;
+
+fn server(d_in: usize, d_out: usize, max_batch: usize, seed: u64) -> Arc<DeterministicServer> {
+    let w = uniform_tensor(&[d_in, d_out], -0.3, 0.3, seed);
+    Arc::new(DeterministicServer::new(w, max_batch).unwrap())
+}
+
+fn queue(n: usize, d: usize, seed: u64) -> Vec<Tensor> {
+    (0..n)
+        .map(|i| uniform_tensor(&[d], -1.0, 1.0, seed + i as u64))
+        .collect()
+}
+
+/// The reference bits: one request at a time, straight through `matmul`.
+fn reference(srv: &DeterministicServer, q: &[Tensor]) -> Vec<Tensor> {
+    q.iter()
+        .map(|r| {
+            matmul(&r.reshape(&[1, srv.d_in()]).unwrap(), &srv.weights).unwrap()
+        })
+        .collect()
+}
+
+/// Strict bit equality on the raw f32 payloads (outputs are rank-1
+/// rows, the reference keeps its [1, d] shape — compare payloads, not
+/// dims; `==` on f32 would conflate -0.0/0.0 and reject equal NaNs).
+fn bits_eq(a: &[f32], b: &[f32]) -> bool {
+    a.len() == b.len() && a.iter().zip(b.iter()).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+#[test]
+fn bits_invariant_across_shards_windows_and_pool_sizes() {
+    let srv = server(96, 8, 8, 3);
+    let q = queue(30, 96, 500);
+    let want = reference(&srv, &q);
+    for shards in [1usize, 2, 4] {
+        for window in [1usize, 3, 16] {
+            for lanes in [1usize, 3] {
+                let sched = ServeScheduler::sharded(
+                    Arc::clone(&srv),
+                    shards,
+                    window,
+                    WorkerPool::shared(lanes),
+                )
+                .unwrap();
+                let outs = sched.process_all(&q).unwrap();
+                for (r, (o, w)) in outs.iter().zip(want.iter()).enumerate() {
+                    assert!(
+                        bits_eq(o.data(), w.data()),
+                        "request {r} bits changed at shards={shards} window={window} lanes={lanes}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn bits_invariant_across_concurrent_client_counts() {
+    let srv = server(64, 8, 8, 9);
+    let q = queue(40, 64, 700);
+    let want = reference(&srv, &q);
+    for shards in [1usize, 2, 4] {
+        for clients in [1usize, 2, 5] {
+            let sched = ServeScheduler::sharded(
+                Arc::clone(&srv),
+                shards,
+                4,
+                WorkerPool::shared(2),
+            )
+            .unwrap();
+            // each client owns an interleaved slice; submission order
+            // across clients is whatever the OS scheduler makes it —
+            // per-request bits must not care
+            let ok = std::thread::scope(|s| {
+                let handles: Vec<_> = (0..clients)
+                    .map(|c| {
+                        let (sched, q, want) = (&sched, &q, &want);
+                        s.spawn(move || {
+                            sched
+                                .replay_slice(q, c, clients)
+                                .unwrap()
+                                .into_iter()
+                                .all(|(i, o)| bits_eq(o.data(), want[i].data()))
+                        })
+                    })
+                    .collect();
+                handles.into_iter().all(|h| h.join().unwrap())
+            });
+            assert!(ok, "bits changed at shards={shards} clients={clients}");
+        }
+    }
+}
+
+#[test]
+fn batch_composition_is_a_pure_function_of_tickets() {
+    // the executed-batch trace must equal the closed form: shard s gets
+    // tickets ≡ s (mod shards) in order, chunked into `window`-sized
+    // batches with one trailing partial from the flush — independent of
+    // dispatcher wake-up timing (run several times to let timing vary)
+    for round in 0..3u64 {
+        let srv = server(32, 4, 16, 20 + round);
+        let (n, shards, window) = (23usize, 3usize, 4usize);
+        let q = queue(n, 32, 900 + round);
+        let sched = ServeScheduler::sharded(
+            Arc::clone(&srv),
+            shards,
+            window,
+            WorkerPool::shared(2),
+        )
+        .unwrap();
+        sched.process_all(&q).unwrap();
+        let mut want: Vec<(usize, Vec<u64>)> = Vec::new();
+        for s in 0..shards {
+            let tickets: Vec<u64> =
+                (0..n as u64).filter(|t| (*t as usize) % shards == s).collect();
+            for chunk in tickets.chunks(window) {
+                want.push((s, chunk.to_vec()));
+            }
+        }
+        want.sort_by_key(|(_, t)| t[0]);
+        let got = sched.trace();
+        assert_eq!(got.len(), want.len(), "round {round}: {got:?}");
+        for (g, (shard, tickets)) in got.iter().zip(want.iter()) {
+            assert_eq!(g.shard, *shard, "round {round}");
+            assert_eq!(&g.tickets, tickets, "round {round}");
+        }
+    }
+}
+
+#[test]
+fn replicas_with_private_pools_match_shared_pool_bits() {
+    let srv = server(48, 8, 8, 31);
+    let q = queue(17, 48, 40);
+    let want = reference(&srv, &q);
+    // private per-replica pools of *different* sizes — still the same bits
+    let replicas: Vec<ServeReplica> = [1usize, 2, 4]
+        .iter()
+        .map(|&lanes| ServeReplica::new(Arc::clone(&srv), WorkerPool::shared(lanes)))
+        .collect();
+    let sched = ServeScheduler::new(replicas, 5).unwrap();
+    let outs = sched.process_all(&q).unwrap();
+    for (o, w) in outs.iter().zip(want.iter()) {
+        assert!(bits_eq(o.data(), w.data()), "private-pool replica changed bits");
+    }
+}
+
+#[test]
+fn malformed_requests_fail_alone_and_cleanly() {
+    let srv = server(16, 4, 8, 5);
+    let sched =
+        ServeScheduler::sharded(Arc::clone(&srv), 2, 4, WorkerPool::shared(1)).unwrap();
+    let good = queue(6, 16, 80);
+    // wrong length is rejected at submit — same Error::shape style as
+    // check_request, and it never consumes a ticket or poisons a batch
+    assert!(sched.submit(uniform_tensor(&[17], -1.0, 1.0, 1)).is_err());
+    assert!(sched.submit(Tensor::zeros(&[0])).is_err());
+    let outs = sched.process_all(&good).unwrap();
+    let want = reference(&srv, &good);
+    for (o, w) in outs.iter().zip(want.iter()) {
+        assert!(bits_eq(o.data(), w.data()));
+    }
+}
+
+#[test]
+fn drop_drains_in_flight_requests() {
+    let srv = server(24, 4, 8, 6);
+    let q = queue(5, 24, 60);
+    let want = reference(&srv, &q);
+    let pending: Vec<_> = {
+        let sched =
+            ServeScheduler::sharded(Arc::clone(&srv), 2, 64, WorkerPool::shared(2)).unwrap();
+        // window 64 never fills and nobody flushes — drop must still
+        // answer every submitted request (close drains partial batches)
+        q.iter().map(|r| sched.submit(r.clone()).unwrap()).collect()
+    };
+    for (p, w) in pending.into_iter().zip(want.iter()) {
+        let o = p.wait().unwrap();
+        assert!(bits_eq(o.data(), w.data()), "drop lost or corrupted a request");
+    }
+}
