@@ -72,14 +72,17 @@ def sum_pairwise_ref(x):
 
 def softmax_rows_ref(x):
     """Fixed-graph softmax with numpy exp (value reference only — the
-    exp differs across libms, which is the paper's point; use allclose)."""
+    exp differs across libms, which is the paper's point; use allclose).
+    Row max follows the canonical ``max_wins`` rule (NaN wins, first
+    occurrence kept — rust/src/tensor/reduce.rs; identical to ``v > m``
+    on the finite data this reference is used with)."""
     x = np.asarray(x, np.float32)
     out = np.zeros_like(x)
     for r in range(x.shape[0]):
         row = x[r]
         m = row[0]
         for v in row[1:]:
-            if v > m:
+            if (np.isnan(v) and not np.isnan(m)) or v > m:
                 m = v
         e = np.exp((row - m).astype(np.float32)).astype(np.float32)
         denom = sum_seq_ref(e)

@@ -186,15 +186,25 @@ def sum_pairwise(xs):
     return F32(sum_pairwise(xs[:m]) + sum_pairwise(xs[m:]))
 
 
+def max_wins(v, m):
+    """The canonical comparison-reduction update rule
+    (rust/src/tensor/reduce.rs `max_wins`): NaN beats every number,
+    otherwise strictly-greater — so the first of equal maxima, and the
+    first NaN, is kept. On finite inputs this is identical to the old
+    plain ``v > m`` scan, which is why the committed fixtures did not
+    change when the NaN-rule unification migration landed (DESIGN.md §8)."""
+    return (np.isnan(v) and not np.isnan(m)) or v > m
+
+
 def softmax_rows(x):
-    """Fixed graph: first-max -> subtract -> rexp -> sequential sum ->
-    divide (rust/src/nn/softmax.rs)."""
+    """Fixed graph: row max (max_wins rule) -> subtract -> rexp ->
+    sequential sum -> divide (rust/src/nn/softmax.rs)."""
     rows, c = x.shape
     out = np.zeros((rows, c), dtype=F32)
     for r in range(rows):
         m = x[r, 0]
         for v in x[r, 1:]:
-            if v > m:
+            if max_wins(v, m):
                 m = v
         denom = F32(0.0)
         for j in range(c):

@@ -22,11 +22,11 @@
 
 use repdl::baseline::{baseline_matmul, baseline_softmax_rows, PlatformProfile};
 use repdl::bench_harness::{
-    allocs_during, bench, bench_json_path, bench_threads, row, row_rate, section,
+    allocs_during, bench, bench_json_path, bench_once, bench_threads, row, row_rate, section,
     write_bench_json, CountingAllocator, JsonObj,
 };
 use repdl::coordinator::{
-    DeterministicServer, NumericsMode, ServeScheduler, Trainer, TrainerConfig,
+    DeterministicServer, NumericsMode, ServeConfig, ServeScheduler, Trainer, TrainerConfig,
 };
 use std::sync::Arc;
 use repdl::nn::softmax_rows;
@@ -285,6 +285,65 @@ fn main() {
                 .int("d_out", 16)
                 .num("median_ns", st.median_ns)
                 .num("req_per_s", st.per_sec(queue.len()))
+                .int("allocs_per_call", allocs),
+        );
+    }
+    // cache × admission-depth grid: every request appears twice in the
+    // replayed queue, so a warm memo answers half the traffic; the
+    // depth cap exercises the deterministic backpressure protocol
+    // (rejection → flush → resubmit) on the same run. Cache-off and
+    // depth-off cells anchor the comparison. Single shard + single
+    // submitter on purpose: that makes the emitted hits/misses/
+    // evictions/rejected counters event-sequence-pure (multi-shard
+    // dispatchers interleave cache inserts in thread-timing order under
+    // eviction pressure — bits never change, but counters would, and
+    // these rows feed the CI regression gate).
+    section("E5: serve cache × admission-depth grid");
+    let repeated: Vec<Tensor> =
+        queue.iter().chain(queue.iter()).cloned().collect();
+    let cache_grid: &[(usize, usize)] =
+        if smoke { &[(0, 0), (64, 32)] } else { &[(0, 0), (64, 0), (64, 32), (16, 32)] };
+    for &(cap, depth) in cache_grid {
+        let cfg = ServeConfig {
+            batch_window,
+            max_queue_depth: (depth > 0).then_some(depth),
+            cache_capacity: cap,
+            log: false,
+        };
+        let sched =
+            ServeScheduler::sharded_with(Arc::clone(&server), 1, WorkerPool::shared(lanes), cfg)
+                .unwrap();
+        // cold replay fills the memo; the measured replays are warm
+        sched.process_all_with_backpressure(&repeated).unwrap();
+        let st = bench_once(&format!("serve cache cap={cap} depth={depth}"), samples, || {
+            sched.process_all_with_backpressure(&repeated).unwrap();
+        });
+        // counters are cumulative across the whole run — snapshot around
+        // ONE warm replay so the emitted hits/misses/evictions/rejected
+        // describe a single replay regardless of the sample count
+        let cs0 = sched.cache_stats().unwrap_or_default();
+        let rej0 = sched.rejected();
+        let (allocs, _) =
+            allocs_during(|| sched.process_all_with_backpressure(&repeated).unwrap());
+        let cs = sched.cache_stats().unwrap_or_default();
+        serve_entries.push(
+            JsonObj::new()
+                .s("kernel", "cache")
+                .int("requests", repeated.len() as u64)
+                .int("shards", 1)
+                .int("clients", 1)
+                .int("batch_window", batch_window as u64)
+                .int("cache_capacity", cap as u64)
+                .int("max_queue_depth", depth as u64)
+                .int("pool_lanes", lanes as u64)
+                .int("d_in", 256)
+                .int("d_out", 16)
+                .num("median_ns", st.median_ns)
+                .num("req_per_s", st.per_sec(repeated.len()))
+                .int("hits", cs.hits - cs0.hits)
+                .int("misses", cs.misses - cs0.misses)
+                .int("evictions", cs.evictions - cs0.evictions)
+                .int("rejected", sched.rejected() - rej0)
                 .int("allocs_per_call", allocs),
         );
     }

@@ -2,7 +2,7 @@
 
 use crate::rnum::special::{rgelu_tanh, rsigmoid, rtanh};
 use crate::rnum::{rexp, rlog};
-use crate::tensor::{matmul, sum_axis, Conv2dParams, Tensor};
+use crate::tensor::{matmul, max_pool2d_argmax, max_wins, sum_axis, Conv2dParams, Tensor};
 use crate::{Error, Result};
 
 /// Handle to a tape node.
@@ -326,10 +326,11 @@ impl Tape {
         let mut probs = Tensor::zeros(&[bsz, c]);
         for i in 0..bsz {
             let row = lv.row(i);
-            // fixed graph: max (first-max rule), subtract, rexp, seq-sum
+            // fixed graph: max (canonical max_wins rule — NaN wins, first
+            // occurrence; DESIGN.md §8 migration), subtract, rexp, seq-sum
             let mut m = row[0];
             for &v in &row[1..] {
-                if v > m {
+                if max_wins(v, m) {
                     m = v;
                 }
             }
@@ -481,6 +482,38 @@ impl Tape {
                         }
                     }
                     vec![dt]
+                }),
+            },
+            rg,
+        ))
+    }
+
+    /// Max pooling (kernel = stride, valid padding) with a deterministic
+    /// backward. Forward and argmax come from **one scan**
+    /// ([`max_pool2d_argmax`], same seed + canonical [`max_wins`] order
+    /// as the pooled `max_pool2d` kernel — NaN wins, first occurrence);
+    /// backward scatters each output gradient to that recorded index, so
+    /// the gradient flows to exactly the element whose bits the forward
+    /// returned, NaN/tie windows included (NaN-rule unification
+    /// migration, DESIGN.md §8). Windows are disjoint (kernel = stride),
+    /// so the scatter is race-free.
+    pub fn max_pool2d(&mut self, x: Var, k: usize) -> Result<Var> {
+        let xv = self.value_ref(x);
+        let (out, argmax) = max_pool2d_argmax(xv, k)?;
+        let xd = xv.dims().to_vec();
+        let n_in = xv.numel();
+        let rg = self.req(x);
+        Ok(self.push(
+            out,
+            Op::Node {
+                parents: vec![x.0],
+                backward: Box::new(move |g, _| {
+                    let mut dx = Tensor::zeros(&[n_in]);
+                    // disjoint windows: each input index wins at most once
+                    for (e, &src) in argmax.iter().enumerate() {
+                        dx.data_mut()[src] += g.data()[e];
+                    }
+                    vec![dx.reshape(&xd).unwrap()]
                 }),
             },
             rg,
@@ -833,6 +866,85 @@ mod tests {
             &x0,
             2e-2,
         );
+    }
+
+    #[test]
+    fn max_pool_grad_matches_finite_difference() {
+        let x0 = lcg(&[1, 2, 4, 4], 15);
+        check_grad(
+            |t, x| {
+                let y = t.max_pool2d(x, 2).unwrap();
+                t.mean_all(y)
+            },
+            &x0,
+            1e-2,
+        );
+    }
+
+    #[test]
+    fn max_pool_forward_backward_agree_on_nans_and_ties() {
+        // one 4x4 plane, 2x2 windows chosen to exercise every rule case:
+        //   window (0,0): NaN mid-window      → NaN wins, first occurrence
+        //   window (0,1): exact tie           → first occurrence wins
+        //   window (1,0): two NaNs, different payloads → FIRST payload kept
+        //   window (1,1): plain finite max
+        let nan_a = f32::from_bits(0x7fc0_0001);
+        let nan_b = f32::from_bits(0x7fc0_0002);
+        let x0 = Tensor::from_vec(
+            &[1, 1, 4, 4],
+            vec![
+                1.0, 2.0, /* | */ 7.0, 5.0, //
+                f32::NAN, 0.5, /* | */ 3.0, 7.0, //
+                nan_a, 4.0, /* | */ -1.0, 6.0, //
+                2.0, nan_b, /* | */ 0.0, 3.0,
+            ],
+        )
+        .unwrap();
+        let mut t = Tape::new();
+        let x = t.param(x0.clone());
+        let y = t.max_pool2d(x, 2).unwrap();
+        let yv = t.value(y);
+        // the forward agrees with max_axis over each flattened window
+        // (shared max_wins rule), payload bits included
+        let wins = [
+            vec![1.0, 2.0, f32::NAN, 0.5],
+            vec![7.0, 5.0, 3.0, 7.0],
+            vec![nan_a, 4.0, 2.0, nan_b],
+            vec![-1.0, 6.0, 0.0, 3.0],
+        ];
+        let want_idx = [2usize, 0, 0, 1]; // in-window argmax per max_wins
+        for (wi, (win, &idx)) in wins.iter().zip(want_idx.iter()).enumerate() {
+            let row = Tensor::from_vec(&[1, 4], win.clone()).unwrap();
+            let m = crate::tensor::max_axis(&row, 1).unwrap().data()[0];
+            assert_eq!(
+                yv.data()[wi].to_bits(),
+                m.to_bits(),
+                "window {wi}: pooled max must equal max_axis bits"
+            );
+            assert_eq!(yv.data()[wi].to_bits(), win[idx].to_bits(), "window {wi}");
+        }
+        // backward: the gradient lands on exactly the element whose bits
+        // the forward returned — one nonzero per window, at the max_wins
+        // argmax (NaN windows included; ties go to the first occurrence)
+        let loss = t.mean_all(y);
+        t.backward(loss).unwrap();
+        let g = t.grad(x).unwrap();
+        let want_src = [4usize, 2, 8, 11]; // flat 4x4 indices per window
+        let mut nonzero = Vec::new();
+        for (i, &gv) in g.data().iter().enumerate() {
+            if gv != 0.0 {
+                assert_eq!(gv, 0.25, "uniform upstream grad");
+                nonzero.push(i);
+            }
+        }
+        assert_eq!(nonzero, want_src, "gradient must follow the max_wins argmax");
+        for (&src, win_i) in want_src.iter().zip(0..4) {
+            assert_eq!(
+                x0.data()[src].to_bits(),
+                yv.data()[win_i].to_bits(),
+                "grad target must hold the forward output bits"
+            );
+        }
     }
 
     #[test]

@@ -110,6 +110,10 @@ pub fn baseline_softmax_rows(x: &Tensor, p: &PlatformProfile) -> Result<Tensor> 
     let mut out = Tensor::zeros(d);
     for r in 0..rows {
         let w = x.row(r);
+        // INTENTIONALLY the old plain `v > m` scan (NaN never wins): this
+        // models the conventional, non-reproducible stack and is exempt
+        // from the NaN-rule unification migration (DESIGN.md §8) — do NOT
+        // route it through `tensor::reduce::max_wins`.
         let mut m = w[0];
         for &v in &w[1..] {
             if v > m {

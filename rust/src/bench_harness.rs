@@ -105,6 +105,23 @@ pub fn bench_threads(
     summarize(name, xs, samples.max(1))
 }
 
+/// Measure a **stateful** workload: one sample = exactly one call of
+/// `f`, no warmup call and no iteration autoscaling. Use this when the
+/// workload mutates shared state the measurement cares about (a memo
+/// cache warming up, an admission gate accumulating rejections) —
+/// [`bench`]'s hidden warmup + inner iteration loop would silently run
+/// the workload extra times and distort those counters.
+pub fn bench_once<R>(name: &str, samples: usize, mut f: impl FnMut() -> R) -> Stats {
+    let samples = samples.max(1);
+    let mut xs = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t = Instant::now();
+        std::hint::black_box(f());
+        xs.push(t.elapsed().as_nanos().max(1) as f64);
+    }
+    summarize(name, xs, samples)
+}
+
 /// Print a section header.
 pub fn section(title: &str) {
     println!("\n=== {title} ===");
@@ -300,6 +317,17 @@ mod tests {
         std::fs::remove_file(path).ok();
         assert!(doc.contains("\"bench\": \"gemm\""));
         assert!(doc.contains("{\"kernel\":\"a\",\"n\":1}"));
+    }
+
+    #[test]
+    fn bench_once_calls_exactly_samples_times() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let calls = AtomicUsize::new(0);
+        let st = bench_once("bench_once smoke", 3, || {
+            calls.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(calls.load(Ordering::Relaxed), 3, "no hidden warmup or autoscaling");
+        assert!(st.median_ns > 0.0);
     }
 
     #[test]

@@ -53,6 +53,16 @@ impl Args {
         self.get_usize(key, default).max(min)
     }
 
+    /// Optional count flag where `0` (or absence, or garbage) means
+    /// "off" — for limits like `--max-queue-depth`, whose unset state is
+    /// "unbounded" rather than a number.
+    pub fn get_opt_usize(&self, key: &str) -> Option<usize> {
+        match self.get_usize(key, 0) {
+            0 => None,
+            n => Some(n),
+        }
+    }
+
     /// Typed flag with default.
     pub fn get_u64(&self, key: &str, default: u64) -> u64 {
         self.flags.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
@@ -117,6 +127,14 @@ mod tests {
         assert_eq!(a.get_usize_at_least("shards", 1, 1), 1);
         assert_eq!(a.get_usize_at_least("batch-window", 16, 1), 7);
         assert_eq!(p("serve").get_usize_at_least("shards", 2, 1), 2);
+    }
+
+    #[test]
+    fn opt_usize_zero_and_absent_mean_off() {
+        assert_eq!(p("serve --max-queue-depth 32").get_opt_usize("max-queue-depth"), Some(32));
+        assert_eq!(p("serve --max-queue-depth 0").get_opt_usize("max-queue-depth"), None);
+        assert_eq!(p("serve").get_opt_usize("max-queue-depth"), None);
+        assert_eq!(p("serve --max-queue-depth lots").get_opt_usize("max-queue-depth"), None);
     }
 
     #[test]

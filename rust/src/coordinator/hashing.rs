@@ -33,6 +33,16 @@ pub fn hash_curve(curve: &[f32]) -> String {
     hex(&h.finalize())
 }
 
+/// SHA-256 fingerprint of one tensor — shape-framed raw f32 bit
+/// patterns, exactly the [`hash_params`] framing for a single-tensor
+/// list. This is the content address the serve subsystem uses for
+/// requests (memo-cache keys) and responses (audit-log entries): two
+/// tensors share a hash iff they share shape and every payload bit
+/// (-0.0 vs 0.0 and NaN payloads all distinguish).
+pub fn hash_tensor(t: &Tensor) -> String {
+    hash_params(&[t])
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -52,5 +62,19 @@ mod tests {
     fn curve_hash() {
         assert_eq!(hash_curve(&[1.0, 2.0]), hash_curve(&[1.0, 2.0]));
         assert_ne!(hash_curve(&[1.0, 2.0]), hash_curve(&[2.0, 1.0]));
+    }
+
+    #[test]
+    fn tensor_hash_is_shape_and_bit_sensitive() {
+        let a = Tensor::from_vec(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let b = Tensor::from_vec(&[4], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        // same payload, different shape → different content address
+        assert_ne!(hash_tensor(&a), hash_tensor(&b));
+        assert_eq!(hash_tensor(&a), hash_params(&[&a]));
+        // NaN payload bits distinguish (the serve log must notice a
+        // response whose NaN payload drifted)
+        let n1 = Tensor::from_vec(&[1], vec![f32::from_bits(0x7fc0_0001)]).unwrap();
+        let n2 = Tensor::from_vec(&[1], vec![f32::from_bits(0x7fc0_0002)]).unwrap();
+        assert_ne!(hash_tensor(&n1), hash_tensor(&n2));
     }
 }

@@ -11,10 +11,10 @@ pub mod serve;
 pub mod trainer;
 pub mod verifier;
 
-pub use hashing::{hash_curve, hash_params, hex};
+pub use hashing::{hash_curve, hash_params, hash_tensor, hex};
 pub use serve::{
-    BatchTrace, DeterministicServer, Pending, ServeReplica, ServeReport, ServeScheduler,
-    ServeThroughput,
+    BatchTrace, CacheStats, DeterministicServer, LogEntry, MemoCache, Pending, ReplayReport,
+    ResponseLog, ServeConfig, ServeReplica, ServeReport, ServeScheduler, ServeThroughput,
 };
 pub use trainer::{NumericsMode, TrainReport, Trainer, TrainerConfig};
 pub use verifier::{compare_runs, first_divergence, Comparison};

@@ -1,0 +1,233 @@
+//! Content-addressed memo cache for served responses.
+//!
+//! Keyed by the request's SHA-256 content address
+//! ([`crate::coordinator::hashing::hash_tensor`]); a hit returns a clone
+//! of the stored response tensor — **bit-identical** to recomputation by
+//! construction, because the stored response was itself produced by the
+//! batch-invariant kernels (any batch composition yields the same
+//! per-request bits, so "the batch that filled the cache" and "the batch
+//! that would have recomputed" agree on every bit).
+//!
+//! Eviction is deterministic *logical-clock* FIFO: each entry carries
+//! the ticket of the request that inserted it, and when the cache is
+//! over capacity the entry with the **smallest insertion ticket** is
+//! evicted. No wall-clock LRU: which entries a cache holds after a given
+//! insert sequence is a pure function of the (key, ticket) pairs
+//! inserted — never of when lookups happened. A hit does not refresh an
+//! entry (that would reintroduce access-order — i.e. timing — into the
+//! eviction decision), and a duplicate insert keeps the existing entry
+//! (first insertion wins, the same first-occurrence discipline as the
+//! `max_wins` comparison rule).
+//!
+//! Scope of the determinism claim: the eviction *rule* is a pure
+//! function of the insert sequence it is fed. With a **single shard**
+//! (one dispatcher) that sequence is itself event-sequence-pure, so
+//! contents and hit/miss/eviction counters are fully reproducible. With
+//! multiple shards, concurrent dispatchers interleave their inserts in
+//! thread-timing order, so under eviction pressure *which* lookups hit —
+//! the counters, never the bits — can vary run to run; served bits stay
+//! identical in every case because a hit is bit-equal to recomputation.
+//! (The deterministic-stats bench cells therefore run single-shard.)
+//!
+//! The scheduler consults the cache at **dispatch** time, not at submit
+//! time: hits and misses travel through the same ticket/batch machinery,
+//! so admission arithmetic, batch composition and the executed trace are
+//! identical with the cache on or off — only the arithmetic actually
+//! performed shrinks (DESIGN.md §8).
+
+use crate::tensor::Tensor;
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+/// Cache occupancy and traffic counters (all monotone except `len`).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Lookups answered from the cache.
+    pub hits: u64,
+    /// Lookups that fell through to computation.
+    pub misses: u64,
+    /// Entries evicted by the capacity rule.
+    pub evictions: u64,
+    /// Entries currently held.
+    pub len: usize,
+    /// Maximum entries held (the capacity rule's bound).
+    pub capacity: usize,
+}
+
+struct CacheInner {
+    /// request-hash → (insertion ticket, response).
+    by_key: BTreeMap<String, (u64, Tensor)>,
+    /// insertion ticket → request-hash (the deterministic eviction order).
+    by_ticket: BTreeMap<u64, String>,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+}
+
+/// Thread-safe memo cache (see module docs). `BTreeMap`s on both
+/// indices, so even internal iteration order is deterministic — no
+/// hash-seed dependence anywhere.
+pub struct MemoCache {
+    inner: Mutex<CacheInner>,
+    capacity: usize,
+}
+
+impl MemoCache {
+    /// New cache holding at most `capacity` responses (`capacity ≥ 1`;
+    /// a capacity of zero means "no cache" and is handled by the
+    /// scheduler never constructing one).
+    pub fn new(capacity: usize) -> MemoCache {
+        MemoCache {
+            inner: Mutex::new(CacheInner {
+                by_key: BTreeMap::new(),
+                by_ticket: BTreeMap::new(),
+                hits: 0,
+                misses: 0,
+                evictions: 0,
+            }),
+            capacity: capacity.max(1),
+        }
+    }
+
+    /// Look up a request by content address. Counts a hit or a miss;
+    /// deliberately does **not** refresh the entry's eviction position.
+    pub fn lookup(&self, key: &str) -> Option<Tensor> {
+        let mut inner = self.inner.lock().unwrap();
+        let hit = inner.by_key.get(key).map(|(_, response)| response.clone());
+        match hit {
+            Some(r) => {
+                inner.hits += 1;
+                Some(r)
+            }
+            None => {
+                inner.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Insert a computed response under the inserting request's ticket.
+    /// Duplicate keys — and duplicate tickets, which the scheduler never
+    /// produces but an external caller could — keep the existing entry
+    /// (first insertion wins on both axes, so the two indices can never
+    /// fall out of lockstep); over capacity, the smallest-ticket entry
+    /// is evicted.
+    pub fn insert(&self, key: &str, ticket: u64, response: &Tensor) {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.by_key.contains_key(key) || inner.by_ticket.contains_key(&ticket) {
+            return;
+        }
+        inner.by_key.insert(key.to_string(), (ticket, response.clone()));
+        inner.by_ticket.insert(ticket, key.to_string());
+        while inner.by_key.len() > self.capacity {
+            // deterministic: evict the smallest insertion ticket present
+            let (&t, _) = inner.by_ticket.iter().next().unwrap();
+            let victim = inner.by_ticket.remove(&t).unwrap();
+            inner.by_key.remove(&victim);
+            inner.evictions += 1;
+        }
+    }
+
+    /// Current counters and occupancy.
+    pub fn stats(&self) -> CacheStats {
+        let inner = self.inner.lock().unwrap();
+        CacheStats {
+            hits: inner.hits,
+            misses: inner.misses,
+            evictions: inner.evictions,
+            len: inner.by_key.len(),
+            capacity: self.capacity,
+        }
+    }
+
+    /// The keys currently held, in insertion-ticket order — exposed so
+    /// tests can pin the eviction rule as a pure function of tickets.
+    pub fn held_keys_by_ticket(&self) -> Vec<(u64, String)> {
+        let inner = self.inner.lock().unwrap();
+        inner.by_ticket.iter().map(|(&t, k)| (t, k.clone())).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn resp(v: f32) -> Tensor {
+        Tensor::from_vec(&[2], vec![v, v + 1.0]).unwrap()
+    }
+
+    #[test]
+    fn hit_returns_bit_identical_response() {
+        let c = MemoCache::new(4);
+        let r = Tensor::from_vec(&[3], vec![0.1, -0.0, f32::from_bits(0x7fc0_0007)]).unwrap();
+        c.insert("k", 5, &r);
+        let got = c.lookup("k").unwrap();
+        assert!(got.bit_eq(&r), "hit must preserve every bit, -0.0 and NaN payload included");
+        assert!(c.lookup("absent").is_none());
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses, s.len), (1, 1, 1));
+    }
+
+    #[test]
+    fn eviction_is_a_pure_function_of_insertion_tickets() {
+        // capacity 3, inserts at tickets 10, 2, 7, 20, 15: after each
+        // overflow the smallest ticket present is evicted — regardless of
+        // the order the inserts arrived in
+        let orders: [&[(u64, &str)]; 2] = [
+            &[(10, "a"), (2, "b"), (7, "c"), (20, "d"), (15, "e")],
+            &[(20, "d"), (2, "b"), (15, "e"), (10, "a"), (7, "c")],
+        ];
+        let mut finals = Vec::new();
+        for inserts in orders {
+            let c = MemoCache::new(3);
+            for &(t, k) in inserts {
+                c.insert(k, t, &resp(t as f32));
+            }
+            finals.push(c.held_keys_by_ticket());
+        }
+        // the held set is the 3 largest insertion tickets, whatever the
+        // arrival interleaving was
+        assert_eq!(finals[0], finals[1]);
+        let keys: Vec<u64> = finals[0].iter().map(|(t, _)| *t).collect();
+        assert_eq!(keys, vec![10, 15, 20]);
+        let c = MemoCache::new(3);
+        for &(t, k) in orders[0] {
+            c.insert(k, t, &resp(t as f32));
+        }
+        assert_eq!(c.stats().evictions, 2);
+    }
+
+    #[test]
+    fn duplicate_ticket_with_distinct_key_is_dropped_not_desynced() {
+        // the scheduler never reuses a ticket, but MemoCache is public:
+        // a ticket collision must not desync by_key/by_ticket (which
+        // would leave unevictable entries and could drain by_ticket
+        // empty while by_key is over capacity → eviction panic)
+        let c = MemoCache::new(1);
+        c.insert("a", 5, &resp(1.0));
+        c.insert("b", 5, &resp(2.0)); // same ticket, different key: dropped
+        c.insert("c", 5, &resp(3.0));
+        assert!(c.lookup("a").unwrap().bit_eq(&resp(1.0)));
+        assert!(c.lookup("b").is_none() && c.lookup("c").is_none());
+        assert_eq!(c.held_keys_by_ticket(), vec![(5, "a".to_string())]);
+        // and eviction still works past the collision
+        c.insert("d", 9, &resp(4.0));
+        assert_eq!(c.held_keys_by_ticket(), vec![(9, "d".to_string())]);
+    }
+
+    #[test]
+    fn duplicate_insert_keeps_first_and_hits_do_not_refresh() {
+        let c = MemoCache::new(2);
+        c.insert("x", 1, &resp(1.0));
+        c.insert("x", 9, &resp(9.0)); // duplicate key: first wins
+        assert!(c.lookup("x").unwrap().bit_eq(&resp(1.0)));
+        c.insert("y", 2, &resp(2.0));
+        // many hits on x must NOT save it: eviction ignores access order
+        for _ in 0..10 {
+            c.lookup("x").unwrap();
+        }
+        c.insert("z", 3, &resp(3.0));
+        assert!(c.lookup("x").is_none(), "x held the smallest ticket: evicted");
+        assert!(c.lookup("y").is_some() && c.lookup("z").is_some());
+    }
+}

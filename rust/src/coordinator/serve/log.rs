@@ -1,0 +1,128 @@
+//! Ticket-addressed response log — the serve scheduler's audit trail.
+//!
+//! Every answered request appends one [`LogEntry`]: its ticket, the
+//! SHA-256 content address of the request and of the response
+//! ([`crate::coordinator::hashing::hash_tensor`] — shape-framed raw f32
+//! bit patterns), and the id of the batch that served it (`batch_id` =
+//! the batch's first ticket, itself a pure function of the submit/flush
+//! event sequence). The request tensor is retained so a later audit can
+//! *re-execute* it: [`super::ServeScheduler::replay`] walks a ticket
+//! range, runs each logged request as a singleton batch on the shard
+//! that originally served it, and verifies bit-equality against the
+//! logged response hash — batch invariance is what makes a singleton
+//! re-execution a valid check of a batched original.
+//!
+//! Entries are keyed by ticket in a `BTreeMap`, so iteration order is
+//! ticket order regardless of which shard's dispatcher recorded first.
+//! The log records only *answered* requests: a batch that fails
+//! (exceptional — shapes are validated at submit) logs nothing, and
+//! rejected/closed submissions never reach a batch at all.
+
+use crate::tensor::Tensor;
+use std::collections::BTreeMap;
+use std::ops::Range;
+use std::sync::Mutex;
+
+/// One served request, as recorded by the shard dispatcher that
+/// answered it.
+#[derive(Clone, Debug)]
+pub struct LogEntry {
+    /// Arrival ticket (the log's address).
+    pub ticket: u64,
+    /// The request tensor itself, retained for replay.
+    pub request: Tensor,
+    /// Content address of the request (`hash_tensor`).
+    pub request_hash: String,
+    /// Content address of the response that was sent.
+    pub response_hash: String,
+    /// First ticket of the batch that served this request — a pure
+    /// function of the submit/flush event sequence, so two runs with the
+    /// same events log identical batch ids.
+    pub batch_id: u64,
+}
+
+/// Thread-safe ticket-addressed log (see module docs). Shared by the
+/// shard dispatchers via `Arc`; all reads return clones so no caller
+/// ever holds the internal lock across its own work.
+#[derive(Default)]
+pub struct ResponseLog {
+    entries: Mutex<BTreeMap<u64, LogEntry>>,
+}
+
+impl ResponseLog {
+    /// Empty log.
+    pub fn new() -> ResponseLog {
+        ResponseLog::default()
+    }
+
+    /// Append one entry (dispatcher-side). A ticket is answered exactly
+    /// once, so an existing entry for the same ticket would indicate a
+    /// scheduler bug — the first record wins and the duplicate is
+    /// dropped, keeping the log append-only.
+    pub fn record(&self, entry: LogEntry) {
+        self.entries.lock().unwrap().entry(entry.ticket).or_insert(entry);
+    }
+
+    /// Entry for one ticket, if that ticket has been answered.
+    pub fn get(&self, ticket: u64) -> Option<LogEntry> {
+        self.entries.lock().unwrap().get(&ticket).cloned()
+    }
+
+    /// Logged entries with tickets in `range`, in ticket order.
+    pub fn range(&self, range: Range<u64>) -> Vec<LogEntry> {
+        self.entries.lock().unwrap().range(range).map(|(_, e)| e.clone()).collect()
+    }
+
+    /// Number of answered requests recorded.
+    pub fn len(&self) -> usize {
+        self.entries.lock().unwrap().len()
+    }
+
+    /// True when nothing has been recorded yet.
+    pub fn is_empty(&self) -> bool {
+        self.entries.lock().unwrap().is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::hashing::hash_tensor;
+
+    fn entry(ticket: u64, v: f32, batch_id: u64) -> LogEntry {
+        let request = Tensor::from_vec(&[2], vec![v, -v]).unwrap();
+        let response = Tensor::from_vec(&[1], vec![v * 2.0]).unwrap();
+        LogEntry {
+            ticket,
+            request_hash: hash_tensor(&request),
+            response_hash: hash_tensor(&response),
+            request,
+            batch_id,
+        }
+    }
+
+    #[test]
+    fn range_is_ticket_ordered_regardless_of_record_order() {
+        let log = ResponseLog::new();
+        for t in [5u64, 1, 3, 0, 4, 2] {
+            log.record(entry(t, t as f32, t / 2));
+        }
+        let got: Vec<u64> = log.range(0..6).iter().map(|e| e.ticket).collect();
+        assert_eq!(got, vec![0, 1, 2, 3, 4, 5]);
+        let mid: Vec<u64> = log.range(2..5).iter().map(|e| e.ticket).collect();
+        assert_eq!(mid, vec![2, 3, 4]);
+        assert_eq!(log.len(), 6);
+        assert!(log.get(3).is_some());
+        assert!(log.get(9).is_none());
+    }
+
+    #[test]
+    fn duplicate_tickets_keep_the_first_record() {
+        let log = ResponseLog::new();
+        log.record(entry(7, 1.0, 7));
+        let first_hash = log.get(7).unwrap().response_hash.clone();
+        log.record(entry(7, 2.0, 7)); // would be a scheduler bug; dropped
+        assert_eq!(log.len(), 1);
+        assert_eq!(log.get(7).unwrap().response_hash, first_hash);
+    }
+}

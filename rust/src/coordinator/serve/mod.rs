@@ -10,7 +10,7 @@
 //! problem size (like cuDNN), so its per-request bits change with batch
 //! size — [`ServeReport`] quantifies that.
 //!
-//! The subsystem has two layers (DESIGN.md §7):
+//! The subsystem has four layers (DESIGN.md §7–§8):
 //!
 //! * [`replica`] — the model replica: [`DeterministicServer`] (weights
 //!   pre-packed once into microkernel panels, scratch-staged pooled
@@ -21,10 +21,22 @@
 //!   each is stamped with a monotone **ticket**, batch composition and
 //!   shard choice (`ticket % shards`) are pure functions of ticket
 //!   numbers — never of thread timing — and responses come back in
-//!   ticket order.
+//!   ticket order. [`ServeConfig`] adds the deterministic queue-depth
+//!   cap (reject by ticket arithmetic, typed `Error::Rejected`).
+//! * [`cache`] — [`MemoCache`], the content-addressed response memo
+//!   keyed by request hash, with logical-clock (insertion-ticket)
+//!   eviction; consulted at dispatch time so cache-on and cache-off
+//!   runs share tickets, batches and bits.
+//! * [`log`] — [`ResponseLog`], the ticket-addressed audit log of
+//!   request/response content hashes, re-checkable bit-exactly via
+//!   [`ServeScheduler::replay`].
 
+pub mod cache;
+pub mod log;
 pub mod replica;
 pub mod scheduler;
 
+pub use cache::{CacheStats, MemoCache};
+pub use log::{LogEntry, ResponseLog};
 pub use replica::{DeterministicServer, ServeReplica, ServeReport, ServeThroughput};
-pub use scheduler::{BatchTrace, Pending, ServeScheduler};
+pub use scheduler::{BatchTrace, Pending, ReplayReport, ServeConfig, ServeScheduler};

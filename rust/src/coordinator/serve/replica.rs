@@ -256,6 +256,11 @@ impl ServeReplica {
 
     /// Execute one batch on this replica's pool (one output row per
     /// request, bit-identical to `matmul(x, W)` for any pool size).
+    /// Batch invariance is also what makes the audit path sound: the
+    /// scheduler's `replay` re-executes logged requests as singleton
+    /// batches here and may demand bit-equality with responses that were
+    /// originally served from arbitrary batch compositions (or from the
+    /// memo cache, which those compositions filled).
     pub fn process(&self, batch: &[Tensor]) -> Result<Vec<Tensor>> {
         self.server.process_repro_in(&self.pool, batch)
     }

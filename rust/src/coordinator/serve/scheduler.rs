@@ -37,13 +37,46 @@
 //! Requests are validated at submit time (before a ticket is consumed),
 //! so a malformed request errors out on its own — it can never poison a
 //! batch or shift another request's ticket.
+//!
+//! On top of the batching core, the scheduler is an **admission + audit
+//! subsystem** (DESIGN.md §8):
+//!
+//! * **Deterministic admission control.** With
+//!   [`ServeConfig::max_queue_depth`] set, `submit` rejects by *ticket
+//!   arithmetic*: the in-flight count is `next_ticket − flushed_upto`
+//!   (tickets admitted since the latest flush cut) — never a wall-clock
+//!   or drain-progress quantity — so the accept/reject ticket set is a
+//!   pure function of the submit/flush event sequence: **for a fixed
+//!   event sequence** it is identical across shard counts, pool sizes
+//!   and cache on/off (concurrent clients racing the gate produce
+//!   whatever event sequence the OS interleaving makes — single-
+//!   submitter protocols like
+//!   [`ServeScheduler::process_all_with_backpressure`] fix the sequence
+//!   and are therefore fully reproducible, which is what
+//!   `tests/serve_admission.rs` pins). Rejection is the typed
+//!   [`Error::Rejected`] and consumes no ticket; capacity is released
+//!   by the `flush` *event* (the logical clock), not by dispatchers
+//!   draining (timing).
+//! * **Ticket-addressed response log** ([`super::log::ResponseLog`],
+//!   [`ServeConfig::log`]): every answered request records its request/
+//!   response content hashes and batch id; [`ServeScheduler::replay`]
+//!   re-executes a ticket range and verifies bit-equality.
+//! * **Content-addressed memo cache** ([`super::cache::MemoCache`],
+//!   [`ServeConfig::cache_capacity`]): consulted at *dispatch* time, so
+//!   tickets, batches and the trace are identical with the cache on or
+//!   off — and hits are bit-identical to recomputation because the
+//!   kernels are batch invariant.
 
 use std::collections::VecDeque;
+use std::ops::Range;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
+use super::cache::{CacheStats, MemoCache};
+use super::log::{LogEntry, ResponseLog};
 use super::replica::{check_request, DeterministicServer, ServeReplica};
+use crate::coordinator::hashing::hash_tensor;
 use crate::tensor::{PoolHandle, Tensor};
 use crate::{Error, Result};
 
@@ -108,7 +141,60 @@ struct Shard {
 
 struct Gate {
     next_ticket: u64,
+    /// Latest published flush cut — the logical clock that releases
+    /// admission capacity. In-flight = `next_ticket − flushed_upto`.
+    flushed_upto: u64,
+    /// Depth-cap rejections so far (event-sequence-pure, see `submit`).
+    rejected: u64,
     closed: bool,
+}
+
+/// Scheduler policy knobs beyond the replica set. `Default` reproduces
+/// the PR 3 behaviour exactly: unbounded admission, no cache, no log.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Maximum requests per dispatched batch (≥ 1).
+    pub batch_window: usize,
+    /// Deterministic queue-depth cap: at most this many tickets may be
+    /// in flight (`next_ticket − flushed_upto`) between flushes — a
+    /// submit arriving with the count already *at* the cap is rejected,
+    /// so the `depth + 1`-th consecutive unflushed submit is the first
+    /// refused (≥ 1 when set; `None` = unbounded). Measured purely in
+    /// ticket arithmetic against the flush logical clock, so overload
+    /// behaviour is a function of the event sequence, never of timing.
+    pub max_queue_depth: Option<usize>,
+    /// Memo-cache capacity in responses (`0` = cache disabled).
+    pub cache_capacity: usize,
+    /// Record every answered request in the ticket-addressed
+    /// [`ResponseLog`] (enables [`ServeScheduler::replay`]). The log
+    /// retains request tensors and grows with traffic — an audit tool,
+    /// not an always-on production default.
+    pub log: bool,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig { batch_window: 16, max_queue_depth: None, cache_capacity: 0, log: false }
+    }
+}
+
+/// Outcome of [`ServeScheduler::replay`] over a ticket range.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ReplayReport {
+    /// Logged entries re-executed.
+    pub replayed: usize,
+    /// Re-executions whose response hash differed from the log.
+    pub response_mismatches: usize,
+    /// Entries whose stored request no longer matches its own logged
+    /// request hash (log corruption; such entries are not re-executed).
+    pub request_mismatches: usize,
+}
+
+impl ReplayReport {
+    /// True when every replayed entry verified bit-exactly.
+    pub fn verified(&self) -> bool {
+        self.response_mismatches == 0 && self.request_mismatches == 0
+    }
 }
 
 /// Deterministic dynamic-batching front end over N sharded
@@ -119,20 +205,39 @@ pub struct ServeScheduler {
     gate: Mutex<Gate>,
     d_in: usize,
     batch_window: usize,
+    max_queue_depth: Option<usize>,
+    cache: Option<Arc<MemoCache>>,
+    log: Option<Arc<ResponseLog>>,
     dispatchers: Vec<JoinHandle<()>>,
 }
 
 impl ServeScheduler {
-    /// Build a scheduler over explicit replicas. All replicas must serve
+    /// Build a scheduler over explicit replicas with default policy
+    /// (unbounded admission, no cache, no log). All replicas must serve
     /// the same weight shape (they may — and usually should — share one
     /// `Arc`'d [`DeterministicServer`]); `batch_window` is the maximum
     /// requests per dispatched batch.
     pub fn new(replicas: Vec<ServeReplica>, batch_window: usize) -> Result<ServeScheduler> {
+        ServeScheduler::with_config(replicas, ServeConfig { batch_window, ..Default::default() })
+    }
+
+    /// Build a scheduler over explicit replicas with an explicit
+    /// [`ServeConfig`] (admission cap, memo cache, response log).
+    pub fn with_config(
+        replicas: Vec<ServeReplica>,
+        cfg: ServeConfig,
+    ) -> Result<ServeScheduler> {
         if replicas.is_empty() {
             return Err(Error::config("serve scheduler: need at least one replica"));
         }
+        let batch_window = cfg.batch_window;
         if batch_window == 0 {
             return Err(Error::config("serve scheduler: batch window must be >= 1"));
+        }
+        if cfg.max_queue_depth == Some(0) {
+            return Err(Error::config(
+                "serve scheduler: max queue depth must be >= 1 when set (0 rejects everything)",
+            ));
         }
         let d_in = replicas[0].server().d_in();
         let d_out = replicas[0].server().d_out();
@@ -160,21 +265,35 @@ impl ServeScheduler {
                 })
                 .collect(),
         );
+        let cache = (cfg.cache_capacity > 0).then(|| Arc::new(MemoCache::new(cfg.cache_capacity)));
+        let log = cfg.log.then(|| Arc::new(ResponseLog::new()));
         let mut dispatchers = Vec::with_capacity(shards.len());
         for i in 0..shards.len() {
             let sh = Arc::clone(&shards);
+            let cache = cache.clone();
+            let log = log.clone();
             dispatchers.push(
                 std::thread::Builder::new()
                     .name(format!("repdl-serve-{i}"))
-                    .spawn(move || dispatcher_loop(&sh[i], batch_window))
+                    .spawn(move || {
+                        dispatcher_loop(&sh[i], batch_window, cache.as_deref(), log.as_deref())
+                    })
                     .expect("failed to spawn serve dispatcher"),
             );
         }
         Ok(ServeScheduler {
             shards,
-            gate: Mutex::new(Gate { next_ticket: 0, closed: false }),
+            gate: Mutex::new(Gate {
+                next_ticket: 0,
+                flushed_upto: 0,
+                rejected: 0,
+                closed: false,
+            }),
             d_in,
             batch_window,
+            max_queue_depth: cfg.max_queue_depth,
+            cache,
+            log,
             dispatchers,
         })
     }
@@ -188,10 +307,25 @@ impl ServeScheduler {
         batch_window: usize,
         pool: PoolHandle,
     ) -> Result<ServeScheduler> {
+        ServeScheduler::sharded_with(
+            server,
+            shards,
+            pool,
+            ServeConfig { batch_window, ..Default::default() },
+        )
+    }
+
+    /// [`ServeScheduler::sharded`] with an explicit [`ServeConfig`].
+    pub fn sharded_with(
+        server: Arc<DeterministicServer>,
+        shards: usize,
+        pool: PoolHandle,
+        cfg: ServeConfig,
+    ) -> Result<ServeScheduler> {
         let replicas = (0..shards.max(1))
             .map(|_| ServeReplica::new(Arc::clone(&server), Arc::clone(&pool)))
             .collect();
-        ServeScheduler::new(replicas, batch_window)
+        ServeScheduler::with_config(replicas, cfg)
     }
 
     /// Number of replica shards.
@@ -204,18 +338,66 @@ impl ServeScheduler {
         self.batch_window
     }
 
+    /// The admission cap, if one is configured.
+    pub fn max_queue_depth(&self) -> Option<usize> {
+        self.max_queue_depth
+    }
+
+    /// In-flight ticket count by the admission rule's own arithmetic:
+    /// tickets admitted since the latest flush cut.
+    pub fn in_flight(&self) -> u64 {
+        let gate = self.gate.lock().unwrap();
+        gate.next_ticket - gate.flushed_upto
+    }
+
+    /// Depth-cap rejections so far.
+    pub fn rejected(&self) -> u64 {
+        self.gate.lock().unwrap().rejected
+    }
+
+    /// Memo-cache counters, when a cache is configured.
+    pub fn cache_stats(&self) -> Option<CacheStats> {
+        self.cache.as_ref().map(|c| c.stats())
+    }
+
+    /// The ticket-addressed response log, when logging is configured.
+    pub fn log(&self) -> Option<&ResponseLog> {
+        self.log.as_deref()
+    }
+
     /// Submit one request from any thread. Validates the shape *before*
     /// consuming a ticket (a malformed request can never shift another
-    /// request's ticket or poison a batch), stamps the monotone ticket,
-    /// and enqueues to shard `ticket % shards` under the same gate lock
-    /// — so every shard queue stays ticket-ordered by construction.
+    /// request's ticket or poison a batch), applies the deterministic
+    /// admission rule, stamps the monotone ticket, and enqueues to shard
+    /// `ticket % shards` under the same gate lock — so every shard queue
+    /// stays ticket-ordered by construction.
+    ///
+    /// Typed failure modes, both ticket-free: [`Error::Closed`] after
+    /// [`ServeScheduler::close`] (a submit racing close gets this error,
+    /// never a hang or a dropped channel), and [`Error::Rejected`] when
+    /// the queue-depth cap fires. The cap counts **in-flight tickets**
+    /// (`next_ticket − flushed_upto`): admitted tickets count against it
+    /// until a `flush` event publishes a cut — dispatchers draining work
+    /// does *not* release capacity, because drain progress is timing and
+    /// admission must be a pure function of the event sequence. Clients
+    /// under backpressure flush (an event) and retry — see
+    /// [`ServeScheduler::process_all_with_backpressure`].
     pub fn submit(&self, request: Tensor) -> Result<Pending> {
         check_request(&request, self.d_in)?;
-        let (tx, rx) = channel();
         let mut gate = self.gate.lock().unwrap();
         if gate.closed {
-            return Err(Error::runtime("serve scheduler is closed"));
+            return Err(Error::Closed);
         }
+        if let Some(depth) = self.max_queue_depth {
+            if (gate.next_ticket - gate.flushed_upto) as usize >= depth {
+                gate.rejected += 1;
+                return Err(Error::Rejected { ticket: gate.next_ticket });
+            }
+        }
+        // channel only after the gate checks: the hot rejection path
+        // (submit → Rejected → flush → resubmit under overload) must not
+        // churn the allocator on every refused attempt
+        let (tx, rx) = channel();
         let ticket = gate.next_ticket;
         gate.next_ticket += 1;
         let shard = &self.shards[(ticket % self.shards.len() as u64) as usize];
@@ -244,8 +426,12 @@ impl ServeScheduler {
         // flushes could publish their cuts in opposite orders on
         // different shards and the smaller cut would survive on some
         // shards but be suppressed on others
-        let gate = self.gate.lock().unwrap();
+        let mut gate = self.gate.lock().unwrap();
         let upto = gate.next_ticket;
+        // the flush event is the admission logical clock: everything
+        // admitted so far is now cut into formed batches, so it no
+        // longer counts against the queue-depth cap
+        gate.flushed_upto = upto;
         for shard in self.shards.iter() {
             let mut q = shard.q.lock().unwrap();
             if upto > 0 && q.cuts.back().map_or(true, |&b| upto > b) {
@@ -278,13 +464,43 @@ impl ServeScheduler {
         pending.into_iter().map(|p| p.wait()).collect()
     }
 
+    /// The one backpressure loop both public protocols share: submit,
+    /// and on every [`Error::Rejected`] publish a flush (the event that
+    /// releases capacity) and resubmit. Cannot deadlock — `flush` never
+    /// blocks — and terminates as soon as this thread's own flush leaves
+    /// room at the gate. Returns the accepted handle and how many
+    /// rejections were absorbed on the way in.
+    fn submit_flushing_rejections(&self, request: &Tensor) -> Result<(Pending, u64)> {
+        let mut rejections = 0u64;
+        loop {
+            match self.submit(request.clone()) {
+                Ok(p) => return Ok((p, rejections)),
+                Err(Error::Rejected { .. }) => {
+                    rejections += 1;
+                    self.flush();
+                }
+                Err(e) => return Err(e),
+            }
+        }
+    }
+
+    /// [`ServeScheduler::submit`] that honours backpressure instead of
+    /// surfacing it (see [`Self::submit_flushing_rejections`] for the
+    /// loop); with no depth cap configured it is exactly `submit`.
+    /// Other errors pass through.
+    pub fn submit_with_backpressure(&self, request: &Tensor) -> Result<Pending> {
+        self.submit_flushing_rejections(request).map(|(p, _)| p)
+    }
+
     /// One concurrent client's share of a multi-client replay: caller
     /// `client` of `clients` submits the interleaved queue slice
-    /// `{client, client + clients, …}`, flushes, and waits for its own
-    /// responses. Returns `(queue index, output)` pairs in submission
-    /// order. The CLI, the e5 scheduler bench and the conformance tests
-    /// all drive concurrent clients through this one helper so the
-    /// submit/flush/wait protocol lives in a single place.
+    /// `{client, client + clients, …}` (flushing through any admission
+    /// rejections — see [`ServeScheduler::submit_with_backpressure`]),
+    /// flushes, and waits for its own responses. Returns
+    /// `(queue index, output)` pairs in submission order. The CLI, the
+    /// e5 scheduler bench and the conformance tests all drive concurrent
+    /// clients through this one helper so the submit/flush/wait protocol
+    /// lives in a single place.
     pub fn replay_slice(
         &self,
         queue: &[Tensor],
@@ -294,13 +510,68 @@ impl ServeScheduler {
         let idx: Vec<usize> = (client..queue.len()).step_by(clients.max(1)).collect();
         let pending = idx
             .iter()
-            .map(|&i| self.submit(queue[i].clone()))
+            .map(|&i| self.submit_with_backpressure(&queue[i]))
             .collect::<Result<Vec<Pending>>>()?;
         self.flush();
         idx.into_iter()
             .zip(pending)
             .map(|(i, p)| p.wait().map(|o| (i, o)))
             .collect()
+    }
+
+    /// [`ServeScheduler::process_all`] under an admission cap: the
+    /// client-driven backpressure protocol. Submits in queue order
+    /// through the shared [`Self::submit_flushing_rejections`] loop
+    /// (concurrent submitters racing the released capacity just loop
+    /// again, never surface a spurious error). Returns the outputs in
+    /// submission order plus how many rejections were absorbed. When the
+    /// caller is the only submitter, the whole accept/reject/flush event
+    /// sequence — and therefore the rejection count, every ticket and
+    /// every batch — is a pure function of
+    /// `(queue.len(), max_queue_depth, batch_window, shards)`.
+    pub fn process_all_with_backpressure(
+        &self,
+        queue: &[Tensor],
+    ) -> Result<(Vec<Tensor>, u64)> {
+        let mut rejections = 0u64;
+        let mut pending = Vec::with_capacity(queue.len());
+        for r in queue {
+            let (p, rej) = self.submit_flushing_rejections(r)?;
+            rejections += rej;
+            pending.push(p);
+        }
+        self.flush();
+        let outs = pending.into_iter().map(|p| p.wait()).collect::<Result<Vec<Tensor>>>()?;
+        Ok((outs, rejections))
+    }
+
+    /// Re-execute the logged requests with tickets in `tickets` and
+    /// verify each against its logged response hash, bit for bit. Every
+    /// entry runs as a **singleton batch** on the shard that originally
+    /// served it (`ticket % shards`) — valid because the kernels are
+    /// batch invariant, so the original batch-mates cannot have
+    /// influenced the logged bits. Errors when logging is disabled; a
+    /// corrupt entry (stored request no longer matching its own hash) is
+    /// counted and skipped rather than executed.
+    pub fn replay(&self, tickets: Range<u64>) -> Result<ReplayReport> {
+        let log = self.log.as_deref().ok_or_else(|| {
+            Error::config("serve replay: response log is disabled (ServeConfig::log)")
+        })?;
+        let mut report = ReplayReport::default();
+        for e in log.range(tickets) {
+            if hash_tensor(&e.request) != e.request_hash {
+                report.request_mismatches += 1;
+                continue;
+            }
+            let shard =
+                &self.shards[(e.ticket % self.shards.len() as u64) as usize];
+            let outs = shard.replica.process(std::slice::from_ref(&e.request))?;
+            report.replayed += 1;
+            if hash_tensor(&outs[0]) != e.response_hash {
+                report.response_mismatches += 1;
+            }
+        }
+        Ok(report)
     }
 
     /// Executed batch compositions, sorted by first ticket (a canonical
@@ -336,7 +607,17 @@ impl Drop for ServeScheduler {
 /// shard's replica, and answers each request on its own channel. Taking
 /// "exactly the rule's prefix" (never "whatever is there") is what
 /// keeps batch composition independent of when this thread wakes.
-fn dispatcher_loop(shard: &Shard, window: usize) {
+///
+/// Cache and log sit entirely inside the batch-execution step, *after*
+/// composition is fixed: hits skip the replica arithmetic and misses
+/// fill the cache under their tickets, but tickets, batches and the
+/// trace are byte-for-byte the same as a cache-off run.
+fn dispatcher_loop(
+    shard: &Shard,
+    window: usize,
+    cache: Option<&MemoCache>,
+    log: Option<&ResponseLog>,
+) {
     loop {
         let batch = {
             let mut q = shard.q.lock().unwrap();
@@ -383,21 +664,80 @@ fn dispatcher_loop(shard: &Shard, window: usize) {
             if trace.len() == TRACE_CAP {
                 trace.pop_front();
             }
-            trace.push_back(tickets);
+            trace.push_back(tickets.clone());
         }
-        match shard.replica.process(&inputs) {
-            Ok(outs) => {
-                for (tx, o) in senders.iter().zip(outs) {
-                    let _ = tx.send(Ok(o)); // receiver may have given up
-                }
+        execute_batch(shard, cache, log, &tickets, &inputs, &senders);
+    }
+}
+
+/// Execute one already-composed batch: resolve cache hits, run the
+/// misses on the replica, fill cache/log, answer every request.
+fn execute_batch(
+    shard: &Shard,
+    cache: Option<&MemoCache>,
+    log: Option<&ResponseLog>,
+    tickets: &[u64],
+    inputs: &[Tensor],
+    senders: &[Sender<Result<Tensor>>],
+) {
+    let n = tickets.len();
+    // content addresses, computed once per batch, shared by cache + log
+    let hashes: Option<Vec<String>> = (cache.is_some() || log.is_some())
+        .then(|| inputs.iter().map(hash_tensor).collect());
+    let mut outs: Vec<Option<Tensor>> = vec![None; n];
+    let mut miss: Vec<usize> = Vec::with_capacity(n);
+    if let (Some(c), Some(hs)) = (cache, hashes.as_ref()) {
+        for i in 0..n {
+            match c.lookup(&hs[i]) {
+                Some(hit) => outs[i] = Some(hit),
+                None => miss.push(i),
             }
-            Err(e) => {
-                // shapes are validated at submit, so this is exceptional;
-                // every request in the batch learns the same cause
-                let msg = format!("serve batch failed: {e}");
-                for tx in &senders {
-                    let _ = tx.send(Err(Error::runtime(msg.clone())));
+        }
+    } else {
+        miss.extend(0..n);
+    }
+    // batch invariance makes serving only the misses bit-neutral: each
+    // row is an independent fixed-order reduction, so removing the hit
+    // rows cannot change any miss row's bits
+    let computed: Result<Vec<Tensor>> = if miss.is_empty() {
+        Ok(Vec::new())
+    } else if miss.len() == n {
+        shard.replica.process(inputs) // no per-request clones on this path
+    } else {
+        let miss_inputs: Vec<Tensor> = miss.iter().map(|&i| inputs[i].clone()).collect();
+        shard.replica.process(&miss_inputs)
+    };
+    match computed {
+        Ok(mouts) => {
+            for (&i, o) in miss.iter().zip(mouts) {
+                if let (Some(c), Some(hs)) = (cache, hashes.as_ref()) {
+                    c.insert(&hs[i], tickets[i], &o);
                 }
+                outs[i] = Some(o);
+            }
+            let batch_id = tickets[0];
+            for i in 0..n {
+                let o = outs[i].take().expect("every batch slot resolved");
+                if let (Some(l), Some(hs)) = (log, hashes.as_ref()) {
+                    l.record(LogEntry {
+                        ticket: tickets[i],
+                        request: inputs[i].clone(),
+                        request_hash: hs[i].clone(),
+                        response_hash: hash_tensor(&o),
+                        batch_id,
+                    });
+                }
+                let _ = senders[i].send(Ok(o)); // receiver may have given up
+            }
+        }
+        Err(e) => {
+            // shapes are validated at submit, so this is exceptional;
+            // every request in the batch — cache hits included, matching
+            // the cache-off outcome — learns the same cause, and nothing
+            // is logged
+            let msg = format!("serve batch failed: {e}");
+            for tx in senders {
+                let _ = tx.send(Err(Error::runtime(msg.clone())));
             }
         }
     }
@@ -515,6 +855,195 @@ mod tests {
         sched.close();
         assert!(p.wait().is_ok(), "in-flight request must be answered");
         assert!(sched.submit(queue(1, 16, 2).pop().unwrap()).is_err());
+    }
+
+    fn cfg(window: usize) -> ServeConfig {
+        ServeConfig { batch_window: window, ..Default::default() }
+    }
+
+    #[test]
+    fn admission_rejects_by_ticket_arithmetic_and_flush_releases() {
+        let srv = server(16, 4, 8);
+        let sched = ServeScheduler::sharded_with(
+            Arc::clone(&srv),
+            2,
+            WorkerPool::shared(1),
+            ServeConfig { max_queue_depth: Some(3), ..cfg(4) },
+        )
+        .unwrap();
+        let q = queue(8, 16, 11);
+        let mut pending = Vec::new();
+        for r in &q[..3] {
+            pending.push(sched.submit(r.clone()).unwrap());
+        }
+        assert_eq!(sched.in_flight(), 3);
+        // the cap fires on the 4th submit with the typed error carrying
+        // the next unassigned ticket — and consumes no ticket
+        match sched.submit(q[3].clone()) {
+            Err(Error::Rejected { ticket }) => assert_eq!(ticket, 3),
+            Ok(_) => panic!("want Rejected, got Ok"),
+            Err(other) => panic!("want Rejected, got {other:?}"),
+        }
+        assert_eq!(sched.rejected(), 1);
+        assert_eq!(sched.in_flight(), 3, "rejection must not consume a ticket");
+        // flush is the event that releases capacity…
+        sched.flush();
+        assert_eq!(sched.in_flight(), 0);
+        for r in &q[3..6] {
+            pending.push(sched.submit(r.clone()).unwrap());
+        }
+        // …and draining is NOT: wait for everything, capacity unchanged
+        sched.flush();
+        for p in pending {
+            p.wait().unwrap();
+        }
+        // accepted tickets are exactly 0..6 — the rejected submit left
+        // no hole in the sequence
+        let seen: Vec<u64> =
+            sched.trace().into_iter().flat_map(|b| b.tickets).collect();
+        let mut sorted = seen.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..6).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn backpressure_protocol_is_deterministic() {
+        let srv = server(16, 4, 8);
+        let q = queue(10, 16, 77);
+        let run = || {
+            let sched = ServeScheduler::sharded_with(
+                Arc::clone(&srv),
+                1,
+                WorkerPool::shared(1),
+                ServeConfig { max_queue_depth: Some(4), ..cfg(2) },
+            )
+            .unwrap();
+            let (outs, rejections) = sched.process_all_with_backpressure(&q).unwrap();
+            let trace: Vec<Vec<u64>> =
+                sched.trace().into_iter().map(|b| b.tickets).collect();
+            (outs, rejections, trace)
+        };
+        let (o1, r1, t1) = run();
+        let (o2, r2, t2) = run();
+        // 10 submits against depth 4: rejected (and flushed) at index
+        // 4 and 8 — a pure function of (len, depth), same every run
+        assert_eq!(r1, 2);
+        assert_eq!(r1, r2);
+        assert_eq!(t1, t2, "event sequence fixed ⇒ identical batches");
+        for (a, b) in o1.iter().zip(o2.iter()) {
+            assert!(a.bit_eq(b));
+        }
+        for (r, o) in q.iter().zip(o1.iter()) {
+            let want = matmul(&r.reshape(&[1, 16]).unwrap(), &srv.weights).unwrap();
+            assert_eq!(o.data(), want.data());
+        }
+    }
+
+    #[test]
+    fn close_then_submit_is_typed_closed_never_a_hang() {
+        let srv = server(16, 4, 8);
+        let sched =
+            ServeScheduler::sharded(Arc::clone(&srv), 2, 4, WorkerPool::shared(1)).unwrap();
+        sched.close();
+        match sched.submit(queue(1, 16, 1).pop().unwrap()) {
+            Err(Error::Closed) => {}
+            Ok(_) => panic!("want Closed, got Ok"),
+            Err(other) => panic!("want Closed, got {other:?}"),
+        }
+        // a depth-capped scheduler reports Closed too (close dominates)
+        let capped = ServeScheduler::sharded_with(
+            Arc::clone(&srv),
+            1,
+            WorkerPool::shared(1),
+            ServeConfig { max_queue_depth: Some(1), ..cfg(4) },
+        )
+        .unwrap();
+        capped.close();
+        assert!(matches!(
+            capped.submit(queue(1, 16, 2).pop().unwrap()),
+            Err(Error::Closed)
+        ));
+    }
+
+    #[test]
+    fn cache_serves_bit_identical_and_keeps_trace_identical() {
+        let srv = server(32, 4, 8);
+        let base = queue(6, 32, 40);
+        let cached = ServeScheduler::sharded_with(
+            Arc::clone(&srv),
+            2,
+            WorkerPool::shared(1),
+            ServeConfig { cache_capacity: 16, ..cfg(4) },
+        )
+        .unwrap();
+        let plain =
+            ServeScheduler::sharded(Arc::clone(&srv), 2, 4, WorkerPool::shared(1)).unwrap();
+        // first replay fills the memo, the second is answered from it —
+        // bits and batch composition must match the cache-off scheduler
+        // on both replays
+        for replay in 0..2 {
+            let oc = cached.process_all(&base).unwrap();
+            let op = plain.process_all(&base).unwrap();
+            for (i, (a, b)) in oc.iter().zip(op.iter()).enumerate() {
+                assert!(a.bit_eq(b), "replay {replay} request {i}: cache changed bits");
+            }
+        }
+        assert_eq!(
+            cached.trace(),
+            plain.trace(),
+            "cache must not change tickets or batch composition"
+        );
+        let s = cached.cache_stats().unwrap();
+        assert_eq!(s.misses, 6, "first replay computes");
+        assert_eq!(s.hits, 6, "second replay is served from the memo");
+        assert!(plain.cache_stats().is_none());
+    }
+
+    #[test]
+    fn log_records_every_answer_and_replay_verifies() {
+        let srv = server(24, 4, 8);
+        let q = queue(9, 24, 90);
+        let sched = ServeScheduler::sharded_with(
+            Arc::clone(&srv),
+            3,
+            WorkerPool::shared(2),
+            ServeConfig { log: true, ..cfg(4) },
+        )
+        .unwrap();
+        let outs = sched.process_all(&q).unwrap();
+        let log = sched.log().unwrap();
+        assert_eq!(log.len(), 9);
+        for (t, (r, o)) in q.iter().zip(outs.iter()).enumerate() {
+            let e = log.get(t as u64).unwrap();
+            assert_eq!(e.request_hash, crate::coordinator::hashing::hash_tensor(r));
+            assert_eq!(e.response_hash, crate::coordinator::hashing::hash_tensor(o));
+            // batch id = first ticket of the batch that served it: with 3
+            // shards and window 4, every batch is one flush segment, so
+            // the batch id is the request's shard index (tickets 0,1,2
+            // lead the three shard batches)
+            assert_eq!(e.batch_id, (t % 3) as u64);
+        }
+        let rep = sched.replay(0..9).unwrap();
+        assert_eq!(rep.replayed, 9);
+        assert!(rep.verified());
+        // a sub-range replays only its slice
+        assert_eq!(sched.replay(3..5).unwrap().replayed, 2);
+        // logging off → replay is a config error
+        let plain =
+            ServeScheduler::sharded(Arc::clone(&srv), 1, 4, WorkerPool::shared(1)).unwrap();
+        assert!(plain.replay(0..1).is_err());
+    }
+
+    #[test]
+    fn depth_zero_is_a_config_error() {
+        let srv = server(16, 4, 8);
+        assert!(ServeScheduler::sharded_with(
+            srv,
+            1,
+            WorkerPool::shared(1),
+            ServeConfig { max_queue_depth: Some(0), ..cfg(4) },
+        )
+        .is_err());
     }
 
     #[test]

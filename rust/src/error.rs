@@ -18,6 +18,22 @@ pub enum Error {
     /// Artifact loading / PJRT execution problems.
     Runtime(String),
 
+    /// Deterministic admission rejection: the serve scheduler's
+    /// queue-depth cap fired. `ticket` is the next unassigned ticket at
+    /// the moment of rejection (the ticket the request *would* have
+    /// received); rejection never consumes a ticket, so the accepted
+    /// ticket sequence stays a pure function of the accepted submits.
+    Rejected {
+        /// Next unassigned ticket when the cap fired.
+        ticket: u64,
+    },
+
+    /// Submission to a serve scheduler that has been closed. Typed (not
+    /// a stringly runtime error) so a submit racing `close()` gets a
+    /// deterministic, matchable outcome — never a hang or a silently
+    /// dropped channel.
+    Closed,
+
     /// Underlying XLA error.
     Xla(String),
 
@@ -31,6 +47,10 @@ impl fmt::Display for Error {
             Error::Shape(m) => write!(f, "shape error: {m}"),
             Error::Config(m) => write!(f, "config error: {m}"),
             Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Rejected { ticket } => {
+                write!(f, "rejected: serve queue-depth cap hit at ticket {ticket}")
+            }
+            Error::Closed => write!(f, "closed: serve scheduler accepts no new requests"),
             Error::Xla(m) => write!(f, "xla error: {m}"),
             Error::Io(e) => write!(f, "io error: {e}"),
         }
@@ -79,6 +99,11 @@ mod tests {
             format!("{}", Error::runtime("no manifest")),
             "runtime error: no manifest"
         );
+        assert_eq!(
+            format!("{}", Error::Rejected { ticket: 7 }),
+            "rejected: serve queue-depth cap hit at ticket 7"
+        );
+        assert!(format!("{}", Error::Closed).starts_with("closed:"));
     }
 
     #[test]

@@ -47,9 +47,10 @@
 //!   (the second, independent implementation of the RepDL op spec);
 //!   gated behind the `pjrt` feature, stubbed otherwise.
 //! * [`coordinator`] — trainer, the deterministic serving subsystem
-//!   (pooled batch dispatch, sharded replicas, and the ticket-ordered
-//!   dynamic-batching scheduler — DESIGN.md §7), bitwise-verification
-//!   harness.
+//!   (pooled batch dispatch, sharded replicas, the ticket-ordered
+//!   dynamic-batching scheduler, ticket-arithmetic admission control,
+//!   the content-addressed memo cache and the replayable response log —
+//!   DESIGN.md §7–§8), bitwise-verification harness.
 //! * [`sha256`] — in-crate FIPS 180-4 digest backing all bitwise
 //!   fingerprints (zero external dependencies — DESIGN.md §5).
 //!

@@ -6,7 +6,8 @@
 //!   transformer  train the char transformer (E8 workload)
 //!   serve        E7 batch-invariance report + pooled throughput + the
 //!                deterministic dynamic-batching scheduler
-//!                (--threads N --shards S --batch-window K --clients C)
+//!                (--threads N --shards S --batch-window K --clients C
+//!                 --max-queue-depth D --cache-capacity M --replay)
 //!   runtime      load + execute an AOT artifact (needs `make artifacts`)
 //!   selftest     quick determinism smoke checks
 
@@ -146,7 +147,7 @@ fn cmd_transformer(args: &Args) -> i32 {
 }
 
 fn cmd_serve(args: &Args) -> i32 {
-    use repdl::coordinator::ServeScheduler;
+    use repdl::coordinator::{ServeConfig, ServeScheduler};
     use repdl::tensor::{global_pool_handle, WorkerPool};
     use std::sync::Arc;
     let d = args.get_usize("dim", 256);
@@ -154,6 +155,11 @@ fn cmd_serve(args: &Args) -> i32 {
     let shards = args.get_usize_at_least("shards", 1, 1);
     let window = args.get_usize_at_least("batch-window", 16, 1);
     let clients = args.get_usize_at_least("clients", 2, 1);
+    // admission + audit policy (ISSUE 4): 0 / absent = unbounded / off;
+    // --replay implies the ticket-addressed response log
+    let max_queue_depth = args.get_opt_usize("max-queue-depth");
+    let cache_capacity = args.get_usize("cache-capacity", 0);
+    let do_replay = args.has("replay");
     // only spawn a private pool for an explicit --threads; otherwise
     // take a handle to the global pool the kernels already use (never
     // a duplicate pool of background threads)
@@ -188,7 +194,13 @@ fn cmd_serve(args: &Args) -> i32 {
     // submitters over `shards` replicas sharing one pool — per-request
     // bits must equal the single-caller reference exactly
     let reference = srv.process_repro(&queue).expect("reference");
-    let sched = ServeScheduler::sharded(Arc::clone(&srv), shards, window, pool)
+    let cfg = ServeConfig {
+        batch_window: window,
+        max_queue_depth,
+        cache_capacity,
+        log: do_replay,
+    };
+    let sched = ServeScheduler::sharded_with(Arc::clone(&srv), shards, pool, cfg)
         .expect("scheduler");
     let t0 = std::time::Instant::now();
     let mismatch = std::thread::scope(|s| {
@@ -213,7 +225,41 @@ fn cmd_serve(args: &Args) -> i32 {
          mismatches={mismatch} throughput={:.0} req/s",
         n as f64 / elapsed.max(1e-9)
     );
-    if rep.repro_mismatches == 0 && mismatch == 0 {
+    if let Some(depth) = max_queue_depth {
+        println!(
+            "admission max_queue_depth={depth} rejected={} in_flight={}",
+            sched.rejected(),
+            sched.in_flight()
+        );
+    }
+    if let Some(cs) = sched.cache_stats() {
+        println!(
+            "cache capacity={} hits={} misses={} evictions={} held={}",
+            cs.capacity, cs.hits, cs.misses, cs.evictions, cs.len
+        );
+    }
+    let replay_ok = if do_replay {
+        // re-execute the whole logged ticket range and verify bit-exactly
+        match sched.replay(0..u64::MAX) {
+            Ok(rep) => {
+                println!(
+                    "replay replayed={} response_mismatches={} request_mismatches={} verified={}",
+                    rep.replayed,
+                    rep.response_mismatches,
+                    rep.request_mismatches,
+                    rep.verified()
+                );
+                rep.verified()
+            }
+            Err(e) => {
+                eprintln!("replay failed: {e}");
+                false
+            }
+        }
+    } else {
+        true
+    };
+    if rep.repro_mismatches == 0 && mismatch == 0 && replay_ok {
         0
     } else {
         1

@@ -12,7 +12,7 @@ use super::Module;
 use crate::autograd::{Tape, Var};
 use crate::nn::Linear;
 use crate::rnum::{rexp, rrsqrt};
-use crate::tensor::Tensor;
+use crate::tensor::{max_wins, Tensor};
 use crate::{Error, Result};
 
 /// Fused causal attention core on (BH, T, Dh) tensors.
@@ -37,7 +37,12 @@ pub fn attention_core(t: &mut Tape, q: Var, k: Var, v: Var, causal: bool) -> Res
     for b in 0..bh {
         for i in 0..tt {
             let jmax = if causal { i + 1 } else { tt };
-            // scores row (fixed unfused graph), running first-max
+            // scores row (fixed unfused graph), running max under the
+            // canonical max_wins rule (NaN wins, first occurrence —
+            // DESIGN.md §8 migration). The NEG_INFINITY seed is exact:
+            // a -inf score can only tie it (first occurrence keeps the
+            // seed's bits, which equal the score's), and a NaN score
+            // displaces it just as it would displace a real max.
             let mut row = vec![0.0f32; jmax];
             let mut m = f32::NEG_INFINITY;
             for (j, r) in row.iter_mut().enumerate() {
@@ -47,7 +52,7 @@ pub fn attention_core(t: &mut Tape, q: Var, k: Var, v: Var, causal: bool) -> Res
                 }
                 let s = acc * scale;
                 *r = s;
-                if s > m {
+                if max_wins(s, m) {
                     m = s;
                 }
             }

@@ -1,11 +1,19 @@
 //! Softmax as a fixed computation graph (paper §3.2.3).
 //!
-//! The graph is pinned: row max (first-max rule) → subtract → `rexp`
+//! The graph is pinned: row max (canonical [`max_wins`] rule: NaN wins,
+//! first occurrence kept — shared with `tensor::max_axis` since the
+//! NaN-rule unification migration, DESIGN.md §8) → subtract → `rexp`
 //! (correctly rounded) → **sequential** sum → divide. A log-softmax with
 //! its own graph gets its own name.
+//!
+//! A NaN anywhere in a row therefore makes the row max NaN, and every
+//! output of that row is NaN with a deterministic propagation path —
+//! before the migration the max silently skipped NaNs and the poisoning
+//! went through the sum instead, a bit-level divergence from the
+//! documented rule.
 
 use crate::rnum::{rexp, rlog};
-use crate::tensor::Tensor;
+use crate::tensor::{max_wins, Tensor};
 use crate::{Error, Result};
 
 /// Reject rank ≠ 2 and zero-length rows: a row of no logits has no
@@ -31,7 +39,7 @@ pub fn softmax_rows(x: &Tensor) -> Result<Tensor> {
         let w = x.row(r);
         let mut m = w[0];
         for &v in &w[1..] {
-            if v > m {
+            if max_wins(v, m) {
                 m = v;
             }
         }
@@ -57,7 +65,7 @@ pub fn log_softmax_rows(x: &Tensor) -> Result<Tensor> {
         let w = x.row(r);
         let mut m = w[0];
         for &v in &w[1..] {
-            if v > m {
+            if max_wins(v, m) {
                 m = v;
             }
         }
@@ -118,6 +126,34 @@ mod tests {
         let empty = Tensor::zeros(&[0, 4]);
         assert_eq!(softmax_rows(&empty).unwrap().numel(), 0);
         assert_eq!(log_softmax_rows(&empty).unwrap().numel(), 0);
+    }
+
+    #[test]
+    fn nan_rows_poison_deterministically() {
+        // row max is max_wins (NaN wins, first occurrence), so a single
+        // NaN makes the whole row NaN through `x − NaN`, and an all-NaN
+        // row stays all-NaN — no panic, no partial row
+        for row in [
+            vec![1.0f32, f32::NAN, 2.0],
+            vec![f32::NAN, 5.0, -1.0],
+            vec![f32::NAN, f32::NAN, f32::NAN],
+        ] {
+            let x = Tensor::from_vec(&[1, 3], row.clone()).unwrap();
+            let s = softmax_rows(&x).unwrap();
+            let ls = log_softmax_rows(&x).unwrap();
+            assert!(s.data().iter().all(|v| v.is_nan()), "softmax {row:?}");
+            assert!(ls.data().iter().all(|v| v.is_nan()), "log_softmax {row:?}");
+            // bit-deterministic across calls, NaN payloads included
+            assert!(s.bit_eq(&softmax_rows(&x).unwrap()));
+            assert!(ls.bit_eq(&log_softmax_rows(&x).unwrap()));
+        }
+        // finite rows are untouched by the migration (max_wins == `v > m`
+        // on finite data): a clean row next to a NaN row stays clean
+        let x = Tensor::from_vec(&[2, 3], vec![1., f32::NAN, 2., 0.5, 1.5, -0.5]).unwrap();
+        let s = softmax_rows(&x).unwrap();
+        assert!(s.row(0).iter().all(|v| v.is_nan()));
+        let clean = Tensor::from_vec(&[1, 3], vec![0.5, 1.5, -0.5]).unwrap();
+        assert_eq!(s.row(1), softmax_rows(&clean).unwrap().row(0));
     }
 
     #[test]

@@ -65,6 +65,22 @@ impl Gen {
     pub fn f32_vec(&mut self, n: usize, scale: f32) -> Vec<f32> {
         (0..n).map(|_| self.f32_range(-scale, scale)).collect()
     }
+
+    /// Like [`Gen::f32_vec`], but roughly one slot in `every` becomes a
+    /// quiet NaN with a **random payload** — for pinning the canonical
+    /// tie/NaN comparison rule (`tensor::reduce::max_wins`), where
+    /// "which NaN won" is observable through its payload bits.
+    pub fn f32_vec_nan_laced(&mut self, n: usize, scale: f32, every: usize) -> Vec<f32> {
+        (0..n)
+            .map(|_| {
+                if self.u64() % every.max(1) as u64 == 0 {
+                    f32::from_bits(0x7fc0_0000 | (self.u64() as u32 & 0x003f_ffff))
+                } else {
+                    self.f32_range(-scale, scale)
+                }
+            })
+            .collect()
+    }
 }
 
 /// Run `cases` checks of `prop` over generated inputs; panic with the
@@ -200,6 +216,94 @@ mod tests {
                 let pw = sum_axis_pairwise_in(&pool, &t, 0).unwrap().data()[0];
                 seq.to_bits() == sum_sequential(xs).to_bits()
                     && pw.to_bits() == sum_pairwise(xs).to_bits()
+            },
+        );
+    }
+
+    // ---- NaN-rule unification properties (DESIGN.md §8 migration) ----
+
+    use crate::nn::{log_softmax_rows, softmax_rows};
+    use crate::rnum::{rexp, rlog};
+    use crate::tensor::{max_axis, max_pool2d};
+
+    #[test]
+    fn prop_softmax_row_max_agrees_with_max_axis() {
+        // the migrated softmax/log-softmax row max shares max_wins with
+        // max_axis: rebuilding each fixed graph from the max_axis row max
+        // must reproduce every output bit — NaN-laced (random payloads)
+        // and all-NaN rows included
+        forall(
+            23,
+            60,
+            |g| {
+                let rows = 1 + g.below(4);
+                let cols = 1 + g.below(12);
+                let mut xs = g.f32_vec_nan_laced(rows * cols, 8.0, 5);
+                if g.below(3) == 0 {
+                    // force one all-NaN row (payloads still vary)
+                    let r = g.below(rows);
+                    for v in &mut xs[r * cols..(r + 1) * cols] {
+                        *v = f32::from_bits(0x7fc0_0000 | (g.u64() as u32 & 0x003f_ffff));
+                    }
+                }
+                (rows, cols, xs)
+            },
+            |(rows, cols, xs)| {
+                let t = Tensor::from_vec(&[*rows, *cols], xs.clone()).unwrap();
+                let m = max_axis(&t, 1).unwrap();
+                let s = softmax_rows(&t).unwrap();
+                let ls = log_softmax_rows(&t).unwrap();
+                (0..*rows).all(|r| {
+                    let mm = m.data()[r];
+                    let w = &xs[r * cols..(r + 1) * cols];
+                    let mut es = vec![0.0f32; *cols];
+                    let mut denom = 0.0f32;
+                    for j in 0..*cols {
+                        es[j] = rexp(w[j] - mm);
+                        denom += es[j];
+                    }
+                    let lse = rlog(denom);
+                    (0..*cols).all(|j| {
+                        s.data()[r * cols + j].to_bits() == (es[j] / denom).to_bits()
+                            && ls.data()[r * cols + j].to_bits()
+                                == (w[j] - mm - lse).to_bits()
+                    })
+                })
+            },
+        );
+    }
+
+    #[test]
+    fn prop_max_pool_window_max_agrees_with_max_axis() {
+        // every pooled output must hold exactly the bits max_axis returns
+        // for that window flattened in the kernel's (di, dj) scan order —
+        // the two scans share max_wins, so NaN payloads and tie choices
+        // must match too
+        forall(
+            29,
+            40,
+            |g| {
+                let b = 1 + g.below(2);
+                let c = 1 + g.below(3);
+                let k = 1 + g.below(3);
+                let (oh, ow) = (1 + g.below(3), 1 + g.below(3));
+                let (h, w) = (oh * k, ow * k);
+                (b, c, h, w, k, g.f32_vec_nan_laced(b * c * h * w, 8.0, 4))
+            },
+            |(b, c, h, w, k, xs)| {
+                let t = Tensor::from_vec(&[*b, *c, *h, *w], xs.clone()).unwrap();
+                let p = max_pool2d(&t, *k).unwrap();
+                let (oh, ow) = (h / k, w / k);
+                (0..b * c * oh * ow).all(|e| {
+                    let (bc, i, j) = (e / (oh * ow), (e / ow) % oh, e % ow);
+                    let base = bc * h * w + i * k * w + j * k;
+                    let win: Vec<f32> = (0..*k)
+                        .flat_map(|di| (0..*k).map(move |dj| xs[base + di * w + dj]))
+                        .collect();
+                    let wt = Tensor::from_vec(&[1, k * k], win).unwrap();
+                    let m = max_axis(&wt, 1).unwrap().data()[0];
+                    p.data()[e].to_bits() == m.to_bits()
+                })
             },
         );
     }

@@ -27,6 +27,7 @@
 use super::microkernel::{gemm_block, MR, NR};
 use super::par::par_chunks_in;
 use super::pool::{global_pool, WorkerPool};
+use super::reduce::max_wins;
 use super::scratch::scratch_f32;
 use super::tensor::Tensor;
 use crate::{Error, Result};
@@ -350,12 +351,36 @@ fn check_pool(x: &Tensor, k: usize, name: &str) -> Result<(usize, usize, usize, 
 }
 
 /// Max pooling (kernel = stride, valid padding) — comparison-only, so
-/// trivially reproducible; fixed first-max tie rule. Dispatches one
-/// output plane per worker-pool task (planes are independent; the
-/// in-window comparison order stays fixed, so pool size never changes
-/// bits — covered by the `pool_invariance` suite).
+/// trivially reproducible. The in-window scan seeds on the window's
+/// first element and updates via the canonical [`super::reduce::max_wins`]
+/// rule (NaN wins, first occurrence kept — the same rule as `max_axis`;
+/// NaN-rule unification migration, DESIGN.md §8). Dispatches one output
+/// plane per worker-pool task (planes are independent; the in-window
+/// comparison order stays fixed, so pool size never changes bits —
+/// covered by the `pool_invariance` suite).
 pub fn max_pool2d(x: &Tensor, k: usize) -> Result<Tensor> {
     max_pool2d_in(global_pool(), x, k)
+}
+
+/// The canonical pooling-window scan, shared by the pooled forward and
+/// the argmax variant so the two agree **by construction**: seed on the
+/// window's first element, visit in (di, dj) order, update via
+/// [`max_wins`]. Returns the winning flat input index — the winning
+/// value is `xd[index]`.
+#[inline]
+fn pool_window_argmax(xd: &[f32], base: usize, k: usize, w: usize) -> usize {
+    let mut best = base;
+    let mut m = xd[base];
+    for di in 0..k {
+        for dj in 0..k {
+            let v = xd[base + di * w + dj];
+            if max_wins(v, m) {
+                m = v;
+                best = base + di * w + dj;
+            }
+        }
+    }
+    best
 }
 
 /// [`max_pool2d`] on an explicit pool.
@@ -368,21 +393,41 @@ pub fn max_pool2d_in(pool: &WorkerPool, x: &Tensor, k: usize) -> Result<Tensor> 
             let bc = start / (oh * ow);
             for i in 0..oh {
                 for j in 0..ow {
-                    let mut m = f32::NEG_INFINITY;
-                    for di in 0..k {
-                        for dj in 0..k {
-                            let v = xd[bc * h * w + (i * k + di) * w + (j * k + dj)];
-                            if v > m {
-                                m = v;
-                            }
-                        }
-                    }
-                    plane[i * ow + j] = m;
+                    let base = bc * h * w + i * k * w + j * k;
+                    plane[i * ow + j] = xd[pool_window_argmax(xd, base, k, w)];
                 }
             }
         });
     });
     Ok(out)
+}
+
+/// [`max_pool2d`] that also returns the winning **flat input index** per
+/// output element — the autograd forward (`Tape::max_pool2d`) needs the
+/// argmax to scatter gradients. Both this and [`max_pool2d_in`] call the
+/// one [`pool_window_argmax`] scan, and the value is read back *from*
+/// the recorded index (`x[argmax[e]]`), so output bits and gradient
+/// target cannot disagree by construction (pinned in tests anyway,
+/// NaN payloads and ties included). Serial over planes: the callers are
+/// training-path tapes whose backward is serial anyway.
+pub fn max_pool2d_argmax(x: &Tensor, k: usize) -> Result<(Tensor, Vec<usize>)> {
+    let (b, c, h, w) = check_pool(x, k, "max_pool2d")?;
+    let (oh, ow) = (h / k, w / k);
+    let xd = x.data();
+    let mut argmax = vec![0usize; b * c * oh * ow];
+    for bc in 0..b * c {
+        for i in 0..oh {
+            for j in 0..ow {
+                let base = bc * h * w + i * k * w + j * k;
+                argmax[(bc * oh + i) * ow + j] = pool_window_argmax(xd, base, k, w);
+            }
+        }
+    }
+    let out = Tensor::from_vec(
+        &[b, c, oh, ow],
+        argmax.iter().map(|&s| xd[s]).collect(),
+    )?;
+    Ok((out, argmax))
 }
 
 /// Average pooling: fixed graph — sequential window sum, then ÷ k².
@@ -565,6 +610,32 @@ mod tests {
         let ap = avg_pool2d(&x, 2).unwrap();
         assert_eq!(ap.data(), &[3.5, 5.5, 11.5, 13.5]);
         assert!(max_pool2d(&x, 3).is_err());
+    }
+
+    #[test]
+    fn argmax_variant_agrees_with_pooled_kernel_bitwise() {
+        // finite, NaN-laced (distinct payloads) and tie-heavy inputs:
+        // the argmax variant's values must equal max_pool2d's bits, and
+        // every recorded index must hold exactly those bits
+        let mut x = lcg(&[2, 2, 6, 6], 11);
+        x.data_mut()[3] = f32::from_bits(0x7fc0_0001);
+        x.data_mut()[40] = f32::from_bits(0x7fc0_0002);
+        x.data_mut()[41] = f32::from_bits(0x7fc0_0003); // two NaNs, one window
+        let tie = x.data()[71];
+        x.data_mut()[70] = tie; // exact tie inside a window
+        for k in [1usize, 2, 3] {
+            let want = max_pool2d(&x, k).unwrap();
+            let (got, argmax) = max_pool2d_argmax(&x, k).unwrap();
+            assert!(got.bit_eq(&want), "k={k}");
+            for (e, &src) in argmax.iter().enumerate() {
+                assert_eq!(
+                    got.data()[e].to_bits(),
+                    x.data()[src].to_bits(),
+                    "k={k} e={e}: argmax must hold the output bits"
+                );
+            }
+        }
+        assert!(max_pool2d_argmax(&x, 4).is_err()); // same shape policy
     }
 
     #[test]

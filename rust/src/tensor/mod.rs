@@ -34,7 +34,8 @@ pub mod tensor;
 
 pub use conv::{
     avg_pool2d, avg_pool2d_in, conv2d, conv2d_direct, conv2d_direct_in, conv2d_im2col,
-    conv2d_im2col_in, conv2d_in, im2col, max_pool2d, max_pool2d_in, Conv2dParams,
+    conv2d_im2col_in, conv2d_in, im2col, max_pool2d, max_pool2d_argmax, max_pool2d_in,
+    Conv2dParams,
 };
 pub use matmul::{
     matmul, matmul_blocked, matmul_blocked_in, matmul_dotform, matmul_dotform_in, matmul_fma,
@@ -44,8 +45,8 @@ pub use matmul::{
 pub use scratch::{scratch_f32, ScratchGuard};
 pub use pool::{default_threads, global_pool, global_pool_handle, PoolHandle, WorkerPool};
 pub use reduce::{
-    argmax_last, max_axis, max_axis_in, mean_axis, mean_axis_in, sum_axis, sum_axis_in,
-    sum_axis_pairwise, sum_axis_pairwise_in, var_axis, var_axis_in,
+    argmax_last, max_axis, max_axis_in, max_wins, mean_axis, mean_axis_in, sum_axis,
+    sum_axis_in, sum_axis_pairwise, sum_axis_pairwise_in, var_axis, var_axis_in,
 };
 pub use shape::Shape;
 pub use tensor::Tensor;

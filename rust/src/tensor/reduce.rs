@@ -21,12 +21,16 @@
 //!
 //! ## The deterministic tie/NaN rule (single source of truth)
 //!
-//! Comparison reductions ([`max_axis`], [`argmax_last`]) share one fixed
-//! rule, implemented once in [`max_wins`]: **NaN beats every number, and
-//! the first occurrence wins** — among equal maxima and among NaNs alike
-//! (so `max_axis` keeps the first NaN's payload bits and `argmax_last`
-//! reports the first NaN's index). This makes the two APIs agree: the
-//! index `argmax_last` picks always holds the value `max_axis` returns.
+//! Comparison reductions share one fixed rule, implemented once in
+//! [`max_wins`]: **NaN beats every number, and the first occurrence
+//! wins** — among equal maxima and among NaNs alike (so `max_axis`
+//! keeps the first NaN's payload bits and `argmax_last` reports the
+//! first NaN's index). This makes the two APIs agree: the index
+//! `argmax_last` picks always holds the value `max_axis` returns. Since
+//! the NaN-rule unification migration (DESIGN.md §8) the same function
+//! drives every other reproducible max scan too — max pooling, the
+//! softmax/log-softmax/attention row maxes and the cross-entropy tape
+//! max; only `baseline/` intentionally keeps plain `v > m`.
 //!
 //! Both seed implementations contradicted the rule the seed itself
 //! documented ("NaN wins, …, first occurrence"): `argmax_last` used
@@ -193,7 +197,15 @@ pub fn var_axis_in(pool: &WorkerPool, t: &Tensor, axis: usize) -> Result<Tensor>
 /// candidate `v` displace the current winner `cur`? NaN beats every
 /// number; otherwise only strictly-greater wins, so the *first* of equal
 /// maxima — and the first NaN — is kept.
-fn max_wins(v: f32, cur: f32) -> bool {
+///
+/// This is the **single source of truth** for every reproducible max
+/// scan in the crate. Since the NaN-rule unification migration
+/// (DESIGN.md §8), `max_pool2d`'s in-window scan, the `nn::softmax`
+/// row maxes, the attention score max and the cross-entropy tape max
+/// all route through it — only `baseline/` keeps the old plain `v > m`
+/// scan, because it models the non-reproducible conventional stack.
+#[inline]
+pub fn max_wins(v: f32, cur: f32) -> bool {
     (v.is_nan() && !cur.is_nan()) || v > cur
 }
 

@@ -1,0 +1,300 @@
+//! Conformance suite for the serve scheduler's admission + audit layer
+//! (coordinator/serve/{scheduler,cache,log}.rs — DESIGN.md §8).
+//!
+//! The claim under test extends PR 3's "batch composition is a pure
+//! function of the event sequence" to *every* observable serving
+//! behaviour: which submits are **accepted vs rejected** (the queue-depth
+//! cap counts tickets against the flush logical clock, never drain
+//! progress), which bits come back (cache on or off, any shard/pool/
+//! client configuration), and what the audit log records (`replay` must
+//! verify every logged response bit-exactly by re-execution).
+
+use repdl::coordinator::{
+    hash_tensor, DeterministicServer, ServeConfig, ServeScheduler,
+};
+use repdl::rng::uniform_tensor;
+use repdl::tensor::{matmul, Tensor, WorkerPool};
+use repdl::Error;
+use std::sync::Arc;
+
+fn server(d_in: usize, d_out: usize, max_batch: usize, seed: u64) -> Arc<DeterministicServer> {
+    let w = uniform_tensor(&[d_in, d_out], -0.3, 0.3, seed);
+    Arc::new(DeterministicServer::new(w, max_batch).unwrap())
+}
+
+fn queue(n: usize, d: usize, seed: u64) -> Vec<Tensor> {
+    (0..n)
+        .map(|i| uniform_tensor(&[d], -1.0, 1.0, seed + i as u64))
+        .collect()
+}
+
+/// The reference bits: one request at a time, straight through `matmul`.
+fn reference(srv: &DeterministicServer, q: &[Tensor]) -> Vec<Tensor> {
+    q.iter()
+        .map(|r| matmul(&r.reshape(&[1, srv.d_in()]).unwrap(), &srv.weights).unwrap())
+        .collect()
+}
+
+fn bits_eq(a: &[f32], b: &[f32]) -> bool {
+    a.len() == b.len() && a.iter().zip(b.iter()).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+fn cfg(window: usize, depth: Option<usize>, cache: usize, log: bool) -> ServeConfig {
+    ServeConfig { batch_window: window, max_queue_depth: depth, cache_capacity: cache, log }
+}
+
+/// THE acceptance grid: the single-threaded backpressure protocol's
+/// accept/reject ticket sequence, rejection count, batch trace and every
+/// response bit must be invariant across shards {1,2,4} × pool sizes ×
+/// cache on/off — and `replay()` must verify the log bit-exactly in
+/// every cell.
+#[test]
+fn accept_reject_set_and_bits_invariant_across_shards_pools_and_cache() {
+    let srv = server(64, 8, 8, 3);
+    let base = queue(18, 64, 500);
+    // every request appears twice → the cache-on cells serve real hits
+    let q: Vec<Tensor> = base.iter().chain(base.iter()).cloned().collect();
+    let want = reference(&srv, &q);
+    let depth = Some(7usize);
+    let mut reference_rejections: Option<u64> = None;
+    for shards in [1usize, 2, 4] {
+        for lanes in [1usize, 3] {
+            for cache in [0usize, 64] {
+                let sched = ServeScheduler::sharded_with(
+                    Arc::clone(&srv),
+                    shards,
+                    WorkerPool::shared(lanes),
+                    cfg(4, depth, cache, true),
+                )
+                .unwrap();
+                let (outs, rejections) =
+                    sched.process_all_with_backpressure(&q).unwrap();
+                for (i, (o, w)) in outs.iter().zip(want.iter()).enumerate() {
+                    assert!(
+                        bits_eq(o.data(), w.data()),
+                        "request {i} bits changed at shards={shards} lanes={lanes} cache={cache}"
+                    );
+                }
+                // the accepted ticket sequence is dense (rejection never
+                // consumes a ticket): exactly one ticket per request
+                let mut seen: Vec<u64> =
+                    sched.trace().into_iter().flat_map(|b| b.tickets).collect();
+                seen.sort_unstable();
+                assert_eq!(
+                    seen,
+                    (0..q.len() as u64).collect::<Vec<u64>>(),
+                    "shards={shards} lanes={lanes} cache={cache}"
+                );
+                // the rejection count — and with it the whole
+                // accept/reject event sequence of the single-threaded
+                // protocol — is a pure function of (len, depth):
+                // identical in every cell of the grid
+                match reference_rejections {
+                    None => reference_rejections = Some(rejections),
+                    Some(r0) => assert_eq!(
+                        rejections, r0,
+                        "accept/reject set changed at shards={shards} lanes={lanes} cache={cache}"
+                    ),
+                }
+                assert!(rejections > 0, "depth 7 under 36 submits must reject");
+                // the audit log replays bit-exactly in every cell
+                let rep = sched.replay(0..q.len() as u64).unwrap();
+                assert_eq!(rep.replayed, q.len());
+                assert!(
+                    rep.verified(),
+                    "replay mismatch at shards={shards} lanes={lanes} cache={cache}: {rep:?}"
+                );
+            }
+        }
+    }
+}
+
+/// Same trace across cache on/off for a fixed shard count: the memo
+/// must not move a single ticket or batch boundary.
+#[test]
+fn cache_on_off_share_tickets_batches_and_rejections() {
+    let srv = server(32, 4, 8, 9);
+    let base = queue(10, 32, 700);
+    let q: Vec<Tensor> = base.iter().chain(base.iter()).cloned().collect();
+    let run = |cache: usize| {
+        let sched = ServeScheduler::sharded_with(
+            Arc::clone(&srv),
+            2,
+            WorkerPool::shared(2),
+            cfg(3, Some(6), cache, false),
+        )
+        .unwrap();
+        let (outs, rej) = sched.process_all_with_backpressure(&q).unwrap();
+        let trace: Vec<(usize, Vec<u64>)> =
+            sched.trace().into_iter().map(|b| (b.shard, b.tickets)).collect();
+        (outs, rej, trace)
+    };
+    let (o_off, rej_off, t_off) = run(0);
+    let (o_on, rej_on, t_on) = run(64);
+    assert_eq!(rej_off, rej_on);
+    assert_eq!(t_off, t_on, "cache changed batch composition");
+    for (a, b) in o_off.iter().zip(o_on.iter()) {
+        assert!(a.bit_eq(b), "cache changed bits");
+    }
+}
+
+/// Concurrent clients under a depth cap: every client flushes through
+/// rejections, every request is answered with reference bits, the
+/// accepted ticket sequence stays dense, and the log covers every
+/// ticket. (The *assignment* of requests to tickets is whatever the OS
+/// interleaving made it — the invariants are about the ticket set and
+/// per-request bits, which may not care.)
+#[test]
+fn concurrent_clients_under_backpressure_keep_reference_bits() {
+    let srv = server(48, 8, 8, 21);
+    let q = queue(36, 48, 900);
+    let want = reference(&srv, &q);
+    for shards in [1usize, 2, 4] {
+        for clients in [1usize, 2, 5] {
+            let sched = ServeScheduler::sharded_with(
+                Arc::clone(&srv),
+                shards,
+                WorkerPool::shared(2),
+                cfg(4, Some(5), 32, true),
+            )
+            .unwrap();
+            let ok = std::thread::scope(|s| {
+                let handles: Vec<_> = (0..clients)
+                    .map(|c| {
+                        let (sched, q, want) = (&sched, &q, &want);
+                        s.spawn(move || {
+                            sched
+                                .replay_slice(q, c, clients)
+                                .unwrap()
+                                .into_iter()
+                                .all(|(i, o)| bits_eq(o.data(), want[i].data()))
+                        })
+                    })
+                    .collect();
+                handles.into_iter().all(|h| h.join().unwrap())
+            });
+            assert!(ok, "bits changed at shards={shards} clients={clients}");
+            let mut seen: Vec<u64> =
+                sched.trace().into_iter().flat_map(|b| b.tickets).collect();
+            seen.sort_unstable();
+            assert_eq!(seen, (0..36u64).collect::<Vec<u64>>());
+            let log = sched.log().unwrap();
+            assert_eq!(log.len(), 36, "every answered ticket must be logged");
+            let rep = sched.replay(0..36).unwrap();
+            assert_eq!(rep.replayed, 36);
+            assert!(rep.verified(), "shards={shards} clients={clients}: {rep:?}");
+        }
+    }
+}
+
+/// close() racing concurrent submitters: every submit either resolves
+/// with correct bits or fails with the typed `Closed` error — never a
+/// hang, never a dropped channel, never a stringly error.
+#[test]
+fn close_submit_race_is_typed_and_never_hangs() {
+    for round in 0..8u64 {
+        let srv = server(16, 4, 8, 40 + round);
+        let q = queue(24, 16, 1000 + round);
+        let want = reference(&srv, &q);
+        let sched = Arc::new(
+            ServeScheduler::sharded(Arc::clone(&srv), 2, 4, WorkerPool::shared(1)).unwrap(),
+        );
+        let outcome = std::thread::scope(|s| {
+            let submitters: Vec<_> = (0..3usize)
+                .map(|c| {
+                    let (sched, q, want) = (Arc::clone(&sched), &q, &want);
+                    s.spawn(move || {
+                        let mut served = 0usize;
+                        let mut closed = 0usize;
+                        for i in (c..q.len()).step_by(3) {
+                            match sched.submit(q[i].clone()) {
+                                Ok(p) => {
+                                    sched.flush();
+                                    let o = p.wait().expect("accepted ⇒ answered");
+                                    assert!(bits_eq(o.data(), want[i].data()));
+                                    served += 1;
+                                }
+                                Err(Error::Closed) => closed += 1,
+                                Err(e) => panic!("want Closed, got {e:?}"),
+                            }
+                        }
+                        (served, closed)
+                    })
+                })
+                .collect();
+            // close somewhere in the middle of the submission storm
+            let closer = s.spawn(|| sched.close());
+            let mut served = 0;
+            let mut closed = 0;
+            for h in submitters {
+                let (sv, cl) = h.join().unwrap();
+                served += sv;
+                closed += cl;
+            }
+            closer.join().unwrap();
+            (served, closed)
+        });
+        assert_eq!(outcome.0 + outcome.1, 24, "round {round}: every submit resolved");
+    }
+}
+
+/// The log's content addresses are honest: entries carry the hash of
+/// exactly the logged request/response tensors, batch ids are the batch
+/// head tickets from the trace, and a sub-range replay touches only its
+/// slice.
+#[test]
+fn log_entries_match_trace_and_subrange_replay() {
+    let srv = server(24, 4, 8, 5);
+    let q = queue(11, 24, 80);
+    let sched = ServeScheduler::sharded_with(
+        Arc::clone(&srv),
+        2,
+        WorkerPool::shared(1),
+        cfg(3, None, 0, true),
+    )
+    .unwrap();
+    let outs = sched.process_all(&q).unwrap();
+    let log = sched.log().unwrap();
+    assert_eq!(log.len(), 11);
+    // batch_id must be the first ticket of the trace batch containing
+    // the entry's ticket
+    for b in sched.trace() {
+        for &t in &b.tickets {
+            let e = log.get(t).unwrap();
+            assert_eq!(e.batch_id, b.tickets[0], "ticket {t}");
+        }
+    }
+    for (t, (r, o)) in q.iter().zip(outs.iter()).enumerate() {
+        let e = log.get(t as u64).unwrap();
+        assert_eq!(e.request_hash, hash_tensor(r));
+        assert_eq!(e.response_hash, hash_tensor(o));
+        assert!(e.request.bit_eq(r), "log must retain the exact request");
+    }
+    assert_eq!(sched.replay(4..9).unwrap().replayed, 5);
+    assert!(sched.replay(0..11).unwrap().verified());
+}
+
+/// Eviction pressure: a cache smaller than the working set must still
+/// serve bit-identical responses, and its occupancy obeys the
+/// insertion-ticket rule (the held tickets are the largest inserted).
+#[test]
+fn tiny_cache_under_eviction_stays_bit_identical() {
+    let srv = server(32, 4, 8, 13);
+    let base = queue(12, 32, 300);
+    let q: Vec<Tensor> = base.iter().chain(base.iter()).cloned().collect();
+    let want = reference(&srv, &q);
+    let sched = ServeScheduler::sharded_with(
+        Arc::clone(&srv),
+        1,
+        WorkerPool::shared(1),
+        cfg(4, None, 3, false),
+    )
+    .unwrap();
+    let outs = sched.process_all(&q).unwrap();
+    for (i, (o, w)) in outs.iter().zip(want.iter()).enumerate() {
+        assert!(bits_eq(o.data(), w.data()), "request {i}");
+    }
+    let s = sched.cache_stats().unwrap();
+    assert_eq!(s.len, 3, "capacity bound holds");
+    assert!(s.evictions > 0, "working set 12 > capacity 3 must evict");
+}
