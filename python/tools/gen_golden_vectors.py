@@ -134,6 +134,66 @@ def rexp_f32(x: np.float32):
     return frac_to_f32(fr)
 
 
+def _mpf_to_frac(v) -> Fraction:
+    sign, man, exp, _ = v._mpf_
+    fr = Fraction(man, 1) * Fraction(2) ** exp
+    return -fr if sign else fr
+
+
+def rtanh_f32(x: np.float32):
+    """Correctly-rounded tanh for f32 — the `rnum::rtanh` contract
+    (rust/src/rnum/special.rs): NaN → NaN, ±0 preserved, |x| ≥ 10
+    saturates to ±1 (1 − tanh 10 < ulp(1)/2, so the correctly-rounded
+    value IS ±1), else 300-bit mpmath + exact RNE rounding."""
+    import mpmath
+
+    x = F32(x)
+    if np.isnan(x):
+        return F32(np.nan)
+    if x == 0:
+        return x  # ±0 preserved
+    if abs(x) >= F32(10.0):
+        return F32(np.copysign(1.0, x))
+    with mpmath.workprec(300):
+        fr = _mpf_to_frac(mpmath.tanh(mpmath.mpf(float(x))))
+    return frac_to_f32(fr)
+
+
+def rrsqrt_f32(x: np.float32):
+    """Correctly-rounded 1/√x for f32 — the `rnum::rrsqrt` contract
+    (rust/src/rnum/sqrt.rs): NaN/negative → NaN, ±0 → +inf, inf → 0,
+    else 300-bit mpmath + exact RNE rounding (the exact 2^(2k) family
+    falls out of correct rounding automatically)."""
+    import mpmath
+
+    x = F32(x)
+    if np.isnan(x) or x < 0:
+        return F32(np.nan)
+    if x == 0:
+        return F32(np.inf)
+    if np.isinf(x):
+        return F32(0.0)
+    with mpmath.workprec(300):
+        fr = _mpf_to_frac(1 / mpmath.sqrt(mpmath.mpf(float(x))))
+    return frac_to_f32(fr)
+
+
+# fixed f32 constants of the GELU tanh graph (rust/src/rnum/special.rs)
+SQRT_2_OVER_PI = F32(0.7978846)
+GELU_C = F32(0.044715)
+
+
+def gelu_tanh_f32(x: np.float32):
+    """GELU tanh graph (`rnum::rgelu_tanh`):
+    `0.5·x·(1 + tanh(√(2/π)·(x + 0.044715·x³)))`, every op f32 RNE in
+    the fixed order, tanh correctly rounded."""
+    x = F32(x)
+    x3 = F32(F32(x * x) * x)
+    u = F32(SQRT_2_OVER_PI * F32(x + F32(GELU_C * x3)))
+    th = rtanh_f32(u)
+    return F32(F32(F32(0.5) * x) * F32(F32(1.0) + th))
+
+
 # ---------------------------------------------------------------------------
 # op specifications (scalar loops, fixed order — the paper's graphs)
 # ---------------------------------------------------------------------------
@@ -217,6 +277,180 @@ def softmax_rows(x):
 
 
 # ---------------------------------------------------------------------------
+# model inference specifications (ISSUE 5) — mirror the Rust off-tape
+# serving forwards op for op: nn::Linear::forward_infer_in,
+# nn::layer_norm_forward, nn::attention_forward,
+# Mlp::forward_infer_in, CharTransformer::forward_logits_infer_in
+# ---------------------------------------------------------------------------
+
+
+def add_rows(a, b):
+    """Elementwise f32 add (Tensor::add_t, same-shape case)."""
+    out = np.zeros(a.shape, F32)
+    for idx in np.ndindex(a.shape):
+        out[idx] = F32(a[idx] + b[idx])
+    return out
+
+
+def linear_forward(x, w, b):
+    """nn::Linear off-tape forward: x·Wᵀ (sequential-k unfused GEMM —
+    the transpose is layout-only) + broadcast bias add."""
+    y = matmul_seq(x, np.ascontiguousarray(w.T))
+    out = np.zeros(y.shape, F32)
+    for i in range(y.shape[0]):
+        for j in range(y.shape[1]):
+            out[i, j] = F32(y[i, j] + b[j])
+    return out
+
+
+def layer_norm_rows(x, g, b, eps=F32(1e-5)):
+    """nn::layer_norm_forward: per row, sequential mean sum, sequential
+    squared-deviation sum (unfused), rrsqrt(var + eps), then x̂·γ + β."""
+    rows, n = x.shape
+    nn_ = F32(n)
+    out = np.zeros((rows, n), F32)
+    for r in range(rows):
+        s = F32(0.0)
+        for v in x[r]:
+            s = F32(s + v)
+        mu = F32(s / nn_)
+        v2 = F32(0.0)
+        for v in x[r]:
+            dd = F32(v - mu)
+            v2 = F32(v2 + F32(dd * dd))
+        var = F32(v2 / nn_)
+        rs = rrsqrt_f32(F32(var + eps))
+        for j in range(n):
+            xh = F32(F32(x[r, j] - mu) * rs)
+            out[r, j] = F32(F32(xh * g[j]) + b[j])
+    return out
+
+
+def attention_forward(q, k, v, causal):
+    """nn::attention_forward on (BH, T, Dh): per (head, query) row —
+    unfused sequential QK dot · rrsqrt(dh), running max under max_wins
+    seeded with −inf, rexp shift, sequential denominator, divide, then
+    sequential P·V dots. Masked slots never enter any reduction."""
+    bh, tt, dh = q.shape
+    scale = rrsqrt_f32(F32(dh))
+    out = np.zeros((bh, tt, dh), F32)
+    for b in range(bh):
+        for i in range(tt):
+            jmax = i + 1 if causal else tt
+            row = np.zeros(jmax, F32)
+            m = F32(-np.inf)
+            for j in range(jmax):
+                acc = F32(0.0)
+                for d in range(dh):
+                    acc = F32(acc + F32(q[b, i, d] * k[b, j, d]))
+                s = F32(acc * scale)
+                row[j] = s
+                if max_wins(s, m):
+                    m = s
+            denom = F32(0.0)
+            for j in range(jmax):
+                e = rexp_f32(F32(row[j] - m))
+                row[j] = e
+                denom = F32(denom + e)
+            for j in range(jmax):
+                row[j] = F32(row[j] / denom)
+            for d in range(dh):
+                acc = F32(0.0)
+                for j in range(jmax):
+                    acc = F32(acc + F32(row[j] * v[b, j, d]))
+                out[b, i, d] = acc
+    return out
+
+
+def mha_forward(x, in_w, in_b, out_w, out_b, heads, causal):
+    """nn::MultiheadAttention::forward_seq_infer_in: QKV projection,
+    layout-only head split q/k/v[h,t,d] = qkv[t, c·D + h·Dh + d],
+    attention core, layout-only merge, output projection."""
+    tt, dim = x.shape
+    dh = dim // heads
+    qkv = linear_forward(x, in_w, in_b)  # (T, 3D)
+    q = np.zeros((heads, tt, dh), F32)
+    k = np.zeros((heads, tt, dh), F32)
+    v = np.zeros((heads, tt, dh), F32)
+    for c, dst in enumerate((q, k, v)):
+        for h in range(heads):
+            for t in range(tt):
+                for d in range(dh):
+                    dst[h, t, d] = qkv[t, c * dim + h * dh + d]
+    o = attention_forward(q, k, v, causal)  # (H, T, Dh)
+    y = np.zeros((tt, dim), F32)
+    for h in range(heads):
+        for t in range(tt):
+            for d in range(dh):
+                y[t, h * dh + d] = o[h, t, d]
+    return linear_forward(y, out_w, out_b)
+
+
+def mlp_forward_gelu(x, layers):
+    """Mlp::forward_infer_in with Act::Gelu: Linear → GELU between
+    layers → Linear. `layers` is [(w, b), …]."""
+    h = x
+    for i, (w, b) in enumerate(layers):
+        h = linear_forward(h, w, b)
+        if i + 1 < len(layers):
+            out = np.zeros(h.shape, F32)
+            for idx in np.ndindex(h.shape):
+                out[idx] = gelu_tanh_f32(h[idx])
+            h = out
+    return h
+
+
+def transformer_param_shapes(cfg):
+    """Parameter shapes in CharTransformer::params() order — the
+    fixed traversal the Rust fixture test overwrites."""
+    v, d, c, r = cfg["vocab"], cfg["dim"], cfg["context"], cfg["mlp_ratio"]
+    shapes = [(v, d), (c, d)]  # tok_emb, pos_emb
+    for _ in range(cfg["layers"]):
+        shapes += [
+            (d,), (d,),            # ln1 γ, β
+            (3 * d, d), (3 * d,),  # attn in_proj w, b
+            (d, d), (d,),          # attn out_proj w, b
+            (d,), (d,),            # ln2 γ, β
+            (r * d, d), (r * d,),  # fc1 w, b
+            (d, r * d), (d,),      # fc2 w, b
+        ]
+    shapes += [(d,), (d,), (v, d), (v,)]  # ln_f γ, β; head w, b
+    return shapes
+
+
+def transformer_logits(params, ids, cfg):
+    """CharTransformer::forward_logits_infer_in: embedding row lookup +
+    positional rows (layout-only), pre-norm blocks (LN → causal MHA →
+    residual, LN → GELU MLP → residual), final LN, head projection."""
+    it = iter(params)
+    tok, pos = next(it), next(it)
+    tt, dim = len(ids), cfg["dim"]
+    e = np.zeros((tt, dim), F32)
+    for r, i in enumerate(ids):
+        e[r] = tok[i]
+    h = add_rows(e, pos[:tt])
+    for _ in range(cfg["layers"]):
+        ln1_w, ln1_b = next(it), next(it)
+        in_w, in_b, out_w, out_b = next(it), next(it), next(it), next(it)
+        ln2_w, ln2_b = next(it), next(it)
+        fc1_w, fc1_b, fc2_w, fc2_b = next(it), next(it), next(it), next(it)
+        a = layer_norm_rows(h, ln1_w, ln1_b)
+        a = mha_forward(a, in_w, in_b, out_w, out_b, cfg["heads"], True)
+        x = add_rows(h, a)
+        g = layer_norm_rows(x, ln2_w, ln2_b)
+        g = linear_forward(g, fc1_w, fc1_b)
+        gg = np.zeros(g.shape, F32)
+        for idx in np.ndindex(g.shape):
+            gg[idx] = gelu_tanh_f32(g[idx])
+        g = linear_forward(gg, fc2_w, fc2_b)
+        h = add_rows(x, g)
+    ln_f_w, ln_f_b = next(it), next(it)
+    head_w, head_b = next(it), next(it)
+    h = layer_norm_rows(h, ln_f_w, ln_f_b)
+    return linear_forward(h, head_w, head_b)
+
+
+# ---------------------------------------------------------------------------
 # fingerprint framing — mirrors rust/src/coordinator/hashing.rs
 # ---------------------------------------------------------------------------
 
@@ -246,6 +480,29 @@ def hash_curve(values):
 # ---------------------------------------------------------------------------
 
 
+# the transformer fixture's hyper-parameters — keep in lockstep with
+# rust/tests/golden_vectors.rs (TransformerConfig literal there)
+TRANSFORMER_CFG = {"vocab": 10, "dim": 8, "heads": 2, "layers": 2, "context": 6, "mlp_ratio": 2}
+TRANSFORMER_IDS = [1, 4, 2, 9, 3, 7]
+# LCG seed bases for the model fixtures (param i uses base + i); scale
+# 0.5 is a power of two, so the extra multiply stays exact
+MLP_PARAM_SEED = 2900
+MLP_INPUT_SEED = 2950
+TRANSFORMER_PARAM_SEED = 3000
+
+
+def mlp_fixture_params():
+    """[12, 16, 10] GELU MLP — Module::params order: (w, b) per layer."""
+    shapes = [(16, 12), (16,), (10, 16), (10,)]
+    flat = [lcg_tensor(s, MLP_PARAM_SEED + i, scale=0.5) for i, s in enumerate(shapes)]
+    return flat, [(flat[0], flat[1]), (flat[2], flat[3])]
+
+
+def transformer_fixture_params():
+    shapes = transformer_param_shapes(TRANSFORMER_CFG)
+    return [lcg_tensor(s, TRANSFORMER_PARAM_SEED + i, scale=0.5) for i, s in enumerate(shapes)]
+
+
 def compute_entries():
     a = lcg_tensor((16, 32), 1001)
     b = lcg_tensor((32, 8), 1002)
@@ -259,6 +516,19 @@ def compute_entries():
     entries["sum_sequential_1000"] = hash_curve([sum_sequential(xs)])
     entries["sum_pairwise_1000"] = hash_curve([sum_pairwise(xs)])
     entries["softmax_rows_8x32"] = hash_params([softmax_rows(sx)])
+
+    # off-tape serving forwards (ISSUE 5): an input-lockstep hash over
+    # the generated parameters, then the forward outputs themselves
+    mlp_flat, mlp_layers = mlp_fixture_params()
+    mx = lcg_tensor((4, 12), MLP_INPUT_SEED)
+    entries["mlp_infer_params"] = hash_params(mlp_flat)
+    entries["mlp_infer_gelu_4x10"] = hash_params([mlp_forward_gelu(mx, mlp_layers)])
+
+    tp = transformer_fixture_params()
+    entries["transformer_infer_params"] = hash_params(tp)
+    entries["transformer_infer_logits_6x10"] = hash_params(
+        [transformer_logits(tp, TRANSFORMER_IDS, TRANSFORMER_CFG)]
+    )
     return entries
 
 
@@ -283,6 +553,34 @@ def selftest():
     assert rexp_f32(F32(0.0)) == F32(1.0)
     assert rexp_f32(F32(-200.0)) == F32(0.0)
     assert np.isinf(rexp_f32(F32(100.0)))
+    # the GELU constants must round decimal→f32 the same way Rust's
+    # literal parser does (decimal→double→f32 double-rounding hazard)
+    assert SQRT_2_OVER_PI == frac_to_f32(Fraction("0.7978846")), "0.7978846 double-rounds"
+    assert GELU_C == frac_to_f32(Fraction("0.044715")), "0.044715 double-rounds"
+    assert F32(1e-5) == frac_to_f32(Fraction("0.00001")), "LN eps double-rounds"
+    # rtanh: specials, saturation, and 1-ulp agreement with libm tanh
+    assert np.isnan(rtanh_f32(F32(np.nan)))
+    assert rtanh_f32(F32(0.0)) == F32(0.0)
+    assert np.signbit(rtanh_f32(F32(-0.0)))
+    assert rtanh_f32(F32(12.0)) == F32(1.0) and rtanh_f32(F32(-12.0)) == F32(-1.0)
+    for v in [0.1, 0.5, -0.7, 2.3, -5.1]:
+        got, ref = rtanh_f32(F32(v)), F32(np.tanh(np.float64(v)))
+        ulp = abs(int(np.frombuffer(F32(got).tobytes(), np.int32)[0])
+                  - int(np.frombuffer(ref.tobytes(), np.int32)[0]))
+        assert ulp <= 1, f"tanh({v}): {got} vs {ref}"
+    # rrsqrt: exact 2^(2k) family, specials, 1-ulp agreement
+    assert rrsqrt_f32(F32(4.0)) == F32(0.5)
+    assert rrsqrt_f32(F32(1.0)) == F32(1.0)
+    assert rrsqrt_f32(F32(0.25)) == F32(2.0)
+    assert np.isinf(rrsqrt_f32(F32(0.0)))
+    assert np.isnan(rrsqrt_f32(F32(-1.0)))
+    assert rrsqrt_f32(F32(np.inf)) == F32(0.0)
+    for v in [2.0, 3.7, 0.013, 900.0]:
+        got = rrsqrt_f32(F32(v))
+        ref = F32(1.0 / np.sqrt(np.float64(F32(v))))
+        ulp = abs(int(np.frombuffer(got.tobytes(), np.int32)[0])
+                  - int(np.frombuffer(ref.tobytes(), np.int32)[0]))
+        assert ulp <= 1, f"rrsqrt({v}): {got} vs {ref}"
 
 
 def main():

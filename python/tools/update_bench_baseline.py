@@ -1,0 +1,110 @@
+#!/usr/bin/env python3
+"""Refresh the committed ``BENCH_serve.json`` regression baseline from
+one or more fresh bench runs (e.g. the ``bench-json`` CI artifacts).
+
+The CI gate (.github/workflows/ci.yml, "Serve trajectory gate") reads
+the committed ``BENCH_serve.json`` and
+
+* **hard-fails** when a fresh row's ``allocs_per_call`` rises above the
+  committed value (allocation counts are exact and deterministic), and
+* **warns** when a fresh row's ``req_per_s`` drops below 85% of the
+  committed value (wall-clock on shared runners is noisy — ROADMAP
+  "de-flake the CI gate").
+
+This script builds a *conservative* baseline so the armed gate cannot
+flake: for every (kernel, model, shape…) key seen across the input
+runs it keeps the **minimum** ``req_per_s`` (slowest observed run) and
+the **maximum** ``allocs_per_call`` (both directions favour the gate
+staying green on an honest re-run, while still catching real
+regressions). Download 2–3 ``bench-json`` artifacts from CI runs on the
+target machine class, then:
+
+    python3 python/tools/update_bench_baseline.py run1/BENCH_serve.json \
+        run2/BENCH_serve.json
+
+and commit the rewritten ``BENCH_serve.json``.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[2]
+BASELINE = REPO / "BENCH_serve.json"
+
+KEY = (
+    "kernel",
+    "model",
+    "requests",
+    "shards",
+    "clients",
+    "batch_window",
+    "cache_capacity",
+    "max_queue_depth",
+    "pool_lanes",
+)
+
+NOTE = (
+    "regression baseline for the CI serve trajectory gate: allocs_per_call is "
+    "hard-gated (exact, deterministic), req_per_s is warn-only and recorded "
+    "conservatively (min across the source runs; see "
+    "python/tools/update_bench_baseline.py). Refresh from bench-json CI "
+    "artifacts after intentional perf/alloc changes."
+)
+
+
+def row_key(entry: dict) -> tuple:
+    return tuple(entry.get(k) for k in KEY)
+
+
+def merge(runs: list[list[dict]]) -> list[dict]:
+    merged: dict[tuple, dict] = {}
+    for entries in runs:
+        for e in entries:
+            if e.get("kernel") not in ("scheduler", "cache"):
+                continue
+            k = row_key(e)
+            cur = merged.get(k)
+            if cur is None:
+                merged[k] = dict(e)
+                continue
+            if "req_per_s" in e and "req_per_s" in cur:
+                cur["req_per_s"] = min(cur["req_per_s"], e["req_per_s"])
+            if "median_ns" in e and "median_ns" in cur:
+                cur["median_ns"] = max(cur["median_ns"], e["median_ns"])
+            if "allocs_per_call" in e and "allocs_per_call" in cur:
+                cur["allocs_per_call"] = max(cur["allocs_per_call"], e["allocs_per_call"])
+    return [merged[k] for k in sorted(merged, key=repr)]
+
+
+def main() -> int:
+    paths = [Path(p) for p in sys.argv[1:]]
+    if not paths:
+        print(__doc__)
+        return 2
+    runs = []
+    for p in paths:
+        data = json.loads(p.read_text())
+        entries = data.get("entries", [])
+        if not entries:
+            print(f"warning: {p} has no entries; skipping")
+            continue
+        runs.append(entries)
+    if not runs:
+        print("error: no usable entries in any input")
+        return 1
+    entries = merge(runs)
+    if not entries:
+        print("error: inputs held no scheduler/cache rows")
+        return 1
+    BASELINE.write_text(
+        json.dumps({"bench": "serve", "note": NOTE, "entries": entries}, indent=2) + "\n"
+    )
+    print(f"wrote {BASELINE}: {len(entries)} baseline rows from {len(runs)} run(s)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

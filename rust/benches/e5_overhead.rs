@@ -26,8 +26,10 @@ use repdl::bench_harness::{
     write_bench_json, CountingAllocator, JsonObj,
 };
 use repdl::coordinator::{
-    DeterministicServer, NumericsMode, ServeConfig, ServeScheduler, Trainer, TrainerConfig,
+    DeterministicServer, MlpTower, ModelTower, NumericsMode, ServeConfig, ServeScheduler,
+    Trainer, TrainerConfig, TransformerTower,
 };
+use repdl::nn::{Act, CharTransformer, Mlp, TransformerConfig};
 use std::sync::Arc;
 use repdl::nn::softmax_rows;
 use repdl::rng::uniform_tensor;
@@ -276,6 +278,7 @@ fn main() {
         serve_entries.push(
             JsonObj::new()
                 .s("kernel", "scheduler")
+                .s("model", "linear")
                 .int("requests", queue.len() as u64)
                 .int("shards", shards as u64)
                 .int("clients", clients as u64)
@@ -285,6 +288,92 @@ fn main() {
                 .int("d_out", 16)
                 .num("median_ns", st.median_ns)
                 .num("req_per_s", st.per_sec(queue.len()))
+                .int("allocs_per_call", allocs),
+        );
+    }
+
+    // per-model scheduler rows (ISSUE 5): the same dynamic-batching
+    // front end over each ModelTower — linear (packed GEMM fast path),
+    // off-tape MLP, off-tape transformer. Single shard + single
+    // submitter so every counter and the composition are
+    // event-sequence-pure; the bit gate (scheduler output == direct
+    // forward_batch) runs before any timing, so these rows double as a
+    // release-mode conformance check for the tower paths.
+    section("E5: serve scheduler — per-model towers");
+    let model_grid: Vec<(Arc<dyn ModelTower>, Vec<Tensor>)> = {
+        let mlp_tower: Arc<dyn ModelTower> = Arc::new(
+            MlpTower::new(Mlp::new(&[64, 64, 16], Act::Gelu, 11)).unwrap(),
+        );
+        let tcfg = TransformerConfig {
+            vocab: 28,
+            dim: if smoke { 16 } else { 32 },
+            heads: 4,
+            layers: 2,
+            context: if smoke { 8 } else { 16 },
+            mlp_ratio: 2,
+        };
+        let tr_tower: Arc<dyn ModelTower> =
+            Arc::new(TransformerTower::new(CharTransformer::new(tcfg, 12).unwrap()).unwrap());
+        let nreq = if smoke { 16 } else { 32 };
+        let mlp_queue: Vec<Tensor> = (0..nreq)
+            .map(|i| uniform_tensor(&[64], -1.0, 1.0, 500 + i as u64))
+            .collect();
+        let tr_queue: Vec<Tensor> = (0..nreq)
+            .map(|i| {
+                Tensor::from_vec(
+                    &[tcfg.context],
+                    (0..tcfg.context)
+                        .map(|j| ((i * 31 + j * 7 + 3) % tcfg.vocab) as f32)
+                        .collect(),
+                )
+                .unwrap()
+            })
+            .collect();
+        let lin_queue: Vec<Tensor> = (0..nreq)
+            .map(|i| uniform_tensor(&[256], -1.0, 1.0, 300 + i as u64))
+            .collect();
+        vec![
+            (Arc::clone(&server) as Arc<dyn ModelTower>, lin_queue),
+            (mlp_tower, mlp_queue),
+            (tr_tower, tr_queue),
+        ]
+    };
+    for (tower, mqueue) in &model_grid {
+        let pl = WorkerPool::shared(lanes);
+        // bit gate: the scheduler must reproduce the direct forward
+        let reference = tower.forward_batch(&pl, mqueue).unwrap();
+        let sched = ServeScheduler::sharded(
+            Arc::clone(tower),
+            1,
+            batch_window,
+            Arc::clone(&pl),
+        )
+        .unwrap();
+        let outs = sched.process_all(mqueue).unwrap();
+        for (a, b) in reference.iter().zip(outs.iter()) {
+            assert!(a.bit_eq(b), "{} scheduler diverged", tower.model_id());
+        }
+        let st = bench_once(
+            &format!("serve sched model={}", tower.model_id()),
+            samples,
+            || {
+                sched.process_all(mqueue).unwrap();
+            },
+        );
+        let (allocs, _) = allocs_during(|| sched.process_all(mqueue).unwrap());
+        serve_entries.push(
+            JsonObj::new()
+                .s("kernel", "scheduler")
+                .s("model", tower.model_id())
+                .int("requests", mqueue.len() as u64)
+                .int("shards", 1)
+                .int("clients", 1)
+                .int("batch_window", batch_window as u64)
+                .int("pool_lanes", lanes as u64)
+                .int("d_in", tower.d_in() as u64)
+                .int("d_out", tower.d_out() as u64)
+                .num("median_ns", st.median_ns)
+                .num("req_per_s", st.per_sec(mqueue.len()))
                 .int("allocs_per_call", allocs),
         );
     }
@@ -329,6 +418,7 @@ fn main() {
         serve_entries.push(
             JsonObj::new()
                 .s("kernel", "cache")
+                .s("model", "linear")
                 .int("requests", repeated.len() as u64)
                 .int("shards", 1)
                 .int("clients", 1)

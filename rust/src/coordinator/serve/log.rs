@@ -17,8 +17,18 @@
 //! The log records only *answered* requests: a batch that fails
 //! (exceptional — shapes are validated at submit) logs nothing, and
 //! rejected/closed submissions never reach a batch at all.
+//!
+//! **Rotation.** The log retains request tensors, so an unbounded
+//! long-lived server would grow without limit. [`ResponseLog::
+//! truncate_below`] drops every entry under a replay **watermark** — a
+//! ticket count, the same logical-clock currency as flush cuts — and
+//! the watermark is remembered: replaying a truncated ticket afterwards
+//! is the typed [`crate::Error::Truncated`], never a silent
+//! "0 entries verified". Entries at or above the watermark are
+//! untouched and still replay bit-exactly.
 
 use crate::tensor::Tensor;
+use crate::{Error, Result};
 use std::collections::BTreeMap;
 use std::ops::Range;
 use std::sync::Mutex;
@@ -39,6 +49,24 @@ pub struct LogEntry {
     /// function of the submit/flush event sequence, so two runs with the
     /// same events log identical batch ids.
     pub batch_id: u64,
+    /// Parameter fingerprint of the model that served this request
+    /// ([`crate::coordinator::serve::ModelTower::weights_hash`]) — so a
+    /// log entry can never be replayed, or verified, against a
+    /// different model's tower.
+    pub weights_hash: String,
+}
+
+#[derive(Default)]
+struct LogInner {
+    entries: BTreeMap<u64, LogEntry>,
+    /// Lowest ticket still eligible for retention: everything below has
+    /// been dropped by [`ResponseLog::truncate_below`]. Monotone.
+    watermark: u64,
+    /// Records that arrived *after* a truncation had already raised the
+    /// watermark past their ticket — an answered request with no audit
+    /// record. Zero unless a truncation raced in-flight work; exposed so
+    /// an aggressive rotation can never silently cost audit coverage.
+    late_drops: u64,
 }
 
 /// Thread-safe ticket-addressed log (see module docs). Shared by the
@@ -46,7 +74,7 @@ pub struct LogEntry {
 /// ever holds the internal lock across its own work.
 #[derive(Default)]
 pub struct ResponseLog {
-    entries: Mutex<BTreeMap<u64, LogEntry>>,
+    inner: Mutex<LogInner>,
 }
 
 impl ResponseLog {
@@ -58,29 +86,86 @@ impl ResponseLog {
     /// Append one entry (dispatcher-side). A ticket is answered exactly
     /// once, so an existing entry for the same ticket would indicate a
     /// scheduler bug — the first record wins and the duplicate is
-    /// dropped, keeping the log append-only.
+    /// dropped, keeping the log append-only. Entries below the
+    /// truncation watermark are dropped too — a truncated range cannot
+    /// be resurrected — but counted in [`Self::late_drops`]: a
+    /// truncation that overtakes a still-in-flight ticket (the batch
+    /// executes *after* the rotation) silently losing that request's
+    /// audit record would be unobservable otherwise.
     pub fn record(&self, entry: LogEntry) {
-        self.entries.lock().unwrap().entry(entry.ticket).or_insert(entry);
+        let mut inner = self.inner.lock().unwrap();
+        if entry.ticket < inner.watermark {
+            inner.late_drops += 1;
+            return;
+        }
+        inner.entries.entry(entry.ticket).or_insert(entry);
     }
 
     /// Entry for one ticket, if that ticket has been answered.
     pub fn get(&self, ticket: u64) -> Option<LogEntry> {
-        self.entries.lock().unwrap().get(&ticket).cloned()
+        self.inner.lock().unwrap().entries.get(&ticket).cloned()
     }
 
     /// Logged entries with tickets in `range`, in ticket order.
     pub fn range(&self, range: Range<u64>) -> Vec<LogEntry> {
-        self.entries.lock().unwrap().range(range).map(|(_, e)| e.clone()).collect()
+        self.inner.lock().unwrap().entries.range(range).map(|(_, e)| e.clone()).collect()
     }
 
-    /// Number of answered requests recorded.
+    /// [`Self::range`] with the truncation-watermark check done under
+    /// the **same lock acquisition** as the read: errors with the typed
+    /// [`Error::Truncated`] when `range.start` falls below the
+    /// watermark. Checking and reading separately would leave a window
+    /// for a concurrent [`Self::truncate_below`] to rotate part of the
+    /// range away between the two — and a half-rotated audit range must
+    /// error, never silently shrink to a passing replay.
+    pub fn range_checked(&self, range: Range<u64>) -> Result<Vec<LogEntry>> {
+        let inner = self.inner.lock().unwrap();
+        if range.start < inner.watermark {
+            return Err(Error::Truncated { ticket: range.start, watermark: inner.watermark });
+        }
+        Ok(inner.entries.range(range).map(|(_, e)| e.clone()).collect())
+    }
+
+    /// Number of answered requests recorded (and still retained).
     pub fn len(&self) -> usize {
-        self.entries.lock().unwrap().len()
+        self.inner.lock().unwrap().entries.len()
     }
 
-    /// True when nothing has been recorded yet.
+    /// True when nothing is retained.
     pub fn is_empty(&self) -> bool {
-        self.entries.lock().unwrap().is_empty()
+        self.inner.lock().unwrap().entries.is_empty()
+    }
+
+    /// Drop every retained entry with `ticket < watermark` and raise
+    /// the truncation watermark (monotone: a lower watermark than the
+    /// current one is a no-op). Returns the number of entries dropped.
+    /// The watermark is a ticket count — the same logical-clock
+    /// currency as flush cuts — so *what a rotated log still proves* is
+    /// a pure function of the event sequence plus the explicit
+    /// truncation calls, never of wall time.
+    pub fn truncate_below(&self, watermark: u64) -> usize {
+        let mut inner = self.inner.lock().unwrap();
+        if watermark <= inner.watermark {
+            return 0;
+        }
+        inner.watermark = watermark;
+        let keep = inner.entries.split_off(&watermark);
+        let dropped = inner.entries.len();
+        inner.entries = keep;
+        dropped
+    }
+
+    /// The current truncation watermark: tickets below it have been
+    /// dropped and can no longer be replayed (0 = nothing truncated).
+    pub fn watermark(&self) -> u64 {
+        self.inner.lock().unwrap().watermark
+    }
+
+    /// How many served requests arrived for recording after a
+    /// truncation had already passed their ticket (see [`Self::record`]).
+    /// Non-zero means some answered requests have no audit record.
+    pub fn late_drops(&self) -> u64 {
+        self.inner.lock().unwrap().late_drops
     }
 }
 
@@ -98,6 +183,7 @@ mod tests {
             response_hash: hash_tensor(&response),
             request,
             batch_id,
+            weights_hash: "test-weights".to_string(),
         }
     }
 
@@ -124,5 +210,68 @@ mod tests {
         log.record(entry(7, 2.0, 7)); // would be a scheduler bug; dropped
         assert_eq!(log.len(), 1);
         assert_eq!(log.get(7).unwrap().response_hash, first_hash);
+    }
+
+    #[test]
+    fn truncate_below_drops_exactly_the_sub_watermark_range() {
+        let log = ResponseLog::new();
+        for t in 0..10u64 {
+            log.record(entry(t, t as f32, t));
+        }
+        assert_eq!(log.watermark(), 0);
+        assert_eq!(log.truncate_below(4), 4, "tickets 0..4 dropped");
+        assert_eq!(log.watermark(), 4);
+        assert_eq!(log.len(), 6);
+        assert!(log.get(3).is_none());
+        assert!(log.get(4).is_some());
+        // the retained range is bit-untouched
+        let kept: Vec<u64> = log.range(0..10).iter().map(|e| e.ticket).collect();
+        assert_eq!(kept, vec![4, 5, 6, 7, 8, 9]);
+        assert_eq!(log.get(5).unwrap().response_hash, entry(5, 5.0, 5).response_hash);
+    }
+
+    #[test]
+    fn range_checked_is_atomic_with_the_watermark() {
+        let log = ResponseLog::new();
+        for t in 0..8u64 {
+            log.record(entry(t, t as f32, t));
+        }
+        assert_eq!(log.range_checked(0..8).unwrap().len(), 8);
+        log.truncate_below(3);
+        // reaching below the watermark: the typed error, with the same
+        // values replay() surfaces
+        match log.range_checked(0..8) {
+            Err(crate::Error::Truncated { ticket, watermark }) => {
+                assert_eq!((ticket, watermark), (0, 3));
+            }
+            other => panic!("want Truncated, got {other:?}"),
+        }
+        // at and above the watermark: the retained slice, bit-untouched
+        let got: Vec<u64> =
+            log.range_checked(3..8).unwrap().iter().map(|e| e.ticket).collect();
+        assert_eq!(got, vec![3, 4, 5, 6, 7]);
+    }
+
+    #[test]
+    fn watermark_is_monotone_and_blocks_resurrection() {
+        let log = ResponseLog::new();
+        for t in 0..6u64 {
+            log.record(entry(t, t as f32, t));
+        }
+        assert_eq!(log.truncate_below(5), 5);
+        // lowering the watermark is a no-op…
+        assert_eq!(log.truncate_below(2), 0);
+        assert_eq!(log.watermark(), 5);
+        // …and a truncated ticket cannot be re-recorded — but the lost
+        // audit record is counted, never silent
+        assert_eq!(log.late_drops(), 0);
+        log.record(entry(1, 1.0, 1));
+        assert!(log.get(1).is_none());
+        assert_eq!(log.len(), 1);
+        assert_eq!(log.late_drops(), 1);
+        // truncating everything leaves an empty log with the watermark up
+        assert_eq!(log.truncate_below(100), 1);
+        assert!(log.is_empty());
+        assert_eq!(log.watermark(), 100);
     }
 }

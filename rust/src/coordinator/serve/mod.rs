@@ -10,11 +10,15 @@
 //! problem size (like cuDNN), so its per-request bits change with batch
 //! size — [`ServeReport`] quantifies that.
 //!
-//! The subsystem has four layers (DESIGN.md §7–§8):
+//! The subsystem has six layers (DESIGN.md §7–§9):
 //!
-//! * [`replica`] — the model replica: [`DeterministicServer`] (weights
-//!   pre-packed once into microkernel panels, scratch-staged pooled
-//!   batch GEMM) and [`ServeReplica`], a replica bound to a shareable
+//! * [`tower`] — [`ModelTower`], the model-generic replica surface
+//!   (`forward_batch` over an explicit pool + identity), with three
+//!   implementations: the linear [`DeterministicServer`], [`MlpTower`]
+//!   and the off-tape [`TransformerTower`].
+//! * [`replica`] — [`DeterministicServer`] (weights pre-packed once
+//!   into microkernel panels, scratch-staged pooled batch GEMM) and
+//!   [`ServeReplica`], a tower bound to a shareable
 //!   [`crate::tensor::PoolHandle`].
 //! * [`scheduler`] — [`ServeScheduler`], the deterministic
 //!   dynamic-batching front end: concurrent clients submit requests,
@@ -23,20 +27,31 @@
 //!   numbers — never of thread timing — and responses come back in
 //!   ticket order. [`ServeConfig`] adds the deterministic queue-depth
 //!   cap (reject by ticket arithmetic, typed `Error::Rejected`).
+//! * [`registry`] — [`ModelRegistry`], multi-model routing: model id →
+//!   scheduler under one router gate, so per-model ticket sequences are
+//!   a pure function of the global submit order.
 //! * [`cache`] — [`MemoCache`], the content-addressed response memo
-//!   keyed by request hash, with logical-clock (insertion-ticket)
-//!   eviction; consulted at dispatch time so cache-on and cache-off
-//!   runs share tickets, batches and bits.
+//!   keyed by `weights_hash:request_hash` (hits can never cross
+//!   models), with logical-clock (insertion-ticket) eviction; consulted
+//!   at dispatch time so cache-on and cache-off runs share tickets,
+//!   batches and bits.
 //! * [`log`] — [`ResponseLog`], the ticket-addressed audit log of
-//!   request/response content hashes, re-checkable bit-exactly via
-//!   [`ServeScheduler::replay`].
+//!   request/response content hashes (model-stamped via
+//!   `weights_hash`), re-checkable bit-exactly via
+//!   [`ServeScheduler::replay`] and rotatable via
+//!   [`ResponseLog::truncate_below`] (replays below the watermark are
+//!   the typed `Error::Truncated`).
 
 pub mod cache;
 pub mod log;
+pub mod registry;
 pub mod replica;
 pub mod scheduler;
+pub mod tower;
 
 pub use cache::{CacheStats, MemoCache};
 pub use log::{LogEntry, ResponseLog};
+pub use registry::ModelRegistry;
 pub use replica::{DeterministicServer, ServeReplica, ServeReport, ServeThroughput};
 pub use scheduler::{BatchTrace, Pending, ReplayReport, ServeConfig, ServeScheduler};
+pub use tower::{MlpTower, ModelTower, NamedTower, TransformerTower};

@@ -1,0 +1,238 @@
+//! Multi-model routing: model id → scheduler (DESIGN.md §9).
+//!
+//! PR 3–4's scheduler serves one model. Production serving hosts many —
+//! and the determinism story must survive the composition. The registry
+//! keeps it simple by making *every* per-model mechanism per-scheduler:
+//! each registered [`ServeScheduler`] owns its own ticket space,
+//! admission gate, memo cache and response log (exactly as DESIGN §8
+//! anticipated — "admission + log are per-scheduler already, so this
+//! composes"), and the registry adds only the routing step.
+//!
+//! **One gate lock.** [`ModelRegistry::submit`] resolves the model id
+//! and stamps the ticket under a single registry-wide router lock, so
+//! the interleaved multi-model submit order maps to per-model ticket
+//! sequences **atomically**: if client A's submit to model X returns
+//! before client B's submit to model Y starts, A's ticket in X's space
+//! precedes every ticket B's interleaving could have claimed — the
+//! per-model ticket sequence is a pure function of the global submit
+//! order, with no window where two racing submits to different models
+//! can observe each other half-routed. (Bits never depend on this —
+//! towers are independent — but traces, admission decisions and audit
+//! logs are part of the reproducibility contract too.)
+//!
+//! **Cross-model isolation.** Responses can never leak across models
+//! even in principle: every memo-cache key and log entry embeds the
+//! serving model's `weights_hash`, so two models given bit-identical
+//! requests keep disjoint cache key spaces and per-model audit trails
+//! (`tests/serve_models.rs` pins both).
+
+use std::collections::BTreeMap;
+use std::ops::Range;
+use std::sync::Mutex;
+
+use super::scheduler::{Pending, ReplayReport, ServeScheduler};
+use crate::tensor::Tensor;
+use crate::{Error, Result};
+
+/// Routes requests to per-model [`ServeScheduler`]s by model id (see
+/// module docs). Build the registry up front (`register` each model's
+/// scheduler), then serve through `&self`.
+#[derive(Default)]
+pub struct ModelRegistry {
+    /// The router gate: held across id-resolution + ticket stamping so
+    /// the global submit order maps atomically onto per-model ticket
+    /// sequences.
+    gate: Mutex<()>,
+    /// id → scheduler. `BTreeMap` so every iteration (flush_all,
+    /// close_all, model_ids) runs in deterministic id order.
+    models: BTreeMap<String, ServeScheduler>,
+}
+
+impl ModelRegistry {
+    /// Empty registry.
+    pub fn new() -> ModelRegistry {
+        ModelRegistry::default()
+    }
+
+    /// File a scheduler under its model id
+    /// ([`ServeScheduler::model_id`]). Duplicate ids are a config error
+    /// — registration happens at startup, before serving, so this is
+    /// `&mut self` and needs no lock.
+    pub fn register(&mut self, sched: ServeScheduler) -> Result<()> {
+        let id = sched.model_id().to_string();
+        if self.models.contains_key(&id) {
+            return Err(Error::config(format!(
+                "model registry: duplicate model id '{id}'"
+            )));
+        }
+        self.models.insert(id, sched);
+        Ok(())
+    }
+
+    /// Registered model ids, in deterministic (sorted) order.
+    pub fn model_ids(&self) -> Vec<String> {
+        self.models.keys().cloned().collect()
+    }
+
+    /// Number of registered models.
+    pub fn len(&self) -> usize {
+        self.models.len()
+    }
+
+    /// True when no model is registered.
+    pub fn is_empty(&self) -> bool {
+        self.models.is_empty()
+    }
+
+    /// The scheduler serving `model_id`, if registered. Direct access
+    /// is fine for per-model operations (waiting, stats, replay);
+    /// submitting through it bypasses the registry's global submit
+    /// order, which only matters to callers who want cross-model trace
+    /// reproducibility.
+    pub fn get(&self, model_id: &str) -> Option<&ServeScheduler> {
+        self.models.get(model_id)
+    }
+
+    fn resolve(&self, model_id: &str) -> Result<&ServeScheduler> {
+        self.models.get(model_id).ok_or_else(|| {
+            Error::config(format!("model registry: unknown model id '{model_id}'"))
+        })
+    }
+
+    /// Route one request to `model_id` under the registry gate: the
+    /// per-model ticket this submit claims is a pure function of the
+    /// global submit order (see module docs). Typed failures pass
+    /// through from the scheduler (`Error::Rejected`, `Error::Closed`)
+    /// plus `Error::Config` for an unknown id — none consume a ticket.
+    pub fn submit(&self, model_id: &str, request: Tensor) -> Result<Pending> {
+        let _gate = self.gate.lock().unwrap();
+        self.resolve(model_id)?.submit(request)
+    }
+
+    /// [`Self::submit`] that honours admission backpressure instead of
+    /// surfacing it (flush-and-retry against the target model's own
+    /// gate; other models are untouched).
+    ///
+    /// Deliberately NOT delegated to the scheduler's own
+    /// `submit_flushing_rejections`: each retry here must route through
+    /// [`Self::submit`] so every accepted ticket is stamped under the
+    /// router gate (the cross-model trace contract), while holding that
+    /// gate *across* the whole retry loop would block every other
+    /// model's submits behind one model's backpressure.
+    pub fn submit_with_backpressure(&self, model_id: &str, request: &Tensor) -> Result<Pending> {
+        loop {
+            match self.submit(model_id, request.clone()) {
+                Err(Error::Rejected { .. }) => self.resolve(model_id)?.flush(),
+                other => return other,
+            }
+        }
+    }
+
+    /// Flush one model's scheduler (a per-model logical-clock event).
+    pub fn flush(&self, model_id: &str) -> Result<()> {
+        self.resolve(model_id)?.flush();
+        Ok(())
+    }
+
+    /// Flush every registered scheduler, in deterministic id order,
+    /// under the router gate (so the cut set corresponds to one point
+    /// in the global submit order).
+    pub fn flush_all(&self) {
+        let _gate = self.gate.lock().unwrap();
+        for sched in self.models.values() {
+            sched.flush();
+        }
+    }
+
+    /// Replay a ticket range on one model's scheduler (see
+    /// [`ServeScheduler::replay`]).
+    pub fn replay(&self, model_id: &str, tickets: Range<u64>) -> Result<ReplayReport> {
+        self.resolve(model_id)?.replay(tickets)
+    }
+
+    /// Stop accepting requests on every scheduler; in-flight requests
+    /// are drained and answered.
+    pub fn close_all(&self) {
+        let _gate = self.gate.lock().unwrap();
+        for sched in self.models.values() {
+            sched.close();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::serve::{DeterministicServer, ServeConfig, ServeScheduler};
+    use crate::tensor::WorkerPool;
+    use std::sync::Arc;
+
+    fn linear_sched(d_in: usize, seed: u64, cfg: ServeConfig) -> ServeScheduler {
+        let w = crate::rng::uniform_tensor(&[d_in, 4], -0.3, 0.3, seed);
+        let srv = Arc::new(DeterministicServer::new(w, 8).unwrap());
+        ServeScheduler::sharded_with(srv, 2, WorkerPool::shared(1), cfg).unwrap()
+    }
+
+    #[test]
+    fn duplicate_and_unknown_ids_are_config_errors() {
+        let mut reg = ModelRegistry::new();
+        reg.register(linear_sched(8, 1, ServeConfig::default())).unwrap();
+        // both schedulers serve model id "linear" → duplicate
+        assert!(reg.register(linear_sched(8, 2, ServeConfig::default())).is_err());
+        assert_eq!(reg.model_ids(), vec!["linear".to_string()]);
+        assert_eq!(reg.len(), 1);
+        // the rename wrapper lets a second linear model register
+        let w2 = crate::rng::uniform_tensor(&[8, 4], -0.3, 0.3, 9);
+        let srv2 = Arc::new(crate::coordinator::serve::NamedTower::new(
+            DeterministicServer::new(w2, 8).unwrap(),
+            "linear-b",
+        ));
+        reg.register(ServeScheduler::sharded(srv2, 1, 4, WorkerPool::shared(1)).unwrap())
+            .unwrap();
+        assert_eq!(
+            reg.model_ids(),
+            vec!["linear".to_string(), "linear-b".to_string()]
+        );
+        let req = crate::rng::uniform_tensor(&[8], -1.0, 1.0, 3);
+        assert!(reg.submit("nope", req).is_err());
+        assert!(reg.get("nope").is_none());
+        assert!(reg.flush("nope").is_err());
+    }
+
+    #[test]
+    fn routes_to_the_right_scheduler_and_tickets_follow_submit_order() {
+        let mut reg = ModelRegistry::new();
+        reg.register(linear_sched(8, 1, ServeConfig::default())).unwrap();
+        let mlp = crate::coordinator::serve::MlpTower::new(crate::nn::Mlp::new(
+            &[8, 6, 4],
+            crate::nn::Act::Relu,
+            5,
+        ))
+        .unwrap();
+        reg.register(
+            ServeScheduler::sharded(Arc::new(mlp), 1, 4, WorkerPool::shared(1)).unwrap(),
+        )
+        .unwrap();
+        let reqs: Vec<_> =
+            (0..6).map(|i| crate::rng::uniform_tensor(&[8], -1.0, 1.0, 10 + i)).collect();
+        // interleave: linear, mlp, linear, mlp, …
+        let mut pending = Vec::new();
+        for (i, r) in reqs.iter().enumerate() {
+            let id = if i % 2 == 0 { "linear" } else { "mlp" };
+            pending.push((id, reg.submit(id, r.clone()).unwrap()));
+        }
+        // per-model ticket sequences are dense and in submit order
+        for (i, (_, p)) in pending.iter().enumerate() {
+            assert_eq!(p.ticket(), (i / 2) as u64, "submit {i}");
+        }
+        reg.flush_all();
+        for (_, p) in pending {
+            p.wait().unwrap();
+        }
+        reg.close_all();
+        assert!(matches!(
+            reg.submit("linear", reqs[0].clone()),
+            Err(Error::Closed)
+        ));
+    }
+}

@@ -5,8 +5,10 @@
 //! *which* requests form a batch and *which* replica runs it — both pure
 //! functions of ticket numbers, so the split cannot affect bits.
 
+use super::tower::ModelTower;
 use crate::baseline::{baseline_matmul, PlatformProfile};
 use crate::bench_harness::bench;
+use crate::coordinator::hashing::hash_tensor;
 use crate::tensor::microkernel::{gemm_packed_into, pack_b_panels, packed_b_len};
 use crate::tensor::pool::global_pool;
 use crate::tensor::{scratch_f32, PoolHandle, Tensor, WorkerPool};
@@ -38,6 +40,10 @@ pub struct DeterministicServer {
     /// built once in [`Self::new`]), so the serve hot path never
     /// re-packs the immutable weight matrix per call.
     packed_w: Vec<f32>,
+    /// Content address of `weights` (`hash_tensor`), computed once —
+    /// the [`ModelTower::weights_hash`] the scheduler embeds in cache
+    /// keys and log entries.
+    weights_hash: String,
 }
 
 /// Outcome of replaying the same requests under different batch mixes.
@@ -79,7 +85,8 @@ impl DeterministicServer {
         let (d_in, d_out) = (d[0], d[1]);
         let mut packed_w = vec![0.0f32; packed_b_len(d_in, d_out)];
         pack_b_panels(global_pool(), weights.data(), d_in, d_out, &mut packed_w);
-        Ok(DeterministicServer { weights, max_batch, packed_w })
+        let weights_hash = hash_tensor(&weights);
+        Ok(DeterministicServer { weights, max_batch, packed_w, weights_hash })
     }
 
     /// Input feature count (weight rows).
@@ -90,6 +97,11 @@ impl DeterministicServer {
     /// Output feature count (weight columns).
     pub fn d_out(&self) -> usize {
         self.weights.dims()[1]
+    }
+
+    /// Content address of the weight matrix, computed at construction.
+    pub fn weights_hash(&self) -> &str {
+        &self.weights_hash
     }
 
     /// Process a queue in arrival order, batching up to `max_batch`.
@@ -208,6 +220,7 @@ impl DeterministicServer {
                 weights: self.weights.clone(),
                 max_batch: bs,
                 packed_w: self.packed_w.clone(),
+                weights_hash: self.weights_hash.clone(),
             };
             repro_all.push(s.process_repro(queue)?);
             base_all.push(s.process_baseline(queue, p)?);
@@ -226,27 +239,30 @@ impl DeterministicServer {
     }
 }
 
-/// One scheduler shard: a [`DeterministicServer`] bound to the
-/// [`WorkerPool`] its batches dispatch on. Both sides are shareable
-/// handles — several replicas can serve the same `Arc`'d server (one
-/// packed weight copy, zero per-replica packing) and can share one pool
-/// (concurrent dispatchers are supported by [`WorkerPool`]) or own
-/// private pools; either choice is bit-neutral because pool size never
-/// changes kernel bits.
+/// One scheduler shard: a [`ModelTower`] bound to the [`WorkerPool`]
+/// its batches dispatch on. Both sides are shareable handles — several
+/// replicas can serve the same `Arc`'d tower (one weight copy — for the
+/// linear tower, one packed-panel copy; zero per-replica packing) and
+/// can share one pool (concurrent dispatchers are supported by
+/// [`WorkerPool`]) or own private pools; either choice is bit-neutral
+/// because pool size never changes kernel bits (a tower contract,
+/// DESIGN.md §9).
 pub struct ServeReplica {
-    server: Arc<DeterministicServer>,
+    tower: Arc<dyn ModelTower>,
     pool: PoolHandle,
 }
 
 impl ServeReplica {
-    /// Bind a shared server to a (shareable) pool handle.
-    pub fn new(server: Arc<DeterministicServer>, pool: PoolHandle) -> ServeReplica {
-        ServeReplica { server, pool }
+    /// Bind a shared tower to a (shareable) pool handle. `Arc`s of
+    /// concrete towers ([`DeterministicServer`],
+    /// [`super::MlpTower`], [`super::TransformerTower`]) coerce here.
+    pub fn new(tower: Arc<dyn ModelTower>, pool: PoolHandle) -> ServeReplica {
+        ServeReplica { tower, pool }
     }
 
-    /// The model this replica serves.
-    pub fn server(&self) -> &DeterministicServer {
-        &self.server
+    /// The model tower this replica serves.
+    pub fn tower(&self) -> &Arc<dyn ModelTower> {
+        &self.tower
     }
 
     /// The pool this replica's batches dispatch on.
@@ -255,14 +271,14 @@ impl ServeReplica {
     }
 
     /// Execute one batch on this replica's pool (one output row per
-    /// request, bit-identical to `matmul(x, W)` for any pool size).
+    /// request, bit-identical for any pool size — the tower contract).
     /// Batch invariance is also what makes the audit path sound: the
     /// scheduler's `replay` re-executes logged requests as singleton
     /// batches here and may demand bit-equality with responses that were
     /// originally served from arbitrary batch compositions (or from the
     /// memo cache, which those compositions filled).
     pub fn process(&self, batch: &[Tensor]) -> Result<Vec<Tensor>> {
-        self.server.process_repro_in(&self.pool, batch)
+        self.tower.forward_batch(&self.pool, batch)
     }
 }
 

@@ -75,7 +75,8 @@ use std::thread::JoinHandle;
 
 use super::cache::{CacheStats, MemoCache};
 use super::log::{LogEntry, ResponseLog};
-use super::replica::{check_request, DeterministicServer, ServeReplica};
+use super::replica::ServeReplica;
+use super::tower::ModelTower;
 use crate::coordinator::hashing::hash_tensor;
 use crate::tensor::{PoolHandle, Tensor};
 use crate::{Error, Result};
@@ -203,7 +204,11 @@ impl ReplayReport {
 pub struct ServeScheduler {
     shards: Arc<Vec<Shard>>,
     gate: Mutex<Gate>,
-    d_in: usize,
+    /// The model every replica serves — kept for submit-time request
+    /// validation (tower-specific: length for linear/MLP, length *and*
+    /// token-id domain for the transformer) and for the scheduler's
+    /// identity (`model_id`, `weights_hash`).
+    tower: Arc<dyn ModelTower>,
     batch_window: usize,
     max_queue_depth: Option<usize>,
     cache: Option<Arc<MemoCache>>,
@@ -214,9 +219,9 @@ pub struct ServeScheduler {
 impl ServeScheduler {
     /// Build a scheduler over explicit replicas with default policy
     /// (unbounded admission, no cache, no log). All replicas must serve
-    /// the same weight shape (they may — and usually should — share one
-    /// `Arc`'d [`DeterministicServer`]); `batch_window` is the maximum
-    /// requests per dispatched batch.
+    /// the **same model** — same id, shape and weight bits (they may —
+    /// and usually should — share one `Arc`'d [`ModelTower`]);
+    /// `batch_window` is the maximum requests per dispatched batch.
     pub fn new(replicas: Vec<ServeReplica>, batch_window: usize) -> Result<ServeScheduler> {
         ServeScheduler::with_config(replicas, ServeConfig { batch_window, ..Default::default() })
     }
@@ -239,14 +244,34 @@ impl ServeScheduler {
                 "serve scheduler: max queue depth must be >= 1 when set (0 rejects everything)",
             ));
         }
-        let d_in = replicas[0].server().d_in();
-        let d_out = replicas[0].server().d_out();
+        // every replica must serve the *same model*: identical id,
+        // shape AND weight bits — a shard serving stale weights would
+        // silently break bit-reproducibility across shard routing, so
+        // the fingerprint check is structural, not advisory
+        let tower = Arc::clone(replicas[0].tower());
         for (i, r) in replicas.iter().enumerate() {
-            if r.server().d_in() != d_in || r.server().d_out() != d_out {
+            let t = r.tower();
+            if t.model_id() != tower.model_id()
+                || t.d_in() != tower.d_in()
+                || t.d_out() != tower.d_out()
+            {
                 return Err(Error::config(format!(
-                    "serve scheduler: replica {i} weights are {}x{}, replica 0 has {d_in}x{d_out}",
-                    r.server().d_in(),
-                    r.server().d_out()
+                    "serve scheduler: replica {i} serves model '{}' ({}→{}), replica 0 \
+                     serves '{}' ({}→{})",
+                    t.model_id(),
+                    t.d_in(),
+                    t.d_out(),
+                    tower.model_id(),
+                    tower.d_in(),
+                    tower.d_out()
+                )));
+            }
+            if t.weights_hash() != tower.weights_hash() {
+                return Err(Error::config(format!(
+                    "serve scheduler: replica {i} weights differ from replica 0 \
+                     (weights_hash {} vs {})",
+                    t.weights_hash(),
+                    tower.weights_hash()
                 )));
             }
         }
@@ -272,11 +297,18 @@ impl ServeScheduler {
             let sh = Arc::clone(&shards);
             let cache = cache.clone();
             let log = log.clone();
+            let weights_hash = tower.weights_hash().to_string();
             dispatchers.push(
                 std::thread::Builder::new()
                     .name(format!("repdl-serve-{i}"))
                     .spawn(move || {
-                        dispatcher_loop(&sh[i], batch_window, cache.as_deref(), log.as_deref())
+                        dispatcher_loop(
+                            &sh[i],
+                            batch_window,
+                            cache.as_deref(),
+                            log.as_deref(),
+                            &weights_hash,
+                        )
                     })
                     .expect("failed to spawn serve dispatcher"),
             );
@@ -289,7 +321,7 @@ impl ServeScheduler {
                 rejected: 0,
                 closed: false,
             }),
-            d_in,
+            tower,
             batch_window,
             max_queue_depth: cfg.max_queue_depth,
             cache,
@@ -298,17 +330,20 @@ impl ServeScheduler {
         })
     }
 
-    /// Convenience: `shards` replicas of one shared server, all
+    /// Convenience: `shards` replicas of one shared model tower, all
     /// dispatching on one shared pool handle (the common deployment —
-    /// one packed weight copy, one worker pool, N batching lanes).
+    /// one weight copy, one worker pool, N batching lanes). `Arc`s of
+    /// concrete towers (`DeterministicServer`, `MlpTower`,
+    /// `TransformerTower`) coerce into the `Arc<dyn ModelTower>`
+    /// parameter.
     pub fn sharded(
-        server: Arc<DeterministicServer>,
+        tower: Arc<dyn ModelTower>,
         shards: usize,
         batch_window: usize,
         pool: PoolHandle,
     ) -> Result<ServeScheduler> {
         ServeScheduler::sharded_with(
-            server,
+            tower,
             shards,
             pool,
             ServeConfig { batch_window, ..Default::default() },
@@ -317,13 +352,13 @@ impl ServeScheduler {
 
     /// [`ServeScheduler::sharded`] with an explicit [`ServeConfig`].
     pub fn sharded_with(
-        server: Arc<DeterministicServer>,
+        tower: Arc<dyn ModelTower>,
         shards: usize,
         pool: PoolHandle,
         cfg: ServeConfig,
     ) -> Result<ServeScheduler> {
         let replicas = (0..shards.max(1))
-            .map(|_| ServeReplica::new(Arc::clone(&server), Arc::clone(&pool)))
+            .map(|_| ServeReplica::new(Arc::clone(&tower), Arc::clone(&pool)))
             .collect();
         ServeScheduler::with_config(replicas, cfg)
     }
@@ -331,6 +366,29 @@ impl ServeScheduler {
     /// Number of replica shards.
     pub fn shards(&self) -> usize {
         self.shards.len()
+    }
+
+    /// The id of the model every replica serves — the routing key a
+    /// [`super::ModelRegistry`] files this scheduler under.
+    pub fn model_id(&self) -> &str {
+        self.tower.model_id()
+    }
+
+    /// The served model's parameter fingerprint. Embedded in every
+    /// memo-cache key and response-log entry, so cached responses and
+    /// audit records can never cross models.
+    pub fn weights_hash(&self) -> &str {
+        self.tower.weights_hash()
+    }
+
+    /// Request length in f32 elements.
+    pub fn d_in(&self) -> usize {
+        self.tower.d_in()
+    }
+
+    /// Response length in f32 elements.
+    pub fn d_out(&self) -> usize {
+        self.tower.d_out()
     }
 
     /// Maximum requests per dispatched batch.
@@ -383,7 +441,10 @@ impl ServeScheduler {
     /// under backpressure flush (an event) and retry — see
     /// [`ServeScheduler::process_all_with_backpressure`].
     pub fn submit(&self, request: Tensor) -> Result<Pending> {
-        check_request(&request, self.d_in)?;
+        // tower-specific validation (length; token-id domain for the
+        // transformer): anything accepted here must execute, so a bad
+        // request can never poison a composed batch
+        self.tower.validate_request(&request)?;
         let mut gate = self.gate.lock().unwrap();
         if gate.closed {
             return Err(Error::Closed);
@@ -548,18 +609,27 @@ impl ServeScheduler {
     /// Re-execute the logged requests with tickets in `tickets` and
     /// verify each against its logged response hash, bit for bit. Every
     /// entry runs as a **singleton batch** on the shard that originally
-    /// served it (`ticket % shards`) — valid because the kernels are
+    /// served it (`ticket % shards`) — valid because the towers are
     /// batch invariant, so the original batch-mates cannot have
-    /// influenced the logged bits. Errors when logging is disabled; a
-    /// corrupt entry (stored request no longer matching its own hash) is
-    /// counted and skipped rather than executed.
+    /// influenced the logged bits. Errors when logging is disabled, and
+    /// with the typed [`Error::Truncated`] when the range reaches below
+    /// the log's rotation watermark (a rotated-away audit must never
+    /// read as a passing one). A corrupt entry — stored request no
+    /// longer matching its own hash, or a `weights_hash` that is not
+    /// this scheduler's model — is counted and skipped rather than
+    /// executed.
     pub fn replay(&self, tickets: Range<u64>) -> Result<ReplayReport> {
         let log = self.log.as_deref().ok_or_else(|| {
             Error::config("serve replay: response log is disabled (ServeConfig::log)")
         })?;
+        let weights_hash = self.tower.weights_hash();
         let mut report = ReplayReport::default();
-        for e in log.range(tickets) {
-            if hash_tensor(&e.request) != e.request_hash {
+        // watermark check + range read are one lock acquisition, so a
+        // concurrent truncate_log_below can never rotate part of the
+        // range away between them (which would shrink the audit into a
+        // silent pass)
+        for e in log.range_checked(tickets)? {
+            if hash_tensor(&e.request) != e.request_hash || e.weights_hash != weights_hash {
                 report.request_mismatches += 1;
                 continue;
             }
@@ -572,6 +642,34 @@ impl ServeScheduler {
             }
         }
         Ok(report)
+    }
+
+    /// Rotate the response log: drop retained entries below `watermark`
+    /// (see [`ResponseLog::truncate_below`]). Returns the number of
+    /// entries dropped; errors when logging is disabled. Replays that
+    /// reach below the watermark afterwards get the typed
+    /// [`Error::Truncated`].
+    ///
+    /// A watermark beyond `next_ticket` is a config error (pure ticket
+    /// arithmetic — deterministic): it names tickets that do not exist
+    /// yet, which is always an operator mistake (e.g. an entry count
+    /// passed as a ticket) and would pre-drop their future audit
+    /// records. A watermark ≤ `next_ticket` can still overtake a
+    /// formed-but-unexecuted batch — drain progress is timing, which
+    /// admission logic must not consult — so that case is allowed and
+    /// accounted instead: [`ResponseLog::late_drops`] counts any audit
+    /// record lost to the race.
+    pub fn truncate_log_below(&self, watermark: u64) -> Result<usize> {
+        let log = self.log.as_deref().ok_or_else(|| {
+            Error::config("serve truncate: response log is disabled (ServeConfig::log)")
+        })?;
+        let next_ticket = self.gate.lock().unwrap().next_ticket;
+        if watermark > next_ticket {
+            return Err(Error::config(format!(
+                "serve truncate: watermark {watermark} exceeds next ticket {next_ticket}"
+            )));
+        }
+        Ok(log.truncate_below(watermark))
     }
 
     /// Executed batch compositions, sorted by first ticket (a canonical
@@ -617,6 +715,7 @@ fn dispatcher_loop(
     window: usize,
     cache: Option<&MemoCache>,
     log: Option<&ResponseLog>,
+    weights_hash: &str,
 ) {
     loop {
         let batch = {
@@ -666,7 +765,7 @@ fn dispatcher_loop(
             }
             trace.push_back(tickets.clone());
         }
-        execute_batch(shard, cache, log, &tickets, &inputs, &senders);
+        execute_batch(shard, cache, log, weights_hash, &tickets, &inputs, &senders);
     }
 }
 
@@ -676,6 +775,7 @@ fn execute_batch(
     shard: &Shard,
     cache: Option<&MemoCache>,
     log: Option<&ResponseLog>,
+    weights_hash: &str,
     tickets: &[u64],
     inputs: &[Tensor],
     senders: &[Sender<Result<Tensor>>],
@@ -684,11 +784,16 @@ fn execute_batch(
     // content addresses, computed once per batch, shared by cache + log
     let hashes: Option<Vec<String>> = (cache.is_some() || log.is_some())
         .then(|| inputs.iter().map(hash_tensor).collect());
+    // cache keys embed the model's weights_hash: a response memo can
+    // never cross models — even a cache shared by several schedulers
+    // (or two towers differing in one weight bit) keeps disjoint key
+    // spaces per model (DESIGN.md §9)
+    let cache_key = |h: &str| format!("{weights_hash}:{h}");
     let mut outs: Vec<Option<Tensor>> = vec![None; n];
     let mut miss: Vec<usize> = Vec::with_capacity(n);
     if let (Some(c), Some(hs)) = (cache, hashes.as_ref()) {
         for i in 0..n {
-            match c.lookup(&hs[i]) {
+            match c.lookup(&cache_key(&hs[i])) {
                 Some(hit) => outs[i] = Some(hit),
                 None => miss.push(i),
             }
@@ -711,7 +816,7 @@ fn execute_batch(
         Ok(mouts) => {
             for (&i, o) in miss.iter().zip(mouts) {
                 if let (Some(c), Some(hs)) = (cache, hashes.as_ref()) {
-                    c.insert(&hs[i], tickets[i], &o);
+                    c.insert(&cache_key(&hs[i]), tickets[i], &o);
                 }
                 outs[i] = Some(o);
             }
@@ -725,6 +830,7 @@ fn execute_batch(
                         request_hash: hs[i].clone(),
                         response_hash: hash_tensor(&o),
                         batch_id,
+                        weights_hash: weights_hash.to_string(),
                     });
                 }
                 let _ = senders[i].send(Ok(o)); // receiver may have given up
@@ -746,6 +852,7 @@ fn execute_batch(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::serve::DeterministicServer;
     use crate::tensor::{matmul, WorkerPool};
 
     fn queue(n: usize, d: usize, seed: u64) -> Vec<Tensor> {
@@ -1032,6 +1139,82 @@ mod tests {
         let plain =
             ServeScheduler::sharded(Arc::clone(&srv), 1, 4, WorkerPool::shared(1)).unwrap();
         assert!(plain.replay(0..1).is_err());
+    }
+
+    #[test]
+    fn log_rotation_keeps_upper_replays_and_types_lower_ones() {
+        let srv = server(16, 4, 8);
+        let q = queue(10, 16, 130);
+        let sched = ServeScheduler::sharded_with(
+            Arc::clone(&srv),
+            2,
+            WorkerPool::shared(1),
+            ServeConfig { log: true, ..cfg(4) },
+        )
+        .unwrap();
+        sched.process_all(&q).unwrap();
+        assert_eq!(sched.log().unwrap().len(), 10);
+        // a watermark past the issued tickets is a config error (it
+        // would pre-drop future audit records), checked by pure ticket
+        // arithmetic: 10 tickets issued, so 10 is the highest legal cut
+        assert!(sched.truncate_log_below(11).is_err());
+        // rotate away tickets 0..6
+        assert_eq!(sched.truncate_log_below(6).unwrap(), 6);
+        // above the watermark: replay still verifies bit-exactly
+        let rep = sched.replay(6..10).unwrap();
+        assert_eq!(rep.replayed, 4);
+        assert!(rep.verified());
+        // reaching below the watermark: typed error, never "0 verified"
+        match sched.replay(0..10) {
+            Err(Error::Truncated { ticket, watermark }) => {
+                assert_eq!((ticket, watermark), (0, 6));
+            }
+            Ok(r) => panic!("want Truncated, got Ok({r:?})"),
+            Err(other) => panic!("want Truncated, got {other:?}"),
+        }
+        assert!(matches!(sched.replay(5..7), Err(Error::Truncated { .. })));
+        // rotation on a log-less scheduler is a config error
+        let plain =
+            ServeScheduler::sharded(srv, 1, 4, WorkerPool::shared(1)).unwrap();
+        assert!(plain.truncate_log_below(1).is_err());
+    }
+
+    #[test]
+    fn cache_keys_embed_the_weights_hash() {
+        let srv = server(16, 4, 8);
+        let q = queue(3, 16, 60);
+        let sched = ServeScheduler::sharded_with(
+            Arc::clone(&srv),
+            1,
+            WorkerPool::shared(1),
+            ServeConfig { cache_capacity: 8, ..cfg(4) },
+        )
+        .unwrap();
+        sched.process_all(&q).unwrap();
+        let held = sched.cache.as_ref().unwrap().held_keys_by_ticket();
+        assert_eq!(held.len(), 3);
+        let prefix = format!("{}:", sched.weights_hash());
+        for (t, key) in &held {
+            assert!(
+                key.starts_with(&prefix),
+                "cache key for ticket {t} lacks the weights_hash prefix: {key}"
+            );
+            assert_eq!(
+                key[prefix.len()..],
+                crate::coordinator::hashing::hash_tensor(&q[*t as usize]),
+                "key suffix must be the request's content address"
+            );
+        }
+    }
+
+    #[test]
+    fn scheduler_exposes_model_identity() {
+        let srv = server(16, 4, 8);
+        let sched =
+            ServeScheduler::sharded(Arc::clone(&srv), 2, 4, WorkerPool::shared(1)).unwrap();
+        assert_eq!(sched.model_id(), "linear");
+        assert_eq!(sched.weights_hash(), srv.weights_hash());
+        assert_eq!((sched.d_in(), sched.d_out()), (16, 4));
     }
 
     #[test]

@@ -1,0 +1,456 @@
+//! `ModelTower` — the model-generic replica surface (DESIGN.md §9).
+//!
+//! PR 3–4 proved the shard/batch/cache/admission invariants for one
+//! matmul; the paper's claim is bit-reproducible *deep learning*
+//! inference, and non-associativity effects compound through deep
+//! forward passes (Shanmugavelu et al., arXiv:2408.05148). This module
+//! generalises the replica so the same scheduler machinery serves
+//! genuinely deep towers:
+//!
+//! * the existing linear server ([`DeterministicServer`]) — unchanged
+//!   bits, keeps its packed-weights fast path;
+//! * [`MlpTower`] — the `nn::Mlp` forward off-tape;
+//! * [`TransformerTower`] — an inference-only `CharTransformer` forward
+//!   (no `Tape` allocation per request) through the pooled `*_in`
+//!   kernels.
+//!
+//! **The off-tape inference rule.** A tower's `forward_batch` must be a
+//! pure function of `(weights, batch)` built from the fixed-graph
+//! kernels: no wall-clock reads, no tape construction, and a
+//! per-request allocation count that does not vary with timing — so
+//! serving cost and bits are both reproducible. Batch invariance is
+//! mandatory: every response row must be an independent fixed-order
+//! reduction over its own request, which is what lets the scheduler
+//! batch freely, serve cache hits, and audit with singleton-batch
+//! replays (`tests/serve_models.rs` pins all three per tower).
+//!
+//! **`weights_hash`.** Each tower fingerprints its parameters once at
+//! construction (`hash_params` over the fixed parameter order). The
+//! scheduler embeds this hash in every memo-cache key and response-log
+//! entry, so a cached response can never cross models — even two towers
+//! of the same architecture differing in one weight bit get disjoint
+//! key spaces.
+
+use super::replica::{check_request, DeterministicServer};
+use crate::coordinator::hashing::hash_params;
+use crate::nn::{CharTransformer, Mlp, Module};
+use crate::tensor::{Tensor, WorkerPool};
+use crate::{Error, Result};
+
+/// A model replica's numerics surface: everything the serve scheduler
+/// needs to batch, route, cache and audit requests for one model.
+///
+/// Contract (DESIGN.md §9): `forward_batch` must be **batch invariant**
+/// (each output row depends only on its own request row) and
+/// **pool-size invariant** (any `pool` produces identical bits), must
+/// never panic on adversarial input (error instead), and must follow
+/// the off-tape inference rule above. `validate_request` is called at
+/// submit time, *before* a ticket is consumed — anything it accepts
+/// must execute without error, so a malformed request can never poison
+/// a batch.
+pub trait ModelTower: Send + Sync {
+    /// Stable model identifier — the routing key in a
+    /// [`super::ModelRegistry`].
+    fn model_id(&self) -> &str;
+    /// Request length in f32 elements.
+    fn d_in(&self) -> usize;
+    /// Response length in f32 elements.
+    fn d_out(&self) -> usize;
+    /// Parameter fingerprint (`hash_params` over the model's fixed
+    /// parameter order), computed once at construction.
+    fn weights_hash(&self) -> &str;
+    /// Execute one batch on `pool`: one response row per request, in
+    /// request order.
+    fn forward_batch(&self, pool: &WorkerPool, batch: &[Tensor]) -> Result<Vec<Tensor>>;
+    /// Submit-time validation (default: element count). Towers with
+    /// stricter domains (e.g. token ids) override so invalid requests
+    /// are rejected before consuming a ticket.
+    fn validate_request(&self, request: &Tensor) -> Result<()> {
+        check_request(request, self.d_in())
+    }
+}
+
+/// The original linear server is the reference tower: `logits = x·W`
+/// through the packed-panel fast path (weights packed once at
+/// construction).
+impl ModelTower for DeterministicServer {
+    fn model_id(&self) -> &str {
+        "linear"
+    }
+    fn d_in(&self) -> usize {
+        DeterministicServer::d_in(self)
+    }
+    fn d_out(&self) -> usize {
+        DeterministicServer::d_out(self)
+    }
+    fn weights_hash(&self) -> &str {
+        DeterministicServer::weights_hash(self)
+    }
+    fn forward_batch(&self, pool: &WorkerPool, batch: &[Tensor]) -> Result<Vec<Tensor>> {
+        self.process_repro_in(pool, batch)
+    }
+}
+
+/// An [`crate::nn::Mlp`] behind the tower surface: requests are feature
+/// rows of the first layer's width, responses the last layer's output
+/// row. The whole batch is staged into one (B, d_in) matrix and runs
+/// the off-tape pooled forward — batch invariant because every GEMM row
+/// and every activation element is an independent fixed-order
+/// computation.
+pub struct MlpTower {
+    mlp: Mlp,
+    model_id: String,
+    weights_hash: String,
+    d_in: usize,
+    d_out: usize,
+}
+
+impl MlpTower {
+    /// Wrap an MLP (id `"mlp"`). Errors on a layer-less model.
+    pub fn new(mlp: Mlp) -> Result<MlpTower> {
+        MlpTower::with_model_id(mlp, "mlp")
+    }
+
+    /// Wrap an MLP under an explicit model id (for registries holding
+    /// several MLPs).
+    pub fn with_model_id(mlp: Mlp, model_id: impl Into<String>) -> Result<MlpTower> {
+        let d_in = mlp.d_in()?;
+        let d_out = mlp.d_out()?;
+        let weights_hash = hash_params(&mlp.params());
+        Ok(MlpTower { mlp, model_id: model_id.into(), weights_hash, d_in, d_out })
+    }
+
+    /// The wrapped model.
+    pub fn mlp(&self) -> &Mlp {
+        &self.mlp
+    }
+}
+
+impl ModelTower for MlpTower {
+    fn model_id(&self) -> &str {
+        &self.model_id
+    }
+    fn d_in(&self) -> usize {
+        self.d_in
+    }
+    fn d_out(&self) -> usize {
+        self.d_out
+    }
+    fn weights_hash(&self) -> &str {
+        &self.weights_hash
+    }
+    fn forward_batch(&self, pool: &WorkerPool, batch: &[Tensor]) -> Result<Vec<Tensor>> {
+        let mut x = Tensor::zeros(&[batch.len(), self.d_in]);
+        for (i, r) in batch.iter().enumerate() {
+            check_request(r, self.d_in)?;
+            x.data_mut()[i * self.d_in..(i + 1) * self.d_in].copy_from_slice(r.data());
+        }
+        let y = self.mlp.forward_infer_in(pool, &x)?;
+        (0..batch.len())
+            .map(|i| {
+                Tensor::from_vec(
+                    &[self.d_out],
+                    y.data()[i * self.d_out..(i + 1) * self.d_out].to_vec(),
+                )
+            })
+            .collect()
+    }
+}
+
+/// A [`crate::nn::CharTransformer`] behind the tower surface,
+/// inference-only: a request is exactly `context` token ids encoded as
+/// f32 values, the response is the **last position's** (vocab,) logits
+/// row — next-token inference. Each sequence runs the off-tape
+/// `forward_logits_infer_in` path independently (no `Tape` allocation
+/// per request), so batch invariance holds trivially: a request's
+/// logits are a function of its own ids and the weights, never of its
+/// batch-mates.
+pub struct TransformerTower {
+    model: CharTransformer,
+    model_id: String,
+    weights_hash: String,
+}
+
+impl TransformerTower {
+    /// Wrap a transformer (id `"transformer"`).
+    pub fn new(model: CharTransformer) -> Result<TransformerTower> {
+        TransformerTower::with_model_id(model, "transformer")
+    }
+
+    /// Wrap a transformer under an explicit model id.
+    pub fn with_model_id(
+        model: CharTransformer,
+        model_id: impl Into<String>,
+    ) -> Result<TransformerTower> {
+        if model.cfg.context == 0 || model.cfg.vocab == 0 || model.cfg.dim == 0 {
+            // a degenerate model must be a construction error, never a
+            // per-request panic inside a dispatcher (trait contract)
+            return Err(Error::config("transformer tower: zero context, vocab or dim"));
+        }
+        let weights_hash = hash_params(&model.params());
+        Ok(TransformerTower { model, model_id: model_id.into(), weights_hash })
+    }
+
+    /// The wrapped model.
+    pub fn model(&self) -> &CharTransformer {
+        &self.model
+    }
+
+    /// Encode a token sequence as a request tensor (ids as f32 — exact
+    /// for any realistic vocab: f32 holds integers ≤ 2²⁴).
+    pub fn encode_request(&self, ids: &[usize]) -> Result<Tensor> {
+        let t = Tensor::from_vec(&[ids.len()], ids.iter().map(|&i| i as f32).collect())?;
+        self.validate_request(&t)?;
+        Ok(t)
+    }
+
+    /// Decode a validated request back to token ids.
+    fn ids_of(&self, request: &Tensor) -> Result<Vec<usize>> {
+        request
+            .data()
+            .iter()
+            .map(|&v| {
+                let ok = v.is_finite() && v >= 0.0 && v.fract() == 0.0;
+                if ok && (v as usize) < self.model.cfg.vocab {
+                    Ok(v as usize)
+                } else {
+                    Err(Error::shape(format!(
+                        "transformer tower: token {v} is not an id in 0..{}",
+                        self.model.cfg.vocab
+                    )))
+                }
+            })
+            .collect()
+    }
+}
+
+/// Any tower under a different model id — e.g. two linear models (whose
+/// reference implementation hardcodes id `"linear"`) registered side by
+/// side in one [`super::ModelRegistry`]. Purely an identity rename:
+/// numerics, shapes, validation and `weights_hash` all pass through
+/// untouched — the memo-cache key's `weights_hash` prefix already keeps
+/// same-architecture models disjoint, so a rename cannot change bits or
+/// leak cached responses.
+pub struct NamedTower<T> {
+    inner: T,
+    model_id: String,
+}
+
+impl<T: ModelTower> NamedTower<T> {
+    /// Serve `inner` under `model_id`.
+    pub fn new(inner: T, model_id: impl Into<String>) -> NamedTower<T> {
+        NamedTower { inner, model_id: model_id.into() }
+    }
+
+    /// The wrapped tower.
+    pub fn inner(&self) -> &T {
+        &self.inner
+    }
+}
+
+impl<T: ModelTower> ModelTower for NamedTower<T> {
+    fn model_id(&self) -> &str {
+        &self.model_id
+    }
+    fn d_in(&self) -> usize {
+        self.inner.d_in()
+    }
+    fn d_out(&self) -> usize {
+        self.inner.d_out()
+    }
+    fn weights_hash(&self) -> &str {
+        self.inner.weights_hash()
+    }
+    fn forward_batch(&self, pool: &WorkerPool, batch: &[Tensor]) -> Result<Vec<Tensor>> {
+        self.inner.forward_batch(pool, batch)
+    }
+    fn validate_request(&self, request: &Tensor) -> Result<()> {
+        self.inner.validate_request(request)
+    }
+}
+
+impl ModelTower for TransformerTower {
+    fn model_id(&self) -> &str {
+        &self.model_id
+    }
+    fn d_in(&self) -> usize {
+        self.model.cfg.context
+    }
+    fn d_out(&self) -> usize {
+        self.model.cfg.vocab
+    }
+    fn weights_hash(&self) -> &str {
+        &self.weights_hash
+    }
+    fn forward_batch(&self, pool: &WorkerPool, batch: &[Tensor]) -> Result<Vec<Tensor>> {
+        let vocab = self.model.cfg.vocab;
+        batch
+            .iter()
+            .map(|r| {
+                // one decode pass covers the full validate_request
+                // domain (length + token ids) — don't pay it twice per
+                // request on the dispatch hot path
+                check_request(r, self.d_in())?;
+                let ids = self.ids_of(r)?;
+                let logits = self.model.forward_logits_infer_in(pool, &ids)?; // (T, vocab)
+                let last = ids.len() - 1;
+                Tensor::from_vec(
+                    &[vocab],
+                    logits.data()[last * vocab..(last + 1) * vocab].to_vec(),
+                )
+            })
+            .collect()
+    }
+    /// Submit-time validation covers the full domain — length AND token
+    /// ids — so a garbage token is rejected before it consumes a ticket
+    /// and can never fail (and thereby poison) a composed batch.
+    fn validate_request(&self, request: &Tensor) -> Result<()> {
+        check_request(request, self.d_in())?;
+        self.ids_of(request).map(|_| ())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::{Act, TransformerConfig};
+    use std::sync::Arc;
+
+    fn mlp_tower() -> MlpTower {
+        MlpTower::new(Mlp::new(&[12, 16, 5], Act::Gelu, 3)).unwrap()
+    }
+
+    fn transformer_tower() -> TransformerTower {
+        let cfg = TransformerConfig {
+            vocab: 10,
+            dim: 8,
+            heads: 2,
+            layers: 1,
+            context: 4,
+            mlp_ratio: 2,
+        };
+        TransformerTower::new(CharTransformer::new(cfg, 5).unwrap()).unwrap()
+    }
+
+    #[test]
+    fn mlp_tower_matches_off_tape_forward_and_is_batch_invariant() {
+        let tower = mlp_tower();
+        assert_eq!((tower.d_in(), tower.d_out()), (12, 5));
+        let pool = WorkerPool::new(2);
+        let batch: Vec<Tensor> = (0..5)
+            .map(|i| crate::rng::uniform_tensor(&[12], -1.0, 1.0, 40 + i))
+            .collect();
+        let outs = tower.forward_batch(&pool, &batch).unwrap();
+        // singleton runs must reproduce every batched row bit-for-bit
+        for (r, o) in batch.iter().zip(outs.iter()) {
+            let single = tower.forward_batch(&pool, std::slice::from_ref(r)).unwrap();
+            assert!(single[0].bit_eq(o), "MLP tower is not batch invariant");
+            assert_eq!(o.dims(), &[5]);
+        }
+        // and equal the plain off-tape forward on the stacked matrix
+        let mut x = Tensor::zeros(&[5, 12]);
+        for (i, r) in batch.iter().enumerate() {
+            x.data_mut()[i * 12..(i + 1) * 12].copy_from_slice(r.data());
+        }
+        let y = tower.mlp().forward_infer_in(&pool, &x).unwrap();
+        for (i, o) in outs.iter().enumerate() {
+            assert_eq!(o.data(), &y.data()[i * 5..(i + 1) * 5]);
+        }
+    }
+
+    #[test]
+    fn transformer_tower_serves_last_position_logits() {
+        let tower = transformer_tower();
+        assert_eq!((tower.d_in(), tower.d_out()), (4, 10));
+        let pool = WorkerPool::new(1);
+        let ids = [1usize, 7, 0, 9];
+        let req = tower.encode_request(&ids).unwrap();
+        let out = &tower.forward_batch(&pool, std::slice::from_ref(&req)).unwrap()[0];
+        let logits = tower.model().forward_logits_infer_in(&pool, &ids).unwrap();
+        assert_eq!(out.data(), &logits.data()[3 * 10..4 * 10]);
+    }
+
+    #[test]
+    fn degenerate_transformer_configs_are_construction_errors() {
+        // dim = 0 would otherwise panic (divide-by-zero) in layer_norm
+        // inside a dispatcher thread on the first request; heads = 0
+        // would panic (`dim % 0`) in MultiheadAttention::new
+        for (vocab, dim, heads, context) in
+            [(10, 0, 1, 4), (0, 8, 1, 4), (10, 8, 1, 0), (10, 8, 0, 4)]
+        {
+            let cfg = TransformerConfig { vocab, dim, heads, layers: 1, context, mlp_ratio: 2 };
+            let Ok(m) = CharTransformer::new(cfg, 1) else {
+                continue; // the model constructor rejecting it is fine too
+            };
+            assert!(
+                TransformerTower::new(m).is_err(),
+                "vocab={vocab} dim={dim} heads={heads} context={context} must not construct a tower"
+            );
+        }
+    }
+
+    #[test]
+    fn transformer_tower_rejects_bad_tokens_at_validation() {
+        let tower = transformer_tower();
+        // wrong length
+        assert!(tower.validate_request(&Tensor::zeros(&[3])).is_err());
+        // out-of-vocab, fractional, negative, non-finite
+        for bad in [10.0f32, 1.5, -1.0, f32::NAN, f32::INFINITY] {
+            let r = Tensor::from_vec(&[4], vec![1.0, bad, 2.0, 3.0]).unwrap();
+            assert!(tower.validate_request(&r).is_err(), "token {bad} must be rejected");
+        }
+        // valid request passes and round-trips
+        assert!(tower.encode_request(&[0, 9, 4, 4]).is_ok());
+        // encode_request refuses out-of-domain ids too
+        assert!(tower.encode_request(&[0, 10, 0, 0]).is_err());
+    }
+
+    #[test]
+    fn weights_hashes_distinguish_models_and_are_stable() {
+        let a = mlp_tower();
+        let b = MlpTower::new(Mlp::new(&[12, 16, 5], Act::Gelu, 3)).unwrap();
+        let c = MlpTower::new(Mlp::new(&[12, 16, 5], Act::Gelu, 4)).unwrap();
+        assert_eq!(a.weights_hash(), b.weights_hash(), "same init → same hash");
+        assert_ne!(a.weights_hash(), c.weights_hash(), "different weights → different hash");
+        assert_ne!(a.weights_hash(), transformer_tower().weights_hash());
+    }
+
+    #[test]
+    fn named_tower_renames_without_touching_numerics() {
+        let w = crate::rng::uniform_tensor(&[8, 3], -0.3, 0.3, 1);
+        let srv = DeterministicServer::new(w, 4).unwrap();
+        let pool = WorkerPool::new(1);
+        let q: Vec<Tensor> = (0..3)
+            .map(|i| crate::rng::uniform_tensor(&[8], -1.0, 1.0, 60 + i))
+            .collect();
+        let want = srv.process_repro_in(&pool, &q).unwrap();
+        let named = NamedTower::new(srv, "linear-b");
+        assert_eq!(named.model_id(), "linear-b");
+        assert_eq!((named.d_in(), named.d_out()), (8, 3));
+        assert_eq!(named.weights_hash(), named.inner().weights_hash());
+        let got = named.forward_batch(&pool, &q).unwrap();
+        for (a, b) in want.iter().zip(got.iter()) {
+            assert!(a.bit_eq(b), "renaming a tower must not change bits");
+        }
+        // validation passes through too
+        assert!(named.validate_request(&Tensor::zeros(&[7])).is_err());
+    }
+
+    #[test]
+    fn towers_coerce_to_trait_objects() {
+        let towers: Vec<Arc<dyn ModelTower>> = vec![
+            Arc::new(
+                DeterministicServer::new(crate::rng::uniform_tensor(&[8, 3], -0.3, 0.3, 1), 4)
+                    .unwrap(),
+            ),
+            Arc::new(mlp_tower()),
+            Arc::new(transformer_tower()),
+        ];
+        let ids: Vec<&str> = towers.iter().map(|t| t.model_id()).collect();
+        assert_eq!(ids, vec!["linear", "mlp", "transformer"]);
+        for t in &towers {
+            assert!(!t.weights_hash().is_empty());
+            assert!(t.d_in() > 0 && t.d_out() > 0);
+        }
+    }
+}

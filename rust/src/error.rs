@@ -34,6 +34,17 @@ pub enum Error {
     /// dropped channel.
     Closed,
 
+    /// Replay of a ticket range that reaches below the response log's
+    /// truncation watermark (`ResponseLog::truncate_below`). Typed so a
+    /// rotated-away audit range is a matchable outcome — never a silent
+    /// "0 entries verified" that would read as a passing audit.
+    Truncated {
+        /// First requested ticket that falls below the watermark.
+        ticket: u64,
+        /// The log's truncation watermark at the time of the request.
+        watermark: u64,
+    },
+
     /// Underlying XLA error.
     Xla(String),
 
@@ -51,6 +62,10 @@ impl fmt::Display for Error {
                 write!(f, "rejected: serve queue-depth cap hit at ticket {ticket}")
             }
             Error::Closed => write!(f, "closed: serve scheduler accepts no new requests"),
+            Error::Truncated { ticket, watermark } => write!(
+                f,
+                "truncated: ticket {ticket} is below the response-log watermark {watermark}"
+            ),
             Error::Xla(m) => write!(f, "xla error: {m}"),
             Error::Io(e) => write!(f, "io error: {e}"),
         }

@@ -6,8 +6,11 @@
 //!   transformer  train the char transformer (E8 workload)
 //!   serve        E7 batch-invariance report + pooled throughput + the
 //!                deterministic dynamic-batching scheduler
-//!                (--threads N --shards S --batch-window K --clients C
-//!                 --max-queue-depth D --cache-capacity M --replay)
+//!                (--model linear|mlp|transformer --threads N --shards S
+//!                 --batch-window K --clients C --max-queue-depth D
+//!                 --cache-capacity M --replay; transformer towers take
+//!                 --width/--heads/--layers/--context, mlp takes
+//!                 --hidden)
 //!   runtime      load + execute an AOT artifact (needs `make artifacts`)
 //!   selftest     quick determinism smoke checks
 
@@ -147,9 +150,13 @@ fn cmd_transformer(args: &Args) -> i32 {
 }
 
 fn cmd_serve(args: &Args) -> i32 {
-    use repdl::coordinator::{ServeConfig, ServeScheduler};
+    use repdl::coordinator::{
+        MlpTower, ModelTower, ServeConfig, ServeScheduler, TransformerTower,
+    };
+    use repdl::nn::{Act, Mlp};
     use repdl::tensor::{global_pool_handle, WorkerPool};
     use std::sync::Arc;
+    let model = args.get_str("model", "linear");
     let d = args.get_usize("dim", 256);
     let n = args.get_usize("requests", 64);
     let shards = args.get_usize_at_least("shards", 1, 1);
@@ -168,39 +175,107 @@ fn cmd_serve(args: &Args) -> i32 {
         .map(WorkerPool::shared)
         .unwrap_or_else(global_pool_handle);
     let lanes = pool.lanes();
-    let w = repdl::rng::uniform_tensor(&[d, 16], -0.3, 0.3, 5);
-    let srv = match DeterministicServer::new(w, 16) {
-        Ok(s) => Arc::new(s),
-        Err(e) => {
-            eprintln!("serve: {e}");
-            return 1;
+    // pick the model tower (ISSUE 5): the linear reference server, the
+    // off-tape MLP, or the off-tape transformer — all behind ModelTower
+    let seed = args.get_u64("seed", 5);
+    let mut e7_ok = true;
+    let tower: Arc<dyn ModelTower> = match model.as_str() {
+        "linear" => {
+            let w = repdl::rng::uniform_tensor(&[d, 16], -0.3, 0.3, seed);
+            let srv = match DeterministicServer::new(w, 16) {
+                Ok(s) => Arc::new(s),
+                Err(e) => {
+                    eprintln!("serve: {e}");
+                    return 1;
+                }
+            };
+            // E7 batch-invariance report vs the size-dispatching
+            // baseline (meaningful for the GEMM server only)
+            let queue: Vec<Tensor> = (0..n)
+                .map(|i| repdl::rng::uniform_tensor(&[d], -1.0, 1.0, 100 + i as u64))
+                .collect();
+            let p = PlatformProfile::zoo()[4];
+            let rep = srv
+                .batch_invariance_report(&queue, &[1, 4, 16, 64], &p)
+                .expect("report");
+            println!(
+                "requests={} repro_mismatches={} baseline_mismatches={}",
+                rep.requests, rep.repro_mismatches, rep.baseline_mismatches
+            );
+            e7_ok = rep.repro_mismatches == 0;
+            // single-caller throughput through the persistent pool
+            let t = srv.throughput_report(&pool, &queue, 5).expect("throughput");
+            println!("pool_lanes={lanes} throughput={:.0} req/s", t.req_per_s);
+            srv
+        }
+        "mlp" => {
+            let hidden = args.get_usize("hidden", 64);
+            // user-supplied hyper-parameters: error + exit, never a
+            // panic backtrace (same policy as the linear arm)
+            match MlpTower::new(Mlp::new(&[d, hidden, 16], Act::Gelu, seed)) {
+                Ok(t) => Arc::new(t),
+                Err(e) => {
+                    eprintln!("serve: {e}");
+                    return 1;
+                }
+            }
+        }
+        "transformer" => {
+            let cfg = repdl::nn::TransformerConfig {
+                vocab: 28,
+                dim: args.get_usize("width", 32),
+                heads: args.get_usize("heads", 4),
+                layers: args.get_usize("layers", 2),
+                context: args.get_usize("context", 16),
+                mlp_ratio: 2,
+            };
+            match CharTransformer::new(cfg, seed).and_then(TransformerTower::new) {
+                Ok(t) => Arc::new(t),
+                Err(e) => {
+                    eprintln!("serve: {e}");
+                    return 1;
+                }
+            }
+        }
+        other => {
+            eprintln!("unknown --model {other} (want linear|mlp|transformer)");
+            return 2;
         }
     };
-    let queue: Vec<Tensor> = (0..n)
-        .map(|i| repdl::rng::uniform_tensor(&[d], -1.0, 1.0, 100 + i as u64))
-        .collect();
-    let p = PlatformProfile::zoo()[4];
-    let rep = srv
-        .batch_invariance_report(&queue, &[1, 4, 16, 64], &p)
-        .expect("report");
     println!(
-        "requests={} repro_mismatches={} baseline_mismatches={}",
-        rep.requests, rep.repro_mismatches, rep.baseline_mismatches
+        "model={} d_in={} d_out={} weights_hash={}",
+        tower.model_id(),
+        tower.d_in(),
+        tower.d_out(),
+        &tower.weights_hash()[..16]
     );
-    // single-caller throughput through the persistent pool (req/s)
-    let t = srv.throughput_report(&pool, &queue, 5).expect("throughput");
-    println!("pool_lanes={lanes} throughput={:.0} req/s", t.req_per_s);
+    // request queue in the tower's input domain
+    let queue: Vec<Tensor> = if tower.model_id() == "transformer" {
+        let context = tower.d_in();
+        (0..n)
+            .map(|i| {
+                let ids: Vec<f32> = (0..context)
+                    .map(|j| ((i * 31 + j * 7 + 3) % 28) as f32)
+                    .collect();
+                Tensor::from_vec(&[context], ids).expect("request")
+            })
+            .collect()
+    } else {
+        (0..n)
+            .map(|i| repdl::rng::uniform_tensor(&[tower.d_in()], -1.0, 1.0, 100 + i as u64))
+            .collect()
+    };
     // deterministic dynamic-batching scheduler: `clients` concurrent
     // submitters over `shards` replicas sharing one pool — per-request
     // bits must equal the single-caller reference exactly
-    let reference = srv.process_repro(&queue).expect("reference");
+    let reference = tower.forward_batch(&pool, &queue).expect("reference");
     let cfg = ServeConfig {
         batch_window: window,
         max_queue_depth,
         cache_capacity,
         log: do_replay,
     };
-    let sched = ServeScheduler::sharded_with(Arc::clone(&srv), shards, pool, cfg)
+    let sched = ServeScheduler::sharded_with(Arc::clone(&tower), shards, pool, cfg)
         .expect("scheduler");
     let t0 = std::time::Instant::now();
     let mismatch = std::thread::scope(|s| {
@@ -259,7 +334,7 @@ fn cmd_serve(args: &Args) -> i32 {
     } else {
         true
     };
-    if rep.repro_mismatches == 0 && mismatch == 0 && replay_ok {
+    if e7_ok && mismatch == 0 && replay_ok {
         0
     } else {
         1

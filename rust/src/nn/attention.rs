@@ -12,37 +12,48 @@ use super::Module;
 use crate::autograd::{Tape, Var};
 use crate::nn::Linear;
 use crate::rnum::{rexp, rrsqrt};
-use crate::tensor::{max_wins, Tensor};
+use crate::tensor::{max_wins, Tensor, WorkerPool};
 use crate::{Error, Result};
 
-/// Fused causal attention core on (BH, T, Dh) tensors.
-/// Exposed for tests; models use [`MultiheadAttention`].
-pub fn attention_core(t: &mut Tape, q: Var, k: Var, v: Var, causal: bool) -> Result<Var> {
-    let qd = t.value_ref(q).dims().to_vec();
-    if qd.len() != 3
-        || t.value_ref(k).dims() != qd.as_slice()
-        || t.value_ref(v).dims() != qd.as_slice()
-    {
-        return Err(Error::shape("attention_core: want equal (BH,T,Dh)"));
+/// The attention forward spec on (BH, T, Dh) data, shared verbatim by
+/// the tape op ([`attention_core`], which also needs the probabilities
+/// for its backward) and the off-tape inference path
+/// ([`MultiheadAttention::forward_seq_infer_in`]) — one implementation,
+/// so the two paths cannot drift apart bit-wise.
+///
+/// Per (head, query) row: `S = QKᵀ·(1/√dh)` (unfused mul), running max
+/// under the canonical [`max_wins`] rule (NaN wins, first occurrence —
+/// DESIGN.md §8 migration; the NEG_INFINITY seed is exact: a -inf score
+/// can only tie it, first occurrence keeps the seed's bits which equal
+/// the score's, and a NaN score displaces it just as it would a real
+/// max), `rexp` shift, **sequential** denominator sum, divide, then
+/// `O = P·V` with sequential-j dots. The causal mask zeroes *logically*:
+/// masked scores never enter any reduction.
+///
+/// Returns `(probs, out)` with `probs` shaped (BH, T, T) (masked slots
+/// stay 0.0) and `out` shaped (BH, T, Dh). `want_probs = false` skips
+/// materialising the (BH, T, T) tensor — only the tape backward needs
+/// it, and the serving path should not pay an O(H·T²) allocation per
+/// request for a value it discards. Bit-neutral: the P·V reduction
+/// reads the identical stored f32 probabilities either way.
+pub fn attention_forward(
+    qv: &Tensor,
+    kv: &Tensor,
+    vv: &Tensor,
+    causal: bool,
+    want_probs: bool,
+) -> Result<(Option<Tensor>, Tensor)> {
+    let qd = qv.dims().to_vec();
+    if qd.len() != 3 || kv.dims() != qd.as_slice() || vv.dims() != qd.as_slice() {
+        return Err(Error::shape("attention_forward: want equal (BH,T,Dh)"));
     }
     let (bh, tt, dh) = (qd[0], qd[1], qd[2]);
     let scale = rrsqrt(dh as f32);
-    let qv = t.value(q);
-    let kv = t.value(k);
-    let vv = t.value(v);
-
-    // forward: probabilities saved for backward
-    let mut probs = Tensor::zeros(&[bh, tt, tt]);
+    let mut probs = want_probs.then(|| Tensor::zeros(&[bh, tt, tt]));
     let mut out = Tensor::zeros(&[bh, tt, dh]);
     for b in 0..bh {
         for i in 0..tt {
             let jmax = if causal { i + 1 } else { tt };
-            // scores row (fixed unfused graph), running max under the
-            // canonical max_wins rule (NaN wins, first occurrence —
-            // DESIGN.md §8 migration). The NEG_INFINITY seed is exact:
-            // a -inf score can only tie it (first occurrence keeps the
-            // seed's bits, which equal the score's), and a NaN score
-            // displaces it just as it would displace a real max.
             let mut row = vec![0.0f32; jmax];
             let mut m = f32::NEG_INFINITY;
             for (j, r) in row.iter_mut().enumerate() {
@@ -61,18 +72,40 @@ pub fn attention_core(t: &mut Tape, q: Var, k: Var, v: Var, causal: bool) -> Res
                 *r = rexp(*r - m);
                 denom += *r;
             }
-            for (j, r) in row.iter().enumerate() {
-                probs.data_mut()[(b * tt + i) * tt + j] = r / denom;
+            for r in row.iter_mut() {
+                *r = *r / denom;
+            }
+            if let Some(p) = probs.as_mut() {
+                for (j, r) in row.iter().enumerate() {
+                    p.data_mut()[(b * tt + i) * tt + j] = *r;
+                }
             }
             for d in 0..dh {
                 let mut acc = 0.0f32;
                 for j in 0..jmax {
-                    acc += probs.data()[(b * tt + i) * tt + j] * vv.data()[(b * tt + j) * dh + d];
+                    acc += row[j] * vv.data()[(b * tt + j) * dh + d];
                 }
                 out.data_mut()[(b * tt + i) * dh + d] = acc;
             }
         }
     }
+    Ok((probs, out))
+}
+
+/// Fused causal attention core on (BH, T, Dh) tensors.
+/// Exposed for tests; models use [`MultiheadAttention`].
+pub fn attention_core(t: &mut Tape, q: Var, k: Var, v: Var, causal: bool) -> Result<Var> {
+    let qv = t.value(q);
+    let kv = t.value(k);
+    let vv = t.value(v);
+
+    // forward (shared spec): validates the (BH,T,Dh) shapes — one copy
+    // of the invariant — and saves the probabilities for backward
+    let (probs, out) = attention_forward(&qv, &kv, &vv, causal, true)?;
+    let probs = probs.expect("want_probs = true");
+    let qd = qv.dims();
+    let (bh, tt, dh) = (qd[0], qd[1], qd[2]);
+    let scale = rrsqrt(dh as f32);
 
     let rg = true;
     let probs_saved = probs;
@@ -139,6 +172,11 @@ pub struct MultiheadAttention {
 impl MultiheadAttention {
     /// New module; `dim` must divide by `num_heads`.
     pub fn new(dim: usize, num_heads: usize, causal: bool, seed: u64) -> Result<Self> {
+        if num_heads == 0 {
+            // checked before the modulo: `dim % 0` is a panic, and a
+            // degenerate config must be an error (serving-facing)
+            return Err(Error::shape("MultiheadAttention: zero heads"));
+        }
         if dim % num_heads != 0 {
             return Err(Error::shape("MultiheadAttention: dim % heads != 0"));
         }
@@ -176,6 +214,49 @@ impl MultiheadAttention {
         let o = t.permute(o, &[1, 0, 2])?; // (T,H,Dh)
         let o = t.reshape(o, &[tt, dim])?;
         self.out_proj.forward(t, o, binds)
+    }
+
+    /// Off-tape inference forward on a (T, D) sequence through an
+    /// explicit pool: the QKV projection and output projection run as
+    /// pooled GEMMs ([`super::Linear::forward_infer_in`]), the head
+    /// split/merge shuffles are plain element copies (layout-only — the
+    /// same `(T,3D) → (3,H,T,Dh)` and `(H,T,Dh) → (T,D)` index maps the
+    /// tape path expresses as reshape/permute nodes), and the attention
+    /// core is [`attention_forward`] — the *same function* the tape op
+    /// calls. No tape node is allocated; bits match
+    /// [`Self::forward_seq`] exactly (asserted in tests).
+    pub fn forward_seq_infer_in(&self, pool: &WorkerPool, x: &Tensor) -> Result<Tensor> {
+        let d = x.dims();
+        if d.len() != 2 {
+            return Err(Error::shape("MultiheadAttention: want (T, D)"));
+        }
+        let (tt, dim) = (d[0], d[1]);
+        let h = self.num_heads;
+        let dh = dim / h;
+        let qkv = self.in_proj.forward_infer_in(pool, x)?; // (T, 3D)
+        // layout-only head split: q/k/v[h', t, d'] = qkv[t, c·D + h'·Dh + d']
+        let mut q = Tensor::zeros(&[h, tt, dh]);
+        let mut k = Tensor::zeros(&[h, tt, dh]);
+        let mut v = Tensor::zeros(&[h, tt, dh]);
+        for (c, dst) in [&mut q, &mut k, &mut v].into_iter().enumerate() {
+            for hh in 0..h {
+                for t in 0..tt {
+                    let src = t * 3 * dim + c * dim + hh * dh;
+                    dst.data_mut()[(hh * tt + t) * dh..(hh * tt + t + 1) * dh]
+                        .copy_from_slice(&qkv.data()[src..src + dh]);
+                }
+            }
+        }
+        let (_, o) = attention_forward(&q, &k, &v, self.causal, false)?; // (H,T,Dh)
+        // layout-only head merge: y[t, h'·Dh + d'] = o[h', t, d']
+        let mut y = Tensor::zeros(&[tt, dim]);
+        for hh in 0..h {
+            for t in 0..tt {
+                y.data_mut()[t * dim + hh * dh..t * dim + (hh + 1) * dh]
+                    .copy_from_slice(&o.data()[(hh * tt + t) * dh..(hh * tt + t + 1) * dh]);
+            }
+        }
+        self.out_proj.forward_infer_in(pool, &y)
     }
 }
 
@@ -267,6 +348,29 @@ mod tests {
                 assert!(
                     (num - ana).abs() < 2e-2 * (1.0 + num.abs()),
                     "which={which} i={i}: num {num} vs ana {ana}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn infer_forward_matches_tape_forward_bitwise() {
+        use crate::tensor::WorkerPool;
+        // both causal and bidirectional, heads > 1 so the split/merge
+        // index maps are actually exercised
+        for causal in [true, false] {
+            let mha = MultiheadAttention::new(12, 3, causal, 23).unwrap();
+            let x = lcg(&[7, 12], 19);
+            let mut t = Tape::new();
+            let xv = t.input(x.clone());
+            let mut b = Vec::new();
+            let want = t.value(mha.forward_seq(&mut t, xv, &mut b).unwrap());
+            for lanes in [1usize, 3] {
+                let pool = WorkerPool::new(lanes);
+                let got = mha.forward_seq_infer_in(&pool, &x).unwrap();
+                assert!(
+                    got.bit_eq(&want),
+                    "causal={causal} lanes={lanes}: off-tape attention changed bits"
                 );
             }
         }

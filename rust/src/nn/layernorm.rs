@@ -4,7 +4,48 @@
 use super::Module;
 use crate::autograd::{Tape, Var};
 use crate::tensor::Tensor;
-use crate::Result;
+use crate::{Error, Result};
+
+/// Off-tape LayerNorm forward over the last axis — the same fixed
+/// two-pass graph as `Tape::layer_norm` (sequential mean sum, sequential
+/// squared-deviation sum, `rrsqrt(var + eps)` per row, then
+/// `x̂·γ + β`), without any tape node allocation. Bit-identical to the
+/// tape forward (asserted in tests); serving inference towers call this
+/// per request.
+pub fn layer_norm_forward(x: &Tensor, gamma: &Tensor, beta: &Tensor, eps: f32) -> Result<Tensor> {
+    let d = x.dims();
+    let n = *d.last().ok_or_else(|| Error::shape("layer_norm: scalar input"))?;
+    if n == 0 {
+        // error, not a divide-by-zero panic — the degenerate-shape
+        // policy every zero-axis kernel follows (DESIGN §7)
+        return Err(Error::shape("layer_norm: zero-length last axis"));
+    }
+    if gamma.dims() != [n] || beta.dims() != [n] {
+        return Err(Error::shape("layer_norm: γ/β must match last axis"));
+    }
+    let rows = x.numel() / n;
+    let mut out = Tensor::zeros(d);
+    for r in 0..rows {
+        let w = &x.data()[r * n..(r + 1) * n];
+        let mut s = 0.0f32;
+        for &v in w {
+            s += v;
+        }
+        let mu = s / n as f32;
+        let mut v2 = 0.0f32;
+        for &v in w {
+            let dd = v - mu;
+            v2 += dd * dd;
+        }
+        let var = v2 / n as f32;
+        let rs = crate::rnum::rrsqrt(var + eps);
+        for j in 0..n {
+            let xh = (w[j] - mu) * rs;
+            out.data_mut()[r * n + j] = xh * gamma.data()[j] + beta.data()[j];
+        }
+    }
+    Ok(out)
+}
 
 /// Layer normalisation with affine parameters.
 pub struct LayerNorm {
@@ -24,6 +65,11 @@ impl LayerNorm {
             bias: Tensor::zeros(&[dim]),
             eps: 1e-5,
         }
+    }
+
+    /// Off-tape inference forward (see [`layer_norm_forward`]).
+    pub fn forward_infer(&self, x: &Tensor) -> Result<Tensor> {
+        layer_norm_forward(x, &self.weight, &self.bias, self.eps)
     }
 }
 
@@ -65,6 +111,31 @@ mod tests {
             assert!(mean.abs() < 1e-5);
             assert!((var - 1.0).abs() < 1e-3);
         }
+    }
+
+    #[test]
+    fn infer_forward_matches_tape_forward_bitwise() {
+        let mut ln = LayerNorm::new(5);
+        // non-trivial affine params so γ/β order errors cannot hide
+        for (i, v) in ln.weight.data_mut().iter_mut().enumerate() {
+            *v = 0.5 + i as f32 * 0.25;
+        }
+        for (i, v) in ln.bias.data_mut().iter_mut().enumerate() {
+            *v = (i as f32 - 2.0) * 0.125;
+        }
+        let x = Tensor::from_vec(&[4, 5], (0..20).map(|i| (i as f32 * 0.37).sin()).collect())
+            .unwrap();
+        let mut t = Tape::new();
+        let xv = t.input(x.clone());
+        let mut b = Vec::new();
+        let want = t.value(ln.forward(&mut t, xv, &mut b).unwrap());
+        let got = ln.forward_infer(&x).unwrap();
+        assert!(got.bit_eq(&want), "off-tape LayerNorm changed bits");
+        // scalar input is a shape error, matching the tape op
+        assert!(layer_norm_forward(&Tensor::scalar(1.0), &ln.weight, &ln.bias, ln.eps).is_err());
+        // zero-length last axis errors instead of dividing by zero
+        let z = Tensor::zeros(&[0]);
+        assert!(layer_norm_forward(&Tensor::zeros(&[3, 0]), &z, &z, ln.eps).is_err());
     }
 
     #[test]

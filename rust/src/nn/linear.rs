@@ -7,7 +7,7 @@ use super::Module;
 use crate::autograd::{Tape, Var};
 use crate::rng::{derive_seed, kaiming_uniform, uniform_tensor};
 use crate::rnum::rrsqrt;
-use crate::tensor::Tensor;
+use crate::tensor::{matmul_in, Tensor, WorkerPool};
 use crate::Result;
 
 /// Fully-connected layer.
@@ -25,6 +25,22 @@ impl Linear {
         let bound = rrsqrt(in_features as f32);
         let bias = uniform_tensor(&[out_features], -bound, bound, derive_seed(seed, 1));
         Linear { weight, bias }
+    }
+
+    /// Off-tape inference forward on an explicit pool: `x Wᵀ + b` with no
+    /// `Tape` node allocation. Same fixed graph as [`Module::forward`] —
+    /// the transpose is layout-only and [`matmul_in`] computes the
+    /// identical sequential-k unfused spec on any pool size — so the bits
+    /// match the tape forward exactly (asserted in tests).
+    ///
+    /// The transpose is re-materialised per call because `weight` is
+    /// mutable during training (`params_mut`) and this layer cannot know
+    /// when it changes. Serving towers whose weights are frozen at
+    /// construction could pack W once like `DeterministicServer` does —
+    /// a ROADMAP follow-on, bit-neutral when it lands (layout only).
+    pub fn forward_infer_in(&self, pool: &WorkerPool, x: &Tensor) -> Result<Tensor> {
+        let wt = self.weight.transpose2d()?; // (in, out)
+        matmul_in(pool, x, &wt)?.add_t(&self.bias)
     }
 }
 
@@ -78,6 +94,22 @@ mod tests {
         let wt = l.weight.transpose2d().unwrap();
         let want = crate::tensor::matmul(&x, &wt).unwrap().add_t(&l.bias).unwrap();
         assert!(got.bit_eq(&want));
+    }
+
+    #[test]
+    fn infer_forward_matches_tape_forward_bitwise() {
+        let l = Linear::new(6, 5, 21);
+        let x = Tensor::from_vec(&[3, 6], (0..18).map(|i| (i as f32 * 0.17).cos()).collect())
+            .unwrap();
+        let mut t = Tape::new();
+        let xv = t.input(x.clone());
+        let mut binds = Vec::new();
+        let want = t.value(l.forward(&mut t, xv, &mut binds).unwrap());
+        for lanes in [1usize, 2, 4] {
+            let pool = WorkerPool::new(lanes);
+            let got = l.forward_infer_in(&pool, &x).unwrap();
+            assert!(got.bit_eq(&want), "lanes={lanes}: off-tape forward changed bits");
+        }
     }
 
     #[test]

@@ -4,8 +4,9 @@
 use super::{Linear, Module};
 use crate::autograd::{Tape, Var};
 use crate::rng::derive_seed;
-use crate::tensor::Tensor;
-use crate::Result;
+use crate::rnum::{rgelu_tanh, rtanh};
+use crate::tensor::{Tensor, WorkerPool};
+use crate::{Error, Result};
 
 /// Activation choice for [`Mlp`].
 #[derive(Clone, Copy, Debug)]
@@ -35,6 +36,45 @@ impl Mlp {
             .map(|(i, w)| Linear::new(w[0], w[1], derive_seed(seed, i as u64)))
             .collect();
         Mlp { layers, act }
+    }
+
+    /// Input feature count (first layer's `in_features`). Errors on a
+    /// layer-less MLP (serving-facing: error, never panic).
+    pub fn d_in(&self) -> Result<usize> {
+        self.layers
+            .first()
+            .map(|l| l.weight.dims()[1])
+            .ok_or_else(|| Error::config("mlp: no layers"))
+    }
+
+    /// Output feature count (last layer's `out_features`).
+    pub fn d_out(&self) -> Result<usize> {
+        self.layers
+            .last()
+            .map(|l| l.weight.dims()[0])
+            .ok_or_else(|| Error::config("mlp: no layers"))
+    }
+
+    /// Off-tape inference forward on an explicit pool: the same
+    /// `Linear → activation → … → Linear` graph as [`Module::forward`],
+    /// with pooled GEMMs and elementwise activation maps instead of tape
+    /// nodes. Each output row is an independent fixed-order reduction,
+    /// so the pass is batch- and pool-size-invariant, and bits match the
+    /// tape forward exactly (asserted in tests).
+    pub fn forward_infer_in(&self, pool: &WorkerPool, x: &Tensor) -> Result<Tensor> {
+        let mut h = x.clone();
+        for (i, l) in self.layers.iter().enumerate() {
+            h = l.forward_infer_in(pool, &h)?;
+            if i + 1 < self.layers.len() {
+                // same elementwise graphs as Tape::{relu,gelu,tanh}
+                h = match self.act {
+                    Act::Relu => h.map(|t| if t > 0.0 { t } else { 0.0 }),
+                    Act::Gelu => h.map(rgelu_tanh),
+                    Act::Tanh => h.map(rtanh),
+                };
+            }
+        }
+        Ok(h)
     }
 }
 
@@ -79,6 +119,28 @@ mod tests {
         let y = m.forward(&mut t, xv, &mut b).unwrap();
         assert_eq!(t.value_ref(y).dims(), &[2, 4]);
         assert_eq!(b.len(), 4);
+    }
+
+    #[test]
+    fn infer_forward_matches_tape_forward_bitwise_for_every_activation() {
+        let x = Tensor::from_vec(&[3, 8], (0..24).map(|i| (i as f32 * 0.29).sin()).collect())
+            .unwrap();
+        for act in [Act::Relu, Act::Gelu, Act::Tanh] {
+            let m = Mlp::new(&[8, 16, 16, 4], act, 11);
+            assert_eq!((m.d_in().unwrap(), m.d_out().unwrap()), (8, 4));
+            let mut t = Tape::new();
+            let xv = t.input(x.clone());
+            let mut b = Vec::new();
+            let want = t.value(m.forward(&mut t, xv, &mut b).unwrap());
+            for lanes in [1usize, 2, 4] {
+                let pool = WorkerPool::new(lanes);
+                let got = m.forward_infer_in(&pool, &x).unwrap();
+                assert!(
+                    got.bit_eq(&want),
+                    "act={act:?} lanes={lanes}: off-tape MLP changed bits"
+                );
+            }
+        }
     }
 
     #[test]

@@ -21,13 +21,13 @@ pub mod mlp;
 pub mod softmax;
 pub mod transformer;
 
-pub use attention::MultiheadAttention;
+pub use attention::{attention_forward, MultiheadAttention};
 pub use batchnorm::{batch_norm, batch_norm_affine_folded, batch_norm_folded, BatchNorm2d};
 pub use conv2d::Conv2d;
 pub use embedding::Embedding;
-pub use layernorm::LayerNorm;
+pub use layernorm::{layer_norm_forward, LayerNorm};
 pub use linear::Linear;
-pub use mlp::Mlp;
+pub use mlp::{Act, Mlp};
 pub use softmax::{log_softmax_rows, softmax_rows};
 pub use transformer::{CharTransformer, TransformerBlock, TransformerConfig};
 

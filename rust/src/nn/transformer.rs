@@ -5,8 +5,9 @@
 use super::{Embedding, LayerNorm, Linear, Module, MultiheadAttention};
 use crate::autograd::{Tape, Var};
 use crate::rng::derive_seed;
-use crate::tensor::Tensor;
-use crate::Result;
+use crate::rnum::rgelu_tanh;
+use crate::tensor::{Tensor, WorkerPool};
+use crate::{Error, Result};
 
 /// Transformer hyper-parameters.
 #[derive(Clone, Copy, Debug)]
@@ -55,6 +56,26 @@ impl TransformerBlock {
             fc1: Linear::new(dim, dim * mlp_ratio, derive_seed(seed, 1)),
             fc2: Linear::new(dim * mlp_ratio, dim, derive_seed(seed, 2)),
         })
+    }
+}
+
+impl TransformerBlock {
+    /// Off-tape inference forward on a (T, D) sequence: the same
+    /// pre-norm graph as [`Module::forward`] — LN → attention →
+    /// residual, LN → GELU MLP → residual — through the off-tape layer
+    /// forwards ([`LayerNorm::forward_infer`],
+    /// [`MultiheadAttention::forward_seq_infer_in`],
+    /// [`Linear::forward_infer_in`]) with no tape node allocation.
+    /// Bit-identical to the tape forward (asserted in tests).
+    pub fn forward_infer_in(&self, pool: &WorkerPool, x: &Tensor) -> Result<Tensor> {
+        let h = self.ln1.forward_infer(x)?;
+        let h = self.attn.forward_seq_infer_in(pool, &h)?;
+        let x = x.add_t(&h)?; // residual
+        let h = self.ln2.forward_infer(&x)?;
+        let h = self.fc1.forward_infer_in(pool, &h)?;
+        let h = h.map(rgelu_tanh); // same elementwise graph as Tape::gelu
+        let h = self.fc2.forward_infer_in(pool, &h)?;
+        x.add_t(&h) // residual
     }
 }
 
@@ -145,6 +166,65 @@ impl CharTransformer {
         t.softmax_cross_entropy(logits, targets)
     }
 
+    /// Off-tape inference forward on an explicit pool: one sequence of
+    /// token ids (`0 < len ≤ context`) to (T, vocab) logits, with **no
+    /// `Tape` allocation** — embedding lookup and the positional-row
+    /// slice are plain row copies (layout-only), the blocks run
+    /// [`TransformerBlock::forward_infer_in`], and the head is a pooled
+    /// GEMM. Every op follows the identical fixed graph as
+    /// [`Self::forward_logits`], so the logits are bit-identical to the
+    /// tape forward (asserted in tests and pinned against the
+    /// independent Python emulator in `tests/golden_vectors.rs`).
+    /// Serving-facing: out-of-range ids and bad lengths are errors,
+    /// never panics.
+    pub fn forward_logits_infer_in(&self, pool: &WorkerPool, ids: &[usize]) -> Result<Tensor> {
+        let tt = ids.len();
+        if tt == 0 || tt > self.cfg.context {
+            return Err(Error::shape(format!(
+                "transformer infer: sequence length {tt} not in 1..={}",
+                self.cfg.context
+            )));
+        }
+        let dim = self.cfg.dim;
+        let table = &self.tok_emb.weight;
+        for &i in ids {
+            if i >= self.cfg.vocab {
+                return Err(Error::shape(format!(
+                    "transformer infer: id {i} ≥ vocab {}",
+                    self.cfg.vocab
+                )));
+            }
+        }
+        // token embedding + positional rows (both layout-only lookups)
+        let mut e = Tensor::zeros(&[tt, dim]);
+        for (r, &i) in ids.iter().enumerate() {
+            e.data_mut()[r * dim..(r + 1) * dim]
+                .copy_from_slice(&table.data()[i * dim..(i + 1) * dim]);
+        }
+        let mut pe = Tensor::zeros(&[tt, dim]);
+        pe.data_mut().copy_from_slice(&self.pos_emb.data()[..tt * dim]);
+        let mut h = e.add_t(&pe)?;
+        for b in &self.blocks {
+            h = b.forward_infer_in(pool, &h)?;
+        }
+        let h = self.ln_f.forward_infer(&h)?;
+        self.head.forward_infer_in(pool, &h)
+    }
+
+    /// All parameters in fixed traversal order (same order as
+    /// [`Self::params_mut`] — the model-state fingerprint and the serve
+    /// tower's `weights_hash` both rely on it).
+    pub fn params(&self) -> Vec<&Tensor> {
+        let mut p = self.tok_emb.params();
+        p.push(&self.pos_emb);
+        for b in &self.blocks {
+            p.extend(b.params());
+        }
+        p.extend(self.ln_f.params());
+        p.extend(self.head.params());
+        p
+    }
+
     /// All parameters in fixed traversal order (must match forward
     /// registration order — asserted in tests).
     pub fn params_mut(&mut self) -> Vec<&mut Tensor> {
@@ -207,6 +287,44 @@ mod tests {
         // binds order must match params_mut order (count check)
         let mut m2 = CharTransformer::new(cfg, 2).unwrap();
         assert_eq!(n1, m2.params_mut().len());
+    }
+
+    #[test]
+    fn infer_logits_match_tape_forward_bitwise() {
+        let cfg = TransformerConfig { vocab: 12, dim: 8, heads: 2, layers: 2, context: 6, mlp_ratio: 2 };
+        let m = CharTransformer::new(cfg, 9).unwrap();
+        for ids in [&[1usize, 4, 2, 9, 3, 7][..], &[0usize][..], &[5usize, 5, 11][..]] {
+            let mut t = Tape::new();
+            let mut b = Vec::new();
+            let want = t.value(m.forward_logits(&mut t, ids, &mut b).unwrap());
+            for lanes in [1usize, 2, 4] {
+                let pool = crate::tensor::WorkerPool::new(lanes);
+                let got = m.forward_logits_infer_in(&pool, ids).unwrap();
+                assert!(
+                    got.bit_eq(&want),
+                    "ids={ids:?} lanes={lanes}: off-tape transformer changed bits"
+                );
+            }
+        }
+        // serving-facing error paths: never panic
+        let pool = crate::tensor::WorkerPool::new(1);
+        assert!(m.forward_logits_infer_in(&pool, &[]).is_err(), "empty sequence");
+        assert!(m.forward_logits_infer_in(&pool, &[0; 7]).is_err(), "over context");
+        assert!(m.forward_logits_infer_in(&pool, &[12]).is_err(), "id ≥ vocab");
+    }
+
+    #[test]
+    fn params_and_params_mut_agree_on_order() {
+        let cfg = TransformerConfig { vocab: 9, dim: 8, heads: 2, layers: 2, context: 5, mlp_ratio: 2 };
+        let mut m = CharTransformer::new(cfg, 4).unwrap();
+        let immut: Vec<Vec<u32>> =
+            m.params().iter().map(|p| p.data().iter().map(|v| v.to_bits()).collect()).collect();
+        let muts: Vec<Vec<u32>> = m
+            .params_mut()
+            .iter()
+            .map(|p| p.data().iter().map(|v| v.to_bits()).collect())
+            .collect();
+        assert_eq!(immut, muts, "params() must mirror params_mut() order");
     }
 
     #[test]
