@@ -37,6 +37,8 @@ BASELINE = REPO / "BENCH_serve.json"
 KEY = (
     "kernel",
     "model",
+    "mode",
+    "context",
     "requests",
     "shards",
     "clients",
@@ -63,7 +65,7 @@ def merge(runs: list[list[dict]]) -> list[dict]:
     merged: dict[tuple, dict] = {}
     for entries in runs:
         for e in entries:
-            if e.get("kernel") not in ("scheduler", "cache"):
+            if e.get("kernel") not in ("scheduler", "cache", "kv"):
                 continue
             k = row_key(e)
             cur = merged.get(k)
@@ -97,7 +99,7 @@ def main() -> int:
         return 1
     entries = merge(runs)
     if not entries:
-        print("error: inputs held no scheduler/cache rows")
+        print("error: inputs held no scheduler/cache/kv rows")
         return 1
     BASELINE.write_text(
         json.dumps({"bench": "serve", "note": NOTE, "entries": entries}, indent=2) + "\n"

@@ -437,6 +437,77 @@ fn main() {
                 .int("allocs_per_call", allocs),
         );
     }
+    // KV-session decode: incremental (one step per prefix extension,
+    // O(T)) vs full recompute (O(T²)) over one growing decode stream,
+    // at several context lengths. The bit gate runs first — sessions
+    // may only change cost. Warm replays are measured: every extension
+    // hits the store (duplicate re-inserts are dropped), so the
+    // incremental rows time the steady-state step path.
+    section("E5: serve KV sessions — incremental vs recompute");
+    let kv_contexts: &[usize] = if smoke { &[8, 16] } else { &[16, 32, 48] };
+    for &ctx in kv_contexts {
+        let kcfg = TransformerConfig {
+            vocab: 28,
+            dim: if smoke { 16 } else { 32 },
+            heads: 4,
+            layers: 2,
+            context: ctx,
+            mlp_ratio: 2,
+        };
+        // same cfg + seed ⇒ identical weights in both towers
+        let plain = TransformerTower::new(CharTransformer::new(kcfg, 12).unwrap()).unwrap();
+        let inc = TransformerTower::new(CharTransformer::new(kcfg, 12).unwrap())
+            .unwrap()
+            .with_sessions(2 * ctx);
+        let kv_queue: Vec<Tensor> = (1..=ctx)
+            .map(|tt| {
+                Tensor::from_vec(
+                    &[tt],
+                    (0..tt).map(|t| ((t * 7 + 3) % kcfg.vocab) as f32).collect(),
+                )
+                .unwrap()
+            })
+            .collect();
+        let tickets: Vec<u64> = (0..ctx as u64).collect();
+        let pl = WorkerPool::shared(lanes);
+        // bit gate: every prefix, incremental bits == recompute bits
+        let want = plain.forward_batch(&pl, &kv_queue).unwrap();
+        let got = inc.forward_batch_ticketed(&pl, &kv_queue, &tickets).unwrap();
+        for (tt, (a, b)) in want.iter().zip(got.iter()).enumerate() {
+            assert!(a.bit_eq(b), "kv ctx={ctx} prefix={}: sessions changed bits", tt + 1);
+        }
+        // warm replay check: extensions all hit and still match
+        let warm = inc.forward_batch_ticketed(&pl, &kv_queue, &tickets).unwrap();
+        for (a, b) in want.iter().zip(warm.iter()) {
+            assert!(a.bit_eq(b), "kv ctx={ctx}: warm session replay changed bits");
+        }
+        let runs: [(&str, Box<dyn Fn() + '_>); 2] = [
+            ("recompute", Box::new(|| {
+                plain.forward_batch(&pl, &kv_queue).unwrap();
+            })),
+            ("incremental", Box::new(|| {
+                inc.forward_batch_ticketed(&pl, &kv_queue, &tickets).unwrap();
+            })),
+        ];
+        for (mode, run) in runs {
+            let st = bench_once(&format!("serve kv ctx={ctx} {mode}"), samples, &run);
+            let (allocs, _) = allocs_during(&run);
+            serve_entries.push(
+                JsonObj::new()
+                    .s("kernel", "kv")
+                    .s("model", "transformer")
+                    .s("mode", mode)
+                    .int("context", ctx as u64)
+                    .int("requests", kv_queue.len() as u64)
+                    .int("pool_lanes", lanes as u64)
+                    .int("d_in", ctx as u64)
+                    .int("d_out", kcfg.vocab as u64)
+                    .num("median_ns", st.median_ns)
+                    .num("req_per_s", st.per_sec(kv_queue.len()))
+                    .int("allocs_per_call", allocs),
+            );
+        }
+    }
     write_bench_json(&bench_json_path("serve"), "serve", &serve_entries)
         .expect("write BENCH_serve.json");
 

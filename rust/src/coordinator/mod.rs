@@ -13,9 +13,10 @@ pub mod verifier;
 
 pub use hashing::{hash_curve, hash_params, hash_tensor, hex};
 pub use serve::{
-    BatchTrace, CacheStats, DeterministicServer, LogEntry, MemoCache, MlpTower, ModelRegistry,
-    ModelTower, NamedTower, Pending, ReplayReport, ResponseLog, ServeConfig, ServeReplica,
-    ServeReport, ServeScheduler, ServeThroughput, TransformerTower,
+    token_key, BatchTrace, CacheStats, DeterministicServer, LogEntry, MemoCache, MlpTower,
+    ModelRegistry, ModelTower, NamedTower, Pending, ReplayReport, ResponseLog, ServeConfig,
+    ServeReplica, ServeReport, ServeScheduler, ServeThroughput, Session, SessionStats,
+    SessionStore, TransformerTower,
 };
 pub use trainer::{NumericsMode, TrainReport, Trainer, TrainerConfig};
 pub use verifier::{compare_runs, first_divergence, Comparison};

@@ -35,6 +35,7 @@
 //! identical with the cache on or off — only the arithmetic actually
 //! performed shrinks (DESIGN.md §8).
 
+use super::lock_recover;
 use crate::tensor::Tensor;
 use std::collections::BTreeMap;
 use std::sync::Mutex;
@@ -92,7 +93,7 @@ impl MemoCache {
     /// Look up a request by content address. Counts a hit or a miss;
     /// deliberately does **not** refresh the entry's eviction position.
     pub fn lookup(&self, key: &str) -> Option<Tensor> {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = lock_recover(&self.inner);
         let hit = inner.by_key.get(key).map(|(_, response)| response.clone());
         match hit {
             Some(r) => {
@@ -113,7 +114,7 @@ impl MemoCache {
     /// fall out of lockstep); over capacity, the smallest-ticket entry
     /// is evicted.
     pub fn insert(&self, key: &str, ticket: u64, response: &Tensor) {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = lock_recover(&self.inner);
         if inner.by_key.contains_key(key) || inner.by_ticket.contains_key(&ticket) {
             return;
         }
@@ -130,7 +131,7 @@ impl MemoCache {
 
     /// Current counters and occupancy.
     pub fn stats(&self) -> CacheStats {
-        let inner = self.inner.lock().unwrap();
+        let inner = lock_recover(&self.inner);
         CacheStats {
             hits: inner.hits,
             misses: inner.misses,
@@ -143,7 +144,7 @@ impl MemoCache {
     /// The keys currently held, in insertion-ticket order — exposed so
     /// tests can pin the eviction rule as a pure function of tickets.
     pub fn held_keys_by_ticket(&self) -> Vec<(u64, String)> {
-        let inner = self.inner.lock().unwrap();
+        let inner = lock_recover(&self.inner);
         inner.by_ticket.iter().map(|(&t, k)| (t, k.clone())).collect()
     }
 }

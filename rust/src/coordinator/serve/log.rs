@@ -27,6 +27,7 @@
 //! "0 entries verified". Entries at or above the watermark are
 //! untouched and still replay bit-exactly.
 
+use super::lock_recover;
 use crate::tensor::Tensor;
 use crate::{Error, Result};
 use std::collections::BTreeMap;
@@ -93,7 +94,7 @@ impl ResponseLog {
     /// executes *after* the rotation) silently losing that request's
     /// audit record would be unobservable otherwise.
     pub fn record(&self, entry: LogEntry) {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = lock_recover(&self.inner);
         if entry.ticket < inner.watermark {
             inner.late_drops += 1;
             return;
@@ -103,12 +104,12 @@ impl ResponseLog {
 
     /// Entry for one ticket, if that ticket has been answered.
     pub fn get(&self, ticket: u64) -> Option<LogEntry> {
-        self.inner.lock().unwrap().entries.get(&ticket).cloned()
+        lock_recover(&self.inner).entries.get(&ticket).cloned()
     }
 
     /// Logged entries with tickets in `range`, in ticket order.
     pub fn range(&self, range: Range<u64>) -> Vec<LogEntry> {
-        self.inner.lock().unwrap().entries.range(range).map(|(_, e)| e.clone()).collect()
+        lock_recover(&self.inner).entries.range(range).map(|(_, e)| e.clone()).collect()
     }
 
     /// [`Self::range`] with the truncation-watermark check done under
@@ -119,7 +120,7 @@ impl ResponseLog {
     /// range away between the two — and a half-rotated audit range must
     /// error, never silently shrink to a passing replay.
     pub fn range_checked(&self, range: Range<u64>) -> Result<Vec<LogEntry>> {
-        let inner = self.inner.lock().unwrap();
+        let inner = lock_recover(&self.inner);
         if range.start < inner.watermark {
             return Err(Error::Truncated { ticket: range.start, watermark: inner.watermark });
         }
@@ -128,12 +129,12 @@ impl ResponseLog {
 
     /// Number of answered requests recorded (and still retained).
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().entries.len()
+        lock_recover(&self.inner).entries.len()
     }
 
     /// True when nothing is retained.
     pub fn is_empty(&self) -> bool {
-        self.inner.lock().unwrap().entries.is_empty()
+        lock_recover(&self.inner).entries.is_empty()
     }
 
     /// Drop every retained entry with `ticket < watermark` and raise
@@ -144,7 +145,7 @@ impl ResponseLog {
     /// a pure function of the event sequence plus the explicit
     /// truncation calls, never of wall time.
     pub fn truncate_below(&self, watermark: u64) -> usize {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = lock_recover(&self.inner);
         if watermark <= inner.watermark {
             return 0;
         }
@@ -158,14 +159,14 @@ impl ResponseLog {
     /// The current truncation watermark: tickets below it have been
     /// dropped and can no longer be replayed (0 = nothing truncated).
     pub fn watermark(&self) -> u64 {
-        self.inner.lock().unwrap().watermark
+        lock_recover(&self.inner).watermark
     }
 
     /// How many served requests arrived for recording after a
     /// truncation had already passed their ticket (see [`Self::record`]).
     /// Non-zero means some answered requests have no audit record.
     pub fn late_drops(&self) -> u64 {
-        self.inner.lock().unwrap().late_drops
+        lock_recover(&self.inner).late_drops
     }
 }
 

@@ -47,6 +47,7 @@ pub mod log;
 pub mod registry;
 pub mod replica;
 pub mod scheduler;
+pub mod session;
 pub mod tower;
 
 pub use cache::{CacheStats, MemoCache};
@@ -54,4 +55,51 @@ pub use log::{LogEntry, ResponseLog};
 pub use registry::ModelRegistry;
 pub use replica::{DeterministicServer, ServeReplica, ServeReport, ServeThroughput};
 pub use scheduler::{BatchTrace, Pending, ReplayReport, ServeConfig, ServeScheduler};
+pub use session::{token_key, Session, SessionStats, SessionStore};
 pub use tower::{MlpTower, ModelTower, NamedTower, TransformerTower};
+
+use std::sync::{Mutex, MutexGuard};
+
+/// Acquire a serve-subsystem mutex, recovering from poisoning.
+///
+/// §7 error-not-panic policy: a panic in one dispatcher or client
+/// thread must leave every *other* client with a typed error or a
+/// correct response — never a propagated poison panic on the next
+/// `submit`. Recovery is sound here because every guarded structure in
+/// this subsystem is **update-atomic**: each critical section either
+/// completes a whole logical update or performs none (BTreeMap
+/// insert/remove pairs ordered so the panic window leaves a consistent
+/// prefix, counter bumps, queue push + notify). A poisoned lock
+/// therefore guards a consistent value, and `into_inner` is safe to
+/// serve. Anything that can't meet that bar must not use this helper.
+pub(crate) fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::lock_recover;
+    use std::sync::Mutex;
+
+    #[test]
+    fn lock_recover_survives_a_poisoning_panic() {
+        let m = Mutex::new(7u64);
+        // poison the mutex from another thread
+        let res = std::thread::scope(|s| {
+            s.spawn(|| {
+                let _g = m.lock().unwrap();
+                panic!("poison it");
+            })
+            .join()
+        });
+        assert!(res.is_err(), "the poisoning thread must have panicked");
+        assert!(m.lock().is_err(), "the mutex must actually be poisoned");
+        // a plain .lock().unwrap() here would panic; lock_recover serves
+        // the (update-atomic) guarded value
+        let mut g = lock_recover(&m);
+        assert_eq!(*g, 7);
+        *g = 8;
+        drop(g);
+        assert_eq!(*lock_recover(&m), 8);
+    }
+}

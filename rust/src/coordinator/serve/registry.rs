@@ -30,6 +30,7 @@ use std::collections::BTreeMap;
 use std::ops::Range;
 use std::sync::Mutex;
 
+use super::lock_recover;
 use super::scheduler::{Pending, ReplayReport, ServeScheduler};
 use crate::tensor::Tensor;
 use crate::{Error, Result};
@@ -105,7 +106,7 @@ impl ModelRegistry {
     /// through from the scheduler (`Error::Rejected`, `Error::Closed`)
     /// plus `Error::Config` for an unknown id — none consume a ticket.
     pub fn submit(&self, model_id: &str, request: Tensor) -> Result<Pending> {
-        let _gate = self.gate.lock().unwrap();
+        let _gate = lock_recover(&self.gate);
         self.resolve(model_id)?.submit(request)
     }
 
@@ -138,7 +139,7 @@ impl ModelRegistry {
     /// under the router gate (so the cut set corresponds to one point
     /// in the global submit order).
     pub fn flush_all(&self) {
-        let _gate = self.gate.lock().unwrap();
+        let _gate = lock_recover(&self.gate);
         for sched in self.models.values() {
             sched.flush();
         }
@@ -153,7 +154,7 @@ impl ModelRegistry {
     /// Stop accepting requests on every scheduler; in-flight requests
     /// are drained and answered.
     pub fn close_all(&self) {
-        let _gate = self.gate.lock().unwrap();
+        let _gate = lock_recover(&self.gate);
         for sched in self.models.values() {
             sched.close();
         }

@@ -280,6 +280,22 @@ impl ServeReplica {
     pub fn process(&self, batch: &[Tensor]) -> Result<Vec<Tensor>> {
         self.tower.forward_batch(&self.pool, batch)
     }
+
+    /// [`Self::process`] with each request's admission ticket, so
+    /// session-holding towers can key their KV stores by the scheduler's
+    /// logical clock ([`ModelTower::forward_batch_ticketed`]). Towers
+    /// without sessions ignore the tickets and this is exactly
+    /// `process`. `tickets.len()` must equal `batch.len()`.
+    pub fn process_ticketed(&self, batch: &[Tensor], tickets: &[u64]) -> Result<Vec<Tensor>> {
+        if tickets.len() != batch.len() {
+            return Err(Error::shape(format!(
+                "serve: {} tickets for {} requests",
+                tickets.len(),
+                batch.len()
+            )));
+        }
+        self.tower.forward_batch_ticketed(&self.pool, batch, tickets)
+    }
 }
 
 #[cfg(test)]

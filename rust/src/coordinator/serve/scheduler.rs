@@ -69,13 +69,16 @@
 
 use std::collections::VecDeque;
 use std::ops::Range;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
 use super::cache::{CacheStats, MemoCache};
+use super::lock_recover;
 use super::log::{LogEntry, ResponseLog};
 use super::replica::ServeReplica;
+use super::session::SessionStats;
 use super::tower::ModelTower;
 use crate::coordinator::hashing::hash_tensor;
 use crate::tensor::{PoolHandle, Tensor};
@@ -404,18 +407,24 @@ impl ServeScheduler {
     /// In-flight ticket count by the admission rule's own arithmetic:
     /// tickets admitted since the latest flush cut.
     pub fn in_flight(&self) -> u64 {
-        let gate = self.gate.lock().unwrap();
+        let gate = lock_recover(&self.gate);
         gate.next_ticket - gate.flushed_upto
     }
 
     /// Depth-cap rejections so far.
     pub fn rejected(&self) -> u64 {
-        self.gate.lock().unwrap().rejected
+        lock_recover(&self.gate).rejected
     }
 
     /// Memo-cache counters, when a cache is configured.
     pub fn cache_stats(&self) -> Option<CacheStats> {
         self.cache.as_ref().map(|c| c.stats())
+    }
+
+    /// KV session-store counters, when the served tower holds one (see
+    /// [`super::TransformerTower::with_sessions`]).
+    pub fn session_stats(&self) -> Option<SessionStats> {
+        self.tower.session_stats()
     }
 
     /// The ticket-addressed response log, when logging is configured.
@@ -445,7 +454,7 @@ impl ServeScheduler {
         // transformer): anything accepted here must execute, so a bad
         // request can never poison a composed batch
         self.tower.validate_request(&request)?;
-        let mut gate = self.gate.lock().unwrap();
+        let mut gate = lock_recover(&self.gate);
         if gate.closed {
             return Err(Error::Closed);
         }
@@ -463,7 +472,7 @@ impl ServeScheduler {
         gate.next_ticket += 1;
         let shard = &self.shards[(ticket % self.shards.len() as u64) as usize];
         {
-            let mut q = shard.q.lock().unwrap();
+            let mut q = lock_recover(&shard.q);
             q.pending.push_back((ticket, request, tx));
             if q.pending.len() >= self.batch_window {
                 shard.cv.notify_one();
@@ -487,14 +496,14 @@ impl ServeScheduler {
         // flushes could publish their cuts in opposite orders on
         // different shards and the smaller cut would survive on some
         // shards but be suppressed on others
-        let mut gate = self.gate.lock().unwrap();
+        let mut gate = lock_recover(&self.gate);
         let upto = gate.next_ticket;
         // the flush event is the admission logical clock: everything
         // admitted so far is now cut into formed batches, so it no
         // longer counts against the queue-depth cap
         gate.flushed_upto = upto;
         for shard in self.shards.iter() {
-            let mut q = shard.q.lock().unwrap();
+            let mut q = lock_recover(&shard.q);
             if upto > 0 && q.cuts.back().map_or(true, |&b| upto > b) {
                 q.cuts.push_back(upto);
             }
@@ -507,9 +516,9 @@ impl ServeScheduler {
     /// drained (in windows, then one trailing partial batch per shard)
     /// and answered before the dispatchers exit.
     pub fn close(&self) {
-        self.gate.lock().unwrap().closed = true;
+        lock_recover(&self.gate).closed = true;
         for shard in self.shards.iter() {
-            shard.q.lock().unwrap().closed = true;
+            lock_recover(&shard.q).closed = true;
             shard.cv.notify_all();
         }
     }
@@ -635,6 +644,9 @@ impl ServeScheduler {
             }
             let shard =
                 &self.shards[(e.ticket % self.shards.len() as u64) as usize];
+            // deliberately the NON-ticketed path: replay always runs the
+            // full recompute, so it audits the fallback numerics every
+            // session hit must match — and never mutates session state
             let outs = shard.replica.process(std::slice::from_ref(&e.request))?;
             report.replayed += 1;
             if hash_tensor(&outs[0]) != e.response_hash {
@@ -663,7 +675,7 @@ impl ServeScheduler {
         let log = self.log.as_deref().ok_or_else(|| {
             Error::config("serve truncate: response log is disabled (ServeConfig::log)")
         })?;
-        let next_ticket = self.gate.lock().unwrap().next_ticket;
+        let next_ticket = lock_recover(&self.gate).next_ticket;
         if watermark > next_ticket {
             return Err(Error::config(format!(
                 "serve truncate: watermark {watermark} exceeds next ticket {next_ticket}"
@@ -681,7 +693,7 @@ impl ServeScheduler {
     pub fn trace(&self) -> Vec<BatchTrace> {
         let mut out = Vec::new();
         for (i, shard) in self.shards.iter().enumerate() {
-            for tickets in shard.trace.lock().unwrap().iter() {
+            for tickets in lock_recover(&shard.trace).iter() {
                 out.push(BatchTrace { shard: i, tickets: tickets.clone() });
             }
         }
@@ -719,7 +731,7 @@ fn dispatcher_loop(
 ) {
     loop {
         let batch = {
-            let mut q = shard.q.lock().unwrap();
+            let mut q = lock_recover(&shard.q);
             let take = loop {
                 // drop flush boundaries that are already satisfied
                 // (no pending ticket below them)
@@ -746,7 +758,7 @@ fn dispatcher_loop(
                     }
                     break q.pending.len(); // trailing partial batch (close)
                 }
-                q = shard.cv.wait(q).unwrap();
+                q = shard.cv.wait(q).unwrap_or_else(|e| e.into_inner());
             };
             q.pending.drain(..take).collect::<Vec<_>>()
         };
@@ -759,7 +771,7 @@ fn dispatcher_loop(
             senders.push(tx);
         }
         {
-            let mut trace = shard.trace.lock().unwrap();
+            let mut trace = lock_recover(&shard.trace);
             if trace.len() == TRACE_CAP {
                 trace.pop_front();
             }
@@ -767,6 +779,31 @@ fn dispatcher_loop(
         }
         execute_batch(shard, cache, log, weights_hash, &tickets, &inputs, &senders);
     }
+}
+
+/// Run one composed batch on the replica through the **ticketed** path
+/// (session-holding towers key their KV stores by the requests'
+/// admission tickets; other towers fall through to plain
+/// `forward_batch`), behind a panic shield: a tower that panics
+/// mid-batch must become a typed error for *this* batch's clients —
+/// never unwind the dispatcher thread, which would poison the shard's
+/// queue lock and strand every later request on that shard.
+/// `AssertUnwindSafe` is sound here for the same reason
+/// [`super::lock_recover`] is: every `&`-reachable structure the
+/// closure touches (session store, memo cache, worker pool) mutates
+/// only under its own lock in update-atomic steps, so an unwind cannot
+/// leave a half-written invariant behind.
+fn run_replica(replica: &ServeReplica, inputs: &[Tensor], tickets: &[u64]) -> Result<Vec<Tensor>> {
+    catch_unwind(AssertUnwindSafe(|| replica.process_ticketed(inputs, tickets))).unwrap_or_else(
+        |p| {
+            let what = p
+                .downcast_ref::<&str>()
+                .map(|s| s.to_string())
+                .or_else(|| p.downcast_ref::<String>().cloned())
+                .unwrap_or_else(|| "non-string panic payload".to_string());
+            Err(Error::runtime(format!("serve replica panicked: {what}")))
+        },
+    )
 }
 
 /// Execute one already-composed batch: resolve cache hits, run the
@@ -807,10 +844,11 @@ fn execute_batch(
     let computed: Result<Vec<Tensor>> = if miss.is_empty() {
         Ok(Vec::new())
     } else if miss.len() == n {
-        shard.replica.process(inputs) // no per-request clones on this path
+        run_replica(&shard.replica, inputs, tickets) // no per-request clones on this path
     } else {
         let miss_inputs: Vec<Tensor> = miss.iter().map(|&i| inputs[i].clone()).collect();
-        shard.replica.process(&miss_inputs)
+        let miss_tickets: Vec<u64> = miss.iter().map(|&i| tickets[i]).collect();
+        run_replica(&shard.replica, &miss_inputs, &miss_tickets)
     };
     match computed {
         Ok(mouts) => {

@@ -1,0 +1,257 @@
+//! Deterministic session store for KV-cached incremental decoding.
+//!
+//! A *session* is one live decode stream: the per-layer KV caches
+//! ([`crate::nn::TransformerKv`]) for a token prefix, keyed by that
+//! prefix's content hash ([`token_key`]). A request whose prefix hash
+//! matches a stored session can run ONE incremental step (O(T)) instead
+//! of a full recompute (O(T²)); any miss — unknown prefix, evicted
+//! session, length mismatch — falls back to the full recompute, which
+//! is bit-identical by construction (the per-row reduction graphs are
+//! position-independent; DESIGN.md §10).
+//!
+//! Eviction mirrors [`super::cache::MemoCache`] exactly: deterministic
+//! logical-clock FIFO by **insertion ticket**. Which sessions the store
+//! holds after a given insert sequence is a pure function of the (key,
+//! ticket) pairs inserted — never of wall-clock or lookup timing. A hit
+//! does not refresh an entry; a duplicate insert (either axis) keeps
+//! the existing entry (first insertion wins). The same single-shard
+//! scope note as the memo cache applies: with one dispatcher the insert
+//! sequence is event-sequence-pure, so contents and counters are fully
+//! reproducible; with several, hit/miss *counters* can vary with thread
+//! timing under eviction pressure — bits never can, because a session
+//! hit is bit-equal to the recompute it replaces.
+
+use crate::coordinator::hashing::hex;
+use crate::nn::TransformerKv;
+use crate::sha256::Sha256;
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+use super::lock_recover;
+
+/// Content address of a token prefix: SHA-256 over the ids as u64 LE
+/// (length-framed by construction — the id stream IS the content).
+/// Sessions for different prefixes can never collide onto one key.
+pub fn token_key(ids: &[usize]) -> String {
+    let mut h = Sha256::new();
+    for &i in ids {
+        h.update((i as u64).to_le_bytes());
+    }
+    hex(&h.finalize())
+}
+
+/// One stored decode stream: the KV caches for a prefix plus the
+/// prefix's content hash (= its store key, kept for auditability).
+#[derive(Clone)]
+pub struct Session {
+    /// Per-layer KV caches; `kv.steps()` is the prefix length.
+    pub kv: TransformerKv,
+    /// [`token_key`] of the prefix the caches were built from.
+    pub prefix_hash: String,
+}
+
+/// Store occupancy and traffic counters (all monotone except `len`).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct SessionStats {
+    /// Lookups answered from the store.
+    pub hits: u64,
+    /// Lookups that fell through to full recompute.
+    pub misses: u64,
+    /// Sessions evicted by the capacity rule.
+    pub evictions: u64,
+    /// Sessions currently held.
+    pub len: usize,
+    /// Maximum sessions held.
+    pub capacity: usize,
+}
+
+struct StoreInner {
+    /// prefix-hash → (insertion ticket, session).
+    by_key: BTreeMap<String, (u64, Session)>,
+    /// insertion ticket → prefix-hash (the deterministic eviction order).
+    by_ticket: BTreeMap<u64, String>,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+}
+
+/// Thread-safe session store (see module docs). `BTreeMap`s on both
+/// indices — no hash-seed dependence anywhere.
+pub struct SessionStore {
+    inner: Mutex<StoreInner>,
+    capacity: usize,
+}
+
+impl SessionStore {
+    /// New store holding at most `capacity` sessions (`capacity ≥ 1`;
+    /// zero means "sessions off" and is handled by the tower never
+    /// constructing one).
+    pub fn new(capacity: usize) -> SessionStore {
+        SessionStore {
+            inner: Mutex::new(StoreInner {
+                by_key: BTreeMap::new(),
+                by_ticket: BTreeMap::new(),
+                hits: 0,
+                misses: 0,
+                evictions: 0,
+            }),
+            capacity: capacity.max(1),
+        }
+    }
+
+    /// Look up a session by prefix hash. Returns a **clone** — the
+    /// stored session is never mutated in place, so a later fallback
+    /// re-reads exactly what was inserted. Counts a hit or a miss;
+    /// deliberately does not refresh the entry's eviction position.
+    pub fn lookup(&self, key: &str) -> Option<Session> {
+        let mut inner = lock_recover(&self.inner);
+        let hit = inner.by_key.get(key).map(|(_, s)| s.clone());
+        match hit {
+            Some(s) => {
+                inner.hits += 1;
+                Some(s)
+            }
+            None => {
+                inner.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Insert a session under the inserting request's ticket. Duplicate
+    /// keys and duplicate tickets keep the existing entry (first
+    /// insertion wins on both axes — the indices can never desync);
+    /// over capacity, the smallest-ticket session is evicted.
+    pub fn insert(&self, key: &str, ticket: u64, session: &Session) {
+        let mut inner = lock_recover(&self.inner);
+        if inner.by_key.contains_key(key) || inner.by_ticket.contains_key(&ticket) {
+            return;
+        }
+        inner.by_key.insert(key.to_string(), (ticket, session.clone()));
+        inner.by_ticket.insert(ticket, key.to_string());
+        while inner.by_key.len() > self.capacity {
+            // deterministic: evict the smallest insertion ticket present
+            let (&t, _) = inner.by_ticket.iter().next().unwrap();
+            let victim = inner.by_ticket.remove(&t).unwrap();
+            inner.by_key.remove(&victim);
+            inner.evictions += 1;
+        }
+    }
+
+    /// Current counters and occupancy.
+    pub fn stats(&self) -> SessionStats {
+        let inner = lock_recover(&self.inner);
+        SessionStats {
+            hits: inner.hits,
+            misses: inner.misses,
+            evictions: inner.evictions,
+            len: inner.by_key.len(),
+            capacity: self.capacity,
+        }
+    }
+
+    /// The prefix hashes currently held, in insertion-ticket order —
+    /// exposed so tests can pin the eviction rule as a pure function of
+    /// tickets (mirror of `MemoCache::held_keys_by_ticket`).
+    pub fn held_keys_by_ticket(&self) -> Vec<(u64, String)> {
+        let inner = lock_recover(&self.inner);
+        inner.by_ticket.iter().map(|(&t, k)| (t, k.clone())).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::{CharTransformer, TransformerConfig};
+    use crate::tensor::WorkerPool;
+
+    fn sess(model: &CharTransformer, ids: &[usize]) -> Session {
+        let pool = WorkerPool::new(1);
+        let mut kv = model.begin_kv();
+        let _ = model.forward_logits_packed_in(&pool, ids, None, Some(&mut kv)).unwrap();
+        Session { kv, prefix_hash: token_key(ids) }
+    }
+
+    fn tiny() -> CharTransformer {
+        let cfg = TransformerConfig {
+            vocab: 10,
+            dim: 8,
+            heads: 2,
+            layers: 1,
+            context: 6,
+            mlp_ratio: 2,
+        };
+        CharTransformer::new(cfg, 5).unwrap()
+    }
+
+    #[test]
+    fn token_key_is_injective_on_prefix_content_and_length() {
+        assert_ne!(token_key(&[1, 2]), token_key(&[2, 1]));
+        assert_ne!(token_key(&[1, 2]), token_key(&[1, 2, 0]));
+        assert_ne!(token_key(&[]), token_key(&[0]));
+        assert_eq!(token_key(&[3, 7, 1]), token_key(&[3, 7, 1]));
+    }
+
+    #[test]
+    fn eviction_is_a_pure_function_of_insertion_tickets() {
+        // mirror of the MemoCache test: two arrival orders, same held set
+        let m = tiny();
+        let streams: [&[usize]; 5] = [&[1], &[2], &[3], &[4], &[5]];
+        let orders: [&[(u64, usize)]; 2] = [
+            &[(10, 0), (2, 1), (7, 2), (20, 3), (15, 4)],
+            &[(20, 3), (2, 1), (15, 4), (10, 0), (7, 2)],
+        ];
+        let mut finals = Vec::new();
+        for inserts in orders {
+            let st = SessionStore::new(3);
+            for &(t, i) in inserts {
+                st.insert(&token_key(streams[i]), t, &sess(&m, streams[i]));
+            }
+            finals.push(st.held_keys_by_ticket());
+        }
+        assert_eq!(finals[0], finals[1]);
+        let tickets: Vec<u64> = finals[0].iter().map(|(t, _)| *t).collect();
+        assert_eq!(tickets, vec![10, 15, 20]);
+        let st = SessionStore::new(3);
+        for &(t, i) in orders[0] {
+            st.insert(&token_key(streams[i]), t, &sess(&m, streams[i]));
+        }
+        assert_eq!(st.stats().evictions, 2);
+    }
+
+    #[test]
+    fn duplicates_keep_first_and_hits_do_not_refresh() {
+        let m = tiny();
+        let st = SessionStore::new(2);
+        let (a, b, c) = (sess(&m, &[1]), sess(&m, &[2]), sess(&m, &[3]));
+        st.insert("x", 1, &a);
+        st.insert("x", 9, &b); // duplicate key: first wins
+        assert_eq!(st.lookup("x").unwrap().kv.steps(), a.kv.steps());
+        st.insert("y", 1, &b); // duplicate ticket: dropped, no desync
+        assert!(st.lookup("y").is_none());
+        st.insert("y", 2, &b);
+        for _ in 0..10 {
+            st.lookup("x").unwrap(); // hits must not refresh
+        }
+        st.insert("z", 3, &c);
+        assert!(st.lookup("x").is_none(), "x held the smallest ticket: evicted");
+        assert!(st.lookup("y").is_some() && st.lookup("z").is_some());
+        let s = st.stats();
+        assert_eq!(s.capacity, 2);
+        assert_eq!(s.len, 2);
+    }
+
+    #[test]
+    fn lookup_returns_a_clone_stored_state_is_immutable() {
+        let m = tiny();
+        let st = SessionStore::new(4);
+        let s = sess(&m, &[1, 2]);
+        st.insert(&s.prefix_hash, 1, &s);
+        let pool = WorkerPool::new(1);
+        // advance the clone; the stored session must not move
+        let mut got = st.lookup(&s.prefix_hash).unwrap();
+        let _ = m.forward_logits_step_infer_in(&pool, 3, &mut got.kv).unwrap();
+        assert_eq!(got.kv.steps(), 3);
+        assert_eq!(st.lookup(&s.prefix_hash).unwrap().kv.steps(), 2);
+    }
+}

@@ -32,8 +32,10 @@
 //! key spaces.
 
 use super::replica::{check_request, DeterministicServer};
+use super::session::{token_key, Session, SessionStats, SessionStore};
 use crate::coordinator::hashing::hash_params;
-use crate::nn::{CharTransformer, Mlp, Module};
+use crate::nn::{CharTransformer, Mlp, Module, PackedMlp, PackedTransformer};
+use crate::tensor::pool::global_pool;
 use crate::tensor::{Tensor, WorkerPool};
 use crate::{Error, Result};
 
@@ -68,6 +70,25 @@ pub trait ModelTower: Send + Sync {
     fn validate_request(&self, request: &Tensor) -> Result<()> {
         check_request(request, self.d_in())
     }
+    /// [`Self::forward_batch`] with each request's admission ticket.
+    /// Towers holding session state (KV caches) override this to key
+    /// their stores by the scheduler's logical clock; the override must
+    /// stay **bit-identical** to `forward_batch` on every request —
+    /// sessions may only change cost, never bits. The default ignores
+    /// the tickets.
+    fn forward_batch_ticketed(
+        &self,
+        pool: &WorkerPool,
+        batch: &[Tensor],
+        tickets: &[u64],
+    ) -> Result<Vec<Tensor>> {
+        let _ = tickets;
+        self.forward_batch(pool, batch)
+    }
+    /// Session-store counters, if this tower holds one (default: none).
+    fn session_stats(&self) -> Option<SessionStats> {
+        None
+    }
 }
 
 /// The original linear server is the reference tower: `logits = x·W`
@@ -99,6 +120,11 @@ impl ModelTower for DeterministicServer {
 /// computation.
 pub struct MlpTower {
     mlp: Mlp,
+    /// Layer weights frozen into microkernel B panels **once at
+    /// construction** (layout-only, bit-neutral) — the serve hot path
+    /// must never re-transpose or re-pack the immutable weights per
+    /// call (same rule as [`DeterministicServer`]).
+    packed: PackedMlp,
     model_id: String,
     weights_hash: String,
     d_in: usize,
@@ -112,12 +138,13 @@ impl MlpTower {
     }
 
     /// Wrap an MLP under an explicit model id (for registries holding
-    /// several MLPs).
+    /// several MLPs). Packs every layer's weights once, up front.
     pub fn with_model_id(mlp: Mlp, model_id: impl Into<String>) -> Result<MlpTower> {
         let d_in = mlp.d_in()?;
         let d_out = mlp.d_out()?;
         let weights_hash = hash_params(&mlp.params());
-        Ok(MlpTower { mlp, model_id: model_id.into(), weights_hash, d_in, d_out })
+        let packed = mlp.pack_in(global_pool())?;
+        Ok(MlpTower { mlp, packed, model_id: model_id.into(), weights_hash, d_in, d_out })
     }
 
     /// The wrapped model.
@@ -145,7 +172,8 @@ impl ModelTower for MlpTower {
             check_request(r, self.d_in)?;
             x.data_mut()[i * self.d_in..(i + 1) * self.d_in].copy_from_slice(r.data());
         }
-        let y = self.mlp.forward_infer_in(pool, &x)?;
+        // construction-time panels: zero transpose/pack allocations here
+        let y = self.mlp.forward_infer_packed_in(pool, &x, Some(&self.packed))?;
         (0..batch.len())
             .map(|i| {
                 Tensor::from_vec(
@@ -158,15 +186,28 @@ impl ModelTower for MlpTower {
 }
 
 /// A [`crate::nn::CharTransformer`] behind the tower surface,
-/// inference-only: a request is exactly `context` token ids encoded as
-/// f32 values, the response is the **last position's** (vocab,) logits
-/// row — next-token inference. Each sequence runs the off-tape
-/// `forward_logits_infer_in` path independently (no `Tape` allocation
-/// per request), so batch invariance holds trivially: a request's
-/// logits are a function of its own ids and the weights, never of its
-/// batch-mates.
+/// inference-only: a request is `1..=context` token ids encoded as f32
+/// values, the response is the **last position's** (vocab,) logits row
+/// — next-token inference. Each sequence runs the off-tape packed
+/// forward independently (no `Tape` allocation per request), so batch
+/// invariance holds trivially: a request's logits are a function of its
+/// own ids and the weights, never of its batch-mates.
+///
+/// With [`Self::with_sessions`], the ticketed path keeps per-prefix KV
+/// caches in a [`SessionStore`]: a request extending a live prefix by
+/// one token runs a single decode step (O(T)) instead of a full
+/// recompute (O(T²)). Any miss — unknown prefix, evicted session,
+/// length mismatch — falls back to the full recompute, which also
+/// *rebuilds* the session via prefill capture. Sessions change cost
+/// only, never bits (DESIGN.md §10; pinned in `tests/serve_sessions`).
 pub struct TransformerTower {
     model: CharTransformer,
+    /// Every weight matrix frozen into microkernel B panels **once at
+    /// construction** (layout-only, bit-neutral) — the serve hot path
+    /// must never re-transpose the immutable weights per call.
+    packed: PackedTransformer,
+    /// KV-cache store for incremental decode, if enabled.
+    sessions: Option<SessionStore>,
     model_id: String,
     weights_hash: String,
 }
@@ -177,7 +218,8 @@ impl TransformerTower {
         TransformerTower::with_model_id(model, "transformer")
     }
 
-    /// Wrap a transformer under an explicit model id.
+    /// Wrap a transformer under an explicit model id. Packs every
+    /// weight matrix once, up front; sessions start disabled.
     pub fn with_model_id(
         model: CharTransformer,
         model_id: impl Into<String>,
@@ -188,7 +230,23 @@ impl TransformerTower {
             return Err(Error::config("transformer tower: zero context, vocab or dim"));
         }
         let weights_hash = hash_params(&model.params());
-        Ok(TransformerTower { model, model_id: model_id.into(), weights_hash })
+        let packed = model.pack_in(global_pool())?;
+        Ok(TransformerTower {
+            model,
+            packed,
+            sessions: None,
+            model_id: model_id.into(),
+            weights_hash,
+        })
+    }
+
+    /// Enable KV-cached incremental decode with a session store holding
+    /// at most `capacity` prefixes (`0` leaves sessions disabled). The
+    /// store only ever changes serving *cost*: every response is
+    /// bit-identical with sessions on, off, or thrashing.
+    pub fn with_sessions(mut self, capacity: usize) -> TransformerTower {
+        self.sessions = if capacity == 0 { None } else { Some(SessionStore::new(capacity)) };
+        self
     }
 
     /// The wrapped model.
@@ -202,6 +260,74 @@ impl TransformerTower {
         let t = Tensor::from_vec(&[ids.len()], ids.iter().map(|&i| i as f32).collect())?;
         self.validate_request(&t)?;
         Ok(t)
+    }
+
+    /// Reject a request whose token count is outside `1..=context` —
+    /// variable-length sequences are the point of incremental decode
+    /// (`d_in()` stays `context`: the *maximum* request length).
+    fn check_len(&self, request: &Tensor) -> Result<()> {
+        let n = request.numel();
+        let ctx = self.model.cfg.context;
+        if n == 0 || n > ctx {
+            return Err(Error::shape(format!(
+                "transformer tower: request length {n} outside 1..={ctx}"
+            )));
+        }
+        Ok(())
+    }
+
+    /// Full recompute of one request's last-position logits through the
+    /// construction-time panels — the reference path every session hit
+    /// must bit-match, and the fallback when no session applies.
+    fn full_logits(&self, pool: &WorkerPool, ids: &[usize]) -> Result<Tensor> {
+        let vocab = self.model.cfg.vocab;
+        let logits = self.model.forward_logits_packed_in(pool, ids, Some(&self.packed), None)?;
+        let last = ids.len() - 1;
+        Tensor::from_vec(&[vocab], logits.data()[last * vocab..(last + 1) * vocab].to_vec())
+    }
+
+    /// Serve one ticketed request through the session store: one decode
+    /// step on a prefix hit, full recompute + prefill capture (session
+    /// rebuild) on any miss. Bit-identical to [`Self::full_logits`]
+    /// either way.
+    fn session_logits(
+        &self,
+        store: &SessionStore,
+        pool: &WorkerPool,
+        ids: &[usize],
+        ticket: u64,
+    ) -> Result<Tensor> {
+        let tt = ids.len();
+        if tt >= 2 {
+            if let Some(sess) = store.lookup(&token_key(&ids[..tt - 1])) {
+                if sess.kv.steps() == tt - 1 {
+                    // hit: score ONE new query row against the cached
+                    // (K,V) rows — the identical per-row reduction
+                    // graph as the full forward's last position
+                    let mut kv = sess.kv; // lookup returned a clone
+                    let row = self.model.forward_logits_step_packed_in(
+                        pool,
+                        ids[tt - 1],
+                        &mut kv,
+                        Some(&self.packed),
+                    )?;
+                    let key = token_key(ids);
+                    store.insert(&key, ticket, &Session { kv, prefix_hash: key.clone() });
+                    return Tensor::from_vec(&[self.model.cfg.vocab], row.data().to_vec());
+                }
+            }
+        }
+        // miss (unknown/evicted prefix, or a fresh one-token stream):
+        // full recompute, capturing the KV state as it goes so the
+        // stream's next request can hit (O(T) rebuild, not T steps)
+        let mut kv = self.model.begin_kv();
+        let vocab = self.model.cfg.vocab;
+        let logits =
+            self.model.forward_logits_packed_in(pool, ids, Some(&self.packed), Some(&mut kv))?;
+        let key = token_key(ids);
+        store.insert(&key, ticket, &Session { kv, prefix_hash: key.clone() });
+        let last = tt - 1;
+        Tensor::from_vec(&[vocab], logits.data()[last * vocab..(last + 1) * vocab].to_vec())
     }
 
     /// Decode a validated request back to token ids.
@@ -267,6 +393,17 @@ impl<T: ModelTower> ModelTower for NamedTower<T> {
     fn validate_request(&self, request: &Tensor) -> Result<()> {
         self.inner.validate_request(request)
     }
+    fn forward_batch_ticketed(
+        &self,
+        pool: &WorkerPool,
+        batch: &[Tensor],
+        tickets: &[u64],
+    ) -> Result<Vec<Tensor>> {
+        self.inner.forward_batch_ticketed(pool, batch, tickets)
+    }
+    fn session_stats(&self) -> Option<SessionStats> {
+        self.inner.session_stats()
+    }
 }
 
 impl ModelTower for TransformerTower {
@@ -283,29 +420,55 @@ impl ModelTower for TransformerTower {
         &self.weights_hash
     }
     fn forward_batch(&self, pool: &WorkerPool, batch: &[Tensor]) -> Result<Vec<Tensor>> {
-        let vocab = self.model.cfg.vocab;
         batch
             .iter()
             .map(|r| {
                 // one decode pass covers the full validate_request
                 // domain (length + token ids) — don't pay it twice per
                 // request on the dispatch hot path
-                check_request(r, self.d_in())?;
+                self.check_len(r)?;
                 let ids = self.ids_of(r)?;
-                let logits = self.model.forward_logits_infer_in(pool, &ids)?; // (T, vocab)
-                let last = ids.len() - 1;
-                Tensor::from_vec(
-                    &[vocab],
-                    logits.data()[last * vocab..(last + 1) * vocab].to_vec(),
-                )
+                self.full_logits(pool, &ids)
             })
             .collect()
+    }
+    /// The session-aware path: bit-identical to [`Self::forward_batch`]
+    /// (pinned in `tests/serve_sessions`), cheaper on prefix hits. With
+    /// sessions disabled this *is* `forward_batch`.
+    fn forward_batch_ticketed(
+        &self,
+        pool: &WorkerPool,
+        batch: &[Tensor],
+        tickets: &[u64],
+    ) -> Result<Vec<Tensor>> {
+        let Some(store) = &self.sessions else {
+            return self.forward_batch(pool, batch);
+        };
+        if tickets.len() != batch.len() {
+            return Err(Error::shape(format!(
+                "transformer tower: {} tickets for {} requests",
+                tickets.len(),
+                batch.len()
+            )));
+        }
+        batch
+            .iter()
+            .zip(tickets.iter())
+            .map(|(r, &ticket)| {
+                self.check_len(r)?;
+                let ids = self.ids_of(r)?;
+                self.session_logits(store, pool, &ids, ticket)
+            })
+            .collect()
+    }
+    fn session_stats(&self) -> Option<SessionStats> {
+        self.sessions.as_ref().map(|s| s.stats())
     }
     /// Submit-time validation covers the full domain — length AND token
     /// ids — so a garbage token is rejected before it consumes a ticket
     /// and can never fail (and thereby poison) a composed batch.
     fn validate_request(&self, request: &Tensor) -> Result<()> {
-        check_request(request, self.d_in())?;
+        self.check_len(request)?;
         self.ids_of(request).map(|_| ())
     }
 }
@@ -374,26 +537,41 @@ mod tests {
     fn degenerate_transformer_configs_are_construction_errors() {
         // dim = 0 would otherwise panic (divide-by-zero) in layer_norm
         // inside a dispatcher thread on the first request; heads = 0
-        // would panic (`dim % 0`) in MultiheadAttention::new
-        for (vocab, dim, heads, context) in
-            [(10, 0, 1, 4), (0, 8, 1, 4), (10, 8, 1, 0), (10, 8, 0, 4)]
-        {
-            let cfg = TransformerConfig { vocab, dim, heads, layers: 1, context, mlp_ratio: 2 };
+        // would panic (`dim % 0`) in MultiheadAttention::new;
+        // mlp_ratio = 0 would build a width-0 hidden layer whose GEMM
+        // output is shape-degenerate
+        for (vocab, dim, heads, context, mlp_ratio) in [
+            (10, 0, 1, 4, 2),
+            (0, 8, 1, 4, 2),
+            (10, 8, 1, 0, 2),
+            (10, 8, 0, 4, 2),
+            (10, 8, 1, 4, 0),
+        ] {
+            let cfg = TransformerConfig { vocab, dim, heads, layers: 1, context, mlp_ratio };
             let Ok(m) = CharTransformer::new(cfg, 1) else {
                 continue; // the model constructor rejecting it is fine too
             };
             assert!(
                 TransformerTower::new(m).is_err(),
-                "vocab={vocab} dim={dim} heads={heads} context={context} must not construct a tower"
+                "vocab={vocab} dim={dim} heads={heads} context={context} ratio={mlp_ratio} \
+                 must not construct a tower"
             );
         }
+        // mlp_ratio = 0 specifically must already die in the model
+        // constructor (TransformerBlock::new), not only at the tower
+        let cfg =
+            TransformerConfig { vocab: 10, dim: 8, heads: 1, layers: 1, context: 4, mlp_ratio: 0 };
+        assert!(CharTransformer::new(cfg, 1).is_err());
     }
 
     #[test]
     fn transformer_tower_rejects_bad_tokens_at_validation() {
         let tower = transformer_tower();
-        // wrong length
-        assert!(tower.validate_request(&Tensor::zeros(&[3])).is_err());
+        // wrong length: empty and over-context (context = 4)
+        assert!(tower.validate_request(&Tensor::zeros(&[0])).is_err());
+        assert!(tower.validate_request(&Tensor::zeros(&[5])).is_err());
+        // shorter-than-context requests are valid now (incremental serving)
+        assert!(tower.validate_request(&Tensor::zeros(&[3])).is_ok());
         // out-of-vocab, fractional, negative, non-finite
         for bad in [10.0f32, 1.5, -1.0, f32::NAN, f32::INFINITY] {
             let r = Tensor::from_vec(&[4], vec![1.0, bad, 2.0, 3.0]).unwrap();
@@ -403,6 +581,89 @@ mod tests {
         assert!(tower.encode_request(&[0, 9, 4, 4]).is_ok());
         // encode_request refuses out-of-domain ids too
         assert!(tower.encode_request(&[0, 10, 0, 0]).is_err());
+    }
+
+    #[test]
+    fn transformer_tower_serves_every_prefix_length() {
+        let tower = transformer_tower();
+        let pool = WorkerPool::new(2);
+        let ids = [1usize, 7, 0, 9];
+        for tt in 1..=ids.len() {
+            let req = tower.encode_request(&ids[..tt]).unwrap();
+            let out = &tower.forward_batch(&pool, std::slice::from_ref(&req)).unwrap()[0];
+            let logits = tower.model().forward_logits_infer_in(&pool, &ids[..tt]).unwrap();
+            assert_eq!(
+                out.data(),
+                &logits.data()[(tt - 1) * 10..tt * 10],
+                "prefix length {tt}: packed tower row drifted from reference forward"
+            );
+        }
+    }
+
+    #[test]
+    fn ticketed_sessions_change_cost_never_bits() {
+        let plain = transformer_tower();
+        let tower = transformer_tower().with_sessions(8);
+        assert!(plain.session_stats().is_none());
+        let pool = WorkerPool::new(1);
+        let ids = [3usize, 1, 7, 2];
+        // feed the growing stream through the ticketed path twice over:
+        // first pass populates (miss+rebuild each new prefix arrival is a
+        // hit on the previous insert), second pass re-lookups
+        let mut ticket = 0u64;
+        for _ in 0..2 {
+            for tt in 1..=ids.len() {
+                let req = tower.encode_request(&ids[..tt]).unwrap();
+                ticket += 1;
+                let got = &tower
+                    .forward_batch_ticketed(&pool, std::slice::from_ref(&req), &[ticket])
+                    .unwrap()[0];
+                let want =
+                    &plain.forward_batch(&pool, std::slice::from_ref(&req)).unwrap()[0];
+                assert!(
+                    got.bit_eq(want),
+                    "prefix length {tt}: session-served bits differ from full recompute"
+                );
+            }
+        }
+        let stats = tower.session_stats().unwrap();
+        // pass 1: tt=1 no lookup, tt∈{2,3,4} hit the previous insert;
+        // pass 2: every tt≥2 hits again (duplicate re-inserts are dropped)
+        assert_eq!(stats.hits, 6, "{stats:?}");
+        assert_eq!(stats.misses, 0, "{stats:?}");
+        assert_eq!(stats.len, 4, "{stats:?}");
+        // ticket mismatch is an error, not a panic
+        assert!(tower.forward_batch_ticketed(&pool, &[], &[1]).is_err());
+    }
+
+    #[test]
+    fn capacity_one_sessions_thrash_but_stay_bit_exact() {
+        let plain = transformer_tower();
+        let tower = transformer_tower().with_sessions(1);
+        let pool = WorkerPool::new(1);
+        // two interleaved streams fighting over one slot: every lookup
+        // whose session was evicted falls back to full recompute
+        let streams: [&[usize]; 2] = [&[1, 2, 3, 4], &[5, 6, 7, 8]];
+        let mut ticket = 0u64;
+        for tt in 1..=4 {
+            for s in streams {
+                let req = tower.encode_request(&s[..tt]).unwrap();
+                ticket += 1;
+                let got = &tower
+                    .forward_batch_ticketed(&pool, std::slice::from_ref(&req), &[ticket])
+                    .unwrap()[0];
+                let want =
+                    &plain.forward_batch(&pool, std::slice::from_ref(&req)).unwrap()[0];
+                assert!(
+                    got.bit_eq(want),
+                    "stream {s:?} len {tt}: eviction fallback changed bits"
+                );
+            }
+        }
+        let stats = tower.session_stats().unwrap();
+        assert_eq!(stats.capacity, 1);
+        assert!(stats.evictions > 0, "two streams over one slot must evict: {stats:?}");
+        assert!(stats.misses > 0, "evicted prefixes must fall back: {stats:?}");
     }
 
     #[test]

@@ -9,7 +9,9 @@
 //!                (--model linear|mlp|transformer --threads N --shards S
 //!                 --batch-window K --clients C --max-queue-depth D
 //!                 --cache-capacity M --replay; transformer towers take
-//!                 --width/--heads/--layers/--context, mlp takes
+//!                 --width/--heads/--layers/--context plus --sessions
+//!                 [--session-capacity S] for KV-cached incremental
+//!                 decode over a growing-prefix stream queue, mlp takes
 //!                 --hidden)
 //!   runtime      load + execute an AOT artifact (needs `make artifacts`)
 //!   selftest     quick determinism smoke checks
@@ -167,6 +169,13 @@ fn cmd_serve(args: &Args) -> i32 {
     let max_queue_depth = args.get_opt_usize("max-queue-depth");
     let cache_capacity = args.get_usize("cache-capacity", 0);
     let do_replay = args.has("replay");
+    // KV sessions (transformer only): --sessions turns the store on,
+    // --session-capacity bounds it (deterministic ticket-FIFO eviction)
+    let session_capacity = if args.has("sessions") {
+        args.get_usize_at_least("session-capacity", 256, 1)
+    } else {
+        0
+    };
     // only spawn a private pool for an explicit --threads; otherwise
     // take a handle to the global pool the kernels already use (never
     // a duplicate pool of background threads)
@@ -230,7 +239,7 @@ fn cmd_serve(args: &Args) -> i32 {
                 mlp_ratio: 2,
             };
             match CharTransformer::new(cfg, seed).and_then(TransformerTower::new) {
-                Ok(t) => Arc::new(t),
+                Ok(t) => Arc::new(t.with_sessions(session_capacity)),
                 Err(e) => {
                     eprintln!("serve: {e}");
                     return 1;
@@ -250,7 +259,20 @@ fn cmd_serve(args: &Args) -> i32 {
         &tower.weights_hash()[..16]
     );
     // request queue in the tower's input domain
-    let queue: Vec<Tensor> = if tower.model_id() == "transformer" {
+    let queue: Vec<Tensor> = if tower.model_id() == "transformer" && session_capacity > 0 {
+        // decode-stream queue: request i is a growing prefix of stream
+        // i / context — the incremental pattern the session store serves
+        // with one O(T) step per extension instead of an O(T²) recompute
+        let context = tower.d_in();
+        (0..n)
+            .map(|i| {
+                let (k, tt) = (i / context, i % context + 1);
+                let ids: Vec<f32> =
+                    (0..tt).map(|t| ((k * 31 + t * 7 + 3) % 28) as f32).collect();
+                Tensor::from_vec(&[tt], ids).expect("request")
+            })
+            .collect()
+    } else if tower.model_id() == "transformer" {
         let context = tower.d_in();
         (0..n)
             .map(|i| {
@@ -311,6 +333,12 @@ fn cmd_serve(args: &Args) -> i32 {
         println!(
             "cache capacity={} hits={} misses={} evictions={} held={}",
             cs.capacity, cs.hits, cs.misses, cs.evictions, cs.len
+        );
+    }
+    if let Some(ss) = sched.session_stats() {
+        println!(
+            "sessions capacity={} hits={} misses={} evictions={} held={}",
+            ss.capacity, ss.hits, ss.misses, ss.evictions, ss.len
         );
     }
     let replay_ok = if do_replay {

@@ -10,10 +10,67 @@
 
 use super::Module;
 use crate::autograd::{Tape, Var};
-use crate::nn::Linear;
+use crate::nn::{Linear, PackedLinear};
 use crate::rnum::{rexp, rrsqrt};
 use crate::tensor::{max_wins, Tensor, WorkerPool};
 use crate::{Error, Result};
+
+/// One attention query row — the per-(head, position) body shared
+/// verbatim by the full forward ([`attention_forward`]) and the
+/// incremental decode step ([`attention_step_forward`]), so the two
+/// paths cannot drift apart bit-wise.
+///
+/// `kbase`/`vbase` address key/value row `j` at `j·row_stride ..
+/// j·row_stride + Dh` — the full forward passes its contiguous
+/// (T, Dh) head block (`row_stride = Dh`), the KV cache its time-major
+/// (T, H, Dh) buffer offset to one head (`row_stride = H·Dh`). Strides
+/// are layout; the value sequence each reduction consumes is identical.
+///
+/// `row` (length = the number of attended positions) receives the final
+/// probabilities; `out_row` (length Dh) the attention output. Sequence:
+/// unfused `q·k` scores scaled by `scale`, running max under the
+/// canonical [`max_wins`] rule seeded `NEG_INFINITY`, `rexp` shift with
+/// a **sequential** denominator sum, divide, then the sequential-j
+/// `P·V` reduction per output element.
+fn attention_row(
+    q_row: &[f32],
+    kbase: &[f32],
+    vbase: &[f32],
+    row_stride: usize,
+    scale: f32,
+    row: &mut [f32],
+    out_row: &mut [f32],
+) {
+    let dh = q_row.len();
+    let mut m = f32::NEG_INFINITY;
+    for (j, r) in row.iter_mut().enumerate() {
+        let krow = &kbase[j * row_stride..j * row_stride + dh];
+        let mut acc = 0.0f32;
+        for d in 0..dh {
+            acc += q_row[d] * krow[d];
+        }
+        let s = acc * scale;
+        *r = s;
+        if max_wins(s, m) {
+            m = s;
+        }
+    }
+    let mut denom = 0.0f32;
+    for r in row.iter_mut() {
+        *r = rexp(*r - m);
+        denom += *r;
+    }
+    for r in row.iter_mut() {
+        *r = *r / denom;
+    }
+    for (d, o) in out_row.iter_mut().enumerate() {
+        let mut acc = 0.0f32;
+        for (j, r) in row.iter().enumerate() {
+            acc += *r * vbase[j * row_stride + d];
+        }
+        *o = acc;
+    }
+}
 
 /// The attention forward spec on (BH, T, Dh) data, shared verbatim by
 /// the tape op ([`attention_core`], which also needs the probabilities
@@ -55,41 +112,120 @@ pub fn attention_forward(
         for i in 0..tt {
             let jmax = if causal { i + 1 } else { tt };
             let mut row = vec![0.0f32; jmax];
-            let mut m = f32::NEG_INFINITY;
-            for (j, r) in row.iter_mut().enumerate() {
-                let mut acc = 0.0f32;
-                for d in 0..dh {
-                    acc += qv.data()[(b * tt + i) * dh + d] * kv.data()[(b * tt + j) * dh + d];
-                }
-                let s = acc * scale;
-                *r = s;
-                if max_wins(s, m) {
-                    m = s;
-                }
-            }
-            let mut denom = 0.0f32;
-            for r in row.iter_mut() {
-                *r = rexp(*r - m);
-                denom += *r;
-            }
-            for r in row.iter_mut() {
-                *r = *r / denom;
-            }
+            let base = b * tt * dh;
+            attention_row(
+                &qv.data()[(b * tt + i) * dh..(b * tt + i + 1) * dh],
+                &kv.data()[base..],
+                &vv.data()[base..],
+                dh,
+                scale,
+                &mut row,
+                &mut out.data_mut()[(b * tt + i) * dh..(b * tt + i + 1) * dh],
+            );
             if let Some(p) = probs.as_mut() {
                 for (j, r) in row.iter().enumerate() {
                     p.data_mut()[(b * tt + i) * tt + j] = *r;
                 }
             }
-            for d in 0..dh {
-                let mut acc = 0.0f32;
-                for j in 0..jmax {
-                    acc += row[j] * vv.data()[(b * tt + j) * dh + d];
-                }
-                out.data_mut()[(b * tt + i) * dh + d] = acc;
-            }
         }
     }
     Ok((probs, out))
+}
+
+/// Per-layer key/value cache for incremental (one-token-at-a-time)
+/// decoding, stored **time-major**: step `j`, head `h` lives at
+/// `(j·H + h)·Dh`. Appending a step is a contiguous copy; layout is
+/// bit-irrelevant (the per-row reductions consume the same value
+/// sequence the full forward's head-major blocks hold).
+#[derive(Clone)]
+pub struct KvState {
+    k: Vec<f32>,
+    v: Vec<f32>,
+    heads: usize,
+    dh: usize,
+}
+
+impl KvState {
+    /// Empty cache for `heads` heads of width `dh`.
+    pub fn new(heads: usize, dh: usize) -> Self {
+        KvState { k: Vec::new(), v: Vec::new(), heads, dh }
+    }
+
+    /// Head count.
+    pub fn heads(&self) -> usize {
+        self.heads
+    }
+
+    /// Per-head width.
+    pub fn head_dim(&self) -> usize {
+        self.dh
+    }
+
+    /// Number of cached positions.
+    pub fn steps(&self) -> usize {
+        match self.heads * self.dh {
+            0 => 0,
+            w => self.k.len() / w,
+        }
+    }
+
+    /// Append one position's keys and values, each `(H, Dh)` flattened
+    /// head-major (= one contiguous `D`-row of the projected sequence).
+    pub fn push_step(&mut self, k_step: &[f32], v_step: &[f32]) -> Result<()> {
+        let w = self.heads * self.dh;
+        if k_step.len() != w || v_step.len() != w {
+            return Err(Error::shape(format!(
+                "KvState::push_step: want two (H·Dh,) = ({w},) rows, got {} and {}",
+                k_step.len(),
+                v_step.len()
+            )));
+        }
+        self.k.extend_from_slice(k_step);
+        self.v.extend_from_slice(v_step);
+        Ok(())
+    }
+}
+
+/// Incremental attention: score ONE new query row `(H, Dh)` against all
+/// cached key/value rows — which must already include the new
+/// position's own K/V ([`KvState::push_step`] first), making the result
+/// causal by construction (the query is the last row, so "attend to
+/// everything cached" *is* the causal mask).
+///
+/// Each (head, row) runs the identical [`attention_row`] body the full
+/// [`attention_forward`] runs for its last position, over the identical
+/// value sequence — so incremental bits equal the full forward's
+/// last-row bits by construction (asserted in tests and
+/// `tests/serve_sessions.rs`).
+pub fn attention_step_forward(q: &Tensor, kv: &KvState) -> Result<Tensor> {
+    let d = q.dims();
+    if d.len() != 2 || d[0] != kv.heads || d[1] != kv.dh {
+        return Err(Error::shape(format!(
+            "attention_step_forward: want ({}, {}) query, got {d:?}",
+            kv.heads, kv.dh
+        )));
+    }
+    let tt = kv.steps();
+    if tt == 0 {
+        return Err(Error::shape("attention_step_forward: empty KV cache"));
+    }
+    let (h, dh) = (kv.heads, kv.dh);
+    let scale = rrsqrt(dh as f32);
+    let mut out = Tensor::zeros(&[h, dh]);
+    let mut row = vec![0.0f32; tt];
+    for hh in 0..h {
+        // every slot of `row` is overwritten per head, so reuse is safe
+        attention_row(
+            &q.data()[hh * dh..(hh + 1) * dh],
+            &kv.k[hh * dh..],
+            &kv.v[hh * dh..],
+            h * dh,
+            scale,
+            &mut row,
+            &mut out.data_mut()[hh * dh..(hh + 1) * dh],
+        );
+    }
+    Ok(out)
 }
 
 /// Fused causal attention core on (BH, T, Dh) tensors.
@@ -226,6 +362,34 @@ impl MultiheadAttention {
     /// calls. No tape node is allocated; bits match
     /// [`Self::forward_seq`] exactly (asserted in tests).
     pub fn forward_seq_infer_in(&self, pool: &WorkerPool, x: &Tensor) -> Result<Tensor> {
+        self.forward_seq_packed_in(pool, x, None, None)
+    }
+
+    /// Freeze both projections into microkernel panels (layout-only;
+    /// see [`PackedLinear`]).
+    pub fn pack_in(&self, pool: &WorkerPool) -> Result<PackedAttention> {
+        Ok(PackedAttention {
+            in_proj: self.in_proj.pack_in(pool)?,
+            out_proj: self.out_proj.pack_in(pool)?,
+        })
+    }
+
+    /// [`Self::forward_seq_infer_in`] parameterized over the GEMM route
+    /// and an optional KV capture — **one** orchestration implementation
+    /// so the packed, unpacked, and cache-filling paths cannot drift.
+    ///
+    /// `packed`, when given, must be [`Self::pack_in`]'s output for this
+    /// module; it changes only the GEMM applier (bit-neutral). `kv_out`,
+    /// when given, must be empty; it receives every position's projected
+    /// K/V rows — a pure layout copy of values this forward computes
+    /// anyway, so prefill capture costs O(T·D) copies, not a recompute.
+    pub fn forward_seq_packed_in(
+        &self,
+        pool: &WorkerPool,
+        x: &Tensor,
+        packed: Option<&PackedAttention>,
+        kv_out: Option<&mut KvState>,
+    ) -> Result<Tensor> {
         let d = x.dims();
         if d.len() != 2 {
             return Err(Error::shape("MultiheadAttention: want (T, D)"));
@@ -233,7 +397,10 @@ impl MultiheadAttention {
         let (tt, dim) = (d[0], d[1]);
         let h = self.num_heads;
         let dh = dim / h;
-        let qkv = self.in_proj.forward_infer_in(pool, x)?; // (T, 3D)
+        let qkv = match packed {
+            Some(p) => p.in_proj.forward_infer_in(pool, x)?,
+            None => self.in_proj.forward_infer_in(pool, x)?,
+        }; // (T, 3D)
         // layout-only head split: q/k/v[h', t, d'] = qkv[t, c·D + h'·Dh + d']
         let mut q = Tensor::zeros(&[h, tt, dh]);
         let mut k = Tensor::zeros(&[h, tt, dh]);
@@ -247,6 +414,21 @@ impl MultiheadAttention {
                 }
             }
         }
+        if let Some(kvs) = kv_out {
+            if kvs.steps() != 0 || kvs.heads() != h || kvs.head_dim() != dh {
+                return Err(Error::shape(
+                    "MultiheadAttention: kv_out must be an empty cache of matching shape",
+                ));
+            }
+            // prefill capture: each step's (H, Dh) K/V rows are exactly
+            // one contiguous D-row of the projected sequence (head-major
+            // in both layouts) — copied straight out of qkv
+            for t in 0..tt {
+                let kd = &qkv.data()[t * 3 * dim + dim..t * 3 * dim + 2 * dim];
+                let vd = &qkv.data()[t * 3 * dim + 2 * dim..t * 3 * dim + 3 * dim];
+                kvs.push_step(kd, vd)?;
+            }
+        }
         let (_, o) = attention_forward(&q, &k, &v, self.causal, false)?; // (H,T,Dh)
         // layout-only head merge: y[t, h'·Dh + d'] = o[h', t, d']
         let mut y = Tensor::zeros(&[tt, dim]);
@@ -256,8 +438,78 @@ impl MultiheadAttention {
                     .copy_from_slice(&o.data()[(hh * tt + t) * dh..(hh * tt + t + 1) * dh]);
             }
         }
-        self.out_proj.forward_infer_in(pool, &y)
+        match packed {
+            Some(p) => p.out_proj.forward_infer_in(pool, &y),
+            None => self.out_proj.forward_infer_in(pool, &y),
+        }
     }
+
+    /// Incremental decode: one new (1, D) position against the cached
+    /// K/V rows. Appends this position's K/V to `kv`, then runs
+    /// [`attention_step_forward`]. Bit-identical to the last row of
+    /// [`Self::forward_seq_infer_in`] over the full prefix (the per-row
+    /// graphs are position-independent; asserted in tests).
+    pub fn forward_step_infer_in(
+        &self,
+        pool: &WorkerPool,
+        x: &Tensor,
+        kv: &mut KvState,
+    ) -> Result<Tensor> {
+        self.forward_step_packed_in(pool, x, kv, None)
+    }
+
+    /// [`Self::forward_step_infer_in`] parameterized over the GEMM
+    /// route (same single-implementation rule as
+    /// [`Self::forward_seq_packed_in`]).
+    pub fn forward_step_packed_in(
+        &self,
+        pool: &WorkerPool,
+        x: &Tensor,
+        kv: &mut KvState,
+        packed: Option<&PackedAttention>,
+    ) -> Result<Tensor> {
+        if !self.causal {
+            // a step only equals the full forward's last row when "attend
+            // to everything cached" IS the mask — i.e. causal attention
+            return Err(Error::shape("MultiheadAttention step: causal attention only"));
+        }
+        let d = x.dims();
+        if d.len() != 2 || d[0] != 1 {
+            return Err(Error::shape("MultiheadAttention step: want (1, D)"));
+        }
+        let dim = d[1];
+        let h = self.num_heads;
+        let dh = dim / h;
+        if kv.heads() != h || kv.head_dim() != dh {
+            return Err(Error::shape("MultiheadAttention step: KV cache shape mismatch"));
+        }
+        let qkv = match packed {
+            Some(p) => p.in_proj.forward_infer_in(pool, x)?,
+            None => self.in_proj.forward_infer_in(pool, x)?,
+        }; // (1, 3D)
+        // for a single position the head-major (H, Dh) flattening IS the
+        // contiguous D-slice — the split is the identity copy
+        let qd = qkv.data()[..dim].to_vec();
+        kv.push_step(&qkv.data()[dim..2 * dim], &qkv.data()[2 * dim..3 * dim])?;
+        let q = Tensor::from_vec(&[h, dh], qd)?;
+        let o = attention_step_forward(&q, kv)?; // (H, Dh)
+        // head merge for one position is likewise the identity layout
+        let y = o.reshape(&[1, dim])?;
+        match packed {
+            Some(p) => p.out_proj.forward_infer_in(pool, &y),
+            None => self.out_proj.forward_infer_in(pool, &y),
+        }
+    }
+}
+
+/// A [`MultiheadAttention`] with both projections frozen into
+/// microkernel panels ([`PackedLinear`]); built by
+/// [`MultiheadAttention::pack_in`].
+pub struct PackedAttention {
+    /// Packed QKV projection.
+    pub in_proj: PackedLinear,
+    /// Packed output projection.
+    pub out_proj: PackedLinear,
 }
 
 impl Module for MultiheadAttention {
@@ -374,6 +626,103 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn packed_seq_forward_matches_unpacked_bitwise() {
+        use crate::tensor::WorkerPool;
+        for causal in [true, false] {
+            let mha = MultiheadAttention::new(12, 3, causal, 31).unwrap();
+            let x = lcg(&[6, 12], 41);
+            let pool = WorkerPool::new(2);
+            let want = mha.forward_seq_infer_in(&pool, &x).unwrap();
+            let packed = mha.pack_in(&pool).unwrap();
+            let got = mha.forward_seq_packed_in(&pool, &x, Some(&packed), None).unwrap();
+            assert!(got.bit_eq(&want), "causal={causal}: packed attention changed bits");
+        }
+    }
+
+    #[test]
+    fn step_decode_matches_full_forward_last_row_bitwise() {
+        use crate::tensor::WorkerPool;
+        let mha = MultiheadAttention::new(12, 3, true, 57).unwrap();
+        let x = lcg(&[5, 12], 71);
+        let pool = WorkerPool::new(2);
+        let packed = mha.pack_in(&pool).unwrap();
+        for use_packed in [false, true] {
+            let p = use_packed.then_some(&packed);
+            let mut kv = KvState::new(3, 4);
+            for t in 0..5 {
+                let row = Tensor::from_vec(&[1, 12], x.data()[t * 12..(t + 1) * 12].to_vec())
+                    .unwrap();
+                let step = mha.forward_step_packed_in(&pool, &row, &mut kv, p).unwrap();
+                assert_eq!(kv.steps(), t + 1);
+                // full forward over the prefix [0..=t]: its last row must
+                // equal the incremental step exactly
+                let prefix =
+                    Tensor::from_vec(&[t + 1, 12], x.data()[..(t + 1) * 12].to_vec()).unwrap();
+                let full = mha.forward_seq_infer_in(&pool, &prefix).unwrap();
+                let last =
+                    Tensor::from_vec(&[1, 12], full.data()[t * 12..(t + 1) * 12].to_vec())
+                        .unwrap();
+                assert!(
+                    step.bit_eq(&last),
+                    "packed={use_packed} t={t}: incremental decode changed bits"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn seq_forward_kv_capture_matches_step_built_cache() {
+        use crate::tensor::WorkerPool;
+        // prefill capture and step-built caches must hold identical bits
+        let mha = MultiheadAttention::new(8, 2, true, 91).unwrap();
+        let x = lcg(&[4, 8], 17);
+        let pool = WorkerPool::new(1);
+        let mut captured = KvState::new(2, 4);
+        let _ = mha.forward_seq_packed_in(&pool, &x, None, Some(&mut captured)).unwrap();
+        let mut stepped = KvState::new(2, 4);
+        for t in 0..4 {
+            let row = Tensor::from_vec(&[1, 8], x.data()[t * 8..(t + 1) * 8].to_vec()).unwrap();
+            let _ = mha.forward_step_infer_in(&pool, &row, &mut stepped).unwrap();
+        }
+        assert_eq!(captured.steps(), 4);
+        assert_eq!(stepped.steps(), 4);
+        assert_eq!(
+            captured.k.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            stepped.k.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+        assert_eq!(
+            captured.v.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            stepped.v.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn step_error_paths_never_panic() {
+        use crate::tensor::WorkerPool;
+        let pool = WorkerPool::new(1);
+        // non-causal modules refuse to step
+        let bidir = MultiheadAttention::new(8, 2, false, 3).unwrap();
+        let mut kv = KvState::new(2, 4);
+        let row = Tensor::zeros(&[1, 8]);
+        assert!(bidir.forward_step_infer_in(&pool, &row, &mut kv).is_err());
+        // shape mismatches are errors
+        let mha = MultiheadAttention::new(8, 2, true, 3).unwrap();
+        let mut wrong = KvState::new(4, 2);
+        assert!(mha.forward_step_infer_in(&pool, &row, &mut wrong).is_err());
+        assert!(mha
+            .forward_step_infer_in(&pool, &Tensor::zeros(&[2, 8]), &mut kv)
+            .is_err());
+        // a non-empty kv_out is rejected at prefill
+        let x = lcg(&[3, 8], 5);
+        let mut used = KvState::new(2, 4);
+        let _ = mha.forward_seq_packed_in(&pool, &x, None, Some(&mut used)).unwrap();
+        assert!(mha.forward_seq_packed_in(&pool, &x, None, Some(&mut used)).is_err());
+        // empty cache refuses to score
+        let empty = KvState::new(2, 4);
+        assert!(attention_step_forward(&Tensor::zeros(&[2, 4]), &empty).is_err());
     }
 
     #[test]

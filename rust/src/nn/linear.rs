@@ -7,8 +7,9 @@ use super::Module;
 use crate::autograd::{Tape, Var};
 use crate::rng::{derive_seed, kaiming_uniform, uniform_tensor};
 use crate::rnum::rrsqrt;
+use crate::tensor::microkernel::{gemm_packed_into, pack_b_panels, packed_b_len};
 use crate::tensor::{matmul_in, Tensor, WorkerPool};
-use crate::Result;
+use crate::{Error, Result};
 
 /// Fully-connected layer.
 pub struct Linear {
@@ -36,11 +37,77 @@ impl Linear {
     /// The transpose is re-materialised per call because `weight` is
     /// mutable during training (`params_mut`) and this layer cannot know
     /// when it changes. Serving towers whose weights are frozen at
-    /// construction could pack W once like `DeterministicServer` does —
-    /// a ROADMAP follow-on, bit-neutral when it lands (layout only).
+    /// construction pack W once instead via [`Linear::pack_in`] —
+    /// layout-only, bit-identical (asserted in tests).
     pub fn forward_infer_in(&self, pool: &WorkerPool, x: &Tensor) -> Result<Tensor> {
         let wt = self.weight.transpose2d()?; // (in, out)
         matmul_in(pool, x, &wt)?.add_t(&self.bias)
+    }
+
+    /// Freeze this layer's weights into microkernel panels (the
+    /// `DeterministicServer` trick): transpose **once**, pack **once**,
+    /// and serve every subsequent request with zero per-call transpose
+    /// or packing allocations. The snapshot is taken now — training this
+    /// layer afterwards does not update the pack.
+    pub fn pack_in(&self, pool: &WorkerPool) -> Result<PackedLinear> {
+        let wt = self.weight.transpose2d()?; // (in, out), materialised once
+        let (k, n) = (wt.dims()[0], wt.dims()[1]);
+        let mut packed = vec![0.0f32; packed_b_len(k, n)];
+        pack_b_panels(pool, wt.data(), k, n, &mut packed);
+        Ok(PackedLinear { packed, bias: self.bias.clone(), d_in: k, d_out: n })
+    }
+}
+
+/// A [`Linear`] frozen for serving: Wᵀ pre-packed into [`NR`-wide
+/// microkernel panels](crate::tensor::microkernel) at construction.
+///
+/// Bit-neutrality: packing is layout-only, the packed GEMM keeps every
+/// output element's sequential-k mul/add graph (`packed == blocked ==
+/// dotform`, asserted in `tensor/microkernel.rs`), and the bias is added
+/// per column with exactly one `+` per element after the reduction —
+/// the identical graph `matmul_in(x, Wᵀ) + b` builds. So
+/// [`PackedLinear::forward_infer_in`] ==
+/// [`Linear::forward_infer_in`] bit for bit (asserted in tests), with
+/// zero per-call transpose/pack allocations.
+pub struct PackedLinear {
+    packed: Vec<f32>,
+    bias: Tensor,
+    d_in: usize,
+    d_out: usize,
+}
+
+impl PackedLinear {
+    /// Input features.
+    pub fn d_in(&self) -> usize {
+        self.d_in
+    }
+
+    /// Output features.
+    pub fn d_out(&self) -> usize {
+        self.d_out
+    }
+
+    /// `x Wᵀ + b` on (m, d_in) input through the pre-packed panels.
+    pub fn forward_infer_in(&self, pool: &WorkerPool, x: &Tensor) -> Result<Tensor> {
+        let d = x.dims();
+        if d.len() != 2 || d[1] != self.d_in {
+            return Err(Error::shape(format!(
+                "PackedLinear: want (m, {}), got {d:?}",
+                self.d_in
+            )));
+        }
+        let (m, k, n) = (d[0], self.d_in, self.d_out);
+        let bias = self.bias.data();
+        Ok(Tensor::filled_by(&[m, n], |buf| {
+            gemm_packed_into(pool, x.data(), m, k, &self.packed, n, None, false, buf);
+            // per-column bias, one add per element after the reduction —
+            // the same graph as `add_t`'s (m,n)+(n,) broadcast
+            for row in buf.chunks_exact_mut(n) {
+                for (v, b) in row.iter_mut().zip(bias.iter()) {
+                    *v = *v + *b;
+                }
+            }
+        }))
     }
 }
 
@@ -110,6 +177,39 @@ mod tests {
             let got = l.forward_infer_in(&pool, &x).unwrap();
             assert!(got.bit_eq(&want), "lanes={lanes}: off-tape forward changed bits");
         }
+    }
+
+    #[test]
+    fn packed_forward_matches_unpacked_bitwise() {
+        // shapes straddling the NR=16 panel boundary and m=1 (the KV
+        // decode step shape) — the packed path must be indistinguishable
+        for (d_in, d_out) in [(6usize, 5usize), (16, 16), (9, 33), (32, 17)] {
+            let l = Linear::new(d_in, d_out, 77);
+            for lanes in [1usize, 3] {
+                let pool = WorkerPool::new(lanes);
+                let p = l.pack_in(&pool).unwrap();
+                assert_eq!((p.d_in(), p.d_out()), (d_in, d_out));
+                for m in [1usize, 2, 9] {
+                    let x = Tensor::from_vec(
+                        &[m, d_in],
+                        (0..m * d_in).map(|i| (i as f32 * 0.23).sin()).collect(),
+                    )
+                    .unwrap();
+                    let want = l.forward_infer_in(&pool, &x).unwrap();
+                    let got = p.forward_infer_in(&pool, &x).unwrap();
+                    assert!(
+                        got.bit_eq(&want),
+                        "d_in={d_in} d_out={d_out} m={m} lanes={lanes}: packed changed bits"
+                    );
+                }
+            }
+        }
+        // serving-facing shape errors, never panics
+        let l = Linear::new(4, 3, 1);
+        let pool = WorkerPool::new(1);
+        let p = l.pack_in(&pool).unwrap();
+        assert!(p.forward_infer_in(&pool, &Tensor::zeros(&[2, 5])).is_err());
+        assert!(p.forward_infer_in(&pool, &Tensor::zeros(&[4])).is_err());
     }
 
     #[test]

@@ -1,7 +1,7 @@
 //! A simple MLP (`Linear → activation → … → Linear`) — the quickstart
 //! model and the E1/E2 training workload.
 
-use super::{Linear, Module};
+use super::{Linear, Module, PackedLinear};
 use crate::autograd::{Tape, Var};
 use crate::rng::derive_seed;
 use crate::rnum::{rgelu_tanh, rtanh};
@@ -62,9 +62,37 @@ impl Mlp {
     /// so the pass is batch- and pool-size-invariant, and bits match the
     /// tape forward exactly (asserted in tests).
     pub fn forward_infer_in(&self, pool: &WorkerPool, x: &Tensor) -> Result<Tensor> {
+        self.forward_infer_packed_in(pool, x, None)
+    }
+
+    /// Freeze every layer's weights into microkernel panels
+    /// (layout-only; see [`PackedLinear`]).
+    pub fn pack_in(&self, pool: &WorkerPool) -> Result<PackedMlp> {
+        Ok(PackedMlp {
+            layers: self.layers.iter().map(|l| l.pack_in(pool)).collect::<Result<Vec<_>>>()?,
+        })
+    }
+
+    /// [`Self::forward_infer_in`] parameterized over the GEMM route —
+    /// one orchestration implementation so the packed and unpacked
+    /// paths cannot drift (packing is bit-neutral; asserted in tests).
+    pub fn forward_infer_packed_in(
+        &self,
+        pool: &WorkerPool,
+        x: &Tensor,
+        packed: Option<&PackedMlp>,
+    ) -> Result<Tensor> {
+        if let Some(p) = packed {
+            if p.layers.len() != self.layers.len() {
+                return Err(Error::shape("mlp: packed layer count mismatch"));
+            }
+        }
         let mut h = x.clone();
         for (i, l) in self.layers.iter().enumerate() {
-            h = l.forward_infer_in(pool, &h)?;
+            h = match packed {
+                Some(p) => p.layers[i].forward_infer_in(pool, &h)?,
+                None => l.forward_infer_in(pool, &h)?,
+            };
             if i + 1 < self.layers.len() {
                 // same elementwise graphs as Tape::{relu,gelu,tanh}
                 h = match self.act {
@@ -76,6 +104,13 @@ impl Mlp {
         }
         Ok(h)
     }
+}
+
+/// An [`Mlp`] with every layer frozen into microkernel panels; built by
+/// [`Mlp::pack_in`].
+pub struct PackedMlp {
+    /// Packed layers, in order.
+    pub layers: Vec<PackedLinear>,
 }
 
 impl Module for Mlp {
@@ -139,6 +174,22 @@ mod tests {
                     got.bit_eq(&want),
                     "act={act:?} lanes={lanes}: off-tape MLP changed bits"
                 );
+            }
+        }
+    }
+
+    #[test]
+    fn packed_forward_matches_unpacked_bitwise() {
+        let x = Tensor::from_vec(&[3, 8], (0..24).map(|i| (i as f32 * 0.29).sin()).collect())
+            .unwrap();
+        for act in [Act::Relu, Act::Gelu, Act::Tanh] {
+            let m = Mlp::new(&[8, 16, 16, 4], act, 11);
+            for lanes in [1usize, 4] {
+                let pool = WorkerPool::new(lanes);
+                let packed = m.pack_in(&pool).unwrap();
+                let want = m.forward_infer_in(&pool, &x).unwrap();
+                let got = m.forward_infer_packed_in(&pool, &x, Some(&packed)).unwrap();
+                assert!(got.bit_eq(&want), "act={act:?} lanes={lanes}: packed MLP changed bits");
             }
         }
     }

@@ -21,15 +21,20 @@ pub mod mlp;
 pub mod softmax;
 pub mod transformer;
 
-pub use attention::{attention_forward, MultiheadAttention};
+pub use attention::{
+    attention_forward, attention_step_forward, KvState, MultiheadAttention, PackedAttention,
+};
 pub use batchnorm::{batch_norm, batch_norm_affine_folded, batch_norm_folded, BatchNorm2d};
 pub use conv2d::Conv2d;
 pub use embedding::Embedding;
 pub use layernorm::{layer_norm_forward, LayerNorm};
-pub use linear::Linear;
-pub use mlp::{Act, Mlp};
+pub use linear::{Linear, PackedLinear};
+pub use mlp::{Act, Mlp, PackedMlp};
 pub use softmax::{log_softmax_rows, softmax_rows};
-pub use transformer::{CharTransformer, TransformerBlock, TransformerConfig};
+pub use transformer::{
+    CharTransformer, PackedBlock, PackedTransformer, TransformerBlock, TransformerConfig,
+    TransformerKv,
+};
 
 use crate::autograd::{Tape, Var};
 use crate::tensor::Tensor;

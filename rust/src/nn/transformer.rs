@@ -2,7 +2,10 @@
 //! workload (experiment E8). Pre-norm blocks, causal attention, GELU MLP,
 //! learned positional embeddings; every sub-op is a RepDL fixed graph.
 
-use super::{Embedding, LayerNorm, Linear, Module, MultiheadAttention};
+use super::{
+    Embedding, KvState, LayerNorm, Linear, Module, MultiheadAttention, PackedAttention,
+    PackedLinear,
+};
 use crate::autograd::{Tape, Var};
 use crate::rng::derive_seed;
 use crate::rnum::rgelu_tanh;
@@ -49,6 +52,12 @@ pub struct TransformerBlock {
 impl TransformerBlock {
     /// New block.
     pub fn new(dim: usize, heads: usize, mlp_ratio: usize, seed: u64) -> Result<Self> {
+        if mlp_ratio == 0 {
+            // a zero-width fc1 is as degenerate as dim/heads = 0 — reject
+            // at construction like the rest (serving-facing: error, not
+            // a downstream GEMM panic)
+            return Err(Error::shape("TransformerBlock: zero mlp_ratio"));
+        }
         Ok(TransformerBlock {
             ln1: LayerNorm::new(dim),
             attn: MultiheadAttention::new(dim, heads, true, derive_seed(seed, 0))?,
@@ -68,15 +77,93 @@ impl TransformerBlock {
     /// [`Linear::forward_infer_in`]) with no tape node allocation.
     /// Bit-identical to the tape forward (asserted in tests).
     pub fn forward_infer_in(&self, pool: &WorkerPool, x: &Tensor) -> Result<Tensor> {
+        self.forward_infer_packed_in(pool, x, None, None)
+    }
+
+    /// Freeze the block's three GEMM layers into microkernel panels
+    /// (layout-only; see [`PackedLinear`]).
+    pub fn pack_in(&self, pool: &WorkerPool) -> Result<PackedBlock> {
+        Ok(PackedBlock {
+            attn: self.attn.pack_in(pool)?,
+            fc1: self.fc1.pack_in(pool)?,
+            fc2: self.fc2.pack_in(pool)?,
+        })
+    }
+
+    /// [`Self::forward_infer_in`] parameterized over the GEMM route and
+    /// an optional per-layer KV capture — one orchestration
+    /// implementation, so packed/unpacked/capturing paths cannot drift.
+    pub fn forward_infer_packed_in(
+        &self,
+        pool: &WorkerPool,
+        x: &Tensor,
+        packed: Option<&PackedBlock>,
+        kv_out: Option<&mut KvState>,
+    ) -> Result<Tensor> {
         let h = self.ln1.forward_infer(x)?;
-        let h = self.attn.forward_seq_infer_in(pool, &h)?;
+        let h = self.attn.forward_seq_packed_in(pool, &h, packed.map(|p| &p.attn), kv_out)?;
         let x = x.add_t(&h)?; // residual
         let h = self.ln2.forward_infer(&x)?;
-        let h = self.fc1.forward_infer_in(pool, &h)?;
+        let h = match packed {
+            Some(p) => p.fc1.forward_infer_in(pool, &h)?,
+            None => self.fc1.forward_infer_in(pool, &h)?,
+        };
         let h = h.map(rgelu_tanh); // same elementwise graph as Tape::gelu
-        let h = self.fc2.forward_infer_in(pool, &h)?;
+        let h = match packed {
+            Some(p) => p.fc2.forward_infer_in(pool, &h)?,
+            None => self.fc2.forward_infer_in(pool, &h)?,
+        };
         x.add_t(&h) // residual
     }
+
+    /// Incremental decode through the block: one (1, D) position against
+    /// the layer's KV cache. Every sub-op (LN row, GEMM row, gelu map,
+    /// residual add, attention row) is row-independent with an identical
+    /// per-row graph, so this equals the last row of
+    /// [`Self::forward_infer_in`] over the full prefix, bit for bit.
+    pub fn forward_step_infer_in(
+        &self,
+        pool: &WorkerPool,
+        x: &Tensor,
+        kv: &mut KvState,
+    ) -> Result<Tensor> {
+        self.forward_step_packed_in(pool, x, kv, None)
+    }
+
+    /// [`Self::forward_step_infer_in`] parameterized over the GEMM route.
+    pub fn forward_step_packed_in(
+        &self,
+        pool: &WorkerPool,
+        x: &Tensor,
+        kv: &mut KvState,
+        packed: Option<&PackedBlock>,
+    ) -> Result<Tensor> {
+        let h = self.ln1.forward_infer(x)?;
+        let h = self.attn.forward_step_packed_in(pool, &h, kv, packed.map(|p| &p.attn))?;
+        let x = x.add_t(&h)?; // residual
+        let h = self.ln2.forward_infer(&x)?;
+        let h = match packed {
+            Some(p) => p.fc1.forward_infer_in(pool, &h)?,
+            None => self.fc1.forward_infer_in(pool, &h)?,
+        };
+        let h = h.map(rgelu_tanh);
+        let h = match packed {
+            Some(p) => p.fc2.forward_infer_in(pool, &h)?,
+            None => self.fc2.forward_infer_in(pool, &h)?,
+        };
+        x.add_t(&h) // residual
+    }
+}
+
+/// A [`TransformerBlock`] with all GEMM layers frozen into microkernel
+/// panels; built by [`TransformerBlock::pack_in`].
+pub struct PackedBlock {
+    /// Packed attention projections.
+    pub attn: PackedAttention,
+    /// Packed MLP up-projection.
+    pub fc1: PackedLinear,
+    /// Packed MLP down-projection.
+    pub fc2: PackedLinear,
 }
 
 impl Module for TransformerBlock {
@@ -178,6 +265,43 @@ impl CharTransformer {
     /// Serving-facing: out-of-range ids and bad lengths are errors,
     /// never panics.
     pub fn forward_logits_infer_in(&self, pool: &WorkerPool, ids: &[usize]) -> Result<Tensor> {
+        self.forward_logits_packed_in(pool, ids, None, None)
+    }
+
+    /// Fresh (empty) per-layer KV caches for incremental decoding.
+    pub fn begin_kv(&self) -> TransformerKv {
+        let dh = self.cfg.dim / self.cfg.heads.max(1);
+        TransformerKv {
+            layers: self.blocks.iter().map(|_| KvState::new(self.cfg.heads, dh)).collect(),
+            steps: 0,
+        }
+    }
+
+    /// Freeze every GEMM layer (all blocks + LM head) into microkernel
+    /// panels (layout-only; see [`PackedLinear`]).
+    pub fn pack_in(&self, pool: &WorkerPool) -> Result<PackedTransformer> {
+        Ok(PackedTransformer {
+            blocks: self.blocks.iter().map(|b| b.pack_in(pool)).collect::<Result<Vec<_>>>()?,
+            head: self.head.pack_in(pool)?,
+        })
+    }
+
+    /// [`Self::forward_logits_infer_in`] parameterized over the GEMM
+    /// route and an optional KV prefill capture — one orchestration
+    /// implementation for the packed/unpacked/capturing paths.
+    ///
+    /// `kv_out`, when given, must be fresh ([`Self::begin_kv`]); after
+    /// the call it holds every layer's K/V rows for the whole sequence,
+    /// captured as layout copies during this single O(T) forward — so a
+    /// session rebuild after eviction costs one full forward, never a
+    /// token-by-token O(T²) replay.
+    pub fn forward_logits_packed_in(
+        &self,
+        pool: &WorkerPool,
+        ids: &[usize],
+        packed: Option<&PackedTransformer>,
+        mut kv_out: Option<&mut TransformerKv>,
+    ) -> Result<Tensor> {
         let tt = ids.len();
         if tt == 0 || tt > self.cfg.context {
             return Err(Error::shape(format!(
@@ -195,6 +319,18 @@ impl CharTransformer {
                 )));
             }
         }
+        if let Some(p) = packed {
+            if p.blocks.len() != self.blocks.len() {
+                return Err(Error::shape("transformer infer: packed layer count mismatch"));
+            }
+        }
+        if let Some(kvs) = kv_out.as_deref_mut() {
+            if kvs.steps() != 0 || kvs.layers.len() != self.blocks.len() {
+                return Err(Error::shape(
+                    "transformer infer: kv_out must be a fresh begin_kv() cache",
+                ));
+            }
+        }
         // token embedding + positional rows (both layout-only lookups)
         let mut e = Tensor::zeros(&[tt, dim]);
         for (r, &i) in ids.iter().enumerate() {
@@ -204,11 +340,81 @@ impl CharTransformer {
         let mut pe = Tensor::zeros(&[tt, dim]);
         pe.data_mut().copy_from_slice(&self.pos_emb.data()[..tt * dim]);
         let mut h = e.add_t(&pe)?;
-        for b in &self.blocks {
-            h = b.forward_infer_in(pool, &h)?;
+        for (li, b) in self.blocks.iter().enumerate() {
+            let kv_l = kv_out.as_deref_mut().map(|k| &mut k.layers[li]);
+            h = b.forward_infer_packed_in(pool, &h, packed.map(|p| &p.blocks[li]), kv_l)?;
+        }
+        if let Some(kvs) = kv_out.as_deref_mut() {
+            kvs.steps = tt;
         }
         let h = self.ln_f.forward_infer(&h)?;
-        self.head.forward_infer_in(pool, &h)
+        match packed {
+            Some(p) => p.head.forward_infer_in(pool, &h),
+            None => self.head.forward_infer_in(pool, &h),
+        }
+    }
+
+    /// Incremental decode: ONE new token id against the session's KV
+    /// caches, returning the (1, vocab) logits row for that position —
+    /// O(T) work instead of the O(T²) full recompute, bit-identical to
+    /// the last row of [`Self::forward_logits_infer_in`] over the full
+    /// prefix (asserted in tests and `tests/serve_sessions.rs`).
+    pub fn forward_logits_step_infer_in(
+        &self,
+        pool: &WorkerPool,
+        id: usize,
+        kv: &mut TransformerKv,
+    ) -> Result<Tensor> {
+        self.forward_logits_step_packed_in(pool, id, kv, None)
+    }
+
+    /// [`Self::forward_logits_step_infer_in`] parameterized over the
+    /// GEMM route.
+    pub fn forward_logits_step_packed_in(
+        &self,
+        pool: &WorkerPool,
+        id: usize,
+        kv: &mut TransformerKv,
+        packed: Option<&PackedTransformer>,
+    ) -> Result<Tensor> {
+        let pos = kv.steps;
+        if pos >= self.cfg.context {
+            return Err(Error::shape(format!(
+                "transformer step: position {pos} ≥ context {}",
+                self.cfg.context
+            )));
+        }
+        if id >= self.cfg.vocab {
+            return Err(Error::shape(format!(
+                "transformer step: id {id} ≥ vocab {}",
+                self.cfg.vocab
+            )));
+        }
+        if kv.layers.len() != self.blocks.len() {
+            return Err(Error::shape("transformer step: KV layer count mismatch"));
+        }
+        if let Some(p) = packed {
+            if p.blocks.len() != self.blocks.len() {
+                return Err(Error::shape("transformer step: packed layer count mismatch"));
+            }
+        }
+        let dim = self.cfg.dim;
+        // this token's embedding row + positional row `pos`
+        let mut e = Tensor::zeros(&[1, dim]);
+        e.data_mut()
+            .copy_from_slice(&self.tok_emb.weight.data()[id * dim..(id + 1) * dim]);
+        let mut pe = Tensor::zeros(&[1, dim]);
+        pe.data_mut().copy_from_slice(&self.pos_emb.data()[pos * dim..(pos + 1) * dim]);
+        let mut h = e.add_t(&pe)?;
+        for (li, b) in self.blocks.iter().enumerate() {
+            h = b.forward_step_packed_in(pool, &h, &mut kv.layers[li], packed.map(|p| &p.blocks[li]))?;
+        }
+        kv.steps = pos + 1;
+        let h = self.ln_f.forward_infer(&h)?;
+        match packed {
+            Some(p) => p.head.forward_infer_in(pool, &h),
+            None => self.head.forward_infer_in(pool, &h),
+        }
     }
 
     /// All parameters in fixed traversal order (same order as
@@ -247,6 +453,34 @@ impl CharTransformer {
         n += self.ln_f.num_params() + self.head.num_params();
         n
     }
+}
+
+/// Per-session decoding state: one [`KvState`] per block plus the
+/// number of positions decoded so far (= the next position index).
+/// Cloneable — the serve-side session store hands out copies so a
+/// stored session is never mutated in place.
+#[derive(Clone)]
+pub struct TransformerKv {
+    /// Per-layer attention caches, in block order.
+    pub layers: Vec<KvState>,
+    steps: usize,
+}
+
+impl TransformerKv {
+    /// Number of positions decoded into this cache.
+    pub fn steps(&self) -> usize {
+        self.steps
+    }
+}
+
+/// A [`CharTransformer`] with every GEMM layer frozen into microkernel
+/// panels; built by [`CharTransformer::pack_in`]. The embeddings and
+/// LayerNorms carry no GEMM and are read from the source model.
+pub struct PackedTransformer {
+    /// Packed blocks, in block order.
+    pub blocks: Vec<PackedBlock>,
+    /// Packed LM head.
+    pub head: PackedLinear,
 }
 
 #[cfg(test)]
@@ -311,6 +545,90 @@ mod tests {
         assert!(m.forward_logits_infer_in(&pool, &[]).is_err(), "empty sequence");
         assert!(m.forward_logits_infer_in(&pool, &[0; 7]).is_err(), "over context");
         assert!(m.forward_logits_infer_in(&pool, &[12]).is_err(), "id ≥ vocab");
+    }
+
+    #[test]
+    fn zero_mlp_ratio_is_a_construction_error() {
+        // same policy as dim/heads/context/vocab = 0 (serving-facing)
+        assert!(TransformerBlock::new(8, 2, 0, 1).is_err());
+        let cfg = TransformerConfig { vocab: 12, dim: 8, heads: 2, layers: 1, context: 6, mlp_ratio: 0 };
+        assert!(CharTransformer::new(cfg, 2).is_err());
+        assert!(TransformerBlock::new(8, 2, 1, 1).is_ok());
+    }
+
+    #[test]
+    fn packed_forward_matches_unpacked_bitwise() {
+        let cfg = TransformerConfig { vocab: 12, dim: 8, heads: 2, layers: 2, context: 6, mlp_ratio: 2 };
+        let m = CharTransformer::new(cfg, 13).unwrap();
+        let ids = [1usize, 4, 2, 9, 3];
+        for lanes in [1usize, 2] {
+            let pool = crate::tensor::WorkerPool::new(lanes);
+            let packed = m.pack_in(&pool).unwrap();
+            let want = m.forward_logits_infer_in(&pool, &ids).unwrap();
+            let got = m.forward_logits_packed_in(&pool, &ids, Some(&packed), None).unwrap();
+            assert!(got.bit_eq(&want), "lanes={lanes}: packed transformer changed bits");
+        }
+    }
+
+    #[test]
+    fn step_decode_matches_full_recompute_for_every_prefix() {
+        let cfg = TransformerConfig { vocab: 12, dim: 8, heads: 2, layers: 2, context: 6, mlp_ratio: 2 };
+        let m = CharTransformer::new(cfg, 21).unwrap();
+        let ids = [1usize, 4, 2, 9, 3, 7];
+        for lanes in [1usize, 2] {
+            let pool = crate::tensor::WorkerPool::new(lanes);
+            let packed = m.pack_in(&pool).unwrap();
+            for use_packed in [false, true] {
+                let p = use_packed.then_some(&packed);
+                let mut kv = m.begin_kv();
+                for t in 0..ids.len() {
+                    let step =
+                        m.forward_logits_step_packed_in(&pool, ids[t], &mut kv, p).unwrap();
+                    assert_eq!(step.dims(), &[1, cfg.vocab]);
+                    assert_eq!(kv.steps(), t + 1);
+                    let full = m.forward_logits_infer_in(&pool, &ids[..t + 1]).unwrap();
+                    let last = &full.data()[t * cfg.vocab..(t + 1) * cfg.vocab];
+                    assert_eq!(
+                        step.data().iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                        last.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                        "packed={use_packed} lanes={lanes} t={t}: step decode changed bits"
+                    );
+                }
+                // context is full: one more step must be a typed error
+                assert!(m.forward_logits_step_packed_in(&pool, 0, &mut kv, p).is_err());
+            }
+        }
+    }
+
+    #[test]
+    fn prefill_capture_then_step_matches_full_recompute() {
+        // the session flow: full forward over a prefix capturing KV,
+        // then one incremental step — exactly what the serve tower does
+        let cfg = TransformerConfig { vocab: 12, dim: 8, heads: 2, layers: 2, context: 6, mlp_ratio: 2 };
+        let m = CharTransformer::new(cfg, 33).unwrap();
+        let ids = [5usize, 1, 11, 0, 7];
+        let pool = crate::tensor::WorkerPool::new(2);
+        for split in 1..ids.len() {
+            let mut kv = m.begin_kv();
+            let _ = m
+                .forward_logits_packed_in(&pool, &ids[..split], None, Some(&mut kv))
+                .unwrap();
+            assert_eq!(kv.steps(), split);
+            let step = m.forward_logits_step_infer_in(&pool, ids[split], &mut kv).unwrap();
+            let full = m.forward_logits_infer_in(&pool, &ids[..split + 1]).unwrap();
+            let last = &full.data()[split * cfg.vocab..(split + 1) * cfg.vocab];
+            assert_eq!(
+                step.data().iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                last.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "split={split}: prefill-capture + step changed bits"
+            );
+        }
+        // a used cache is rejected as prefill target
+        let mut kv = m.begin_kv();
+        let _ = m.forward_logits_packed_in(&pool, &ids[..2], None, Some(&mut kv)).unwrap();
+        assert!(m
+            .forward_logits_packed_in(&pool, &ids[..2], None, Some(&mut kv))
+            .is_err());
     }
 
     #[test]
