@@ -23,6 +23,15 @@ target machine class, then:
         run2/BENCH_serve.json
 
 and commit the rewritten ``BENCH_serve.json``.
+
+Arming procedure for newly added kernels (e.g. the ``journal`` off/on
+rows): the gate only compares rows whose key exists in the committed
+baseline, so a new kernel ships *inert* — CI asserts the rows exist but
+does not regression-gate them until a baseline containing them is
+committed. To arm: merge the new kernel's rows from 2–3 CI artifacts
+with this script (the ``journal`` rows' ``allocs_per_call`` is
+event-sequence-pure, so it is hard-gated the moment it lands), commit,
+and the next CI run gates them.
 """
 
 from __future__ import annotations
@@ -65,7 +74,7 @@ def merge(runs: list[list[dict]]) -> list[dict]:
     merged: dict[tuple, dict] = {}
     for entries in runs:
         for e in entries:
-            if e.get("kernel") not in ("scheduler", "cache", "kv"):
+            if e.get("kernel") not in ("scheduler", "cache", "kv", "journal"):
                 continue
             k = row_key(e)
             cur = merged.get(k)
@@ -99,7 +108,7 @@ def main() -> int:
         return 1
     entries = merge(runs)
     if not entries:
-        print("error: inputs held no scheduler/cache/kv rows")
+        print("error: inputs held no scheduler/cache/kv/journal rows")
         return 1
     BASELINE.write_text(
         json.dumps({"bench": "serve", "note": NOTE, "entries": entries}, indent=2) + "\n"

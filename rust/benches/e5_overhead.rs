@@ -398,6 +398,7 @@ fn main() {
             max_queue_depth: (depth > 0).then_some(depth),
             cache_capacity: cap,
             log: false,
+            journal: None,
         };
         let sched =
             ServeScheduler::sharded_with(Arc::clone(&server), 1, WorkerPool::shared(lanes), cfg)
@@ -504,6 +505,73 @@ fn main() {
                     .int("d_out", kcfg.vocab as u64)
                     .num("median_ns", st.median_ns)
                     .num("req_per_s", st.per_sec(kv_queue.len()))
+                    .int("allocs_per_call", allocs),
+            );
+        }
+    }
+    // durable journal: the same single-shard replay with journalling
+    // off vs on (ISSUE 7). The on cell writes every submit/flush record
+    // synchronously and drains the buffered response records at an
+    // explicit sync barrier each call — the measured delta IS the
+    // durability tax. An in-memory writer keeps the rows free of
+    // filesystem noise; the encode/frame/hash work is identical to the
+    // file path. Bits are gated first: journalling may never change
+    // responses. Single shard + single submitter so `allocs_per_call`
+    // is event-sequence-pure and can be hard-gated by CI.
+    section("E5: serve journal — off vs on");
+    {
+        use repdl::coordinator::{Journal, JournalPolicy, VecWriter};
+        use std::sync::Mutex;
+        let want = {
+            let plain =
+                ServeScheduler::sharded(Arc::clone(&server), 1, batch_window, WorkerPool::shared(lanes))
+                    .unwrap();
+            plain.process_all(&queue).unwrap()
+        };
+        for mode in ["off", "on"] {
+            let journal = (mode == "on").then(|| {
+                let buf = Arc::new(Mutex::new(Vec::new()));
+                Arc::new(Journal::with_writer(
+                    Box::new(VecWriter::new(buf)),
+                    JournalPolicy::FailStop,
+                ))
+            });
+            let cfg = ServeConfig {
+                batch_window,
+                journal: journal.clone(),
+                ..Default::default()
+            };
+            let sched =
+                ServeScheduler::sharded_with(Arc::clone(&server), 1, WorkerPool::shared(lanes), cfg)
+                    .unwrap();
+            let outs = sched.process_all(&queue).unwrap();
+            sched.sync_journal().unwrap();
+            for (a, b) in want.iter().zip(outs.iter()) {
+                assert!(a.bit_eq(b), "journal mode={mode} changed bits");
+            }
+            let run = || {
+                sched.process_all(&queue).unwrap();
+                sched.sync_journal().unwrap();
+            };
+            let st = bench_once(&format!("serve journal {mode}"), samples, &run);
+            let (allocs, _) = allocs_during(&run);
+            let appends =
+                sched.journal_stats().map(|s| s.appends).unwrap_or(0);
+            serve_entries.push(
+                JsonObj::new()
+                    .s("kernel", "journal")
+                    .s("model", "linear")
+                    .s("mode", mode)
+                    .int("requests", queue.len() as u64)
+                    .int("shards", 1)
+                    .int("clients", 1)
+                    .int("batch_window", batch_window as u64)
+                    .int("pool_lanes", lanes as u64)
+                    .int("d_in", 256)
+                    .int("d_out", 16)
+                    .int("journal_appends", appends)
+                    .num("median_ns", st.median_ns)
+                    .num("req_per_s", st.per_sec(queue.len()))
                     .int("allocs_per_call", allocs),
             );
         }

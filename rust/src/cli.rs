@@ -78,6 +78,12 @@ impl Args {
         self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
     }
 
+    /// Optional string flag: `None` when absent (e.g. a path flag like
+    /// `--journal FILE`).
+    pub fn get_opt_str(&self, key: &str) -> Option<String> {
+        self.flags.get(key).filter(|v| !v.is_empty()).cloned()
+    }
+
     /// Boolean switch.
     pub fn has(&self, key: &str) -> bool {
         self.flags.contains_key(key)

@@ -13,10 +13,12 @@ pub mod verifier;
 
 pub use hashing::{hash_curve, hash_params, hash_tensor, hex};
 pub use serve::{
-    token_key, BatchTrace, CacheStats, DeterministicServer, LogEntry, MemoCache, MlpTower,
-    ModelRegistry, ModelTower, NamedTower, Pending, ReplayReport, ResponseLog, ServeConfig,
+    read_journal, token_key, BatchTrace, CacheStats, DeterministicServer, FaultPlan,
+    FaultyWriter, FileJournalWriter, Journal, JournalEvent, JournalPolicy, JournalReadout,
+    JournalStats, JournalWriter, LogEntry, MemoCache, MlpTower, ModelRegistry, ModelTower,
+    NamedTower, PanicAtTicket, Pending, RecoveryReport, ReplayReport, ResponseLog, ServeConfig,
     ServeReplica, ServeReport, ServeScheduler, ServeThroughput, Session, SessionStats,
-    SessionStore, TransformerTower,
+    SessionStore, TransformerTower, VecWriter,
 };
 pub use trainer::{NumericsMode, TrainReport, Trainer, TrainerConfig};
 pub use verifier::{compare_runs, first_divergence, Comparison};

@@ -1,0 +1,240 @@
+//! Deterministic fault injection for the serve journal and towers
+//! (DESIGN.md §11).
+//!
+//! The empirical bug study in PAPERS.md (arXiv 2109.03991) finds that
+//! reproducibility failures in practice come as much from crash /
+//! restart / state-handling bugs as from numerics. Pinning that class
+//! needs faults that are themselves reproducible: a [`FaultPlan`] is
+//! keyed **only by logical counters** — fail the Nth journal append,
+//! short-write the Nth record to K bytes, panic the tower at ticket t —
+//! never by randomness, wall time or thread identity, so a failing
+//! fault cell re-runs identically under `cargo test` forever.
+//!
+//! The injection points mirror the two real-world failure surfaces:
+//!
+//! * **Journal I/O** — [`FaultyWriter`] wraps any
+//!   [`super::journal::JournalWriter`] and counts appends; the wrapped
+//!   writer is what [`super::ServeConfig`] threads into the scheduler,
+//!   so production code pays exactly one vtable indirection whether or
+//!   not faults are armed.
+//! * **Model execution** — [`PanicAtTicket`] wraps any
+//!   [`ModelTower`] and panics inside the ticketed dispatch path at one
+//!   chosen ticket, standing in for any latent bug reached inside a
+//!   dispatcher thread (the panic-shield and lock-poisoning suites
+//!   drive it). The non-ticketed path (replay, recovery re-execution)
+//!   is deliberately left intact: replay audits numerics, not bugs.
+
+use super::journal::JournalWriter;
+use super::session::SessionStats;
+use super::tower::ModelTower;
+use crate::tensor::{Tensor, WorkerPool};
+use crate::Result;
+
+/// A deterministic fault schedule, keyed by logical counters only.
+/// `Default` is the empty plan (no faults), so a [`FaultyWriter`] with
+/// a default plan is byte-transparent.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    /// Fail the Nth append (0-based) with an I/O error, writing
+    /// nothing.
+    pub fail_append: Option<u64>,
+    /// Short-write the Nth append (0-based): persist only the first K
+    /// bytes of the record, then report an I/O error — the on-disk
+    /// signature of a crash mid-`write`.
+    pub short_append: Option<(u64, usize)>,
+}
+
+impl FaultPlan {
+    /// The empty plan.
+    pub fn new() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// Fail the `n`-th append outright.
+    pub fn fail_append(mut self, n: u64) -> FaultPlan {
+        self.fail_append = Some(n);
+        self
+    }
+
+    /// Truncate the `n`-th append to its first `k` bytes.
+    pub fn short_append(mut self, n: u64, k: usize) -> FaultPlan {
+        self.short_append = Some((n, k));
+        self
+    }
+}
+
+fn injected(what: &str) -> std::io::Error {
+    std::io::Error::new(std::io::ErrorKind::Other, format!("injected fault: {what}"))
+}
+
+/// A [`JournalWriter`] that executes a [`FaultPlan`] against an inner
+/// writer. The append counter is the writer's own — deterministic
+/// because the scheduler appends gate-ordered records under one lock
+/// and drains buffered responses in ticket order.
+pub struct FaultyWriter {
+    inner: Box<dyn JournalWriter>,
+    plan: FaultPlan,
+    appends: u64,
+}
+
+impl FaultyWriter {
+    /// Wrap `inner` under `plan`.
+    pub fn new(inner: Box<dyn JournalWriter>, plan: FaultPlan) -> FaultyWriter {
+        FaultyWriter { inner, plan, appends: 0 }
+    }
+}
+
+impl JournalWriter for FaultyWriter {
+    fn append(&mut self, record: &[u8]) -> std::io::Result<()> {
+        let n = self.appends;
+        self.appends += 1;
+        if self.plan.fail_append == Some(n) {
+            return Err(injected("append failure"));
+        }
+        if let Some((m, k)) = self.plan.short_append {
+            if m == n {
+                self.inner.append(&record[..k.min(record.len())])?;
+                return Err(injected("short write"));
+            }
+        }
+        self.inner.append(record)
+    }
+    fn sync(&mut self) -> std::io::Result<()> {
+        self.inner.sync()
+    }
+}
+
+/// A [`ModelTower`] that panics when the **ticketed** dispatch path
+/// serves `ticket` — a deterministic stand-in for a latent bug inside a
+/// dispatcher thread. Everything else (identity, validation, the
+/// non-ticketed `forward_batch` used by replay and recovery) delegates
+/// untouched, so the wrapped tower's bits are the wrapped tower's bits.
+pub struct PanicAtTicket<T> {
+    inner: T,
+    ticket: u64,
+}
+
+impl<T: ModelTower> PanicAtTicket<T> {
+    /// Panic when `ticket` reaches the ticketed dispatch path of
+    /// `inner`.
+    pub fn new(inner: T, ticket: u64) -> PanicAtTicket<T> {
+        PanicAtTicket { inner, ticket }
+    }
+
+    /// The wrapped tower.
+    pub fn inner(&self) -> &T {
+        &self.inner
+    }
+}
+
+impl<T: ModelTower> ModelTower for PanicAtTicket<T> {
+    fn model_id(&self) -> &str {
+        self.inner.model_id()
+    }
+    fn d_in(&self) -> usize {
+        self.inner.d_in()
+    }
+    fn d_out(&self) -> usize {
+        self.inner.d_out()
+    }
+    fn weights_hash(&self) -> &str {
+        self.inner.weights_hash()
+    }
+    fn forward_batch(&self, pool: &WorkerPool, batch: &[Tensor]) -> Result<Vec<Tensor>> {
+        self.inner.forward_batch(pool, batch)
+    }
+    fn validate_request(&self, request: &Tensor) -> Result<()> {
+        self.inner.validate_request(request)
+    }
+    fn forward_batch_ticketed(
+        &self,
+        pool: &WorkerPool,
+        batch: &[Tensor],
+        tickets: &[u64],
+    ) -> Result<Vec<Tensor>> {
+        if tickets.contains(&self.ticket) {
+            panic!("injected tower panic at ticket {}", self.ticket);
+        }
+        self.inner.forward_batch_ticketed(pool, batch, tickets)
+    }
+    fn session_stats(&self) -> Option<SessionStats> {
+        self.inner.session_stats()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::journal::{
+        parse_records, Journal, JournalEvent, JournalPolicy, VecWriter,
+    };
+    use super::super::lock_recover;
+    use super::*;
+    use std::sync::{Arc, Mutex};
+
+    fn buf_journal(plan: FaultPlan, policy: JournalPolicy) -> (Journal, Arc<Mutex<Vec<u8>>>) {
+        let buf = Arc::new(Mutex::new(Vec::new()));
+        let writer = FaultyWriter::new(Box::new(VecWriter::new(Arc::clone(&buf))), plan);
+        (Journal::with_writer(Box::new(writer), policy), buf)
+    }
+
+    #[test]
+    fn an_empty_plan_is_byte_transparent() {
+        let (faulty, fb) = buf_journal(FaultPlan::new(), JournalPolicy::FailStop);
+        let clean = Arc::new(Mutex::new(Vec::new()));
+        let plain = Journal::with_writer(
+            Box::new(VecWriter::new(Arc::clone(&clean))),
+            JournalPolicy::FailStop,
+        );
+        for j in [&faulty, &plain] {
+            j.append_flush(1).unwrap();
+            j.append_truncate(0).unwrap();
+            j.sync().unwrap();
+        }
+        assert_eq!(*lock_recover(&fb), *lock_recover(&clean));
+    }
+
+    #[test]
+    fn fail_stop_surfaces_the_nth_append_and_latches() {
+        let (j, buf) = buf_journal(FaultPlan::new().fail_append(1), JournalPolicy::FailStop);
+        j.append_flush(1).unwrap();
+        let e = j.append_flush(2).unwrap_err();
+        assert!(format!("{e}").contains("injected fault"), "{e}");
+        // latched: later appends fail with the original cause, and the
+        // stream still holds exactly the pre-fault record
+        assert!(j.append_flush(3).is_err());
+        let s = j.stats();
+        assert!(s.failed);
+        assert_eq!(s.appends, 1);
+        let (evs, _) = parse_records(&lock_recover(&buf)[..]).unwrap();
+        assert_eq!(evs, vec![JournalEvent::FlushCut { upto: 1 }]);
+    }
+
+    #[test]
+    fn degrade_to_memory_counts_every_drop_and_never_errors() {
+        let (j, buf) =
+            buf_journal(FaultPlan::new().fail_append(0), JournalPolicy::DegradeToMemory);
+        j.append_flush(1).unwrap();
+        j.append_flush(2).unwrap();
+        j.buffer_failed(0);
+        j.sync().unwrap();
+        let s = j.stats();
+        assert!(!s.failed);
+        assert_eq!(s.appends, 0);
+        assert_eq!(s.drops, 3, "the tripped writer counts every unpersisted record");
+        assert!(lock_recover(&buf).is_empty());
+    }
+
+    #[test]
+    fn a_short_append_leaves_a_recoverable_torn_tail() {
+        let (j, buf) =
+            buf_journal(FaultPlan::new().short_append(1, 5), JournalPolicy::DegradeToMemory);
+        j.append_flush(1).unwrap();
+        j.append_flush(2).unwrap(); // short-written: 5 bytes of frame land
+        j.append_flush(3).unwrap(); // degraded: dropped, counted
+        let (evs, valid) = parse_records(&lock_recover(&buf)[..]).unwrap();
+        assert_eq!(evs, vec![JournalEvent::FlushCut { upto: 1 }]);
+        assert_eq!(lock_recover(&buf).len() - valid, 5, "the torn 5 bytes are detected");
+        // the short-written record and the post-trip record both count
+        assert_eq!(j.stats().drops, 2);
+    }
+}

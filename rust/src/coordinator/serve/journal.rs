@@ -1,0 +1,1006 @@
+//! Durable, crash-consistent serve journal (DESIGN.md §11).
+//!
+//! The serve stack is deterministic end to end but lives in memory: a
+//! crash loses the response log, the ticket watermark and every
+//! in-flight batch, so the paper's cross-environment reproducibility
+//! claim stops at the process boundary. This module extends it across
+//! crashes and machines: an **append-only, length-prefixed, per-record
+//! SHA-256-framed binary journal** of the *logical* serve events —
+//! submit, flush cut, truncation watermark, response record — written
+//! at ticket boundaries, so the journal bytes are a pure function of
+//! the submit/flush event sequence. Two identical runs produce
+//! **byte-identical** journal files: no wall clock, no pids, no thread
+//! ids ever reach the encoder.
+//!
+//! **Record framing.** A journal file is a 12-byte header (8-byte magic
+//! + `u32` LE format version) followed by records. Each record is
+//! `u32 LE payload_len ‖ payload ‖ SHA-256(payload)` (32 bytes). The
+//! per-record digest makes torn tails *detectable*: a crash mid-append
+//! leaves a final record whose length field, payload or digest is
+//! incomplete, and [`read_journal`] stops at the last intact record
+//! boundary, physically truncates the tail, and reports the dropped
+//! bytes — never a silent misparse, never an error for an honest crash.
+//! A file whose *header* is wrong (not a journal at all) is the typed
+//! [`Error::Journal`] instead: tearing can only happen at the tail.
+//!
+//! **Why journal bytes are deterministic.** Submit, flush-cut, truncate
+//! and ident records are appended synchronously under the scheduler's
+//! gate lock — the same lock that makes ticket order *the* arrival
+//! order — so their file order is the event order by construction.
+//! Response records are produced by racing dispatcher threads, so they
+//! are **buffered** (keyed by ticket) and only drained to the file, in
+//! ticket order, at explicit barriers: [`Journal::sync`], which the
+//! scheduler calls on drop after its dispatchers have quiesced. A crash
+//! loses only buffered response records — exactly the records recovery
+//! can re-derive bit-identically by re-executing the journaled submits.
+//!
+//! **Degradation policy.** Journal I/O can fail (disk full, volume
+//! yanked). [`JournalPolicy::FailStop`] fails the submit that hit the
+//! error (typed [`Error::Journal`], no ticket consumed — ticket
+//! arithmetic keeps the accepted set pure) and every submit after it;
+//! [`JournalPolicy::DegradeToMemory`] disables the writer on first
+//! error and keeps serving, counting every record it can no longer
+//! persist in [`JournalStats::drops`] — degraded, but never silently.
+//!
+//! Fault injection for all of the above lives in [`super::faults`]:
+//! a deterministic [`super::faults::FaultPlan`] keyed only by logical
+//! counters, threaded through the [`JournalWriter`] trait (production
+//! code pays one vtable indirection and nothing else).
+
+use super::lock_recover;
+use crate::coordinator::hashing::hex;
+use crate::sha256::Sha256;
+use crate::tensor::Tensor;
+use crate::{Error, Result};
+use std::collections::BTreeMap;
+use std::fmt;
+use std::fs::{File, OpenOptions};
+use std::io::{Read, Write};
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+/// File magic: identifies a RepDL serve journal (8 bytes).
+pub const JOURNAL_MAGIC: [u8; 8] = *b"REPDLJNL";
+/// Journal format version (bumped on any framing/payload change).
+pub const JOURNAL_VERSION: u32 = 1;
+/// Header length: magic + LE version.
+const HEADER_LEN: usize = 12;
+/// Digest length appended to every record.
+const DIGEST_LEN: usize = 32;
+
+const TAG_IDENT: u8 = 0;
+const TAG_SUBMIT: u8 = 1;
+const TAG_FLUSH_CUT: u8 = 2;
+const TAG_TRUNCATE: u8 = 3;
+const TAG_RESPONSE: u8 = 4;
+const TAG_FAILED: u8 = 5;
+
+/// The canonical 12-byte journal header.
+fn header() -> [u8; HEADER_LEN] {
+    let mut h = [0u8; HEADER_LEN];
+    h[..8].copy_from_slice(&JOURNAL_MAGIC);
+    h[8..].copy_from_slice(&JOURNAL_VERSION.to_le_bytes());
+    h
+}
+
+/// One logical serve event, as journaled. The encoding of every variant
+/// is a pure function of its fields — no timestamps, no process state —
+/// which is what makes journal files byte-comparable across runs and
+/// machines.
+#[derive(Clone, Debug, PartialEq)]
+pub enum JournalEvent {
+    /// Written once, as the first record of a fresh journal: the serving
+    /// configuration the event stream is only meaningful under.
+    /// Recovery refuses a scheduler whose identity differs — replaying
+    /// tickets onto different weights or a different shard/window
+    /// layout would silently produce a *different* deterministic run.
+    Ident {
+        /// Serving model id.
+        model_id: String,
+        /// Parameter fingerprint of the serving tower.
+        weights_hash: String,
+        /// Request length in f32 elements.
+        d_in: u64,
+        /// Response length in f32 elements.
+        d_out: u64,
+        /// Shard count (batch composition depends on it).
+        shards: u64,
+        /// Batch window (batch composition depends on it).
+        batch_window: u64,
+    },
+    /// One accepted request: its ticket and the full request tensor
+    /// (shape-framed f32 bit patterns — exact, not a decimal rendering).
+    Submit {
+        /// The monotone arrival ticket.
+        ticket: u64,
+        /// The request itself, retained so recovery can re-execute it.
+        request: Tensor,
+    },
+    /// A flush event: every ticket below `upto` is cut into formed
+    /// batches (the admission logical clock).
+    FlushCut {
+        /// The flush point (a ticket count).
+        upto: u64,
+    },
+    /// A response-log rotation: entries below `watermark` were dropped.
+    Truncate {
+        /// The rotation watermark (a ticket count).
+        watermark: u64,
+    },
+    /// One answered request: content hashes only (the request bytes are
+    /// already journaled by its `Submit` record).
+    Response {
+        /// The answered ticket.
+        ticket: u64,
+        /// First ticket of the batch that served it.
+        batch_id: u64,
+        /// Content address of the request (`hash_tensor`).
+        request_hash: String,
+        /// Content address of the response.
+        response_hash: String,
+        /// Parameter fingerprint of the model that answered.
+        weights_hash: String,
+    },
+    /// A ticket whose batch failed (tower error or panic-shield catch):
+    /// the client saw a typed error, so recovery must neither stall on
+    /// this ticket nor re-execute it into a response the original run
+    /// never sent.
+    Failed {
+        /// The failed ticket.
+        ticket: u64,
+    },
+}
+
+// ---------------------------------------------------------------------
+// encoding
+// ---------------------------------------------------------------------
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_str(buf: &mut Vec<u8>, s: &str) {
+    put_u64(buf, s.len() as u64);
+    buf.extend_from_slice(s.as_bytes());
+}
+
+fn put_tensor(buf: &mut Vec<u8>, t: &Tensor) {
+    put_u64(buf, t.dims().len() as u64);
+    for &d in t.dims() {
+        put_u64(buf, d as u64);
+    }
+    for &v in t.data() {
+        put_u32(buf, v.to_bits());
+    }
+}
+
+/// Encode a submit record's payload without cloning the tensor (the
+/// submit hot path appends under the gate lock).
+pub(super) fn encode_submit(ticket: u64, request: &Tensor) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(32 + request.numel() * 4);
+    buf.push(TAG_SUBMIT);
+    put_u64(&mut buf, ticket);
+    put_tensor(&mut buf, request);
+    buf
+}
+
+/// Encode one event's record payload (tag byte + fields, all LE).
+pub fn encode_event(ev: &JournalEvent) -> Vec<u8> {
+    let mut buf = Vec::new();
+    match ev {
+        JournalEvent::Ident { model_id, weights_hash, d_in, d_out, shards, batch_window } => {
+            buf.push(TAG_IDENT);
+            put_str(&mut buf, model_id);
+            put_str(&mut buf, weights_hash);
+            put_u64(&mut buf, *d_in);
+            put_u64(&mut buf, *d_out);
+            put_u64(&mut buf, *shards);
+            put_u64(&mut buf, *batch_window);
+        }
+        JournalEvent::Submit { ticket, request } => return encode_submit(*ticket, request),
+        JournalEvent::FlushCut { upto } => {
+            buf.push(TAG_FLUSH_CUT);
+            put_u64(&mut buf, *upto);
+        }
+        JournalEvent::Truncate { watermark } => {
+            buf.push(TAG_TRUNCATE);
+            put_u64(&mut buf, *watermark);
+        }
+        JournalEvent::Response { ticket, batch_id, request_hash, response_hash, weights_hash } => {
+            buf.push(TAG_RESPONSE);
+            put_u64(&mut buf, *ticket);
+            put_u64(&mut buf, *batch_id);
+            put_str(&mut buf, request_hash);
+            put_str(&mut buf, response_hash);
+            put_str(&mut buf, weights_hash);
+        }
+        JournalEvent::Failed { ticket } => {
+            buf.push(TAG_FAILED);
+            put_u64(&mut buf, *ticket);
+        }
+    }
+    buf
+}
+
+/// Frame one payload into a full journal record:
+/// `u32 LE len ‖ payload ‖ SHA-256(payload)`.
+pub fn frame(payload: &[u8]) -> Vec<u8> {
+    let mut rec = Vec::with_capacity(4 + payload.len() + DIGEST_LEN);
+    put_u32(&mut rec, payload.len() as u32);
+    rec.extend_from_slice(payload);
+    let mut h = Sha256::new();
+    h.update(payload);
+    rec.extend_from_slice(&h.finalize());
+    rec
+}
+
+// ---------------------------------------------------------------------
+// decoding
+// ---------------------------------------------------------------------
+
+struct Cursor<'a> {
+    b: &'a [u8],
+    off: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(b: &'a [u8]) -> Cursor<'a> {
+        Cursor { b, off: 0 }
+    }
+    fn bytes(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.b.len() - self.off < n {
+            return Err(Error::journal(format!(
+                "record payload truncated: wanted {n} bytes at offset {} of {}",
+                self.off,
+                self.b.len()
+            )));
+        }
+        let s = &self.b[self.off..self.off + n];
+        self.off += n;
+        Ok(s)
+    }
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.bytes(1)?[0])
+    }
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.bytes(4)?.try_into().expect("4 bytes")))
+    }
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.bytes(8)?.try_into().expect("8 bytes")))
+    }
+    fn str(&mut self) -> Result<String> {
+        let n = self.u64()? as usize;
+        let s = self.bytes(n)?;
+        String::from_utf8(s.to_vec())
+            .map_err(|_| Error::journal("record payload holds a non-UTF-8 string"))
+    }
+    fn tensor(&mut self) -> Result<Tensor> {
+        let rank = self.u64()? as usize;
+        if rank > 8 {
+            return Err(Error::journal(format!("journaled tensor rank {rank} exceeds 8")));
+        }
+        let mut dims = Vec::with_capacity(rank);
+        for _ in 0..rank {
+            dims.push(self.u64()? as usize);
+        }
+        let numel = dims
+            .iter()
+            .try_fold(1usize, |acc, &d| acc.checked_mul(d))
+            .ok_or_else(|| Error::journal("journaled tensor dims overflow"))?;
+        // bound before allocating: the payload must actually hold the data
+        if numel.checked_mul(4).map_or(true, |b| self.b.len() - self.off < b) {
+            return Err(Error::journal(format!(
+                "journaled tensor claims {numel} elements but the payload is short"
+            )));
+        }
+        let mut data = Vec::with_capacity(numel);
+        for _ in 0..numel {
+            data.push(f32::from_bits(self.u32()?));
+        }
+        Tensor::from_vec(&dims, data)
+            .map_err(|e| Error::journal(format!("journaled tensor is malformed: {e}")))
+    }
+    fn done(&self) -> Result<()> {
+        if self.off != self.b.len() {
+            return Err(Error::journal(format!(
+                "record payload has {} trailing bytes",
+                self.b.len() - self.off
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// Decode one hash-verified record payload. Failing here means an
+/// encoder/decoder version mismatch or a software bug — the framing
+/// digest already rules out bit rot and torn writes — so it is the
+/// typed [`Error::Journal`], never a silent skip.
+pub fn decode_event(payload: &[u8]) -> Result<JournalEvent> {
+    let mut c = Cursor::new(payload);
+    let ev = match c.u8()? {
+        TAG_IDENT => JournalEvent::Ident {
+            model_id: c.str()?,
+            weights_hash: c.str()?,
+            d_in: c.u64()?,
+            d_out: c.u64()?,
+            shards: c.u64()?,
+            batch_window: c.u64()?,
+        },
+        TAG_SUBMIT => JournalEvent::Submit { ticket: c.u64()?, request: c.tensor()? },
+        TAG_FLUSH_CUT => JournalEvent::FlushCut { upto: c.u64()? },
+        TAG_TRUNCATE => JournalEvent::Truncate { watermark: c.u64()? },
+        TAG_RESPONSE => JournalEvent::Response {
+            ticket: c.u64()?,
+            batch_id: c.u64()?,
+            request_hash: c.str()?,
+            response_hash: c.str()?,
+            weights_hash: c.str()?,
+        },
+        TAG_FAILED => JournalEvent::Failed { ticket: c.u64()? },
+        tag => return Err(Error::journal(format!("unknown record tag {tag}"))),
+    };
+    c.done()?;
+    Ok(ev)
+}
+
+/// Scan a headerless record stream: returns the hash-verified payload
+/// slices and the byte length of the intact prefix. Scanning stops at
+/// the first frame-level defect — short length field, short payload,
+/// digest mismatch — which is by definition the torn tail: records are
+/// appended atomically with respect to their own digest, so anything
+/// after the first bad frame is unrecoverable.
+pub fn scan_payloads(bytes: &[u8]) -> (Vec<&[u8]>, usize) {
+    let mut out = Vec::new();
+    let mut off = 0usize;
+    loop {
+        if bytes.len() - off < 4 {
+            break;
+        }
+        let len = u32::from_le_bytes(bytes[off..off + 4].try_into().expect("4 bytes")) as usize;
+        if bytes.len() - off - 4 < len + DIGEST_LEN {
+            break;
+        }
+        let payload = &bytes[off + 4..off + 4 + len];
+        let digest = &bytes[off + 4 + len..off + 4 + len + DIGEST_LEN];
+        let mut h = Sha256::new();
+        h.update(payload);
+        if h.finalize().as_slice() != digest {
+            break;
+        }
+        out.push(payload);
+        off += 4 + len + DIGEST_LEN;
+    }
+    (out, off)
+}
+
+/// Parse a headerless record stream into events plus the intact prefix
+/// length (see [`scan_payloads`] for the torn-tail rule).
+pub fn parse_records(bytes: &[u8]) -> Result<(Vec<JournalEvent>, usize)> {
+    let (payloads, valid) = scan_payloads(bytes);
+    let events = payloads.iter().map(|p| decode_event(p)).collect::<Result<Vec<_>>>()?;
+    Ok((events, valid))
+}
+
+/// Everything recovery needs from a journal file, after torn-tail
+/// repair.
+#[derive(Debug)]
+pub struct JournalReadout {
+    /// The decoded event stream, in file (= logical) order.
+    pub events: Vec<JournalEvent>,
+    /// Bytes truncated from the tail (0 for a cleanly closed journal).
+    pub torn_bytes: u64,
+}
+
+impl JournalReadout {
+    /// True when the file carried an incomplete trailing record.
+    pub fn truncated_tail(&self) -> bool {
+        self.torn_bytes > 0
+    }
+}
+
+/// Open a journal file, verify its header, decode its records, and
+/// **physically truncate** any torn tail so a subsequent
+/// [`Journal::open_append`] continues from an intact record boundary.
+///
+/// Torn tails (the expected crash signature) are repaired and reported;
+/// a wrong magic or version — the file is not a journal, or is from an
+/// incompatible build — is the typed [`Error::Journal`]: truncating
+/// someone else's file would be data loss, not recovery. A torn
+/// *header* (crash before the very first record) is repaired to an
+/// empty stream only when the partial bytes prefix-match the canonical
+/// header.
+pub fn read_journal(path: &Path) -> Result<JournalReadout> {
+    let mut bytes = Vec::new();
+    File::open(path)?.read_to_end(&mut bytes)?;
+    let hdr = header();
+    if bytes.len() < HEADER_LEN {
+        if bytes[..] != hdr[..bytes.len()] {
+            return Err(Error::journal(format!(
+                "{} is not a serve journal (bad magic)",
+                path.display()
+            )));
+        }
+        let torn = bytes.len() as u64;
+        if torn > 0 {
+            OpenOptions::new().write(true).open(path)?.set_len(0)?;
+        }
+        return Ok(JournalReadout { events: Vec::new(), torn_bytes: torn });
+    }
+    if bytes[..8] != JOURNAL_MAGIC {
+        return Err(Error::journal(format!(
+            "{} is not a serve journal (bad magic)",
+            path.display()
+        )));
+    }
+    let version = u32::from_le_bytes(bytes[8..HEADER_LEN].try_into().expect("4 bytes"));
+    if version != JOURNAL_VERSION {
+        return Err(Error::journal(format!(
+            "{}: journal format version {version}, this build reads {JOURNAL_VERSION}",
+            path.display()
+        )));
+    }
+    let (events, valid) = parse_records(&bytes[HEADER_LEN..])?;
+    let torn = (bytes.len() - HEADER_LEN - valid) as u64;
+    if torn > 0 {
+        OpenOptions::new()
+            .write(true)
+            .open(path)?
+            .set_len((HEADER_LEN + valid) as u64)?;
+    }
+    Ok(JournalReadout { events, torn_bytes: torn })
+}
+
+// ---------------------------------------------------------------------
+// writers
+// ---------------------------------------------------------------------
+
+/// The journal's byte sink. Production uses [`FileJournalWriter`]; the
+/// fault harness ([`super::faults::FaultyWriter`]) wraps any writer to
+/// inject failures at deterministic record counts — this one vtable
+/// indirection is the entire cost the production path pays for
+/// injectability.
+pub trait JournalWriter: Send {
+    /// Append one complete framed record. Must be a single logical
+    /// write: the torn-tail rule assumes a crash can split a record but
+    /// the writer itself never interleaves or reorders records.
+    fn append(&mut self, record: &[u8]) -> std::io::Result<()>;
+    /// Make everything appended so far durable.
+    fn sync(&mut self) -> std::io::Result<()>;
+}
+
+/// Appends records to a file with one unbuffered `write_all` each —
+/// records reach the OS page cache immediately (so a `kill -9` loses at
+/// most the record being written, the torn tail recovery repairs) and
+/// `fsync` cost is only paid at explicit [`JournalWriter::sync`]
+/// barriers. Process-crash durable by construction; machine-crash
+/// durable up to the last sync.
+pub struct FileJournalWriter {
+    file: File,
+}
+
+impl FileJournalWriter {
+    /// Wrap an open journal file positioned at its end.
+    pub fn new(file: File) -> FileJournalWriter {
+        FileJournalWriter { file }
+    }
+}
+
+impl JournalWriter for FileJournalWriter {
+    fn append(&mut self, record: &[u8]) -> std::io::Result<()> {
+        self.file.write_all(record)
+    }
+    fn sync(&mut self) -> std::io::Result<()> {
+        self.file.sync_data()
+    }
+}
+
+/// An in-memory writer over a shared buffer — the byte-determinism
+/// tests compare two runs' buffers without touching the filesystem.
+pub struct VecWriter {
+    buf: Arc<Mutex<Vec<u8>>>,
+}
+
+impl VecWriter {
+    /// Write into `buf` (the caller keeps a handle to read it back).
+    pub fn new(buf: Arc<Mutex<Vec<u8>>>) -> VecWriter {
+        VecWriter { buf }
+    }
+}
+
+impl JournalWriter for VecWriter {
+    fn append(&mut self, record: &[u8]) -> std::io::Result<()> {
+        lock_recover(&self.buf).extend_from_slice(record);
+        Ok(())
+    }
+    fn sync(&mut self) -> std::io::Result<()> {
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------
+// the journal
+// ---------------------------------------------------------------------
+
+/// How the scheduler behaves when a journal append fails (see module
+/// docs). Both policies are *loud*: one by typed errors, one by a
+/// counter — a journal hole is never silent.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum JournalPolicy {
+    /// The erroring submit gets [`Error::Journal`] and consumes no
+    /// ticket; every later submit is refused the same way. Durability
+    /// outranks availability.
+    #[default]
+    FailStop,
+    /// Disable the writer on first error and keep serving from memory,
+    /// counting every unpersisted record in [`JournalStats::drops`].
+    /// Availability outranks durability.
+    DegradeToMemory,
+}
+
+/// Journal health counters (all logical — no timestamps).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct JournalStats {
+    /// Records physically appended.
+    pub appends: u64,
+    /// Response/failure records buffered, awaiting the next sync barrier.
+    pub buffered: u64,
+    /// Records dropped after `DegradeToMemory` tripped. Non-zero means
+    /// the journal is incomplete and recovery from it is refused.
+    pub drops: u64,
+    /// True once `FailStop` has latched an append error.
+    pub failed: bool,
+}
+
+struct JournalInner {
+    writer: Box<dyn JournalWriter>,
+    /// Encoded response/failure payloads keyed by ticket — drained to
+    /// the writer in ticket order at sync barriers, which is what keeps
+    /// the file's response section deterministic despite racing
+    /// dispatchers (module docs).
+    buffered: BTreeMap<u64, Vec<u8>>,
+    /// `DegradeToMemory` tripped: the writer is permanently disabled.
+    disabled: bool,
+    /// `FailStop` latched: the first append error, surfaced verbatim to
+    /// every later append.
+    failed: Option<String>,
+    appends: u64,
+    drops: u64,
+}
+
+impl JournalInner {
+    fn append_payload(&mut self, payload: &[u8], policy: JournalPolicy) -> Result<()> {
+        if self.disabled {
+            self.drops += 1;
+            return Ok(());
+        }
+        if let Some(msg) = &self.failed {
+            return Err(Error::journal(msg.clone()));
+        }
+        match self.writer.append(&frame(payload)) {
+            Ok(()) => {
+                self.appends += 1;
+                Ok(())
+            }
+            Err(e) => match policy {
+                JournalPolicy::FailStop => {
+                    let msg = format!("append failed (fail-stop): {e}");
+                    self.failed = Some(msg.clone());
+                    Err(Error::journal(msg))
+                }
+                JournalPolicy::DegradeToMemory => {
+                    self.disabled = true;
+                    self.drops += 1;
+                    Ok(())
+                }
+            },
+        }
+    }
+}
+
+/// A serve scheduler's durable event journal. Cheap to share
+/// (`Arc<Journal>` in [`super::ServeConfig`]); all methods take `&self`
+/// and serialise on one internal lock. See the module docs for the
+/// format, determinism and degradation contracts.
+pub struct Journal {
+    inner: Mutex<JournalInner>,
+    policy: JournalPolicy,
+    /// True when this handle started an empty journal (the scheduler
+    /// writes the `Ident` record exactly once, on a fresh journal).
+    fresh: bool,
+}
+
+impl Journal {
+    /// Create (or truncate to empty) a journal file and write its
+    /// header. The header is written directly — not through the
+    /// [`JournalWriter`] — so a fault plan's record counter indexes
+    /// records exactly, starting at 0.
+    pub fn create(path: &Path, policy: JournalPolicy) -> Result<Journal> {
+        let mut file =
+            OpenOptions::new().write(true).create(true).truncate(true).open(path)?;
+        file.write_all(&header())?;
+        file.sync_data()?;
+        Ok(Journal::from_writer(Box::new(FileJournalWriter::new(file)), policy, true))
+    }
+
+    /// Open a journal file for continued appends. An empty file gets
+    /// the header (and reads as fresh); an existing file's header is
+    /// verified. Does **not** repair torn tails — run [`read_journal`]
+    /// first (it truncates the tail in place), then open, so every
+    /// append lands on an intact record boundary.
+    pub fn open_append(path: &Path, policy: JournalPolicy) -> Result<Journal> {
+        let mut file =
+            OpenOptions::new().read(true).append(true).create(true).open(path)?;
+        let len = file.metadata()?.len();
+        if len == 0 {
+            file.write_all(&header())?;
+            file.sync_data()?;
+            return Ok(Journal::from_writer(
+                Box::new(FileJournalWriter::new(file)),
+                policy,
+                true,
+            ));
+        }
+        if (len as usize) < HEADER_LEN {
+            return Err(Error::journal(format!(
+                "{}: torn header — run recovery (read_journal) before appending",
+                path.display()
+            )));
+        }
+        let mut hdr = [0u8; HEADER_LEN];
+        file.read_exact(&mut hdr)?;
+        if hdr != header() {
+            return Err(Error::journal(format!(
+                "{} is not a version-{JOURNAL_VERSION} serve journal",
+                path.display()
+            )));
+        }
+        let fresh = len as usize == HEADER_LEN;
+        Ok(Journal::from_writer(Box::new(FileJournalWriter::new(file)), policy, fresh))
+    }
+
+    /// A journal over an arbitrary writer — headerless, used by the
+    /// in-memory byte-determinism tests and the fault harness. The
+    /// record stream it produces parses with [`parse_records`].
+    pub fn with_writer(writer: Box<dyn JournalWriter>, policy: JournalPolicy) -> Journal {
+        Journal::from_writer(writer, policy, true)
+    }
+
+    fn from_writer(writer: Box<dyn JournalWriter>, policy: JournalPolicy, fresh: bool) -> Journal {
+        Journal {
+            inner: Mutex::new(JournalInner {
+                writer,
+                buffered: BTreeMap::new(),
+                disabled: false,
+                failed: None,
+                appends: 0,
+                drops: 0,
+            }),
+            policy,
+            fresh,
+        }
+    }
+
+    /// True when this handle started an empty journal (no records yet).
+    pub fn is_fresh(&self) -> bool {
+        self.fresh
+    }
+
+    /// The configured degradation policy.
+    pub fn policy(&self) -> JournalPolicy {
+        self.policy
+    }
+
+    /// Append any event synchronously (gate-ordered record classes:
+    /// ident, submit via [`Self::append_submit`], flush cut, truncate).
+    pub fn append_event(&self, ev: &JournalEvent) -> Result<()> {
+        lock_recover(&self.inner).append_payload(&encode_event(ev), self.policy)
+    }
+
+    /// Append one submit record (no tensor clone — the hot path).
+    pub fn append_submit(&self, ticket: u64, request: &Tensor) -> Result<()> {
+        lock_recover(&self.inner).append_payload(&encode_submit(ticket, request), self.policy)
+    }
+
+    /// Append one flush-cut record.
+    pub fn append_flush(&self, upto: u64) -> Result<()> {
+        self.append_event(&JournalEvent::FlushCut { upto })
+    }
+
+    /// Append one truncation-watermark record.
+    pub fn append_truncate(&self, watermark: u64) -> Result<()> {
+        self.append_event(&JournalEvent::Truncate { watermark })
+    }
+
+    /// Buffer one response record for the next sync barrier (dispatcher
+    /// side — see module docs for why responses are not appended
+    /// inline). First record per ticket wins, mirroring the response
+    /// log.
+    pub fn buffer_response(&self, entry: &super::log::LogEntry) {
+        let payload = encode_event(&JournalEvent::Response {
+            ticket: entry.ticket,
+            batch_id: entry.batch_id,
+            request_hash: entry.request_hash.clone(),
+            response_hash: entry.response_hash.clone(),
+            weights_hash: entry.weights_hash.clone(),
+        });
+        lock_recover(&self.inner).buffered.entry(entry.ticket).or_insert(payload);
+    }
+
+    /// Buffer one batch-failure record for the next sync barrier.
+    pub fn buffer_failed(&self, ticket: u64) {
+        let payload = encode_event(&JournalEvent::Failed { ticket });
+        lock_recover(&self.inner).buffered.entry(ticket).or_insert(payload);
+    }
+
+    /// Sync barrier: drain every buffered response record to the writer
+    /// in ticket order, then make the file durable. On a `FailStop`
+    /// append error the un-drained records stay buffered (visible in
+    /// [`JournalStats::buffered`]) and the error surfaces here.
+    pub fn sync(&self) -> Result<()> {
+        let mut inner = lock_recover(&self.inner);
+        while let Some((ticket, payload)) = inner.buffered.pop_first() {
+            if let Err(e) = inner.append_payload(&payload, self.policy) {
+                inner.buffered.insert(ticket, payload);
+                return Err(e);
+            }
+        }
+        if inner.disabled {
+            return Ok(());
+        }
+        if let Some(msg) = &inner.failed {
+            return Err(Error::journal(msg.clone()));
+        }
+        match inner.writer.sync() {
+            Ok(()) => Ok(()),
+            Err(e) => match self.policy {
+                JournalPolicy::FailStop => {
+                    let msg = format!("sync failed (fail-stop): {e}");
+                    inner.failed = Some(msg.clone());
+                    Err(Error::journal(msg))
+                }
+                JournalPolicy::DegradeToMemory => {
+                    inner.disabled = true;
+                    Ok(())
+                }
+            },
+        }
+    }
+
+    /// Current health counters.
+    pub fn stats(&self) -> JournalStats {
+        let inner = lock_recover(&self.inner);
+        JournalStats {
+            appends: inner.appends,
+            buffered: inner.buffered.len() as u64,
+            drops: inner.drops,
+            failed: inner.failed.is_some(),
+        }
+    }
+}
+
+impl fmt::Debug for Journal {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // counters only: the writer is opaque and stats() takes the
+        // internal lock, so never Debug-print while holding it
+        let s = self.stats();
+        f.debug_struct("Journal")
+            .field("policy", &self.policy)
+            .field("fresh", &self.fresh)
+            .field("appends", &s.appends)
+            .field("buffered", &s.buffered)
+            .field("drops", &s.drops)
+            .field("failed", &s.failed)
+            .finish()
+    }
+}
+
+/// SHA-256 of a byte buffer as lowercase hex — convenience for
+/// comparing whole journal files in tests and tooling.
+pub fn digest_hex(bytes: &[u8]) -> String {
+    let mut h = Sha256::new();
+    h.update(bytes);
+    hex(&h.finalize())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ident() -> JournalEvent {
+        JournalEvent::Ident {
+            model_id: "linear".into(),
+            weights_hash: "abc123".into(),
+            d_in: 16,
+            d_out: 4,
+            shards: 2,
+            batch_window: 4,
+        }
+    }
+
+    fn events() -> Vec<JournalEvent> {
+        vec![
+            ident(),
+            JournalEvent::Submit {
+                ticket: 0,
+                request: Tensor::from_vec(&[3], vec![1.5, -0.0, f32::NAN]).unwrap(),
+            },
+            JournalEvent::FlushCut { upto: 1 },
+            JournalEvent::Response {
+                ticket: 0,
+                batch_id: 0,
+                request_hash: "rh".into(),
+                response_hash: "sh".into(),
+                weights_hash: "abc123".into(),
+            },
+            JournalEvent::Truncate { watermark: 1 },
+            JournalEvent::Failed { ticket: 9 },
+        ]
+    }
+
+    fn stream(evs: &[JournalEvent]) -> Vec<u8> {
+        let mut bytes = Vec::new();
+        for ev in evs {
+            bytes.extend_from_slice(&frame(&encode_event(ev)));
+        }
+        bytes
+    }
+
+    #[test]
+    fn events_roundtrip_bit_exactly() {
+        let evs = events();
+        let (got, valid) = parse_records(&stream(&evs)).unwrap();
+        assert_eq!(valid, stream(&evs).len());
+        assert_eq!(got.len(), evs.len());
+        for (a, b) in got.iter().zip(evs.iter()) {
+            match (a, b) {
+                // NaN != NaN under PartialEq; the journal stores raw bit
+                // patterns, so compare those
+                (
+                    JournalEvent::Submit { ticket: t1, request: r1 },
+                    JournalEvent::Submit { ticket: t2, request: r2 },
+                ) => {
+                    assert_eq!(t1, t2);
+                    assert!(r1.bit_eq(r2), "tensor bits must survive the roundtrip");
+                }
+                _ => assert_eq!(a, b),
+            }
+        }
+    }
+
+    #[test]
+    fn encoding_is_a_pure_function_of_the_event() {
+        let evs = events();
+        assert_eq!(stream(&evs), stream(&evs), "same events ⇒ same bytes");
+        assert_eq!(digest_hex(&stream(&evs)), digest_hex(&stream(&evs)));
+    }
+
+    #[test]
+    fn every_torn_tail_is_detected_at_the_last_intact_boundary() {
+        let evs = events();
+        let bytes = stream(&evs);
+        // chop the stream at every possible byte length; the parser must
+        // recover exactly the records whose full frame survived
+        let mut boundaries = vec![0usize];
+        for ev in &evs {
+            boundaries.push(boundaries.last().unwrap() + frame(&encode_event(ev)).len());
+        }
+        for cut in 0..=bytes.len() {
+            let (got, valid) = parse_records(&bytes[..cut]).unwrap();
+            let whole = boundaries.iter().take_while(|&&b| b <= cut).count() - 1;
+            assert_eq!(got.len(), whole, "cut at {cut}");
+            assert_eq!(valid, boundaries[whole], "cut at {cut}");
+        }
+    }
+
+    #[test]
+    fn a_flipped_bit_inside_a_record_stops_the_scan_there() {
+        let evs = events();
+        let mut bytes = stream(&evs);
+        // corrupt one payload byte of the third record (offset: past two
+        // frames, past the length field)
+        let off = frame(&encode_event(&evs[0])).len()
+            + frame(&encode_event(&evs[1])).len()
+            + 4;
+        bytes[off] ^= 0x40;
+        let (got, valid) = parse_records(&bytes).unwrap();
+        assert_eq!(got.len(), 2, "the corrupted record and everything after it are dropped");
+        assert_eq!(valid, off - 4);
+    }
+
+    #[test]
+    fn journal_drains_buffered_responses_in_ticket_order_at_sync() {
+        let buf = Arc::new(Mutex::new(Vec::new()));
+        let j = Journal::with_writer(
+            Box::new(VecWriter::new(Arc::clone(&buf))),
+            JournalPolicy::FailStop,
+        );
+        j.append_event(&ident()).unwrap();
+        let req = Tensor::from_vec(&[1], vec![2.0]).unwrap();
+        j.append_submit(0, &req).unwrap();
+        j.append_submit(1, &req).unwrap();
+        j.append_flush(2).unwrap();
+        // buffer out of ticket order, as racing dispatchers would
+        j.buffer_failed(1);
+        j.buffer_response(&crate::coordinator::serve::log::LogEntry {
+            ticket: 0,
+            request: req.clone(),
+            request_hash: "r".into(),
+            response_hash: "s".into(),
+            batch_id: 0,
+            weights_hash: "w".into(),
+        });
+        assert_eq!(j.stats().buffered, 2);
+        j.sync().unwrap();
+        let s = j.stats();
+        assert_eq!((s.buffered, s.appends, s.drops), (0, 6, 0));
+        let (evs, _) = parse_records(&lock_recover(&buf)[..]).unwrap();
+        assert!(matches!(evs[4], JournalEvent::Response { ticket: 0, .. }));
+        assert!(matches!(evs[5], JournalEvent::Failed { ticket: 1 }));
+    }
+
+    #[test]
+    fn file_journal_roundtrips_and_rejects_foreign_files() {
+        let dir = std::env::temp_dir().join("repdl-journal-unit");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("roundtrip.journal");
+        {
+            let j = Journal::create(&path, JournalPolicy::FailStop).unwrap();
+            assert!(j.is_fresh());
+            j.append_event(&ident()).unwrap();
+            j.append_submit(0, &Tensor::from_vec(&[2], vec![1.0, 2.0]).unwrap()).unwrap();
+            j.sync().unwrap();
+        }
+        let out = read_journal(&path).unwrap();
+        assert_eq!(out.events.len(), 2);
+        assert!(!out.truncated_tail());
+        // reopening is not fresh: the ident must not be written twice
+        let j2 = Journal::open_append(&path, JournalPolicy::FailStop).unwrap();
+        assert!(!j2.is_fresh());
+        drop(j2);
+        // a non-journal file is a typed error, not a truncation
+        let alien = dir.join("alien.bin");
+        std::fs::write(&alien, b"definitely not a journal, but >12 bytes").unwrap();
+        match read_journal(&alien) {
+            Err(Error::Journal(m)) => assert!(m.contains("bad magic"), "{m}"),
+            other => panic!("want Error::Journal, got {other:?}"),
+        }
+        assert!(Journal::open_append(&alien, JournalPolicy::FailStop).is_err());
+        std::fs::remove_file(&path).unwrap();
+        std::fs::remove_file(&alien).unwrap();
+    }
+
+    #[test]
+    fn read_journal_physically_truncates_a_torn_tail() {
+        let dir = std::env::temp_dir().join("repdl-journal-unit");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("torn.journal");
+        {
+            let j = Journal::create(&path, JournalPolicy::FailStop).unwrap();
+            j.append_event(&ident()).unwrap();
+            j.append_flush(1).unwrap();
+            j.sync().unwrap();
+        }
+        let clean_len = std::fs::metadata(&path).unwrap().len();
+        // simulate a crash mid-append: half a record at the tail
+        let mut f = OpenOptions::new().append(true).open(&path).unwrap();
+        let torn = frame(&encode_event(&JournalEvent::FlushCut { upto: 2 }));
+        f.write_all(&torn[..torn.len() - 7]).unwrap();
+        drop(f);
+        let out = read_journal(&path).unwrap();
+        assert_eq!(out.events.len(), 2, "intact records survive");
+        assert_eq!(out.torn_bytes, (torn.len() - 7) as u64);
+        assert!(out.truncated_tail());
+        assert_eq!(
+            std::fs::metadata(&path).unwrap().len(),
+            clean_len,
+            "the tail must be truncated in place"
+        );
+        // a second read sees a clean journal
+        assert!(!read_journal(&path).unwrap().truncated_tail());
+        std::fs::remove_file(&path).unwrap();
+    }
+}

@@ -41,8 +41,16 @@
 //!   [`ServeScheduler::replay`] and rotatable via
 //!   [`ResponseLog::truncate_below`] (replays below the watermark are
 //!   the typed `Error::Truncated`).
+//! * [`journal`] + [`faults`] — the durable, crash-consistent event
+//!   journal (byte-deterministic, SHA-256-framed; DESIGN.md §11) with
+//!   [`ServeScheduler::recover`] / [`ModelRegistry::recover_all`]
+//!   rebuilding a bit-identical process from it, and the deterministic
+//!   fault-injection harness ([`FaultPlan`], [`PanicAtTicket`]) that
+//!   proves it under injected crashes.
 
 pub mod cache;
+pub mod faults;
+pub mod journal;
 pub mod log;
 pub mod registry;
 pub mod replica;
@@ -51,10 +59,17 @@ pub mod session;
 pub mod tower;
 
 pub use cache::{CacheStats, MemoCache};
+pub use faults::{FaultPlan, FaultyWriter, PanicAtTicket};
+pub use journal::{
+    read_journal, FileJournalWriter, Journal, JournalEvent, JournalPolicy, JournalReadout,
+    JournalStats, JournalWriter, VecWriter,
+};
 pub use log::{LogEntry, ResponseLog};
 pub use registry::ModelRegistry;
 pub use replica::{DeterministicServer, ServeReplica, ServeReport, ServeThroughput};
-pub use scheduler::{BatchTrace, Pending, ReplayReport, ServeConfig, ServeScheduler};
+pub use scheduler::{
+    BatchTrace, Pending, RecoveryReport, ReplayReport, ServeConfig, ServeScheduler,
+};
 pub use session::{token_key, Session, SessionStats, SessionStore};
 pub use tower::{MlpTower, ModelTower, NamedTower, TransformerTower};
 

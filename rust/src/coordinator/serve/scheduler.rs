@@ -67,7 +67,7 @@
 //!   off — and hits are bit-identical to recomputation because the
 //!   kernels are batch invariant.
 
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
 use std::ops::Range;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -75,6 +75,7 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
 use super::cache::{CacheStats, MemoCache};
+use super::journal::{Journal, JournalEvent, JournalReadout, JournalStats};
 use super::lock_recover;
 use super::log::{LogEntry, ResponseLog};
 use super::replica::ServeReplica;
@@ -174,11 +175,24 @@ pub struct ServeConfig {
     /// retains request tensors and grows with traffic — an audit tool,
     /// not an always-on production default.
     pub log: bool,
+    /// Durable event journal (see [`super::journal`]): submit, flush
+    /// cut and truncation records are appended under the gate lock;
+    /// response records are buffered and drained at sync barriers. A
+    /// fresh journal gets this scheduler's `Ident` record at
+    /// construction; a non-fresh one is expected to go through
+    /// [`ServeScheduler::recover`] before any new submits.
+    pub journal: Option<Arc<Journal>>,
 }
 
 impl Default for ServeConfig {
     fn default() -> ServeConfig {
-        ServeConfig { batch_window: 16, max_queue_depth: None, cache_capacity: 0, log: false }
+        ServeConfig {
+            batch_window: 16,
+            max_queue_depth: None,
+            cache_capacity: 0,
+            log: false,
+            journal: None,
+        }
     }
 }
 
@@ -201,6 +215,51 @@ impl ReplayReport {
     }
 }
 
+/// Outcome of [`ServeScheduler::recover`]: what the journal held, what
+/// was restored verbatim, and what had to be re-derived. Every field is
+/// a logical count — two recoveries of the same journal produce
+/// identical reports.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct RecoveryReport {
+    /// Bytes the torn-tail rule truncated when the journal was read.
+    pub torn_bytes: u64,
+    /// Submit records in the journal (= the restored ticket counter).
+    pub submits: u64,
+    /// Distinct non-zero flush cuts in the journal.
+    pub flush_cuts: u64,
+    /// Response records restored into the log without re-execution.
+    pub responses_restored: u64,
+    /// Response records that failed their consistency check (request
+    /// hash or weights hash mismatch against the journaled submit) —
+    /// counted, dropped, and re-executed instead.
+    pub restore_mismatches: u64,
+    /// Tickets journaled as failed batches: skipped, because their
+    /// clients saw a typed error, not a response.
+    pub failed_skipped: u64,
+    /// Un-responded tickets re-executed through the non-ticketed replay
+    /// path (bit-identical to the lost originals by batch invariance).
+    pub re_executed: u64,
+    /// Re-executions that errored (the tower rejected a journaled
+    /// request — possible only if the journal predates a weights or
+    /// validation change, which the `Ident` check normally refuses).
+    pub re_execute_failures: u64,
+    /// The restored ticket counter (`== submits`).
+    pub next_ticket: u64,
+    /// The restored admission flush clock (highest journaled cut).
+    pub flushed_upto: u64,
+    /// The restored response-log truncation watermark.
+    pub watermark: u64,
+}
+
+impl RecoveryReport {
+    /// True when every journaled ticket was accounted for cleanly:
+    /// restored, re-executed, rotated below the watermark, or journaled
+    /// as failed — with no consistency mismatches.
+    pub fn consistent(&self) -> bool {
+        self.restore_mismatches == 0 && self.re_execute_failures == 0
+    }
+}
+
 /// Deterministic dynamic-batching front end over N sharded
 /// [`ServeReplica`]s (one dispatcher thread per shard). See module docs
 /// for the determinism argument.
@@ -216,6 +275,7 @@ pub struct ServeScheduler {
     max_queue_depth: Option<usize>,
     cache: Option<Arc<MemoCache>>,
     log: Option<Arc<ResponseLog>>,
+    journal: Option<Arc<Journal>>,
     dispatchers: Vec<JoinHandle<()>>,
 }
 
@@ -295,11 +355,30 @@ impl ServeScheduler {
         );
         let cache = (cfg.cache_capacity > 0).then(|| Arc::new(MemoCache::new(cfg.cache_capacity)));
         let log = cfg.log.then(|| Arc::new(ResponseLog::new()));
+        let journal = cfg.journal.clone();
+        if let Some(j) = &journal {
+            // a fresh journal opens with this scheduler's identity —
+            // recovery refuses an event stream whose serving layout
+            // (weights, shards, window) would not reproduce the run.
+            // Written before dispatchers spawn, so the ident is always
+            // record 0 and never races a buffered-response drain.
+            if j.is_fresh() {
+                j.append_event(&JournalEvent::Ident {
+                    model_id: tower.model_id().to_string(),
+                    weights_hash: tower.weights_hash().to_string(),
+                    d_in: tower.d_in() as u64,
+                    d_out: tower.d_out() as u64,
+                    shards: shards.len() as u64,
+                    batch_window: batch_window as u64,
+                })?;
+            }
+        }
         let mut dispatchers = Vec::with_capacity(shards.len());
         for i in 0..shards.len() {
             let sh = Arc::clone(&shards);
             let cache = cache.clone();
             let log = log.clone();
+            let journal = journal.clone();
             let weights_hash = tower.weights_hash().to_string();
             dispatchers.push(
                 std::thread::Builder::new()
@@ -310,6 +389,7 @@ impl ServeScheduler {
                             batch_window,
                             cache.as_deref(),
                             log.as_deref(),
+                            journal.as_deref(),
                             &weights_hash,
                         )
                     })
@@ -329,6 +409,7 @@ impl ServeScheduler {
             max_queue_depth: cfg.max_queue_depth,
             cache,
             log,
+            journal,
             dispatchers,
         })
     }
@@ -464,6 +545,15 @@ impl ServeScheduler {
                 return Err(Error::Rejected { ticket: gate.next_ticket });
             }
         }
+        // journal the submit under the gate, BEFORE the ticket is
+        // consumed: record order is ticket order by construction, and a
+        // fail-stop journal error refuses this submit ticket-free (the
+        // typed `Error::Journal`) — so the accepted ticket sequence
+        // stays a pure function of the event sequence even when the
+        // disk dies mid-run
+        if let Some(j) = &self.journal {
+            j.append_submit(gate.next_ticket, &request)?;
+        }
         // channel only after the gate checks: the hot rejection path
         // (submit → Rejected → flush → resubmit under overload) must not
         // churn the allocator on every refused attempt
@@ -502,6 +592,13 @@ impl ServeScheduler {
         // admitted so far is now cut into formed batches, so it no
         // longer counts against the queue-depth cap
         gate.flushed_upto = upto;
+        // journal every flush event under the gate (recovery dedups):
+        // `flush` cannot surface errors, so a fail-stop journal error
+        // latches in the journal and refuses the NEXT submit instead —
+        // loud, just one event late
+        if let Some(j) = &self.journal {
+            let _ = j.append_flush(upto);
+        }
         for shard in self.shards.iter() {
             let mut q = lock_recover(&shard.q);
             if upto > 0 && q.cuts.back().map_or(true, |&b| upto > b) {
@@ -681,7 +778,14 @@ impl ServeScheduler {
                 "serve truncate: watermark {watermark} exceeds next ticket {next_ticket}"
             )));
         }
-        Ok(log.truncate_below(watermark))
+        let dropped = log.truncate_below(watermark);
+        // journal the rotation AFTER it takes effect in memory, so a
+        // journal that records the watermark implies the log really
+        // rotated (recovery applies the max journaled watermark)
+        if let Some(j) = &self.journal {
+            j.append_truncate(watermark)?;
+        }
+        Ok(dropped)
     }
 
     /// Executed batch compositions, sorted by first ticket (a canonical
@@ -700,6 +804,275 @@ impl ServeScheduler {
         out.sort_by_key(|b| b.tickets.first().copied().unwrap_or(u64::MAX));
         out
     }
+
+    /// The attached journal, if one is configured.
+    pub fn journal(&self) -> Option<&Journal> {
+        self.journal.as_deref()
+    }
+
+    /// Journal health counters, when a journal is configured.
+    pub fn journal_stats(&self) -> Option<JournalStats> {
+        self.journal.as_ref().map(|j| j.stats())
+    }
+
+    /// Sync barrier on the attached journal: drain buffered response
+    /// records (in ticket order) and fsync. Deterministic journal bytes
+    /// are guaranteed when this runs at quiescence — after every
+    /// submitted request has been answered — which is when the
+    /// scheduler itself calls it (on drop, after the dispatchers have
+    /// joined). A no-op without a journal.
+    pub fn sync_journal(&self) -> Result<()> {
+        match &self.journal {
+            Some(j) => j.sync(),
+            None => Ok(()),
+        }
+    }
+
+    /// Rebuild this freshly-built scheduler's serving state from a
+    /// journal readout so the recovered process is **bit-identical to
+    /// an uninterrupted one** (`tests/serve_recovery.rs` pins it cell
+    /// by cell):
+    ///
+    /// 1. verify the journal's `Ident` against this scheduler (same
+    ///    model, weights, shards, batch window — a different layout
+    ///    would deterministically produce a *different* run);
+    /// 2. restore the ticket counter, admission flush clock and
+    ///    truncation watermark from the event stream;
+    /// 3. restore journaled response records into the [`ResponseLog`]
+    ///    (consistency-checked against their own journaled submits —
+    ///    mismatches are counted and re-derived, never trusted);
+    /// 4. re-execute every un-responded ticket at or above the
+    ///    watermark through the **non-ticketed** replay path, batch
+    ///    ids recomputed closed-form from the journaled submit/cut
+    ///    sequence (the dispatcher rule is a pure function, so the
+    ///    recomputed ids equal the ones the lost batches would have
+    ///    had). Tickets journaled as failed are skipped: their clients
+    ///    saw a typed error, and recovery must not invent a response
+    ///    the original run never sent.
+    ///
+    /// Requires `ServeConfig::log` (recovery rebuilds the log) and a
+    /// scheduler that has issued no tickets yet. If a journal is
+    /// attached, re-derived responses are buffered to it and synced, so
+    /// a recovered journal file converges to the uninterrupted run's
+    /// bytes. A journal with degraded-mode drops has holes and is
+    /// refused — its submit record stream can no longer prove what ran.
+    pub fn recover(&self, readout: &JournalReadout) -> Result<RecoveryReport> {
+        let log = self.log.as_deref().ok_or_else(|| {
+            Error::config("serve recover: response log is disabled (ServeConfig::log)")
+        })?;
+        let mut report = RecoveryReport { torn_bytes: readout.torn_bytes, ..Default::default() };
+        let mut submits: BTreeMap<u64, Tensor> = BTreeMap::new();
+        let mut cuts: Vec<u64> = Vec::new();
+        let mut responses: BTreeMap<u64, (u64, String, String, String)> = BTreeMap::new();
+        let mut failed: BTreeSet<u64> = BTreeSet::new();
+        let mut ident_seen = false;
+        let mut watermark = 0u64;
+        for ev in &readout.events {
+            match ev {
+                JournalEvent::Ident {
+                    model_id,
+                    weights_hash,
+                    d_in,
+                    d_out,
+                    shards,
+                    batch_window,
+                } => {
+                    let t = &self.tower;
+                    if model_id != t.model_id()
+                        || weights_hash != t.weights_hash()
+                        || *d_in != t.d_in() as u64
+                        || *d_out != t.d_out() as u64
+                    {
+                        return Err(Error::journal(format!(
+                            "recover: journal is for model '{model_id}' (weights {weights_hash}, \
+                             {d_in}→{d_out}), this scheduler serves '{}' (weights {}, {}→{})",
+                            t.model_id(),
+                            t.weights_hash(),
+                            t.d_in(),
+                            t.d_out()
+                        )));
+                    }
+                    if *shards != self.shards.len() as u64
+                        || *batch_window != self.batch_window as u64
+                    {
+                        return Err(Error::journal(format!(
+                            "recover: journal ran {shards} shards / window {batch_window}, this \
+                             scheduler has {} / {} — batch composition would differ",
+                            self.shards.len(),
+                            self.batch_window
+                        )));
+                    }
+                    ident_seen = true;
+                }
+                JournalEvent::Submit { ticket, request } => {
+                    submits.entry(*ticket).or_insert_with(|| request.clone());
+                }
+                JournalEvent::FlushCut { upto } => cuts.push(*upto),
+                JournalEvent::Truncate { watermark: w } => watermark = watermark.max(*w),
+                JournalEvent::Response {
+                    ticket,
+                    batch_id,
+                    request_hash,
+                    response_hash,
+                    weights_hash,
+                } => {
+                    responses.entry(*ticket).or_insert_with(|| {
+                        (*batch_id, request_hash.clone(), response_hash.clone(), weights_hash.clone())
+                    });
+                }
+                JournalEvent::Failed { ticket } => {
+                    failed.insert(*ticket);
+                }
+            }
+        }
+        if !ident_seen {
+            return Err(Error::journal("recover: journal has no ident record"));
+        }
+        // submit tickets must be exactly 0..n: the gate assigns them
+        // contiguously, so a gap means records were dropped (a
+        // degraded-to-memory run) and the stream no longer proves what ran
+        let n = submits.len() as u64;
+        let contiguous = submits.keys().next().map_or(true, |&f| f == 0)
+            && submits.keys().next_back().map_or(true, |&l| l + 1 == n);
+        if !contiguous {
+            return Err(Error::journal(
+                "recover: journal submit tickets are not contiguous from 0 \
+                 (degraded-to-memory drops?)",
+            ));
+        }
+        cuts.sort_unstable();
+        cuts.dedup();
+        cuts.retain(|&c| c > 0);
+        let flushed_upto = cuts.last().copied().unwrap_or(0);
+        {
+            let mut gate = lock_recover(&self.gate);
+            if gate.next_ticket != 0 {
+                return Err(Error::journal(
+                    "recover: scheduler has already issued tickets — recovery needs a \
+                     freshly built one",
+                ));
+            }
+            gate.next_ticket = n;
+            // faithful restore: submits after the last journaled cut
+            // are re-executed below but were never *flushed*, so they
+            // still count as in-flight for admission until the next
+            // flush event
+            gate.flushed_upto = flushed_upto;
+        }
+        let weights_hash = self.tower.weights_hash().to_string();
+        // 3. restore journaled responses (skipping rotated tickets)
+        let mut restored: BTreeSet<u64> = BTreeSet::new();
+        for (&t, (batch_id, req_h, resp_h, w_h)) in &responses {
+            if t < watermark {
+                continue; // rotated away — must not be resurrected
+            }
+            let consistent = submits
+                .get(&t)
+                .map_or(false, |req| hash_tensor(req) == *req_h && *w_h == weights_hash);
+            if !consistent {
+                report.restore_mismatches += 1;
+                continue; // re-derived below (if a submit exists)
+            }
+            log.record(LogEntry {
+                ticket: t,
+                request: submits[&t].clone(),
+                request_hash: req_h.clone(),
+                response_hash: resp_h.clone(),
+                batch_id: *batch_id,
+                weights_hash: w_h.clone(),
+            });
+            restored.insert(t);
+        }
+        log.truncate_below(watermark);
+        // 4. re-execute the un-responded remainder, batch ids recomputed
+        // closed-form from the journaled event sequence
+        let shards_n = self.shards.len() as u64;
+        let mut batch_ids: BTreeMap<u64, u64> = BTreeMap::new();
+        for s in 0..shards_n {
+            let shard_tickets: Vec<u64> =
+                submits.keys().copied().filter(|t| t % shards_n == s).collect();
+            batch_ids.extend(recovered_batch_ids(&shard_tickets, &cuts, self.batch_window));
+        }
+        for (&t, req) in &submits {
+            if t < watermark || restored.contains(&t) {
+                continue;
+            }
+            if failed.contains(&t) {
+                report.failed_skipped += 1;
+                continue;
+            }
+            let shard = &self.shards[(t % shards_n) as usize];
+            // the NON-ticketed path, as replay: a singleton full
+            // recompute is bit-identical to the lost batched original
+            // (batch invariance) and never mutates session state
+            match shard.replica.process(std::slice::from_ref(req)) {
+                Ok(outs) => {
+                    let entry = LogEntry {
+                        ticket: t,
+                        request_hash: hash_tensor(req),
+                        response_hash: hash_tensor(&outs[0]),
+                        request: req.clone(),
+                        batch_id: batch_ids.get(&t).copied().unwrap_or(t),
+                        weights_hash: weights_hash.clone(),
+                    };
+                    if let Some(j) = &self.journal {
+                        j.buffer_response(&entry);
+                    }
+                    log.record(entry);
+                    report.re_executed += 1;
+                }
+                Err(_) => {
+                    if let Some(j) = &self.journal {
+                        j.buffer_failed(t);
+                    }
+                    report.re_execute_failures += 1;
+                }
+            }
+        }
+        report.responses_restored = restored.len() as u64;
+        report.submits = n;
+        report.flush_cuts = cuts.len() as u64;
+        report.next_ticket = n;
+        report.flushed_upto = flushed_upto;
+        report.watermark = watermark;
+        // make the re-derived records durable before serving resumes
+        self.sync_journal()?;
+        Ok(report)
+    }
+}
+
+/// Batch ids for one shard's ticket sequence, recomputed from the
+/// journaled submit/cut stream by simulating the dispatcher's batching
+/// rule (cut segments first, chunked by `window`; then full windows;
+/// then the close-drain tail). The rule is a pure function of the event
+/// sequence — that is the scheduler's core determinism claim — so these
+/// ids equal the ones the crashed run's lost batches carried.
+fn recovered_batch_ids(
+    shard_tickets: &[u64],
+    cuts: &[u64],
+    window: usize,
+) -> BTreeMap<u64, u64> {
+    let mut ids = BTreeMap::new();
+    let mut i = 0usize;
+    let mut chunk = |i: &mut usize, seg_len: usize| {
+        let take = seg_len.min(window);
+        let head = shard_tickets[*i];
+        for &t in &shard_tickets[*i..*i + take] {
+            ids.insert(t, head);
+        }
+        *i += take;
+    };
+    for &c in cuts {
+        while i < shard_tickets.len() && shard_tickets[i] < c {
+            let seg = shard_tickets[i..].iter().take_while(|&&t| t < c).count();
+            chunk(&mut i, seg);
+        }
+    }
+    while i < shard_tickets.len() {
+        let rest = shard_tickets.len() - i;
+        chunk(&mut i, rest);
+    }
+    ids
 }
 
 impl Drop for ServeScheduler {
@@ -707,6 +1080,12 @@ impl Drop for ServeScheduler {
         self.close();
         for h in self.dispatchers.drain(..) {
             let _ = h.join();
+        }
+        // dispatchers have quiesced: every response record is buffered,
+        // so this final sync drains them in ticket order — the step
+        // that makes two identical runs' journal files byte-identical
+        if let Some(j) = &self.journal {
+            let _ = j.sync();
         }
     }
 }
@@ -727,6 +1106,7 @@ fn dispatcher_loop(
     window: usize,
     cache: Option<&MemoCache>,
     log: Option<&ResponseLog>,
+    journal: Option<&Journal>,
     weights_hash: &str,
 ) {
     loop {
@@ -777,7 +1157,7 @@ fn dispatcher_loop(
             }
             trace.push_back(tickets.clone());
         }
-        execute_batch(shard, cache, log, weights_hash, &tickets, &inputs, &senders);
+        execute_batch(shard, cache, log, journal, weights_hash, &tickets, &inputs, &senders);
     }
 }
 
@@ -812,6 +1192,7 @@ fn execute_batch(
     shard: &Shard,
     cache: Option<&MemoCache>,
     log: Option<&ResponseLog>,
+    journal: Option<&Journal>,
     weights_hash: &str,
     tickets: &[u64],
     inputs: &[Tensor],
@@ -819,7 +1200,7 @@ fn execute_batch(
 ) {
     let n = tickets.len();
     // content addresses, computed once per batch, shared by cache + log
-    let hashes: Option<Vec<String>> = (cache.is_some() || log.is_some())
+    let hashes: Option<Vec<String>> = (cache.is_some() || log.is_some() || journal.is_some())
         .then(|| inputs.iter().map(hash_tensor).collect());
     // cache keys embed the model's weights_hash: a response memo can
     // never cross models — even a cache shared by several schedulers
@@ -861,15 +1242,25 @@ fn execute_batch(
             let batch_id = tickets[0];
             for i in 0..n {
                 let o = outs[i].take().expect("every batch slot resolved");
-                if let (Some(l), Some(hs)) = (log, hashes.as_ref()) {
-                    l.record(LogEntry {
+                if log.is_some() || journal.is_some() {
+                    let hs = hashes.as_ref().expect("hashes computed when log/journal on");
+                    let entry = LogEntry {
                         ticket: tickets[i],
                         request: inputs[i].clone(),
                         request_hash: hs[i].clone(),
                         response_hash: hash_tensor(&o),
                         batch_id,
                         weights_hash: weights_hash.to_string(),
-                    });
+                    };
+                    // buffered, not appended: dispatchers race, so
+                    // response records only reach the stream at sync
+                    // barriers, drained in ticket order
+                    if let Some(j) = journal {
+                        j.buffer_response(&entry);
+                    }
+                    if let Some(l) = log {
+                        l.record(entry);
+                    }
                 }
                 let _ = senders[i].send(Ok(o)); // receiver may have given up
             }
@@ -878,7 +1269,14 @@ fn execute_batch(
             // shapes are validated at submit, so this is exceptional;
             // every request in the batch — cache hits included, matching
             // the cache-off outcome — learns the same cause, and nothing
-            // is logged
+            // is logged. The journal records the failure per ticket so
+            // recovery never re-executes (and answers) a request whose
+            // client already saw a typed error.
+            if let Some(j) = journal {
+                for &t in tickets {
+                    j.buffer_failed(t);
+                }
+            }
             let msg = format!("serve batch failed: {e}");
             for tx in senders {
                 let _ = tx.send(Err(Error::runtime(msg.clone())));

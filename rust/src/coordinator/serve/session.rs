@@ -157,6 +157,18 @@ impl SessionStore {
         let inner = lock_recover(&self.inner);
         inner.by_ticket.iter().map(|(&t, k)| (t, k.clone())).collect()
     }
+
+    /// Test hook: panic **while holding the store's internal lock**, so
+    /// the caller's thread poisons it for real. The poison-recovery
+    /// suite (`tests/serve_sessions.rs`) uses this to prove
+    /// [`super::lock_recover`]'s update-atomicity argument on an
+    /// actually-poisoned store — every mutation either completed or
+    /// never started, so serving continues on the guarded value.
+    #[doc(hidden)]
+    pub fn poison_for_test(&self) {
+        let _inner = lock_recover(&self.inner);
+        panic!("SessionStore poisoned by test hook");
+    }
 }
 
 #[cfg(test)]

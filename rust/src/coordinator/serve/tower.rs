@@ -254,6 +254,14 @@ impl TransformerTower {
         &self.model
     }
 
+    /// Test hook: direct access to the session store (when enabled), so
+    /// the poison-recovery suite can poison its internal lock for real
+    /// (`SessionStore::poison_for_test`) and assert serving continues.
+    #[doc(hidden)]
+    pub fn sessions_for_test(&self) -> Option<&SessionStore> {
+        self.sessions.as_ref()
+    }
+
     /// Encode a token sequence as a request tensor (ids as f32 — exact
     /// for any realistic vocab: f32 holds integers ≤ 2²⁴).
     pub fn encode_request(&self, ids: &[usize]) -> Result<Tensor> {

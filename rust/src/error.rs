@@ -45,6 +45,13 @@ pub enum Error {
         watermark: u64,
     },
 
+    /// Serve-journal I/O or framing failure (durable journal append,
+    /// header/record decode, recovery consistency). Typed so the
+    /// scheduler's degradation policy can match on it: `FailStop`
+    /// surfaces it to the submitting client, `DegradeToMemory` counts
+    /// it — either way never a silent hole in the journal.
+    Journal(String),
+
     /// Underlying XLA error.
     Xla(String),
 
@@ -66,6 +73,7 @@ impl fmt::Display for Error {
                 f,
                 "truncated: ticket {ticket} is below the response-log watermark {watermark}"
             ),
+            Error::Journal(m) => write!(f, "journal error: {m}"),
             Error::Xla(m) => write!(f, "xla error: {m}"),
             Error::Io(e) => write!(f, "io error: {e}"),
         }
@@ -100,6 +108,10 @@ impl Error {
     pub fn runtime(msg: impl Into<String>) -> Self {
         Error::Runtime(msg.into())
     }
+    /// Convenience constructor for serve-journal errors.
+    pub fn journal(msg: impl Into<String>) -> Self {
+        Error::Journal(msg.into())
+    }
 }
 
 #[cfg(test)]
@@ -119,6 +131,10 @@ mod tests {
             "rejected: serve queue-depth cap hit at ticket 7"
         );
         assert!(format!("{}", Error::Closed).starts_with("closed:"));
+        assert_eq!(
+            format!("{}", Error::journal("torn tail")),
+            "journal error: torn tail"
+        );
     }
 
     #[test]

@@ -12,7 +12,10 @@
 //!                 --width/--heads/--layers/--context plus --sessions
 //!                 [--session-capacity S] for KV-cached incremental
 //!                 decode over a growing-prefix stream queue, mlp takes
-//!                 --hidden)
+//!                 --hidden; --journal PATH appends the durable event
+//!                 journal, --recover rebuilds from an existing one
+//!                 before serving, --journal-degrade picks
+//!                 degrade-to-memory over fail-stop)
 //!   runtime      load + execute an AOT artifact (needs `make artifacts`)
 //!   selftest     quick determinism smoke checks
 
@@ -24,7 +27,7 @@ use repdl::nn::{CharTransformer, TransformerConfig};
 use repdl::optim::Adam;
 use repdl::tensor::Tensor;
 
-fn main() {
+fn main() -> std::process::ExitCode {
     let args = Args::from_env();
     let code = match args.command.as_deref() {
         Some("train") => cmd_train(&args),
@@ -41,7 +44,11 @@ fn main() {
             2
         }
     };
-    std::process::exit(code);
+    // orderly shutdown: returning (instead of `std::process::exit`) runs
+    // every destructor on the way out — schedulers drain and join their
+    // dispatchers, and the serve journal drains its buffered response
+    // records and fsyncs, so a clean exit always leaves a clean journal
+    std::process::ExitCode::from(code as u8)
 }
 
 fn trainer_cfg(args: &Args) -> TrainerConfig {
@@ -153,7 +160,8 @@ fn cmd_transformer(args: &Args) -> i32 {
 
 fn cmd_serve(args: &Args) -> i32 {
     use repdl::coordinator::{
-        MlpTower, ModelTower, ServeConfig, ServeScheduler, TransformerTower,
+        read_journal, Journal, JournalPolicy, MlpTower, ModelTower, ServeConfig,
+        ServeScheduler, TransformerTower,
     };
     use repdl::nn::{Act, Mlp};
     use repdl::tensor::{global_pool_handle, WorkerPool};
@@ -169,6 +177,18 @@ fn cmd_serve(args: &Args) -> i32 {
     let max_queue_depth = args.get_opt_usize("max-queue-depth");
     let cache_capacity = args.get_usize("cache-capacity", 0);
     let do_replay = args.has("replay");
+    // durable event journal (ISSUE 7): --journal PATH appends the
+    // crash-consistent event journal; --recover rebuilds serving state
+    // from an existing one before accepting new requests (the
+    // cross-process reproducibility story); recovery implies the
+    // response log, which it rebuilds
+    let journal_path = args.get_opt_str("journal").map(std::path::PathBuf::from);
+    let do_recover = args.has("recover");
+    let journal_policy = if args.has("journal-degrade") {
+        JournalPolicy::DegradeToMemory
+    } else {
+        JournalPolicy::FailStop
+    };
     // KV sessions (transformer only): --sessions turns the store on,
     // --session-capacity bounds it (deterministic ticket-FIFO eviction)
     let session_capacity = if args.has("sessions") {
@@ -291,14 +311,80 @@ fn cmd_serve(args: &Args) -> i32 {
     // submitters over `shards` replicas sharing one pool — per-request
     // bits must equal the single-caller reference exactly
     let reference = tower.forward_batch(&pool, &queue).expect("reference");
+    // open the journal before the scheduler exists: --recover first
+    // repairs any torn tail in place (read_journal), then the scheduler
+    // appends onto the intact record boundary
+    let mut readout = None;
+    let journal = match &journal_path {
+        Some(path) => {
+            if do_recover {
+                match read_journal(path) {
+                    Ok(r) => {
+                        if r.truncated_tail() {
+                            println!("journal torn_bytes={} (tail repaired)", r.torn_bytes);
+                        }
+                        readout = Some(r);
+                    }
+                    Err(e) => {
+                        eprintln!("serve: {e}");
+                        return 1;
+                    }
+                }
+            }
+            match Journal::open_append(path, journal_policy) {
+                Ok(j) => {
+                    if !j.is_fresh() && !do_recover {
+                        eprintln!(
+                            "serve: journal {} already holds records — pass --recover to \
+                             rebuild from it (or point --journal at a fresh path)",
+                            path.display()
+                        );
+                        return 2;
+                    }
+                    Some(Arc::new(j))
+                }
+                Err(e) => {
+                    eprintln!("serve: {e}");
+                    return 1;
+                }
+            }
+        }
+        None => None,
+    };
+    let recovering = readout.as_ref().is_some_and(|r| !r.events.is_empty());
     let cfg = ServeConfig {
         batch_window: window,
         max_queue_depth,
         cache_capacity,
-        log: do_replay,
+        log: do_replay || recovering,
+        journal,
     };
     let sched = ServeScheduler::sharded_with(Arc::clone(&tower), shards, pool, cfg)
         .expect("scheduler");
+    let mut recover_ok = true;
+    if recovering {
+        match sched.recover(readout.as_ref().expect("readout present when recovering")) {
+            Ok(rep) => {
+                println!(
+                    "recovery submits={} restored={} re_executed={} failed_skipped={} \
+                     mismatches={} next_ticket={} watermark={} consistent={}",
+                    rep.submits,
+                    rep.responses_restored,
+                    rep.re_executed,
+                    rep.failed_skipped,
+                    rep.restore_mismatches,
+                    rep.next_ticket,
+                    rep.watermark,
+                    rep.consistent()
+                );
+                recover_ok = rep.consistent();
+            }
+            Err(e) => {
+                eprintln!("recover failed: {e}");
+                return 1;
+            }
+        }
+    }
     let t0 = std::time::Instant::now();
     let mismatch = std::thread::scope(|s| {
         let handles: Vec<_> = (0..clients)
@@ -362,7 +448,23 @@ fn cmd_serve(args: &Args) -> i32 {
     } else {
         true
     };
-    if e7_ok && mismatch == 0 && replay_ok {
+    // explicit journal barrier before exit so a sync failure is a loud
+    // nonzero exit, not something the drop path swallows; the drop-time
+    // sync then finds nothing left to do
+    let journal_ok = match sched.sync_journal() {
+        Ok(()) => true,
+        Err(e) => {
+            eprintln!("journal sync failed: {e}");
+            false
+        }
+    };
+    if let Some(js) = sched.journal_stats() {
+        println!(
+            "journal appends={} buffered={} drops={} failed={}",
+            js.appends, js.buffered, js.drops, js.failed
+        );
+    }
+    if e7_ok && mismatch == 0 && replay_ok && recover_ok && journal_ok {
         0
     } else {
         1

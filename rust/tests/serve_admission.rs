@@ -40,7 +40,13 @@ fn bits_eq(a: &[f32], b: &[f32]) -> bool {
 }
 
 fn cfg(window: usize, depth: Option<usize>, cache: usize, log: bool) -> ServeConfig {
-    ServeConfig { batch_window: window, max_queue_depth: depth, cache_capacity: cache, log }
+    ServeConfig {
+        batch_window: window,
+        max_queue_depth: depth,
+        cache_capacity: cache,
+        log,
+        journal: None,
+    }
 }
 
 /// THE acceptance grid: the single-threaded backpressure protocol's

@@ -1,0 +1,661 @@
+//! Crash-consistent recovery conformance suite (DESIGN.md §11).
+//!
+//! The tentpole claim: a serve process recovered from its journal is
+//! **bit-identical to one that never crashed**. The crash matrix cuts
+//! the reference run's journal after *every* record boundary (and mid-
+//! record, for torn tails), across shards × pool lanes × cache on/off ×
+//! KV-sessions on/off, and asserts in every cell that
+//!
+//! * recovery restores/re-derives exactly the journaled tickets with
+//!   the uninterrupted run's response hashes AND batch ids,
+//! * the resumed process serves the remaining requests with the
+//!   uninterrupted run's bits, and
+//! * `replay()` re-verifies the stitched log end to end.
+//!
+//! Around the matrix: journal byte-determinism (two identical runs →
+//! identical files), deterministic fault injection (fail-stop vs
+//! degrade-to-memory, short writes → torn tails), watermark survival,
+//! failed-batch tickets, and the identity checks that make recovery
+//! refuse a journal it cannot faithfully continue.
+
+use repdl::coordinator::{
+    read_journal, DeterministicServer, FaultPlan, FaultyWriter, Journal, JournalPolicy,
+    ModelTower, PanicAtTicket, ServeConfig, ServeScheduler, TransformerTower, VecWriter,
+};
+use repdl::nn::{CharTransformer, TransformerConfig};
+use repdl::rng::uniform_tensor;
+use repdl::tensor::{Tensor, WorkerPool};
+use repdl::Error;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("repdl-serve-recovery");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+/// The 12-byte file header (`REPDLJNL` + LE version 1), re-derived here
+/// so the tests pin the on-disk format independently of the encoder.
+fn journal_header() -> Vec<u8> {
+    let mut h = b"REPDLJNL".to_vec();
+    h.extend(1u32.to_le_bytes());
+    h
+}
+
+/// Byte offsets of every record boundary in a cleanly closed journal
+/// file, starting at the header boundary — recomputed from the
+/// length-prefixed framing (u32 LE len ‖ payload ‖ 32-byte digest).
+fn record_boundaries(bytes: &[u8]) -> Vec<usize> {
+    let mut out = vec![12usize];
+    let mut off = 12usize;
+    while off < bytes.len() {
+        let len = u32::from_le_bytes(bytes[off..off + 4].try_into().unwrap()) as usize;
+        off += 4 + len + 32;
+        out.push(off);
+    }
+    assert_eq!(off, bytes.len(), "reference journal must be cleanly closed");
+    out
+}
+
+fn server(d_in: usize, d_out: usize, seed: u64) -> Arc<DeterministicServer> {
+    let w = uniform_tensor(&[d_in, d_out], -0.3, 0.3, seed);
+    Arc::new(DeterministicServer::new(w, 8).unwrap())
+}
+
+fn queue(n: usize, d: usize, seed: u64) -> Vec<Tensor> {
+    (0..n)
+        .map(|i| uniform_tensor(&[d], -1.0, 1.0, seed + i as u64))
+        .collect()
+}
+
+fn cfg(journal: Option<Arc<Journal>>) -> ServeConfig {
+    ServeConfig { batch_window: 4, log: true, journal, ..Default::default() }
+}
+
+fn tiny_model() -> CharTransformer {
+    let c = TransformerConfig {
+        vocab: 10,
+        dim: 8,
+        heads: 2,
+        layers: 1,
+        context: 4,
+        mlp_ratio: 2,
+    };
+    CharTransformer::new(c, 17).unwrap()
+}
+
+fn prefix(stream: &[usize; 4], tt: usize) -> Tensor {
+    Tensor::from_vec(&[tt], stream[..tt].iter().map(|&i| i as f32).collect()).unwrap()
+}
+
+/// THE crash matrix. Every cell builds an uninterrupted journaled
+/// reference run, then for every crash point — after each record, plus
+/// torn mid-record tails on the widest cells — rebuilds a fresh
+/// scheduler from the cut journal and demands bit-identity with the
+/// reference, both for the recovered prefix and for the resumed
+/// remainder.
+#[test]
+fn crash_at_every_record_boundary_recovers_bit_identically_everywhere() {
+    let streams: [[usize; 4]; 2] = [[1, 4, 2, 9], [5, 0, 3, 7]];
+    // interleaved decode prefixes + a repeated tail, so cache-on cells
+    // serve real hits and session-on cells take the incremental path
+    let mut q: Vec<Tensor> = Vec::new();
+    for tt in 1..=4 {
+        for s in &streams {
+            q.push(prefix(s, tt));
+        }
+    }
+    for tt in 1..=2 {
+        for s in &streams {
+            q.push(prefix(s, tt));
+        }
+    }
+    let n = q.len() as u64; // 12
+    for shards in [1usize, 2] {
+        for lanes in [1usize, 2] {
+            for cache in [0usize, 8] {
+                for sessions in [false, true] {
+                    let cell = format!("shards={shards} lanes={lanes} cache={cache} kv={sessions}");
+                    let mk_tower = || -> Arc<dyn ModelTower> {
+                        let t = TransformerTower::new(tiny_model()).unwrap();
+                        Arc::new(if sessions { t.with_sessions(8) } else { t })
+                    };
+                    let mk_cfg = |j: Option<Arc<Journal>>| ServeConfig {
+                        batch_window: 4,
+                        cache_capacity: cache,
+                        log: true,
+                        journal: j,
+                        ..Default::default()
+                    };
+                    // uninterrupted reference run, journaled
+                    let ref_path =
+                        tmp(&format!("matrix-s{shards}l{lanes}c{cache}k{sessions}-ref.journal"));
+                    let want: Vec<Tensor>;
+                    let want_entries: Vec<(String, u64)>;
+                    {
+                        let j = Journal::create(&ref_path, JournalPolicy::FailStop).unwrap();
+                        let sched = ServeScheduler::sharded_with(
+                            mk_tower(),
+                            shards,
+                            WorkerPool::shared(lanes),
+                            mk_cfg(Some(Arc::new(j))),
+                        )
+                        .unwrap();
+                        want = sched.process_all(&q).unwrap();
+                        let log = sched.log().unwrap();
+                        want_entries = (0..n)
+                            .map(|t| {
+                                let e = log.get(t).unwrap();
+                                (e.response_hash.clone(), e.batch_id)
+                            })
+                            .collect();
+                    } // drop: dispatchers join, buffered responses drain
+                    let bytes = std::fs::read(&ref_path).unwrap();
+                    let mut crash_points = record_boundaries(&bytes);
+                    if shards == 2 && lanes == 2 {
+                        // torn tails too: cut 8 bytes into every record
+                        // (mid length-field or mid payload — read_journal
+                        // must repair either to the previous boundary)
+                        let ends = crash_points.clone();
+                        for w in ends.windows(2) {
+                            crash_points.push(w[0] + 8);
+                        }
+                    }
+                    let crash_path =
+                        tmp(&format!("matrix-s{shards}l{lanes}c{cache}k{sessions}-crash.journal"));
+                    for &cp in &crash_points {
+                        std::fs::write(&crash_path, &bytes[..cp]).unwrap();
+                        let readout = read_journal(&crash_path).unwrap();
+                        let j = Journal::open_append(&crash_path, JournalPolicy::FailStop).unwrap();
+                        let sched = ServeScheduler::sharded_with(
+                            mk_tower(),
+                            shards,
+                            WorkerPool::shared(lanes),
+                            mk_cfg(Some(Arc::new(j))),
+                        )
+                        .unwrap();
+                        let k = if readout.events.is_empty() {
+                            0 // crashed before the ident record: cold start
+                        } else {
+                            let rep = sched.recover(&readout).unwrap();
+                            assert!(rep.consistent(), "{cell} cp={cp}: {rep:?}");
+                            assert_eq!(
+                                rep.responses_restored + rep.re_executed,
+                                rep.next_ticket,
+                                "{cell} cp={cp}: every journaled ticket accounted for"
+                            );
+                            rep.next_ticket as usize
+                        };
+                        let log = sched.log().unwrap();
+                        for t in 0..k as u64 {
+                            let e = log.get(t).unwrap();
+                            let (want_hash, want_batch) = &want_entries[t as usize];
+                            assert_eq!(
+                                &e.response_hash, want_hash,
+                                "{cell} cp={cp} ticket {t}: recovered bits differ"
+                            );
+                            assert_eq!(
+                                e.batch_id, *want_batch,
+                                "{cell} cp={cp} ticket {t}: recovered batch id differs"
+                            );
+                        }
+                        // resume the interrupted run: the remaining
+                        // requests must get the uninterrupted run's bits
+                        let pending: Vec<_> =
+                            q[k..].iter().map(|r| sched.submit(r.clone()).unwrap()).collect();
+                        sched.flush();
+                        for (i, p) in pending.into_iter().enumerate() {
+                            let got = p.wait().unwrap();
+                            assert!(
+                                got.bit_eq(&want[k + i]),
+                                "{cell} cp={cp}: resumed request {} changed bits",
+                                k + i
+                            );
+                        }
+                        // full audit of the stitched (restored +
+                        // re-derived + freshly served) log
+                        let rep2 = sched.replay(0..n).unwrap();
+                        assert_eq!(rep2.replayed, q.len(), "{cell} cp={cp}");
+                        assert!(rep2.verified(), "{cell} cp={cp}: {rep2:?}");
+                    }
+                    std::fs::remove_file(&ref_path).ok();
+                    std::fs::remove_file(&crash_path).ok();
+                }
+            }
+        }
+    }
+}
+
+/// Two identical logical runs must produce **byte-identical** journal
+/// files — no wall clock, pids or thread timing in the stream — for one
+/// and for two racing dispatchers. Different layouts must differ (the
+/// ident record pins them apart).
+#[test]
+fn identical_runs_write_byte_identical_journal_files() {
+    let srv = server(16, 4, 3);
+    let q = queue(10, 16, 600);
+    let mut per_shards: Vec<Vec<u8>> = Vec::new();
+    for shards in [1usize, 2] {
+        let mut files: Vec<Vec<u8>> = Vec::new();
+        for run in 0..2 {
+            let path = tmp(&format!("bytes-s{shards}-r{run}.journal"));
+            let j = Journal::create(&path, JournalPolicy::FailStop).unwrap();
+            let sched = ServeScheduler::sharded_with(
+                Arc::clone(&srv),
+                shards,
+                WorkerPool::shared(2),
+                cfg(Some(Arc::new(j))),
+            )
+            .unwrap();
+            sched.process_all(&q).unwrap();
+            drop(sched); // joins dispatchers, drains responses, fsyncs
+            files.push(std::fs::read(&path).unwrap());
+            std::fs::remove_file(&path).ok();
+        }
+        assert_eq!(
+            files[0], files[1],
+            "shards={shards}: identical runs diverged on journal bytes"
+        );
+        per_shards.push(files.remove(0));
+    }
+    assert_ne!(per_shards[0], per_shards[1], "the ident record must pin the shard layout");
+}
+
+/// A short write mid-run (the on-disk signature of a crash inside
+/// `write(2)`) leaves a torn tail; `read_journal` repairs it in place
+/// and recovery re-derives the durable prefix bit-identically.
+#[test]
+fn a_short_write_crash_recovers_the_durable_prefix_bit_identically() {
+    let srv = server(16, 4, 5);
+    let q = queue(8, 16, 700);
+    // the reference bits, from a journal-less run of the same scheduler
+    let want = ServeScheduler::sharded_with(
+        Arc::clone(&srv),
+        1,
+        WorkerPool::shared(1),
+        cfg(None),
+    )
+    .unwrap()
+    .process_all(&q)
+    .unwrap();
+    // appends: ident=0, submit t=1..; short-write append 4 (= submit of
+    // ticket 3) to its first 7 bytes, then degrade so serving continues
+    let buf = Arc::new(Mutex::new(Vec::new()));
+    let writer = FaultyWriter::new(
+        Box::new(VecWriter::new(Arc::clone(&buf))),
+        FaultPlan::new().short_append(4, 7),
+    );
+    let j = Journal::with_writer(Box::new(writer), JournalPolicy::DegradeToMemory);
+    let sched = ServeScheduler::sharded_with(
+        Arc::clone(&srv),
+        1,
+        WorkerPool::shared(1),
+        cfg(Some(Arc::new(j))),
+    )
+    .unwrap();
+    let outs = sched.process_all(&q).unwrap();
+    for (a, b) in outs.iter().zip(want.iter()) {
+        assert!(a.bit_eq(b), "degraded journalling must never change bits");
+    }
+    let stats = sched.journal_stats().unwrap();
+    assert!(stats.drops > 0, "the short write and everything after it count as drops");
+    drop(sched);
+    // materialise the torn stream as a journal file and recover from it
+    let path = tmp("short-write.journal");
+    let mut file = journal_header();
+    file.extend(lock_bytes(&buf));
+    std::fs::write(&path, &file).unwrap();
+    let readout = read_journal(&path).unwrap();
+    assert_eq!(readout.torn_bytes, 7, "exactly the short-written bytes are repaired away");
+    assert_eq!(
+        std::fs::metadata(&path).unwrap().len() as usize,
+        file.len() - 7,
+        "the repair is physical"
+    );
+    let sched = ServeScheduler::sharded_with(
+        Arc::clone(&srv),
+        1,
+        WorkerPool::shared(1),
+        cfg(Some(Arc::new(Journal::open_append(&path, JournalPolicy::FailStop).unwrap()))),
+    )
+    .unwrap();
+    let rep = sched.recover(&readout).unwrap();
+    assert!(rep.consistent(), "{rep:?}");
+    assert_eq!(rep.submits, 3, "tickets 0..3 were durable before the torn submit");
+    assert_eq!(rep.re_executed, 3, "no response record survived: all re-derived");
+    let log = sched.log().unwrap();
+    for t in 0..3u64 {
+        assert_eq!(
+            log.get(t).unwrap().response_hash,
+            repdl::coordinator::hash_tensor(&want[t as usize]),
+            "ticket {t}: recovered bits differ from the uninterrupted run"
+        );
+    }
+    // resume: the rest of the queue serves the uninterrupted bits
+    let pending: Vec<_> = q[3..].iter().map(|r| sched.submit(r.clone()).unwrap()).collect();
+    sched.flush();
+    for (i, p) in pending.into_iter().enumerate() {
+        assert!(p.wait().unwrap().bit_eq(&want[3 + i]));
+    }
+    assert!(sched.replay(0..8).unwrap().verified());
+    drop(sched);
+    std::fs::remove_file(&path).ok();
+}
+
+fn lock_bytes(buf: &Arc<Mutex<Vec<u8>>>) -> Vec<u8> {
+    buf.lock().unwrap_or_else(|e| e.into_inner()).clone()
+}
+
+/// Fail-stop: the submit whose journal append fails gets the typed
+/// `Error::Journal`, consumes **no ticket**, and every later submit
+/// fails with the latched cause — while already-accepted requests are
+/// still answered with exact bits.
+#[test]
+fn fail_stop_fails_the_submit_without_consuming_a_ticket() {
+    let srv = server(16, 4, 9);
+    let q = queue(3, 16, 800);
+    let buf = Arc::new(Mutex::new(Vec::new()));
+    let writer = FaultyWriter::new(
+        Box::new(VecWriter::new(Arc::clone(&buf))),
+        FaultPlan::new().fail_append(2), // ident=0, submit 0=1, submit 1=2
+    );
+    let j = Journal::with_writer(Box::new(writer), JournalPolicy::FailStop);
+    let sched = ServeScheduler::sharded_with(
+        Arc::clone(&srv),
+        1,
+        WorkerPool::shared(1),
+        cfg(Some(Arc::new(j))),
+    )
+    .unwrap();
+    let p0 = sched.submit(q[0].clone()).unwrap();
+    let e = sched.submit(q[1].clone()).unwrap_err();
+    assert!(matches!(e, Error::Journal(_)), "want Error::Journal, got {e:?}");
+    assert!(format!("{e}").contains("injected fault"), "{e}");
+    // latched: the journal can no longer prove the event stream, so
+    // every later submit is refused with the original cause
+    let e2 = sched.submit(q[2].clone()).unwrap_err();
+    assert!(matches!(e2, Error::Journal(_)), "{e2:?}");
+    sched.flush();
+    assert!(p0.wait().unwrap().bit_eq(
+        &ServeScheduler::sharded(Arc::clone(&srv), 1, 4, WorkerPool::shared(1))
+            .unwrap()
+            .process_all(&q[..1])
+            .unwrap()[0]
+    ));
+    let stats = sched.journal_stats().unwrap();
+    assert!(stats.failed);
+    assert_eq!(stats.appends, 2, "ident + the one durable submit");
+    // no ticket was consumed by the failed submits: exactly one logged
+    assert_eq!(sched.log().unwrap().len(), 1);
+}
+
+/// Degrade-to-memory: serving continues bit-identically past the fault,
+/// every unpersisted record is counted, and the journal's durable
+/// prefix still recovers bit-exactly (with recovery running without any
+/// journal attached — the readout alone carries the evidence).
+#[test]
+fn degrade_to_memory_keeps_serving_and_recovers_its_durable_prefix() {
+    let srv = server(16, 4, 11);
+    let q = queue(6, 16, 900);
+    let want = ServeScheduler::sharded_with(
+        Arc::clone(&srv),
+        1,
+        WorkerPool::shared(1),
+        cfg(None),
+    )
+    .unwrap()
+    .process_all(&q)
+    .unwrap();
+    let buf = Arc::new(Mutex::new(Vec::new()));
+    let writer = FaultyWriter::new(
+        Box::new(VecWriter::new(Arc::clone(&buf))),
+        FaultPlan::new().fail_append(3), // ident, submits 0 and 1 land
+    );
+    let j = Journal::with_writer(Box::new(writer), JournalPolicy::DegradeToMemory);
+    let sched = ServeScheduler::sharded_with(
+        Arc::clone(&srv),
+        1,
+        WorkerPool::shared(1),
+        cfg(Some(Arc::new(j))),
+    )
+    .unwrap();
+    let outs = sched.process_all(&q).unwrap();
+    for (a, b) in outs.iter().zip(want.iter()) {
+        assert!(a.bit_eq(b), "degradation must never change bits");
+    }
+    drop(sched);
+    // drops: submit 2 (the fault) + submits 3..5 + one flush cut + six
+    // buffered responses drained at drop = 11, all counted
+    // deterministically — reconstruct the journal and check the prefix
+    let path = tmp("degrade.journal");
+    let mut file = journal_header();
+    file.extend(lock_bytes(&buf));
+    std::fs::write(&path, &file).unwrap();
+    let readout = read_journal(&path).unwrap();
+    assert_eq!(readout.torn_bytes, 0, "degraded drops never tear the stream");
+    let sched = ServeScheduler::sharded_with(
+        Arc::clone(&srv),
+        1,
+        WorkerPool::shared(1),
+        cfg(None),
+    )
+    .unwrap();
+    let rep = sched.recover(&readout).unwrap();
+    assert!(rep.consistent(), "{rep:?}");
+    assert_eq!((rep.submits, rep.re_executed, rep.next_ticket), (2, 2, 2));
+    let log = sched.log().unwrap();
+    for t in 0..2u64 {
+        assert_eq!(
+            log.get(t).unwrap().response_hash,
+            repdl::coordinator::hash_tensor(&want[t as usize]),
+            "ticket {t}"
+        );
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+/// The exact drop accounting of a degraded run is deterministic: every
+/// record the tripped writer could not persist is counted, none twice.
+#[test]
+fn degraded_drop_counters_are_event_sequence_pure() {
+    let srv = server(16, 4, 11);
+    let q = queue(6, 16, 900);
+    for _ in 0..2 {
+        let buf = Arc::new(Mutex::new(Vec::new()));
+        let writer = FaultyWriter::new(
+            Box::new(VecWriter::new(Arc::clone(&buf))),
+            FaultPlan::new().fail_append(3),
+        );
+        let j = Journal::with_writer(Box::new(writer), JournalPolicy::DegradeToMemory);
+        let sched = ServeScheduler::sharded_with(
+            Arc::clone(&srv),
+            1,
+            WorkerPool::shared(1),
+            cfg(Some(Arc::new(j))),
+        )
+        .unwrap();
+        sched.process_all(&q).unwrap();
+        sched.sync_journal().unwrap();
+        let stats = sched.journal_stats().unwrap();
+        assert!(!stats.failed, "degrade mode never latches a failure");
+        assert_eq!(stats.appends, 3, "ident + submits 0,1");
+        assert_eq!(
+            stats.drops, 11,
+            "submit 2 + submits 3..5 + one flush cut + six responses"
+        );
+    }
+}
+
+/// A journaled log rotation survives the crash: recovery applies the
+/// max truncation watermark, refuses to resurrect rotated responses,
+/// and the recovered log replays only above the watermark.
+#[test]
+fn the_truncation_watermark_survives_recovery() {
+    let srv = server(16, 4, 13);
+    let q = queue(8, 16, 1000);
+    let path = tmp("watermark.journal");
+    let want: Vec<Tensor>;
+    {
+        let j = Journal::create(&path, JournalPolicy::FailStop).unwrap();
+        let sched = ServeScheduler::sharded_with(
+            Arc::clone(&srv),
+            1,
+            WorkerPool::shared(1),
+            cfg(Some(Arc::new(j))),
+        )
+        .unwrap();
+        want = sched.process_all(&q).unwrap();
+        assert_eq!(sched.truncate_log_below(5).unwrap(), 5);
+    }
+    let readout = read_journal(&path).unwrap();
+    let sched = ServeScheduler::sharded_with(
+        Arc::clone(&srv),
+        1,
+        WorkerPool::shared(1),
+        cfg(Some(Arc::new(Journal::open_append(&path, JournalPolicy::FailStop).unwrap()))),
+    )
+    .unwrap();
+    let rep = sched.recover(&readout).unwrap();
+    assert!(rep.consistent(), "{rep:?}");
+    assert_eq!(rep.watermark, 5);
+    assert_eq!(rep.submits, 8);
+    assert_eq!(rep.responses_restored, 3, "only tickets 5..8 may come back");
+    assert_eq!(rep.re_executed, 0, "rotated tickets are not re-derived either");
+    let log = sched.log().unwrap();
+    assert_eq!(log.len(), 3);
+    assert_eq!(log.watermark(), 5);
+    for t in 5..8u64 {
+        assert_eq!(
+            log.get(t).unwrap().response_hash,
+            repdl::coordinator::hash_tensor(&want[t as usize])
+        );
+    }
+    assert!(sched.replay(5..8).unwrap().verified());
+    // reaching below the recovered watermark is the typed audit error,
+    // exactly as in the uninterrupted process
+    assert!(sched.replay(0..8).is_err());
+    drop(sched);
+    std::fs::remove_file(&path).ok();
+}
+
+/// Tickets journaled as failed (their batch hit a tower bug and every
+/// client saw the typed error) are skipped by recovery: it must never
+/// invent a response the original run never sent.
+#[test]
+fn failed_tickets_are_skipped_never_resurrected() {
+    let q = queue(3, 16, 1100);
+    let path = tmp("failed.journal");
+    let mk_tower = || {
+        let w = uniform_tensor(&[16, 4], -0.3, 0.3, 15);
+        Arc::new(PanicAtTicket::new(DeterministicServer::new(w, 8).unwrap(), 1))
+            as Arc<dyn ModelTower>
+    };
+    {
+        let j = Journal::create(&path, JournalPolicy::FailStop).unwrap();
+        let sched = ServeScheduler::sharded_with(
+            mk_tower(),
+            1,
+            WorkerPool::shared(1),
+            ServeConfig { batch_window: 2, log: true, journal: Some(Arc::new(j)), ..Default::default() },
+        )
+        .unwrap();
+        // tickets 0 and 1 share the window-2 batch the injected panic
+        // kills; both clients get the typed shield error
+        let p0 = sched.submit(q[0].clone()).unwrap();
+        let p1 = sched.submit(q[1].clone()).unwrap();
+        sched.flush();
+        for p in [p0, p1] {
+            let e = p.wait().unwrap_err();
+            assert!(format!("{e}").contains("panicked"), "{e}");
+        }
+        let p2 = sched.submit(q[2].clone()).unwrap();
+        sched.flush();
+        p2.wait().unwrap();
+    }
+    let readout = read_journal(&path).unwrap();
+    let sched = ServeScheduler::sharded_with(
+        mk_tower(),
+        1,
+        WorkerPool::shared(1),
+        ServeConfig {
+            batch_window: 2,
+            log: true,
+            journal: Some(Arc::new(Journal::open_append(&path, JournalPolicy::FailStop).unwrap())),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let rep = sched.recover(&readout).unwrap();
+    assert!(rep.consistent(), "{rep:?}");
+    assert_eq!(rep.failed_skipped, 2, "both panicked tickets stay failed");
+    assert_eq!(rep.responses_restored, 1, "the survivor's journaled response is restored");
+    assert_eq!(rep.re_executed, 0);
+    let log = sched.log().unwrap();
+    assert!(log.get(0).is_none() && log.get(1).is_none(), "no invented responses");
+    assert!(log.get(2).is_some());
+    assert!(sched.replay(2..3).unwrap().verified());
+    // the recovered process keeps serving: new tickets are past the
+    // panic ticket, so the same tower now answers normally
+    let p = sched.submit(q[0].clone()).unwrap();
+    sched.flush();
+    p.wait().unwrap();
+    drop(sched);
+    std::fs::remove_file(&path).ok();
+}
+
+/// Recovery refuses journals it cannot faithfully continue: wrong
+/// weights, wrong shard/window layout, a scheduler that already issued
+/// tickets, a disabled response log, or a stream with no ident record.
+#[test]
+fn recovery_refuses_identity_and_state_mismatches() {
+    let q = queue(4, 16, 1200);
+    let path = tmp("identity.journal");
+    {
+        let j = Journal::create(&path, JournalPolicy::FailStop).unwrap();
+        let sched = ServeScheduler::sharded_with(
+            server(16, 4, 21),
+            1,
+            WorkerPool::shared(1),
+            cfg(Some(Arc::new(j))),
+        )
+        .unwrap();
+        sched.process_all(&q).unwrap();
+    }
+    let readout = read_journal(&path).unwrap();
+    let fresh = |srv: Arc<DeterministicServer>, shards: usize, log: bool| {
+        ServeScheduler::sharded_with(
+            srv,
+            shards,
+            WorkerPool::shared(1),
+            ServeConfig { batch_window: 4, log, ..Default::default() },
+        )
+        .unwrap()
+    };
+    // different weights (same model id, different hash)
+    let e = fresh(server(16, 4, 22), 1, true).recover(&readout).unwrap_err();
+    assert!(matches!(e, Error::Journal(_)), "{e:?}");
+    assert!(format!("{e}").contains("journal is for model"), "{e}");
+    // different shard layout: batch composition would differ
+    let e = fresh(server(16, 4, 21), 2, true).recover(&readout).unwrap_err();
+    assert!(format!("{e}").contains("batch composition would differ"), "{e}");
+    // a scheduler that already issued a ticket
+    let used = fresh(server(16, 4, 21), 1, true);
+    let p = used.submit(q[0].clone()).unwrap();
+    used.flush();
+    p.wait().unwrap();
+    let e = used.recover(&readout).unwrap_err();
+    assert!(format!("{e}").contains("freshly built"), "{e}");
+    // recovery rebuilds the log, so it must be enabled
+    let e = fresh(server(16, 4, 21), 1, false).recover(&readout).unwrap_err();
+    assert!(format!("{e}").contains("response log is disabled"), "{e}");
+    // a header-only stream has no ident record to verify against
+    let hdr_path = tmp("header-only.journal");
+    std::fs::write(&hdr_path, journal_header()).unwrap();
+    let empty = read_journal(&hdr_path).unwrap();
+    assert!(empty.events.is_empty());
+    let e = fresh(server(16, 4, 21), 1, true).recover(&empty).unwrap_err();
+    assert!(format!("{e}").contains("no ident record"), "{e}");
+    std::fs::remove_file(&path).ok();
+    std::fs::remove_file(&hdr_path).ok();
+}

@@ -214,3 +214,72 @@ fn a_shared_batch_panic_fails_the_whole_batch_with_one_typed_cause() {
     sched.flush();
     assert!(p.wait().unwrap().bit_eq(&req(6.0)));
 }
+
+#[test]
+fn a_poisoned_session_store_keeps_serving_exact_bits_from_other_threads() {
+    use repdl::coordinator::PanicAtTicket;
+    // a session-holding tower whose ticketed dispatch panics at ticket 1
+    // — the deterministic stand-in for a latent bug inside a session
+    // dispatch (the panic shield turns it into a typed batch error)
+    let tower = Arc::new(PanicAtTicket::new(
+        TransformerTower::new(model()).unwrap().with_sessions(8),
+        1,
+    ));
+    let sched = ServeScheduler::sharded_with(
+        Arc::clone(&tower) as Arc<dyn ModelTower>,
+        1,
+        WorkerPool::shared(1),
+        ServeConfig { batch_window: 2, ..Default::default() },
+    )
+    .unwrap();
+    // tickets 0 and 1 share a window-2 batch: the injected panic inside
+    // the session dispatch fails both with the typed shield error
+    let p0 = sched.submit(prefix_request(&STREAMS[0], 1)).unwrap();
+    let p1 = sched.submit(prefix_request(&STREAMS[1], 1)).unwrap();
+    sched.flush();
+    for p in [p0, p1] {
+        let e = p.wait().unwrap_err();
+        assert!(format!("{e}").contains("panicked"), "want the shield error, got: {e}");
+    }
+    // now poison the SessionStore's internal lock FOR REAL: a thread
+    // panics while holding it (std marks the mutex poisoned on unwind)
+    let store = tower.inner().sessions_for_test().expect("sessions enabled");
+    let poisoned = std::thread::scope(|s| s.spawn(|| store.poison_for_test()).join());
+    assert!(poisoned.is_err(), "the poisoning thread must have panicked");
+    assert_eq!(store.stats().hits, 0, "nothing served yet: counters start clean");
+    // from ANOTHER thread, the whole decode stream must still serve:
+    // lock_recover hands out the (update-atomic) poisoned store, session
+    // hits and misses keep counting, and the bits stay the reference
+    // bits for every prefix length
+    let reference = model();
+    let ref_pool = WorkerPool::new(1);
+    std::thread::scope(|s| {
+        s.spawn(|| {
+            let mut pending = Vec::new();
+            for tt in 1..=CONTEXT {
+                pending.push((tt, sched.submit(prefix_request(&STREAMS[2], tt)).unwrap()));
+            }
+            sched.flush();
+            for (tt, p) in pending {
+                let got = p.wait().unwrap();
+                let want =
+                    reference.forward_logits_infer_in(&ref_pool, &STREAMS[2][..tt]).unwrap();
+                assert_eq!(
+                    got.data(),
+                    &want.data()[(tt - 1) * VOCAB..tt * VOCAB],
+                    "poisoned-store serving changed bits at prefix length {tt}"
+                );
+            }
+        })
+        .join()
+        .unwrap();
+    });
+    // single dispatcher ⇒ counters are event-sequence-pure: the length-1
+    // prefix does no lookup, every extension hits the session inserted
+    // one ticket earlier, and all six sessions land — hits, misses and
+    // inserts all counted through the poisoned lock
+    let stats = store.stats();
+    assert_eq!(stats.misses, 0, "{stats:?}");
+    assert_eq!(stats.hits, (CONTEXT - 1) as u64, "{stats:?}");
+    assert_eq!(stats.len, CONTEXT, "{stats:?}");
+}
