@@ -74,7 +74,7 @@ def merge(runs: list[list[dict]]) -> list[dict]:
     merged: dict[tuple, dict] = {}
     for entries in runs:
         for e in entries:
-            if e.get("kernel") not in ("scheduler", "cache", "kv", "journal"):
+            if e.get("kernel") not in ("scheduler", "cache", "kv", "journal", "train"):
                 continue
             k = row_key(e)
             cur = merged.get(k)

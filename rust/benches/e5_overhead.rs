@@ -576,6 +576,68 @@ fn main() {
             );
         }
     }
+    // train lanes ablation (ISSUE 8): the step-driven data-parallel
+    // engine at lanes ∈ {1,2,4,8}. The bit gate runs before any timing:
+    // every lane count must finish with the identical param_hash, so
+    // these rows double as a release-mode check of the fixed-order
+    // gradient-tree reduction. Timings then show what the lanes knob
+    // buys (it may only change wall-clock, never bits); the CI perf
+    // gate is hard on allocs_per_call only.
+    section("E5: train — data-parallel lanes ablation (same bits)");
+    {
+        use repdl::coordinator::{DataParallelTrainer, OptimizerCfg};
+        let tcfg = TrainerConfig {
+            steps: if smoke { 4 } else { 10 },
+            dropout: 0.1,
+            ..Default::default()
+        };
+        let microbatch = 4usize;
+        let opt_grid: [(&str, OptimizerCfg); 2] = [
+            ("sgd", OptimizerCfg::Sgd { momentum: 0.9, weight_decay: 0.0 }),
+            ("adam", OptimizerCfg::Adam),
+        ];
+        let lane_grid: &[usize] = if smoke { &[1, 2] } else { &[1, 2, 4, 8] };
+        for (oname, opt) in opt_grid {
+            let run_hash = |l: usize| {
+                let engine = DataParallelTrainer::new(tcfg, l, microbatch).unwrap().optimizer(opt);
+                let mut st = engine.init_state();
+                for _ in 0..tcfg.steps {
+                    engine.step(&mut st).unwrap();
+                }
+                st.param_hash()
+            };
+            let want = run_hash(1);
+            for &l in lane_grid {
+                // bit gate first: lanes are a pure performance knob
+                assert_eq!(run_hash(l), want, "train opt={oname} lanes={l} changed bits");
+                let engine =
+                    DataParallelTrainer::new(tcfg, l, microbatch).unwrap().optimizer(opt);
+                let run = || {
+                    engine.run().unwrap();
+                };
+                let st = bench_once(
+                    &format!("train {}-step opt={oname} lanes={l}", tcfg.steps),
+                    samples,
+                    &run,
+                );
+                let (allocs, _) = allocs_during(&run);
+                let nsamples = tcfg.steps * tcfg.batch;
+                serve_entries.push(
+                    JsonObj::new()
+                        .s("kernel", "train")
+                        .s("model", "mlp")
+                        .s("mode", oname)
+                        .int("requests", nsamples as u64)
+                        .int("pool_lanes", l as u64)
+                        .int("d_in", (tcfg.side * tcfg.side) as u64)
+                        .int("d_out", tcfg.classes as u64)
+                        .num("median_ns", st.median_ns)
+                        .num("req_per_s", st.per_sec(nsamples))
+                        .int("allocs_per_call", allocs),
+                );
+            }
+        }
+    }
     write_bench_json(&bench_json_path("serve"), "serve", &serve_entries)
         .expect("write BENCH_serve.json");
 

@@ -8,17 +8,22 @@
 
 pub mod hashing;
 pub mod serve;
+pub mod train;
 pub mod trainer;
 pub mod verifier;
 
 pub use hashing::{hash_curve, hash_params, hash_tensor, hex};
+pub use train::{
+    checkpoint_path, latest_checkpoint, load_checkpoint, save_checkpoint, Checkpoint,
+    CheckpointMeta, CheckpointScan, DataParallelTrainer, OptState, TrainOptimizer, TrainState,
+};
 pub use serve::{
     read_journal, token_key, BatchTrace, CacheStats, DeterministicServer, FaultPlan,
     FaultyWriter, FileJournalWriter, Journal, JournalEvent, JournalPolicy, JournalReadout,
     JournalStats, JournalWriter, LogEntry, MemoCache, MlpTower, ModelRegistry, ModelTower,
-    NamedTower, PanicAtTicket, Pending, RecoveryReport, ReplayReport, ResponseLog, ServeConfig,
-    ServeReplica, ServeReport, ServeScheduler, ServeThroughput, Session, SessionStats,
-    SessionStore, TransformerTower, VecWriter,
+    NamedTower, PanicAtTicket, Pending, Promotion, RecoveryReport, ReplayReport, ResponseLog,
+    ServeConfig, ServeReplica, ServeReport, ServeScheduler, ServeThroughput, Session,
+    SessionStats, SessionStore, TransformerTower, VecWriter,
 };
-pub use trainer::{NumericsMode, TrainReport, Trainer, TrainerConfig};
+pub use trainer::{batch_indices, NumericsMode, OptimizerCfg, TrainReport, Trainer, TrainerConfig};
 pub use verifier::{compare_runs, first_divergence, Comparison};

@@ -65,7 +65,7 @@ pub use journal::{
     JournalStats, JournalWriter, VecWriter,
 };
 pub use log::{LogEntry, ResponseLog};
-pub use registry::ModelRegistry;
+pub use registry::{ModelRegistry, Promotion};
 pub use replica::{DeterministicServer, ServeReplica, ServeReport, ServeThroughput};
 pub use scheduler::{
     BatchTrace, Pending, RecoveryReport, ReplayReport, ServeConfig, ServeScheduler,

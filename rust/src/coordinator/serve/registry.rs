@@ -29,12 +29,16 @@
 use std::collections::BTreeMap;
 use std::ops::Range;
 use std::path::Path;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use super::journal::read_journal;
 use super::lock_recover;
-use super::scheduler::{Pending, RecoveryReport, ReplayReport, ServeScheduler};
-use crate::tensor::Tensor;
+use super::scheduler::{Pending, RecoveryReport, ReplayReport, ServeConfig, ServeScheduler};
+use super::tower::MlpTower;
+use crate::coordinator::hashing::hash_params;
+use crate::coordinator::train::Checkpoint;
+use crate::nn::Module;
+use crate::tensor::{PoolHandle, Tensor};
 use crate::{Error, Result};
 
 /// Routes requests to per-model [`ServeScheduler`]s by model id (see
@@ -49,6 +53,34 @@ pub struct ModelRegistry {
     /// id → scheduler. `BTreeMap` so every iteration (flush_all,
     /// close_all, model_ids) runs in deterministic id order.
     models: BTreeMap<String, ServeScheduler>,
+    /// Promotion routing table: base id → concrete (promoted) id.
+    /// Consulted *before* the concrete map, so a promoted base id routes
+    /// to its newest checkpoint; see [`ModelRegistry::promote`].
+    aliases: BTreeMap<String, String>,
+}
+
+/// Outcome of [`ModelRegistry::promote`]: where the checkpoint now
+/// serves and the deterministic swap point.
+#[derive(Clone, Debug)]
+pub struct Promotion {
+    /// Concrete id the checkpoint is registered under:
+    /// `{base_id}@{weights_hash[..12]}` — keyed by the served weights'
+    /// fingerprint, so promoting two different checkpoints can never
+    /// collide and promoting the *same* bits twice is a config error.
+    pub model_id: String,
+    /// The promoted tower's full parameter fingerprint (the hash every
+    /// memo-cache key and log entry of the new model embeds).
+    pub weights_hash: String,
+    /// The swap watermark: the predecessor scheduler's `next_ticket` at
+    /// the swap, after its queue was flushed. **Watermark rule**: every
+    /// ticket `< watermark` in the predecessor's ticket space was served
+    /// under the old weights; every base-id submit after the promotion
+    /// claims tickets in the new scheduler's space (starting at 0).
+    /// Together with the per-entry `weights_hash` stamp, an audit can
+    /// attribute any logged response to exactly one weight set.
+    pub watermark: u64,
+    /// The concrete id the base routed to before this promotion, if any.
+    pub previous: Option<String>,
 }
 
 impl ModelRegistry {
@@ -87,19 +119,89 @@ impl ModelRegistry {
         self.models.is_empty()
     }
 
-    /// The scheduler serving `model_id`, if registered. Direct access
-    /// is fine for per-model operations (waiting, stats, replay);
-    /// submitting through it bypasses the registry's global submit
-    /// order, which only matters to callers who want cross-model trace
-    /// reproducibility.
+    /// The scheduler serving `model_id`, if registered. Promotion
+    /// aliases are followed (a promoted base id yields its newest
+    /// checkpoint's scheduler — use [`Self::get_exact`] for a specific
+    /// concrete id). Direct access is fine for per-model operations
+    /// (waiting, stats, replay); submitting through it bypasses the
+    /// registry's global submit order, which only matters to callers who
+    /// want cross-model trace reproducibility.
     pub fn get(&self, model_id: &str) -> Option<&ServeScheduler> {
+        self.models.get(self.resolve_id(model_id))
+    }
+
+    /// A concrete scheduler by its exact id, ignoring promotion aliases
+    /// — audit access to a superseded model's log/replay after its base
+    /// id has been re-routed.
+    pub fn get_exact(&self, model_id: &str) -> Option<&ServeScheduler> {
         self.models.get(model_id)
     }
 
+    /// The concrete id a promoted base id currently routes to, if any.
+    pub fn alias_of(&self, base_id: &str) -> Option<&str> {
+        self.aliases.get(base_id).map(String::as_str)
+    }
+
+    /// Follow the (single-hop) promotion alias, if one is set.
+    fn resolve_id<'a>(&'a self, model_id: &'a str) -> &'a str {
+        self.aliases.get(model_id).map(String::as_str).unwrap_or(model_id)
+    }
+
     fn resolve(&self, model_id: &str) -> Result<&ServeScheduler> {
-        self.models.get(model_id).ok_or_else(|| {
+        self.models.get(self.resolve_id(model_id)).ok_or_else(|| {
             Error::config(format!("model registry: unknown model id '{model_id}'"))
         })
+    }
+
+    /// Install a finished training checkpoint as the live model behind
+    /// `base_id` — the deterministic hot weight swap closing the
+    /// train→serve loop (DESIGN.md §12).
+    ///
+    /// The checkpoint's parameters become an [`MlpTower`] (identical
+    /// forward graph to the trainer's — promotion is layout-only, so the
+    /// promoted model's bits match direct inference on the final
+    /// weights), registered under the concrete id
+    /// `{base_id}@{weights_hash[..12]}`. If the base id already routed
+    /// to a model, that predecessor is flushed and its `next_ticket`
+    /// recorded as the swap [`Promotion::watermark`]; the alias then
+    /// re-routes `base_id` to the new scheduler. `&mut self` makes the
+    /// swap a point on the global submit order by construction: no
+    /// submit can interleave with it, so which tickets ran under which
+    /// weights is a pure function of the event sequence.
+    pub fn promote(
+        &mut self,
+        base_id: &str,
+        ckpt: &Checkpoint,
+        shards: usize,
+        pool: PoolHandle,
+        cfg: ServeConfig,
+    ) -> Result<Promotion> {
+        let mlp = ckpt.to_mlp()?;
+        // serve-side weights fingerprint: hashed over the inference
+        // layout, the same fingerprint every memo-cache key and log
+        // entry of the new model will embed
+        let weights_hash = hash_params(&Module::params(&mlp));
+        let model_id = format!("{base_id}@{}", &weights_hash[..12.min(weights_hash.len())]);
+        if self.models.contains_key(&model_id) {
+            return Err(Error::config(format!(
+                "model registry: checkpoint already promoted as '{model_id}'"
+            )));
+        }
+        let tower = MlpTower::with_model_id(mlp, &model_id)?;
+        let sched = ServeScheduler::sharded_with(Arc::new(tower), shards, pool, cfg)?;
+        let previous = self.resolve_id(base_id);
+        let (previous, watermark) = match self.models.get(previous) {
+            Some(prev) => {
+                // drain the predecessor so the watermark is a completed
+                // cut: everything below it is answered under old weights
+                prev.flush();
+                (Some(previous.to_string()), prev.next_ticket())
+            }
+            None => (None, 0),
+        };
+        self.models.insert(model_id.clone(), sched);
+        self.aliases.insert(base_id.to_string(), model_id.clone());
+        Ok(Promotion { model_id, weights_hash, watermark, previous })
     }
 
     /// Route one request to `model_id` under the registry gate: the
@@ -316,5 +418,67 @@ mod tests {
             .unwrap();
         assert!(reports2.is_empty());
         std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn promotion_swaps_routing_at_a_watermark() {
+        use crate::coordinator::train::{Checkpoint, CheckpointMeta};
+        use crate::coordinator::trainer::{NumericsMode, OptimizerCfg, Trainer, TrainerConfig};
+
+        let cfg = TrainerConfig { steps: 6, ..Default::default() };
+        let tr = Trainer::new(cfg, NumericsMode::Repro);
+        let mut st = tr.init_state();
+        let mut curve = Vec::new();
+        for _ in 0..4 {
+            curve.push(tr.step(&mut st).unwrap());
+        }
+        let meta = CheckpointMeta { cfg, opt: OptimizerCfg::default(), microbatch: cfg.batch };
+        let ckpt = Checkpoint::capture(meta, &st, &curve);
+
+        let mut reg = ModelRegistry::new();
+        // first promotion: no predecessor → watermark 0
+        let p1 = reg
+            .promote("mlp", &ckpt, 1, WorkerPool::shared(1), ServeConfig::default())
+            .unwrap();
+        assert_eq!(p1.watermark, 0);
+        assert!(p1.previous.is_none());
+        assert_eq!(reg.alias_of("mlp"), Some(p1.model_id.as_str()));
+        let sched = reg.get("mlp").unwrap();
+        assert_eq!(sched.model_id(), p1.model_id);
+        assert_eq!(sched.weights_hash(), p1.weights_hash);
+        assert_eq!((sched.d_in(), sched.d_out()), (cfg.side * cfg.side, cfg.classes));
+
+        // serve three requests under the first promoted weights
+        let d_in = cfg.side * cfg.side;
+        let reqs: Vec<_> = (0..3)
+            .map(|i| crate::rng::uniform_tensor(&[d_in], -1.0, 1.0, 70 + i))
+            .collect();
+        let pend: Vec<_> =
+            reqs.iter().map(|r| reg.submit("mlp", r.clone()).unwrap()).collect();
+        reg.flush("mlp").unwrap();
+        for p in pend {
+            p.wait().unwrap();
+        }
+
+        // two more steps → new weights → second promotion swaps routing
+        for _ in 0..2 {
+            curve.push(tr.step(&mut st).unwrap());
+        }
+        let ckpt2 = Checkpoint::capture(meta, &st, &curve);
+        let p2 = reg
+            .promote("mlp", &ckpt2, 1, WorkerPool::shared(1), ServeConfig::default())
+            .unwrap();
+        assert_eq!(p2.previous.as_deref(), Some(p1.model_id.as_str()));
+        assert_eq!(p2.watermark, 3, "three tickets were served under the old weights");
+        assert_ne!(p2.model_id, p1.model_id);
+        assert_ne!(p2.weights_hash, p1.weights_hash);
+        // the base id routes to the successor; the predecessor stays
+        // reachable by exact id for audit
+        assert_eq!(reg.get("mlp").unwrap().model_id(), p2.model_id);
+        assert!(reg.get_exact(&p1.model_id).is_some());
+        // promoting bit-identical weights twice is a config error
+        assert!(reg
+            .promote("mlp", &ckpt2, 1, WorkerPool::shared(1), ServeConfig::default())
+            .is_err());
     }
 }

@@ -492,6 +492,15 @@ impl ServeScheduler {
         gate.next_ticket - gate.flushed_upto
     }
 
+    /// The next unassigned ticket — equivalently, the number of tickets
+    /// this scheduler has admitted so far. A registry promotion records
+    /// this as the swap **watermark**: every ticket below it was served
+    /// by this scheduler's weights, every later submit routes to the
+    /// successor (see [`super::ModelRegistry::promote`]).
+    pub fn next_ticket(&self) -> u64 {
+        lock_recover(&self.gate).next_ticket
+    }
+
     /// Depth-cap rejections so far.
     pub fn rejected(&self) -> u64 {
         lock_recover(&self.gate).rejected

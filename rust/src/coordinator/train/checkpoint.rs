@@ -1,0 +1,734 @@
+//! Bit-exact training checkpoints (`REPDLCKP`), DESIGN.md §12.
+//!
+//! The format reuses the serve journal's framing discipline
+//! ([`crate::coordinator::serve::journal`]): an 8-byte magic + u32 LE
+//! version header, then length-prefixed records each carrying the
+//! SHA-256 of its own payload (`frame` / `scan_payloads` are literally
+//! the journal's). A checkpoint is exactly six records, in order:
+//!
+//! | # | record   | contents                                            |
+//! |---|----------|-----------------------------------------------------|
+//! | 0 | META     | trainer config, optimizer selection, microbatch, step |
+//! | 1 | CURVE    | the loss curve so far (f32 bit patterns)            |
+//! | 2 | PARAMS   | parameter tensors, registration order               |
+//! | 3 | OPT      | optimizer slot state (momenta / moments + `t`)      |
+//! | 4 | RNG      | the noise stream's full Philox position             |
+//! | 5 | MANIFEST | step, `hash_params` fingerprint, and the SHA-256 of |
+//! |   |          | every preceding record payload                      |
+//!
+//! Unlike the serve journal — an append-only log whose torn tail is
+//! *repaired* — a checkpoint is a point-in-time snapshot: **any** defect
+//! (torn tail, missing manifest, digest mismatch, fingerprint mismatch)
+//! refuses the whole file with a typed error. Crash-consistency comes
+//! from writing step-numbered files into a directory and resuming from
+//! the newest file that loads cleanly ([`latest_checkpoint`]): a crash
+//! mid-save tears exactly one file, which is skipped, never half-read.
+//!
+//! Resume ≡ uninterrupted, bit-for-bit: `Trainer::step` is a pure
+//! transition on [`TrainState`], and a checkpoint round-trips every
+//! field of that state exactly (f32s as bit patterns, the RNG
+//! mid-stream). So `stepᵏ(load(save(s))) ≡ stepᵏ(s)` for all k — pinned
+//! at every k by `tests/train_checkpoint.rs`.
+
+use std::fs::File;
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+
+use crate::coordinator::hashing::hash_params;
+use crate::coordinator::serve::journal::{digest_hex, frame, scan_payloads};
+use crate::coordinator::train::state::{OptState, TrainOptimizer, TrainState};
+use crate::coordinator::trainer::{OptimizerCfg, TrainerConfig};
+use crate::nn::{Act, Linear, Mlp};
+use crate::optim::{AdamState, SgdState};
+use crate::rng::{Philox, PhiloxState};
+use crate::tensor::Tensor;
+use crate::{Error, Result};
+
+const MAGIC: [u8; 8] = *b"REPDLCKP";
+const VERSION: u32 = 1;
+const HEADER_LEN: usize = 12;
+
+const TAG_META: u8 = 1;
+const TAG_CURVE: u8 = 2;
+const TAG_PARAMS: u8 = 3;
+const TAG_OPT: u8 = 4;
+const TAG_RNG: u8 = 5;
+const TAG_MANIFEST: u8 = 6;
+/// META..RNG — the five records the manifest hashes.
+const BODY_RECORDS: usize = 5;
+
+const OPT_KIND_SGD: u8 = 0;
+const OPT_KIND_ADAM: u8 = 1;
+
+/// Everything a resumed run must agree on before adopting a state: the
+/// trainer config, the optimizer selection, and the microbatch size
+/// (part of the gradient-reduction spec, so it changes bits).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CheckpointMeta {
+    /// The trainer configuration of the checkpointed run.
+    pub cfg: TrainerConfig,
+    /// Optimizer family + hyperparameters.
+    pub opt: OptimizerCfg,
+    /// Microbatch size of the data-parallel reduction spec
+    /// (`cfg.batch` for the single-microbatch [`super::super::Trainer`]).
+    pub microbatch: usize,
+}
+
+impl CheckpointMeta {
+    /// Refuse a meta that differs from what the resuming engine would
+    /// run: resuming under a different config/optimizer/microbatch would
+    /// silently produce a *different* deterministic run. Lane count is
+    /// deliberately absent — it never changes bits.
+    pub fn ensure_matches(&self, other: &CheckpointMeta) -> Result<()> {
+        if self != other {
+            return Err(Error::config(format!(
+                "checkpoint meta mismatch: saved {self:?}, resuming engine wants {other:?}"
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// A decoded, fully verified checkpoint.
+pub struct Checkpoint {
+    /// Run identity (config + optimizer + reduction spec).
+    pub meta: CheckpointMeta,
+    /// Steps completed when the checkpoint was taken.
+    pub step: u64,
+    /// Loss curve up to `step` (one entry per completed step).
+    pub curve: Vec<f32>,
+    /// Parameters, registration order (w1, b1, w2, b2).
+    pub params: Vec<Tensor>,
+    /// Optimizer slot state.
+    pub opt_state: OptState,
+    /// Noise-stream position.
+    pub noise: PhiloxState,
+}
+
+impl Checkpoint {
+    /// Capture a checkpoint from live run state (no I/O).
+    pub fn capture(meta: CheckpointMeta, st: &TrainState, curve: &[f32]) -> Checkpoint {
+        Checkpoint {
+            meta,
+            step: st.step,
+            curve: curve.to_vec(),
+            params: st.params.clone(),
+            opt_state: st.opt.export_state(),
+            noise: st.noise.snapshot(),
+        }
+    }
+
+    /// SHA-256 fingerprint of the checkpointed parameters.
+    pub fn param_hash(&self) -> String {
+        let refs: Vec<&Tensor> = self.params.iter().collect();
+        hash_params(&refs)
+    }
+
+    /// Rebuild the live run state: parameters as saved, optimizer slots
+    /// imported, the noise stream restored mid-position. The returned
+    /// state's next step is bit-identical to the uninterrupted run's.
+    pub fn into_state(self) -> Result<(TrainState, Vec<f32>)> {
+        let mut opt = TrainOptimizer::from_cfg(self.meta.opt, self.meta.cfg.lr);
+        opt.import_state(self.opt_state)?;
+        let st = TrainState {
+            step: self.step,
+            params: self.params,
+            opt,
+            noise: Philox::restore(self.noise),
+        };
+        Ok((st, self.curve))
+    }
+
+    /// View the checkpointed parameters as an inference [`Mlp`] (for
+    /// promotion into the serve registry). The trainer's layout is
+    /// `h = relu(x·w1 + b1)` with w1 shaped (in, out); [`Linear`] is the
+    /// PyTorch (out, in) layout computing `x·Wᵀ + b` — so each weight is
+    /// transposed (layout-only, bit-neutral) and the forward graphs are
+    /// identical: the tower serves exactly the trained function.
+    pub fn to_mlp(&self) -> Result<Mlp> {
+        if self.params.len() < 2 || self.params.len() % 2 != 0 {
+            return Err(Error::shape(format!(
+                "checkpoint has {} params, want (weight, bias) pairs",
+                self.params.len()
+            )));
+        }
+        let mut layers = Vec::with_capacity(self.params.len() / 2);
+        for pair in self.params.chunks(2) {
+            let (w, b) = (&pair[0], &pair[1]);
+            if w.dims().len() != 2 || b.dims().len() != 1 || w.dims()[1] != b.dims()[0] {
+                return Err(Error::shape(format!(
+                    "checkpoint layer shapes {:?}/{:?} are not a (in,out)/(out,) pair",
+                    w.dims(),
+                    b.dims()
+                )));
+            }
+            layers.push(Linear { weight: w.transpose2d()?, bias: b.clone() });
+        }
+        Ok(Mlp { layers, act: Act::Relu })
+    }
+}
+
+// ---------------------------------------------------------------------
+// encoding
+// ---------------------------------------------------------------------
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_str(buf: &mut Vec<u8>, s: &str) {
+    put_u64(buf, s.len() as u64);
+    buf.extend_from_slice(s.as_bytes());
+}
+
+fn put_tensor(buf: &mut Vec<u8>, t: &Tensor) {
+    put_u64(buf, t.dims().len() as u64);
+    for &d in t.dims() {
+        put_u64(buf, d as u64);
+    }
+    for &v in t.data() {
+        put_u32(buf, v.to_bits());
+    }
+}
+
+fn encode_meta(meta: &CheckpointMeta, step: u64) -> Vec<u8> {
+    let c = &meta.cfg;
+    let mut buf = vec![TAG_META];
+    put_u64(&mut buf, c.side as u64);
+    put_u64(&mut buf, c.hidden as u64);
+    put_u64(&mut buf, c.classes as u64);
+    put_u64(&mut buf, c.batch as u64);
+    put_u64(&mut buf, c.steps as u64);
+    put_u32(&mut buf, c.lr.to_bits());
+    put_u64(&mut buf, c.seed);
+    put_u32(&mut buf, c.dropout.to_bits());
+    match meta.opt {
+        OptimizerCfg::Sgd { momentum, weight_decay } => {
+            buf.push(OPT_KIND_SGD);
+            put_u32(&mut buf, momentum.to_bits());
+            put_u32(&mut buf, weight_decay.to_bits());
+        }
+        OptimizerCfg::Adam => {
+            buf.push(OPT_KIND_ADAM);
+            put_u32(&mut buf, 0);
+            put_u32(&mut buf, 0);
+        }
+    }
+    put_u64(&mut buf, meta.microbatch as u64);
+    put_u64(&mut buf, step);
+    buf
+}
+
+fn encode_curve(curve: &[f32]) -> Vec<u8> {
+    let mut buf = vec![TAG_CURVE];
+    put_u64(&mut buf, curve.len() as u64);
+    for &v in curve {
+        put_u32(&mut buf, v.to_bits());
+    }
+    buf
+}
+
+fn encode_params(params: &[Tensor]) -> Vec<u8> {
+    let mut buf = vec![TAG_PARAMS];
+    put_u64(&mut buf, params.len() as u64);
+    for t in params {
+        put_tensor(&mut buf, t);
+    }
+    buf
+}
+
+fn encode_opt(state: &OptState) -> Vec<u8> {
+    let mut buf = vec![TAG_OPT];
+    match state {
+        OptState::Sgd(s) => {
+            buf.push(OPT_KIND_SGD);
+            put_u64(&mut buf, s.bufs.len() as u64);
+            for t in &s.bufs {
+                put_tensor(&mut buf, t);
+            }
+        }
+        OptState::Adam(s) => {
+            buf.push(OPT_KIND_ADAM);
+            put_u32(&mut buf, s.t);
+            put_u64(&mut buf, s.m.len() as u64);
+            for t in s.m.iter().chain(s.v.iter()) {
+                put_tensor(&mut buf, t);
+            }
+        }
+    }
+    buf
+}
+
+fn encode_rng(s: &PhiloxState) -> Vec<u8> {
+    let mut buf = vec![TAG_RNG];
+    for w in s.counter.iter().chain(s.key.iter()).chain(s.buf.iter()) {
+        put_u32(&mut buf, *w);
+    }
+    put_u32(&mut buf, s.idx);
+    buf
+}
+
+fn encode_manifest(step: u64, param_hash: &str, body_payloads: &[&[u8]]) -> Vec<u8> {
+    let mut buf = vec![TAG_MANIFEST];
+    put_u64(&mut buf, step);
+    put_str(&mut buf, param_hash);
+    put_u64(&mut buf, body_payloads.len() as u64);
+    for p in body_payloads {
+        put_str(&mut buf, &digest_hex(p));
+    }
+    buf
+}
+
+// ---------------------------------------------------------------------
+// decoding
+// ---------------------------------------------------------------------
+
+struct Cursor<'a> {
+    b: &'a [u8],
+    off: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(b: &'a [u8]) -> Cursor<'a> {
+        Cursor { b, off: 0 }
+    }
+    fn bytes(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.b.len() - self.off < n {
+            return Err(Error::journal(format!(
+                "checkpoint record truncated: wanted {n} bytes at offset {} of {}",
+                self.off,
+                self.b.len()
+            )));
+        }
+        let s = &self.b[self.off..self.off + n];
+        self.off += n;
+        Ok(s)
+    }
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.bytes(1)?[0])
+    }
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.bytes(4)?.try_into().expect("4 bytes")))
+    }
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.bytes(8)?.try_into().expect("8 bytes")))
+    }
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_bits(self.u32()?))
+    }
+    fn str(&mut self) -> Result<String> {
+        let n = self.u64()? as usize;
+        let s = self.bytes(n)?;
+        String::from_utf8(s.to_vec())
+            .map_err(|_| Error::journal("checkpoint record holds a non-UTF-8 string"))
+    }
+    fn tensor(&mut self) -> Result<Tensor> {
+        let rank = self.u64()? as usize;
+        if rank > 8 {
+            return Err(Error::journal(format!("checkpoint tensor rank {rank} exceeds 8")));
+        }
+        let mut dims = Vec::with_capacity(rank);
+        for _ in 0..rank {
+            dims.push(self.u64()? as usize);
+        }
+        let numel = dims
+            .iter()
+            .try_fold(1usize, |acc, &d| acc.checked_mul(d))
+            .ok_or_else(|| Error::journal("checkpoint tensor dims overflow"))?;
+        if numel.checked_mul(4).map_or(true, |b| self.b.len() - self.off < b) {
+            return Err(Error::journal(format!(
+                "checkpoint tensor claims {numel} elements but the record is short"
+            )));
+        }
+        let mut data = Vec::with_capacity(numel);
+        for _ in 0..numel {
+            data.push(self.f32()?);
+        }
+        Tensor::from_vec(&dims, data)
+            .map_err(|e| Error::journal(format!("checkpoint tensor is malformed: {e}")))
+    }
+    fn expect_tag(&mut self, tag: u8, name: &str) -> Result<()> {
+        let got = self.u8()?;
+        if got != tag {
+            return Err(Error::journal(format!(
+                "checkpoint record {name}: tag {got}, want {tag} (records out of order?)"
+            )));
+        }
+        Ok(())
+    }
+    fn done(&self) -> Result<()> {
+        if self.off != self.b.len() {
+            return Err(Error::journal(format!(
+                "checkpoint record has {} trailing bytes",
+                self.b.len() - self.off
+            )));
+        }
+        Ok(())
+    }
+}
+
+fn decode_meta(payload: &[u8]) -> Result<(CheckpointMeta, u64)> {
+    let mut c = Cursor::new(payload);
+    c.expect_tag(TAG_META, "META")?;
+    let cfg = TrainerConfig {
+        side: c.u64()? as usize,
+        hidden: c.u64()? as usize,
+        classes: c.u64()? as usize,
+        batch: c.u64()? as usize,
+        steps: c.u64()? as usize,
+        lr: c.f32()?,
+        seed: c.u64()?,
+        dropout: c.f32()?,
+    };
+    let kind = c.u8()?;
+    let (a, b) = (c.f32()?, c.f32()?);
+    let opt = match kind {
+        OPT_KIND_SGD => OptimizerCfg::Sgd { momentum: a, weight_decay: b },
+        OPT_KIND_ADAM => OptimizerCfg::Adam,
+        k => return Err(Error::journal(format!("checkpoint META: unknown optimizer kind {k}"))),
+    };
+    let microbatch = c.u64()? as usize;
+    let step = c.u64()?;
+    c.done()?;
+    Ok((CheckpointMeta { cfg, opt, microbatch }, step))
+}
+
+fn decode_curve(payload: &[u8]) -> Result<Vec<f32>> {
+    let mut c = Cursor::new(payload);
+    c.expect_tag(TAG_CURVE, "CURVE")?;
+    let n = c.u64()? as usize;
+    if n.checked_mul(4).map_or(true, |b| payload.len().saturating_sub(c.off) < b) {
+        return Err(Error::journal("checkpoint CURVE record is short"));
+    }
+    let mut curve = Vec::with_capacity(n);
+    for _ in 0..n {
+        curve.push(c.f32()?);
+    }
+    c.done()?;
+    Ok(curve)
+}
+
+fn decode_params(payload: &[u8]) -> Result<Vec<Tensor>> {
+    let mut c = Cursor::new(payload);
+    c.expect_tag(TAG_PARAMS, "PARAMS")?;
+    let n = c.u64()? as usize;
+    let mut params = Vec::with_capacity(n.min(64));
+    for _ in 0..n {
+        params.push(c.tensor()?);
+    }
+    c.done()?;
+    Ok(params)
+}
+
+fn decode_opt(payload: &[u8]) -> Result<OptState> {
+    let mut c = Cursor::new(payload);
+    c.expect_tag(TAG_OPT, "OPT")?;
+    let state = match c.u8()? {
+        OPT_KIND_SGD => {
+            let n = c.u64()? as usize;
+            let mut bufs = Vec::with_capacity(n.min(64));
+            for _ in 0..n {
+                bufs.push(c.tensor()?);
+            }
+            OptState::Sgd(SgdState { bufs })
+        }
+        OPT_KIND_ADAM => {
+            let t = c.u32()?;
+            let n = c.u64()? as usize;
+            let mut m = Vec::with_capacity(n.min(64));
+            for _ in 0..n {
+                m.push(c.tensor()?);
+            }
+            let mut v = Vec::with_capacity(n.min(64));
+            for _ in 0..n {
+                v.push(c.tensor()?);
+            }
+            OptState::Adam(AdamState { m, v, t })
+        }
+        k => return Err(Error::journal(format!("checkpoint OPT: unknown optimizer kind {k}"))),
+    };
+    c.done()?;
+    Ok(state)
+}
+
+fn decode_rng(payload: &[u8]) -> Result<PhiloxState> {
+    let mut c = Cursor::new(payload);
+    c.expect_tag(TAG_RNG, "RNG")?;
+    let mut words = [0u32; 10];
+    for w in words.iter_mut() {
+        *w = c.u32()?;
+    }
+    let idx = c.u32()?;
+    c.done()?;
+    Ok(PhiloxState {
+        counter: [words[0], words[1], words[2], words[3]],
+        key: [words[4], words[5]],
+        buf: [words[6], words[7], words[8], words[9]],
+        idx,
+    })
+}
+
+fn decode_manifest(payload: &[u8]) -> Result<(u64, String, Vec<String>)> {
+    let mut c = Cursor::new(payload);
+    c.expect_tag(TAG_MANIFEST, "MANIFEST")?;
+    let step = c.u64()?;
+    let param_hash = c.str()?;
+    let n = c.u64()? as usize;
+    let mut digests = Vec::with_capacity(n.min(16));
+    for _ in 0..n {
+        digests.push(c.str()?);
+    }
+    c.done()?;
+    Ok((step, param_hash, digests))
+}
+
+// ---------------------------------------------------------------------
+// save / load / resume
+// ---------------------------------------------------------------------
+
+/// The canonical checkpoint file name for a step (sortable zero-padded
+/// step number, so directory order = step order).
+pub fn checkpoint_path(dir: &Path, step: u64) -> PathBuf {
+    dir.join(format!("step-{step:08}.repdlckp"))
+}
+
+/// Serialize a checkpoint to bytes (header + six framed records).
+fn encode_checkpoint(meta: &CheckpointMeta, st: &TrainState, curve: &[f32]) -> Vec<u8> {
+    let opt_state = st.opt.export_state();
+    let noise = st.noise.snapshot();
+    let refs: Vec<&Tensor> = st.params.iter().collect();
+    let body = [
+        encode_meta(meta, st.step),
+        encode_curve(curve),
+        encode_params(&st.params),
+        encode_opt(&opt_state),
+        encode_rng(&noise),
+    ];
+    let body_refs: Vec<&[u8]> = body.iter().map(|p| p.as_slice()).collect();
+    let manifest = encode_manifest(st.step, &hash_params(&refs), &body_refs);
+    let mut out = Vec::new();
+    out.extend_from_slice(&MAGIC);
+    out.extend_from_slice(&VERSION.to_le_bytes());
+    for payload in body.iter().chain(std::iter::once(&manifest)) {
+        out.extend_from_slice(&frame(payload));
+    }
+    out
+}
+
+/// Write a checkpoint file and fsync it. The write targets the final
+/// path directly: a crash mid-write leaves a torn file, which
+/// [`load_checkpoint`] refuses and [`latest_checkpoint`] skips — the
+/// previous checkpoint file stays the resume point (same crash story as
+/// the serve journal, adapted to snapshot semantics).
+pub fn save_checkpoint(
+    path: &Path,
+    meta: &CheckpointMeta,
+    st: &TrainState,
+    curve: &[f32],
+) -> Result<()> {
+    let bytes = encode_checkpoint(meta, st, curve);
+    let mut f = File::create(path)?;
+    f.write_all(&bytes)?;
+    f.sync_all()?;
+    Ok(())
+}
+
+/// Read and fully verify a checkpoint file. Refusals (all typed, never
+/// a panic): wrong magic/version; torn tail; fewer than six records
+/// (crash before the manifest); record decode failures; a manifest
+/// whose per-record digests or parameter fingerprint disagree with the
+/// decoded contents; META/MANIFEST step disagreement; a curve whose
+/// length is not the step count.
+pub fn load_checkpoint(path: &Path) -> Result<Checkpoint> {
+    let mut bytes = Vec::new();
+    File::open(path)?.read_to_end(&mut bytes)?;
+    if bytes.len() < HEADER_LEN || bytes[..8] != MAGIC {
+        return Err(Error::journal(format!(
+            "{} is not a repdl checkpoint (bad magic)",
+            path.display()
+        )));
+    }
+    let version = u32::from_le_bytes(bytes[8..HEADER_LEN].try_into().expect("4 bytes"));
+    if version != VERSION {
+        return Err(Error::journal(format!(
+            "{}: checkpoint format version {version}, this build reads {VERSION}",
+            path.display()
+        )));
+    }
+    let records = &bytes[HEADER_LEN..];
+    let (payloads, valid) = scan_payloads(records);
+    if valid != records.len() {
+        return Err(Error::journal(format!(
+            "{}: torn checkpoint tail ({} bytes after the last intact record) — refusing the file",
+            path.display(),
+            records.len() - valid
+        )));
+    }
+    if payloads.len() != BODY_RECORDS + 1 {
+        return Err(Error::journal(format!(
+            "{}: {} records, want {} (crash before the manifest record?)",
+            path.display(),
+            payloads.len(),
+            BODY_RECORDS + 1
+        )));
+    }
+    let (meta, step) = decode_meta(payloads[0])?;
+    let curve = decode_curve(payloads[1])?;
+    let params = decode_params(payloads[2])?;
+    let opt_state = decode_opt(payloads[3])?;
+    let noise = decode_rng(payloads[4])?;
+    let (m_step, m_param_hash, digests) = decode_manifest(payloads[5])?;
+    if digests.len() != BODY_RECORDS {
+        return Err(Error::journal(format!(
+            "{}: manifest lists {} record digests, want {BODY_RECORDS}",
+            path.display(),
+            digests.len()
+        )));
+    }
+    for (i, (payload, want)) in payloads[..BODY_RECORDS].iter().zip(digests.iter()).enumerate() {
+        if &digest_hex(payload) != want {
+            return Err(Error::journal(format!(
+                "{}: manifest mismatch on record {i} — refusing the checkpoint",
+                path.display()
+            )));
+        }
+    }
+    let refs: Vec<&Tensor> = params.iter().collect();
+    if hash_params(&refs) != m_param_hash {
+        return Err(Error::journal(format!(
+            "{}: manifest parameter fingerprint mismatch",
+            path.display()
+        )));
+    }
+    if m_step != step {
+        return Err(Error::journal(format!(
+            "{}: META step {step} disagrees with MANIFEST step {m_step}",
+            path.display()
+        )));
+    }
+    if curve.len() as u64 != step {
+        return Err(Error::journal(format!(
+            "{}: loss curve has {} entries for {step} steps",
+            path.display(),
+            curve.len()
+        )));
+    }
+    Ok(Checkpoint { meta, step, curve, params, opt_state, noise })
+}
+
+/// Result of scanning a checkpoint directory (see [`latest_checkpoint`]).
+pub struct CheckpointScan {
+    /// The newest checkpoint that loaded and verified cleanly.
+    pub loaded: Option<(PathBuf, Checkpoint)>,
+    /// Files that were refused, newest-first, with the refusal reason —
+    /// surfaced so a torn tail is reported, never silently skipped.
+    pub rejected: Vec<(PathBuf, String)>,
+}
+
+/// Find the newest resumable checkpoint in a directory: `.repdlckp`
+/// files are tried newest-step-first (file-name order) and the first
+/// one that fully verifies wins; defective files — e.g. the torn last
+/// save of a crashed run — are recorded in `rejected` and skipped.
+pub fn latest_checkpoint(dir: &Path) -> Result<CheckpointScan> {
+    let mut names: Vec<PathBuf> = std::fs::read_dir(dir)?
+        .collect::<std::io::Result<Vec<_>>>()?
+        .into_iter()
+        .map(|e| e.path())
+        .filter(|p| p.extension().map_or(false, |x| x == "repdlckp"))
+        .collect();
+    names.sort();
+    let mut rejected = Vec::new();
+    for path in names.into_iter().rev() {
+        match load_checkpoint(&path) {
+            Ok(ckpt) => return Ok(CheckpointScan { loaded: Some((path, ckpt)), rejected }),
+            Err(e) => rejected.push((path, e.to_string())),
+        }
+    }
+    Ok(CheckpointScan { loaded: None, rejected })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::trainer::{NumericsMode, Trainer};
+
+    fn small_meta() -> (Trainer, CheckpointMeta) {
+        let cfg = TrainerConfig { steps: 6, dropout: 0.25, ..Default::default() };
+        let meta = CheckpointMeta { cfg, opt: OptimizerCfg::default(), microbatch: cfg.batch };
+        (Trainer::new(cfg, NumericsMode::Repro), meta)
+    }
+
+    #[test]
+    fn save_load_round_trips_every_field() {
+        let (tr, meta) = small_meta();
+        let mut st = tr.init_state();
+        let mut curve = Vec::new();
+        for _ in 0..3 {
+            curve.push(tr.step(&mut st).unwrap());
+        }
+        let dir = std::env::temp_dir().join("repdl-ckpt-roundtrip");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = checkpoint_path(&dir, st.step);
+        save_checkpoint(&path, &meta, &st, &curve).unwrap();
+        let ckpt = load_checkpoint(&path).unwrap();
+        assert_eq!(ckpt.meta, meta);
+        assert_eq!(ckpt.step, 3);
+        assert_eq!(ckpt.param_hash(), st.param_hash());
+        assert_eq!(
+            crate::coordinator::hashing::hash_curve(&ckpt.curve),
+            crate::coordinator::hashing::hash_curve(&curve)
+        );
+        // resume and finish: bits must match the uninterrupted run
+        let (mut st2, mut curve2) = ckpt.into_state().unwrap();
+        for _ in 3..6 {
+            curve2.push(tr.step(&mut st2).unwrap());
+            curve.push(tr.step(&mut st).unwrap());
+        }
+        assert_eq!(st.param_hash(), st2.param_hash());
+        assert_eq!(
+            crate::coordinator::hashing::hash_curve(&curve),
+            crate::coordinator::hashing::hash_curve(&curve2)
+        );
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn latest_checkpoint_skips_torn_files() {
+        let (tr, meta) = small_meta();
+        let mut st = tr.init_state();
+        let mut curve = Vec::new();
+        let dir = std::env::temp_dir().join("repdl-ckpt-latest");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        for _ in 0..2 {
+            curve.push(tr.step(&mut st).unwrap());
+            save_checkpoint(&checkpoint_path(&dir, st.step), &meta, &st, &curve).unwrap();
+        }
+        // tear the newest file mid-record (simulated crash during save)
+        let newest = checkpoint_path(&dir, 2);
+        let bytes = std::fs::read(&newest).unwrap();
+        std::fs::write(&newest, &bytes[..bytes.len() - 7]).unwrap();
+        let scan = latest_checkpoint(&dir).unwrap();
+        let (path, ckpt) = scan.loaded.expect("step-1 checkpoint must load");
+        assert_eq!(path, checkpoint_path(&dir, 1));
+        assert_eq!(ckpt.step, 1);
+        assert_eq!(scan.rejected.len(), 1);
+        assert!(scan.rejected[0].1.contains("torn"), "{}", scan.rejected[0].1);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn meta_mismatch_is_refused_on_resume() {
+        let (_, meta) = small_meta();
+        let other = CheckpointMeta {
+            cfg: TrainerConfig { lr: 0.123, ..meta.cfg },
+            ..meta
+        };
+        assert!(meta.ensure_matches(&other).is_err());
+        assert!(meta.ensure_matches(&meta).is_ok());
+    }
+}

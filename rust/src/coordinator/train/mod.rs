@@ -1,0 +1,30 @@
+//! The step-driven training engine (DESIGN.md §12).
+//!
+//! PR 8 splits training into three orthogonal pieces:
+//!
+//! * [`TrainState`] — *all* mutable run state: parameters, optimizer
+//!   slots, the step counter, and the noise-stream position. A training
+//!   run is a fold of [`crate::coordinator::Trainer::step`] (or
+//!   [`DataParallelTrainer::step`]) over this state; everything else
+//!   (dataset, schedules, kernels) is a pure function of the config.
+//! * [`DataParallelTrainer`] — splits each batch into fixed-size
+//!   microbatches, computes per-microbatch gradient *sums* on the worker
+//!   pool (static microbatch→lane map), and combines them in a fixed
+//!   pairwise-tree order — so lane count is a pure performance knob:
+//!   lanes ∈ {1,2,4,8} produce identical parameter bits.
+//! * [`checkpoint`] — a binary checkpoint format with the serve
+//!   journal's framing discipline (length-prefixed SHA-256-verified
+//!   records, torn-tail refusal, a manifest record binding all
+//!   sections), such that `load(save(s))` resumes bit-identically to an
+//!   uninterrupted run at every step.
+
+pub mod checkpoint;
+pub mod parallel;
+pub mod state;
+
+pub use checkpoint::{
+    checkpoint_path, latest_checkpoint, load_checkpoint, save_checkpoint, Checkpoint,
+    CheckpointMeta, CheckpointScan,
+};
+pub use parallel::DataParallelTrainer;
+pub use state::{OptState, TrainOptimizer, TrainState};

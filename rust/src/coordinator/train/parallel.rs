@@ -1,0 +1,243 @@
+//! Data-parallel training with pool-size-invariant bits.
+//!
+//! Each batch is split into fixed-size microbatches (`ceil(B/m)` of
+//! them); the worker pool computes one gradient *sum* per microbatch
+//! (static microbatch→lane map, `tensor/pool.rs` discipline), and the
+//! partial sums are combined in a **fixed pairwise-tree order** over the
+//! microbatch index — the same split rule as `rnum/sum.rs::sum_pairwise`
+//! (left subtree = largest power of two below n). The combined sum is
+//! divided by the full batch size exactly once, after all combination.
+//!
+//! **Why lane count cannot change bits** (DESIGN.md §12): the microbatch
+//! decomposition is a function of (batch, microbatch) only; each partial
+//! sum is a pure function of (params, microbatch data, mask rows); and
+//! the combination tree is a function of the microbatch *count*. Lanes
+//! decide only *where* each partial is computed — never which partials
+//! exist nor the order they combine — so lanes ∈ {1,2,4,8,…} produce
+//! identical parameter bits. Changing `microbatch` is a different
+//! (equally deterministic) reduction spec, exactly like choosing
+//! pairwise vs sequential summation in `rnum`.
+//!
+//! GEMMs *inside* a pool task dispatch on a private 1-lane pool (inline
+//! execution — nested dispatch on the outer pool would deadlock, see
+//! `tensor/pool.rs`); pool size never changes GEMM bits, so this choice
+//! is invisible in the output.
+
+use crate::coordinator::trainer::{
+    batch_indices, draw_mask, finalize_grads, report, MicroGrad, NumericsMode, OptimizerCfg,
+    Trainer, TrainerConfig, TrainReport,
+};
+use crate::coordinator::train::TrainState;
+use crate::rnum::sum::pairwise_split;
+use crate::tensor::{Tensor, WorkerPool};
+use crate::{Error, Result};
+use std::sync::{Arc, Mutex};
+
+/// Data-parallel step engine over a worker pool (see module docs).
+/// Bits depend on (config, optimizer, microbatch) — never on `lanes`.
+pub struct DataParallelTrainer {
+    trainer: Trainer,
+    pool: Arc<WorkerPool>,
+    /// Sequential pool for GEMMs inside pool tasks (1 lane = inline).
+    seq: Arc<WorkerPool>,
+    microbatch: usize,
+}
+
+impl DataParallelTrainer {
+    /// New engine: `lanes` parallel lanes, `microbatch` samples per
+    /// partial gradient sum. `microbatch` must be in `1..=cfg.batch`
+    /// (the last microbatch may be ragged). Runs Repro numerics — the
+    /// baseline modes exist to *demonstrate* non-determinism and have no
+    /// data-parallel story.
+    pub fn new(cfg: TrainerConfig, lanes: usize, microbatch: usize) -> Result<Self> {
+        if microbatch == 0 || microbatch > cfg.batch {
+            return Err(Error::config(format!(
+                "microbatch {microbatch} must be in 1..={}",
+                cfg.batch
+            )));
+        }
+        Ok(DataParallelTrainer {
+            trainer: Trainer::new(cfg, NumericsMode::Repro),
+            pool: WorkerPool::shared(lanes),
+            seq: WorkerPool::shared(1),
+            microbatch,
+        })
+    }
+
+    /// Select the optimizer family (builder style).
+    pub fn optimizer(mut self, opt: OptimizerCfg) -> Self {
+        self.trainer = self.trainer.optimizer(opt);
+        self
+    }
+
+    /// The wrapped single-engine trainer (config access).
+    pub fn trainer(&self) -> &Trainer {
+        &self.trainer
+    }
+
+    /// Parallel lanes (a pure performance knob).
+    pub fn lanes(&self) -> usize {
+        self.pool.lanes()
+    }
+
+    /// Microbatch size (part of the reduction spec: changes bits).
+    pub fn microbatch(&self) -> usize {
+        self.microbatch
+    }
+
+    /// Fresh run state — identical bits to [`Trainer::init_state`].
+    pub fn init_state(&self) -> TrainState {
+        self.trainer.init_state()
+    }
+
+    /// One data-parallel optimizer step (see module docs for the
+    /// fixed-order reduction argument). With `microbatch == batch` this
+    /// is a single-partial tree and bit-matches [`Trainer::step`].
+    pub fn step(&self, st: &mut TrainState) -> Result<f32> {
+        let c = &self.trainer.cfg;
+        let ds = self.trainer.dataset();
+        let idxs = batch_indices(c, st.step);
+        let (x, labels) = ds.batch_flat(&idxs);
+        // the mask is drawn row-major on this thread, before the fan-out,
+        // so the stream position advance is lane-independent
+        let mask = draw_mask(c, &mut st.noise)?;
+        let n_in = c.side * c.side;
+        let nmb = c.batch.div_ceil(self.microbatch);
+        // static decomposition: microbatch i owns rows [i·m, min((i+1)·m, B))
+        let jobs: Vec<(Tensor, Vec<usize>, Option<Tensor>)> = (0..nmb)
+            .map(|i| {
+                let r0 = i * self.microbatch;
+                let r1 = ((i + 1) * self.microbatch).min(c.batch);
+                let rows = r1 - r0;
+                let x_mb = Tensor::from_vec(
+                    &[rows, n_in],
+                    x.data()[r0 * n_in..r1 * n_in].to_vec(),
+                )?;
+                let mask_mb = match &mask {
+                    Some(m) => Some(Tensor::from_vec(
+                        &[rows, c.hidden],
+                        m.data()[r0 * c.hidden..r1 * c.hidden].to_vec(),
+                    )?),
+                    None => None,
+                };
+                Ok((x_mb, labels[r0..r1].to_vec(), mask_mb))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let slots: Vec<Mutex<Option<Result<MicroGrad>>>> =
+            (0..nmb).map(|_| Mutex::new(None)).collect();
+        let trainer = &self.trainer;
+        let seq = &self.seq;
+        let params = &st.params;
+        self.pool.run(nmb, &|i| {
+            let (x_mb, labels_mb, mask_mb) = &jobs[i];
+            let r = trainer.grad_microbatch(seq, x_mb, labels_mb, mask_mb.as_ref(), params);
+            *slots[i].lock().expect("micrograd slot") = Some(r);
+        });
+        let mut parts: Vec<Option<MicroGrad>> = Vec::with_capacity(nmb);
+        for s in slots {
+            let r = s
+                .into_inner()
+                .expect("micrograd slot")
+                .ok_or_else(|| Error::runtime("data-parallel step: a lane produced no result"))?;
+            parts.push(Some(r?));
+        }
+        let combined = reduce_tree(&mut parts, 0, nmb);
+        let (grads, loss) = finalize_grads(combined, c.batch);
+        st.opt.step(&mut st.params, &grads)?;
+        st.step += 1;
+        Ok(loss)
+    }
+
+    /// Run `cfg.steps` steps from a fresh state.
+    pub fn run(&self) -> Result<TrainReport> {
+        let mut st = self.init_state();
+        let mut curve = Vec::with_capacity(self.trainer.cfg.steps);
+        for _ in 0..self.trainer.cfg.steps {
+            curve.push(self.step(&mut st)?);
+        }
+        Ok(report(st, curve))
+    }
+}
+
+/// Combine two partial sums: left subtree + right subtree, elementwise,
+/// in parameter order — one fixed association per (lo, hi) range.
+fn combine(mut a: MicroGrad, b: MicroGrad) -> MicroGrad {
+    for (ga, gb) in a.grads.iter_mut().zip(b.grads.iter()) {
+        for (x, y) in ga.data_mut().iter_mut().zip(gb.data().iter()) {
+            *x += *y;
+        }
+    }
+    a.loss_sum += b.loss_sum;
+    a
+}
+
+/// Fixed pairwise-tree reduction over microbatch indices `[lo, hi)` —
+/// the `rnum/sum.rs::sum_pairwise` association (left subtree = largest
+/// power of two below the range length), so the combine order is a pure
+/// function of the microbatch count.
+fn reduce_tree(parts: &mut [Option<MicroGrad>], lo: usize, hi: usize) -> MicroGrad {
+    debug_assert!(lo < hi);
+    if hi - lo == 1 {
+        return parts[lo].take().expect("partial already consumed");
+    }
+    let split = lo + pairwise_split(hi - lo);
+    let left = reduce_tree(parts, lo, split);
+    let right = reduce_tree(parts, split, hi);
+    combine(left, right)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lane_count_never_changes_parameter_bits() {
+        // the acceptance grid (short form; the integration suite runs
+        // the full matrix): lanes {1,2,4,8} × {SGD, Adam}
+        for opt in [OptimizerCfg::default(), OptimizerCfg::Adam] {
+            let cfg = TrainerConfig { steps: 8, ..Default::default() };
+            let reference = DataParallelTrainer::new(cfg, 1, 4)
+                .unwrap()
+                .optimizer(opt)
+                .run()
+                .unwrap();
+            for lanes in [2usize, 4, 8] {
+                let r = DataParallelTrainer::new(cfg, lanes, 4)
+                    .unwrap()
+                    .optimizer(opt)
+                    .run()
+                    .unwrap();
+                assert_eq!(reference.param_hash, r.param_hash, "lanes={lanes} opt={opt:?}");
+                assert_eq!(
+                    crate::coordinator::hashing::hash_curve(&reference.loss_curve),
+                    crate::coordinator::hashing::hash_curve(&r.loss_curve),
+                    "lanes={lanes} opt={opt:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn single_microbatch_bit_matches_the_plain_trainer() {
+        let cfg = TrainerConfig { steps: 8, dropout: 0.2, ..Default::default() };
+        let plain = Trainer::new(cfg, NumericsMode::Repro).run().unwrap();
+        let dp = DataParallelTrainer::new(cfg, 4, cfg.batch).unwrap().run().unwrap();
+        assert_eq!(plain.param_hash, dp.param_hash);
+    }
+
+    #[test]
+    fn ragged_tail_microbatch_is_deterministic() {
+        // batch 16, microbatch 5 → partials of 5,5,5,1
+        let cfg = TrainerConfig { steps: 6, ..Default::default() };
+        let a = DataParallelTrainer::new(cfg, 3, 5).unwrap().run().unwrap();
+        let b = DataParallelTrainer::new(cfg, 8, 5).unwrap().run().unwrap();
+        assert_eq!(a.param_hash, b.param_hash);
+    }
+
+    #[test]
+    fn microbatch_bounds_are_config_errors() {
+        let cfg = TrainerConfig::default();
+        assert!(DataParallelTrainer::new(cfg, 2, 0).is_err());
+        assert!(DataParallelTrainer::new(cfg, 2, cfg.batch + 1).is_err());
+    }
+}

@@ -1,0 +1,100 @@
+//! [`TrainState`] — the complete mutable state of a training run.
+//!
+//! The step engine's contract is that **everything** a step reads or
+//! writes besides the immutable config lives here, so checkpointing the
+//! state checkpoints the run: params, optimizer slot buffers, the step
+//! counter, and the RNG stream position. `Trainer::step` is then a pure
+//! state transition, and resume≡uninterrupted reduces to this struct
+//! round-tripping bit-exactly (proof sketch in DESIGN.md §12).
+
+use crate::coordinator::hashing::hash_params;
+use crate::coordinator::trainer::OptimizerCfg;
+use crate::optim::{Adam, AdamState, SgdState, SGD};
+use crate::rng::Philox;
+use crate::tensor::Tensor;
+use crate::{Error, Result};
+
+/// The optimizer instance owned by a [`TrainState`] — a closed enum so
+/// the engine can step, export and import without generics leaking into
+/// the checkpoint format.
+pub enum TrainOptimizer {
+    /// SGD (optionally with momentum slots).
+    Sgd(SGD),
+    /// Adam (moment slots + bias-correction counter).
+    Adam(Adam),
+}
+
+/// Exported optimizer slot state, mirroring [`TrainOptimizer`].
+#[derive(Clone, Debug)]
+pub enum OptState {
+    /// SGD momentum buffers.
+    Sgd(SgdState),
+    /// Adam moments + step counter.
+    Adam(AdamState),
+}
+
+impl TrainOptimizer {
+    /// Build a fresh optimizer from the config selection.
+    pub fn from_cfg(cfg: OptimizerCfg, lr: f32) -> TrainOptimizer {
+        match cfg {
+            OptimizerCfg::Sgd { momentum, weight_decay } => {
+                TrainOptimizer::Sgd(SGD::new(lr, momentum, weight_decay))
+            }
+            OptimizerCfg::Adam => TrainOptimizer::Adam(Adam::new(lr)),
+        }
+    }
+
+    /// Apply one optimizer step to `params` (fixed registration order).
+    pub fn step(&mut self, params: &mut [Tensor], grads: &[Tensor]) -> Result<()> {
+        let refs: Vec<&mut Tensor> = params.iter_mut().collect();
+        match self {
+            TrainOptimizer::Sgd(o) => o.step(refs, grads),
+            TrainOptimizer::Adam(o) => o.step(refs, grads),
+        }
+    }
+
+    /// Export the slot state for checkpointing.
+    pub fn export_state(&self) -> OptState {
+        match self {
+            TrainOptimizer::Sgd(o) => OptState::Sgd(o.export_state()),
+            TrainOptimizer::Adam(o) => OptState::Adam(o.export_state()),
+        }
+    }
+
+    /// Import checkpointed slot state. The state's family must match
+    /// this optimizer's ([`Error::Config`] otherwise — a checkpoint from
+    /// a different optimizer selection must never be silently adopted).
+    pub fn import_state(&mut self, state: OptState) -> Result<()> {
+        match (self, state) {
+            (TrainOptimizer::Sgd(o), OptState::Sgd(s)) => o.import_state(s),
+            (TrainOptimizer::Adam(o), OptState::Adam(s)) => o.import_state(s),
+            (TrainOptimizer::Sgd(_), OptState::Adam(_)) => {
+                Err(Error::config("optimizer state is Adam but the trainer runs SGD"))
+            }
+            (TrainOptimizer::Adam(_), OptState::Sgd(_)) => {
+                Err(Error::config("optimizer state is SGD but the trainer runs Adam"))
+            }
+        }
+    }
+}
+
+/// All mutable state of a training run (see module docs).
+pub struct TrainState {
+    /// Logical steps completed so far.
+    pub step: u64,
+    /// Parameters, fixed order: w1, b1, w2, b2.
+    pub params: Vec<Tensor>,
+    /// Optimizer instance (hyperparameters + slot buffers).
+    pub opt: TrainOptimizer,
+    /// Noise stream for dropout-style draws; its position is part of
+    /// the state so draws resume mid-stream.
+    pub noise: Philox,
+}
+
+impl TrainState {
+    /// SHA-256 fingerprint of the current parameters.
+    pub fn param_hash(&self) -> String {
+        let refs: Vec<&Tensor> = self.params.iter().collect();
+        hash_params(&refs)
+    }
+}

@@ -2,6 +2,13 @@
 //!
 //! Subcommands:
 //!   train        train the MLP workload (choose numerics: repro/baseline/atomic)
+//!                (--lanes L --microbatch M data-parallel fixed-order
+//!                 gradient reduction; --optimizer sgd|adam [--momentum
+//!                 --weight-decay] --dropout P; --checkpoint DIR
+//!                 [--checkpoint-every K] writes bit-exact REPDLCKP
+//!                 checkpoints, --resume continues from the newest intact
+//!                 one, --promote installs the final checkpoint into a
+//!                 ModelRegistry and verifies the served bits)
 //!   verify       E1/E2 style run-twice + cross-platform verification
 //!   transformer  train the char transformer (E8 workload)
 //!   serve        E7 batch-invariance report + pooled throughput + the
@@ -60,34 +67,197 @@ fn trainer_cfg(args: &Args) -> TrainerConfig {
         steps: args.get_usize("steps", 60),
         lr: args.get_f32("lr", 0.2),
         seed: args.get_u64("seed", 42),
+        dropout: args.get_f32("dropout", 0.0),
     }
 }
 
 fn cmd_train(args: &Args) -> i32 {
+    use repdl::coordinator::{
+        checkpoint_path, latest_checkpoint, save_checkpoint, Checkpoint, CheckpointMeta,
+        DataParallelTrainer, ModelRegistry, OptimizerCfg, ServeConfig,
+    };
+    use repdl::tensor::global_pool_handle;
     let cfg = trainer_cfg(args);
-    let mode = match args.get_str("mode", "repro").as_str() {
-        "repro" => NumericsMode::Repro,
-        "baseline" => NumericsMode::Baseline(PlatformProfile::reference()),
-        "atomic" => NumericsMode::BaselineAtomic(PlatformProfile::reference()),
+    let mode_str = args.get_str("mode", "repro");
+    let ckpt_dir = args.get_opt_str("checkpoint").map(std::path::PathBuf::from);
+    let do_resume = args.has("resume");
+    let do_promote = args.has("promote");
+    // baseline numerics keep the historical monolithic loop — the
+    // step/checkpoint engine is the reproducible path only (a baseline
+    // checkpoint could not honour resume≡uninterrupted anyway)
+    if mode_str != "repro" {
+        if ckpt_dir.is_some() || do_resume || do_promote {
+            eprintln!("--checkpoint/--resume/--promote need --mode repro");
+            return 2;
+        }
+        let mode = match mode_str.as_str() {
+            "baseline" => NumericsMode::Baseline(PlatformProfile::reference()),
+            "atomic" => NumericsMode::BaselineAtomic(PlatformProfile::reference()),
+            other => {
+                eprintln!("unknown --mode {other}");
+                return 2;
+            }
+        };
+        return match Trainer::new(cfg, mode).run() {
+            Ok(r) => {
+                for (i, l) in r.loss_curve.iter().enumerate() {
+                    if i % 10 == 0 || i + 1 == r.loss_curve.len() {
+                        println!("step {i:>4}  loss {l:.6}");
+                    }
+                }
+                println!("param_hash {}", r.param_hash);
+                0
+            }
+            Err(e) => {
+                eprintln!("train failed: {e}");
+                1
+            }
+        };
+    }
+    let opt = match args.get_str("optimizer", "sgd").as_str() {
+        "sgd" => OptimizerCfg::Sgd {
+            momentum: args.get_f32("momentum", 0.0),
+            weight_decay: args.get_f32("weight-decay", 0.0),
+        },
+        "adam" => OptimizerCfg::Adam,
         other => {
-            eprintln!("unknown --mode {other}");
+            eprintln!("unknown --optimizer {other} (want sgd|adam)");
             return 2;
         }
     };
-    match Trainer::new(cfg, mode).run() {
-        Ok(r) => {
-            for (i, l) in r.loss_curve.iter().enumerate() {
-                if i % 10 == 0 || i + 1 == r.loss_curve.len() {
-                    println!("step {i:>4}  loss {l:.6}");
+    let lanes = args.get_usize_at_least("lanes", 1, 1);
+    let microbatch = args.get_usize_at_least("microbatch", cfg.batch.min(4), 1);
+    let every = args.get_usize_at_least("checkpoint-every", 10, 1) as u64;
+    let engine = match DataParallelTrainer::new(cfg, lanes, microbatch) {
+        Ok(e) => e.optimizer(opt),
+        Err(e) => {
+            eprintln!("train: {e}");
+            return 2;
+        }
+    };
+    let meta = CheckpointMeta { cfg, opt, microbatch };
+    // resume from the newest intact checkpoint, or start fresh
+    let (mut st, mut curve) = match (&ckpt_dir, do_resume) {
+        (Some(dir), true) if dir.is_dir() => match latest_checkpoint(dir) {
+            Ok(scan) => {
+                for (path, why) in &scan.rejected {
+                    eprintln!("checkpoint skipped {}: {why}", path.display());
+                }
+                match scan.loaded {
+                    Some((path, ckpt)) => {
+                        if let Err(e) = ckpt.meta.ensure_matches(&meta) {
+                            eprintln!("resume refused: {e}");
+                            return 2;
+                        }
+                        println!("resumed from step {} ({})", ckpt.step, path.display());
+                        match ckpt.into_state() {
+                            Ok(sc) => sc,
+                            Err(e) => {
+                                eprintln!("resume failed: {e}");
+                                return 1;
+                            }
+                        }
+                    }
+                    None => (engine.init_state(), Vec::new()),
                 }
             }
-            println!("param_hash {}", r.param_hash);
-            0
+            Err(e) => {
+                eprintln!("checkpoint scan failed: {e}");
+                return 1;
+            }
+        },
+        _ => (engine.init_state(), Vec::new()),
+    };
+    if let Some(dir) = &ckpt_dir {
+        if let Err(e) = std::fs::create_dir_all(dir) {
+            eprintln!("checkpoint dir: {e}");
+            return 1;
         }
+    }
+    while (st.step as usize) < cfg.steps {
+        let loss = match engine.step(&mut st) {
+            Ok(l) => l,
+            Err(e) => {
+                eprintln!("train failed: {e}");
+                return 1;
+            }
+        };
+        curve.push(loss);
+        let i = st.step - 1;
+        if i % 10 == 0 || st.step as usize == cfg.steps {
+            println!("step {i:>4}  loss {loss:.6}");
+        }
+        if let Some(dir) = &ckpt_dir {
+            if st.step % every == 0 || st.step as usize == cfg.steps {
+                let path = checkpoint_path(dir, st.step);
+                if let Err(e) = save_checkpoint(&path, &meta, &st, &curve) {
+                    eprintln!("checkpoint save failed: {e}");
+                    return 1;
+                }
+            }
+        }
+    }
+    println!("param_hash {}", st.param_hash());
+    if !do_promote {
+        return 0;
+    }
+    // train→serve promotion: install the final state as a live model and
+    // verify the served bits against direct inference on the weights
+    let ckpt = Checkpoint::capture(meta, &st, &curve);
+    let pool = global_pool_handle();
+    let mut reg = ModelRegistry::new();
+    let promo = match reg.promote("mlp", &ckpt, 1, pool.clone(), ServeConfig::default()) {
+        Ok(p) => p,
         Err(e) => {
-            eprintln!("train failed: {e}");
-            1
+            eprintln!("promote failed: {e}");
+            return 1;
         }
+    };
+    println!(
+        "promoted model_id={} watermark={} weights_hash={}",
+        promo.model_id,
+        promo.watermark,
+        &promo.weights_hash[..16]
+    );
+    let mlp = match ckpt.to_mlp() {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("promote failed: {e}");
+            return 1;
+        }
+    };
+    let d_in = cfg.side * cfg.side;
+    let reqs: Vec<Tensor> = (0..8)
+        .map(|i| repdl::rng::uniform_tensor(&[d_in], -1.0, 1.0, 900 + i as u64))
+        .collect();
+    let mut x = Tensor::zeros(&[reqs.len(), d_in]);
+    for (i, r) in reqs.iter().enumerate() {
+        x.data_mut()[i * d_in..(i + 1) * d_in].copy_from_slice(r.data());
+    }
+    let direct = match mlp.forward_infer_in(&pool, &x) {
+        Ok(y) => y,
+        Err(e) => {
+            eprintln!("promote verify failed: {e}");
+            return 1;
+        }
+    };
+    let pending: Vec<_> = reqs
+        .iter()
+        .map(|r| reg.submit("mlp", r.clone()).expect("submit"))
+        .collect();
+    reg.flush_all();
+    let mut mismatches = 0usize;
+    for (i, p) in pending.into_iter().enumerate() {
+        let out = p.wait().expect("serve");
+        if out.data() != &direct.data()[i * cfg.classes..(i + 1) * cfg.classes] {
+            mismatches += 1;
+        }
+    }
+    println!("promotion served={} mismatches={mismatches}", reqs.len());
+    if mismatches == 0 {
+        0
+    } else {
+        1
     }
 }
 

@@ -9,6 +9,76 @@
 use crate::tensor::Tensor;
 use crate::{Error, Result};
 
+/// Exported [`SGD`] slot state: the momentum buffers, in parameter
+/// registration order. Empty = momentum disabled or no step taken yet
+/// (both resume identically: buffers lazily initialize to zeros).
+#[derive(Clone, Debug, Default)]
+pub struct SgdState {
+    /// Momentum buffers (one per parameter; may be empty).
+    pub bufs: Vec<Tensor>,
+}
+
+/// Exported [`Adam`] slot state: first/second moment buffers plus the
+/// bias-correction step counter `t`. `import_state(export_state())`
+/// round-trips exactly; a resumed optimizer's next step is bit-identical
+/// to the uninterrupted one (the whole update is a pure function of
+/// (params, grads, m, v, t)).
+#[derive(Clone, Debug, Default)]
+pub struct AdamState {
+    /// First-moment buffers (one per parameter; may be empty pre-step).
+    pub m: Vec<Tensor>,
+    /// Second-moment buffers (aligned with `m`).
+    pub v: Vec<Tensor>,
+    /// Bias-correction step counter (number of steps taken).
+    pub t: u32,
+}
+
+/// Check an imported slot buffer list against itself: every buffer must
+/// be present exactly once per parameter *when the list is non-empty* —
+/// per-parameter shape agreement is then enforced at `step()` time,
+/// where the parameter shapes are first known.
+fn check_aligned(what: &str, a: &[Tensor], b: &[Tensor]) -> Result<()> {
+    if a.len() != b.len() {
+        return Err(Error::shape(format!(
+            "{what}: moment buffer lists misaligned ({} vs {})",
+            a.len(),
+            b.len()
+        )));
+    }
+    for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        if x.dims() != y.dims() {
+            return Err(Error::shape(format!("{what}: moment buffer {i} shape mismatch")));
+        }
+    }
+    Ok(())
+}
+
+/// Slot-vs-param shape check shared by both optimizers' `step`: an
+/// imported buffer set that does not match the parameter list is a
+/// typed [`Error::Shape`], never an index panic.
+fn check_slots(what: &str, bufs: &[Tensor], params: &[&mut Tensor]) -> Result<()> {
+    if bufs.is_empty() {
+        return Ok(());
+    }
+    if bufs.len() != params.len() {
+        return Err(Error::shape(format!(
+            "{what}: {} slot buffers for {} params",
+            bufs.len(),
+            params.len()
+        )));
+    }
+    for (i, (b, p)) in bufs.iter().zip(params.iter()).enumerate() {
+        if b.dims() != p.dims() {
+            return Err(Error::shape(format!(
+                "{what}: slot buffer {i} shape {:?} does not match param shape {:?}",
+                b.dims(),
+                p.dims()
+            )));
+        }
+    }
+    Ok(())
+}
+
 /// Stochastic gradient descent with optional momentum + weight decay.
 pub struct SGD {
     /// Learning rate.
@@ -26,12 +96,25 @@ impl SGD {
         SGD { lr, momentum, weight_decay, bufs: Vec::new() }
     }
 
+    /// Export the slot state (momentum buffers) for checkpointing.
+    pub fn export_state(&self) -> SgdState {
+        SgdState { bufs: self.bufs.clone() }
+    }
+
+    /// Import checkpointed slot state. Internal consistency is checked
+    /// here; buffer-vs-parameter shapes are checked on the next `step`.
+    pub fn import_state(&mut self, state: SgdState) -> Result<()> {
+        self.bufs = state.bufs;
+        Ok(())
+    }
+
     /// Apply one step. `params` and `grads` must align (fixed order).
     /// Update graph per element: `g ← g + wd·p; v ← μ·v + g; p ← p − lr·v`.
     pub fn step(&mut self, params: Vec<&mut Tensor>, grads: &[Tensor]) -> Result<()> {
         if params.len() != grads.len() {
             return Err(Error::shape("SGD::step: params/grads length mismatch"));
         }
+        check_slots("SGD::step", &self.bufs, &params)?;
         if self.bufs.is_empty() && self.momentum != 0.0 {
             self.bufs = params.iter().map(|p| Tensor::zeros(p.dims())).collect();
         }
@@ -101,6 +184,28 @@ impl Adam {
         a
     }
 
+    /// The bias-correction step counter (steps taken so far). Read-only:
+    /// `t` advances only through [`Adam::step`] or a state import.
+    pub fn t(&self) -> u32 {
+        self.t
+    }
+
+    /// Export the slot state (moments + `t`) for checkpointing.
+    pub fn export_state(&self) -> AdamState {
+        AdamState { m: self.m.clone(), v: self.v.clone(), t: self.t }
+    }
+
+    /// Import checkpointed slot state. `m`/`v` must align with each
+    /// other ([`Error::Shape`] otherwise); alignment with the parameter
+    /// list is checked on the next `step`, where param shapes are known.
+    pub fn import_state(&mut self, state: AdamState) -> Result<()> {
+        check_aligned("Adam::import_state", &state.m, &state.v)?;
+        self.m = state.m;
+        self.v = state.v;
+        self.t = state.t;
+        Ok(())
+    }
+
     /// One step; fixed per-element graph:
     /// `m ← β₁m + (1−β₁)g; v ← β₂v + (1−β₂)g²;`
     /// `p ← p − lr·m̂ · rsqrt-free (√v̂ + ε)⁻¹` using hardware √ (CR).
@@ -108,6 +213,7 @@ impl Adam {
         if params.len() != grads.len() {
             return Err(Error::shape("Adam::step: params/grads length mismatch"));
         }
+        check_slots("Adam::step", &self.m, &params)?;
         if self.m.is_empty() {
             self.m = params.iter().map(|p| Tensor::zeros(p.dims())).collect();
             self.v = params.iter().map(|p| Tensor::zeros(p.dims())).collect();
@@ -219,6 +325,86 @@ mod tests {
         assert!(SGD::new(0.1, 0.0, 0.0)
             .step(vec![&mut p], &[g2.clone(), g2])
             .is_err());
+    }
+
+    #[test]
+    fn adam_state_round_trips_mid_run() {
+        let (mut p, c) = quad_problem();
+        let mut opt = Adam::new(0.2);
+        for _ in 0..7 {
+            let g = grad_of(&p, &c);
+            opt.step(vec![&mut p], &[g]).unwrap();
+        }
+        let snap_p = p.clone();
+        let snap = opt.export_state();
+        assert_eq!(snap.t, 7);
+        // continue the original
+        for _ in 0..5 {
+            let g = grad_of(&p, &c);
+            opt.step(vec![&mut p], &[g]).unwrap();
+        }
+        // resume a fresh optimizer from the snapshot — bits must match
+        let mut p2 = snap_p;
+        let mut opt2 = Adam::new(0.2);
+        opt2.import_state(snap).unwrap();
+        assert_eq!(opt2.t(), 7);
+        for _ in 0..5 {
+            let g = grad_of(&p2, &c);
+            opt2.step(vec![&mut p2], &[g]).unwrap();
+        }
+        assert!(p.bit_eq(&p2));
+    }
+
+    #[test]
+    fn sgd_momentum_state_round_trips_mid_run() {
+        let (mut p, c) = quad_problem();
+        let mut opt = SGD::new(0.05, 0.9, 0.01);
+        for _ in 0..7 {
+            let g = grad_of(&p, &c);
+            opt.step(vec![&mut p], &[g]).unwrap();
+        }
+        let snap_p = p.clone();
+        let snap = opt.export_state();
+        for _ in 0..5 {
+            let g = grad_of(&p, &c);
+            opt.step(vec![&mut p], &[g]).unwrap();
+        }
+        let mut p2 = snap_p;
+        let mut opt2 = SGD::new(0.05, 0.9, 0.01);
+        opt2.import_state(snap).unwrap();
+        for _ in 0..5 {
+            let g = grad_of(&p2, &c);
+            opt2.step(vec![&mut p2], &[g]).unwrap();
+        }
+        assert!(p.bit_eq(&p2));
+    }
+
+    #[test]
+    fn mismatched_imports_are_typed_errors_not_panics() {
+        // m/v misaligned with each other → rejected at import
+        let bad = AdamState {
+            m: vec![Tensor::zeros(&[3])],
+            v: vec![Tensor::zeros(&[4])],
+            t: 1,
+        };
+        assert!(matches!(Adam::new(0.1).import_state(bad), Err(Error::Shape(_))));
+        // slot count / slot shape misaligned with params → rejected at step
+        let mut p = Tensor::zeros(&[3]);
+        let g = Tensor::zeros(&[3]);
+        let mut adam = Adam::new(0.1);
+        adam.import_state(AdamState {
+            m: vec![Tensor::zeros(&[4])],
+            v: vec![Tensor::zeros(&[4])],
+            t: 1,
+        })
+        .unwrap();
+        assert!(matches!(
+            adam.step(vec![&mut p], &[g.clone()]),
+            Err(Error::Shape(_))
+        ));
+        let mut sgd = SGD::new(0.1, 0.9, 0.0);
+        sgd.import_state(SgdState { bufs: vec![Tensor::zeros(&[4])] }).unwrap();
+        assert!(matches!(sgd.step(vec![&mut p], &[g]), Err(Error::Shape(_))));
     }
 
     #[test]

@@ -13,8 +13,8 @@ pub mod mt19937;
 pub mod philox;
 
 pub use init::{kaiming_uniform, normal_tensor, uniform_tensor, xavier_uniform};
-pub use mt19937::Mt19937;
-pub use philox::Philox;
+pub use mt19937::{Mt19937, Mt19937State};
+pub use philox::{Philox, PhiloxState};
 
 /// Derive worker seed `w` from a base seed: SplitMix64 of (base, w).
 /// The paper: "the local seed is calculated from a deterministic function

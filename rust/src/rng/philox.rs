@@ -18,6 +18,23 @@ pub struct Philox {
     idx: usize,
 }
 
+/// A serialized [`Philox`] position: everything the generator holds,
+/// including the partially-consumed output buffer, so a restored stream
+/// resumes **mid-block** — the next draw after restore is bit-identical
+/// to the next draw the snapshotted generator would have produced.
+/// Plain-old-data so checkpoints can write it as 11 little-endian words.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PhiloxState {
+    /// 128-bit block counter (the *next* block to generate).
+    pub counter: [u32; 4],
+    /// 64-bit key (the seed).
+    pub key: [u32; 2],
+    /// Current output block.
+    pub buf: [u32; 4],
+    /// Words of `buf` already consumed (0..=4; 4 = buffer exhausted).
+    pub idx: u32,
+}
+
 impl Philox {
     /// New stream: `seed` is the key, `stream` offsets the counter's high
     /// word so different workers get disjoint counter spaces.
@@ -27,6 +44,28 @@ impl Philox {
             key: [seed as u32, (seed >> 32) as u32],
             buf: [0; 4],
             idx: 4,
+        }
+    }
+
+    /// Snapshot the full generator position (see [`PhiloxState`]).
+    pub fn snapshot(&self) -> PhiloxState {
+        PhiloxState {
+            counter: self.counter,
+            key: self.key,
+            buf: self.buf,
+            idx: self.idx as u32,
+        }
+    }
+
+    /// Rebuild a generator at a snapshotted position. `restore(snapshot())`
+    /// is the identity on the output stream: draw-for-draw bit equality,
+    /// even when the snapshot was taken mid-block.
+    pub fn restore(state: PhiloxState) -> Self {
+        Philox {
+            counter: state.counter,
+            key: state.key,
+            buf: state.buf,
+            idx: (state.idx as usize).min(4),
         }
     }
 
@@ -105,6 +144,34 @@ mod tests {
         let first: Vec<u32> = (0..4).map(|_| r.next_u32()).collect();
         let second: Vec<u32> = (0..4).map(|_| r.next_u32()).collect();
         assert_ne!(first, second);
+    }
+
+    #[test]
+    fn snapshot_restore_resumes_mid_block() {
+        // snapshot at every offset within a block (idx 0..4) and across
+        // block boundaries: the restored stream must continue bit-exactly
+        for consumed in 0..10usize {
+            let mut a = Philox::new(77, 3);
+            for _ in 0..consumed {
+                a.next_u32();
+            }
+            let snap = a.snapshot();
+            let rest: Vec<u32> = (0..32).map(|_| a.next_u32()).collect();
+            let mut b = Philox::restore(snap);
+            let resumed: Vec<u32> = (0..32).map(|_| b.next_u32()).collect();
+            assert_eq!(rest, resumed, "consumed={consumed}");
+        }
+    }
+
+    #[test]
+    fn snapshot_is_plain_data_round_trip() {
+        let mut r = Philox::new(5, 1);
+        r.next_u32();
+        let s = r.snapshot();
+        // field-by-field copy through the POD struct is a faithful clone
+        let copy = PhiloxState { counter: s.counter, key: s.key, buf: s.buf, idx: s.idx };
+        assert_eq!(s, copy);
+        assert_eq!(Philox::restore(copy).next_u32(), r.next_u32());
     }
 
     #[test]
