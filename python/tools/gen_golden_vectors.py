@@ -362,10 +362,54 @@ def attention_forward(q, k, v, causal):
     return out
 
 
-def mha_forward(x, in_w, in_b, out_w, out_b, heads, causal):
+# how many logical partial sums a row-split tensor-parallel layer always
+# decomposes into — keep in lockstep with rust/src/nn/linear.rs
+TP_LOGICAL_PARTS = 4
+
+
+def tree_reduce_tensors(parts):
+    """`rnum::fixed_tree_reduce` over element-wise f32 tensor partials:
+    split at the largest power of two below n (`_pairwise_split`), left
+    subtree first, one f32 RNE add per element at each internal node."""
+    if len(parts) == 1:
+        return parts[0]
+    m = _pairwise_split(len(parts))
+    return add_rows(tree_reduce_tensors(parts[:m]), tree_reduce_tensors(parts[m:]))
+
+
+def sharded_linear_row(x, w, b):
+    """Row-split tensor-parallel Linear (`Linear::pack_row_shard_in` +
+    `reduce_row_partials`): k divides into TP_LOGICAL_PARTS equal
+    contiguous logical segments, one bias-free sequential-k partial per
+    segment, the partials combined in the fixed pairwise tree, bias
+    added exactly once (one `+` per element) after the tree. A pure
+    function of the layer shape — the identical graph at every
+    tensor-parallel width, which is what the Rust side's TP {1, 2, 4}
+    grids pin against this emulation."""
+    k = x.shape[1]
+    assert k % TP_LOGICAL_PARTS == 0, f"k {k} has no {TP_LOGICAL_PARTS}-segment split"
+    sk = k // TP_LOGICAL_PARTS
+    parts = []
+    for g in range(TP_LOGICAL_PARTS):
+        xs = np.ascontiguousarray(x[:, g * sk : (g + 1) * sk])
+        ws = np.ascontiguousarray(w[:, g * sk : (g + 1) * sk].T)  # (sk, n)
+        parts.append(matmul_seq(xs, ws))
+    y = tree_reduce_tensors(parts)
+    out = np.zeros(y.shape, F32)
+    for i in range(y.shape[0]):
+        for j in range(y.shape[1]):
+            out[i, j] = F32(y[i, j] + b[j])
+    return out
+
+
+def mha_forward(x, in_w, in_b, out_w, out_b, heads, causal, out_proj=None):
     """nn::MultiheadAttention::forward_seq_infer_in: QKV projection,
     layout-only head split q/k/v[h,t,d] = qkv[t, c·D + h·Dh + d],
-    attention core, layout-only merge, output projection."""
+    attention core, layout-only merge, output projection. The sharded
+    forward (`forward_seq_sharded_in`) differs only in `out_proj`: the
+    per-head shard split is layout-only (each head keeps its graph, the
+    merge is in fixed head order), so passing `sharded_linear_row`
+    reproduces its bits."""
     tt, dim = x.shape
     dh = dim // heads
     qkv = linear_forward(x, in_w, in_b)  # (T, 3D)
@@ -383,7 +427,7 @@ def mha_forward(x, in_w, in_b, out_w, out_b, heads, causal):
         for t in range(tt):
             for d in range(dh):
                 y[t, h * dh + d] = o[h, t, d]
-    return linear_forward(y, out_w, out_b)
+    return (out_proj or linear_forward)(y, out_w, out_b)
 
 
 def mlp_forward_gelu(x, layers):
@@ -392,6 +436,25 @@ def mlp_forward_gelu(x, layers):
     h = x
     for i, (w, b) in enumerate(layers):
         h = linear_forward(h, w, b)
+        if i + 1 < len(layers):
+            out = np.zeros(h.shape, F32)
+            for idx in np.ndindex(h.shape):
+                out[idx] = gelu_tanh_f32(h[idx])
+            h = out
+    return h
+
+
+def mlp_forward_gelu_sharded(x, layers):
+    """Mlp::forward_infer_sharded_in under the Megatron plan: even layer
+    indices column-split (layout-only — bias and activation applied
+    locally, element-wise, so identical bits to the unsharded layer),
+    odd indices row-split through the fixed tree. Note the result is a
+    *different* deterministic spec from `mlp_forward_gelu` (the odd
+    layers' k-reduction associates as a 4-segment tree, not one
+    sequential scan) — TP-invariant, but not unsharded-equal."""
+    h = x
+    for i, (w, b) in enumerate(layers):
+        h = linear_forward(h, w, b) if i % 2 == 0 else sharded_linear_row(h, w, b)
         if i + 1 < len(layers):
             out = np.zeros(h.shape, F32)
             for idx in np.ndindex(h.shape):
@@ -418,10 +481,20 @@ def transformer_param_shapes(cfg):
     return shapes
 
 
-def transformer_logits(params, ids, cfg):
+def transformer_logits(params, ids, cfg, sharded=False):
     """CharTransformer::forward_logits_infer_in: embedding row lookup +
     positional rows (layout-only), pre-norm blocks (LN → causal MHA →
-    residual, LN → GELU MLP → residual), final LN, head projection."""
+    residual, LN → GELU MLP → residual), final LN, head projection.
+
+    With ``sharded=True`` this is `forward_logits_sharded_in` instead:
+    the embedding / LayerNorm / residual graph is untouched (replicated,
+    element-wise per row), attention shards per head (layout-only) with
+    a row-split output projection, fc1 is column-split (layout-only),
+    and fc2 and the LM head are row-split — each row-split k-reduction
+    goes through the fixed 4-segment tree instead of one sequential
+    scan, so the sharded logits are a different deterministic spec from
+    the unsharded ones (TP-invariant, not unsharded-equal)."""
+    row_proj = sharded_linear_row if sharded else linear_forward
     it = iter(params)
     tok, pos = next(it), next(it)
     tt, dim = len(ids), cfg["dim"]
@@ -435,19 +508,19 @@ def transformer_logits(params, ids, cfg):
         ln2_w, ln2_b = next(it), next(it)
         fc1_w, fc1_b, fc2_w, fc2_b = next(it), next(it), next(it), next(it)
         a = layer_norm_rows(h, ln1_w, ln1_b)
-        a = mha_forward(a, in_w, in_b, out_w, out_b, cfg["heads"], True)
+        a = mha_forward(a, in_w, in_b, out_w, out_b, cfg["heads"], True, out_proj=row_proj)
         x = add_rows(h, a)
         g = layer_norm_rows(x, ln2_w, ln2_b)
         g = linear_forward(g, fc1_w, fc1_b)
         gg = np.zeros(g.shape, F32)
         for idx in np.ndindex(g.shape):
             gg[idx] = gelu_tanh_f32(g[idx])
-        g = linear_forward(gg, fc2_w, fc2_b)
+        g = row_proj(gg, fc2_w, fc2_b)
         h = add_rows(x, g)
     ln_f_w, ln_f_b = next(it), next(it)
     head_w, head_b = next(it), next(it)
     h = layer_norm_rows(h, ln_f_w, ln_f_b)
-    return linear_forward(h, head_w, head_b)
+    return row_proj(h, head_w, head_b)
 
 
 # ---------------------------------------------------------------------------
@@ -529,6 +602,18 @@ def compute_entries():
     entries["transformer_infer_logits_6x10"] = hash_params(
         [transformer_logits(tp, TRANSFORMER_IDS, TRANSFORMER_CFG)]
     )
+
+    # tensor-parallel sharded forwards (ISSUE 9): the same models through
+    # the sharded reduction graph — row-split layers reduce their
+    # 4-segment logical partials in the fixed pairwise tree. One entry
+    # per model because the graph is TP-invariant by construction; the
+    # Rust test pins its TP grid against these single hashes.
+    entries["mlp_infer_gelu_sharded_4x10"] = hash_params(
+        [mlp_forward_gelu_sharded(mx, mlp_layers)]
+    )
+    entries["transformer_infer_logits_sharded_6x10"] = hash_params(
+        [transformer_logits(tp, TRANSFORMER_IDS, TRANSFORMER_CFG, sharded=True)]
+    )
     return entries
 
 
@@ -549,6 +634,14 @@ def selftest():
     fused = fmaf(x, x, F32(-1.0))
     unfused = F32(F32(x * x) - F32(1.0))
     assert fused != unfused, "libm fmaf did not fuse"
+    # the fixed tree must associate ((0+1)+(2+3)) for four partials —
+    # the association spec shared with rnum::fixed_tree_reduce, checked
+    # on data where a sequential association gives different bits
+    p = [np.array([[v]], F32) for v in (0.5, 1e9, -1e9, 0.25)]
+    want = F32(F32(F32(0.5) + F32(1e9)) + F32(F32(-1e9) + F32(0.25)))
+    assert tree_reduce_tensors(p)[0, 0] == want, "tree association drifted"
+    seq = F32(F32(F32(F32(0.5) + F32(1e9)) + F32(-1e9)) + F32(0.25))
+    assert want != seq, "association test data lost its discriminating power"
     # rexp at 0 / extremes
     assert rexp_f32(F32(0.0)) == F32(1.0)
     assert rexp_f32(F32(-200.0)) == F32(0.0)

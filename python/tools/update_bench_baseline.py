@@ -47,6 +47,7 @@ KEY = (
     "kernel",
     "model",
     "mode",
+    "tp",
     "context",
     "requests",
     "shards",
@@ -74,7 +75,7 @@ def merge(runs: list[list[dict]]) -> list[dict]:
     merged: dict[tuple, dict] = {}
     for entries in runs:
         for e in entries:
-            if e.get("kernel") not in ("scheduler", "cache", "kv", "journal", "train"):
+            if e.get("kernel") not in ("scheduler", "cache", "kv", "journal", "train", "tp"):
                 continue
             k = row_key(e)
             cur = merged.get(k)
@@ -108,7 +109,7 @@ def main() -> int:
         return 1
     entries = merge(runs)
     if not entries:
-        print("error: inputs held no scheduler/cache/kv/journal rows")
+        print("error: inputs held no scheduler/cache/kv/journal/train/tp rows")
         return 1
     BASELINE.write_text(
         json.dumps({"bench": "serve", "note": NOTE, "entries": entries}, indent=2) + "\n"

@@ -27,7 +27,7 @@ use repdl::bench_harness::{
 };
 use repdl::coordinator::{
     DeterministicServer, MlpTower, ModelTower, NumericsMode, ServeConfig, ServeScheduler,
-    Trainer, TrainerConfig, TransformerTower,
+    ShardedTower, Trainer, TrainerConfig, TransformerTower,
 };
 use repdl::nn::{Act, CharTransformer, Mlp, TransformerConfig};
 use std::sync::Arc;
@@ -636,6 +636,75 @@ fn main() {
                         .int("allocs_per_call", allocs),
                 );
             }
+        }
+    }
+    // tensor-parallel width ablation (DESIGN.md §13): the transformer
+    // tower served through TP ∈ {1,2,4} shard sets. The bit gate runs
+    // before any timing — every width must produce the identical
+    // response bits on every request, so these rows double as a
+    // release-mode check of the fixed logical-segment reduction tree.
+    // Timings then show what the width knob costs on one host (shards
+    // run sequentially here; the win arrives with real multi-host
+    // dispatch). Single submitter, so allocs_per_call is
+    // event-sequence-pure and can be hard-gated by CI.
+    section("E5: serve tensor-parallel — TP width ablation (same bits)");
+    {
+        let tctx = if smoke { 8 } else { 16 };
+        let tcfg = TransformerConfig {
+            vocab: 28,
+            dim: if smoke { 16 } else { 32 },
+            heads: 4,
+            layers: 2,
+            context: tctx,
+            mlp_ratio: 2,
+        };
+        let tp_queue: Vec<Tensor> = (1..=tctx)
+            .map(|tt| {
+                Tensor::from_vec(
+                    &[tt],
+                    (0..tt).map(|t| ((t * 7 + 3) % tcfg.vocab) as f32).collect(),
+                )
+                .unwrap()
+            })
+            .collect();
+        let pl = WorkerPool::shared(lanes);
+        // same cfg + seed ⇒ identical weights in every tower
+        let towers: Vec<(usize, ShardedTower)> = [1usize, 2, 4]
+            .into_iter()
+            .map(|tp| {
+                (tp, ShardedTower::transformer(CharTransformer::new(tcfg, 12).unwrap(), tp).unwrap())
+            })
+            .collect();
+        // bit gate: every width, every request — identical bits and an
+        // identical (TP-invariant) weights hash
+        let want = towers[0].1.forward_batch(&pl, &tp_queue).unwrap();
+        for (tp, t) in &towers[1..] {
+            assert_eq!(t.weights_hash(), towers[0].1.weights_hash(), "tp={tp} changed the hash");
+            let got = t.forward_batch(&pl, &tp_queue).unwrap();
+            for (i, (a, b)) in want.iter().zip(got.iter()).enumerate() {
+                assert!(a.bit_eq(b), "tp={tp} request={i}: sharding changed bits");
+            }
+        }
+        for (tp, t) in &towers {
+            let run = || {
+                t.forward_batch(&pl, &tp_queue).unwrap();
+            };
+            let st = bench_once(&format!("serve tp={tp} ctx={tctx}"), samples, &run);
+            let (allocs, _) = allocs_during(&run);
+            serve_entries.push(
+                JsonObj::new()
+                    .s("kernel", "tp")
+                    .s("model", "transformer")
+                    .int("tp", *tp as u64)
+                    .int("context", tctx as u64)
+                    .int("requests", tp_queue.len() as u64)
+                    .int("pool_lanes", lanes as u64)
+                    .int("d_in", tctx as u64)
+                    .int("d_out", tcfg.vocab as u64)
+                    .num("median_ns", st.median_ns)
+                    .num("req_per_s", st.per_sec(tp_queue.len()))
+                    .int("allocs_per_call", allocs),
+            );
         }
     }
     write_bench_json(&bench_json_path("serve"), "serve", &serve_entries)

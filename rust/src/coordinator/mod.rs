@@ -23,7 +23,7 @@ pub use serve::{
     JournalStats, JournalWriter, LogEntry, MemoCache, MlpTower, ModelRegistry, ModelTower,
     NamedTower, PanicAtTicket, Pending, Promotion, RecoveryReport, ReplayReport, ResponseLog,
     ServeConfig, ServeReplica, ServeReport, ServeScheduler, ServeThroughput, Session,
-    SessionStats, SessionStore, TransformerTower, VecWriter,
+    SessionStats, SessionStore, ShardedTower, TransformerTower, VecWriter,
 };
 pub use trainer::{batch_indices, NumericsMode, OptimizerCfg, TrainReport, Trainer, TrainerConfig};
 pub use verifier::{compare_runs, first_divergence, Comparison};

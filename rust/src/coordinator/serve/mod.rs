@@ -71,7 +71,7 @@ pub use scheduler::{
     BatchTrace, Pending, RecoveryReport, ReplayReport, ServeConfig, ServeScheduler,
 };
 pub use session::{token_key, Session, SessionStats, SessionStore};
-pub use tower::{MlpTower, ModelTower, NamedTower, TransformerTower};
+pub use tower::{MlpTower, ModelTower, NamedTower, ShardedTower, TransformerTower};
 
 use std::sync::{Mutex, MutexGuard};
 

@@ -34,10 +34,45 @@
 use super::replica::{check_request, DeterministicServer};
 use super::session::{token_key, Session, SessionStats, SessionStore};
 use crate::coordinator::hashing::hash_params;
-use crate::nn::{CharTransformer, Mlp, Module, PackedMlp, PackedTransformer};
+use crate::nn::{
+    CharTransformer, Mlp, Module, PackedMlp, PackedMlpShard, PackedTransformer,
+    PackedTransformerShard, ShardPlan,
+};
 use crate::tensor::pool::global_pool;
 use crate::tensor::{Tensor, WorkerPool};
 use crate::{Error, Result};
+
+/// Reject a token request whose count is outside `1..=context` —
+/// variable-length sequences are the point of incremental decode (a
+/// token tower's `d_in()` is the *maximum* request length).
+fn check_token_len(context: usize, request: &Tensor) -> Result<()> {
+    let n = request.numel();
+    if n == 0 || n > context {
+        return Err(Error::shape(format!(
+            "transformer tower: request length {n} outside 1..={context}"
+        )));
+    }
+    Ok(())
+}
+
+/// Decode a token request back to ids, rejecting anything that is not a
+/// non-negative integer below `vocab`.
+fn decode_token_ids(vocab: usize, request: &Tensor) -> Result<Vec<usize>> {
+    request
+        .data()
+        .iter()
+        .map(|&v| {
+            let ok = v.is_finite() && v >= 0.0 && v.fract() == 0.0;
+            if ok && (v as usize) < vocab {
+                Ok(v as usize)
+            } else {
+                Err(Error::shape(format!(
+                    "transformer tower: token {v} is not an id in 0..{vocab}"
+                )))
+            }
+        })
+        .collect()
+}
 
 /// A model replica's numerics surface: everything the serve scheduler
 /// needs to batch, route, cache and audit requests for one model.
@@ -274,14 +309,7 @@ impl TransformerTower {
     /// variable-length sequences are the point of incremental decode
     /// (`d_in()` stays `context`: the *maximum* request length).
     fn check_len(&self, request: &Tensor) -> Result<()> {
-        let n = request.numel();
-        let ctx = self.model.cfg.context;
-        if n == 0 || n > ctx {
-            return Err(Error::shape(format!(
-                "transformer tower: request length {n} outside 1..={ctx}"
-            )));
-        }
-        Ok(())
+        check_token_len(self.model.cfg.context, request)
     }
 
     /// Full recompute of one request's last-position logits through the
@@ -340,21 +368,7 @@ impl TransformerTower {
 
     /// Decode a validated request back to token ids.
     fn ids_of(&self, request: &Tensor) -> Result<Vec<usize>> {
-        request
-            .data()
-            .iter()
-            .map(|&v| {
-                let ok = v.is_finite() && v >= 0.0 && v.fract() == 0.0;
-                if ok && (v as usize) < self.model.cfg.vocab {
-                    Ok(v as usize)
-                } else {
-                    Err(Error::shape(format!(
-                        "transformer tower: token {v} is not an id in 0..{}",
-                        self.model.cfg.vocab
-                    )))
-                }
-            })
-            .collect()
+        decode_token_ids(self.model.cfg.vocab, request)
     }
 }
 
@@ -478,6 +492,259 @@ impl ModelTower for TransformerTower {
     fn validate_request(&self, request: &Tensor) -> Result<()> {
         self.check_len(request)?;
         self.ids_of(request).map(|_| ())
+    }
+}
+
+/// Model-specific state of a [`ShardedTower`].
+enum ShardedInner {
+    Mlp { mlp: Mlp, shards: Vec<PackedMlpShard>, d_in: usize, d_out: usize },
+    Transformer {
+        model: CharTransformer,
+        shards: Vec<PackedTransformerShard>,
+        sessions: Option<SessionStore>,
+    },
+}
+
+/// A tensor-parallel tower: one model served through `tp` packed shard
+/// sets (`nn`'s `ShardPlan` layout), every request's partial outputs
+/// combined through the fixed logical-segment reduction tree
+/// (`rnum::reduce`). Because the sharded forward's bits are invariant
+/// across `tp ∈ {1, 2, 4}` at the `nn` layer, so is every serving
+/// artifact built on them.
+///
+/// **Identity is TP-invariant by construction.** `model_id` stays
+/// `"mlp"` / `"transformer"` and `weights_hash` fingerprints the
+/// *unsharded* parameter order — shard packing is downstream layout, so
+/// memo-cache keys, response-log entries and journal `Ident` records
+/// are identical at every width: a journal recorded at `--tp 1` recovers
+/// and replays bit-exactly on a `--tp 4` deployment, and KV sessions
+/// captured at one width continue at another (the cache keeps the full
+/// unsharded head layout).
+///
+/// Note the sharded reduction graph is a *different* (equally
+/// deterministic) spec from the unsharded packed towers — like choosing
+/// a microbatch size in training. `--tp N` deployments interoperate
+/// with each other, not with journals recorded by the unsharded towers
+/// (replay verification catches any such mix-up).
+pub struct ShardedTower {
+    inner: ShardedInner,
+    model_id: String,
+    weights_hash: String,
+    tp: usize,
+}
+
+/// One shard plan per rank; rejects `tp == 0` before the empty range
+/// could silently produce a shard-less tower.
+fn shard_plans(tp: usize) -> Result<Vec<ShardPlan>> {
+    if tp == 0 {
+        return Err(Error::config("sharded tower: tp must be >= 1"));
+    }
+    (0..tp).map(|s| ShardPlan::new(tp, s)).collect()
+}
+
+impl ShardedTower {
+    /// Serve an MLP at tensor-parallel width `tp` (id `"mlp"`). Errors
+    /// — never panics — on `tp ∉ {1, 2, 4}` or layer widths the shard
+    /// plan cannot divide.
+    pub fn mlp(mlp: Mlp, tp: usize) -> Result<ShardedTower> {
+        let d_in = mlp.d_in()?;
+        let d_out = mlp.d_out()?;
+        let weights_hash = hash_params(&mlp.params());
+        let pool = global_pool();
+        let shards = shard_plans(tp)?
+            .into_iter()
+            .map(|plan| mlp.pack_shard_in(pool, plan))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ShardedTower {
+            inner: ShardedInner::Mlp { mlp, shards, d_in, d_out },
+            model_id: "mlp".into(),
+            weights_hash,
+            tp,
+        })
+    }
+
+    /// Serve a transformer at tensor-parallel width `tp` (id
+    /// `"transformer"`). Sessions start disabled.
+    pub fn transformer(model: CharTransformer, tp: usize) -> Result<ShardedTower> {
+        if model.cfg.context == 0 || model.cfg.vocab == 0 || model.cfg.dim == 0 {
+            return Err(Error::config("sharded tower: zero context, vocab or dim"));
+        }
+        let weights_hash = hash_params(&model.params());
+        let pool = global_pool();
+        let shards = shard_plans(tp)?
+            .into_iter()
+            .map(|plan| model.pack_shard_in(pool, plan))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ShardedTower {
+            inner: ShardedInner::Transformer { model, shards, sessions: None },
+            model_id: "transformer".into(),
+            weights_hash,
+            tp,
+        })
+    }
+
+    /// Enable KV-cached incremental decode (transformer towers; a no-op
+    /// for MLP towers, which hold no inter-request state). Capacity 0
+    /// disables. The cache keeps the full unsharded head layout, so its
+    /// contents — like every other bit — are TP-invariant.
+    pub fn with_sessions(mut self, capacity: usize) -> ShardedTower {
+        if let ShardedInner::Transformer { sessions, .. } = &mut self.inner {
+            *sessions = if capacity == 0 { None } else { Some(SessionStore::new(capacity)) };
+        }
+        self
+    }
+
+    /// Tensor-parallel width — a pure layout/throughput knob, never part
+    /// of the model identity.
+    pub fn tp(&self) -> usize {
+        self.tp
+    }
+
+    /// Encode a token sequence as a request tensor (transformer towers).
+    pub fn encode_request(&self, ids: &[usize]) -> Result<Tensor> {
+        let t = Tensor::from_vec(&[ids.len()], ids.iter().map(|&i| i as f32).collect())?;
+        self.validate_request(&t)?;
+        Ok(t)
+    }
+
+    /// Full sharded recompute of one request's last-position logits —
+    /// the reference every session hit must bit-match.
+    fn transformer_last_row(
+        model: &CharTransformer,
+        shards: &[PackedTransformerShard],
+        pool: &WorkerPool,
+        ids: &[usize],
+    ) -> Result<Tensor> {
+        let vocab = model.cfg.vocab;
+        let logits = model.forward_logits_sharded_in(pool, ids, shards, None)?;
+        let last = ids.len() - 1;
+        Tensor::from_vec(&[vocab], logits.data()[last * vocab..(last + 1) * vocab].to_vec())
+    }
+
+    /// Sharded mirror of [`TransformerTower::session_logits`]: one
+    /// sharded decode step on a prefix hit, full sharded recompute with
+    /// prefill capture on any miss — bit-identical either way.
+    fn transformer_session_logits(
+        model: &CharTransformer,
+        shards: &[PackedTransformerShard],
+        store: &SessionStore,
+        pool: &WorkerPool,
+        ids: &[usize],
+        ticket: u64,
+    ) -> Result<Tensor> {
+        let tt = ids.len();
+        if tt >= 2 {
+            if let Some(sess) = store.lookup(&token_key(&ids[..tt - 1])) {
+                if sess.kv.steps() == tt - 1 {
+                    let mut kv = sess.kv; // lookup returned a clone
+                    let row =
+                        model.forward_logits_step_sharded_in(pool, ids[tt - 1], shards, &mut kv)?;
+                    let key = token_key(ids);
+                    store.insert(&key, ticket, &Session { kv, prefix_hash: key.clone() });
+                    return Tensor::from_vec(&[model.cfg.vocab], row.data().to_vec());
+                }
+            }
+        }
+        let mut kv = model.begin_kv();
+        let vocab = model.cfg.vocab;
+        let logits = model.forward_logits_sharded_in(pool, ids, shards, Some(&mut kv))?;
+        let key = token_key(ids);
+        store.insert(&key, ticket, &Session { kv, prefix_hash: key.clone() });
+        let last = tt - 1;
+        Tensor::from_vec(&[vocab], logits.data()[last * vocab..(last + 1) * vocab].to_vec())
+    }
+}
+
+impl ModelTower for ShardedTower {
+    fn model_id(&self) -> &str {
+        &self.model_id
+    }
+    fn d_in(&self) -> usize {
+        match &self.inner {
+            ShardedInner::Mlp { d_in, .. } => *d_in,
+            ShardedInner::Transformer { model, .. } => model.cfg.context,
+        }
+    }
+    fn d_out(&self) -> usize {
+        match &self.inner {
+            ShardedInner::Mlp { d_out, .. } => *d_out,
+            ShardedInner::Transformer { model, .. } => model.cfg.vocab,
+        }
+    }
+    fn weights_hash(&self) -> &str {
+        &self.weights_hash
+    }
+    fn forward_batch(&self, pool: &WorkerPool, batch: &[Tensor]) -> Result<Vec<Tensor>> {
+        match &self.inner {
+            ShardedInner::Mlp { mlp, shards, d_in, d_out } => {
+                let mut x = Tensor::zeros(&[batch.len(), *d_in]);
+                for (i, r) in batch.iter().enumerate() {
+                    check_request(r, *d_in)?;
+                    x.data_mut()[i * d_in..(i + 1) * d_in].copy_from_slice(r.data());
+                }
+                let y = mlp.forward_infer_sharded_in(pool, &x, shards)?;
+                (0..batch.len())
+                    .map(|i| {
+                        Tensor::from_vec(
+                            &[*d_out],
+                            y.data()[i * d_out..(i + 1) * d_out].to_vec(),
+                        )
+                    })
+                    .collect()
+            }
+            ShardedInner::Transformer { model, shards, .. } => batch
+                .iter()
+                .map(|r| {
+                    check_token_len(model.cfg.context, r)?;
+                    let ids = decode_token_ids(model.cfg.vocab, r)?;
+                    ShardedTower::transformer_last_row(model, shards, pool, &ids)
+                })
+                .collect(),
+        }
+    }
+    /// The session-aware path — bit-identical to [`Self::forward_batch`]
+    /// at every TP width, cheaper on prefix hits.
+    fn forward_batch_ticketed(
+        &self,
+        pool: &WorkerPool,
+        batch: &[Tensor],
+        tickets: &[u64],
+    ) -> Result<Vec<Tensor>> {
+        let ShardedInner::Transformer { model, shards, sessions: Some(store) } = &self.inner
+        else {
+            return self.forward_batch(pool, batch);
+        };
+        if tickets.len() != batch.len() {
+            return Err(Error::shape(format!(
+                "sharded tower: {} tickets for {} requests",
+                tickets.len(),
+                batch.len()
+            )));
+        }
+        batch
+            .iter()
+            .zip(tickets.iter())
+            .map(|(r, &ticket)| {
+                check_token_len(model.cfg.context, r)?;
+                let ids = decode_token_ids(model.cfg.vocab, r)?;
+                ShardedTower::transformer_session_logits(model, shards, store, pool, &ids, ticket)
+            })
+            .collect()
+    }
+    fn session_stats(&self) -> Option<SessionStats> {
+        match &self.inner {
+            ShardedInner::Transformer { sessions, .. } => sessions.as_ref().map(|s| s.stats()),
+            ShardedInner::Mlp { .. } => None,
+        }
+    }
+    fn validate_request(&self, request: &Tensor) -> Result<()> {
+        match &self.inner {
+            ShardedInner::Mlp { d_in, .. } => check_request(request, *d_in),
+            ShardedInner::Transformer { model, .. } => {
+                check_token_len(model.cfg.context, request)?;
+                decode_token_ids(model.cfg.vocab, request).map(|_| ())
+            }
+        }
     }
 }
 
@@ -703,6 +970,128 @@ mod tests {
         }
         // validation passes through too
         assert!(named.validate_request(&Tensor::zeros(&[7])).is_err());
+    }
+
+    fn tp4_transformer_cfg() -> TransformerConfig {
+        // heads = 4 so every width in {1, 2, 4} divides the head count
+        TransformerConfig { vocab: 10, dim: 8, heads: 4, layers: 2, context: 4, mlp_ratio: 2 }
+    }
+
+    #[test]
+    fn sharded_towers_preserve_identity_and_are_tp_invariant() {
+        let pool = WorkerPool::new(2);
+        // mlp: identity (id, hash, dims) matches the unsharded tower;
+        // response bits are pinned equal across every width
+        let unsharded = mlp_tower();
+        let batch: Vec<Tensor> =
+            (0..3).map(|i| crate::rng::uniform_tensor(&[12], -1.0, 1.0, 80 + i)).collect();
+        let mut want: Option<Vec<Tensor>> = None;
+        for tp in [1usize, 2, 4] {
+            let t = ShardedTower::mlp(Mlp::new(&[12, 16, 5], Act::Gelu, 3), tp).unwrap();
+            assert_eq!(t.model_id(), "mlp");
+            assert_eq!(t.weights_hash(), unsharded.weights_hash(), "hash must be TP-invariant");
+            assert_eq!((t.d_in(), t.d_out(), t.tp()), (12, 5, tp));
+            let outs = t.forward_batch(&pool, &batch).unwrap();
+            match &want {
+                None => want = Some(outs),
+                Some(w) => {
+                    for (a, b) in w.iter().zip(outs.iter()) {
+                        assert!(a.bit_eq(b), "mlp tp={tp}: sharded response bits changed");
+                    }
+                }
+            }
+        }
+        // transformer: same pins over a mixed-length prefix batch
+        let cfg = tp4_transformer_cfg();
+        let reference =
+            TransformerTower::new(CharTransformer::new(cfg, 5).unwrap()).unwrap();
+        let ids = [1usize, 7, 0, 9];
+        let reqs: Vec<Tensor> =
+            (1..=ids.len()).map(|tt| reference.encode_request(&ids[..tt]).unwrap()).collect();
+        let mut want: Option<Vec<Tensor>> = None;
+        for tp in [1usize, 2, 4] {
+            let t = ShardedTower::transformer(CharTransformer::new(cfg, 5).unwrap(), tp).unwrap();
+            assert_eq!(t.model_id(), "transformer");
+            assert_eq!(t.weights_hash(), reference.weights_hash(), "hash must be TP-invariant");
+            assert_eq!((t.d_in(), t.d_out(), t.tp()), (4, 10, tp));
+            let outs = t.forward_batch(&pool, &reqs).unwrap();
+            match &want {
+                None => want = Some(outs),
+                Some(w) => {
+                    for (a, b) in w.iter().zip(outs.iter()) {
+                        assert!(a.bit_eq(b), "transformer tp={tp}: sharded bits changed");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_sessions_change_cost_never_bits_even_across_widths() {
+        // the plain reference runs at tp=4, the session tower at tp=2:
+        // a hit's one-step decode at one width must bit-match a full
+        // recompute at another
+        let cfg = tp4_transformer_cfg();
+        let plain = ShardedTower::transformer(CharTransformer::new(cfg, 5).unwrap(), 4).unwrap();
+        let tower = ShardedTower::transformer(CharTransformer::new(cfg, 5).unwrap(), 2)
+            .unwrap()
+            .with_sessions(8);
+        assert!(plain.session_stats().is_none());
+        let pool = WorkerPool::new(1);
+        let ids = [3usize, 1, 7, 2];
+        let mut ticket = 0u64;
+        for _ in 0..2 {
+            for tt in 1..=ids.len() {
+                let req = tower.encode_request(&ids[..tt]).unwrap();
+                ticket += 1;
+                let got = &tower
+                    .forward_batch_ticketed(&pool, std::slice::from_ref(&req), &[ticket])
+                    .unwrap()[0];
+                let want = &plain.forward_batch(&pool, std::slice::from_ref(&req)).unwrap()[0];
+                assert!(
+                    got.bit_eq(want),
+                    "prefix {tt}: tp=2 session bits differ from tp=4 recompute"
+                );
+            }
+        }
+        let stats = tower.session_stats().unwrap();
+        assert_eq!(stats.hits, 6, "{stats:?}");
+        assert_eq!(stats.misses, 0, "{stats:?}");
+        // ticket mismatch is an error, not a panic
+        assert!(tower.forward_batch_ticketed(&pool, &[], &[1]).is_err());
+    }
+
+    #[test]
+    fn sharded_tower_construction_and_validation_errors() {
+        let cfg2 = TransformerConfig {
+            vocab: 10,
+            dim: 8,
+            heads: 2,
+            layers: 1,
+            context: 4,
+            mlp_ratio: 2,
+        };
+        // heads = 2 cannot split four ways; tp must be >= 1 and divide
+        // the logical segment count
+        assert!(ShardedTower::transformer(CharTransformer::new(cfg2, 1).unwrap(), 4).is_err());
+        assert!(ShardedTower::transformer(CharTransformer::new(cfg2, 1).unwrap(), 0).is_err());
+        assert!(ShardedTower::transformer(CharTransformer::new(cfg2, 1).unwrap(), 3).is_err());
+        // a row-split width the 4-segment plan cannot divide fails at
+        // every tp (the reduction graph is width-independent)
+        assert!(ShardedTower::mlp(Mlp::new(&[12, 10, 5], Act::Gelu, 3), 1).is_err());
+        assert!(ShardedTower::mlp(Mlp::new(&[12, 16, 5], Act::Gelu, 3), 0).is_err());
+        // sessions are a transformer concern: a silent no-op on MLPs
+        let t = ShardedTower::mlp(Mlp::new(&[12, 16, 5], Act::Gelu, 3), 2)
+            .unwrap()
+            .with_sessions(8);
+        assert!(t.session_stats().is_none());
+        // request validation mirrors the unsharded towers
+        let t = ShardedTower::transformer(CharTransformer::new(tp4_transformer_cfg(), 1).unwrap(), 2)
+            .unwrap();
+        assert!(t.validate_request(&Tensor::zeros(&[0])).is_err());
+        assert!(t.validate_request(&Tensor::zeros(&[5])).is_err());
+        assert!(t.validate_request(&Tensor::from_vec(&[2], vec![1.0, 10.0]).unwrap()).is_err());
+        assert!(t.encode_request(&[0, 9, 4]).is_ok());
     }
 
     #[test]

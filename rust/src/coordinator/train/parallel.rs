@@ -28,7 +28,7 @@ use crate::coordinator::trainer::{
     Trainer, TrainerConfig, TrainReport,
 };
 use crate::coordinator::train::TrainState;
-use crate::rnum::sum::pairwise_split;
+use crate::rnum::reduce::fixed_tree_reduce;
 use crate::tensor::{Tensor, WorkerPool};
 use crate::{Error, Result};
 use std::sync::{Arc, Mutex};
@@ -133,15 +133,16 @@ impl DataParallelTrainer {
             let r = trainer.grad_microbatch(seq, x_mb, labels_mb, mask_mb.as_ref(), params);
             *slots[i].lock().expect("micrograd slot") = Some(r);
         });
-        let mut parts: Vec<Option<MicroGrad>> = Vec::with_capacity(nmb);
+        let mut parts: Vec<MicroGrad> = Vec::with_capacity(nmb);
         for s in slots {
             let r = s
                 .into_inner()
                 .expect("micrograd slot")
                 .ok_or_else(|| Error::runtime("data-parallel step: a lane produced no result"))?;
-            parts.push(Some(r?));
+            parts.push(r?);
         }
-        let combined = reduce_tree(&mut parts, 0, nmb);
+        let combined = fixed_tree_reduce(parts, &mut combine)
+            .ok_or_else(|| Error::runtime("data-parallel step: zero microbatches"))?;
         let (grads, loss) = finalize_grads(combined, c.batch);
         st.opt.step(&mut st.params, &grads)?;
         st.step += 1;
@@ -160,7 +161,9 @@ impl DataParallelTrainer {
 }
 
 /// Combine two partial sums: left subtree + right subtree, elementwise,
-/// in parameter order — one fixed association per (lo, hi) range.
+/// in parameter order — one fixed association per tree node. The tree
+/// shape itself is `rnum::reduce::fixed_tree_reduce` over the microbatch
+/// index (a pure function of the microbatch count).
 fn combine(mut a: MicroGrad, b: MicroGrad) -> MicroGrad {
     for (ga, gb) in a.grads.iter_mut().zip(b.grads.iter()) {
         for (x, y) in ga.data_mut().iter_mut().zip(gb.data().iter()) {
@@ -169,21 +172,6 @@ fn combine(mut a: MicroGrad, b: MicroGrad) -> MicroGrad {
     }
     a.loss_sum += b.loss_sum;
     a
-}
-
-/// Fixed pairwise-tree reduction over microbatch indices `[lo, hi)` —
-/// the `rnum/sum.rs::sum_pairwise` association (left subtree = largest
-/// power of two below the range length), so the combine order is a pure
-/// function of the microbatch count.
-fn reduce_tree(parts: &mut [Option<MicroGrad>], lo: usize, hi: usize) -> MicroGrad {
-    debug_assert!(lo < hi);
-    if hi - lo == 1 {
-        return parts[lo].take().expect("partial already consumed");
-    }
-    let split = lo + pairwise_split(hi - lo);
-    let left = reduce_tree(parts, lo, split);
-    let right = reduce_tree(parts, split, hi);
-    combine(left, right)
 }
 
 #[cfg(test)]

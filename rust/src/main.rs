@@ -19,7 +19,10 @@
 //!                 --width/--heads/--layers/--context plus --sessions
 //!                 [--session-capacity S] for KV-cached incremental
 //!                 decode over a growing-prefix stream queue, mlp takes
-//!                 --hidden; --journal PATH appends the durable event
+//!                 --hidden; --tp N serves mlp/transformer through N
+//!                 tensor-parallel shards — a pure layout knob whose
+//!                 bits, hashes and journals are invariant across
+//!                 N ∈ {1,2,4}; --journal PATH appends the durable event
 //!                 journal, --recover rebuilds from an existing one
 //!                 before serving, --journal-degrade picks
 //!                 degrade-to-memory over fail-stop)
@@ -58,6 +61,23 @@ fn main() -> std::process::ExitCode {
     std::process::ExitCode::from(code as u8)
 }
 
+/// Strict `--tp N` parse: absent → `None` (the unsharded towers).
+/// Present, it must be an integer ≥ 1 — the lenient `Args` helpers
+/// would silently substitute a default for garbage here, and a silently
+/// changed tensor-parallel width is exactly the kind of drift this flag
+/// exists to rule out. Whether N actually divides the shard plan is the
+/// tower constructor's job (a construction error, not a usage error).
+fn parse_tp(args: &Args) -> std::result::Result<Option<usize>, String> {
+    if !args.has("tp") {
+        return Ok(None);
+    }
+    let raw = args.get_str("tp", "");
+    match raw.parse::<usize>() {
+        Ok(n) if n >= 1 => Ok(Some(n)),
+        _ => Err(format!("--tp {raw}: want an integer >= 1")),
+    }
+}
+
 fn trainer_cfg(args: &Args) -> TrainerConfig {
     TrainerConfig {
         side: args.get_usize("side", 8),
@@ -77,6 +97,19 @@ fn cmd_train(args: &Args) -> i32 {
         DataParallelTrainer, ModelRegistry, OptimizerCfg, ServeConfig,
     };
     use repdl::tensor::global_pool_handle;
+    if args.has("tp") {
+        // promotion is TP-agnostic by design: a checkpoint promotes to
+        // the registry's unsharded tower, and a serve deployment picks
+        // its own width later (`repdl serve --tp N`). The weights hash
+        // and journal keys are identical at every width, so baking a
+        // width into the training artifact would add a knob that cannot
+        // change bits but could desync deployments.
+        eprintln!(
+            "train: --tp is a serve-time flag (promotion is TP-agnostic); \
+             use `repdl serve --tp N`"
+        );
+        return 2;
+    }
     let cfg = trainer_cfg(args);
     let mode_str = args.get_str("mode", "repro");
     let ckpt_dir = args.get_opt_str("checkpoint").map(std::path::PathBuf::from);
@@ -331,7 +364,7 @@ fn cmd_transformer(args: &Args) -> i32 {
 fn cmd_serve(args: &Args) -> i32 {
     use repdl::coordinator::{
         read_journal, Journal, JournalPolicy, MlpTower, ModelTower, ServeConfig,
-        ServeScheduler, TransformerTower,
+        ServeScheduler, ShardedTower, TransformerTower,
     };
     use repdl::nn::{Act, Mlp};
     use repdl::tensor::{global_pool_handle, WorkerPool};
@@ -374,12 +407,29 @@ fn cmd_serve(args: &Args) -> i32 {
         .map(WorkerPool::shared)
         .unwrap_or_else(global_pool_handle);
     let lanes = pool.lanes();
+    // tensor-parallel width: absent keeps the unsharded towers; present
+    // serves mlp/transformer through `tp` shard sets (bits invariant
+    // across widths — DESIGN.md §13)
+    let tp = match parse_tp(args) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("serve: {e}");
+            return 2;
+        }
+    };
     // pick the model tower (ISSUE 5): the linear reference server, the
     // off-tape MLP, or the off-tape transformer — all behind ModelTower
     let seed = args.get_u64("seed", 5);
     let mut e7_ok = true;
     let tower: Arc<dyn ModelTower> = match model.as_str() {
         "linear" => {
+            if tp.is_some() {
+                eprintln!(
+                    "serve: --tp applies to --model mlp|transformer (the linear \
+                     reference server has no shard plan)"
+                );
+                return 2;
+            }
             let w = repdl::rng::uniform_tensor(&[d, 16], -0.3, 0.3, seed);
             let srv = match DeterministicServer::new(w, 16) {
                 Ok(s) => Arc::new(s),
@@ -410,9 +460,17 @@ fn cmd_serve(args: &Args) -> i32 {
         "mlp" => {
             let hidden = args.get_usize("hidden", 64);
             // user-supplied hyper-parameters: error + exit, never a
-            // panic backtrace (same policy as the linear arm)
-            match MlpTower::new(Mlp::new(&[d, hidden, 16], Act::Gelu, seed)) {
-                Ok(t) => Arc::new(t),
+            // panic backtrace (same policy as the linear arm) — an
+            // indivisible width under --tp lands here too
+            let mlp = Mlp::new(&[d, hidden, 16], Act::Gelu, seed);
+            let built = match tp {
+                Some(tp) => {
+                    ShardedTower::mlp(mlp, tp).map(|t| Arc::new(t) as Arc<dyn ModelTower>)
+                }
+                None => MlpTower::new(mlp).map(|t| Arc::new(t) as Arc<dyn ModelTower>),
+            };
+            match built {
+                Ok(t) => t,
                 Err(e) => {
                     eprintln!("serve: {e}");
                     return 1;
@@ -428,8 +486,20 @@ fn cmd_serve(args: &Args) -> i32 {
                 context: args.get_usize("context", 16),
                 mlp_ratio: 2,
             };
-            match CharTransformer::new(cfg, seed).and_then(TransformerTower::new) {
-                Ok(t) => Arc::new(t.with_sessions(session_capacity)),
+            // --tp composes with --sessions (the sharded KV cache keeps
+            // the full unsharded head layout) and with --journal: both
+            // towers share model_id and weights_hash, but an indivisible
+            // head count under --tp is an error here, not a panic
+            let built = match tp {
+                Some(tp) => CharTransformer::new(cfg, seed)
+                    .and_then(|m| ShardedTower::transformer(m, tp))
+                    .map(|t| Arc::new(t.with_sessions(session_capacity)) as Arc<dyn ModelTower>),
+                None => CharTransformer::new(cfg, seed)
+                    .and_then(TransformerTower::new)
+                    .map(|t| Arc::new(t.with_sessions(session_capacity)) as Arc<dyn ModelTower>),
+            };
+            match built {
+                Ok(t) => t,
                 Err(e) => {
                     eprintln!("serve: {e}");
                     return 1;
@@ -448,6 +518,9 @@ fn cmd_serve(args: &Args) -> i32 {
         tower.d_out(),
         &tower.weights_hash()[..16]
     );
+    if let Some(tp) = tp {
+        println!("tensor_parallel tp={tp}");
+    }
     // request queue in the tower's input domain
     let queue: Vec<Tensor> = if tower.model_id() == "transformer" && session_capacity > 0 {
         // decode-stream queue: request i is a growing prefix of stream

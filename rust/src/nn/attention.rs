@@ -8,6 +8,7 @@
 //! same skip rule as conv padding). Backward uses the standard closed
 //! forms, every reduction sequential.
 
+use super::linear::{reduce_row_partials, PackedLinearShard, ShardPlan, TP_LOGICAL_PARTS};
 use super::Module;
 use crate::autograd::{Tape, Var};
 use crate::nn::{Linear, PackedLinear};
@@ -500,6 +501,224 @@ impl MultiheadAttention {
             None => self.out_proj.forward_infer_in(pool, &y),
         }
     }
+
+    /// Freeze one tensor-parallel shard of this module: the QKV
+    /// projection keeps only the rows feeding heads `[h_lo, h_hi)` — a
+    /// gathered-row [`PackedLinear`]; layout-only, since each kept output
+    /// element's full-k sequential dot is untouched — and the output
+    /// projection is row-split over the head-concat dimension
+    /// ([`Linear::pack_row_shard_in`]: this shard's head slice is exactly
+    /// its owned logical segments). Requires `num_heads % tp == 0` and
+    /// `dim % TP_LOGICAL_PARTS == 0` (errors, never panics).
+    pub fn pack_shard_in(&self, pool: &WorkerPool, plan: ShardPlan) -> Result<PackedAttentionShard> {
+        let dim = self.in_proj.weight.dims()[1];
+        let h = self.num_heads;
+        if h % plan.tp != 0 {
+            return Err(Error::shape(format!(
+                "MultiheadAttention shard: heads {h} not divisible by tp {}",
+                plan.tp
+            )));
+        }
+        let dh = dim / h;
+        let hl = h / plan.tp;
+        let (h_lo, h_hi) = (plan.shard * hl, (plan.shard + 1) * hl);
+        let dl = hl * dh;
+        // gather the q/k/v rows of this shard's heads into a (3·Dl, D)
+        // projection — block order [q heads | k heads | v heads], the
+        // same order the unsharded (3D, D) layout uses
+        let wd = self.in_proj.weight.data();
+        let bd = self.in_proj.bias.data();
+        let mut w = vec![0.0f32; 3 * dl * dim];
+        let mut b = vec![0.0f32; 3 * dl];
+        for c in 0..3 {
+            let src = c * dim + h_lo * dh;
+            w[c * dl * dim..(c + 1) * dl * dim].copy_from_slice(&wd[src * dim..(src + dl) * dim]);
+            b[c * dl..(c + 1) * dl].copy_from_slice(&bd[src..src + dl]);
+        }
+        let in_proj = Linear {
+            weight: Tensor::from_vec(&[3 * dl, dim], w)?,
+            bias: Tensor::from_vec(&[3 * dl], b)?,
+        }
+        .pack_in(pool)?;
+        Ok(PackedAttentionShard {
+            in_proj,
+            out_proj: self.out_proj.pack_row_shard_in(pool, plan)?,
+            h_lo,
+            h_hi,
+        })
+    }
+
+    /// Validate that `shards` is a complete, in-order head cover for this
+    /// module; returns the per-shard head count.
+    fn check_shards(&self, shards: &[&PackedAttentionShard], dim: usize) -> Result<usize> {
+        let tp = shards.len();
+        if tp == 0 || self.num_heads % tp != 0 {
+            return Err(Error::shape(format!(
+                "MultiheadAttention: {tp} shards cannot cover {} heads",
+                self.num_heads
+            )));
+        }
+        let hl = self.num_heads / tp;
+        for (s, sh) in shards.iter().enumerate() {
+            if sh.h_lo != s * hl || sh.h_hi != (s + 1) * hl || sh.in_proj.d_in() != dim {
+                return Err(Error::shape(
+                    "MultiheadAttention: shard set does not match this module's head plan",
+                ));
+            }
+        }
+        Ok(hl)
+    }
+
+    /// Tensor-parallel forward on a (T, D) sequence: each shard projects
+    /// and attends only its own heads (layout-only — every head keeps
+    /// its sequential score/softmax/mix graph, and heads concatenate in
+    /// fixed head order), then emits its out-projection partials over
+    /// its local head slice; the `TP_LOGICAL_PARTS` partials combine
+    /// across shards in logical segment order through the fixed tree
+    /// ([`reduce_row_partials`]). Bits are identical at every shard
+    /// count dividing [`TP_LOGICAL_PARTS`] (asserted in tests and
+    /// `tests/tp_invariance.rs`). `kv_out` capture fills the same
+    /// full-layout cache the unsharded path fills, assembled across
+    /// shards in fixed head order — so caches are interchangeable
+    /// between TP widths.
+    pub fn forward_seq_sharded_in(
+        &self,
+        pool: &WorkerPool,
+        x: &Tensor,
+        shards: &[&PackedAttentionShard],
+        kv_out: Option<&mut KvState>,
+    ) -> Result<Tensor> {
+        let d = x.dims();
+        if d.len() != 2 {
+            return Err(Error::shape("MultiheadAttention: want (T, D)"));
+        }
+        let (tt, dim) = (d[0], d[1]);
+        let h = self.num_heads;
+        let dh = dim / h;
+        let hl = self.check_shards(shards, dim)?;
+        let dl = hl * dh;
+        if let Some(kvs) = &kv_out {
+            if kvs.steps() != 0 || kvs.heads() != h || kvs.head_dim() != dh {
+                return Err(Error::shape(
+                    "MultiheadAttention: kv_out must be an empty cache of matching shape",
+                ));
+            }
+        }
+        let capture = kv_out.is_some();
+        let mut full_k = vec![0.0f32; if capture { tt * dim } else { 0 }];
+        let mut full_v = vec![0.0f32; if capture { tt * dim } else { 0 }];
+        let mut parts: Vec<Tensor> = Vec::with_capacity(TP_LOGICAL_PARTS);
+        for sh in shards {
+            let qkv = sh.in_proj.forward_infer_in(pool, x)?; // (T, 3·Dl)
+            // layout-only local head split — the unsharded index map
+            // restricted to this shard's heads
+            let mut q = Tensor::zeros(&[hl, tt, dh]);
+            let mut k = Tensor::zeros(&[hl, tt, dh]);
+            let mut v = Tensor::zeros(&[hl, tt, dh]);
+            for (c, dst) in [&mut q, &mut k, &mut v].into_iter().enumerate() {
+                for hh in 0..hl {
+                    for t in 0..tt {
+                        let src = t * 3 * dl + c * dl + hh * dh;
+                        dst.data_mut()[(hh * tt + t) * dh..(hh * tt + t + 1) * dh]
+                            .copy_from_slice(&qkv.data()[src..src + dh]);
+                    }
+                }
+            }
+            if capture {
+                for t in 0..tt {
+                    let kd = &qkv.data()[t * 3 * dl + dl..t * 3 * dl + 2 * dl];
+                    let vd = &qkv.data()[t * 3 * dl + 2 * dl..t * 3 * dl + 3 * dl];
+                    let at = t * dim + sh.h_lo * dh;
+                    full_k[at..at + dl].copy_from_slice(kd);
+                    full_v[at..at + dl].copy_from_slice(vd);
+                }
+            }
+            let (_, o) = attention_forward(&q, &k, &v, self.causal, false)?; // (hl,T,Dh)
+            // this shard's local head-concat slice (T, Dl) — columns
+            // [h_lo·Dh, h_hi·Dh) of the full merge, in fixed head order
+            let mut y = Tensor::zeros(&[tt, dl]);
+            for hh in 0..hl {
+                for t in 0..tt {
+                    y.data_mut()[t * dl + hh * dh..t * dl + (hh + 1) * dh]
+                        .copy_from_slice(&o.data()[(hh * tt + t) * dh..(hh * tt + t + 1) * dh]);
+                }
+            }
+            parts.extend(sh.out_proj.forward_row_partials_in(pool, &y, true)?);
+        }
+        if let Some(kvs) = kv_out {
+            for t in 0..tt {
+                kvs.push_step(&full_k[t * dim..(t + 1) * dim], &full_v[t * dim..(t + 1) * dim])?;
+            }
+        }
+        reduce_row_partials(&parts, &self.out_proj.bias)
+    }
+
+    /// Tensor-parallel incremental decode: one new (1, D) position
+    /// against the shared full-layout KV cache. Pass 1 projects every
+    /// shard's heads and appends the assembled K/V step row **once**;
+    /// pass 2 scores each shard's heads with the identical per-head
+    /// [`attention_row`] body the unsharded step runs, then combines the
+    /// out-projection partials through the fixed tree. Bit-identical to
+    /// the last row of [`Self::forward_seq_sharded_in`] over the full
+    /// prefix, and TP-invariant (asserted in tests).
+    pub fn forward_step_sharded_in(
+        &self,
+        pool: &WorkerPool,
+        x: &Tensor,
+        shards: &[&PackedAttentionShard],
+        kv: &mut KvState,
+    ) -> Result<Tensor> {
+        if !self.causal {
+            return Err(Error::shape("MultiheadAttention step: causal attention only"));
+        }
+        let d = x.dims();
+        if d.len() != 2 || d[0] != 1 {
+            return Err(Error::shape("MultiheadAttention step: want (1, D)"));
+        }
+        let dim = d[1];
+        let h = self.num_heads;
+        let dh = dim / h;
+        if kv.heads() != h || kv.head_dim() != dh {
+            return Err(Error::shape("MultiheadAttention step: KV cache shape mismatch"));
+        }
+        let hl = self.check_shards(shards, dim)?;
+        let dl = hl * dh;
+        // pass 1: project, assemble the step's K/V rows in fixed head
+        // order, append once
+        let mut qs = Vec::with_capacity(shards.len());
+        let mut k_full = vec![0.0f32; dim];
+        let mut v_full = vec![0.0f32; dim];
+        for sh in shards {
+            let qkv = sh.in_proj.forward_infer_in(pool, x)?; // (1, 3·Dl)
+            let at = sh.h_lo * dh;
+            k_full[at..at + dl].copy_from_slice(&qkv.data()[dl..2 * dl]);
+            v_full[at..at + dl].copy_from_slice(&qkv.data()[2 * dl..3 * dl]);
+            qs.push(qkv);
+        }
+        kv.push_step(&k_full, &v_full)?;
+        // pass 2: per-head attention over the shared cache + partials
+        let tt = kv.steps();
+        let scale = rrsqrt(dh as f32);
+        let mut parts: Vec<Tensor> = Vec::with_capacity(TP_LOGICAL_PARTS);
+        let mut row = vec![0.0f32; tt];
+        for (s, sh) in shards.iter().enumerate() {
+            let mut y = Tensor::zeros(&[1, dl]);
+            for hh in 0..hl {
+                let g = sh.h_lo + hh; // global head index
+                attention_row(
+                    &qs[s].data()[hh * dh..(hh + 1) * dh],
+                    &kv.k[g * dh..],
+                    &kv.v[g * dh..],
+                    h * dh,
+                    scale,
+                    &mut row,
+                    &mut y.data_mut()[hh * dh..(hh + 1) * dh],
+                );
+            }
+            parts.extend(sh.out_proj.forward_row_partials_in(pool, &y, true)?);
+        }
+        reduce_row_partials(&parts, &self.out_proj.bias)
+    }
 }
 
 /// A [`MultiheadAttention`] with both projections frozen into
@@ -510,6 +729,20 @@ pub struct PackedAttention {
     pub in_proj: PackedLinear,
     /// Packed output projection.
     pub out_proj: PackedLinear,
+}
+
+/// One tensor-parallel shard of a [`MultiheadAttention`]: the gathered
+/// QKV rows of heads `[h_lo, h_hi)` plus the row-split output
+/// projection whose owned logical segments are exactly this shard's
+/// slice of the head-concat dimension. Built by
+/// [`MultiheadAttention::pack_shard_in`]; driven by
+/// [`MultiheadAttention::forward_seq_sharded_in`] /
+/// [`MultiheadAttention::forward_step_sharded_in`].
+pub struct PackedAttentionShard {
+    in_proj: PackedLinear,
+    out_proj: PackedLinearShard,
+    h_lo: usize,
+    h_hi: usize,
 }
 
 impl Module for MultiheadAttention {
@@ -723,6 +956,110 @@ mod tests {
         // empty cache refuses to score
         let empty = KvState::new(2, 4);
         assert!(attention_step_forward(&Tensor::zeros(&[2, 4]), &empty).is_err());
+    }
+
+    #[test]
+    fn sharded_seq_is_tp_invariant_and_kv_capture_is_layout_only() {
+        use crate::tensor::WorkerPool;
+        let mha = MultiheadAttention::new(8, 4, true, 101).unwrap();
+        let x = lcg(&[5, 8], 9);
+        let pool = WorkerPool::new(2);
+        // the unsharded capture cache is the layout reference: head
+        // split and QKV row gathering are layout-only, so every TP width
+        // must fill the identical cache bits
+        let mut kv_ref = KvState::new(4, 2);
+        let _ = mha.forward_seq_packed_in(&pool, &x, None, Some(&mut kv_ref)).unwrap();
+        let mut want: Option<Tensor> = None;
+        for tp in [1usize, 2, 4] {
+            let owned: Vec<_> = (0..tp)
+                .map(|s| mha.pack_shard_in(&pool, ShardPlan::new(tp, s).unwrap()).unwrap())
+                .collect();
+            let shards: Vec<&PackedAttentionShard> = owned.iter().collect();
+            let mut kv = KvState::new(4, 2);
+            let y = mha.forward_seq_sharded_in(&pool, &x, &shards, Some(&mut kv)).unwrap();
+            assert_eq!(
+                kv.k.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                kv_ref.k.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "tp={tp}: sharded K capture diverged from the unsharded cache"
+            );
+            assert_eq!(
+                kv.v.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                kv_ref.v.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "tp={tp}: sharded V capture diverged from the unsharded cache"
+            );
+            match &want {
+                None => want = Some(y),
+                Some(w) => assert!(y.bit_eq(w), "tp={tp}: sharded attention changed bits"),
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_step_matches_sharded_seq_last_row_across_tp() {
+        use crate::tensor::WorkerPool;
+        let mha = MultiheadAttention::new(8, 4, true, 113).unwrap();
+        let x = lcg(&[4, 8], 27);
+        let pool = WorkerPool::new(1);
+        let mut last_bits: Option<Vec<Vec<u32>>> = None;
+        for tp in [1usize, 2, 4] {
+            let owned: Vec<_> = (0..tp)
+                .map(|s| mha.pack_shard_in(&pool, ShardPlan::new(tp, s).unwrap()).unwrap())
+                .collect();
+            let shards: Vec<&PackedAttentionShard> = owned.iter().collect();
+            let mut kv = KvState::new(4, 2);
+            let mut steps = Vec::new();
+            for t in 0..4 {
+                let row =
+                    Tensor::from_vec(&[1, 8], x.data()[t * 8..(t + 1) * 8].to_vec()).unwrap();
+                let step = mha.forward_step_sharded_in(&pool, &row, &shards, &mut kv).unwrap();
+                assert_eq!(kv.steps(), t + 1);
+                // the sharded step must equal the sharded full forward's
+                // last row over the same prefix
+                let prefix =
+                    Tensor::from_vec(&[t + 1, 8], x.data()[..(t + 1) * 8].to_vec()).unwrap();
+                let full = mha.forward_seq_sharded_in(&pool, &prefix, &shards, None).unwrap();
+                let last = &full.data()[t * 8..(t + 1) * 8];
+                assert_eq!(
+                    step.data().iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    last.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    "tp={tp} t={t}: sharded step diverged from sharded seq"
+                );
+                steps.push(step.data().iter().map(|v| v.to_bits()).collect::<Vec<u32>>());
+            }
+            match &last_bits {
+                None => last_bits = Some(steps),
+                Some(w) => assert_eq!(w, &steps, "tp={tp}: sharded step bits not TP-invariant"),
+            }
+        }
+    }
+
+    #[test]
+    fn shard_construction_and_mismatches_are_errors() {
+        use crate::tensor::WorkerPool;
+        let pool = WorkerPool::new(1);
+        // heads not divisible by tp
+        let mha2 = MultiheadAttention::new(8, 2, true, 1).unwrap();
+        assert!(mha2.pack_shard_in(&pool, ShardPlan::new(4, 0).unwrap()).is_err());
+        // dim not divisible by the logical partial count
+        let mha6 = MultiheadAttention::new(6, 2, true, 1).unwrap();
+        assert!(mha6.pack_shard_in(&pool, ShardPlan::new(2, 0).unwrap()).is_err());
+        // incomplete / out-of-order shard sets are rejected at forward
+        let mha = MultiheadAttention::new(8, 4, true, 1).unwrap();
+        let s0 = mha.pack_shard_in(&pool, ShardPlan::new(2, 0).unwrap()).unwrap();
+        let s1 = mha.pack_shard_in(&pool, ShardPlan::new(2, 1).unwrap()).unwrap();
+        let x = lcg(&[3, 8], 2);
+        assert!(mha.forward_seq_sharded_in(&pool, &x, &[&s1, &s0], None).is_err(), "order");
+        assert!(mha.forward_seq_sharded_in(&pool, &x, &[&s0], None).is_err(), "incomplete");
+        assert!(mha.forward_seq_sharded_in(&pool, &x, &[], None).is_err(), "empty");
+        // non-causal modules refuse the sharded step too
+        let bidir = MultiheadAttention::new(8, 4, false, 1).unwrap();
+        let owned: Vec<_> = (0..2)
+            .map(|s| bidir.pack_shard_in(&pool, ShardPlan::new(2, s).unwrap()).unwrap())
+            .collect();
+        let shards: Vec<&PackedAttentionShard> = owned.iter().collect();
+        let mut kv = KvState::new(4, 2);
+        let row = Tensor::zeros(&[1, 8]);
+        assert!(bidir.forward_step_sharded_in(&pool, &row, &shards, &mut kv).is_err());
     }
 
     #[test]

@@ -6,10 +6,24 @@
 use super::Module;
 use crate::autograd::{Tape, Var};
 use crate::rng::{derive_seed, kaiming_uniform, uniform_tensor};
-use crate::rnum::rrsqrt;
+use crate::rnum::{fixed_tree_reduce_into, rrsqrt};
 use crate::tensor::microkernel::{gemm_packed_into, pack_b_panels, packed_b_len};
 use crate::tensor::{matmul_in, Tensor, WorkerPool};
 use crate::{Error, Result};
+
+/// How many **logical** partial sums a row-split layer decomposes into —
+/// always, at every tensor-parallel width. A row-split GEMM's k dimension
+/// divides into this many equal contiguous segments; each physical shard
+/// owns `TP_LOGICAL_PARTS / tp` of them and emits **one partial per
+/// logical segment** (never one per shard), and the partials combine in
+/// the fixed pairwise tree over the logical segment index
+/// ([`crate::rnum::reduce`]). The reduction graph is therefore a pure
+/// function of the layer shape — TP width only moves segments between
+/// workers, so TP ∈ {1, 2, 4} produce identical bits (DESIGN.md §13).
+/// This is the tensor-parallel analogue of `DataParallelTrainer`'s fixed
+/// microbatch count: physical lanes vary, the logical decomposition does
+/// not.
+pub const TP_LOGICAL_PARTS: usize = 4;
 
 /// Fully-connected layer.
 pub struct Linear {
@@ -111,6 +125,301 @@ impl PackedLinear {
     }
 }
 
+/// One shard's coordinates in a tensor-parallel plan: `tp` shards,
+/// this one at index `shard`. Validated at construction — `tp` must be
+/// ≥ 1, must divide [`TP_LOGICAL_PARTS`] (so every shard owns the same
+/// whole number of contiguous logical segments), and `shard < tp`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardPlan {
+    /// Tensor-parallel width (total shard count).
+    pub tp: usize,
+    /// This shard's index, in `0..tp`.
+    pub shard: usize,
+}
+
+impl ShardPlan {
+    /// Validated plan (serving-facing: errors, never panics).
+    pub fn new(tp: usize, shard: usize) -> Result<Self> {
+        if tp == 0 {
+            return Err(Error::config("shard plan: tp must be ≥ 1"));
+        }
+        if TP_LOGICAL_PARTS % tp != 0 {
+            return Err(Error::config(format!(
+                "shard plan: tp {tp} must divide the logical partial count {TP_LOGICAL_PARTS}"
+            )));
+        }
+        if shard >= tp {
+            return Err(Error::config(format!("shard plan: shard {shard} ≥ tp {tp}")));
+        }
+        Ok(ShardPlan { tp, shard })
+    }
+
+    /// Logical k-segments this shard owns: `(first, count)` with the
+    /// shard covering segments `first .. first + count` — contiguous, in
+    /// logical order, the same blocks at every tp.
+    pub fn owned_segments(&self) -> (usize, usize) {
+        let per = TP_LOGICAL_PARTS / self.tp;
+        (self.shard * per, per)
+    }
+}
+
+/// Which way a [`PackedLinearShard`] splits the weight.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum SplitKind {
+    /// Output-column split: this shard computes a contiguous slice of
+    /// output features, full-k GEMM, local bias slice. Layout-only —
+    /// concatenating the shard outputs in shard order reproduces the
+    /// unsharded bits exactly (each output element's sequential-k
+    /// mul/add graph is untouched).
+    Col,
+    /// Input-row (k) split: this shard computes one full-width partial
+    /// product per owned logical segment; the partials combine through
+    /// the fixed pairwise tree ([`reduce_row_partials`]), bias added
+    /// exactly once after the tree.
+    Row,
+}
+
+/// One tensor-parallel shard of a [`Linear`], frozen for serving
+/// (microkernel panels, like [`PackedLinear`]). Built by
+/// [`Linear::pack_col_shard_in`] / [`Linear::pack_row_shard_in`].
+pub struct PackedLinearShard {
+    kind: SplitKind,
+    /// Row split: one packed panel set per owned logical segment, in
+    /// logical order. Column split: one full-k panel set.
+    segs: Vec<Vec<f32>>,
+    /// k per panel set: full `d_in` (col) or `d_in / TP_LOGICAL_PARTS`
+    /// (row).
+    seg_k: usize,
+    /// Full input width of the unsharded layer.
+    d_in: usize,
+    /// Output width of one GEMM: the shard's column-slice width (col) or
+    /// the full output width (row — every partial spans all columns).
+    d_out: usize,
+    /// Col: this shard's bias slice (added locally, layout-only). Row:
+    /// `None` — the bias belongs to the post-reduction graph, and adding
+    /// a zero-filled slice instead would not be bit-neutral
+    /// ((−0.0) + 0.0 = +0.0).
+    bias: Option<Tensor>,
+    /// First owned logical segment (row split; 0 for col).
+    seg0: usize,
+}
+
+impl Linear {
+    /// Freeze this shard's **output-column slice** into microkernel
+    /// panels: shard `s` of `tp` owns output features
+    /// `[s·n/tp, (s+1)·n/tp)` (weight rows in PyTorch layout) and the
+    /// matching bias slice. Requires `out_features % tp == 0` (error,
+    /// not a panic — serving-facing).
+    pub fn pack_col_shard_in(&self, pool: &WorkerPool, plan: ShardPlan) -> Result<PackedLinearShard> {
+        let (n, k) = (self.weight.dims()[0], self.weight.dims()[1]);
+        if n % plan.tp != 0 {
+            return Err(Error::shape(format!(
+                "Linear col shard: out_features {n} not divisible by tp {}",
+                plan.tp
+            )));
+        }
+        let nl = n / plan.tp;
+        let r0 = plan.shard * nl;
+        // local Wᵀ (k, nl) from weight rows [r0, r0+nl) — layout only
+        let wd = self.weight.data();
+        let mut wt = vec![0.0f32; k * nl];
+        for kk in 0..k {
+            for c in 0..nl {
+                wt[kk * nl + c] = wd[(r0 + c) * k + kk];
+            }
+        }
+        let mut packed = vec![0.0f32; packed_b_len(k, nl)];
+        pack_b_panels(pool, &wt, k, nl, &mut packed);
+        let bias = Tensor::from_vec(&[nl], self.bias.data()[r0..r0 + nl].to_vec())?;
+        Ok(PackedLinearShard {
+            kind: SplitKind::Col,
+            segs: vec![packed],
+            seg_k: k,
+            d_in: k,
+            d_out: nl,
+            bias: Some(bias),
+            seg0: 0,
+        })
+    }
+
+    /// Freeze this shard's **input-row (k) segments** into microkernel
+    /// panels: k divides into [`TP_LOGICAL_PARTS`] equal contiguous
+    /// logical segments, shard `s` owns segments
+    /// `[s·parts/tp, (s+1)·parts/tp)` and packs one full-width panel set
+    /// per segment. Requires `in_features % TP_LOGICAL_PARTS == 0`.
+    pub fn pack_row_shard_in(&self, pool: &WorkerPool, plan: ShardPlan) -> Result<PackedLinearShard> {
+        let (n, k) = (self.weight.dims()[0], self.weight.dims()[1]);
+        if k % TP_LOGICAL_PARTS != 0 {
+            return Err(Error::shape(format!(
+                "Linear row shard: in_features {k} not divisible by the logical partial count {TP_LOGICAL_PARTS}"
+            )));
+        }
+        let sk = k / TP_LOGICAL_PARTS;
+        let (seg0, nsegs) = plan.owned_segments();
+        let wd = self.weight.data();
+        let mut segs = Vec::with_capacity(nsegs);
+        let mut wt = vec![0.0f32; sk * n];
+        for g in seg0..seg0 + nsegs {
+            // segment g's Wᵀ block (sk, n): input columns [g·sk, (g+1)·sk)
+            for kk in 0..sk {
+                for c in 0..n {
+                    wt[kk * n + c] = wd[c * k + g * sk + kk];
+                }
+            }
+            let mut packed = vec![0.0f32; packed_b_len(sk, n)];
+            pack_b_panels(pool, &wt, sk, n, &mut packed);
+            segs.push(packed);
+        }
+        Ok(PackedLinearShard {
+            kind: SplitKind::Row,
+            segs,
+            seg_k: sk,
+            d_in: k,
+            d_out: n,
+            bias: None,
+            seg0,
+        })
+    }
+}
+
+impl PackedLinearShard {
+    /// Full input width of the unsharded layer.
+    pub fn d_in(&self) -> usize {
+        self.d_in
+    }
+
+    /// Output width of one GEMM on this shard (column-slice width for a
+    /// col split, full output width for a row split).
+    pub fn d_out(&self) -> usize {
+        self.d_out
+    }
+
+    /// First owned logical segment index (row split; 0 for col).
+    pub fn seg0(&self) -> usize {
+        self.seg0
+    }
+
+    /// Number of owned logical segments (row split; 1 for col).
+    pub fn num_segs(&self) -> usize {
+        self.segs.len()
+    }
+
+    /// Column-split forward: `x · (Wᵀ slice) + b slice` on (m, d_in)
+    /// replicated input, returning this shard's (m, d_out) output-column
+    /// slice. Concatenated over shards in shard order this is the
+    /// unsharded output bit for bit (layout-only; asserted in tests).
+    pub fn forward_col_in(&self, pool: &WorkerPool, x: &Tensor) -> Result<Tensor> {
+        if self.kind != SplitKind::Col {
+            return Err(Error::shape("PackedLinearShard: row split has no column forward"));
+        }
+        let d = x.dims();
+        if d.len() != 2 || d[1] != self.d_in {
+            return Err(Error::shape(format!(
+                "PackedLinearShard col: want (m, {}), got {d:?}",
+                self.d_in
+            )));
+        }
+        let (m, k, n) = (d[0], self.d_in, self.d_out);
+        let bias = self.bias.as_ref().expect("col shard carries its bias slice");
+        let b = bias.data();
+        Ok(Tensor::filled_by(&[m, n], |buf| {
+            gemm_packed_into(pool, x.data(), m, k, &self.segs[0], n, None, false, buf);
+            // per-column bias — same graph as PackedLinear (one `+` per
+            // element after the reduction)
+            for row in buf.chunks_exact_mut(n) {
+                for (v, bb) in row.iter_mut().zip(b.iter()) {
+                    *v = *v + *bb;
+                }
+            }
+        }))
+    }
+
+    /// Row-split forward: one bias-free (m, d_out) partial product per
+    /// owned logical segment, in logical order. With `x_local` the input
+    /// is this shard's own contiguous k-slice (width
+    /// `num_segs · seg_k`, e.g. the upstream column shard's local
+    /// output); otherwise it is the full replicated (m, d_in) activation
+    /// and this shard reads its own segment columns. Either way each
+    /// logical segment's GEMM consumes the identical input bits, so the
+    /// partials — and the fixed-tree combination
+    /// ([`reduce_row_partials`]) — are TP-invariant.
+    pub fn forward_row_partials_in(
+        &self,
+        pool: &WorkerPool,
+        x: &Tensor,
+        x_local: bool,
+    ) -> Result<Vec<Tensor>> {
+        if self.kind != SplitKind::Row {
+            return Err(Error::shape("PackedLinearShard: column split has no row partials"));
+        }
+        let d = x.dims();
+        let want_w = if x_local { self.segs.len() * self.seg_k } else { self.d_in };
+        if d.len() != 2 || d[1] != want_w {
+            return Err(Error::shape(format!(
+                "PackedLinearShard row: want (m, {want_w}), got {d:?}"
+            )));
+        }
+        let (m, w) = (d[0], d[1]);
+        let base = if x_local { 0 } else { self.seg0 * self.seg_k };
+        let (sk, n) = (self.seg_k, self.d_out);
+        let mut out = Vec::with_capacity(self.segs.len());
+        let mut xs = vec![0.0f32; m * sk];
+        for (j, seg) in self.segs.iter().enumerate() {
+            let off = base + j * sk;
+            for r in 0..m {
+                xs[r * sk..(r + 1) * sk]
+                    .copy_from_slice(&x.data()[r * w + off..r * w + off + sk]);
+            }
+            out.push(Tensor::filled_by(&[m, n], |buf| {
+                gemm_packed_into(pool, &xs, m, sk, seg, n, None, false, buf);
+            }));
+        }
+        Ok(out)
+    }
+}
+
+/// Combine the [`TP_LOGICAL_PARTS`] row-split partials — collected from
+/// the shards in logical segment order — through the fixed pairwise tree
+/// ([`fixed_tree_reduce_into`]), then add the bias **exactly once**, one
+/// `+` per element after the tree. This is the single reduction graph of
+/// the sharded path; it is a pure function of the layer shape, so it is
+/// identical at every tensor-parallel width (asserted in tests and
+/// pinned against the Python emulator in `tests/golden_vectors.rs`).
+pub fn reduce_row_partials(parts: &[Tensor], bias: &Tensor) -> Result<Tensor> {
+    if parts.len() != TP_LOGICAL_PARTS {
+        return Err(Error::shape(format!(
+            "reduce_row_partials: want {TP_LOGICAL_PARTS} logical partials, got {}",
+            parts.len()
+        )));
+    }
+    let dims = parts[0].dims().to_vec();
+    if dims.len() != 2 {
+        return Err(Error::shape("reduce_row_partials: partials must be (m, n)"));
+    }
+    for p in parts {
+        if p.dims() != &dims[..] {
+            return Err(Error::shape("reduce_row_partials: ragged partials"));
+        }
+    }
+    let n = dims[1];
+    if bias.dims() != [n] {
+        return Err(Error::shape(format!(
+            "reduce_row_partials: bias {:?} does not match output width {n}",
+            bias.dims()
+        )));
+    }
+    let views: Vec<&[f32]> = parts.iter().map(|p| p.data()).collect();
+    let b = bias.data();
+    Ok(Tensor::filled_by(&dims, |buf| {
+        fixed_tree_reduce_into(&views, buf);
+        for row in buf.chunks_exact_mut(n) {
+            for (v, bb) in row.iter_mut().zip(b.iter()) {
+                *v = *v + *bb;
+            }
+        }
+    }))
+}
+
 impl Module for Linear {
     fn forward(&self, t: &mut Tape, x: Var, binds: &mut Vec<Var>) -> Result<Var> {
         let w = t.param(self.weight.clone());
@@ -210,6 +519,124 @@ mod tests {
         let p = l.pack_in(&pool).unwrap();
         assert!(p.forward_infer_in(&pool, &Tensor::zeros(&[2, 5])).is_err());
         assert!(p.forward_infer_in(&pool, &Tensor::zeros(&[4])).is_err());
+    }
+
+    #[test]
+    fn col_shards_concat_to_the_unsharded_bits() {
+        // column split is layout-only: each output element keeps its
+        // sequential-k graph, so shard outputs concatenated in shard
+        // order must equal the unsharded packed forward bit for bit
+        let l = Linear::new(6, 8, 5);
+        let x = Tensor::from_vec(&[3, 6], (0..18).map(|i| (i as f32 * 0.19).sin()).collect())
+            .unwrap();
+        for lanes in [1usize, 2] {
+            let pool = WorkerPool::new(lanes);
+            let want = l.pack_in(&pool).unwrap().forward_infer_in(&pool, &x).unwrap();
+            for tp in [1usize, 2, 4] {
+                let nl = 8 / tp;
+                let mut got = Tensor::zeros(&[3, 8]);
+                for s in 0..tp {
+                    let sh = l.pack_col_shard_in(&pool, ShardPlan::new(tp, s).unwrap()).unwrap();
+                    assert_eq!(sh.d_out(), nl);
+                    let y = sh.forward_col_in(&pool, &x).unwrap();
+                    for r in 0..3 {
+                        got.data_mut()[r * 8 + s * nl..r * 8 + (s + 1) * nl]
+                            .copy_from_slice(&y.data()[r * nl..(r + 1) * nl]);
+                    }
+                }
+                assert!(got.bit_eq(&want), "tp={tp} lanes={lanes}: col shard changed bits");
+            }
+        }
+    }
+
+    #[test]
+    fn row_split_bits_are_tp_invariant_and_match_the_explicit_tree() {
+        let l = Linear::new(8, 5, 7);
+        let x = Tensor::from_vec(&[3, 8], (0..24).map(|i| (i as f32 * 0.37).cos()).collect())
+            .unwrap();
+        let pool = WorkerPool::new(2);
+        // independent reference: per-segment matmul_in partials through
+        // the same fixed tree + one bias add
+        let wt = l.weight.transpose2d().unwrap(); // (8, 5)
+        let (m, k, sk, n) = (3usize, 8usize, 2usize, 5usize);
+        let mut ref_parts = Vec::new();
+        for g in 0..TP_LOGICAL_PARTS {
+            let xs = Tensor::from_vec(
+                &[m, sk],
+                (0..m).flat_map(|r| x.data()[r * k + g * sk..r * k + (g + 1) * sk].to_vec()).collect(),
+            )
+            .unwrap();
+            let ws = Tensor::from_vec(
+                &[sk, n],
+                (0..sk).flat_map(|kk| wt.data()[(g * sk + kk) * n..(g * sk + kk + 1) * n].to_vec()).collect(),
+            )
+            .unwrap();
+            ref_parts.push(matmul_in(&pool, &xs, &ws).unwrap());
+        }
+        let want = reduce_row_partials(&ref_parts, &l.bias).unwrap();
+        for tp in [1usize, 2, 4] {
+            let mut parts = Vec::new();
+            for s in 0..tp {
+                let sh = l.pack_row_shard_in(&pool, ShardPlan::new(tp, s).unwrap()).unwrap();
+                assert_eq!(sh.num_segs(), TP_LOGICAL_PARTS / tp);
+                assert_eq!(sh.seg0(), s * (TP_LOGICAL_PARTS / tp));
+                parts.extend(sh.forward_row_partials_in(&pool, &x, false).unwrap());
+            }
+            let got = reduce_row_partials(&parts, &l.bias).unwrap();
+            assert!(got.bit_eq(&want), "tp={tp}: row split changed bits");
+        }
+    }
+
+    #[test]
+    fn row_local_input_equals_replicated_input_bitwise() {
+        // the Megatron chain: a shard consuming its upstream column
+        // shard's local slice must see the identical segment bits it
+        // would read out of the replicated activation
+        let l = Linear::new(8, 5, 13);
+        let x = Tensor::from_vec(&[2, 8], (0..16).map(|i| (i as f32 * 0.41).sin()).collect())
+            .unwrap();
+        let pool = WorkerPool::new(1);
+        for (tp, s) in [(2usize, 1usize), (4, 2)] {
+            let sh = l.pack_row_shard_in(&pool, ShardPlan::new(tp, s).unwrap()).unwrap();
+            let w_local = sh.num_segs() * 8 / TP_LOGICAL_PARTS;
+            let off = sh.seg0() * (8 / TP_LOGICAL_PARTS);
+            let xl = Tensor::from_vec(
+                &[2, w_local],
+                (0..2).flat_map(|r| x.data()[r * 8 + off..r * 8 + off + w_local].to_vec()).collect(),
+            )
+            .unwrap();
+            let a = sh.forward_row_partials_in(&pool, &x, false).unwrap();
+            let b = sh.forward_row_partials_in(&pool, &xl, true).unwrap();
+            assert_eq!(a.len(), b.len());
+            for (pa, pb) in a.iter().zip(b.iter()) {
+                assert!(pa.bit_eq(pb), "tp={tp} shard={s}: local-input partial changed bits");
+            }
+        }
+    }
+
+    #[test]
+    fn shard_plans_and_indivisible_shapes_are_errors() {
+        assert!(ShardPlan::new(0, 0).is_err(), "tp 0");
+        assert!(ShardPlan::new(3, 0).is_err(), "3 does not divide TP_LOGICAL_PARTS");
+        assert!(ShardPlan::new(8, 0).is_err(), "8 does not divide TP_LOGICAL_PARTS");
+        assert!(ShardPlan::new(2, 2).is_err(), "shard ≥ tp");
+        assert!(ShardPlan::new(4, 3).is_ok());
+        let pool = WorkerPool::new(1);
+        // indivisible widths are construction errors, never panics
+        let l = Linear::new(6, 5, 1);
+        assert!(l.pack_row_shard_in(&pool, ShardPlan::new(2, 0).unwrap()).is_err(), "6 % 4");
+        assert!(l.pack_col_shard_in(&pool, ShardPlan::new(2, 0).unwrap()).is_err(), "5 % 2");
+        // kind mismatches are shape errors
+        let l = Linear::new(8, 8, 2);
+        let col = l.pack_col_shard_in(&pool, ShardPlan::new(2, 0).unwrap()).unwrap();
+        let row = l.pack_row_shard_in(&pool, ShardPlan::new(2, 0).unwrap()).unwrap();
+        let x = Tensor::zeros(&[1, 8]);
+        assert!(col.forward_row_partials_in(&pool, &x, false).is_err());
+        assert!(row.forward_col_in(&pool, &x).is_err());
+        // wrong partial count / ragged partials
+        let parts = row.forward_row_partials_in(&pool, &x, false).unwrap();
+        assert_eq!(parts.len(), 2);
+        assert!(reduce_row_partials(&parts, &l.bias).is_err(), "2 of 4 partials");
     }
 
     #[test]

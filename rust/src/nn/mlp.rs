@@ -1,6 +1,7 @@
 //! A simple MLP (`Linear → activation → … → Linear`) — the quickstart
 //! model and the E1/E2 training workload.
 
+use super::linear::{reduce_row_partials, PackedLinearShard, ShardPlan, TP_LOGICAL_PARTS};
 use super::{Linear, Module, PackedLinear};
 use crate::autograd::{Tape, Var};
 use crate::rng::derive_seed;
@@ -113,6 +114,127 @@ pub struct PackedMlp {
     pub layers: Vec<PackedLinear>,
 }
 
+impl Mlp {
+    /// Freeze one tensor-parallel shard of this MLP under the Megatron
+    /// plan: even layer indices are **column-split** (replicated input →
+    /// this shard's output-column slice, bias and activation applied
+    /// locally — element-wise, so layout-only), odd indices are
+    /// **row-split** (each shard consumes its own column slice with zero
+    /// communication and emits logical partials for the fixed tree).
+    /// Indivisible widths are construction errors, never panics.
+    pub fn pack_shard_in(&self, pool: &WorkerPool, plan: ShardPlan) -> Result<PackedMlpShard> {
+        if self.layers.is_empty() {
+            return Err(Error::config("mlp: no layers"));
+        }
+        let layers = self
+            .layers
+            .iter()
+            .enumerate()
+            .map(|(i, l)| {
+                if i % 2 == 0 {
+                    l.pack_col_shard_in(pool, plan)
+                } else {
+                    l.pack_row_shard_in(pool, plan)
+                }
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(PackedMlpShard { layers, plan })
+    }
+
+    /// Tensor-parallel inference forward: orchestrates one complete,
+    /// in-order shard set (`shards[s]` built with
+    /// `ShardPlan { tp: shards.len(), shard: s }`). Column-split layers
+    /// run per shard on the replicated activation; row-split layers
+    /// consume each shard's local slice and their logical partials
+    /// combine in shard-index (= logical segment) order through the
+    /// fixed tree + one bias add ([`reduce_row_partials`]). Bits are a
+    /// pure function of the model and input — identical for every tp
+    /// dividing [`TP_LOGICAL_PARTS`] (asserted in tests and
+    /// `tests/tp_invariance.rs`).
+    pub fn forward_infer_sharded_in(
+        &self,
+        pool: &WorkerPool,
+        x: &Tensor,
+        shards: &[PackedMlpShard],
+    ) -> Result<Tensor> {
+        let tp = shards.len();
+        if tp == 0 {
+            return Err(Error::shape("mlp: empty shard set"));
+        }
+        for (s, sh) in shards.iter().enumerate() {
+            if sh.plan.tp != tp || sh.plan.shard != s || sh.layers.len() != self.layers.len() {
+                return Err(Error::shape(
+                    "mlp: shard set does not match this model's shard plan",
+                ));
+            }
+        }
+        // `full` = replicated activation (input, or a row layer's
+        // reduced output); `locals` = per-shard column slices after a
+        // col layer. Parity alternates, so exactly one is live.
+        let mut full: Option<Tensor> = Some(x.clone());
+        let mut locals: Vec<Tensor> = Vec::new();
+        for i in 0..self.layers.len() {
+            if i % 2 == 0 {
+                let xin = full
+                    .take()
+                    .ok_or_else(|| Error::runtime("mlp: missing replicated activation"))?;
+                locals = shards
+                    .iter()
+                    .map(|sh| sh.layers[i].forward_col_in(pool, &xin))
+                    .collect::<Result<Vec<_>>>()?;
+            } else {
+                let mut parts = Vec::with_capacity(TP_LOGICAL_PARTS);
+                for (s, sh) in shards.iter().enumerate() {
+                    parts.extend(sh.layers[i].forward_row_partials_in(pool, &locals[s], true)?);
+                }
+                full = Some(reduce_row_partials(&parts, &self.layers[i].bias)?);
+                locals.clear();
+            }
+            if i + 1 < self.layers.len() {
+                // element-wise activation — applied wherever the data
+                // lives (local slices or the replicated tensor), which
+                // is layout-only
+                let f = |h: Tensor| match self.act {
+                    Act::Relu => h.map(|t| if t > 0.0 { t } else { 0.0 }),
+                    Act::Gelu => h.map(rgelu_tanh),
+                    Act::Tanh => h.map(rtanh),
+                };
+                if i % 2 == 0 {
+                    locals = locals.into_iter().map(f).collect();
+                } else {
+                    full = full.map(f);
+                }
+            }
+        }
+        if (self.layers.len() - 1) % 2 == 0 {
+            // ended on a column split: concatenate shard slices in
+            // fixed shard order (layout-only)
+            let m = locals[0].dims()[0];
+            let n: usize = locals.iter().map(|l| l.dims()[1]).sum();
+            let mut y = Tensor::zeros(&[m, n]);
+            let mut off = 0;
+            for l in &locals {
+                let w = l.dims()[1];
+                for r in 0..m {
+                    y.data_mut()[r * n + off..r * n + off + w]
+                        .copy_from_slice(&l.data()[r * w..(r + 1) * w]);
+                }
+                off += w;
+            }
+            Ok(y)
+        } else {
+            full.ok_or_else(|| Error::runtime("mlp: missing reduced output"))
+        }
+    }
+}
+
+/// One tensor-parallel shard of an [`Mlp`] under the Megatron
+/// even-column / odd-row plan; built by [`Mlp::pack_shard_in`].
+pub struct PackedMlpShard {
+    layers: Vec<PackedLinearShard>,
+    plan: ShardPlan,
+}
+
 impl Module for Mlp {
     fn forward(&self, t: &mut Tape, x: Var, binds: &mut Vec<Var>) -> Result<Var> {
         let mut h = x;
@@ -192,6 +314,60 @@ mod tests {
                 assert!(got.bit_eq(&want), "act={act:?} lanes={lanes}: packed MLP changed bits");
             }
         }
+    }
+
+    #[test]
+    fn sharded_forward_is_tp_invariant() {
+        let x = Tensor::from_vec(&[3, 8], (0..24).map(|i| (i as f32 * 0.29).sin()).collect())
+            .unwrap();
+        // odd layer count ends on a column split (exercises the concat),
+        // even layer count ends on a row split (exercises the tree)
+        for widths in [&[8usize, 12, 16, 4][..], &[8usize, 16, 4][..]] {
+            for act in [Act::Relu, Act::Gelu, Act::Tanh] {
+                let m = Mlp::new(widths, act, 11);
+                let mut want: Option<Tensor> = None;
+                for tp in [1usize, 2, 4] {
+                    for lanes in [1usize, 2] {
+                        let pool = WorkerPool::new(lanes);
+                        let shards: Vec<_> = (0..tp)
+                            .map(|s| m.pack_shard_in(&pool, ShardPlan::new(tp, s).unwrap()).unwrap())
+                            .collect();
+                        let got = m.forward_infer_sharded_in(&pool, &x, &shards).unwrap();
+                        assert_eq!(got.dims(), &[3, *widths.last().unwrap()]);
+                        match &want {
+                            None => want = Some(got),
+                            Some(w) => assert!(
+                                got.bit_eq(w),
+                                "widths={widths:?} act={act:?} tp={tp} lanes={lanes}: sharded MLP changed bits"
+                            ),
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_mlp_errors_never_panic() {
+        let pool = WorkerPool::new(1);
+        // row layer's in_features not divisible by the logical partial
+        // count → construction error at every tp
+        let bad = Mlp::new(&[8, 10, 6], Act::Relu, 3);
+        for tp in [1usize, 2, 4] {
+            assert!(bad.pack_shard_in(&pool, ShardPlan::new(tp, 0).unwrap()).is_err());
+        }
+        // col layer's out_features not divisible by tp
+        let m = Mlp::new(&[8, 10, 4], Act::Relu, 3);
+        assert!(m.pack_shard_in(&pool, ShardPlan::new(4, 0).unwrap()).is_err(), "10 % 4");
+        // incomplete / out-of-order shard sets rejected at forward
+        let m = Mlp::new(&[8, 16, 4], Act::Relu, 3);
+        let s0 = m.pack_shard_in(&pool, ShardPlan::new(2, 0).unwrap()).unwrap();
+        let s1 = m.pack_shard_in(&pool, ShardPlan::new(2, 1).unwrap()).unwrap();
+        let x = Tensor::zeros(&[2, 8]);
+        assert!(m.forward_infer_sharded_in(&pool, &x, &[s1, s0]).is_err(), "order");
+        let s0 = m.pack_shard_in(&pool, ShardPlan::new(2, 0).unwrap()).unwrap();
+        assert!(m.forward_infer_sharded_in(&pool, &x, &[s0]).is_err(), "incomplete");
+        assert!(m.forward_infer_sharded_in(&pool, &x, &[]).is_err(), "empty");
     }
 
     #[test]

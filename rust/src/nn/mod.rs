@@ -23,17 +23,20 @@ pub mod transformer;
 
 pub use attention::{
     attention_forward, attention_step_forward, KvState, MultiheadAttention, PackedAttention,
+    PackedAttentionShard,
 };
 pub use batchnorm::{batch_norm, batch_norm_affine_folded, batch_norm_folded, BatchNorm2d};
 pub use conv2d::Conv2d;
 pub use embedding::Embedding;
 pub use layernorm::{layer_norm_forward, LayerNorm};
-pub use linear::{Linear, PackedLinear};
-pub use mlp::{Act, Mlp, PackedMlp};
+pub use linear::{
+    reduce_row_partials, Linear, PackedLinear, PackedLinearShard, ShardPlan, TP_LOGICAL_PARTS,
+};
+pub use mlp::{Act, Mlp, PackedMlp, PackedMlpShard};
 pub use softmax::{log_softmax_rows, softmax_rows};
 pub use transformer::{
-    CharTransformer, PackedBlock, PackedTransformer, TransformerBlock, TransformerConfig,
-    TransformerKv,
+    CharTransformer, PackedBlock, PackedBlockShard, PackedTransformer, PackedTransformerShard,
+    TransformerBlock, TransformerConfig, TransformerKv,
 };
 
 use crate::autograd::{Tape, Var};

@@ -2,6 +2,8 @@
 //! workload (experiment E8). Pre-norm blocks, causal attention, GELU MLP,
 //! learned positional embeddings; every sub-op is a RepDL fixed graph.
 
+use super::attention::PackedAttentionShard;
+use super::linear::{reduce_row_partials, PackedLinearShard, ShardPlan, TP_LOGICAL_PARTS};
 use super::{
     Embedding, KvState, LayerNorm, Linear, Module, MultiheadAttention, PackedAttention,
     PackedLinear,
@@ -151,6 +153,75 @@ impl TransformerBlock {
             Some(p) => p.fc2.forward_infer_in(pool, &h)?,
             None => self.fc2.forward_infer_in(pool, &h)?,
         };
+        x.add_t(&h) // residual
+    }
+}
+
+impl TransformerBlock {
+    /// Freeze one tensor-parallel shard of this block: per-head
+    /// attention sharding ([`MultiheadAttention::pack_shard_in`]), plus
+    /// the Megatron MLP plan — fc1 column-split (bias + GELU applied
+    /// locally, element-wise so layout-only), fc2 row-split consuming
+    /// the shard's own fc1 slice with zero communication. Indivisible
+    /// head/width counts are errors, never panics.
+    pub fn pack_shard_in(&self, pool: &WorkerPool, plan: ShardPlan) -> Result<PackedBlockShard> {
+        Ok(PackedBlockShard {
+            attn: self.attn.pack_shard_in(pool, plan)?,
+            fc1: self.fc1.pack_col_shard_in(pool, plan)?,
+            fc2: self.fc2.pack_row_shard_in(pool, plan)?,
+        })
+    }
+
+    /// Tensor-parallel forward on a (T, D) sequence: LayerNorms and
+    /// residual adds run replicated (element-wise per row — layout
+    /// identical at any tp), attention shards by head, and the MLP runs
+    /// the Megatron column→row plan with the fixed-tree partial
+    /// reduction. Bits are TP-invariant (asserted in tests and
+    /// `tests/tp_invariance.rs`).
+    pub fn forward_infer_sharded_in(
+        &self,
+        pool: &WorkerPool,
+        x: &Tensor,
+        shards: &[&PackedBlockShard],
+        kv_out: Option<&mut KvState>,
+    ) -> Result<Tensor> {
+        let h = self.ln1.forward_infer(x)?;
+        let attn_shards: Vec<&PackedAttentionShard> = shards.iter().map(|b| &b.attn).collect();
+        let h = self.attn.forward_seq_sharded_in(pool, &h, &attn_shards, kv_out)?;
+        let x = x.add_t(&h)?; // residual
+        let h = self.ln2.forward_infer(&x)?;
+        let mut parts = Vec::with_capacity(TP_LOGICAL_PARTS);
+        for b in shards {
+            let local = b.fc1.forward_col_in(pool, &h)?;
+            let local = local.map(rgelu_tanh); // element-wise, shard-local
+            parts.extend(b.fc2.forward_row_partials_in(pool, &local, true)?);
+        }
+        let h = reduce_row_partials(&parts, &self.fc2.bias)?;
+        x.add_t(&h) // residual
+    }
+
+    /// Tensor-parallel incremental decode through the block — the
+    /// sharded analogue of [`Self::forward_step_packed_in`], against the
+    /// same full-layout KV cache every TP width shares.
+    pub fn forward_step_sharded_in(
+        &self,
+        pool: &WorkerPool,
+        x: &Tensor,
+        shards: &[&PackedBlockShard],
+        kv: &mut KvState,
+    ) -> Result<Tensor> {
+        let h = self.ln1.forward_infer(x)?;
+        let attn_shards: Vec<&PackedAttentionShard> = shards.iter().map(|b| &b.attn).collect();
+        let h = self.attn.forward_step_sharded_in(pool, &h, &attn_shards, kv)?;
+        let x = x.add_t(&h)?; // residual
+        let h = self.ln2.forward_infer(&x)?;
+        let mut parts = Vec::with_capacity(TP_LOGICAL_PARTS);
+        for b in shards {
+            let local = b.fc1.forward_col_in(pool, &h)?;
+            let local = local.map(rgelu_tanh);
+            parts.extend(b.fc2.forward_row_partials_in(pool, &local, true)?);
+        }
+        let h = reduce_row_partials(&parts, &self.fc2.bias)?;
         x.add_t(&h) // residual
     }
 }
@@ -417,6 +488,154 @@ impl CharTransformer {
         }
     }
 
+    /// Freeze one tensor-parallel shard of the whole model: every block
+    /// via [`TransformerBlock::pack_shard_in`] plus the LM head as a
+    /// row split over the replicated final activation (works for any
+    /// vocab size — the head's *input* width is what must divide
+    /// [`TP_LOGICAL_PARTS`]). Embeddings and LayerNorms carry no GEMM
+    /// and stay with the unsharded model.
+    pub fn pack_shard_in(&self, pool: &WorkerPool, plan: ShardPlan) -> Result<PackedTransformerShard> {
+        Ok(PackedTransformerShard {
+            blocks: self
+                .blocks
+                .iter()
+                .map(|b| b.pack_shard_in(pool, plan))
+                .collect::<Result<Vec<_>>>()?,
+            head: self.head.pack_row_shard_in(pool, plan)?,
+            plan,
+        })
+    }
+
+    /// Validate a complete, in-order tensor-parallel shard set for this
+    /// model.
+    fn check_tp_shards(&self, shards: &[PackedTransformerShard]) -> Result<()> {
+        let tp = shards.len();
+        if tp == 0 {
+            return Err(Error::shape("transformer: empty shard set"));
+        }
+        for (s, sh) in shards.iter().enumerate() {
+            if sh.plan.tp != tp || sh.plan.shard != s || sh.blocks.len() != self.blocks.len() {
+                return Err(Error::shape(
+                    "transformer: shard set does not match this model's shard plan",
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Tensor-parallel logits forward — the sharded analogue of
+    /// [`Self::forward_logits_packed_in`], with identical validation and
+    /// the identical embedding/positional/LayerNorm graph (replicated).
+    /// Blocks shard by head + Megatron MLP; the LM head's logical
+    /// partials combine through the fixed tree. Bits, and any captured
+    /// KV cache, are identical at every tp dividing
+    /// [`TP_LOGICAL_PARTS`] (asserted in `tests/tp_invariance.rs`).
+    pub fn forward_logits_sharded_in(
+        &self,
+        pool: &WorkerPool,
+        ids: &[usize],
+        shards: &[PackedTransformerShard],
+        mut kv_out: Option<&mut TransformerKv>,
+    ) -> Result<Tensor> {
+        self.check_tp_shards(shards)?;
+        let tt = ids.len();
+        if tt == 0 || tt > self.cfg.context {
+            return Err(Error::shape(format!(
+                "transformer infer: sequence length {tt} not in 1..={}",
+                self.cfg.context
+            )));
+        }
+        let dim = self.cfg.dim;
+        let table = &self.tok_emb.weight;
+        for &i in ids {
+            if i >= self.cfg.vocab {
+                return Err(Error::shape(format!(
+                    "transformer infer: id {i} ≥ vocab {}",
+                    self.cfg.vocab
+                )));
+            }
+        }
+        if let Some(kvs) = kv_out.as_deref_mut() {
+            if kvs.steps() != 0 || kvs.layers.len() != self.blocks.len() {
+                return Err(Error::shape(
+                    "transformer infer: kv_out must be a fresh begin_kv() cache",
+                ));
+            }
+        }
+        let mut e = Tensor::zeros(&[tt, dim]);
+        for (r, &i) in ids.iter().enumerate() {
+            e.data_mut()[r * dim..(r + 1) * dim]
+                .copy_from_slice(&table.data()[i * dim..(i + 1) * dim]);
+        }
+        let mut pe = Tensor::zeros(&[tt, dim]);
+        pe.data_mut().copy_from_slice(&self.pos_emb.data()[..tt * dim]);
+        let mut h = e.add_t(&pe)?;
+        for (li, b) in self.blocks.iter().enumerate() {
+            let kv_l = kv_out.as_deref_mut().map(|k| &mut k.layers[li]);
+            let block_shards: Vec<&PackedBlockShard> =
+                shards.iter().map(|sh| &sh.blocks[li]).collect();
+            h = b.forward_infer_sharded_in(pool, &h, &block_shards, kv_l)?;
+        }
+        if let Some(kvs) = kv_out.as_deref_mut() {
+            kvs.steps = tt;
+        }
+        let h = self.ln_f.forward_infer(&h)?;
+        let mut parts = Vec::with_capacity(TP_LOGICAL_PARTS);
+        for sh in shards {
+            parts.extend(sh.head.forward_row_partials_in(pool, &h, false)?);
+        }
+        reduce_row_partials(&parts, &self.head.bias)
+    }
+
+    /// Tensor-parallel incremental decode — the sharded analogue of
+    /// [`Self::forward_logits_step_packed_in`] against the same
+    /// full-layout session caches, so a session prefilled or stepped at
+    /// one TP width continues bit-identically at another.
+    pub fn forward_logits_step_sharded_in(
+        &self,
+        pool: &WorkerPool,
+        id: usize,
+        shards: &[PackedTransformerShard],
+        kv: &mut TransformerKv,
+    ) -> Result<Tensor> {
+        self.check_tp_shards(shards)?;
+        let pos = kv.steps;
+        if pos >= self.cfg.context {
+            return Err(Error::shape(format!(
+                "transformer step: position {pos} ≥ context {}",
+                self.cfg.context
+            )));
+        }
+        if id >= self.cfg.vocab {
+            return Err(Error::shape(format!(
+                "transformer step: id {id} ≥ vocab {}",
+                self.cfg.vocab
+            )));
+        }
+        if kv.layers.len() != self.blocks.len() {
+            return Err(Error::shape("transformer step: KV layer count mismatch"));
+        }
+        let dim = self.cfg.dim;
+        let mut e = Tensor::zeros(&[1, dim]);
+        e.data_mut()
+            .copy_from_slice(&self.tok_emb.weight.data()[id * dim..(id + 1) * dim]);
+        let mut pe = Tensor::zeros(&[1, dim]);
+        pe.data_mut().copy_from_slice(&self.pos_emb.data()[pos * dim..(pos + 1) * dim]);
+        let mut h = e.add_t(&pe)?;
+        for (li, b) in self.blocks.iter().enumerate() {
+            let block_shards: Vec<&PackedBlockShard> =
+                shards.iter().map(|sh| &sh.blocks[li]).collect();
+            h = b.forward_step_sharded_in(pool, &h, &block_shards, &mut kv.layers[li])?;
+        }
+        kv.steps = pos + 1;
+        let h = self.ln_f.forward_infer(&h)?;
+        let mut parts = Vec::with_capacity(TP_LOGICAL_PARTS);
+        for sh in shards {
+            parts.extend(sh.head.forward_row_partials_in(pool, &h, false)?);
+        }
+        reduce_row_partials(&parts, &self.head.bias)
+    }
+
     /// All parameters in fixed traversal order (same order as
     /// [`Self::params_mut`] — the model-state fingerprint and the serve
     /// tower's `weights_hash` both rely on it).
@@ -481,6 +700,25 @@ pub struct PackedTransformer {
     pub blocks: Vec<PackedBlock>,
     /// Packed LM head.
     pub head: PackedLinear,
+}
+
+/// One tensor-parallel shard of a [`TransformerBlock`]: per-head
+/// attention shard plus the Megatron column/row MLP pair. Built by
+/// [`TransformerBlock::pack_shard_in`].
+pub struct PackedBlockShard {
+    attn: PackedAttentionShard,
+    fc1: PackedLinearShard,
+    fc2: PackedLinearShard,
+}
+
+/// One tensor-parallel shard of a [`CharTransformer`] — every block's
+/// shard plus the row-split LM head, tagged with its [`ShardPlan`].
+/// Built by [`CharTransformer::pack_shard_in`]; a complete in-order set
+/// of these drives [`CharTransformer::forward_logits_sharded_in`].
+pub struct PackedTransformerShard {
+    blocks: Vec<PackedBlockShard>,
+    head: PackedLinearShard,
+    plan: ShardPlan,
 }
 
 #[cfg(test)]
@@ -629,6 +867,118 @@ mod tests {
         assert!(m
             .forward_logits_packed_in(&pool, &ids[..2], None, Some(&mut kv))
             .is_err());
+    }
+
+    #[test]
+    fn sharded_logits_and_steps_are_tp_invariant() {
+        // heads = 4 so tp ∈ {1,2,4} all divide the head count; the
+        // sharded path's bits must be a pure function of (model, input)
+        let cfg = TransformerConfig { vocab: 12, dim: 8, heads: 4, layers: 2, context: 6, mlp_ratio: 2 };
+        let m = CharTransformer::new(cfg, 51).unwrap();
+        let ids = [1usize, 4, 2, 9, 3];
+        // reference: tp=1 prefill — every other width must produce the
+        // same logits AND be able to continue this very cache
+        let pool1 = crate::tensor::WorkerPool::new(1);
+        let shards1: Vec<_> = (0..1)
+            .map(|s| m.pack_shard_in(&pool1, ShardPlan::new(1, s).unwrap()).unwrap())
+            .collect();
+        let mut kv0 = m.begin_kv();
+        let want_full = m
+            .forward_logits_sharded_in(&pool1, &ids[..3], &shards1, Some(&mut kv0))
+            .unwrap();
+        let mut want_step: Option<Vec<Vec<u32>>> = None;
+        for tp in [1usize, 2, 4] {
+            for lanes in [1usize, 2] {
+                let pool = crate::tensor::WorkerPool::new(lanes);
+                let shards: Vec<_> = (0..tp)
+                    .map(|s| m.pack_shard_in(&pool, ShardPlan::new(tp, s).unwrap()).unwrap())
+                    .collect();
+                let mut kv = m.begin_kv();
+                let full = m
+                    .forward_logits_sharded_in(&pool, &ids[..3], &shards, Some(&mut kv))
+                    .unwrap();
+                assert_eq!(kv.steps(), 3);
+                assert!(
+                    full.bit_eq(&want_full),
+                    "tp={tp} lanes={lanes}: sharded logits changed bits"
+                );
+                // continue decoding from this width's own prefill…
+                let mut steps = Vec::new();
+                for &id in &ids[3..] {
+                    let st = m.forward_logits_step_sharded_in(&pool, id, &shards, &mut kv).unwrap();
+                    steps.push(st.data().iter().map(|v| v.to_bits()).collect::<Vec<u32>>());
+                }
+                // …and from the tp=1 prefill: caches transfer across TP
+                // widths because the sharded graph's bits — including
+                // every captured K/V row — are TP-invariant
+                let mut kvx = kv0.clone();
+                let mut steps_x = Vec::new();
+                for &id in &ids[3..] {
+                    let st =
+                        m.forward_logits_step_sharded_in(&pool, id, &shards, &mut kvx).unwrap();
+                    steps_x.push(st.data().iter().map(|v| v.to_bits()).collect::<Vec<u32>>());
+                }
+                assert_eq!(
+                    steps, steps_x,
+                    "tp={tp} lanes={lanes}: a tp=1 prefill cache diverged under tp={tp} decode"
+                );
+                match &want_step {
+                    None => want_step = Some(steps),
+                    Some(w) => assert_eq!(
+                        w, &steps,
+                        "tp={tp} lanes={lanes}: sharded step decode changed bits"
+                    ),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_step_matches_sharded_full_recompute() {
+        let cfg = TransformerConfig { vocab: 12, dim: 8, heads: 4, layers: 2, context: 6, mlp_ratio: 2 };
+        let m = CharTransformer::new(cfg, 63).unwrap();
+        let ids = [5usize, 1, 11, 0, 7, 2];
+        let pool = crate::tensor::WorkerPool::new(2);
+        for tp in [1usize, 2] {
+            let shards: Vec<_> = (0..tp)
+                .map(|s| m.pack_shard_in(&pool, ShardPlan::new(tp, s).unwrap()).unwrap())
+                .collect();
+            let mut kv = m.begin_kv();
+            for t in 0..ids.len() {
+                let step = m
+                    .forward_logits_step_sharded_in(&pool, ids[t], &shards, &mut kv)
+                    .unwrap();
+                let full = m.forward_logits_sharded_in(&pool, &ids[..t + 1], &shards, None).unwrap();
+                let last = &full.data()[t * cfg.vocab..(t + 1) * cfg.vocab];
+                assert_eq!(
+                    step.data().iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    last.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    "tp={tp} t={t}: sharded step diverged from sharded full forward"
+                );
+            }
+            // context full: one more step is a typed error
+            assert!(m.forward_logits_step_sharded_in(&pool, 0, &shards, &mut kv).is_err());
+        }
+    }
+
+    #[test]
+    fn sharded_construction_and_shard_set_errors() {
+        let pool = crate::tensor::WorkerPool::new(1);
+        // heads = 2 cannot split four ways
+        let cfg2 = TransformerConfig { vocab: 12, dim: 8, heads: 2, layers: 1, context: 6, mlp_ratio: 2 };
+        let m2 = CharTransformer::new(cfg2, 1).unwrap();
+        assert!(m2.pack_shard_in(&pool, ShardPlan::new(4, 0).unwrap()).is_err());
+        assert!(m2.pack_shard_in(&pool, ShardPlan::new(2, 0).unwrap()).is_ok());
+        // incomplete / out-of-order shard sets are forward errors
+        let cfg = TransformerConfig { vocab: 12, dim: 8, heads: 4, layers: 1, context: 6, mlp_ratio: 2 };
+        let m = CharTransformer::new(cfg, 2).unwrap();
+        let s0 = m.pack_shard_in(&pool, ShardPlan::new(2, 0).unwrap()).unwrap();
+        let s1 = m.pack_shard_in(&pool, ShardPlan::new(2, 1).unwrap()).unwrap();
+        let ids = [1usize, 2];
+        assert!(m.forward_logits_sharded_in(&pool, &ids, &[s1, s0], None).is_err(), "order");
+        let s0 = m.pack_shard_in(&pool, ShardPlan::new(2, 0).unwrap()).unwrap();
+        assert!(m.forward_logits_sharded_in(&pool, &ids, &[s0], None).is_err(), "incomplete");
+        assert!(m.forward_logits_sharded_in(&pool, &ids, &[], None).is_err(), "empty");
     }
 
     #[test]

@@ -31,6 +31,7 @@ pub mod exp;
 pub mod fbits;
 pub mod log;
 pub mod pow;
+pub mod reduce;
 pub mod special;
 pub mod sqrt;
 pub mod sum;
@@ -42,5 +43,8 @@ pub use log::{rlog, rlog1p, rlog2};
 pub use pow::rpow;
 pub use special::{rgelu_erf, rgelu_tanh, rsigmoid, rtanh};
 pub use sqrt::{rrsqrt, rsqrt_f32};
-pub use sum::{dot_sequential, sum_exact, sum_kahan, sum_pairwise, sum_sequential, KulischAcc};
+pub use reduce::{fixed_tree_reduce, fixed_tree_reduce_into};
+pub use sum::{
+    dot_sequential, pairwise_split, sum_exact, sum_kahan, sum_pairwise, sum_sequential, KulischAcc,
+};
 pub use trig::{rcos, rsin, rtan};

@@ -1,0 +1,184 @@
+//! Fixed pairwise-tree reduction — the public combinator behind every
+//! multi-partial reduction in this repo (paper §3.2.2 applied to
+//! *partial results*, not just scalars).
+//!
+//! Floating-point addition is not associative, so "the combined partial"
+//! is only defined once an association order is fixed. This module fixes
+//! it once, as a **specification**: partials `p₀ … p_{n−1}` (indexed by
+//! their *logical* position — microbatch index, tensor-parallel segment
+//! index, …) combine in the [`sum_pairwise`](super::sum::sum_pairwise)
+//! tree shape — split at the largest power of two below `n`
+//! ([`pairwise_split`]), left subtree first. The tree is a pure function
+//! of the logical partial **count**, never of worker scheduling, lane
+//! count, or tensor-parallel width — which is exactly why
+//! `DataParallelTrainer` lanes and `ShardedTower` TP widths are pure
+//! performance knobs (DESIGN.md §12–§13).
+//!
+//! Two entry points:
+//!
+//! * [`fixed_tree_reduce`] — generic: any partial type, any combine
+//!   closure. The closure is *applied* in the fixed tree order; it is
+//!   the caller's obligation that the closure itself is deterministic
+//!   (element-wise `+` in a fixed element order qualifies).
+//! * [`fixed_tree_reduce_into`] — element-wise over equal-length `f32`
+//!   partial slices (the tensor-partial case): output element `j` is
+//!   the fixed-tree sum of `parts[0][j] … parts[n−1][j]`.
+
+pub use super::sum::pairwise_split;
+
+/// Reduce `parts` (in logical index order) with `combine`, associated in
+/// the fixed pairwise tree: `combine` is applied exactly `n − 1` times,
+/// at the internal nodes of the tree whose shape [`pairwise_split`]
+/// specifies. Returns `None` for an empty input, the sole element
+/// (untouched) for `n == 1`.
+///
+/// The association for a given `n` is a specification shared with the
+/// other fixed-tree users (gradient reduction, tensor-parallel partial
+/// sums, the Python golden-vector emulator) — change it nowhere or
+/// everywhere.
+pub fn fixed_tree_reduce<T, F>(parts: Vec<T>, combine: &mut F) -> Option<T>
+where
+    F: FnMut(T, T) -> T,
+{
+    fn rec<T, F>(slots: &mut [Option<T>], lo: usize, hi: usize, combine: &mut F) -> T
+    where
+        F: FnMut(T, T) -> T,
+    {
+        debug_assert!(lo < hi);
+        if hi - lo == 1 {
+            return slots[lo].take().expect("fixed_tree_reduce: partial consumed twice");
+        }
+        let split = lo + pairwise_split(hi - lo);
+        let left = rec(slots, lo, split, combine);
+        let right = rec(slots, split, hi, combine);
+        combine(left, right)
+    }
+    if parts.is_empty() {
+        return None;
+    }
+    let n = parts.len();
+    let mut slots: Vec<Option<T>> = parts.into_iter().map(Some).collect();
+    Some(rec(&mut slots, 0, n, combine))
+}
+
+/// Element-wise fixed-tree sum of equal-length `f32` partial slices into
+/// `out`: `out[j] = tree(parts[0][j], …, parts[n−1][j])` with the same
+/// association as [`fixed_tree_reduce`]. `parts` must be non-empty and
+/// every slice must have `out.len()` elements (debug-asserted — callers
+/// construct the partials, so a mismatch is a programming error, not a
+/// user error).
+pub fn fixed_tree_reduce_into(parts: &[&[f32]], out: &mut [f32]) {
+    debug_assert!(!parts.is_empty(), "fixed_tree_reduce_into: no partials");
+    for p in parts {
+        debug_assert_eq!(p.len(), out.len(), "fixed_tree_reduce_into: ragged partial");
+    }
+    fn elem(parts: &[&[f32]], lo: usize, hi: usize, j: usize) -> f32 {
+        if hi - lo == 1 {
+            return parts[lo][j];
+        }
+        let split = lo + pairwise_split(hi - lo);
+        elem(parts, lo, split, j) + elem(parts, split, hi, j)
+    }
+    let n = parts.len();
+    if n == 1 {
+        out.copy_from_slice(parts[0]);
+        return;
+    }
+    for (j, o) in out.iter_mut().enumerate() {
+        *o = elem(parts, 0, n, j);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The split rule is part of the cross-implementation spec (moved
+    /// here alongside the public API; the Pallas kernel and the Python
+    /// emulator use the identical shape).
+    #[test]
+    fn pairwise_split_spec() {
+        assert_eq!(pairwise_split(9), 8);
+        assert_eq!(pairwise_split(16), 8);
+        assert_eq!(pairwise_split(17), 16);
+        assert_eq!(pairwise_split(1000), 512);
+        assert_eq!(pairwise_split(2), 1);
+    }
+
+    /// The association order, spelled out: reduce strings and check the
+    /// parenthesisation for every small n.
+    #[test]
+    fn tree_association_spec() {
+        let shape = |n: usize| -> String {
+            let parts: Vec<String> = (0..n).map(|i| i.to_string()).collect();
+            fixed_tree_reduce(parts, &mut |a, b| format!("({a}+{b})")).unwrap()
+        };
+        assert_eq!(shape(1), "0");
+        assert_eq!(shape(2), "(0+1)");
+        assert_eq!(shape(3), "((0+1)+2)");
+        assert_eq!(shape(4), "((0+1)+(2+3))");
+        assert_eq!(shape(5), "(((0+1)+(2+3))+4)");
+        assert_eq!(shape(6), "(((0+1)+(2+3))+(4+5))");
+        assert_eq!(shape(8), "(((0+1)+(2+3))+((4+5)+(6+7)))");
+        assert_eq!(shape(9), "((((0+1)+(2+3))+((4+5)+(6+7)))+8)");
+    }
+
+    #[test]
+    fn empty_and_singleton() {
+        assert_eq!(fixed_tree_reduce(Vec::<f32>::new(), &mut |a, b| a + b), None);
+        assert_eq!(fixed_tree_reduce(vec![7.0f32], &mut |a, b| a + b), Some(7.0));
+    }
+
+    /// Element-wise reduce equals the scalar tree applied per element —
+    /// bit-for-bit, including non-associative cancellation cases.
+    #[test]
+    fn elementwise_matches_scalar_tree_bitwise() {
+        let mut s = 12345u64;
+        let mut next = || {
+            s = s.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            (((s >> 40) as f32) / (1u64 << 24) as f32 - 0.5) * 2.0e6
+        };
+        for n in 1..=9usize {
+            let parts: Vec<Vec<f32>> = (0..n).map(|_| (0..17).map(|_| next()).collect()).collect();
+            let views: Vec<&[f32]> = parts.iter().map(|p| p.as_slice()).collect();
+            let mut out = vec![0.0f32; 17];
+            fixed_tree_reduce_into(&views, &mut out);
+            for j in 0..17 {
+                let scalars: Vec<f32> = parts.iter().map(|p| p[j]).collect();
+                let want = fixed_tree_reduce(scalars, &mut |a, b| a + b).unwrap();
+                assert_eq!(out[j].to_bits(), want.to_bits(), "n={n} j={j}");
+            }
+        }
+    }
+
+    /// The non-associativity the tree exists to pin down: a different
+    /// association of the same partials gives different bits, the fixed
+    /// tree gives the same bits every time.
+    #[test]
+    fn tree_is_deterministic_where_association_matters(){
+        let parts = vec![0.5f32, 1e9, -1e9, 0.25];
+        let tree = |p: Vec<f32>| fixed_tree_reduce(p, &mut |a, b| a + b).unwrap();
+        // ((0.5+1e9)+(-1e9+0.25)) = 1e9 + (-1e9+0.25) = 0.25… per RNE:
+        let want = (0.5f32 + 1e9) + (-1e9 + 0.25);
+        assert_eq!(tree(parts.clone()).to_bits(), want.to_bits());
+        assert_eq!(tree(parts.clone()).to_bits(), tree(parts).to_bits());
+        // sequential association differs on this data
+        let seq = ((0.5f32 + 1e9) + -1e9) + 0.25;
+        assert_ne!(want.to_bits(), seq.to_bits());
+    }
+
+    /// Grouping contiguous leaves and reducing group results does NOT in
+    /// general reproduce the flat tree — which is exactly why
+    /// tensor-parallel shards emit their *logical* partials individually
+    /// instead of pre-combining per shard (DESIGN.md §13)… except for
+    /// the power-of-two case, where subtree alignment makes them equal.
+    #[test]
+    fn power_of_two_groups_are_aligned_subtrees() {
+        let parts = vec![0.5f32, 1e9, -1e9, 0.25];
+        let flat = fixed_tree_reduce(parts.clone(), &mut |a, b| a + b).unwrap();
+        let g0 = fixed_tree_reduce(parts[..2].to_vec(), &mut |a, b| a + b).unwrap();
+        let g1 = fixed_tree_reduce(parts[2..].to_vec(), &mut |a, b| a + b).unwrap();
+        let grouped = fixed_tree_reduce(vec![g0, g1], &mut |a, b| a + b).unwrap();
+        assert_eq!(flat.to_bits(), grouped.to_bits());
+    }
+}

@@ -34,9 +34,11 @@ pub fn sum_sequential(xs: &[f32]) -> f32 {
 
 /// Split point of the pairwise tree: the largest power of two < n.
 /// This is part of the cross-implementation specification — the Pallas
-/// kernel uses the identical shape.
+/// kernel uses the identical shape, and [`super::reduce`] generalises it
+/// from scalar sums to arbitrary partial results (its spec test lives
+/// there, alongside the public combinator).
 #[inline]
-pub(crate) fn pairwise_split(n: usize) -> usize {
+pub fn pairwise_split(n: usize) -> usize {
     debug_assert!(n > 1);
     let p = usize::BITS - (n - 1).leading_zeros(); // ceil_log2(n)
     1usize << (p - 1)
@@ -269,15 +271,6 @@ mod tests {
         assert_eq!(sum_sequential(&b), 0.5);
         // but deterministic per-order
         assert_eq!(sum_sequential(&a).to_bits(), sum_sequential(&a).to_bits());
-    }
-
-    #[test]
-    fn pairwise_split_spec() {
-        assert_eq!(pairwise_split(9), 8);
-        assert_eq!(pairwise_split(16), 8);
-        assert_eq!(pairwise_split(17), 16);
-        assert_eq!(pairwise_split(1000), 512);
-        assert_eq!(pairwise_split(2), 1);
     }
 
     #[test]
