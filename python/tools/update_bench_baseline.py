@@ -75,7 +75,12 @@ def merge(runs: list[list[dict]]) -> list[dict]:
     merged: dict[tuple, dict] = {}
     for entries in runs:
         for e in entries:
-            if e.get("kernel") not in ("scheduler", "cache", "kv", "journal", "train", "tp"):
+            # "net" rows ride along for the trajectory record; the CI
+            # hard gate deliberately skips them (their alloc counts
+            # include the server's concurrent threads)
+            if e.get("kernel") not in (
+                "scheduler", "cache", "kv", "journal", "train", "tp", "net",
+            ):
                 continue
             k = row_key(e)
             cur = merged.get(k)

@@ -397,8 +397,7 @@ fn main() {
             batch_window,
             max_queue_depth: (depth > 0).then_some(depth),
             cache_capacity: cap,
-            log: false,
-            journal: None,
+            ..Default::default()
         };
         let sched =
             ServeScheduler::sharded_with(Arc::clone(&server), 1, WorkerPool::shared(lanes), cfg)
@@ -705,6 +704,123 @@ fn main() {
                     .num("req_per_s", st.per_sec(tp_queue.len()))
                     .int("allocs_per_call", allocs),
             );
+        }
+    }
+    // TCP loopback front end (ISSUE 10 / DESIGN.md §14): the identical
+    // request stream submitted directly to a ModelRegistry vs pipelined
+    // over a real localhost socket — the measured delta IS the wire tax
+    // (framing + SHA-256 digest both ways, frame decode, two thread
+    // hops, kernel loopback). Bits are gated first: transport may never
+    // change responses. allocs_per_call counts the whole process —
+    // the server's reader/writer threads included — so the loopback row
+    // is only event-sequence-pure because one pipelined client keeps
+    // the arrival order deterministic.
+    section("E5: serve net — direct vs TCP loopback");
+    {
+        use repdl::coordinator::{ModelRegistry, NetClient, NetServer};
+        let mk_reg = || -> Arc<ModelRegistry> {
+            let sched = ServeScheduler::sharded(
+                Arc::clone(&server),
+                1,
+                batch_window,
+                WorkerPool::shared(lanes),
+            )
+            .unwrap();
+            let mut reg = ModelRegistry::new();
+            reg.register(sched).unwrap();
+            Arc::new(reg)
+        };
+        // reference bits: direct in-process registry submission
+        let want: Vec<Tensor> = {
+            let reg = mk_reg();
+            let pending: Vec<_> = queue
+                .iter()
+                .map(|r| reg.submit_with_backpressure("linear", r).unwrap())
+                .collect();
+            reg.flush_all();
+            pending.into_iter().map(|p| p.wait().unwrap()).collect()
+        };
+        // mode=direct: the registry without a socket in front
+        {
+            let reg = mk_reg();
+            let run = || {
+                let pending: Vec<_> = queue
+                    .iter()
+                    .map(|r| reg.submit_with_backpressure("linear", r).unwrap())
+                    .collect();
+                reg.flush_all();
+                for p in pending {
+                    p.wait().unwrap();
+                }
+            };
+            let st = bench_once("serve net direct", samples, &run);
+            let (allocs, _) = allocs_during(&run);
+            serve_entries.push(
+                JsonObj::new()
+                    .s("kernel", "net")
+                    .s("model", "linear")
+                    .s("mode", "direct")
+                    .int("requests", queue.len() as u64)
+                    .int("shards", 1)
+                    .int("clients", 1)
+                    .int("batch_window", batch_window as u64)
+                    .int("pool_lanes", lanes as u64)
+                    .int("d_in", 256)
+                    .int("d_out", 16)
+                    .num("median_ns", st.median_ns)
+                    .num("req_per_s", st.per_sec(queue.len()))
+                    .int("allocs_per_call", allocs),
+            );
+        }
+        // mode=loopback: the same stream through NetServer/NetClient
+        {
+            let reg = mk_reg();
+            let mut net = NetServer::bind(Arc::clone(&reg), "127.0.0.1:0").unwrap();
+            let addr = net.local_addr().to_string();
+            let cl = std::cell::RefCell::new(NetClient::connect(&addr).unwrap());
+            // bit gate: loopback responses == direct submission bits
+            {
+                let mut c = cl.borrow_mut();
+                for r in &queue {
+                    c.send_request("linear", r).unwrap();
+                }
+                c.send_flush("linear").unwrap();
+                for (i, w) in want.iter().enumerate() {
+                    let (_, _, resp) = c.recv_response().unwrap();
+                    assert!(resp.bit_eq(w), "net loopback changed bits at request {i}");
+                }
+                c.recv_flushed().unwrap();
+            }
+            let run = || {
+                let mut c = cl.borrow_mut();
+                for r in &queue {
+                    c.send_request("linear", r).unwrap();
+                }
+                c.send_flush("linear").unwrap();
+                for _ in 0..queue.len() {
+                    c.recv_response().unwrap();
+                }
+                c.recv_flushed().unwrap();
+            };
+            let st = bench_once("serve net loopback", samples, &run);
+            let (allocs, _) = allocs_during(&run);
+            serve_entries.push(
+                JsonObj::new()
+                    .s("kernel", "net")
+                    .s("model", "linear")
+                    .s("mode", "loopback")
+                    .int("requests", queue.len() as u64)
+                    .int("shards", 1)
+                    .int("clients", 1)
+                    .int("batch_window", batch_window as u64)
+                    .int("pool_lanes", lanes as u64)
+                    .int("d_in", 256)
+                    .int("d_out", 16)
+                    .num("median_ns", st.median_ns)
+                    .num("req_per_s", st.per_sec(queue.len()))
+                    .int("allocs_per_call", allocs),
+            );
+            net.shutdown();
         }
     }
     write_bench_json(&bench_json_path("serve"), "serve", &serve_entries)

@@ -20,10 +20,11 @@ pub use train::{
 pub use serve::{
     read_journal, token_key, BatchTrace, CacheStats, DeterministicServer, FaultPlan,
     FaultyWriter, FileJournalWriter, Journal, JournalEvent, JournalPolicy, JournalReadout,
-    JournalStats, JournalWriter, LogEntry, MemoCache, MlpTower, ModelRegistry, ModelTower,
-    NamedTower, PanicAtTicket, Pending, Promotion, RecoveryReport, ReplayReport, ResponseLog,
-    ServeConfig, ServeReplica, ServeReport, ServeScheduler, ServeThroughput, Session,
-    SessionStats, SessionStore, ShardedTower, TransformerTower, VecWriter,
+    JournalStats, JournalWriter, LogEntry, MemoCache, MlpTower, ModelInfo, ModelRegistry,
+    ModelTower, NamedTower, NetClient, NetServer, PanicAtTicket, Pending, Promotion,
+    RecoveryReport, ReplayReport, ResponseLog, ServeConfig, ServeReplica, ServeReport,
+    ServeScheduler, ServeThroughput, Session, SessionStats, SessionStore, ShardedTower,
+    TransformerTower, VecWriter, WireFrame, MAX_WIRE_PAYLOAD, WIRE_MAGIC, WIRE_VERSION,
 };
 pub use trainer::{batch_indices, NumericsMode, OptimizerCfg, TrainReport, Trainer, TrainerConfig};
 pub use verifier::{compare_runs, first_divergence, Comparison};

@@ -155,20 +155,20 @@ pub enum JournalEvent {
 // encoding
 // ---------------------------------------------------------------------
 
-fn put_u32(buf: &mut Vec<u8>, v: u32) {
+pub(super) fn put_u32(buf: &mut Vec<u8>, v: u32) {
     buf.extend_from_slice(&v.to_le_bytes());
 }
 
-fn put_u64(buf: &mut Vec<u8>, v: u64) {
+pub(super) fn put_u64(buf: &mut Vec<u8>, v: u64) {
     buf.extend_from_slice(&v.to_le_bytes());
 }
 
-fn put_str(buf: &mut Vec<u8>, s: &str) {
+pub(super) fn put_str(buf: &mut Vec<u8>, s: &str) {
     put_u64(buf, s.len() as u64);
     buf.extend_from_slice(s.as_bytes());
 }
 
-fn put_tensor(buf: &mut Vec<u8>, t: &Tensor) {
+pub(super) fn put_tensor(buf: &mut Vec<u8>, t: &Tensor) {
     put_u64(buf, t.dims().len() as u64);
     for &d in t.dims() {
         put_u64(buf, d as u64);
@@ -226,32 +226,56 @@ pub fn encode_event(ev: &JournalEvent) -> Vec<u8> {
     buf
 }
 
+/// Bounds-check a payload length against the `u32` frame length field.
+/// Factored out of [`frame`] so the >4 GiB refusal is unit-testable on
+/// a synthetic length without allocating a >4 GiB payload.
+fn frame_len(len: usize) -> Result<u32> {
+    u32::try_from(len).map_err(|_| {
+        Error::journal(format!(
+            "record payload of {len} bytes exceeds the u32 frame length field"
+        ))
+    })
+}
+
 /// Frame one payload into a full journal record:
 /// `u32 LE len ‖ payload ‖ SHA-256(payload)`.
-pub fn frame(payload: &[u8]) -> Vec<u8> {
+///
+/// A payload longer than `u32::MAX` bytes is the typed
+/// [`Error::Journal`]: the length used to be written as
+/// `payload.len() as u32`, which wraps silently and frames a record
+/// whose digest can never verify against its truncated length —
+/// corrupting the journal at append time instead of refusing loudly.
+pub fn frame(payload: &[u8]) -> Result<Vec<u8>> {
+    let len = frame_len(payload.len())?;
     let mut rec = Vec::with_capacity(4 + payload.len() + DIGEST_LEN);
-    put_u32(&mut rec, payload.len() as u32);
+    put_u32(&mut rec, len);
     rec.extend_from_slice(payload);
     let mut h = Sha256::new();
     h.update(payload);
     rec.extend_from_slice(&h.finalize());
-    rec
+    Ok(rec)
 }
 
 // ---------------------------------------------------------------------
 // decoding
 // ---------------------------------------------------------------------
 
-struct Cursor<'a> {
+/// Bounds-checked reader over one record payload. Shared by journal
+/// recovery and the wire codec ([`super::wire`]), so it is hardened
+/// for **untrusted** input: every length prefix is bounded against the
+/// bytes actually remaining *before* it sizes an allocation, and no
+/// path panics — a hostile peer can claim any length it likes, and the
+/// remaining buffer is the only honest upper bound.
+pub(super) struct Cursor<'a> {
     b: &'a [u8],
     off: usize,
 }
 
 impl<'a> Cursor<'a> {
-    fn new(b: &'a [u8]) -> Cursor<'a> {
+    pub(super) fn new(b: &'a [u8]) -> Cursor<'a> {
         Cursor { b, off: 0 }
     }
-    fn bytes(&mut self, n: usize) -> Result<&'a [u8]> {
+    pub(super) fn bytes(&mut self, n: usize) -> Result<&'a [u8]> {
         if self.b.len() - self.off < n {
             return Err(Error::journal(format!(
                 "record payload truncated: wanted {n} bytes at offset {} of {}",
@@ -263,29 +287,46 @@ impl<'a> Cursor<'a> {
         self.off += n;
         Ok(s)
     }
-    fn u8(&mut self) -> Result<u8> {
+    pub(super) fn u8(&mut self) -> Result<u8> {
         Ok(self.bytes(1)?[0])
     }
-    fn u32(&mut self) -> Result<u32> {
-        Ok(u32::from_le_bytes(self.bytes(4)?.try_into().expect("4 bytes")))
+    pub(super) fn u32(&mut self) -> Result<u32> {
+        let b = self.bytes(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
     }
-    fn u64(&mut self) -> Result<u64> {
-        Ok(u64::from_le_bytes(self.bytes(8)?.try_into().expect("8 bytes")))
+    pub(super) fn u64(&mut self) -> Result<u64> {
+        let b = self.bytes(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
     }
-    fn str(&mut self) -> Result<String> {
-        let n = self.u64()? as usize;
+    /// Read a `u64` length prefix and bound it against the remaining
+    /// buffer before it is ever used to size an allocation.
+    pub(super) fn len_prefix(&mut self) -> Result<usize> {
+        let n = self.u64()?;
+        let remaining = self.b.len() - self.off;
+        match usize::try_from(n) {
+            Ok(n) if n <= remaining => Ok(n),
+            _ => Err(Error::journal(format!(
+                "length prefix {n} exceeds the {remaining} bytes remaining"
+            ))),
+        }
+    }
+    pub(super) fn str(&mut self) -> Result<String> {
+        let n = self.len_prefix()?;
         let s = self.bytes(n)?;
         String::from_utf8(s.to_vec())
             .map_err(|_| Error::journal("record payload holds a non-UTF-8 string"))
     }
-    fn tensor(&mut self) -> Result<Tensor> {
-        let rank = self.u64()? as usize;
+    pub(super) fn tensor(&mut self) -> Result<Tensor> {
+        let rank = self.u64()?;
         if rank > 8 {
             return Err(Error::journal(format!("journaled tensor rank {rank} exceeds 8")));
         }
+        let rank = rank as usize;
         let mut dims = Vec::with_capacity(rank);
         for _ in 0..rank {
-            dims.push(self.u64()? as usize);
+            let d = usize::try_from(self.u64()?)
+                .map_err(|_| Error::journal("journaled tensor dim exceeds usize"))?;
+            dims.push(d);
         }
         let numel = dims
             .iter()
@@ -304,7 +345,7 @@ impl<'a> Cursor<'a> {
         Tensor::from_vec(&dims, data)
             .map_err(|e| Error::journal(format!("journaled tensor is malformed: {e}")))
     }
-    fn done(&self) -> Result<()> {
+    pub(super) fn done(&self) -> Result<()> {
         if self.off != self.b.len() {
             return Err(Error::journal(format!(
                 "record payload has {} trailing bytes",
@@ -360,8 +401,16 @@ pub fn scan_payloads(bytes: &[u8]) -> (Vec<&[u8]>, usize) {
         if bytes.len() - off < 4 {
             break;
         }
-        let len = u32::from_le_bytes(bytes[off..off + 4].try_into().expect("4 bytes")) as usize;
-        if bytes.len() - off - 4 < len + DIGEST_LEN {
+        let len =
+            u32::from_le_bytes([bytes[off], bytes[off + 1], bytes[off + 2], bytes[off + 3]])
+                as usize;
+        // checked: on 32-bit targets `len + DIGEST_LEN` can wrap for a
+        // hostile length field, turning a torn tail into a misparse
+        let need = match len.checked_add(DIGEST_LEN) {
+            Some(n) => n,
+            None => break,
+        };
+        if bytes.len() - off - 4 < need {
             break;
         }
         let payload = &bytes[off + 4..off + 4 + len];
@@ -418,16 +467,24 @@ pub fn read_journal(path: &Path) -> Result<JournalReadout> {
     File::open(path)?.read_to_end(&mut bytes)?;
     let hdr = header();
     if bytes.len() < HEADER_LEN {
-        if bytes[..] != hdr[..bytes.len()] {
+        if bytes.is_empty() {
+            return Ok(JournalReadout { events: Vec::new(), torn_bytes: 0 });
+        }
+        // A non-empty sub-header file is only repairable when it is
+        // provably *our* torn header: the full 8-byte magic must be
+        // present and every byte must prefix-match the canonical
+        // header. Anything shorter or different is refused — a
+        // `set_len(0)` on a file we cannot verify would be data loss
+        // masquerading as recovery (mirrors `open_append`'s alien-file
+        // refusal).
+        if bytes.len() < JOURNAL_MAGIC.len() || bytes[..] != hdr[..bytes.len()] {
             return Err(Error::journal(format!(
                 "{} is not a serve journal (bad magic)",
                 path.display()
             )));
         }
         let torn = bytes.len() as u64;
-        if torn > 0 {
-            OpenOptions::new().write(true).open(path)?.set_len(0)?;
-        }
+        OpenOptions::new().write(true).open(path)?.set_len(0)?;
         return Ok(JournalReadout { events: Vec::new(), torn_bytes: torn });
     }
     if bytes[..8] != JOURNAL_MAGIC {
@@ -436,7 +493,7 @@ pub fn read_journal(path: &Path) -> Result<JournalReadout> {
             path.display()
         )));
     }
-    let version = u32::from_le_bytes(bytes[8..HEADER_LEN].try_into().expect("4 bytes"));
+    let version = u32::from_le_bytes([bytes[8], bytes[9], bytes[10], bytes[11]]);
     if version != JOURNAL_VERSION {
         return Err(Error::journal(format!(
             "{}: journal format version {version}, this build reads {JOURNAL_VERSION}",
@@ -580,7 +637,11 @@ impl JournalInner {
         if let Some(msg) = &self.failed {
             return Err(Error::journal(msg.clone()));
         }
-        match self.writer.append(&frame(payload)) {
+        // An oversized payload is unpersistable by *any* writer, so it
+        // is surfaced directly under both policies: the submit fails
+        // typed, no ticket is consumed, and nothing is silently dropped.
+        let rec = frame(payload)?;
+        match self.writer.append(&rec) {
             Ok(()) => {
                 self.appends += 1;
                 Ok(())
@@ -844,7 +905,7 @@ mod tests {
     fn stream(evs: &[JournalEvent]) -> Vec<u8> {
         let mut bytes = Vec::new();
         for ev in evs {
-            bytes.extend_from_slice(&frame(&encode_event(ev)));
+            bytes.extend_from_slice(&frame(&encode_event(ev)).unwrap());
         }
         bytes
     }
@@ -886,7 +947,7 @@ mod tests {
         // recover exactly the records whose full frame survived
         let mut boundaries = vec![0usize];
         for ev in &evs {
-            boundaries.push(boundaries.last().unwrap() + frame(&encode_event(ev)).len());
+            boundaries.push(boundaries.last().unwrap() + frame(&encode_event(ev)).unwrap().len());
         }
         for cut in 0..=bytes.len() {
             let (got, valid) = parse_records(&bytes[..cut]).unwrap();
@@ -902,8 +963,8 @@ mod tests {
         let mut bytes = stream(&evs);
         // corrupt one payload byte of the third record (offset: past two
         // frames, past the length field)
-        let off = frame(&encode_event(&evs[0])).len()
-            + frame(&encode_event(&evs[1])).len()
+        let off = frame(&encode_event(&evs[0])).unwrap().len()
+            + frame(&encode_event(&evs[1])).unwrap().len()
             + 4;
         bytes[off] ^= 0x40;
         let (got, valid) = parse_records(&bytes).unwrap();
@@ -974,6 +1035,112 @@ mod tests {
     }
 
     #[test]
+    fn oversized_payload_is_a_typed_error_not_a_wrapped_length() {
+        // the length check, on a synthetic length — no 4 GiB allocation
+        assert_eq!(frame_len(0).unwrap(), 0);
+        assert_eq!(frame_len(u32::MAX as usize).unwrap(), u32::MAX);
+        #[cfg(target_pointer_width = "64")]
+        match frame_len(u32::MAX as usize + 1) {
+            Err(Error::Journal(m)) => {
+                assert!(m.contains("exceeds the u32 frame length field"), "{m}")
+            }
+            other => panic!("want Error::Journal, got {other:?}"),
+        }
+        // and frame() itself still works on ordinary payloads
+        let rec = frame(b"hello").unwrap();
+        assert_eq!(rec.len(), 4 + 5 + DIGEST_LEN);
+        assert_eq!(&rec[..4], &5u32.to_le_bytes());
+    }
+
+    #[test]
+    fn short_files_are_refused_unless_the_full_magic_verifies() {
+        let dir = std::env::temp_dir().join("repdl-journal-unit");
+        std::fs::create_dir_all(&dir).unwrap();
+        // empty file: a clean (if degenerate) journal, nothing to repair
+        let empty = dir.join("empty.journal");
+        std::fs::write(&empty, b"").unwrap();
+        let out = read_journal(&empty).unwrap();
+        assert!(out.events.is_empty() && out.torn_bytes == 0);
+        // sub-magic prefix match ("REPDL"): cannot verify the magic, so
+        // refuse — and the file must be left untouched, not set_len(0)
+        let short = dir.join("short.bin");
+        std::fs::write(&short, b"REPDL").unwrap();
+        assert!(matches!(read_journal(&short), Err(Error::Journal(_))));
+        assert_eq!(std::fs::metadata(&short).unwrap().len(), 5, "refusal must not truncate");
+        // full magic but a foreign byte after it: refuse, leave intact
+        let foreign = dir.join("foreign.bin");
+        std::fs::write(&foreign, b"REPDLJNL\xff\xff").unwrap();
+        assert!(matches!(read_journal(&foreign), Err(Error::Journal(_))));
+        assert_eq!(std::fs::metadata(&foreign).unwrap().len(), 10);
+        // a verified torn header (full magic + canonical prefix): repaired
+        let torn = dir.join("torn-header.journal");
+        std::fs::write(&torn, &header()[..10]).unwrap();
+        let out = read_journal(&torn).unwrap();
+        assert_eq!(out.torn_bytes, 10);
+        assert_eq!(std::fs::metadata(&torn).unwrap().len(), 0);
+        for p in [&empty, &short, &foreign, &torn] {
+            std::fs::remove_file(p).unwrap();
+        }
+    }
+
+    #[test]
+    fn decoder_bounds_length_prefixes_before_allocating() {
+        // a hash-valid record whose *payload* lies about lengths — the
+        // decoder must bound every claimed length against the remaining
+        // bytes before sizing any allocation, and return a typed error
+        let mut huge_str = vec![TAG_RESPONSE];
+        put_u64(&mut huge_str, 3); // ticket
+        put_u64(&mut huge_str, 0); // batch_id
+        put_u64(&mut huge_str, u64::MAX); // request_hash length: hostile
+        assert!(matches!(decode_event(&huge_str), Err(Error::Journal(_))));
+
+        let mut huge_dim = vec![TAG_SUBMIT];
+        put_u64(&mut huge_dim, 7); // ticket
+        put_u64(&mut huge_dim, 1); // rank
+        put_u64(&mut huge_dim, u64::MAX); // dim: hostile
+        assert!(matches!(decode_event(&huge_dim), Err(Error::Journal(_))));
+
+        let mut huge_rank = vec![TAG_SUBMIT];
+        put_u64(&mut huge_rank, 7);
+        put_u64(&mut huge_rank, u64::MAX); // rank: hostile
+        assert!(matches!(decode_event(&huge_rank), Err(Error::Journal(_))));
+    }
+
+    #[test]
+    fn prop_mutated_streams_never_panic_or_overallocate() {
+        // mutation fuzz over the shared decoder (journal recovery and
+        // the wire codec both ride on it): random byte flips and
+        // truncations of a valid stream must always yield either a
+        // clean torn-tail report or a typed error — never a panic, and
+        // never an allocation sized by an unvalidated length field
+        let base = stream(&events());
+        crate::proptest::forall(
+            0xCAFE,
+            400,
+            |g| {
+                let mut bytes = base.clone();
+                // truncate to a random length...
+                let cut = g.below(bytes.len() + 1);
+                bytes.truncate(cut);
+                // ...then flip up to 4 random bytes
+                for _ in 0..g.below(5) {
+                    if bytes.is_empty() {
+                        break;
+                    }
+                    let i = g.below(bytes.len());
+                    bytes[i] ^= 1 << g.below(8);
+                }
+                bytes
+            },
+            |bytes| match parse_records(bytes) {
+                Ok((_, valid)) => valid <= bytes.len(),
+                Err(Error::Journal(_)) => true,
+                Err(_) => false,
+            },
+        );
+    }
+
+    #[test]
     fn read_journal_physically_truncates_a_torn_tail() {
         let dir = std::env::temp_dir().join("repdl-journal-unit");
         std::fs::create_dir_all(&dir).unwrap();
@@ -987,7 +1154,7 @@ mod tests {
         let clean_len = std::fs::metadata(&path).unwrap().len();
         // simulate a crash mid-append: half a record at the tail
         let mut f = OpenOptions::new().append(true).open(&path).unwrap();
-        let torn = frame(&encode_event(&JournalEvent::FlushCut { upto: 2 }));
+        let torn = frame(&encode_event(&JournalEvent::FlushCut { upto: 2 })).unwrap();
         f.write_all(&torn[..torn.len() - 7]).unwrap();
         drop(f);
         let out = read_journal(&path).unwrap();

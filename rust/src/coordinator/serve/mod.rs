@@ -47,16 +47,24 @@
 //!   rebuilding a bit-identical process from it, and the deterministic
 //!   fault-injection harness ([`FaultPlan`], [`PanicAtTicket`]) that
 //!   proves it under injected crashes.
+//! * [`wire`] + [`net`] — the std-only TCP front end (DESIGN.md §14):
+//!   the journal's `len ‖ payload ‖ SHA-256` framing reused as the
+//!   socket protocol, [`NetServer`] putting a [`ModelRegistry`] behind
+//!   a listener (per-connection FIFO reader/writer threads, typed
+//!   error frames for untrusted bytes, logical-clock flush only) and
+//!   [`NetClient`] speaking it.
 
 pub mod cache;
 pub mod faults;
 pub mod journal;
 pub mod log;
+pub mod net;
 pub mod registry;
 pub mod replica;
 pub mod scheduler;
 pub mod session;
 pub mod tower;
+pub mod wire;
 
 pub use cache::{CacheStats, MemoCache};
 pub use faults::{FaultPlan, FaultyWriter, PanicAtTicket};
@@ -65,13 +73,15 @@ pub use journal::{
     JournalStats, JournalWriter, VecWriter,
 };
 pub use log::{LogEntry, ResponseLog};
-pub use registry::{ModelRegistry, Promotion};
+pub use net::{NetClient, NetServer};
+pub use registry::{ModelInfo, ModelRegistry, Promotion};
 pub use replica::{DeterministicServer, ServeReplica, ServeReport, ServeThroughput};
 pub use scheduler::{
     BatchTrace, Pending, RecoveryReport, ReplayReport, ServeConfig, ServeScheduler,
 };
 pub use session::{token_key, Session, SessionStats, SessionStore};
 pub use tower::{MlpTower, ModelTower, NamedTower, ShardedTower, TransformerTower};
+pub use wire::{WireFrame, MAX_WIRE_PAYLOAD, WIRE_MAGIC, WIRE_VERSION};
 
 use std::sync::{Mutex, MutexGuard};
 

@@ -1,0 +1,484 @@
+//! std-only TCP front end for the serve registry (DESIGN.md §14).
+//!
+//! [`NetServer`] puts a length-prefixed, digest-checked socket protocol
+//! (see [`super::wire`]) in front of a [`ModelRegistry`]: one accept
+//! thread, and per connection one *reader* thread (decode frame →
+//! route) plus one *writer* thread (answer in request order). No
+//! dependencies beyond `std::net` / `std::thread`, no wall-clock
+//! anywhere — batching latency is controlled by the logical clock only
+//! (`flush_every` cuts and explicit [`WireFrame::Flush`] frames;
+//! timers stay banned).
+//!
+//! **Where determinism lives.** The network adds exactly one
+//! nondeterministic input: the order in which request frames from
+//! *different* connections reach the registry gate (OS scheduling of
+//! reader threads). Everything after that gate is already a pure
+//! function of the arrival order — tickets are stamped and shard
+//! queues filled under the same lock ([`super::scheduler`]), and a
+//! journaled server records that order as the submit event sequence.
+//! So cross-process replay is exact: recover the journal in a fresh
+//! process and every response bit is pinned, even though a re-*run*
+//! with racing clients may interleave differently. Per-connection
+//! order is fully deterministic (one reader thread, FIFO frames, FIFO
+//! replies).
+//!
+//! **Untrusted bytes.** Reader threads only ever see socket data
+//! through [`super::wire::read_frame`], which bounds every length
+//! before allocating and types every defect as [`Error::Protocol`] —
+//! a malformed peer gets an error frame and a closed connection,
+//! never a panic and never a poisoned scheduler.
+
+use super::registry::{ModelInfo, ModelRegistry};
+use super::scheduler::Pending;
+use super::wire::{code, read_frame, write_frame, WireFrame, WIRE_VERSION};
+use super::lock_recover;
+use crate::tensor::Tensor;
+use crate::{Error, Result};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+/// One queued reply on a connection's writer channel. The channel *is*
+/// the FIFO contract: the reader enqueues in frame-arrival order, the
+/// writer resolves strictly in that order, so a connection's responses
+/// come back in the order its requests went in.
+enum Reply {
+    /// An admitted request: resolve the pending response, then write
+    /// [`WireFrame::Response`] (or a typed error frame on failure).
+    Answer { req_id: u64, pending: Pending },
+    /// An already-formed frame (errors, flush acks, stats).
+    Immediate(WireFrame),
+}
+
+/// The serve TCP front end: a [`ModelRegistry`] behind a listener.
+///
+/// Bind with [`NetServer::bind`] (use port 0 to let the OS pick, then
+/// read [`NetServer::local_addr`]); stop with [`NetServer::shutdown`]
+/// (also run on drop). Each accepted connection is served until the
+/// peer says [`WireFrame::Bye`], disconnects, or violates the
+/// protocol.
+pub struct NetServer {
+    registry: Arc<ModelRegistry>,
+    local_addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+    conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    conn_streams: Arc<Mutex<Vec<TcpStream>>>,
+}
+
+impl NetServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"`) and start accepting
+    /// connections against `registry`.
+    pub fn bind(registry: Arc<ModelRegistry>, addr: &str) -> Result<NetServer> {
+        let listener = TcpListener::bind(addr)?;
+        let local_addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let conns: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
+        let conn_streams: Arc<Mutex<Vec<TcpStream>>> = Arc::new(Mutex::new(Vec::new()));
+        let accept = {
+            let registry = Arc::clone(&registry);
+            let stop = Arc::clone(&stop);
+            let conns = Arc::clone(&conns);
+            let conn_streams = Arc::clone(&conn_streams);
+            std::thread::spawn(move || {
+                accept_loop(listener, registry, stop, conns, conn_streams)
+            })
+        };
+        Ok(NetServer { registry, local_addr, stop, accept: Some(accept), conns, conn_streams })
+    }
+
+    /// The bound address — read this after binding port 0.
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Stop accepting, tear down live connections, and join every
+    /// thread. Idempotent; also run on drop. The registry itself stays
+    /// open — closing models is its owner's decision.
+    pub fn shutdown(&mut self) {
+        if self.stop.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        // wake the accept loop with a throwaway connection; it checks
+        // the stop flag before handling anything it accepts
+        let _ = TcpStream::connect(self.local_addr);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        // unblock reader threads parked in read_frame
+        for s in lock_recover(&self.conn_streams).drain(..) {
+            let _ = s.shutdown(Shutdown::Both);
+        }
+        // release writer threads parked in Pending::wait on a partial
+        // batch: a flush is a logical event the journal records like
+        // any other, so this stays replay-exact
+        self.registry.flush_all();
+        let handles: Vec<JoinHandle<()>> = lock_recover(&self.conns).drain(..).collect();
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    registry: Arc<ModelRegistry>,
+    stop: Arc<AtomicBool>,
+    conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    conn_streams: Arc<Mutex<Vec<TcpStream>>>,
+) {
+    loop {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                if stop.load(Ordering::SeqCst) {
+                    return;
+                }
+                if let Ok(dup) = stream.try_clone() {
+                    lock_recover(&conn_streams).push(dup);
+                }
+                let registry = Arc::clone(&registry);
+                let h = std::thread::spawn(move || {
+                    // connection-level errors (protocol violations,
+                    // vanished peers) end this connection only; they
+                    // were already answered with an error frame where
+                    // a peer could still hear it
+                    let _ = serve_connection(&registry, stream);
+                });
+                lock_recover(&conns).push(h);
+            }
+            Err(_) => {
+                if stop.load(Ordering::SeqCst) {
+                    return;
+                }
+            }
+        }
+    }
+}
+
+/// Map a registry/scheduler failure to a wire error code.
+fn classify(e: &Error) -> &'static str {
+    match e {
+        Error::Closed => code::CLOSED,
+        Error::Config(m) if m.contains("unknown model id") => code::UNKNOWN_MODEL,
+        Error::Config(_) | Error::Shape(_) => code::BAD_REQUEST,
+        _ => code::INTERNAL,
+    }
+}
+
+fn error_frame(req_id: u64, code: &str, message: impl Into<String>) -> WireFrame {
+    WireFrame::Error { req_id, code: code.to_string(), message: message.into() }
+}
+
+/// Serve one connection to completion: hello handshake, then the
+/// reader loop feeding a FIFO writer thread.
+fn serve_connection(registry: &ModelRegistry, stream: TcpStream) -> Result<()> {
+    let mut reader = stream.try_clone()?;
+    let mut writer = stream.try_clone()?;
+    // handshake, synchronously on this thread: hello must be the first
+    // frame, and its version must match
+    match read_frame(&mut reader) {
+        Ok(Some(WireFrame::HelloClient { version })) if version == WIRE_VERSION => {}
+        Ok(Some(WireFrame::HelloClient { version })) => {
+            let _ = write_frame(
+                &mut writer,
+                &error_frame(
+                    0,
+                    code::PROTOCOL,
+                    format!("unsupported wire version {version} (server speaks {WIRE_VERSION})"),
+                ),
+            );
+            return Err(Error::protocol(format!("unsupported wire version {version}")));
+        }
+        Ok(Some(f)) => {
+            let _ = write_frame(
+                &mut writer,
+                &error_frame(0, code::PROTOCOL, format!("expected hello, got {f:?}")),
+            );
+            return Err(Error::protocol("first frame was not a hello"));
+        }
+        Ok(None) => return Ok(()), // connected and left — fine
+        Err(e) => {
+            let _ = write_frame(&mut writer, &error_frame(0, code::PROTOCOL, e.to_string()));
+            return Err(e);
+        }
+    }
+    write_frame(
+        &mut writer,
+        &WireFrame::HelloServer { version: WIRE_VERSION, models: registry.model_table() },
+    )?;
+    let (tx, rx) = channel::<Reply>();
+    let writer_thread = std::thread::spawn(move || writer_loop(writer, rx));
+    let result = reader_loop(registry, &mut reader, &tx);
+    // dropping the sender ends the writer's queue; it drains whatever
+    // is already enqueued, then exits
+    drop(tx);
+    let _ = writer_thread.join();
+    let _ = stream.shutdown(Shutdown::Both);
+    result
+}
+
+/// Resolve replies strictly in enqueue order and write them out. After
+/// the first write failure (the peer vanished mid-request) the queue is
+/// still drained — but pendings are *dropped*, not waited on: their
+/// batches execute and are journaled regardless, and nobody is left to
+/// read the bits, so blocking a server thread on them would leak.
+fn writer_loop(mut w: TcpStream, rx: Receiver<Reply>) {
+    let mut alive = true;
+    for reply in rx {
+        let frame = match reply {
+            Reply::Immediate(f) => f,
+            Reply::Answer { req_id, pending } => {
+                if !alive {
+                    drop(pending);
+                    continue;
+                }
+                let ticket = pending.ticket();
+                match pending.wait() {
+                    Ok(response) => WireFrame::Response { req_id, ticket, response },
+                    Err(e) => error_frame(req_id, classify(&e), e.to_string()),
+                }
+            }
+        };
+        if alive && write_frame(&mut w, &frame).is_err() {
+            alive = false;
+        }
+    }
+}
+
+/// Decode and route frames until the peer is done. Per-request
+/// failures (unknown model, bad shape) answer with a typed error frame
+/// and keep the connection; protocol violations answer with a
+/// [`code::PROTOCOL`] frame and close it.
+fn reader_loop(
+    registry: &ModelRegistry,
+    reader: &mut TcpStream,
+    tx: &Sender<Reply>,
+) -> Result<()> {
+    loop {
+        let frame = match read_frame(reader) {
+            Ok(Some(f)) => f,
+            Ok(None) => return Ok(()), // clean disconnect between frames
+            Err(Error::Protocol(m)) => {
+                let _ = tx.send(Reply::Immediate(error_frame(0, code::PROTOCOL, m.clone())));
+                return Err(Error::Protocol(m));
+            }
+            Err(e) => return Err(e),
+        };
+        let reply = match frame {
+            WireFrame::Request { req_id, model_id, request } => {
+                // backpressure is absorbed here (flush-and-retry is
+                // the admission protocol, not an error a remote client
+                // can act on); every other failure is typed per request
+                match registry.submit_with_backpressure(&model_id, &request) {
+                    Ok(pending) => Reply::Answer { req_id, pending },
+                    Err(e) => Reply::Immediate(error_frame(req_id, classify(&e), e.to_string())),
+                }
+            }
+            WireFrame::Flush { req_id, model_id } => {
+                let res = if model_id.is_empty() {
+                    registry.flush_all();
+                    Ok(())
+                } else {
+                    registry.flush(&model_id)
+                };
+                Reply::Immediate(match res {
+                    Ok(()) => WireFrame::Flushed { req_id },
+                    Err(e) => error_frame(req_id, classify(&e), e.to_string()),
+                })
+            }
+            WireFrame::Stats { req_id, model_id } => {
+                Reply::Immediate(match registry.get(&model_id) {
+                    Some(s) => WireFrame::StatsReply {
+                        req_id,
+                        next_ticket: s.next_ticket(),
+                        in_flight: s.in_flight(),
+                        rejected: s.rejected(),
+                        journal_appends: s.journal_stats().map_or(0, |j| j.appends),
+                    },
+                    None => error_frame(
+                        req_id,
+                        code::UNKNOWN_MODEL,
+                        format!("model registry: unknown model id '{model_id}'"),
+                    ),
+                })
+            }
+            WireFrame::Bye => return Ok(()),
+            other => {
+                // server-role frames (hello-server, response, …) from
+                // a client are a protocol violation: close
+                let _ = tx.send(Reply::Immediate(error_frame(
+                    0,
+                    code::PROTOCOL,
+                    format!("unexpected frame from client: {other:?}"),
+                )));
+                return Err(Error::protocol("client sent a server-role frame"));
+            }
+        };
+        if tx.send(reply).is_err() {
+            return Ok(()); // writer gone ⇒ connection is down
+        }
+    }
+}
+
+/// A synchronous client for the serve wire protocol.
+///
+/// Connecting performs the hello handshake and learns the server's
+/// model table — shapes and weight fingerprints come from the server,
+/// the client never guesses. Requests are **pipelined**: call
+/// [`NetClient::send_request`] any number of times, publish a cut with
+/// [`NetClient::flush`] (unless the server's batch window or
+/// `flush_every` does it), then collect with
+/// [`NetClient::recv_response`] — replies arrive in send order
+/// (per-connection FIFO is part of the protocol). For strict
+/// one-at-a-time use, [`NetClient::request_flushed`] bundles
+/// send + flush + recv.
+pub struct NetClient {
+    stream: TcpStream,
+    models: Vec<ModelInfo>,
+    next_req: u64,
+}
+
+impl NetClient {
+    /// Connect and complete the hello handshake.
+    pub fn connect(addr: &str) -> Result<NetClient> {
+        let mut stream = TcpStream::connect(addr)?;
+        write_frame(&mut stream, &WireFrame::HelloClient { version: WIRE_VERSION })?;
+        match read_frame(&mut stream)? {
+            Some(WireFrame::HelloServer { version, models }) if version == WIRE_VERSION => {
+                Ok(NetClient { stream, models, next_req: 0 })
+            }
+            Some(WireFrame::HelloServer { version, .. }) => Err(Error::protocol(format!(
+                "server speaks wire version {version}, client speaks {WIRE_VERSION}"
+            ))),
+            Some(WireFrame::Error { code, message, .. }) => {
+                Err(Error::protocol(format!("server refused hello [{code}]: {message}")))
+            }
+            Some(f) => Err(Error::protocol(format!("expected server hello, got {f:?}"))),
+            None => Err(Error::protocol("server closed the connection during hello")),
+        }
+    }
+
+    /// The server's model table, as advertised in its hello.
+    pub fn models(&self) -> &[ModelInfo] {
+        &self.models
+    }
+
+    /// One model's identity row, by id.
+    pub fn model(&self, model_id: &str) -> Option<&ModelInfo> {
+        self.models.iter().find(|m| m.model_id == model_id)
+    }
+
+    fn next_req_id(&mut self) -> u64 {
+        self.next_req += 1;
+        self.next_req
+    }
+
+    /// Send one request frame (no waiting). Returns the correlation id
+    /// the response will echo.
+    pub fn send_request(&mut self, model_id: &str, request: &Tensor) -> Result<u64> {
+        let req_id = self.next_req_id();
+        write_frame(
+            &mut self.stream,
+            &WireFrame::Request {
+                req_id,
+                model_id: model_id.to_string(),
+                request: request.clone(),
+            },
+        )?;
+        Ok(req_id)
+    }
+
+    /// Send a flush frame (`""` flushes every model). The
+    /// [`WireFrame::Flushed`] ack arrives in FIFO position — after the
+    /// responses to every request sent before it.
+    pub fn send_flush(&mut self, model_id: &str) -> Result<u64> {
+        let req_id = self.next_req_id();
+        write_frame(
+            &mut self.stream,
+            &WireFrame::Flush { req_id, model_id: model_id.to_string() },
+        )?;
+        Ok(req_id)
+    }
+
+    /// Read the next frame, whatever it is.
+    pub fn recv(&mut self) -> Result<WireFrame> {
+        match read_frame(&mut self.stream)? {
+            Some(f) => Ok(f),
+            None => Err(Error::protocol("server closed the connection")),
+        }
+    }
+
+    /// Read the next frame, requiring a response: returns
+    /// `(req_id, ticket, response)`. A server error frame becomes a
+    /// typed [`Error::Runtime`] carrying its code and message.
+    pub fn recv_response(&mut self) -> Result<(u64, u64, Tensor)> {
+        match self.recv()? {
+            WireFrame::Response { req_id, ticket, response } => Ok((req_id, ticket, response)),
+            WireFrame::Error { code, message, .. } => {
+                Err(Error::runtime(format!("server error [{code}]: {message}")))
+            }
+            f => Err(Error::protocol(format!("expected response, got {f:?}"))),
+        }
+    }
+
+    /// Read the next frame, requiring a flush ack; returns its req_id.
+    pub fn recv_flushed(&mut self) -> Result<u64> {
+        match self.recv()? {
+            WireFrame::Flushed { req_id } => Ok(req_id),
+            WireFrame::Error { code, message, .. } => {
+                Err(Error::runtime(format!("server error [{code}]: {message}")))
+            }
+            f => Err(Error::protocol(format!("expected flush ack, got {f:?}"))),
+        }
+    }
+
+    /// One-at-a-time convenience: send, flush the model, read the
+    /// response and the flush ack. Returns `(ticket, response)`.
+    pub fn request_flushed(&mut self, model_id: &str, request: &Tensor) -> Result<(u64, Tensor)> {
+        let req_id = self.send_request(model_id, request)?;
+        self.send_flush(model_id)?;
+        let (got, ticket, response) = self.recv_response()?;
+        if got != req_id {
+            return Err(Error::protocol(format!(
+                "response correlation id {got} does not match request {req_id} (FIFO broken)"
+            )));
+        }
+        self.recv_flushed()?;
+        Ok((ticket, response))
+    }
+
+    /// Fetch one model's logical counters: `(next_ticket, in_flight,
+    /// rejected, journal_appends)`. Call at a quiet point — the reply
+    /// rides the same FIFO as responses.
+    pub fn stats(&mut self, model_id: &str) -> Result<(u64, u64, u64, u64)> {
+        let req_id = self.next_req_id();
+        write_frame(
+            &mut self.stream,
+            &WireFrame::Stats { req_id, model_id: model_id.to_string() },
+        )?;
+        match self.recv()? {
+            WireFrame::StatsReply { next_ticket, in_flight, rejected, journal_appends, .. } => {
+                Ok((next_ticket, in_flight, rejected, journal_appends))
+            }
+            WireFrame::Error { code, message, .. } => {
+                Err(Error::runtime(format!("server error [{code}]: {message}")))
+            }
+            f => Err(Error::protocol(format!("expected stats reply, got {f:?}"))),
+        }
+    }
+
+    /// Orderly goodbye: tell the server we are done and close.
+    pub fn bye(mut self) -> Result<()> {
+        write_frame(&mut self.stream, &WireFrame::Bye)?;
+        let _ = self.stream.shutdown(Shutdown::Both);
+        Ok(())
+    }
+}

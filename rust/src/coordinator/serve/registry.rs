@@ -59,6 +59,24 @@ pub struct ModelRegistry {
     aliases: BTreeMap<String, String>,
 }
 
+/// One row of [`ModelRegistry::model_table`]: everything a network
+/// client needs to form a valid request for (and audit a response
+/// from) a served model. Sent in the wire hello (see [`super::wire`]),
+/// so a client never guesses shapes — and the `weights_hash` lets two
+/// clients on different machines verify they are talking to
+/// bit-identical weights before comparing response bits.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ModelInfo {
+    /// Routing id (the key [`ModelRegistry::submit`] resolves).
+    pub model_id: String,
+    /// Parameter fingerprint of the serving tower.
+    pub weights_hash: String,
+    /// Request length in f32 elements.
+    pub d_in: u64,
+    /// Response length in f32 elements.
+    pub d_out: u64,
+}
+
 /// Outcome of [`ModelRegistry::promote`]: where the checkpoint now
 /// serves and the deterministic swap point.
 #[derive(Clone, Debug)]
@@ -107,6 +125,22 @@ impl ModelRegistry {
     /// Registered model ids, in deterministic (sorted) order.
     pub fn model_ids(&self) -> Vec<String> {
         self.models.keys().cloned().collect()
+    }
+
+    /// Identity rows for every registered model, in deterministic
+    /// (sorted-id) order — the payload of the wire hello. A pure
+    /// function of the registry contents: two servers built from the
+    /// same models advertise byte-identical tables.
+    pub fn model_table(&self) -> Vec<ModelInfo> {
+        self.models
+            .iter()
+            .map(|(id, sched)| ModelInfo {
+                model_id: id.clone(),
+                weights_hash: sched.weights_hash().to_string(),
+                d_in: sched.d_in() as u64,
+                d_out: sched.d_out() as u64,
+            })
+            .collect()
     }
 
     /// Number of registered models.

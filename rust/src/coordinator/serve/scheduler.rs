@@ -182,6 +182,18 @@ pub struct ServeConfig {
     /// construction; a non-fresh one is expected to go through
     /// [`ServeScheduler::recover`] before any new submits.
     pub journal: Option<Arc<Journal>>,
+    /// Logical-clock flush: publish a flush cut automatically whenever
+    /// the ticket counter reaches a multiple of `K` (≥ 1 when set;
+    /// `None` = only explicit [`ServeScheduler::flush`] calls cut).
+    /// This is the deterministic replacement for a wall-clock batching
+    /// timer, which stays banned by design: the cut points are a pure
+    /// function of the submit count, so batch composition remains a
+    /// function of the logical event sequence — and since the every-K
+    /// cuts are journaled like any explicit flush, recovery replays
+    /// them exactly. Gives latency control at low load (a lone request
+    /// no longer waits for a full window) without admitting time into
+    /// the event stream.
+    pub flush_every: Option<u64>,
 }
 
 impl Default for ServeConfig {
@@ -192,6 +204,7 @@ impl Default for ServeConfig {
             cache_capacity: 0,
             log: false,
             journal: None,
+            flush_every: None,
         }
     }
 }
@@ -273,6 +286,7 @@ pub struct ServeScheduler {
     tower: Arc<dyn ModelTower>,
     batch_window: usize,
     max_queue_depth: Option<usize>,
+    flush_every: Option<u64>,
     cache: Option<Arc<MemoCache>>,
     log: Option<Arc<ResponseLog>>,
     journal: Option<Arc<Journal>>,
@@ -305,6 +319,11 @@ impl ServeScheduler {
         if cfg.max_queue_depth == Some(0) {
             return Err(Error::config(
                 "serve scheduler: max queue depth must be >= 1 when set (0 rejects everything)",
+            ));
+        }
+        if cfg.flush_every == Some(0) {
+            return Err(Error::config(
+                "serve scheduler: flush_every must be >= 1 when set (0 never divides a ticket)",
             ));
         }
         // every replica must serve the *same model*: identical id,
@@ -407,6 +426,7 @@ impl ServeScheduler {
             tower,
             batch_window,
             max_queue_depth: cfg.max_queue_depth,
+            flush_every: cfg.flush_every,
             cache,
             log,
             journal,
@@ -577,8 +597,46 @@ impl ServeScheduler {
                 shard.cv.notify_one();
             }
         }
+        // the logical-clock flush: every K-th admitted ticket publishes
+        // a cut, under the same gate hold and AFTER the enqueue — so
+        // the cut never names a ticket its shard queue does not yet
+        // hold, and the cut points are a pure function of the submit
+        // count (journaled like any explicit flush, so recovery and
+        // replay see the identical event sequence)
+        if let Some(k) = self.flush_every {
+            if gate.next_ticket % k == 0 {
+                let upto = gate.next_ticket;
+                self.publish_cut(&mut gate, upto);
+            }
+        }
         drop(gate);
         Ok(Pending { ticket, rx })
+    }
+
+    /// Publish a flush cut at `upto` while already holding the gate —
+    /// the shared core of [`ServeScheduler::flush`] and the every-K
+    /// logical-clock flush inside [`ServeScheduler::submit`]. Takes the
+    /// shard queue locks under the gate (the crate-wide gate → shard.q
+    /// lock order), so every shard sees the same cut sequence.
+    fn publish_cut(&self, gate: &mut Gate, upto: u64) {
+        // the flush event is the admission logical clock: everything
+        // admitted so far is now cut into formed batches, so it no
+        // longer counts against the queue-depth cap
+        gate.flushed_upto = upto;
+        // journal every flush event under the gate (recovery dedups):
+        // cut publication cannot surface errors, so a fail-stop journal
+        // error latches in the journal and refuses the NEXT submit
+        // instead — loud, just one event late
+        if let Some(j) = &self.journal {
+            let _ = j.append_flush(upto);
+        }
+        for shard in self.shards.iter() {
+            let mut q = lock_recover(&shard.q);
+            if upto > 0 && q.cuts.back().map_or(true, |&b| upto > b) {
+                q.cuts.push_back(upto);
+            }
+            shard.cv.notify_one();
+        }
     }
 
     /// Force every ticket assigned so far out, in (possibly partial)
@@ -597,24 +655,7 @@ impl ServeScheduler {
         // shards but be suppressed on others
         let mut gate = lock_recover(&self.gate);
         let upto = gate.next_ticket;
-        // the flush event is the admission logical clock: everything
-        // admitted so far is now cut into formed batches, so it no
-        // longer counts against the queue-depth cap
-        gate.flushed_upto = upto;
-        // journal every flush event under the gate (recovery dedups):
-        // `flush` cannot surface errors, so a fail-stop journal error
-        // latches in the journal and refuses the NEXT submit instead —
-        // loud, just one event late
-        if let Some(j) = &self.journal {
-            let _ = j.append_flush(upto);
-        }
-        for shard in self.shards.iter() {
-            let mut q = lock_recover(&shard.q);
-            if upto > 0 && q.cuts.back().map_or(true, |&b| upto > b) {
-                q.cuts.push_back(upto);
-            }
-            shard.cv.notify_one();
-        }
+        self.publish_cut(&mut gate, upto);
         drop(gate);
     }
 
@@ -1383,6 +1424,39 @@ mod tests {
                 "round {round}: flush cuts must segment batches"
             );
         }
+    }
+
+    #[test]
+    fn every_k_logical_flush_cuts_without_explicit_flush_calls() {
+        // flush_every = 3 under a window far too large to fire on its
+        // own: the cut points must be a pure function of the submit
+        // count, so the batch trace is exactly the K-chunking
+        let srv = server(16, 4, 8);
+        let sched = ServeScheduler::sharded_with(
+            Arc::clone(&srv),
+            1,
+            WorkerPool::shared(1),
+            ServeConfig { batch_window: 100, flush_every: Some(3), ..Default::default() },
+        )
+        .unwrap();
+        let q = queue(7, 16, 400);
+        let pending: Vec<_> = q.iter().map(|r| sched.submit(r.clone()).unwrap()).collect();
+        sched.close(); // drains the un-cut tail (ticket 6)
+        for p in pending {
+            p.wait().unwrap();
+        }
+        let got: Vec<Vec<u64>> = sched.trace().into_iter().map(|b| b.tickets).collect();
+        assert_eq!(got, vec![vec![0, 1, 2], vec![3, 4, 5], vec![6]]);
+        // and the every-K cut releases admission capacity like any flush
+        assert_eq!(sched.in_flight(), 1, "tickets past the last cut stay in flight");
+        // flush_every = 0 is a config error, not an infinite loop
+        assert!(ServeScheduler::sharded_with(
+            srv,
+            1,
+            WorkerPool::shared(1),
+            ServeConfig { flush_every: Some(0), ..Default::default() },
+        )
+        .is_err());
     }
 
     #[test]

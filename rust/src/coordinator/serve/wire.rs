@@ -1,0 +1,539 @@
+//! Wire codec for the serve TCP front end (DESIGN.md §14).
+//!
+//! The network protocol reuses the journal's record framing verbatim:
+//! every frame on the socket is `u32 LE len ‖ payload ‖
+//! SHA-256(payload)` ([`super::journal::frame`]), and every payload is
+//! `tag byte + LE fields` decoded through the journal's hardened
+//! [`super::journal::Cursor`]. One codec, two transports — the framing
+//! that makes journal files torn-tail-detectable makes socket streams
+//! corruption-detectable, and hardening the shared decoder hardens
+//! both.
+//!
+//! **Trust model.** Socket bytes are *untrusted*: a malformed frame
+//! must never panic, never size an allocation from an unvalidated
+//! length field, and never be mistaken for local journal corruption.
+//! Frame payloads are bounded by [`MAX_WIRE_PAYLOAD`] *before*
+//! allocation, every decode failure is surfaced as the typed
+//! [`Error::Protocol`], and the per-frame digest rejects line noise
+//! before the payload decoder ever runs.
+//!
+//! **Determinism scope.** The wire carries logical events only — no
+//! timestamps, no connection ids reach any encoder — so everything
+//! downstream of frame decode (ticket assignment, batch composition,
+//! response bits) stays a pure function of the logical event sequence.
+//! See [`super::net`] for the accept-order → ticket-order argument.
+
+use super::journal::{frame, put_str, put_tensor, put_u32, put_u64, Cursor};
+use super::registry::ModelInfo;
+use crate::sha256::Sha256;
+use crate::tensor::Tensor;
+use crate::{Error, Result};
+use std::io::{Read, Write};
+
+/// Hello magic: identifies a RepDL serve wire peer (8 bytes). Distinct
+/// from the journal file magic — a journal shipped down a socket (or a
+/// socket stream written to disk) must never parse as the other.
+pub const WIRE_MAGIC: [u8; 8] = *b"REPDLNET";
+/// Wire protocol version (bumped on any framing/payload change).
+pub const WIRE_VERSION: u32 = 1;
+/// Hard per-frame payload bound, enforced *before* any allocation on
+/// the receive path. Generous for request/response tensors (16M f32
+/// elements) while capping what a hostile length field can make the
+/// server reserve.
+pub const MAX_WIRE_PAYLOAD: usize = 64 * 1024 * 1024;
+/// Digest length appended to every frame (same framing as the journal).
+const DIGEST_LEN: usize = 32;
+
+const TAG_HELLO_CLIENT: u8 = 0;
+const TAG_HELLO_SERVER: u8 = 1;
+const TAG_REQUEST: u8 = 2;
+const TAG_RESPONSE: u8 = 3;
+const TAG_FLUSH: u8 = 4;
+const TAG_FLUSHED: u8 = 5;
+const TAG_STATS: u8 = 6;
+const TAG_STATS_REPLY: u8 = 7;
+const TAG_ERROR: u8 = 8;
+const TAG_BYE: u8 = 9;
+
+/// Error codes carried in [`WireFrame::Error`] — strings, not numerics,
+/// so a hand-rolled client can match them without a shared enum.
+pub mod code {
+    /// Malformed frame or protocol-order violation; the server closes
+    /// the connection after sending this.
+    pub const PROTOCOL: &str = "protocol";
+    /// The request named a model id the registry does not serve.
+    pub const UNKNOWN_MODEL: &str = "unknown-model";
+    /// The request tensor failed the tower's validation (shape, token
+    /// domain) — typed per request, the connection stays up.
+    pub const BAD_REQUEST: &str = "bad-request";
+    /// The scheduler was closed while the request was in flight.
+    pub const CLOSED: &str = "closed";
+    /// Server-side execution failure (tower error, journal fail-stop).
+    pub const INTERNAL: &str = "internal";
+}
+
+/// One wire frame, as exchanged between [`super::net::NetClient`] and
+/// [`super::net::NetServer`]. Every variant's encoding is a pure
+/// function of its fields.
+#[derive(Clone, Debug, PartialEq)]
+pub enum WireFrame {
+    /// First frame on every connection, client → server: magic +
+    /// version. A server refuses a version it does not speak.
+    HelloClient {
+        /// The client's wire protocol version.
+        version: u32,
+    },
+    /// The server's reply to a valid hello: its version and the full
+    /// model table (id, weights fingerprint, shapes) — a client never
+    /// guesses request shapes, and can verify cross-machine weight
+    /// identity before comparing response bits.
+    HelloServer {
+        /// The server's wire protocol version.
+        version: u32,
+        /// Identity rows for every served model, in sorted-id order.
+        models: Vec<ModelInfo>,
+    },
+    /// One inference request. `req_id` is a client-chosen correlation
+    /// id echoed on the response — per-connection FIFO makes it
+    /// redundant, but it keeps client bookkeeping trivial.
+    Request {
+        /// Client correlation id, echoed verbatim.
+        req_id: u64,
+        /// Routing id (see [`super::ModelRegistry::submit`]).
+        model_id: String,
+        /// The request tensor (shape-framed f32 bit patterns — exact).
+        request: Tensor,
+    },
+    /// One inference response: the admission ticket the request drew
+    /// (the server-side logical position, for audit against a journal)
+    /// and the exact response bits.
+    Response {
+        /// Echoed client correlation id.
+        req_id: u64,
+        /// The server-side admission ticket this request was stamped
+        /// with in its model's ticket space.
+        ticket: u64,
+        /// The response tensor.
+        response: Tensor,
+    },
+    /// Explicit client-driven flush — the logical-clock latency control
+    /// (`""` as the model id flushes every model). Answered with
+    /// [`WireFrame::Flushed`] after the cut is published.
+    Flush {
+        /// Client correlation id, echoed on the `Flushed` reply.
+        req_id: u64,
+        /// Model to flush; empty string = all models.
+        model_id: String,
+    },
+    /// Acknowledges a [`WireFrame::Flush`]: the cut is published.
+    Flushed {
+        /// Echoed client correlation id.
+        req_id: u64,
+    },
+    /// Request one model's logical counters.
+    Stats {
+        /// Client correlation id, echoed on the reply.
+        req_id: u64,
+        /// Model to report on.
+        model_id: String,
+    },
+    /// The counters — all logical (ticket arithmetic and append
+    /// counts), so two identical runs report identical stats.
+    StatsReply {
+        /// Echoed client correlation id.
+        req_id: u64,
+        /// Next unassigned ticket (= admitted count).
+        next_ticket: u64,
+        /// Tickets admitted since the latest flush cut.
+        in_flight: u64,
+        /// Depth-cap rejections so far.
+        rejected: u64,
+        /// Journal records appended (0 when unjournaled).
+        journal_appends: u64,
+    },
+    /// A typed failure for one request (or for the connection, when
+    /// `code` is [`code::PROTOCOL`]). Never a panic, never a hang.
+    Error {
+        /// Echoed client correlation id (0 when no request parsed).
+        req_id: u64,
+        /// Machine-matchable error class (see [`code`]).
+        code: String,
+        /// Human-readable detail.
+        message: String,
+    },
+    /// Orderly goodbye: the peer is done and will close.
+    Bye,
+}
+
+/// Encode one frame's payload (tag byte + LE fields).
+pub fn encode_frame(f: &WireFrame) -> Vec<u8> {
+    let mut buf = Vec::new();
+    match f {
+        WireFrame::HelloClient { version } => {
+            buf.push(TAG_HELLO_CLIENT);
+            buf.extend_from_slice(&WIRE_MAGIC);
+            put_u32(&mut buf, *version);
+        }
+        WireFrame::HelloServer { version, models } => {
+            buf.push(TAG_HELLO_SERVER);
+            put_u32(&mut buf, *version);
+            put_u64(&mut buf, models.len() as u64);
+            for m in models {
+                put_str(&mut buf, &m.model_id);
+                put_str(&mut buf, &m.weights_hash);
+                put_u64(&mut buf, m.d_in);
+                put_u64(&mut buf, m.d_out);
+            }
+        }
+        WireFrame::Request { req_id, model_id, request } => {
+            buf.push(TAG_REQUEST);
+            put_u64(&mut buf, *req_id);
+            put_str(&mut buf, model_id);
+            put_tensor(&mut buf, request);
+        }
+        WireFrame::Response { req_id, ticket, response } => {
+            buf.push(TAG_RESPONSE);
+            put_u64(&mut buf, *req_id);
+            put_u64(&mut buf, *ticket);
+            put_tensor(&mut buf, response);
+        }
+        WireFrame::Flush { req_id, model_id } => {
+            buf.push(TAG_FLUSH);
+            put_u64(&mut buf, *req_id);
+            put_str(&mut buf, model_id);
+        }
+        WireFrame::Flushed { req_id } => {
+            buf.push(TAG_FLUSHED);
+            put_u64(&mut buf, *req_id);
+        }
+        WireFrame::Stats { req_id, model_id } => {
+            buf.push(TAG_STATS);
+            put_u64(&mut buf, *req_id);
+            put_str(&mut buf, model_id);
+        }
+        WireFrame::StatsReply { req_id, next_ticket, in_flight, rejected, journal_appends } => {
+            buf.push(TAG_STATS_REPLY);
+            put_u64(&mut buf, *req_id);
+            put_u64(&mut buf, *next_ticket);
+            put_u64(&mut buf, *in_flight);
+            put_u64(&mut buf, *rejected);
+            put_u64(&mut buf, *journal_appends);
+        }
+        WireFrame::Error { req_id, code, message } => {
+            buf.push(TAG_ERROR);
+            put_u64(&mut buf, *req_id);
+            put_str(&mut buf, code);
+            put_str(&mut buf, message);
+        }
+        WireFrame::Bye => buf.push(TAG_BYE),
+    }
+    buf
+}
+
+/// Re-class a shared-decoder failure for the wire: the cursor reports
+/// [`Error::Journal`] (its trusted-file caller), but on the socket the
+/// same defect is a peer protocol violation.
+fn as_protocol(e: Error) -> Error {
+    match e {
+        Error::Journal(m) => Error::Protocol(m),
+        other => other,
+    }
+}
+
+/// Decode one digest-verified frame payload. Every failure is the typed
+/// [`Error::Protocol`]; no path panics or allocates beyond the payload
+/// it was handed (the shared cursor bounds every claimed length against
+/// the remaining bytes first).
+pub fn decode_frame(payload: &[u8]) -> Result<WireFrame> {
+    let mut c = Cursor::new(payload);
+    let f = match c.u8().map_err(as_protocol)? {
+        TAG_HELLO_CLIENT => {
+            let magic = c.bytes(8).map_err(as_protocol)?;
+            if magic != WIRE_MAGIC {
+                return Err(Error::protocol("bad hello magic — not a repdl wire peer"));
+            }
+            WireFrame::HelloClient { version: c.u32().map_err(as_protocol)? }
+        }
+        TAG_HELLO_SERVER => {
+            let version = c.u32().map_err(as_protocol)?;
+            let n = c.u64().map_err(as_protocol)?;
+            // no capacity pre-reservation from the claimed count: each
+            // decoded row consumes ≥ 32 payload bytes or errors, so
+            // memory stays bounded by the (already-bounded) payload
+            let mut models = Vec::new();
+            for _ in 0..n {
+                models.push(ModelInfo {
+                    model_id: c.str().map_err(as_protocol)?,
+                    weights_hash: c.str().map_err(as_protocol)?,
+                    d_in: c.u64().map_err(as_protocol)?,
+                    d_out: c.u64().map_err(as_protocol)?,
+                });
+            }
+            WireFrame::HelloServer { version, models }
+        }
+        TAG_REQUEST => WireFrame::Request {
+            req_id: c.u64().map_err(as_protocol)?,
+            model_id: c.str().map_err(as_protocol)?,
+            request: c.tensor().map_err(as_protocol)?,
+        },
+        TAG_RESPONSE => WireFrame::Response {
+            req_id: c.u64().map_err(as_protocol)?,
+            ticket: c.u64().map_err(as_protocol)?,
+            response: c.tensor().map_err(as_protocol)?,
+        },
+        TAG_FLUSH => WireFrame::Flush {
+            req_id: c.u64().map_err(as_protocol)?,
+            model_id: c.str().map_err(as_protocol)?,
+        },
+        TAG_FLUSHED => WireFrame::Flushed { req_id: c.u64().map_err(as_protocol)? },
+        TAG_STATS => WireFrame::Stats {
+            req_id: c.u64().map_err(as_protocol)?,
+            model_id: c.str().map_err(as_protocol)?,
+        },
+        TAG_STATS_REPLY => WireFrame::StatsReply {
+            req_id: c.u64().map_err(as_protocol)?,
+            next_ticket: c.u64().map_err(as_protocol)?,
+            in_flight: c.u64().map_err(as_protocol)?,
+            rejected: c.u64().map_err(as_protocol)?,
+            journal_appends: c.u64().map_err(as_protocol)?,
+        },
+        TAG_ERROR => WireFrame::Error {
+            req_id: c.u64().map_err(as_protocol)?,
+            code: c.str().map_err(as_protocol)?,
+            message: c.str().map_err(as_protocol)?,
+        },
+        TAG_BYE => WireFrame::Bye,
+        tag => return Err(Error::protocol(format!("unknown wire frame tag {tag}"))),
+    };
+    c.done().map_err(as_protocol)?;
+    Ok(f)
+}
+
+/// Write one frame to a socket (journal framing: `u32 LE len ‖ payload
+/// ‖ SHA-256(payload)`), then flush the stream.
+pub fn write_frame(w: &mut impl Write, f: &WireFrame) -> Result<()> {
+    let payload = encode_frame(f);
+    if payload.len() > MAX_WIRE_PAYLOAD {
+        return Err(Error::protocol(format!(
+            "outgoing frame payload of {} bytes exceeds MAX_WIRE_PAYLOAD ({MAX_WIRE_PAYLOAD})",
+            payload.len()
+        )));
+    }
+    let rec = frame(&payload).map_err(as_protocol)?;
+    w.write_all(&rec)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one frame from a socket. Returns `Ok(None)` on a clean EOF at
+/// a frame boundary (the peer closed between frames); every other
+/// defect — EOF mid-frame, a length field past [`MAX_WIRE_PAYLOAD`], a
+/// digest mismatch, a payload that fails [`decode_frame`] — is the
+/// typed [`Error::Protocol`]. The length bound is enforced **before**
+/// the payload buffer is allocated: a hostile 4-byte length prefix can
+/// make this function read at most `MAX_WIRE_PAYLOAD + 32` bytes, never
+/// reserve 4 GiB.
+pub fn read_frame(r: &mut impl Read) -> Result<Option<WireFrame>> {
+    // length prefix, tolerating clean EOF before its first byte
+    let mut len_buf = [0u8; 4];
+    let mut got = 0usize;
+    while got < 4 {
+        match r.read(&mut len_buf[got..]) {
+            Ok(0) if got == 0 => return Ok(None),
+            Ok(0) => {
+                return Err(Error::protocol(format!(
+                    "connection closed mid-frame ({got} of 4 length bytes)"
+                )))
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(Error::Io(e)),
+        }
+    }
+    let len = u32::from_le_bytes(len_buf) as usize;
+    if len > MAX_WIRE_PAYLOAD {
+        return Err(Error::protocol(format!(
+            "incoming frame claims {len} payload bytes, limit is {MAX_WIRE_PAYLOAD}"
+        )));
+    }
+    let mut body = vec![0u8; len + DIGEST_LEN];
+    r.read_exact(&mut body).map_err(|e| {
+        if e.kind() == std::io::ErrorKind::UnexpectedEof {
+            Error::protocol("connection closed mid-frame (short payload)")
+        } else {
+            Error::Io(e)
+        }
+    })?;
+    let (payload, digest) = body.split_at(len);
+    let mut h = Sha256::new();
+    h.update(payload);
+    if h.finalize().as_slice() != digest {
+        return Err(Error::protocol("frame digest mismatch — corrupt or non-repdl stream"));
+    }
+    decode_frame(payload).map(Some)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn frames() -> Vec<WireFrame> {
+        vec![
+            WireFrame::HelloClient { version: WIRE_VERSION },
+            WireFrame::HelloServer {
+                version: WIRE_VERSION,
+                models: vec![
+                    ModelInfo {
+                        model_id: "linear".into(),
+                        weights_hash: "abc".into(),
+                        d_in: 16,
+                        d_out: 4,
+                    },
+                    ModelInfo {
+                        model_id: "mlp".into(),
+                        weights_hash: "def".into(),
+                        d_in: 8,
+                        d_out: 2,
+                    },
+                ],
+            },
+            WireFrame::Request {
+                req_id: 7,
+                model_id: "linear".into(),
+                request: Tensor::from_vec(&[3], vec![1.5, -0.0, f32::NAN]).unwrap(),
+            },
+            WireFrame::Response {
+                req_id: 7,
+                ticket: 42,
+                response: Tensor::from_vec(&[2], vec![0.25, -3.0]).unwrap(),
+            },
+            WireFrame::Flush { req_id: 8, model_id: String::new() },
+            WireFrame::Flushed { req_id: 8 },
+            WireFrame::Stats { req_id: 9, model_id: "linear".into() },
+            WireFrame::StatsReply {
+                req_id: 9,
+                next_ticket: 5,
+                in_flight: 1,
+                rejected: 0,
+                journal_appends: 11,
+            },
+            WireFrame::Error { req_id: 3, code: code::BAD_REQUEST.into(), message: "len".into() },
+            WireFrame::Bye,
+        ]
+    }
+
+    #[test]
+    fn frames_roundtrip_bit_exactly_over_a_byte_stream() {
+        let fs = frames();
+        let mut stream = Vec::new();
+        for f in &fs {
+            write_frame(&mut stream, f).unwrap();
+        }
+        let mut r = &stream[..];
+        for want in &fs {
+            let got = read_frame(&mut r).unwrap().expect("frame expected");
+            match (&got, want) {
+                // NaN != NaN under PartialEq; compare tensor bits
+                (
+                    WireFrame::Request { req_id: a, model_id: m1, request: r1 },
+                    WireFrame::Request { req_id: b, model_id: m2, request: r2 },
+                ) => {
+                    assert_eq!((a, m1), (b, m2));
+                    assert!(r1.bit_eq(r2), "request bits must survive the roundtrip");
+                }
+                _ => assert_eq!(&got, want),
+            }
+        }
+        assert!(read_frame(&mut r).unwrap().is_none(), "clean EOF at a frame boundary");
+        // encoding is a pure function of the frame
+        let mut again = Vec::new();
+        for f in &fs {
+            write_frame(&mut again, f).unwrap();
+        }
+        assert_eq!(stream, again);
+    }
+
+    #[test]
+    fn hostile_length_fields_never_reserve_memory() {
+        // a 4 GiB length claim must be refused before allocation
+        let mut hostile = Vec::new();
+        hostile.extend_from_slice(&u32::MAX.to_le_bytes());
+        hostile.extend_from_slice(&[0u8; 64]);
+        match read_frame(&mut &hostile[..]) {
+            Err(Error::Protocol(m)) => assert!(m.contains("limit"), "{m}"),
+            other => panic!("want Error::Protocol, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn torn_and_corrupt_frames_are_typed_protocol_errors() {
+        let mut stream = Vec::new();
+        write_frame(&mut stream, &WireFrame::Flushed { req_id: 1 }).unwrap();
+        // EOF mid-length and mid-payload
+        for cut in [2usize, 10] {
+            assert!(
+                matches!(read_frame(&mut &stream[..cut]), Err(Error::Protocol(_))),
+                "cut at {cut}"
+            );
+        }
+        // a flipped payload bit fails the digest
+        let mut bent = stream.clone();
+        bent[5] ^= 0x10;
+        assert!(matches!(read_frame(&mut &bent[..]), Err(Error::Protocol(_))));
+        // an unknown tag inside a digest-valid frame
+        let rec = frame(&[0xEE]).unwrap();
+        match read_frame(&mut &rec[..]) {
+            Err(Error::Protocol(m)) => assert!(m.contains("unknown wire frame tag"), "{m}"),
+            other => panic!("want Error::Protocol, got {other:?}"),
+        }
+        // a wrong hello magic
+        let mut hello = vec![0u8]; // TAG_HELLO_CLIENT
+        hello.extend_from_slice(b"NOTREPDL");
+        hello.extend_from_slice(&WIRE_VERSION.to_le_bytes());
+        let rec = frame(&hello).unwrap();
+        match read_frame(&mut &rec[..]) {
+            Err(Error::Protocol(m)) => assert!(m.contains("bad hello magic"), "{m}"),
+            other => panic!("want Error::Protocol, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn prop_mutated_wire_streams_never_panic() {
+        // the wire face of the shared-decoder fuzz: flips and
+        // truncations of a valid frame stream must always come back as
+        // a decoded frame, a clean EOF, or a typed error — never a
+        // panic, never an allocation sized by a hostile length
+        let mut base = Vec::new();
+        for f in frames() {
+            write_frame(&mut base, &f).unwrap();
+        }
+        crate::proptest::forall(
+            0xBEEF,
+            400,
+            |g| {
+                let mut bytes = base.clone();
+                let cut = g.below(bytes.len() + 1);
+                bytes.truncate(cut);
+                for _ in 0..g.below(5) {
+                    if bytes.is_empty() {
+                        break;
+                    }
+                    let i = g.below(bytes.len());
+                    bytes[i] ^= 1 << g.below(8);
+                }
+                bytes
+            },
+            |bytes| {
+                let mut r = &bytes[..];
+                loop {
+                    match read_frame(&mut r) {
+                        Ok(Some(_)) => continue,
+                        Ok(None) => return true,
+                        Err(Error::Protocol(_)) => return true,
+                        Err(_) => return false,
+                    }
+                }
+            },
+        );
+    }
+}

@@ -497,7 +497,9 @@ pub fn checkpoint_path(dir: &Path, step: u64) -> PathBuf {
 }
 
 /// Serialize a checkpoint to bytes (header + six framed records).
-fn encode_checkpoint(meta: &CheckpointMeta, st: &TrainState, curve: &[f32]) -> Vec<u8> {
+/// Fallible because [`frame`] refuses payloads that overflow its `u32`
+/// length field (a >4 GiB parameter record would otherwise wrap).
+fn encode_checkpoint(meta: &CheckpointMeta, st: &TrainState, curve: &[f32]) -> Result<Vec<u8>> {
     let opt_state = st.opt.export_state();
     let noise = st.noise.snapshot();
     let refs: Vec<&Tensor> = st.params.iter().collect();
@@ -514,9 +516,9 @@ fn encode_checkpoint(meta: &CheckpointMeta, st: &TrainState, curve: &[f32]) -> V
     out.extend_from_slice(&MAGIC);
     out.extend_from_slice(&VERSION.to_le_bytes());
     for payload in body.iter().chain(std::iter::once(&manifest)) {
-        out.extend_from_slice(&frame(payload));
+        out.extend_from_slice(&frame(payload)?);
     }
-    out
+    Ok(out)
 }
 
 /// Write a checkpoint file and fsync it. The write targets the final
@@ -530,7 +532,7 @@ pub fn save_checkpoint(
     st: &TrainState,
     curve: &[f32],
 ) -> Result<()> {
-    let bytes = encode_checkpoint(meta, st, curve);
+    let bytes = encode_checkpoint(meta, st, curve)?;
     let mut f = File::create(path)?;
     f.write_all(&bytes)?;
     f.sync_all()?;

@@ -52,6 +52,14 @@ pub enum Error {
     /// it — either way never a silent hole in the journal.
     Journal(String),
 
+    /// Wire-protocol violation from an untrusted peer (bad hello magic,
+    /// unknown frame tag, oversized or short payload, digest mismatch).
+    /// Typed so the serve front end can answer with an error frame and
+    /// drop the connection — malformed socket bytes must never panic,
+    /// allocate unboundedly, or be mistaken for local journal
+    /// corruption (`Error::Journal` stays the trusted-file case).
+    Protocol(String),
+
     /// Underlying XLA error.
     Xla(String),
 
@@ -74,6 +82,7 @@ impl fmt::Display for Error {
                 "truncated: ticket {ticket} is below the response-log watermark {watermark}"
             ),
             Error::Journal(m) => write!(f, "journal error: {m}"),
+            Error::Protocol(m) => write!(f, "protocol error: {m}"),
             Error::Xla(m) => write!(f, "xla error: {m}"),
             Error::Io(e) => write!(f, "io error: {e}"),
         }
@@ -112,6 +121,10 @@ impl Error {
     pub fn journal(msg: impl Into<String>) -> Self {
         Error::Journal(msg.into())
     }
+    /// Convenience constructor for wire-protocol errors.
+    pub fn protocol(msg: impl Into<String>) -> Self {
+        Error::Protocol(msg.into())
+    }
 }
 
 #[cfg(test)]
@@ -134,6 +147,10 @@ mod tests {
         assert_eq!(
             format!("{}", Error::journal("torn tail")),
             "journal error: torn tail"
+        );
+        assert_eq!(
+            format!("{}", Error::protocol("bad hello")),
+            "protocol error: bad hello"
         );
     }
 

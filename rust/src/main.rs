@@ -25,7 +25,16 @@
 //!                 N ∈ {1,2,4}; --journal PATH appends the durable event
 //!                 journal, --recover rebuilds from an existing one
 //!                 before serving, --journal-degrade picks
-//!                 degrade-to-memory over fail-stop)
+//!                 degrade-to-memory over fail-stop; --flush-every K
+//!                 publishes a batch cut every K admitted tickets — the
+//!                 logical-clock latency control, wall-clock timers stay
+//!                 banned; --listen HOST:PORT serves the model over the
+//!                 length-prefixed TCP wire protocol instead of running
+//!                 the in-process client loop — DESIGN.md §14)
+//!   request      remote client for a `serve --listen` server
+//!                (--connect HOST:PORT --model M --requests N; generates
+//!                 the same deterministic request queue as `serve` and
+//!                 prints each response's ticket and bit hash)
 //!   runtime      load + execute an AOT artifact (needs `make artifacts`)
 //!   selftest     quick determinism smoke checks
 
@@ -44,11 +53,12 @@ fn main() -> std::process::ExitCode {
         Some("verify") => cmd_verify(&args),
         Some("transformer") => cmd_transformer(&args),
         Some("serve") => cmd_serve(&args),
+        Some("request") => cmd_request(&args),
         Some("runtime") => cmd_runtime(&args),
         Some("selftest") => cmd_selftest(),
         _ => {
             eprintln!(
-                "usage: repdl <train|verify|transformer|serve|runtime|selftest> [--flags]\n\
+                "usage: repdl <train|verify|transformer|serve|request|runtime|selftest> [--flags]\n\
                  try: repdl verify --steps 40"
             );
             2
@@ -380,6 +390,16 @@ fn cmd_serve(args: &Args) -> i32 {
     let max_queue_depth = args.get_opt_usize("max-queue-depth");
     let cache_capacity = args.get_usize("cache-capacity", 0);
     let do_replay = args.has("replay");
+    // logical-clock flush (ISSUE 10): a cut every K admitted tickets —
+    // the deterministic replacement for a wall-clock batching timer
+    let flush_every = args.get_opt_usize("flush-every").map(|k| k as u64);
+    if flush_every == Some(0) {
+        eprintln!("serve: --flush-every 0 makes no sense (want K >= 1)");
+        return 2;
+    }
+    // TCP front end (ISSUE 10): present, the scheduler goes behind a
+    // ModelRegistry + NetServer instead of the in-process client loop
+    let listen = args.get_opt_str("listen");
     // durable event journal (ISSUE 7): --journal PATH appends the
     // crash-consistent event journal; --recover rebuilds serving state
     // from an existing one before accepting new requests (the
@@ -601,6 +621,7 @@ fn cmd_serve(args: &Args) -> i32 {
         cache_capacity,
         log: do_replay || recovering,
         journal,
+        flush_every,
     };
     let sched = ServeScheduler::sharded_with(Arc::clone(&tower), shards, pool, cfg)
         .expect("scheduler");
@@ -626,6 +647,34 @@ fn cmd_serve(args: &Args) -> i32 {
                 eprintln!("recover failed: {e}");
                 return 1;
             }
+        }
+    }
+    // --listen: hand the scheduler to the TCP front end and serve until
+    // the process is killed (the CI smoke SIGKILLs it mid-flight; the
+    // journal's crash consistency is exactly what recovery then proves)
+    if let Some(listen) = listen {
+        use repdl::coordinator::{ModelRegistry, NetServer};
+        let model_id = tower.model_id().to_string();
+        let mut reg = ModelRegistry::new();
+        if let Err(e) = reg.register(sched) {
+            eprintln!("serve: {e}");
+            return 1;
+        }
+        let reg = Arc::new(reg);
+        let _server = match NetServer::bind(Arc::clone(&reg), &listen) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("serve: listen {listen}: {e}");
+                return 1;
+            }
+        };
+        println!("listening addr={} model={model_id}", _server.local_addr());
+        // the "listening" line must reach a piped stdout before a
+        // two-process driver starts its client
+        use std::io::Write;
+        let _ = std::io::stdout().flush();
+        loop {
+            std::thread::park();
         }
     }
     let t0 = std::time::Instant::now();
@@ -712,6 +761,106 @@ fn cmd_serve(args: &Args) -> i32 {
     } else {
         1
     }
+}
+
+/// Remote client for a `serve --listen` server: generates the same
+/// deterministic request queue `cmd_serve`'s in-process loop uses
+/// (shapes come from the server's hello, never guessed), pipelines it,
+/// publishes a flush cut, and prints each response's ticket and bit
+/// hash — so two runs against bit-identical servers print bit-identical
+/// lines, which is what the CI kill-and-recover smoke greps.
+fn cmd_request(args: &Args) -> i32 {
+    use repdl::coordinator::NetClient;
+    let addr = match args.get_opt_str("connect") {
+        Some(a) => a,
+        None => {
+            eprintln!("request: --connect HOST:PORT is required");
+            return 2;
+        }
+    };
+    let model = args.get_str("model", "linear");
+    let n = args.get_usize("requests", 8);
+    let mut client = match NetClient::connect(&addr) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("request: connect {addr}: {e}");
+            return 1;
+        }
+    };
+    let info = match client.model(&model) {
+        Some(m) => m.clone(),
+        None => {
+            let served: Vec<&str> =
+                client.models().iter().map(|m| m.model_id.as_str()).collect();
+            eprintln!("request: server does not serve '{model}' (serves: {served:?})");
+            return 2;
+        }
+    };
+    println!(
+        "connected model={} d_in={} d_out={} weights_hash={}",
+        info.model_id,
+        info.d_in,
+        info.d_out,
+        &info.weights_hash[..16.min(info.weights_hash.len())]
+    );
+    let d_in = info.d_in as usize;
+    // the same deterministic queue cmd_serve generates in-process, so a
+    // remote run is bit-comparable to a local one
+    let queue: Vec<Tensor> = if model == "transformer" {
+        (0..n)
+            .map(|i| {
+                let ids: Vec<f32> =
+                    (0..d_in).map(|j| ((i * 31 + j * 7 + 3) % 28) as f32).collect();
+                Tensor::from_vec(&[d_in], ids).expect("request")
+            })
+            .collect()
+    } else {
+        (0..n)
+            .map(|i| repdl::rng::uniform_tensor(&[d_in], -1.0, 1.0, 100 + i as u64))
+            .collect()
+    };
+    for r in &queue {
+        if let Err(e) = client.send_request(&model, r) {
+            eprintln!("request: {e}");
+            return 1;
+        }
+    }
+    if let Err(e) = client.send_flush(&model) {
+        eprintln!("request: {e}");
+        return 1;
+    }
+    for i in 0..n {
+        match client.recv_response() {
+            Ok((_req_id, ticket, out)) => {
+                println!("response {i} ticket={ticket} hash={}", out.bit_hash_hex());
+            }
+            Err(e) => {
+                eprintln!("request: response {i}: {e}");
+                return 1;
+            }
+        }
+    }
+    if let Err(e) = client.recv_flushed() {
+        eprintln!("request: {e}");
+        return 1;
+    }
+    match client.stats(&model) {
+        Ok((next_ticket, in_flight, rejected, journal_appends)) => {
+            println!(
+                "stats next_ticket={next_ticket} in_flight={in_flight} \
+                 rejected={rejected} journal_appends={journal_appends}"
+            );
+        }
+        Err(e) => {
+            eprintln!("request: stats: {e}");
+            return 1;
+        }
+    }
+    if let Err(e) = client.bye() {
+        eprintln!("request: {e}");
+        return 1;
+    }
+    0
 }
 
 fn cmd_runtime(args: &Args) -> i32 {

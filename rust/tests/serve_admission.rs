@@ -45,7 +45,7 @@ fn cfg(window: usize, depth: Option<usize>, cache: usize, log: bool) -> ServeCon
         max_queue_depth: depth,
         cache_capacity: cache,
         log,
-        journal: None,
+        ..Default::default()
     }
 }
 

@@ -1,0 +1,368 @@
+//! Conformance suite for the serve TCP front end (DESIGN.md §14 —
+//! coordinator/serve/{wire,net}.rs).
+//!
+//! The tentpole claim: putting a socket in front of the registry
+//! changes *transport*, never *bits*. The loopback grid pins every
+//! response served over TCP against direct in-process
+//! `ModelRegistry` submission across clients × shards × models ×
+//! journal on/off; around it, the adversarial cases — malformed
+//! frames, a peer vanishing mid-request, protocol-order violations —
+//! must come back as typed error frames and closed connections, never
+//! a panic, a hang, or a poisoned scheduler. The flush tests pin the
+//! logical clock: batch cuts come from admitted-ticket counts
+//! (`flush_every`) and explicit flush frames only, and the recovery
+//! test replays a journal written by a TCP-fed server in a fresh
+//! registry, bit-exactly.
+
+use repdl::coordinator::{
+    hash_tensor, Journal, JournalPolicy, MlpTower, ModelRegistry, ModelTower, NetClient,
+    NetServer, ServeConfig, ServeScheduler, TransformerTower, WireFrame, WIRE_VERSION,
+};
+use repdl::nn::{Act, CharTransformer, Mlp, TransformerConfig};
+use repdl::rng::uniform_tensor;
+use repdl::tensor::{Tensor, WorkerPool};
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("repdl-serve-net");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+/// The two grid towers, rebuilt from seeds — two calls with the same
+/// arguments produce bit-identical weights, which is what lets the
+/// "in-process reference" and the "behind a socket" registries stand
+/// in for the same deployment.
+fn tower(model: &str) -> Arc<dyn ModelTower> {
+    match model {
+        "mlp" => Arc::new(MlpTower::new(Mlp::new(&[12, 10, 4], Act::Gelu, 7)).unwrap()),
+        "transformer" => {
+            let cfg = TransformerConfig {
+                vocab: 10,
+                dim: 8,
+                heads: 2,
+                layers: 1,
+                context: 4,
+                mlp_ratio: 2,
+            };
+            Arc::new(TransformerTower::new(CharTransformer::new(cfg, 17).unwrap()).unwrap())
+        }
+        other => panic!("unknown grid model {other}"),
+    }
+}
+
+fn queue(model: &str, n: usize) -> Vec<Tensor> {
+    match model {
+        "mlp" => (0..n).map(|i| uniform_tensor(&[12], -1.0, 1.0, 100 + i as u64)).collect(),
+        "transformer" => (0..n)
+            .map(|i| {
+                let ids: Vec<f32> = (0..4).map(|j| ((i * 3 + j * 2 + 1) % 10) as f32).collect();
+                Tensor::from_vec(&[4], ids).unwrap()
+            })
+            .collect(),
+        other => panic!("unknown grid model {other}"),
+    }
+}
+
+fn registry(model: &str, shards: usize, cfg: ServeConfig) -> ModelRegistry {
+    let sched =
+        ServeScheduler::sharded_with(tower(model), shards, WorkerPool::shared(1), cfg).unwrap();
+    let mut reg = ModelRegistry::new();
+    reg.register(sched).unwrap();
+    reg
+}
+
+/// The reference bits: the same requests through a same-seed registry,
+/// submitted directly in process.
+fn reference(model: &str, q: &[Tensor]) -> Vec<Tensor> {
+    let reg = registry(model, 1, ServeConfig::default());
+    let pending: Vec<_> =
+        q.iter().map(|r| reg.submit_with_backpressure(model, r).unwrap()).collect();
+    reg.flush_all();
+    pending.into_iter().map(|p| p.wait().unwrap()).collect()
+}
+
+/// THE loopback grid: clients {1,4} × shards {1,2} × models
+/// {mlp, transformer} × journal on/off. Every cell binds a real TCP
+/// server on a loopback port, drives it with pipelined concurrent
+/// clients, and demands each response's bits equal direct in-process
+/// submission of the same request — per-request bits are batch- and
+/// transport-invariant, so the one thing the network may perturb
+/// (cross-connection arrival order) cannot show up in any payload.
+#[test]
+fn loopback_grid_matches_in_process_registry_bits() {
+    let n = 16usize;
+    for model in ["mlp", "transformer"] {
+        let q = queue(model, n);
+        let want = reference(model, &q);
+        for shards in [1usize, 2] {
+            for clients in [1usize, 4] {
+                for journaled in [false, true] {
+                    let cell = format!(
+                        "model={model} shards={shards} clients={clients} journal={journaled}"
+                    );
+                    let journal = if journaled {
+                        let path = tmp(&format!(
+                            "grid-{model}-s{shards}-c{clients}.journal"
+                        ));
+                        Some(Arc::new(
+                            Journal::create(&path, JournalPolicy::FailStop).unwrap(),
+                        ))
+                    } else {
+                        None
+                    };
+                    let cfg = ServeConfig { batch_window: 4, journal, ..Default::default() };
+                    let reg = Arc::new(registry(model, shards, cfg));
+                    let mut server = NetServer::bind(Arc::clone(&reg), "127.0.0.1:0").unwrap();
+                    let addr = server.local_addr().to_string();
+                    let got: Vec<(usize, Tensor)> = std::thread::scope(|s| {
+                        let handles: Vec<_> = (0..clients)
+                            .map(|c| {
+                                let (addr, q) = (&addr, &q);
+                                s.spawn(move || {
+                                    let mut cl = NetClient::connect(addr).unwrap();
+                                    let idx: Vec<usize> =
+                                        (c..q.len()).step_by(clients).collect();
+                                    let mut sent = Vec::new();
+                                    for &i in &idx {
+                                        sent.push(cl.send_request(model, &q[i]).unwrap());
+                                    }
+                                    cl.send_flush(model).unwrap();
+                                    let mut out = Vec::new();
+                                    for (&i, &req_id) in idx.iter().zip(sent.iter()) {
+                                        let (got_id, _ticket, resp) =
+                                            cl.recv_response().unwrap();
+                                        assert_eq!(
+                                            got_id, req_id,
+                                            "per-connection FIFO broken at request {i}"
+                                        );
+                                        out.push((i, resp));
+                                    }
+                                    cl.recv_flushed().unwrap();
+                                    cl.bye().unwrap();
+                                    out
+                                })
+                            })
+                            .collect();
+                        handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
+                    });
+                    assert_eq!(got.len(), n, "{cell}");
+                    for (i, resp) in &got {
+                        assert!(
+                            resp.bit_eq(&want[*i]),
+                            "{cell}: request {i} bits changed over the wire"
+                        );
+                    }
+                    server.shutdown();
+                }
+            }
+        }
+    }
+}
+
+/// Malformed and hostile bytes: a garbage frame answers with a typed
+/// `protocol` error frame and a closed connection; per-request defects
+/// (bad shape, unknown model) answer with typed error frames and keep
+/// the connection serving — and the server survives all of it.
+#[test]
+fn malformed_frames_get_typed_error_frames_never_a_hang() {
+    use repdl::coordinator::serve::wire::{read_frame, write_frame};
+    let reg = Arc::new(registry("mlp", 1, ServeConfig::default()));
+    let mut server = NetServer::bind(Arc::clone(&reg), "127.0.0.1:0").unwrap();
+    let addr = server.local_addr().to_string();
+
+    // raw socket: valid hello, then a hostile length prefix
+    {
+        let mut s = TcpStream::connect(&addr).unwrap();
+        write_frame(&mut s, &WireFrame::HelloClient { version: WIRE_VERSION }).unwrap();
+        match read_frame(&mut s).unwrap() {
+            Some(WireFrame::HelloServer { version, models }) => {
+                assert_eq!(version, WIRE_VERSION);
+                assert_eq!(models.len(), 1);
+                assert_eq!(models[0].model_id, "mlp");
+                assert_eq!((models[0].d_in, models[0].d_out), (12, 4));
+            }
+            f => panic!("expected server hello, got {f:?}"),
+        }
+        use std::io::Write;
+        s.write_all(&u32::MAX.to_le_bytes()).unwrap();
+        s.write_all(&[0xAB; 64]).unwrap();
+        match read_frame(&mut s).unwrap() {
+            Some(WireFrame::Error { code, .. }) => assert_eq!(code, "protocol"),
+            f => panic!("expected a protocol error frame, got {f:?}"),
+        }
+        // the server closes after a protocol violation
+        assert!(matches!(read_frame(&mut s), Ok(None) | Err(_)));
+    }
+
+    // a first frame that is not a hello is refused the same way
+    {
+        let mut s = TcpStream::connect(&addr).unwrap();
+        write_frame(&mut s, &WireFrame::Flushed { req_id: 1 }).unwrap();
+        match read_frame(&mut s).unwrap() {
+            Some(WireFrame::Error { code, .. }) => assert_eq!(code, "protocol"),
+            f => panic!("expected a protocol error frame, got {f:?}"),
+        }
+    }
+
+    // per-request defects are typed and non-fatal to the connection
+    {
+        let mut cl = NetClient::connect(&addr).unwrap();
+        let bad_shape = uniform_tensor(&[5], -1.0, 1.0, 1);
+        cl.send_request("mlp", &bad_shape).unwrap();
+        let e = cl.recv_response().unwrap_err();
+        assert!(e.to_string().contains("[bad-request]"), "{e}");
+        cl.send_request("nope", &uniform_tensor(&[12], -1.0, 1.0, 2)).unwrap();
+        let e = cl.recv_response().unwrap_err();
+        assert!(e.to_string().contains("[unknown-model]"), "{e}");
+        // …and the connection still serves real requests afterwards
+        let good = uniform_tensor(&[12], -1.0, 1.0, 100);
+        let (_ticket, resp) = cl.request_flushed("mlp", &good).unwrap();
+        assert!(resp.bit_eq(&reference("mlp", std::slice::from_ref(&good))[0]));
+        cl.bye().unwrap();
+    }
+    server.shutdown();
+}
+
+/// A peer that vanishes mid-request must not wedge the server: its
+/// admitted ticket executes (released by the next cut), nobody reads
+/// the bits, and fresh connections keep getting reference-exact
+/// responses.
+#[test]
+fn mid_request_disconnect_leaves_server_healthy() {
+    let cfg = ServeConfig { batch_window: 8, ..Default::default() };
+    let reg = Arc::new(registry("mlp", 2, cfg));
+    let mut server = NetServer::bind(Arc::clone(&reg), "127.0.0.1:0").unwrap();
+    let addr = server.local_addr().to_string();
+    let q = queue("mlp", 3);
+    let want = reference("mlp", &q);
+    // connection A: submit without flushing, then vanish (drop without
+    // a goodbye — the OS resets the socket under the server's writer)
+    {
+        let mut cl = NetClient::connect(&addr).unwrap();
+        cl.send_request("mlp", &q[0]).unwrap();
+        drop(cl);
+    }
+    // connection B: full request/response cycles, bit-exact. B's flush
+    // cut also covers A's orphaned ticket, so its batch executes and
+    // the server's writer discards the unreadable response.
+    let mut cl = NetClient::connect(&addr).unwrap();
+    for i in 1..3 {
+        let (_ticket, resp) = cl.request_flushed("mlp", &q[i]).unwrap();
+        assert!(resp.bit_eq(&want[i]), "request {i} after a peer vanished");
+    }
+    // A's reader thread races this one: wait (bounded) until its
+    // orphaned submit has been admitted, then cut it loose
+    let mut next_ticket = 0;
+    for _ in 0..1000 {
+        next_ticket = cl.stats("mlp").unwrap().0;
+        if next_ticket == 3 {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+    assert_eq!(next_ticket, 3, "A's orphaned submit still consumed its ticket");
+    cl.send_flush("mlp").unwrap();
+    cl.recv_flushed().unwrap();
+    let (_, in_flight, rejected, _) = cl.stats("mlp").unwrap();
+    assert_eq!(in_flight, 0, "the flush cut covered the orphan");
+    assert_eq!(rejected, 0);
+    cl.bye().unwrap();
+    server.shutdown();
+}
+
+/// The logical clock, both sources: with `flush_every: K` configured,
+/// cuts appear every K admitted tickets with no flush call anywhere —
+/// and an explicit flush frame cuts the remainder. Batch composition
+/// stays a pure function of the event sequence (the trace proves it),
+/// and replies keep FIFO order throughout.
+#[test]
+fn logical_flush_every_k_and_explicit_flush_frames() {
+    let cfg = ServeConfig {
+        batch_window: 100, // never fills: every cut below is a flush cut
+        flush_every: Some(3),
+        ..Default::default()
+    };
+    let reg = Arc::new(registry("mlp", 1, cfg));
+    let mut server = NetServer::bind(Arc::clone(&reg), "127.0.0.1:0").unwrap();
+    let addr = server.local_addr().to_string();
+    let q = queue("mlp", 7);
+    let want = reference("mlp", &q);
+    let mut cl = NetClient::connect(&addr).unwrap();
+    for r in &q {
+        cl.send_request("mlp", r).unwrap();
+    }
+    // six responses arrive with NO explicit flush anywhere: tickets
+    // {0..2} and {3..5} were cut by the every-3 logical clock
+    for i in 0..6 {
+        let (_req, ticket, resp) = cl.recv_response().unwrap();
+        assert_eq!(ticket, i as u64, "FIFO + ticket order");
+        assert!(resp.bit_eq(&want[i]), "request {i}");
+    }
+    // the seventh needs the explicit flush frame
+    cl.send_flush("mlp").unwrap();
+    let (_req, ticket, resp) = cl.recv_response().unwrap();
+    assert_eq!(ticket, 6);
+    assert!(resp.bit_eq(&want[6]));
+    cl.recv_flushed().unwrap();
+    cl.bye().unwrap();
+    // the trace pins the batch composition to the event sequence
+    let trace: Vec<Vec<u64>> =
+        reg.get("mlp").unwrap().trace().into_iter().map(|b| b.tickets).collect();
+    assert_eq!(trace, vec![vec![0, 1, 2], vec![3, 4, 5], vec![6]]);
+    server.shutdown();
+}
+
+/// Cross-process recovery: a journal written by a TCP-fed server
+/// rebuilds, in a fresh registry (fresh "process"), the exact response
+/// bits the remote clients saw — `recover_all` + `replay` close the
+/// loop from socket to disk to a new process.
+#[test]
+fn journal_from_a_tcp_fed_server_recovers_bit_exactly_in_a_fresh_registry() {
+    let dir = tmp("xproc");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("mlp.journal");
+    let q = queue("mlp", 9);
+    // "process A": journaled server fed over TCP; record what the
+    // remote client actually received, by ticket
+    let served: Vec<(u64, String)> = {
+        let journal = Arc::new(Journal::create(&path, JournalPolicy::FailStop).unwrap());
+        let cfg = ServeConfig { batch_window: 4, journal: Some(journal), ..Default::default() };
+        let reg = Arc::new(registry("mlp", 2, cfg));
+        let mut server = NetServer::bind(Arc::clone(&reg), "127.0.0.1:0").unwrap();
+        let mut cl = NetClient::connect(&server.local_addr().to_string()).unwrap();
+        let mut got = Vec::new();
+        for r in &q {
+            cl.send_request("mlp", r).unwrap();
+        }
+        cl.send_flush("mlp").unwrap();
+        for _ in 0..q.len() {
+            let (_req, ticket, resp) = cl.recv_response().unwrap();
+            got.push((ticket, hash_tensor(&resp)));
+        }
+        cl.recv_flushed().unwrap();
+        cl.bye().unwrap();
+        server.shutdown();
+        reg.get("mlp").unwrap().sync_journal().unwrap();
+        got
+    };
+    // "process B": same-seed model, state rebuilt purely from the file
+    let reg = registry("mlp", 2, ServeConfig { log: true, ..Default::default() });
+    let reports = reg.recover_all(&dir).unwrap();
+    let rep = &reports["mlp"];
+    assert!(rep.consistent(), "{rep:?}");
+    assert_eq!(rep.next_ticket, q.len() as u64);
+    let log = reg.get("mlp").unwrap().log().unwrap();
+    for (ticket, want_hash) in &served {
+        assert_eq!(
+            &log.get(*ticket).unwrap().response_hash,
+            want_hash,
+            "ticket {ticket}: recovered bits must equal what the remote client received"
+        );
+    }
+    // and the rebuilt log re-verifies by re-execution
+    assert!(reg.replay("mlp", 0..q.len() as u64).unwrap().verified());
+    std::fs::remove_file(&path).unwrap();
+}

@@ -166,7 +166,7 @@ fn a_tampered_record_with_a_valid_frame_is_caught_by_the_manifest() {
     tampered[1][last] ^= 1;
     let mut out = bytes[..12].to_vec();
     for p in &tampered {
-        out.extend_from_slice(&frame(p));
+        out.extend_from_slice(&frame(p).unwrap());
     }
     std::fs::write(&path, &out).unwrap();
     let err = load_checkpoint(&path).unwrap_err();
